@@ -1,0 +1,76 @@
+//! Batch-size sweep + adaptive tuner (paper §6.3 Efforts 3–4, Challenge
+//! #6): reproduce the parabolic partial-context curve, show pervasive
+//! context flattening it, then let the trial-and-error tuner find the
+//! optimum on its own.
+//!
+//! ```bash
+//! cargo run --release --example batch_size_sweep
+//! ```
+
+use pcm::cluster::node::pool_20_mixed;
+use pcm::cluster::LoadTrace;
+use pcm::coordinator::batcher::BatchTuner;
+use pcm::coordinator::{ContextPolicy, SimConfig, SimDriver};
+
+const INFERENCES: u64 = 30_000; // 20% scale for a fast demo
+const SEED: u64 = 42;
+
+fn run(policy: ContextPolicy, batch: u64) -> f64 {
+    let mut cfg = SimConfig::new(
+        format!("{}_b{batch}", policy.as_str()),
+        policy,
+        batch,
+        pool_20_mixed(),
+        LoadTrace::constant(20),
+        SEED,
+    );
+    cfg.total_inferences = INFERENCES;
+    SimDriver::new(cfg).run().summary.exec_time_s
+}
+
+fn main() {
+    println!(
+        "batch-size sweep, {INFERENCES} inferences, 20-GPU mixed pool\n"
+    );
+    println!(
+        "{:>8} {:>14} {:>14} {:>9}",
+        "batch", "partial (s)", "pervasive (s)", "ratio"
+    );
+    for batch in [1u64, 10, 100, 1_000, 3_000, 7_500] {
+        let partial = run(ContextPolicy::Partial, batch);
+        let pervasive = run(ContextPolicy::Pervasive, batch);
+        println!(
+            "{:>8} {:>14.0} {:>14.0} {:>9.2}",
+            batch,
+            partial,
+            pervasive,
+            partial / pervasive
+        );
+    }
+    println!(
+        "\npartial context is parabolic in batch size (overhead \
+         amortization vs heterogeneity straggling);\npervasive context \
+         flattens the curve — the wrong batch size stops mattering.\n"
+    );
+
+    // Adaptive tuner (Challenge #6 mitigation).
+    println!("adaptive tuner (pervasive policy):");
+    let mut tuner = BatchTuner::paper_grid();
+    while let Some(batch) = tuner.next_candidate() {
+        let t = run(ContextPolicy::Pervasive, batch);
+        let throughput = INFERENCES as f64 / t;
+        println!("  try B={batch:<6} → {throughput:.1} inf/s");
+        tuner.observe(batch, throughput);
+    }
+    let (best, tp) = tuner.best().unwrap();
+    println!("  coarse optimum: B={best} ({tp:.1} inf/s)");
+    tuner.refine();
+    while let Some(batch) = tuner.next_candidate() {
+        let t = run(ContextPolicy::Pervasive, batch);
+        let throughput = INFERENCES as f64 / t;
+        println!("  refine B={batch:<6} → {throughput:.1} inf/s");
+        tuner.observe(batch, throughput);
+    }
+    let (best, tp) = tuner.best().unwrap();
+    println!("  refined optimum: B={best} ({tp:.1} inf/s)");
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load the AOT-compiled SmolVerify model and classify a few
+//! claims — the smallest possible tour of the runtime public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use pcm::runtime::engine::Verdict;
+use pcm::runtime::manifest::default_artifacts_dir;
+use pcm::runtime::{InferenceEngine, Manifest, ModelContext};
+
+fn main() -> pcm::Result<()> {
+    // 1. Load the artifact manifest (written once by `make artifacts`;
+    //    Python never runs again after that).
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let profile = manifest.profile("tiny")?.clone();
+    println!(
+        "model: SmolVerify/{} ({} params, {} batch variants)",
+        profile.config.profile,
+        profile.num_params,
+        profile.batch_sizes.len()
+    );
+
+    // 2. Materialize a model context: stage weights from disk, compile
+    //    the HLO on the PJRT CPU client, upload the weight buffers. This
+    //    is the cost pervasive context management pays once per worker.
+    let ctx = ModelContext::materialize(&manifest, "tiny", &profile.batch_sizes)?;
+    println!(
+        "context materialized: stage={:.3}s compile={:.3}s upload={:.3}s",
+        ctx.init_stats.stage_weights_s,
+        ctx.init_stats.compile_s,
+        ctx.init_stats.upload_s
+    );
+
+    // 3. Serve inferences against the resident context.
+    let engine = InferenceEngine::new(ctx);
+    let claims = [
+        "Barack Obama was born in Hawaii",
+        "The Eiffel Tower is made entirely of glass",
+        "The Pacific Ocean prefers winter to summer",
+        "Mount Everest appears in encyclopedias",
+    ];
+    let t0 = std::time::Instant::now();
+    let verdicts: Vec<Verdict> = engine.classify(&claims)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    for (claim, verdict) in claims.iter().zip(&verdicts) {
+        println!("  {:<48} → {}", claim, verdict.as_str());
+    }
+    println!(
+        "{} inferences in {:.3}s ({:.1} inf/s, warm context)",
+        claims.len(),
+        dt,
+        claims.len() as f64 / dt
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-path package: L2 JAX model, L1 Pallas kernels, AOT lowering.
+
+Nothing in this package runs on the request path — ``make artifacts``
+invokes :mod:`compile.aot` once and the Rust binary is self-contained
+afterwards.
+"""

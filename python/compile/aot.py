@@ -1,0 +1,216 @@
+"""AOT lowering: JAX/Pallas → HLO text + weights.bin + manifest (build path).
+
+Run once by ``make artifacts``. Emits, per model profile:
+
+* ``model_{profile}_b{B}.hlo.txt``  — HLO **text** per static batch size.
+  Text, not ``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit
+  instruction ids that xla_extension 0.5.1 (the ``xla`` crate's backend)
+  rejects (``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+  round-trips cleanly. Lowered with ``return_tuple=True`` → Rust unwraps
+  with ``to_tuple1()``.
+* ``weights_{profile}.bin`` — all parameters as raw little-endian f32 in
+  ``param_specs`` order (the Rust runtime stages this file; its size is the
+  live-mode analogue of the paper's 3.7 GB model staging cost).
+* ``golden_{profile}.json`` — claims → tokens → logits, the cross-language
+  numerics oracle for Rust integration tests.
+
+Plus (profile-independent): ``manifest.json`` (configs, shapes, hashes,
+batch sizes) and ``tokenizer_fixture.json`` (Rust/Python tokenizer parity
+vectors).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tokenizer as tok
+from .model import PROFILES, ModelConfig, forward, init_params, make_batch_fn
+
+DEFAULT_BATCH_SIZES = {"tiny": [1, 4], "small": [1, 4, 16, 32]}
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: ModelConfig, batch: int) -> str:
+    """Lower the batched forward pass for one static batch size."""
+    fn = make_batch_fn(cfg, use_pallas=True)
+    param_shapes = [
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.param_specs()
+    ]
+    tokens_shape = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    lowered = jax.jit(fn).lower(*param_shapes, tokens_shape)
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg: ModelConfig, params: List[jax.Array], path: str) -> str:
+    """Concatenate parameters as raw LE f32 in spec order; return sha256."""
+    h = hashlib.sha256()
+    with open(path, "wb") as f:
+        for arr in params:
+            buf = np.asarray(arr, dtype="<f4").tobytes()
+            f.write(buf)
+            h.update(buf)
+    return h.hexdigest()
+
+
+def golden_claims() -> List[str]:
+    """Claims used for the cross-language numerics oracle."""
+    return [
+        "CLAIM: Barack Obama was born in Hawaii. VERDICT:",
+        "CLAIM: The Eiffel Tower is located in Berlin. VERDICT:",
+        "CLAIM: Water boils at one hundred degrees celsius. VERDICT:",
+        "CLAIM: The FEVER dataset has 145449 training claims. VERDICT:",
+    ]
+
+
+def build_golden(cfg: ModelConfig, params, batch_sizes: List[int]) -> dict:
+    """Run the real (Pallas) forward on golden claims per batch size."""
+    t = tok.HashTokenizer(cfg.vocab_size, cfg.seq_len)
+    claims = golden_claims()
+    cases = []
+    fwd = jax.jit(
+        lambda toks: forward(cfg, params, toks, use_pallas=True)
+    )
+    for b in batch_sizes:
+        texts = (claims * math.ceil(b / len(claims)))[:b]
+        tokens = np.array(t.encode_batch(texts), dtype=np.int32)
+        logits = np.asarray(fwd(jnp.asarray(tokens)))
+        cases.append(
+            {
+                "batch": b,
+                "texts": texts,
+                "tokens": tokens.tolist(),
+                "logits": logits.tolist(),
+            }
+        )
+    return {"profile": cfg.profile, "cases": cases}
+
+
+def build_tokenizer_fixture() -> dict:
+    """Parity vectors for the Rust tokenizer (both profiles' geometry)."""
+    entries = []
+    for profile, cfg in PROFILES.items():
+        t = tok.HashTokenizer(cfg.vocab_size, cfg.seq_len)
+        entries.append(
+            {
+                "profile": profile,
+                "vocab_size": cfg.vocab_size,
+                "seq_len": cfg.seq_len,
+                "cases": [
+                    {"text": text, "ids": t.encode(text)}
+                    for text in tok.fixture_cases()
+                ],
+            }
+        )
+    return {"reserved": tok.RESERVED, "entries": entries}
+
+
+def sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--profiles",
+        default="tiny,small",
+        help="comma-separated subset of: " + ",".join(PROFILES),
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "seed": args.seed,
+        "profiles": {},
+    }
+
+    for profile in args.profiles.split(","):
+        cfg = PROFILES[profile]
+        batch_sizes = DEFAULT_BATCH_SIZES[profile]
+        print(f"[aot] profile={profile} params={cfg.num_params():,}")
+        params = init_params(cfg, seed=args.seed)
+
+        weights_path = os.path.join(out, f"weights_{profile}.bin")
+        weights_sha = write_weights(cfg, params, weights_path)
+        print(f"[aot]   wrote {weights_path} "
+              f"({os.path.getsize(weights_path):,} bytes)")
+
+        hlo_files = {}
+        for b in batch_sizes:
+            text = lower_model(cfg, b)
+            name = f"model_{profile}_b{b}.hlo.txt"
+            path = os.path.join(out, name)
+            with open(path, "w") as f:
+                f.write(text)
+            hlo_files[str(b)] = {"file": name, "sha256": sha256_file(path)}
+            print(f"[aot]   wrote {name} ({len(text):,} chars)")
+
+        golden = build_golden(cfg, params, batch_sizes)
+        golden_path = os.path.join(out, f"golden_{profile}.json")
+        with open(golden_path, "w") as f:
+            json.dump(golden, f)
+        print(f"[aot]   wrote {golden_path}")
+
+        manifest["profiles"][profile] = {
+            "config": {
+                "profile": cfg.profile,
+                "vocab_size": cfg.vocab_size,
+                "seq_len": cfg.seq_len,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "d_ff": cfg.d_ff,
+                "n_classes": cfg.n_classes,
+                "eps": cfg.eps,
+            },
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in cfg.param_specs()
+            ],
+            "num_params": cfg.num_params(),
+            "weights": {
+                "file": f"weights_{profile}.bin",
+                "sha256": weights_sha,
+                "bytes": os.path.getsize(weights_path),
+            },
+            "batch_sizes": batch_sizes,
+            "hlo": hlo_files,
+            "golden": f"golden_{profile}.json",
+        }
+
+    fixture = build_tokenizer_fixture()
+    with open(os.path.join(out, "tokenizer_fixture.json"), "w") as f:
+        json.dump(fixture, f)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest.json — done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref.py)."""
+
+from .attention import causal_attention
+from .ref import causal_attention_ref, rmsnorm_ref
+from .rmsnorm import rmsnorm
+
+__all__ = [
+    "causal_attention",
+    "causal_attention_ref",
+    "rmsnorm",
+    "rmsnorm_ref",
+]

@@ -1,0 +1,169 @@
+"""Pallas flash-style causal self-attention kernel (L1 hot spot).
+
+TPU-oriented design (executed here with ``interpret=True`` — the CPU PJRT
+plugin cannot run Mosaic custom-calls, so interpret mode lowers to plain HLO
+that any backend executes; structure, not interpret-mode wallclock, is what
+we optimize):
+
+* Grid is ``(bh/G, num_q_blocks)``. Each program instance owns a
+  ``(G, block_q, d_head)`` query tile resident in VMEM (BlockSpec) — ``G``
+  (batch·head) rows are *folded into the tile* so one instance feeds the
+  MXU a batched matmul instead of ``G`` skinny ones
+  (EXPERIMENTS.md §Perf L2 iteration 2). ``G`` is chosen per shape to keep
+  the tile set within a ~2 MiB VMEM budget.
+* K/V stream through the kernel one ``(G, block_k, d_head)`` tile at a
+  time via ``jax.lax.fori_loop`` + dynamic slices — the HBM→VMEM schedule
+  the paper's GPU framing would express with thread-block loops.
+* Online softmax: a single pass over K blocks carries ``(m, l, acc)`` —
+  running max, running denominator, and the rescaled accumulator — so the
+  full ``[seq, seq]`` score matrix never materializes.
+* Causal masking skips K blocks strictly above the diagonal (their
+  contribution is fully masked), halving work for the average query block.
+* All accumulation is f32 regardless of input dtype (MXU-style: bf16 in,
+  f32 accumulate).
+
+VMEM budget per program instance at (G=8, block_q=128, block_k=128,
+d_head=32): Q/K/V tiles 3 × 128 KiB + scores 512 KiB + acc 128 KiB ≈
+1.2 MiB — comfortably double-bufferable within a TPU core's ~16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+# Per-instance VMEM budget (bytes) used to pick the bh-fold factor G.
+VMEM_BUDGET = 2 * 1024 * 1024
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, seq_len):
+    """One (bh-group, q-block) program instance of the flash kernel."""
+    group = q_ref.shape[0]
+    block_q = q_ref.shape[1]
+    d_head = q_ref.shape[2]
+    q_block_idx = pl.program_id(1)
+    q_start = q_block_idx * block_q
+
+    q = q_ref[...].astype(jnp.float32) * scale  # [G, bq, d]
+
+    num_k_blocks = pl.cdiv(seq_len, block_k)
+    # Causal: K blocks whose first row is past this Q block's last row are
+    # entirely masked; stop the streaming loop early.
+    last_q_row = q_start + block_q - 1
+    num_live_k_blocks = jnp.minimum(
+        num_k_blocks, (last_q_row // block_k) + 1
+    ).astype(jnp.int32)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_start = kb * block_k
+        k = k_ref[:, pl.dslice(k_start, block_k), :].astype(jnp.float32)
+        v = v_ref[:, pl.dslice(k_start, block_k), :].astype(jnp.float32)
+
+        # [G, bq, bk] batched partial scores (MXU-shaped matmul).
+        s = jnp.einsum("gqd,gkd->gqk", q, k)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=2)  # [G, bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Rescale previous state to the new running max.
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=2)
+        acc_new = acc_prev * alpha[:, :, None] + jnp.einsum(
+            "gqk,gkd->gqd", p, v
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((group, block_q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group, block_q), jnp.float32)
+    acc0 = jnp.zeros((group, block_q, d_head), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_live_k_blocks, body, (m0, l0, acc0))
+
+    out = acc / l[:, :, None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _fold_factor(bh: int, kseq: int, block_q: int, d_head: int) -> int:
+    """Largest divisor G of bh whose tile set fits VMEM_BUDGET."""
+    per_row = 4 * (
+        block_q * d_head          # Q tile + acc (×2 below)
+        + 2 * kseq * d_head       # K + V (whole padded seq, streamed)
+        + block_q * kseq          # score tile upper bound
+        + block_q * d_head
+    )
+    cap = max(1, VMEM_BUDGET // max(per_row, 1))
+    g = 1
+    for cand in range(1, bh + 1):
+        if bh % cand == 0 and cand <= cap:
+            g = cand
+    return g
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_q", "block_k", "interpret")
+)
+def causal_attention(
+    q,
+    k,
+    v,
+    *,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Flash-style causal attention over ``[bh, seq, d_head]`` tensors.
+
+    Matches :func:`compile.kernels.ref.causal_attention_ref` to fp
+    tolerance. ``block_q``/``block_k`` are clamped to ``seq`` so small test
+    shapes work; the bh-fold factor is picked automatically from the VMEM
+    budget.
+    """
+    bh, seq, d_head = q.shape
+    if scale is None:
+        scale = 1.0 / (d_head**0.5)
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+
+    # Pad K/V along seq to a block_k multiple so every streamed tile is a
+    # full in-bounds read (dynamic slices clamp at the edge otherwise).
+    # Correctness of the zero padding falls out of causality: a real query
+    # row r < seq never attends a padded col c >= seq because c > r.
+    kseq = ((seq + block_k - 1) // block_k) * block_k
+    if kseq != seq:
+        pad = ((0, 0), (0, kseq - seq), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+
+    group = _fold_factor(bh, kseq, block_q, d_head)
+    grid = (bh // group, pl.cdiv(seq, block_q))
+    kernel = functools.partial(
+        _attention_kernel, scale=scale, block_k=block_k, seq_len=seq
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Q: one (G, block_q, d_head) tile per instance.
+            pl.BlockSpec((group, block_q, d_head), lambda b, i: (b, i, 0)),
+            # K/V: the full (padded) sequence for this group; streamed
+            # block_k at a time inside the kernel.
+            pl.BlockSpec((group, kseq, d_head), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((group, kseq, d_head), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (group, block_q, d_head), lambda b, i: (b, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. pytest (and hypothesis sweeps)
+assert ``assert_allclose(kernel(...), ref(...))`` across shapes and dtypes.
+The L2 model can also be built entirely on these references
+(``use_pallas=False``) which gives a second, end-to-end consistency check.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative used for masking (avoids NaN from inf-inf)
+
+
+def causal_attention_ref(q, k, v, *, scale: float | None = None):
+    """Reference causal self-attention.
+
+    Args:
+      q, k, v: ``[bh, seq, d_head]`` arrays (batch*heads folded into dim 0).
+      scale: softmax scale; defaults to ``1/sqrt(d_head)``.
+
+    Returns:
+      ``[bh, seq, d_head]`` attention output, same dtype as ``q``.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    seq = q.shape[1]
+    row = jnp.arange(seq)[:, None]
+    col = jnp.arange(seq)[None, :]
+    logits = jnp.where(col <= row, logits, NEG_INF)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-6):
+    """Reference RMSNorm over the last axis.
+
+    Args:
+      x: ``[..., d]`` activations.
+      scale: ``[d]`` learned gain.
+      eps: numerical floor added to the mean square.
+    """
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf / jnp.sqrt(ms + eps)
+    return (normed * scale.astype(jnp.float32)).astype(x.dtype)

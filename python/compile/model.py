@@ -1,0 +1,208 @@
+"""L2: "SmolVerify" — a decoder-only transformer fact-verification classifier.
+
+This is the JAX compute graph that gets lowered (once, at build time) to HLO
+text and executed by the Rust runtime forever after. It plays the role of
+the paper's SmolLM2-1.7B: a small LM used as a fact verifier that maps a
+prompted claim to one of {SUPPORTED, REFUTED, NOT ENOUGH INFO}.
+
+Architecture (pre-norm GPT-style):
+
+    tokens [B, S] int32
+      → embed + learned positional embedding
+      → N × { RMSNorm → causal MHA → +res ; RMSNorm → GELU MLP → +res }
+      → final RMSNorm
+      → class head on the LAST position (pads attend causally to all real
+        tokens, so position S-1 always sees the whole prompt)
+      → logits [B, 3]
+
+The attention and RMSNorm hot spots call the L1 Pallas kernels
+(``use_pallas=True``, the artifact path) or the pure-jnp references
+(``use_pallas=False``, the oracle path); both must agree — pytest enforces.
+
+Parameters are an ordered list of named f32 tensors (see ``param_specs``).
+The same order defines (a) the HLO entry signature ``(params..., tokens)``
+and (b) the layout of ``weights.bin`` that the Rust runtime stages — keep
+the three in lockstep.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention
+from .kernels.ref import causal_attention_ref, rmsnorm_ref
+from .kernels.rmsnorm import rmsnorm
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static hyperparameters of SmolVerify.
+
+    ``profile`` names the configuration inside ``manifest.json`` so the
+    Rust side can sanity-check what it loaded.
+    """
+
+    profile: str = "small"
+    vocab_size: int = 1024
+    seq_len: int = 128
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    n_classes: int = 3
+    eps: float = 1e-6
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — the weights.bin / HLO contract."""
+        specs: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (self.vocab_size, self.d_model)),
+            ("pos_embed", (self.seq_len, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            specs += [
+                (p + "attn_norm", (self.d_model,)),
+                (p + "wq", (self.d_model, self.d_model)),
+                (p + "wk", (self.d_model, self.d_model)),
+                (p + "wv", (self.d_model, self.d_model)),
+                (p + "wo", (self.d_model, self.d_model)),
+                (p + "mlp_norm", (self.d_model,)),
+                (p + "w1", (self.d_model, self.d_ff)),
+                (p + "b1", (self.d_ff,)),
+                (p + "w2", (self.d_ff, self.d_model)),
+                (p + "b2", (self.d_model,)),
+            ]
+        specs += [
+            ("final_norm", (self.d_model,)),
+            ("head_w", (self.d_model, self.n_classes)),
+            ("head_b", (self.n_classes,)),
+        ]
+        return specs
+
+    def num_params(self) -> int:
+        return sum(math.prod(s) for _, s in self.param_specs())
+
+
+TINY = ModelConfig(
+    profile="tiny",
+    vocab_size=256,
+    seq_len=32,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    d_ff=128,
+)
+SMALL = ModelConfig(profile="small")
+
+PROFILES: Dict[str, ModelConfig] = {"tiny": TINY, "small": SMALL}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Deterministic parameter init (scaled normal / ones / zeros)."""
+    params: List[jax.Array] = []
+    key = jax.random.PRNGKey(seed)
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith("_norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("b1", "b2", "head_b")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            std = 1.0 / (shape[0] ** 0.5)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def _split_heads(x, n_heads):
+    """[B, S, D] → [B*H, S, D/H] (the bh-folded layout the kernel expects)."""
+    b, s, d = x.shape
+    x = x.reshape(b, s, n_heads, d // n_heads)
+    x = x.transpose(0, 2, 1, 3)
+    return x.reshape(b * n_heads, s, d // n_heads)
+
+
+def _merge_heads(x, n_heads):
+    """Inverse of :func:`_split_heads`."""
+    bh, s, dh = x.shape
+    b = bh // n_heads
+    x = x.reshape(b, n_heads, s, dh)
+    x = x.transpose(0, 2, 1, 3)
+    return x.reshape(b, s, n_heads * dh)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: List[jax.Array],
+    tokens: jax.Array,
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Run the classifier. ``tokens``: [B, S] int32 → logits [B, n_classes].
+
+    ``use_pallas`` selects L1 Pallas kernels (artifact path) or the pure-jnp
+    references (oracle path); results must match to fp tolerance.
+    """
+    names = [n for n, _ in cfg.param_specs()]
+    p = dict(zip(names, params))
+
+    def norm(x, scale):
+        if use_pallas:
+            return rmsnorm(x, scale, eps=cfg.eps)
+        return rmsnorm_ref(x, scale, eps=cfg.eps)
+
+    def attn(q, k, v):
+        if use_pallas:
+            # Perf (EXPERIMENTS.md §Perf L1 iteration 1): for the short
+            # sequences this classifier serves, a single (seq × seq) tile
+            # per (batch·head) removes the inner K-streaming loop while
+            # staying far inside a TPU VMEM budget (128×128 f32 scores =
+            # 64 KiB). Longer sequences fall back to flash-style 64×64
+            # streaming automatically via the min() clamps in the kernel.
+            blk = min(cfg.seq_len, 128)
+            return causal_attention(q, k, v, block_q=blk, block_k=blk)
+        return causal_attention_ref(q, k, v)
+
+    x = p["embed"][tokens] + p["pos_embed"][None, :, :]
+
+    for i in range(cfg.n_layers):
+        lp = f"layer{i}."
+        h = norm(x, p[lp + "attn_norm"])
+        q = _split_heads(h @ p[lp + "wq"], cfg.n_heads)
+        k = _split_heads(h @ p[lp + "wk"], cfg.n_heads)
+        v = _split_heads(h @ p[lp + "wv"], cfg.n_heads)
+        o = _merge_heads(attn(q, k, v), cfg.n_heads)
+        x = x + o @ p[lp + "wo"]
+
+        h = norm(x, p[lp + "mlp_norm"])
+        h = jax.nn.gelu(h @ p[lp + "w1"] + p[lp + "b1"])
+        x = x + h @ p[lp + "w2"] + p[lp + "b2"]
+
+    x = norm(x, p["final_norm"])
+    last = x[:, -1, :]  # final position attends the full prompt causally
+    logits = last @ p["head_w"] + p["head_b"]
+    return logits
+
+
+def make_batch_fn(cfg: ModelConfig, *, use_pallas: bool = True):
+    """Return ``fn(*params, tokens) -> (logits,)`` for AOT lowering.
+
+    The flat positional signature (params splatted, tokens last, 1-tuple
+    out) is the exact HLO entry contract the Rust runtime codes against.
+    """
+
+    def fn(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        return (forward(cfg, params, tokens, use_pallas=use_pallas),)
+
+    return fn

@@ -1,0 +1,104 @@
+"""Deterministic hash tokenizer shared (by contract) with the Rust runtime.
+
+The serving path never runs Python, so the tokenizer is implemented twice:
+here (build path: fixtures, tests, golden logits) and in
+``rust/src/runtime/tokenizer.rs`` (request path). Both sides implement the
+exact same algorithm; parity is enforced by ``tokenizer_fixture.json``
+emitted at artifact-build time and checked by a Rust integration test.
+
+Algorithm (intentionally simple and language-portable):
+
+* Text is lowercased and split on non-alphanumeric boundaries.
+* Each word maps to ``RESERVED + (fnv1a64(word) % (vocab - RESERVED))``.
+* Reserved ids: 0=PAD, 1=BOS, 2=EOS, 3=SEP, 4=CLS_SUPPORTED, 5=CLS_REFUTED,
+  6=CLS_NEI (the class-probe positions used by prompt templates).
+* Sequences are BOS-prefixed, EOS-terminated, then padded/truncated to
+  ``seq_len`` (truncation keeps the head and forces the final EOS).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+SEP_ID = 3
+CLS_SUPPORTED_ID = 4
+CLS_REFUTED_ID = 5
+CLS_NEI_ID = 6
+RESERVED = 8  # ids [0, 8) are reserved; id 7 spare
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    """64-bit FNV-1a hash — trivially portable to Rust."""
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return h
+
+
+def split_words(text: str) -> List[str]:
+    """Lowercase and split on non-alphanumeric (ASCII-oriented) boundaries."""
+    out: List[str] = []
+    cur: List[str] = []
+    for ch in text.lower():
+        if ch.isascii() and (ch.isalnum()):
+            cur.append(ch)
+        else:
+            if cur:
+                out.append("".join(cur))
+                cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+@dataclass(frozen=True)
+class HashTokenizer:
+    """Stateless, deterministic tokenizer over a fixed-size vocab."""
+
+    vocab_size: int
+    seq_len: int
+
+    def word_id(self, word: str) -> int:
+        span = self.vocab_size - RESERVED
+        return RESERVED + (fnv1a64(word.encode("utf-8")) % span)
+
+    def encode_words(self, text: str) -> List[int]:
+        return [self.word_id(w) for w in split_words(text)]
+
+    def encode(self, text: str) -> List[int]:
+        """BOS + words + EOS, padded/truncated to ``seq_len``."""
+        ids = [BOS_ID] + self.encode_words(text)
+        # Reserve one slot for EOS.
+        ids = ids[: self.seq_len - 1]
+        ids.append(EOS_ID)
+        while len(ids) < self.seq_len:
+            ids.append(PAD_ID)
+        return ids
+
+    def encode_batch(self, texts: List[str]) -> List[List[int]]:
+        return [self.encode(t) for t in texts]
+
+
+def fixture_cases() -> List[str]:
+    """Parity test vectors — exercised by python tests AND rust tests."""
+    return [
+        "",
+        "a",
+        "The quick brown fox jumps over the lazy dog",
+        "FEVER claim: Barack Obama was born in Hawaii.",
+        "Claim #42 -- punctuation, UNICODE naïve café, and    spaces",
+        "SUPPORTED REFUTED NOT ENOUGH INFO",
+        "x" * 500,  # forces truncation
+        "word " * 300,  # forces truncation on word count
+        "1234 5678 90",
+        "MixedCASE Words With-Hyphens and_underscores",
+    ]

@@ -1,0 +1,210 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE numerics signal of the build path. Hypothesis sweeps shapes and
+dtypes; fixed cases pin the block-edge geometry (uneven blocks, seq smaller
+than a block, single row, etc.).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import causal_attention
+from compile.kernels.ref import causal_attention_ref, rmsnorm_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+def assert_close(got, want, dtype=jnp.float32):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        atol=ATOL[dtype],
+        rtol=RTOL[dtype],
+    )
+
+
+# ---------------------------------------------------------------- attention
+
+
+class TestAttentionFixed:
+    def test_single_block(self):
+        q, k, v = (rand(i, (2, 16, 8)) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v, block_q=16, block_k=16),
+            causal_attention_ref(q, k, v),
+        )
+
+    def test_multi_q_blocks(self):
+        q, k, v = (rand(i + 10, (3, 64, 16)) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v, block_q=16, block_k=16),
+            causal_attention_ref(q, k, v),
+        )
+
+    def test_block_k_smaller_than_block_q(self):
+        q, k, v = (rand(i + 20, (1, 32, 8)) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v, block_q=32, block_k=8),
+            causal_attention_ref(q, k, v),
+        )
+
+    def test_block_larger_than_seq_is_clamped(self):
+        q, k, v = (rand(i + 30, (2, 8, 4)) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v, block_q=64, block_k=64),
+            causal_attention_ref(q, k, v),
+        )
+
+    def test_seq_one(self):
+        q, k, v = (rand(i + 40, (2, 1, 4)) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v),
+            causal_attention_ref(q, k, v),
+        )
+
+    def test_uneven_k_blocks(self):
+        # seq=48 with block_k=32: second K block is a partial edge block.
+        q, k, v = (rand(i + 50, (2, 48, 8)) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v, block_q=16, block_k=32),
+            causal_attention_ref(q, k, v),
+        )
+
+    def test_custom_scale(self):
+        q, k, v = (rand(i + 60, (2, 16, 8)) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v, scale=0.25, block_q=8, block_k=8),
+            causal_attention_ref(q, k, v, scale=0.25),
+        )
+
+    def test_causality_first_position_ignores_future(self):
+        """Output at position 0 must equal v[0] (softmax over one entry)."""
+        q, k, v = (rand(i + 70, (1, 32, 8)) for i in range(3))
+        out = causal_attention(q, k, v, block_q=8, block_k=8)
+        np.testing.assert_allclose(
+            np.asarray(out[0, 0]), np.asarray(v[0, 0]), atol=2e-5, rtol=2e-5
+        )
+
+    def test_future_kv_perturbation_does_not_change_past(self):
+        q, k, v = (rand(i + 80, (1, 32, 8)) for i in range(3))
+        out1 = causal_attention(q, k, v, block_q=8, block_k=8)
+        k2 = k.at[:, 16:, :].add(3.0)
+        v2 = v.at[:, 16:, :].add(-2.0)
+        out2 = causal_attention(q, k2, v2, block_q=8, block_k=8)
+        np.testing.assert_allclose(
+            np.asarray(out1[:, :16]), np.asarray(out2[:, :16]),
+            atol=2e-5, rtol=2e-5,
+        )
+
+    def test_bfloat16(self):
+        q, k, v = (rand(i + 90, (2, 32, 16), jnp.bfloat16) for i in range(3))
+        assert_close(
+            causal_attention(q, k, v, block_q=16, block_k=16),
+            causal_attention_ref(q, k, v),
+            dtype=jnp.bfloat16,
+        )
+
+    def test_large_logit_stability(self):
+        """Online softmax must not overflow with large score magnitudes."""
+        q = rand(1, (1, 16, 8)) * 30.0
+        k = rand(2, (1, 16, 8)) * 30.0
+        v = rand(3, (1, 16, 8))
+        out = causal_attention(q, k, v, block_q=4, block_k=4)
+        assert np.isfinite(np.asarray(out)).all()
+        assert_close(out, causal_attention_ref(q, k, v))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    seq_pow=st.integers(0, 6),
+    d_head=st.sampled_from([4, 8, 16, 32]),
+    block_q=st.sampled_from([4, 8, 16, 64]),
+    block_k=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_hypothesis(bh, seq_pow, d_head, block_q, block_k, seed):
+    seq = 2**seq_pow
+    q, k, v = (rand(seed + i, (bh, seq, d_head)) for i in range(3))
+    got = causal_attention(q, k, v, block_q=block_q, block_k=block_k)
+    assert_close(got, causal_attention_ref(q, k, v))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seq=st.integers(1, 70),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_hypothesis_ragged_seq(seq, seed):
+    """Non-power-of-two sequence lengths exercise edge blocks."""
+    q, k, v = (rand(seed + i, (2, seq, 8)) for i in range(3))
+    got = causal_attention(q, k, v, block_q=16, block_k=16)
+    assert_close(got, causal_attention_ref(q, k, v))
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+
+class TestRmsnormFixed:
+    def test_basic(self):
+        x = rand(0, (8, 32))
+        s = rand(1, (32,))
+        assert_close(rmsnorm(x, s, block_rows=4), rmsnorm_ref(x, s))
+
+    def test_3d_input(self):
+        x = rand(2, (2, 16, 64))
+        s = rand(3, (64,))
+        assert_close(rmsnorm(x, s, block_rows=8), rmsnorm_ref(x, s))
+
+    def test_uneven_row_blocks(self):
+        x = rand(4, (7, 33))
+        s = rand(5, (33,))
+        assert_close(rmsnorm(x, s, block_rows=4), rmsnorm_ref(x, s))
+
+    def test_single_row(self):
+        x = rand(6, (1, 16))
+        s = rand(7, (16,))
+        assert_close(rmsnorm(x, s), rmsnorm_ref(x, s))
+
+    def test_unit_scale_preserves_rms(self):
+        x = rand(8, (4, 128))
+        s = jnp.ones((128,))
+        out = np.asarray(rmsnorm(x, s))
+        rms = np.sqrt((out**2).mean(axis=-1))
+        np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+    def test_tiny_values_eps_floor(self):
+        x = jnp.full((2, 8), 1e-20, jnp.float32)
+        s = jnp.ones((8,))
+        out = np.asarray(rmsnorm(x, s))
+        assert np.isfinite(out).all()
+
+    def test_bfloat16(self):
+        x = rand(9, (4, 32), jnp.bfloat16)
+        s = rand(10, (32,), jnp.bfloat16)
+        assert_close(rmsnorm(x, s), rmsnorm_ref(x, s), dtype=jnp.bfloat16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    d=st.sampled_from([8, 16, 33, 64, 128]),
+    block_rows=st.sampled_from([1, 4, 16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_hypothesis(rows, d, block_rows, seed):
+    x = rand(seed, (rows, d))
+    s = rand(seed + 1, (d,))
+    got = rmsnorm(x, s, block_rows=block_rows)
+    assert_close(got, rmsnorm_ref(x, s))

@@ -1,0 +1,138 @@
+"""L2 model tests: shapes, determinism, pallas/oracle agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    PROFILES,
+    SMALL,
+    TINY,
+    ModelConfig,
+    forward,
+    init_params,
+    make_batch_fn,
+)
+from compile.tokenizer import HashTokenizer
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_params(TINY, seed=0)
+
+
+def toks(cfg, batch, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(
+        key, (batch, cfg.seq_len), 0, cfg.vocab_size, jnp.int32
+    )
+
+
+class TestConfig:
+    def test_param_specs_shapes_positive(self):
+        for cfg in PROFILES.values():
+            for name, shape in cfg.param_specs():
+                assert all(d > 0 for d in shape), name
+
+    def test_param_specs_order_stable(self):
+        names = [n for n, _ in TINY.param_specs()]
+        assert names[0] == "embed"
+        assert names[1] == "pos_embed"
+        assert names[-3:] == ["final_norm", "head_w", "head_b"]
+        assert names.count("layer0.wq") == 1
+
+    def test_num_params_matches_init(self, tiny_params):
+        total = sum(int(np.prod(p.shape)) for p in tiny_params)
+        assert total == TINY.num_params()
+
+    def test_d_head_divides(self):
+        for cfg in PROFILES.values():
+            assert cfg.d_model == cfg.d_head * cfg.n_heads
+
+    def test_layer_count_in_specs(self):
+        layer_names = [
+            n for n, _ in SMALL.param_specs() if n.startswith("layer")
+        ]
+        assert len(layer_names) == 10 * SMALL.n_layers
+
+
+class TestInit:
+    def test_deterministic(self):
+        a = init_params(TINY, seed=7)
+        b = init_params(TINY, seed=7)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_seed_changes_weights(self):
+        a = init_params(TINY, seed=0)
+        b = init_params(TINY, seed=1)
+        assert not np.allclose(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_norm_scales_are_ones(self, tiny_params):
+        names = [n for n, _ in TINY.param_specs()]
+        for n, p in zip(names, tiny_params):
+            if n.endswith("_norm"):
+                np.testing.assert_array_equal(np.asarray(p), 1.0)
+
+
+class TestForward:
+    def test_output_shape(self, tiny_params):
+        logits = forward(TINY, tiny_params, toks(TINY, 3))
+        assert logits.shape == (3, TINY.n_classes)
+
+    def test_finite(self, tiny_params):
+        logits = forward(TINY, tiny_params, toks(TINY, 2))
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_pallas_matches_oracle(self, tiny_params):
+        t = toks(TINY, 4, seed=3)
+        got = forward(TINY, tiny_params, t, use_pallas=True)
+        want = forward(TINY, tiny_params, t, use_pallas=False)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4
+        )
+
+    def test_batch_consistency(self, tiny_params):
+        """Row i of a batched forward == forward of row i alone."""
+        t = toks(TINY, 4, seed=5)
+        full = np.asarray(forward(TINY, tiny_params, t))
+        for i in range(4):
+            single = np.asarray(forward(TINY, tiny_params, t[i : i + 1]))
+            np.testing.assert_allclose(full[i], single[0], atol=1e-4, rtol=1e-4)
+
+    def test_input_sensitivity(self, tiny_params):
+        """Different prompts must yield different logits."""
+        t1 = toks(TINY, 1, seed=1)
+        t2 = toks(TINY, 1, seed=2)
+        l1 = np.asarray(forward(TINY, tiny_params, t1))
+        l2 = np.asarray(forward(TINY, tiny_params, t2))
+        assert not np.allclose(l1, l2)
+
+    def test_tokenized_claims_roundtrip(self, tiny_params):
+        tok = HashTokenizer(TINY.vocab_size, TINY.seq_len)
+        ids = np.array(
+            tok.encode_batch(["claim one is true", "claim two is false"]),
+            dtype=np.int32,
+        )
+        logits = forward(TINY, tiny_params, jnp.asarray(ids))
+        assert logits.shape == (2, 3)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestBatchFn:
+    def test_signature_and_tuple_output(self, tiny_params):
+        fn = make_batch_fn(TINY)
+        out = fn(*tiny_params, toks(TINY, 2))
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (2, TINY.n_classes)
+
+    def test_matches_forward(self, tiny_params):
+        fn = make_batch_fn(TINY)
+        t = toks(TINY, 2, seed=9)
+        np.testing.assert_allclose(
+            np.asarray(fn(*tiny_params, t)[0]),
+            np.asarray(forward(TINY, tiny_params, t)),
+            atol=1e-5,
+            rtol=1e-5,
+        )

@@ -1,0 +1,130 @@
+"""Tokenizer tests: the Python half of the Rust/Python parity contract."""
+
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.tokenizer import (
+    BOS_ID,
+    EOS_ID,
+    PAD_ID,
+    RESERVED,
+    HashTokenizer,
+    fixture_cases,
+    fnv1a64,
+    split_words,
+)
+
+T = HashTokenizer(vocab_size=1024, seq_len=32)
+
+
+class TestFnv:
+    def test_known_vectors(self):
+        # Standard FNV-1a 64 test vectors.
+        assert fnv1a64(b"") == 0xCBF29CE484222325
+        assert fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+        assert fnv1a64(b"foobar") == 0x85944171F73967E8
+
+    def test_avalanche(self):
+        assert fnv1a64(b"claim") != fnv1a64(b"clain")
+
+
+class TestSplit:
+    def test_basic(self):
+        assert split_words("The quick fox") == ["the", "quick", "fox"]
+
+    def test_punctuation(self):
+        assert split_words("a,b;c--d") == ["a", "b", "c", "d"]
+
+    def test_empty(self):
+        assert split_words("") == []
+        assert split_words("  ,,  ") == []
+
+    def test_numbers_kept(self):
+        assert split_words("born in 1961") == ["born", "in", "1961"]
+
+    def test_non_ascii_is_separator(self):
+        assert split_words("naïve") == ["na", "ve"]
+
+
+class TestEncode:
+    def test_length_always_seq_len(self):
+        for text in fixture_cases():
+            assert len(T.encode(text)) == T.seq_len
+
+    def test_bos_first(self):
+        assert T.encode("hello")[0] == BOS_ID
+
+    def test_eos_present(self):
+        ids = T.encode("hello world")
+        assert EOS_ID in ids
+
+    def test_padding(self):
+        ids = T.encode("hi")
+        # BOS, word, EOS, then pads.
+        assert ids[0] == BOS_ID
+        assert ids[2] == EOS_ID
+        assert all(i == PAD_ID for i in ids[3:])
+
+    def test_truncation_keeps_final_eos(self):
+        ids = T.encode("word " * 200)
+        assert len(ids) == T.seq_len
+        assert ids[-1] == EOS_ID
+
+    def test_word_ids_in_range(self):
+        for text in fixture_cases():
+            for i in T.encode_words(text):
+                assert RESERVED <= i < T.vocab_size
+
+    def test_deterministic(self):
+        assert T.encode("some claim text") == T.encode("some claim text")
+
+    def test_case_insensitive(self):
+        assert T.encode("Hello World") == T.encode("hello world")
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(max_size=300))
+def test_encode_invariants_hypothesis(text):
+    ids = T.encode(text)
+    assert len(ids) == T.seq_len
+    assert ids[0] == BOS_ID
+    assert all(0 <= i < T.vocab_size for i in ids)
+    assert EOS_ID in ids
+    # Everything after the first EOS-at-tail is PAD.
+    if ids[-1] != EOS_ID:
+        tail = ids[ids.index(EOS_ID) + 1 :]
+        assert all(i == PAD_ID for i in tail)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.text(max_size=100),
+    st.sampled_from([64, 256, 1024, 8192]),
+    st.sampled_from([8, 32, 128]),
+)
+def test_encode_any_geometry(text, vocab, seq):
+    t = HashTokenizer(vocab, seq)
+    ids = t.encode(text)
+    assert len(ids) == seq
+    assert all(0 <= i < vocab for i in ids)
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "tokenizer_fixture.json")),
+    reason="artifacts not built",
+)
+def test_fixture_file_matches_live_tokenizer():
+    """The emitted fixture must reflect the current tokenizer algorithm."""
+    with open(os.path.join(ARTIFACTS, "tokenizer_fixture.json")) as f:
+        fixture = json.load(f)
+    assert fixture["reserved"] == RESERVED
+    for entry in fixture["entries"]:
+        t = HashTokenizer(entry["vocab_size"], entry["seq_len"])
+        for case in entry["cases"]:
+            assert t.encode(case["text"]) == case["ids"], case["text"][:40]

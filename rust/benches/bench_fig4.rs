@@ -1,0 +1,61 @@
+//! Figure 4 regeneration bench: runs the 21-experiment suite end-to-end
+//! (simulated time) and reports wall-clock per experiment class.
+//!
+//! `PCM_BENCH_SCALE` (default 0.1) scales the 150 k-inference workload;
+//! `PCM_BENCH_FULL=1` runs the paper-scale suite once and prints the
+//! Figure 4 table (this is what EXPERIMENTS.md records).
+
+use pcm::coordinator::SimDriver;
+use pcm::experiments::runner::ExperimentResult;
+use pcm::experiments::specs::{figure4_specs, spec_by_id};
+use pcm::experiments::figures;
+use pcm::util::bench::{bench, header};
+
+fn scaled_run(id: &str, scale: f64, seed: u64) -> ExperimentResult {
+    let spec = spec_by_id(id).expect(id);
+    let mut cfg = spec.build(seed);
+    cfg.total_inferences =
+        ((cfg.total_inferences as f64 * scale) as u64).max(100);
+    let outcome = SimDriver::new(cfg).run();
+    ExperimentResult {
+        id: id.to_string(),
+        policy: outcome.summary.policy,
+        batch_size: outcome.summary.batch_size,
+        exec_time_s: outcome.summary.exec_time_s,
+        avg_workers: outcome.summary.avg_workers,
+        outcome,
+    }
+}
+
+fn main() {
+    let scale: f64 = std::env::var("PCM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.1);
+
+    if std::env::var("PCM_BENCH_FULL").is_ok() {
+        let results: Vec<ExperimentResult> = figure4_specs()
+            .iter()
+            .map(|s| scaled_run(s.id, 1.0, 42))
+            .collect();
+        println!("--- Figure 4 (full scale) ---");
+        print!("{}", figures::figure4_text(&results));
+        print!("{}", figures::headline_text(&results));
+        return;
+    }
+
+    header(&format!("figure 4 experiment simulations (scale={scale})"));
+    // One representative per experiment class (full list via `pcm
+    // experiment fig4`).
+    for id in ["pv0", "pv1", "pv2", "pv3_1k", "pv4_100", "pv5s", "pv6"] {
+        bench(format!("sim {id}"), 1, 5, || scaled_run(id, scale, 42));
+    }
+
+    // The paper-shape assertions, kept hot so regressions show up here.
+    let pv0 = scaled_run("pv0", scale, 42);
+    let pv4 = scaled_run("pv4_100", scale, 42);
+    let speedup = pv0.exec_time_s / pv4.exec_time_s;
+    println!(
+        "\npv4_100 speedup over pv0: {speedup:.2}x (paper: 13.9x at full scale)"
+    );
+}

@@ -1,0 +1,45 @@
+//! Figure 5 + Table 2 regeneration: task-execution-time distributions
+//! for pv[3,4]_[1,100], printed as histograms + the statistics table.
+//!
+//! `PCM_BENCH_SCALE` (default 0.05 — pv3_1 is 150 k tasks at full scale).
+
+use pcm::coordinator::SimDriver;
+use pcm::experiments::figures;
+use pcm::experiments::runner::ExperimentResult;
+use pcm::experiments::specs::figure5_specs;
+use pcm::util::bench::{bench, header};
+
+fn main() {
+    let scale: f64 = std::env::var("PCM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.05);
+
+    header(&format!("figure 5 / table 2 runs (scale={scale})"));
+    let mut results = Vec::new();
+    for spec in figure5_specs() {
+        let mut cfg = spec.build(42);
+        cfg.total_inferences =
+            ((cfg.total_inferences as f64 * scale) as u64).max(100);
+        let mut outcome = None;
+        bench(format!("sim {}", spec.id), 0, 3, || {
+            let mut c = spec.build(42);
+            c.total_inferences = cfg.total_inferences;
+            outcome = Some(SimDriver::new(c).run());
+        });
+        let outcome = outcome.unwrap();
+        results.push(ExperimentResult {
+            id: spec.id.to_string(),
+            policy: outcome.summary.policy,
+            batch_size: outcome.summary.batch_size,
+            exec_time_s: outcome.summary.exec_time_s,
+            avg_workers: outcome.summary.avg_workers,
+            outcome,
+        });
+    }
+
+    println!("\n--- Table 2 (regenerated; paper: pv4 rows dominate) ---");
+    print!("{}", figures::table2(&results));
+    println!("\n--- Figure 5 (regenerated histograms) ---");
+    print!("{}", figures::figure5_text(&results));
+}

@@ -1,0 +1,146 @@
+//! Hot-path micro-benchmarks: the L3 coordinator inner loops and (when
+//! artifacts exist) the real PJRT inference path. This is the profile
+//! target for the EXPERIMENTS.md §Perf iteration log.
+
+use pcm::cluster::node::pool_20_mixed;
+use pcm::cluster::{GpuModel, LoadTrace, Node};
+use pcm::coordinator::batcher::Batcher;
+use pcm::coordinator::transfer::plan_broadcast;
+use pcm::coordinator::{
+    ContextPolicy, ContextRecipe, Scheduler, SimConfig, SimDriver,
+    TaskRecord, TransferPlanner,
+};
+use pcm::runtime::manifest::default_artifacts_dir;
+use pcm::runtime::{Manifest, ModelContext};
+use pcm::util::bench::{bench, black_box, header};
+
+fn scheduler_churn(tasks: u64, workers: u32) -> u64 {
+    let mut s = Scheduler::new(
+        ContextPolicy::Pervasive,
+        ContextRecipe::smollm2_pff(0),
+        TransferPlanner::new(3),
+    );
+    s.submit_tasks(Batcher::new(100).split(tasks * 100, 0, 0));
+    for i in 0..workers {
+        s.worker_join(
+            Node {
+                id: i,
+                gpu: if i % 2 == 0 { GpuModel::A10 } else { GpuModel::TitanXPascal },
+            },
+            0.0,
+        );
+    }
+    let mut completed = 0u64;
+    while !s.all_done() {
+        let ds = s.try_dispatch();
+        for d in ds {
+            for i in 0..d.phases.len() {
+                s.phase_done(d.task, i);
+            }
+            let (attempts, inferences) = s.task_meta(d.task).unwrap();
+            s.task_done(
+                d.task,
+                TaskRecord {
+                    task: d.task,
+                    worker: d.worker,
+                    gpu: GpuModel::A10,
+                    attempts,
+                    inferences,
+                    dispatched_at: 0.0,
+                    completed_at: 1.0,
+                    context_s: 0.0,
+                    execute_s: 1.0,
+                },
+            );
+            completed += 1;
+        }
+    }
+    completed
+}
+
+fn main() {
+    header("L3 coordinator hot paths");
+    bench("scheduler churn: 1k tasks / 20 workers", 2, 10, || {
+        scheduler_churn(1_000, 20)
+    });
+    bench("scheduler churn: 10k tasks / 100 workers", 1, 5, || {
+        scheduler_churn(10_000, 100)
+    });
+    bench("broadcast plan: 567 workers, fanout 3", 5, 50, || {
+        let ids: Vec<u32> = (0..567).collect();
+        plan_broadcast(&ids, 3)
+    });
+    bench("batcher split: 150k inferences @ B=100", 5, 50, || {
+        Batcher::new(100).split(150_000, 0, 0)
+    });
+
+    header("DES end-to-end (simulated experiments)");
+    bench("sim pv4_100-shape @ 5k inferences", 1, 5, || {
+        let mut cfg = SimConfig::new(
+            "bench",
+            ContextPolicy::Pervasive,
+            100,
+            pool_20_mixed(),
+            LoadTrace::constant(20),
+            42,
+        );
+        cfg.total_inferences = 5_000;
+        SimDriver::new(cfg).run().summary.exec_time_s
+    });
+
+    // Real PJRT inference path (needs `make artifacts`).
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(dir).expect("manifest");
+        header("PJRT inference hot path (tiny profile)");
+        let profile = manifest.profile("tiny").expect("tiny").clone();
+        let ctx = ModelContext::materialize(&manifest, "tiny", &profile.batch_sizes)
+            .expect("materialize");
+        let tok = ctx.tokenizer();
+        let texts: Vec<String> = (0..4)
+            .map(|i| format!("benchmark claim number {i} is supported"))
+            .collect();
+        let flat1 = tok.encode_batch_flat(&[texts[0].as_str()], 1);
+        let flat4 = tok.encode_batch_flat(
+            &texts.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            4,
+        );
+        bench("execute_tokens batch=1", 3, 30, || {
+            ctx.execute_tokens(black_box(&flat1), 1).unwrap()
+        });
+        bench("execute_tokens batch=4", 3, 30, || {
+            ctx.execute_tokens(black_box(&flat4), 4).unwrap()
+        });
+        bench("tokenize 100 claims", 5, 50, || {
+            (0..100)
+                .map(|i| tok.encode(&format!("claim {i} about something")))
+                .collect::<Vec<_>>()
+        });
+        bench("materialize tiny context (cold)", 0, 3, || {
+            ModelContext::materialize(&manifest, "tiny", &[1]).unwrap()
+        });
+
+        if manifest.profiles.contains_key("small") {
+            header("PJRT inference hot path (small profile, 3.4M params)");
+            let sp = manifest.profile("small").expect("small").clone();
+            let sctx =
+                ModelContext::materialize(&manifest, "small", &sp.batch_sizes)
+                    .expect("materialize small");
+            let stok = sctx.tokenizer();
+            let claims: Vec<String> = (0..32)
+                .map(|i| format!("claim number {i} from the benchmark set"))
+                .collect();
+            let refs: Vec<&str> = claims.iter().map(|s| s.as_str()).collect();
+            let f1 = stok.encode_batch_flat(&refs[..1], 1);
+            let f32_ = stok.encode_batch_flat(&refs, 32);
+            bench("small execute batch=1", 1, 10, || {
+                sctx.execute_tokens(black_box(&f1), 1).unwrap()
+            });
+            bench("small execute batch=32", 1, 10, || {
+                sctx.execute_tokens(black_box(&f32_), 32).unwrap()
+            });
+        }
+    } else {
+        eprintln!("(artifacts not built; skipping PJRT benches)");
+    }
+}

@@ -1,0 +1,21 @@
+//! Table 1 regeneration + catalog micro-benches.
+//!
+//! Table 1 is inventory, not measurement — this bench prints it verbatim
+//! (the regeneration artifact) and times the catalog/pool builders used
+//! on the simulator's hot paths.
+
+use pcm::cluster::node::{full_cluster, pool_20_mixed};
+use pcm::experiments::figures;
+use pcm::util::bench::{bench, header};
+
+fn main() {
+    println!("--- Table 1 (regenerated) ---");
+    print!("{}", figures::table1());
+
+    header("catalog / pool construction");
+    bench("full_cluster (567 nodes)", 10, 100, full_cluster);
+    bench("pool_20_mixed", 10, 100, pool_20_mixed);
+    bench("gpu speed lookup x567", 10, 100, || {
+        full_cluster().iter().map(|n| n.relative_speed()).sum::<f64>()
+    });
+}

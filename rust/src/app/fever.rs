@@ -1,0 +1,219 @@
+//! Synthetic FEVER-like fact-verification dataset.
+//!
+//! The paper sweeps the FEVER training split: 145,449 labeled claims
+//! (SUPPORTED / REFUTED / NOT ENOUGH INFO), each referencing Wikipedia
+//! pages that the authors pre-join into a local database (§6.2). We
+//! cannot redistribute FEVER, so this generator builds a deterministic
+//! synthetic stand-in with the same cardinality, label structure, and
+//! preprocessing step (reference resolution). The coordinator and the
+//! model runtime only ever see `(text, label)` pairs, so scheduling and
+//! throughput behaviour are unaffected by the substitution (DESIGN.md).
+
+use crate::util::Rng;
+
+/// FEVER's three verdict labels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Label {
+    Supported,
+    Refuted,
+    NotEnoughInfo,
+}
+
+impl Label {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Label::Supported => "SUPPORTED",
+            Label::Refuted => "REFUTED",
+            Label::NotEnoughInfo => "NOT ENOUGH INFO",
+        }
+    }
+
+    pub fn class_index(&self) -> usize {
+        match self {
+            Label::Supported => 0,
+            Label::Refuted => 1,
+            Label::NotEnoughInfo => 2,
+        }
+    }
+}
+
+/// One claim, post reference-resolution.
+#[derive(Debug, Clone)]
+pub struct Claim {
+    pub id: u64,
+    pub text: String,
+    pub label: Label,
+    /// Resolved evidence snippet (the paper's Wikipedia join output).
+    pub evidence: String,
+    /// Control-group marker (the paper injects "a small number of empty
+    /// claims as the control group", §6.2).
+    pub is_control: bool,
+}
+
+/// Subject/predicate vocabularies for the synthetic generator.
+const SUBJECTS: &[&str] = &[
+    "Barack Obama", "the Eiffel Tower", "the Pacific Ocean", "Mount Everest",
+    "the Great Wall", "Marie Curie", "the Amazon River", "Isaac Newton",
+    "the Sahara Desert", "Leonardo da Vinci", "the Moon", "Antarctica",
+    "the Nile", "Albert Einstein", "the Colosseum", "Jupiter",
+];
+const PREDICATES_TRUE: &[&str] = &[
+    "is a well documented subject", "appears in encyclopedias",
+    "has been photographed", "is studied by researchers",
+];
+const PREDICATES_FALSE: &[&str] = &[
+    "is made entirely of glass", "was built in 1999 by robots",
+    "orbits the Sun backwards", "is smaller than a coin",
+];
+const PREDICATES_UNK: &[&str] = &[
+    "prefers winter to summer", "once considered a career change",
+    "is rumored to inspire poets", "may appear in a future film",
+];
+
+/// The dataset: deterministic per seed, FEVER-sized by default.
+#[derive(Debug, Clone)]
+pub struct FeverDataset {
+    claims: Vec<Claim>,
+}
+
+impl FeverDataset {
+    /// FEVER training-split cardinality (§6.2) plus the control group
+    /// rounding the workload to 150 k inferences.
+    pub const FEVER_TRAIN: u64 = 145_449;
+    pub const PAPER_TOTAL: u64 = 150_000;
+
+    /// Generate `n` claims (seeded). Labels are ~uniform; control claims
+    /// (empty text) fill indices ≥ `FEVER_TRAIN` when `n > FEVER_TRAIN`,
+    /// mirroring the paper's construction.
+    pub fn generate(n: u64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFE_E7);
+        let mut claims = Vec::with_capacity(n as usize);
+        for id in 0..n {
+            let is_control = id >= Self::FEVER_TRAIN;
+            if is_control {
+                claims.push(Claim {
+                    id,
+                    text: String::new(),
+                    label: Label::NotEnoughInfo,
+                    evidence: String::new(),
+                    is_control: true,
+                });
+                continue;
+            }
+            let subject = SUBJECTS[rng.below(SUBJECTS.len())];
+            let (pred, label) = match rng.below(3) {
+                0 => (
+                    PREDICATES_TRUE[rng.below(PREDICATES_TRUE.len())],
+                    Label::Supported,
+                ),
+                1 => (
+                    PREDICATES_FALSE[rng.below(PREDICATES_FALSE.len())],
+                    Label::Refuted,
+                ),
+                _ => (
+                    PREDICATES_UNK[rng.below(PREDICATES_UNK.len())],
+                    Label::NotEnoughInfo,
+                ),
+            };
+            let text = format!("{subject} {pred}");
+            let evidence = format!(
+                "According to reference page {}, {subject} {}.",
+                rng.below(100_000),
+                match label {
+                    Label::Supported => pred.to_string(),
+                    Label::Refuted => format!("in fact never {pred}"),
+                    Label::NotEnoughInfo =>
+                        "is described without further detail".to_string(),
+                }
+            );
+            claims.push(Claim { id, text, label, evidence, is_control: false });
+        }
+        Self { claims }
+    }
+
+    /// The paper's exact workload: 145,449 FEVER claims + control fillers
+    /// = 150 k inferences.
+    pub fn paper_workload(seed: u64) -> Self {
+        Self::generate(Self::PAPER_TOTAL, seed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.claims.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.claims.is_empty()
+    }
+
+    pub fn claims(&self) -> &[Claim] {
+        &self.claims
+    }
+
+    pub fn claim(&self, id: u64) -> &Claim {
+        &self.claims[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = FeverDataset::generate(100, 1);
+        let b = FeverDataset::generate(100, 1);
+        for (x, y) in a.claims().iter().zip(b.claims()) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.label, y.label);
+        }
+        let c = FeverDataset::generate(100, 2);
+        assert!(a
+            .claims()
+            .iter()
+            .zip(c.claims())
+            .any(|(x, y)| x.text != y.text));
+    }
+
+    #[test]
+    fn paper_workload_structure() {
+        let d = FeverDataset::generate(150_000, 0);
+        assert_eq!(d.len(), 150_000);
+        let controls =
+            d.claims().iter().filter(|c| c.is_control).count() as u64;
+        assert_eq!(controls, 150_000 - FeverDataset::FEVER_TRAIN);
+        // Control claims are empty; real claims are not.
+        assert!(d.claim(149_999).text.is_empty());
+        assert!(!d.claim(0).text.is_empty());
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let d = FeverDataset::generate(30_000, 3);
+        let mut counts = [0u32; 3];
+        for c in d.claims() {
+            counts[c.label.class_index()] += 1;
+        }
+        for &c in &counts {
+            assert!(
+                (8_000..12_000).contains(&c),
+                "unbalanced labels: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn evidence_is_resolved() {
+        let d = FeverDataset::generate(10, 4);
+        for c in d.claims() {
+            if !c.is_control {
+                assert!(c.evidence.contains("reference page"));
+            }
+        }
+    }
+
+    #[test]
+    fn label_strings() {
+        assert_eq!(Label::Supported.as_str(), "SUPPORTED");
+        assert_eq!(Label::NotEnoughInfo.class_index(), 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! The evaluation application: Prompt-for-Fact (PfF) fact verification.
+
+pub mod fever;
+pub mod prompts;
+pub mod verifier;
+pub mod workload;
+
+pub use fever::{Claim, FeverDataset, Label};
+pub use prompts::PromptTemplate;
+pub use verifier::{AccuracyReport, PffApp};
+pub use workload::InferenceWorkload;

@@ -1,0 +1,115 @@
+//! Prompt templates — the search axis of the PfF application.
+//!
+//! PfF "seeks to find an optimal pair of (LLM, prompt template) that
+//! yields the highest accuracy" (§6.1). Each template renders a claim
+//! (and optionally its evidence) into the prompt string the model
+//! classifies.
+
+use super::fever::Claim;
+
+/// A named prompt-rendering strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PromptTemplate {
+    /// Bare claim, minimal framing.
+    Direct,
+    /// Claim + instruction framing.
+    Instructed,
+    /// Claim + resolved evidence (the Wikipedia join).
+    WithEvidence,
+    /// Chain-of-thought-style framing.
+    StepByStep,
+}
+
+impl PromptTemplate {
+    pub const ALL: [PromptTemplate; 4] = [
+        PromptTemplate::Direct,
+        PromptTemplate::Instructed,
+        PromptTemplate::WithEvidence,
+        PromptTemplate::StepByStep,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PromptTemplate::Direct => "direct",
+            PromptTemplate::Instructed => "instructed",
+            PromptTemplate::WithEvidence => "with-evidence",
+            PromptTemplate::StepByStep => "step-by-step",
+        }
+    }
+
+    /// Render a claim into the model's input text.
+    pub fn render(&self, claim: &Claim) -> String {
+        match self {
+            PromptTemplate::Direct => {
+                format!("CLAIM: {} VERDICT:", claim.text)
+            }
+            PromptTemplate::Instructed => format!(
+                "You are a fact verifier. Decide if the claim is SUPPORTED, \
+                 REFUTED or NOT ENOUGH INFO. CLAIM: {} VERDICT:",
+                claim.text
+            ),
+            PromptTemplate::WithEvidence => format!(
+                "EVIDENCE: {} CLAIM: {} VERDICT:",
+                claim.evidence, claim.text
+            ),
+            PromptTemplate::StepByStep => format!(
+                "Verify step by step, then answer. CLAIM: {} Think about \
+                 the subject, the predicate, and the evidence. VERDICT:",
+                claim.text
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::fever::{FeverDataset, Label};
+
+    fn claim() -> Claim {
+        FeverDataset::generate(1, 0).claim(0).clone()
+    }
+
+    #[test]
+    fn all_templates_render_claim_text() {
+        let c = claim();
+        for t in PromptTemplate::ALL {
+            let p = t.render(&c);
+            assert!(p.contains(&c.text), "{t:?}");
+            assert!(p.contains("VERDICT:"), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn with_evidence_includes_evidence() {
+        let c = claim();
+        let p = PromptTemplate::WithEvidence.render(&c);
+        assert!(p.contains(&c.evidence));
+        assert!(!PromptTemplate::Direct.render(&c).contains("EVIDENCE"));
+    }
+
+    #[test]
+    fn templates_render_differently() {
+        let c = claim();
+        let rendered: Vec<String> =
+            PromptTemplate::ALL.iter().map(|t| t.render(&c)).collect();
+        for i in 0..rendered.len() {
+            for j in (i + 1)..rendered.len() {
+                assert_ne!(rendered[i], rendered[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_control_claim_renders() {
+        let c = Claim {
+            id: 0,
+            text: String::new(),
+            label: Label::NotEnoughInfo,
+            evidence: String::new(),
+            is_control: true,
+        };
+        let p = PromptTemplate::Direct.render(&c);
+        assert!(p.contains("VERDICT:"));
+    }
+}

@@ -1,0 +1,174 @@
+//! PfF: the optimal-prompt-search application (§6.1).
+//!
+//! "PfF seeks to find an optimal pair of (LLM, prompt template) that
+//! yields the highest accuracy in a particular fact verification
+//! dataset." The MVP takes one (LLM, template), sweeps the dataset, and
+//! returns aggregate accuracy; the search is embarrassingly parallel
+//! across pairs. Live mode runs real SmolVerify inference through the
+//! PJRT runtime; accuracy aggregation is identical either way.
+
+use crate::runtime::engine::Verdict;
+use crate::Result;
+
+use super::fever::Label;
+use super::prompts::PromptTemplate;
+use super::workload::InferenceWorkload;
+
+/// Aggregated accuracy for one (model, template) pair.
+#[derive(Debug, Clone)]
+pub struct AccuracyReport {
+    pub template: PromptTemplate,
+    pub total: u64,
+    pub correct: u64,
+    /// Confusion matrix `[truth][predicted]` over the 3 classes.
+    pub confusion: [[u64; 3]; 3],
+}
+
+impl AccuracyReport {
+    pub fn new(template: PromptTemplate) -> Self {
+        Self { template, total: 0, correct: 0, confusion: [[0; 3]; 3] }
+    }
+
+    pub fn record(&mut self, truth: Label, predicted: Verdict) {
+        let p = match predicted {
+            Verdict::Supported => 0,
+            Verdict::Refuted => 1,
+            Verdict::NotEnoughInfo => 2,
+        };
+        let t = truth.class_index();
+        self.confusion[t][p] += 1;
+        self.total += 1;
+        if t == p {
+            self.correct += 1;
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+
+    /// Merge a partial report (task-level results folding into the app).
+    pub fn merge(&mut self, other: &AccuracyReport) {
+        assert_eq!(self.template, other.template);
+        self.total += other.total;
+        self.correct += other.correct;
+        for t in 0..3 {
+            for p in 0..3 {
+                self.confusion[t][p] += other.confusion[t][p];
+            }
+        }
+    }
+}
+
+/// The PfF application driver (live-mode classification path).
+pub struct PffApp {
+    workload: InferenceWorkload,
+}
+
+impl PffApp {
+    pub fn new(workload: InferenceWorkload) -> Self {
+        Self { workload }
+    }
+
+    pub fn workload(&self) -> &InferenceWorkload {
+        &self.workload
+    }
+
+    /// Score a batch of verdicts produced for `[start, start+n)`.
+    pub fn score_batch(
+        &self,
+        start: u64,
+        verdicts: &[Verdict],
+    ) -> AccuracyReport {
+        let mut report = AccuracyReport::new(self.workload.template());
+        for (i, v) in verdicts.iter().enumerate() {
+            report.record(self.workload.label(start + i as u64), *v);
+        }
+        report
+    }
+
+    /// Run the full sweep on a local engine (no coordinator) — the pv0
+    /// "dedicated GPU" baseline in live mode.
+    pub fn sweep_local(
+        &self,
+        engine: &crate::runtime::InferenceEngine,
+        limit: Option<u64>,
+    ) -> Result<AccuracyReport> {
+        let n = limit.unwrap_or_else(|| self.workload.len()).min(self.workload.len());
+        let mut report = AccuracyReport::new(self.workload.template());
+        let chunk = 64u64;
+        let mut start = 0u64;
+        while start < n {
+            let count = chunk.min(n - start);
+            let prompts = self.workload.prompt_batch(start, count);
+            let refs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
+            let verdicts = engine.classify(&refs)?;
+            report.merge(&self.score_batch(start, &verdicts));
+            start += count;
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::fever::FeverDataset;
+
+    #[test]
+    fn accuracy_counts() {
+        let mut r = AccuracyReport::new(PromptTemplate::Direct);
+        r.record(Label::Supported, Verdict::Supported);
+        r.record(Label::Refuted, Verdict::Supported);
+        r.record(Label::NotEnoughInfo, Verdict::NotEnoughInfo);
+        assert_eq!(r.total, 3);
+        assert_eq!(r.correct, 2);
+        assert!((r.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.confusion[1][0], 1);
+    }
+
+    #[test]
+    fn empty_report_zero_accuracy() {
+        let r = AccuracyReport::new(PromptTemplate::Direct);
+        assert_eq!(r.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_up() {
+        let mut a = AccuracyReport::new(PromptTemplate::Direct);
+        a.record(Label::Supported, Verdict::Supported);
+        let mut b = AccuracyReport::new(PromptTemplate::Direct);
+        b.record(Label::Refuted, Verdict::Refuted);
+        b.record(Label::Refuted, Verdict::Supported);
+        a.merge(&b);
+        assert_eq!(a.total, 3);
+        assert_eq!(a.correct, 2);
+    }
+
+    #[test]
+    fn score_batch_aligns_labels() {
+        let w = InferenceWorkload::new(
+            FeverDataset::generate(10, 0),
+            PromptTemplate::Direct,
+        );
+        let app = PffApp::new(w);
+        // Predict everything as the true label of index 2..5 to check
+        // offset alignment.
+        let truths: Vec<Label> =
+            (2..5).map(|i| app.workload().label(i)).collect();
+        let verdicts: Vec<Verdict> = truths
+            .iter()
+            .map(|l| match l {
+                Label::Supported => Verdict::Supported,
+                Label::Refuted => Verdict::Refuted,
+                Label::NotEnoughInfo => Verdict::NotEnoughInfo,
+            })
+            .collect();
+        let r = app.score_batch(2, &verdicts);
+        assert_eq!(r.correct, 3);
+    }
+}

@@ -1,0 +1,96 @@
+//! Inference workloads: the bridge between the application (claims +
+//! prompt template) and the coordinator (opaque inference indices).
+//!
+//! The scheduler batches *indices*; only when a task executes in live
+//! mode does the workload render index → prompt text. In simulated mode
+//! the texts are never materialized — the cost model only needs counts —
+//! which is what lets the 150 k-inference experiments run in milliseconds.
+
+use super::fever::{FeverDataset, Label};
+use super::prompts::PromptTemplate;
+
+/// A (dataset, template) pair presented as an indexable prompt stream.
+#[derive(Debug, Clone)]
+pub struct InferenceWorkload {
+    dataset: FeverDataset,
+    template: PromptTemplate,
+}
+
+impl InferenceWorkload {
+    pub fn new(dataset: FeverDataset, template: PromptTemplate) -> Self {
+        Self { dataset, template }
+    }
+
+    /// The paper's workload: 150 k prompts, Direct template.
+    pub fn paper(seed: u64) -> Self {
+        Self::new(FeverDataset::paper_workload(seed), PromptTemplate::Direct)
+    }
+
+    pub fn len(&self) -> u64 {
+        self.dataset.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dataset.is_empty()
+    }
+
+    pub fn template(&self) -> PromptTemplate {
+        self.template
+    }
+
+    pub fn dataset(&self) -> &FeverDataset {
+        &self.dataset
+    }
+
+    /// Render the prompt for inference index `i`.
+    pub fn prompt(&self, i: u64) -> String {
+        self.template.render(self.dataset.claim(i))
+    }
+
+    /// Ground-truth label for inference index `i`.
+    pub fn label(&self, i: u64) -> Label {
+        self.dataset.claim(i).label
+    }
+
+    /// Render a contiguous batch of prompts `[start, start+count)`.
+    pub fn prompt_batch(&self, start: u64, count: u64) -> Vec<String> {
+        (start..start + count).map(|i| self.prompt(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompts_render_per_template() {
+        let w = InferenceWorkload::new(
+            FeverDataset::generate(10, 0),
+            PromptTemplate::WithEvidence,
+        );
+        assert_eq!(w.len(), 10);
+        let p = w.prompt(3);
+        assert!(p.contains("EVIDENCE:"));
+    }
+
+    #[test]
+    fn batch_is_contiguous() {
+        let w = InferenceWorkload::new(
+            FeverDataset::generate(20, 1),
+            PromptTemplate::Direct,
+        );
+        let batch = w.prompt_batch(5, 4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0], w.prompt(5));
+        assert_eq!(batch[3], w.prompt(8));
+    }
+
+    #[test]
+    fn labels_align_with_dataset() {
+        let d = FeverDataset::generate(10, 2);
+        let w = InferenceWorkload::new(d.clone(), PromptTemplate::Direct);
+        for i in 0..10 {
+            assert_eq!(w.label(i), d.claim(i).label);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! HTCondor-style backfill resource manager (simulated).
+//!
+//! Tracks every node's disposition and reconciles it against the load
+//! trace: when the primary (simulated AGE) load drops, nodes free up for
+//! backfill; when it rises, backfill nodes are **reclaimed with immediate
+//! eviction** — the paper is explicit that, unlike SpotServe's 30 s–2 min
+//! grace period, "opportunistic resources in our work evict workers
+//! immediately upon reclamation" (§7).
+//!
+//! Reclaim victim selection is policy-driven: random (the default — real
+//! backfill evictions don't care about your GPU) or by explicit GPU-model
+//! priority (pv5 drains "all NVIDIA A10s before NVIDIA Titan X Pascals").
+
+use super::gpu::GpuModel;
+use super::node::{Node, NodeId};
+use super::trace::LoadTrace;
+use crate::util::Rng;
+
+/// Disposition of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NodeState {
+    /// Held by the primary workload; not ours to use.
+    Primary,
+    /// Idle and offered for backfill (a worker could start here).
+    Offered,
+    /// Running one of our opportunistic workers.
+    Held,
+}
+
+/// What the cluster tells the driver at a trace step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterAction {
+    /// This node is now offered; the factory may start a worker on it.
+    Grant(NodeId),
+    /// This node (running our worker) is reclaimed NOW; evict.
+    Reclaim(NodeId),
+}
+
+/// The backfill manager.
+#[derive(Debug, Clone)]
+pub struct ClusterSim {
+    nodes: Vec<Node>,
+    state: Vec<NodeState>,
+    trace: LoadTrace,
+    /// Eviction priority: models earlier in this list are reclaimed first.
+    /// Empty → uniformly random victims.
+    pub reclaim_priority: Vec<GpuModel>,
+    rng: Rng,
+}
+
+impl ClusterSim {
+    pub fn new(nodes: Vec<Node>, trace: LoadTrace, rng: Rng) -> Self {
+        let state = vec![NodeState::Primary; nodes.len()];
+        Self { nodes, state, trace, reclaim_priority: Vec::new(), rng }
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn trace(&self) -> &LoadTrace {
+        &self.trace
+    }
+
+    /// Count of nodes currently ours-or-offered.
+    pub fn available(&self) -> u32 {
+        self.state
+            .iter()
+            .filter(|s| matches!(s, NodeState::Offered | NodeState::Held))
+            .count() as u32
+    }
+
+    /// Nodes currently offered (no worker yet).
+    pub fn offered_nodes(&self) -> Vec<NodeId> {
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == NodeState::Offered)
+            .map(|(i, _)| i as NodeId)
+            .collect()
+    }
+
+    /// The factory started a worker on an offered node.
+    pub fn mark_held(&mut self, id: NodeId) {
+        assert_eq!(
+            self.state[id as usize],
+            NodeState::Offered,
+            "can only hold an offered node"
+        );
+        self.state[id as usize] = NodeState::Held;
+    }
+
+    /// A worker exited voluntarily (job done); the node stays offered.
+    pub fn release(&mut self, id: NodeId) {
+        if self.state[id as usize] == NodeState::Held {
+            self.state[id as usize] = NodeState::Offered;
+        }
+    }
+
+    /// Reconcile against the trace target at time `t`. Returns the grants
+    /// and reclaims the driver must apply (in order).
+    pub fn reconcile(&mut self, t: f64) -> Vec<ClusterAction> {
+        let target = self.trace.target_at(t);
+        let mut actions = Vec::new();
+        let avail = self.available();
+
+        if target > avail {
+            // Primary load dropped: offer more nodes. Order is randomized
+            // — arrivals come in "arbitrary orders and varieties" (§4).
+            let mut primaries: Vec<NodeId> = self
+                .state
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s == NodeState::Primary)
+                .map(|(i, _)| i as NodeId)
+                .collect();
+            self.rng.shuffle(&mut primaries);
+            for id in primaries.into_iter().take((target - avail) as usize) {
+                self.state[id as usize] = NodeState::Offered;
+                actions.push(ClusterAction::Grant(id));
+            }
+        } else if target < avail {
+            let mut need = (avail - target) as usize;
+            // Reclaim offered (idle) nodes first — free capacity vanishes
+            // before running workers get shot.
+            let mut offered = self.offered_nodes();
+            self.rng.shuffle(&mut offered);
+            for id in offered.into_iter().take(need) {
+                self.state[id as usize] = NodeState::Primary;
+                need -= 1;
+                // Offered nodes produce no action: nothing to evict.
+            }
+            if need > 0 {
+                let victims = self.pick_victims(need);
+                for id in victims {
+                    self.state[id as usize] = NodeState::Primary;
+                    actions.push(ClusterAction::Reclaim(id));
+                }
+            }
+        }
+        actions
+    }
+
+    /// Pick `n` held nodes to evict, honoring `reclaim_priority`.
+    fn pick_victims(&mut self, n: usize) -> Vec<NodeId> {
+        let mut held: Vec<NodeId> = self
+            .state
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == NodeState::Held)
+            .map(|(i, _)| i as NodeId)
+            .collect();
+        self.rng.shuffle(&mut held);
+        if !self.reclaim_priority.is_empty() {
+            let rank = |id: &NodeId| {
+                self.reclaim_priority
+                    .iter()
+                    .position(|m| *m == self.nodes[*id as usize].gpu)
+                    .unwrap_or(usize::MAX)
+            };
+            held.sort_by_key(rank);
+        }
+        held.truncate(n);
+        held
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::pool_20_mixed;
+
+    fn sim(trace: LoadTrace) -> ClusterSim {
+        ClusterSim::new(pool_20_mixed(), trace, Rng::new(1))
+    }
+
+    #[test]
+    fn initial_reconcile_grants_up_to_target() {
+        let mut s = sim(LoadTrace::constant(20));
+        let actions = s.reconcile(0.0);
+        assert_eq!(actions.len(), 20);
+        assert!(actions.iter().all(|a| matches!(a, ClusterAction::Grant(_))));
+        assert_eq!(s.available(), 20);
+    }
+
+    #[test]
+    fn partial_target_grants_partial() {
+        let mut s = sim(LoadTrace::constant(5));
+        let actions = s.reconcile(0.0);
+        assert_eq!(actions.len(), 5);
+        assert_eq!(s.offered_nodes().len(), 5);
+    }
+
+    #[test]
+    fn reclaim_prefers_idle_nodes() {
+        let mut s = sim(LoadTrace::from_steps(vec![(0.0, 10), (100.0, 5)]));
+        s.reconcile(0.0);
+        // Hold 3 of the 10 offered; 7 stay idle.
+        let offered = s.offered_nodes();
+        for &id in offered.iter().take(3) {
+            s.mark_held(id);
+        }
+        let actions = s.reconcile(100.0);
+        // Need to shed 5; 7 idle cover it → no evictions.
+        assert!(actions.is_empty());
+        assert_eq!(s.available(), 5);
+    }
+
+    #[test]
+    fn reclaim_evicts_held_when_idle_insufficient() {
+        let mut s = sim(LoadTrace::from_steps(vec![(0.0, 10), (100.0, 2)]));
+        s.reconcile(0.0);
+        for id in s.offered_nodes() {
+            s.mark_held(id);
+        }
+        let actions = s.reconcile(100.0);
+        let reclaims = actions
+            .iter()
+            .filter(|a| matches!(a, ClusterAction::Reclaim(_)))
+            .count();
+        assert_eq!(reclaims, 8);
+        assert_eq!(s.available(), 2);
+    }
+
+    #[test]
+    fn priority_drain_hits_a10_first() {
+        // pv5: drain prioritizes A10s before TitanX.
+        let mut s = sim(LoadTrace::from_steps(vec![(0.0, 20), (100.0, 10)]));
+        s.reclaim_priority = vec![GpuModel::A10, GpuModel::TitanXPascal];
+        s.reconcile(0.0);
+        for id in s.offered_nodes() {
+            s.mark_held(id);
+        }
+        let actions = s.reconcile(100.0);
+        assert_eq!(actions.len(), 10);
+        for a in actions {
+            let ClusterAction::Reclaim(id) = a else { panic!() };
+            assert_eq!(s.node(id).gpu, GpuModel::A10, "A10s drain first");
+        }
+    }
+
+    #[test]
+    fn grants_are_shuffled_not_sequential() {
+        let mut s = sim(LoadTrace::constant(20));
+        let actions = s.reconcile(0.0);
+        let ids: Vec<NodeId> = actions
+            .iter()
+            .map(|a| match a {
+                ClusterAction::Grant(id) => *id,
+                _ => panic!(),
+            })
+            .collect();
+        let sequential: Vec<NodeId> = (0..20).collect();
+        assert_ne!(ids, sequential, "arrival order must be randomized");
+    }
+
+    #[test]
+    fn release_returns_node_to_offered() {
+        let mut s = sim(LoadTrace::constant(3));
+        s.reconcile(0.0);
+        let id = s.offered_nodes()[0];
+        s.mark_held(id);
+        s.release(id);
+        assert!(s.offered_nodes().contains(&id));
+        assert_eq!(s.available(), 3);
+    }
+}

@@ -1,0 +1,143 @@
+//! Shared parallel filesystem model (Panasas ActiveStor 16 stand-in).
+//!
+//! The paper's cluster serves data over a 77-node Panasas system rated at
+//! 84 Gb/s read bandwidth and 94 k read IOPS (§6.2). Challenge #5 is the
+//! resulting failure mode: a burst of opportunistic workers all staging a
+//! 3.7 GB dependency package at once saturates the array and everybody's
+//! stage-in crawls.
+//!
+//! Model: aggregate read bandwidth is shared fairly among concurrent
+//! readers, with a super-linear degradation term once the reader count
+//! passes the array's healthy concurrency (metadata/IOPS pressure —
+//! Panasas-class systems degrade worse than 1/n under metadata storms,
+//! see Shaffer & Thain '17). A read started under contention keeps its
+//! admission-time rate for simplicity; the experiments only need the
+//! aggregate *shape* (pv1's stampede vs pv2+'s cached staging).
+
+use crate::util::Rng;
+
+/// Aggregate-bandwidth shared filesystem with contention degradation.
+#[derive(Debug, Clone)]
+pub struct SharedFilesystem {
+    /// Aggregate read bandwidth, bytes/s (84 Gb/s ≈ 10.5 GB/s).
+    pub bandwidth_bps: f64,
+    /// Reader count the array sustains at full fairness.
+    pub healthy_readers: u32,
+    /// Super-linear degradation exponent past `healthy_readers`.
+    pub degradation_exp: f64,
+    readers: u32,
+}
+
+impl Default for SharedFilesystem {
+    fn default() -> Self {
+        Self::panasas_as16()
+    }
+}
+
+impl SharedFilesystem {
+    /// The paper's array: 84 Gb/s aggregate reads.
+    pub fn panasas_as16() -> Self {
+        Self {
+            bandwidth_bps: 84.0e9 / 8.0,
+            healthy_readers: 24,
+            degradation_exp: 1.4,
+            readers: 0,
+        }
+    }
+
+    pub fn readers(&self) -> u32 {
+        self.readers
+    }
+
+    /// A reader joins (stage-in starts).
+    pub fn begin_read(&mut self) {
+        self.readers += 1;
+    }
+
+    /// A reader leaves (stage-in ends / eviction).
+    pub fn end_read(&mut self) {
+        debug_assert!(self.readers > 0);
+        self.readers = self.readers.saturating_sub(1);
+    }
+
+    /// Effective per-reader bandwidth at the *current* contention level,
+    /// for a reader that is about to join.
+    pub fn per_reader_bandwidth(&self) -> f64 {
+        let n = (self.readers + 1) as f64;
+        let fair = self.bandwidth_bps / n;
+        let over = n / self.healthy_readers as f64;
+        if over > 1.0 {
+            // Metadata/IOPS pressure: worse than fair-share past the knee.
+            fair / over.powf(self.degradation_exp - 1.0)
+        } else {
+            fair
+        }
+    }
+
+    /// Seconds to read `bytes` if admitted now, with ±10% jitter drawn
+    /// from `rng` (placement / striping variance).
+    pub fn read_time(&self, bytes: u64, rng: &mut Rng) -> f64 {
+        let base = bytes as f64 / self.per_reader_bandwidth();
+        base * rng.uniform(0.9, 1.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncontended_read_is_fast() {
+        let fs = SharedFilesystem::panasas_as16();
+        let mut rng = Rng::new(1);
+        // 3.7 GB at 10.5 GB/s ≈ 0.35 s (±10%).
+        let t = fs.read_time(3_700_000_000, &mut rng);
+        assert!((0.3..0.45).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn contention_degrades_super_linearly() {
+        let mut fs = SharedFilesystem::panasas_as16();
+        let solo = fs.per_reader_bandwidth();
+        for _ in 0..99 {
+            fs.begin_read();
+        }
+        let crowded = fs.per_reader_bandwidth();
+        // 100 readers: fair share would be solo/100; super-linear is worse.
+        assert!(crowded < solo / 100.0);
+        assert!(crowded > 0.0);
+    }
+
+    #[test]
+    fn fair_share_below_knee() {
+        let mut fs = SharedFilesystem::panasas_as16();
+        let solo = fs.per_reader_bandwidth();
+        for _ in 0..9 {
+            fs.begin_read();
+        }
+        let ten = fs.per_reader_bandwidth();
+        assert!((solo / ten - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reader_accounting() {
+        let mut fs = SharedFilesystem::panasas_as16();
+        fs.begin_read();
+        fs.begin_read();
+        assert_eq!(fs.readers(), 2);
+        fs.end_read();
+        assert_eq!(fs.readers(), 1);
+    }
+
+    #[test]
+    fn monotone_in_readers() {
+        let mut fs = SharedFilesystem::panasas_as16();
+        let mut last = f64::INFINITY;
+        for _ in 0..200 {
+            let bw = fs.per_reader_bandwidth();
+            assert!(bw <= last + 1e-9, "bandwidth must not improve with load");
+            last = bw;
+            fs.begin_read();
+        }
+    }
+}

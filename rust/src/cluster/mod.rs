@@ -1,0 +1,30 @@
+//! Opportunistic heterogeneous GPU cluster substrate.
+//!
+//! The paper evaluates on a 567-GPU university cluster running Altair
+//! Grid Engine with HTCondor backfilling. We rebuild that substrate as a
+//! calibrated simulator:
+//!
+//! * [`gpu`] — the exact GPU inventory of the paper's Table 1 plus a
+//!   relative-throughput model per device.
+//! * [`node`] — compute nodes (1 GPU each, per the paper's worker sizing).
+//! * [`condor`] — the backfill resource manager: grants idle nodes to
+//!   opportunistic workers and reclaims them (evicting without cleanup)
+//!   as the simulated primary load shifts.
+//! * [`trace`] — cluster-load traces: constant pools, the pv5 drain
+//!   schedule, and pv6-style diurnal availability.
+//! * [`filesystem`] — the shared parallel filesystem (Panasas stand-in)
+//!   with bandwidth/IOPS contention, reproducing the paper's Challenge #5
+//!   ("spiky data movement and I/O").
+
+pub mod condor;
+pub mod filesystem;
+pub mod gpu;
+pub mod node;
+pub mod primary;
+pub mod trace;
+
+pub use condor::{ClusterAction, ClusterSim};
+pub use filesystem::SharedFilesystem;
+pub use gpu::{GpuModel, GPU_CATALOG};
+pub use node::{Node, NodeId};
+pub use trace::LoadTrace;

@@ -1,0 +1,88 @@
+//! Compute nodes: the unit the resource manager grants and reclaims.
+//!
+//! Following the paper's worker-sizing policy (§5.3.2), each opportunistic
+//! slot is minimal: 2 cores, 10 GB RAM, 70 GB disk, **1 GPU** — so a node
+//! here is a single-GPU backfill slot. Multi-GPU machines in the real
+//! cluster appear as several independent nodes, which is exactly how
+//! HTCondor slots them.
+
+use super::gpu::{GpuModel, GPU_CATALOG};
+
+/// Dense node identifier (index into the cluster's node table).
+pub type NodeId = u32;
+
+/// One single-GPU backfill slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Node {
+    pub id: NodeId,
+    pub gpu: GpuModel,
+}
+
+impl Node {
+    pub fn relative_speed(&self) -> f64 {
+        self.gpu.relative_speed()
+    }
+}
+
+/// The paper's controlled 20-GPU evaluation pool: half NVIDIA A10, half
+/// TITAN X (Pascal) (§6.2: "mimic the heterogeneity of the actual GPU
+/// cluster").
+pub fn pool_20_mixed() -> Vec<Node> {
+    let mut nodes = Vec::with_capacity(20);
+    for i in 0..10 {
+        nodes.push(Node { id: i, gpu: GpuModel::A10 });
+    }
+    for i in 10..20 {
+        nodes.push(Node { id: i, gpu: GpuModel::TitanXPascal });
+    }
+    nodes
+}
+
+/// The full 567-GPU cluster per Table 1 (+ legacy filler), node ids dense
+/// in catalog order.
+pub fn full_cluster() -> Vec<Node> {
+    let mut nodes = Vec::new();
+    let mut id: NodeId = 0;
+    for spec in GPU_CATALOG {
+        for _ in 0..spec.count {
+            nodes.push(Node { id, gpu: spec.model });
+            id += 1;
+        }
+    }
+    nodes
+}
+
+/// A dedicated single-A10 "pool" (the pv0 baseline).
+pub fn pool_single_a10() -> Vec<Node> {
+    vec![Node { id: 0, gpu: GpuModel::A10 }]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_pool_composition() {
+        let pool = pool_20_mixed();
+        assert_eq!(pool.len(), 20);
+        let a10 = pool.iter().filter(|n| n.gpu == GpuModel::A10).count();
+        let titan =
+            pool.iter().filter(|n| n.gpu == GpuModel::TitanXPascal).count();
+        assert_eq!((a10, titan), (10, 10));
+    }
+
+    #[test]
+    fn full_cluster_is_567_dense_ids() {
+        let nodes = full_cluster();
+        assert_eq!(nodes.len(), 567);
+        for (i, n) in nodes.iter().enumerate() {
+            assert_eq!(n.id as usize, i);
+        }
+    }
+
+    #[test]
+    fn node_speed_delegates_to_gpu() {
+        let n = Node { id: 0, gpu: GpuModel::H100 };
+        assert_eq!(n.relative_speed(), 3.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Primary-workload generator: the AGE batch manager's job stream.
+//!
+//! The diurnal traces in [`super::trace`] describe availability directly;
+//! this module *derives* availability from first principles instead, by
+//! simulating the cluster's primary (static-allocation) workload the way
+//! the paper describes it: users submit big static jobs through Altair
+//! Grid Engine, "users tend to run more jobs overnight" (§6.3), and
+//! whatever the primary load leaves idle is what HTCondor backfills.
+//!
+//! Model: job arrivals are a non-homogeneous Poisson process whose rate
+//! follows a day curve (peak submissions in the evening), job sizes are
+//! geometric-ish in GPUs, durations lognormal in hours. Capacity not
+//! held by a running primary job at time t is the backfill target.
+
+use crate::util::Rng;
+
+use super::trace::LoadTrace;
+
+/// Primary-workload parameters.
+#[derive(Debug, Clone)]
+pub struct PrimaryWorkload {
+    /// Total GPUs in the cluster.
+    pub capacity: u32,
+    /// Mean job inter-arrival time at the *daily average* rate (s).
+    pub mean_interarrival_s: f64,
+    /// Evening submission multiplier (rate peaks ~21:00, troughs ~09:00).
+    pub diurnal_amplitude: f64,
+    /// Mean GPUs per job (geometric).
+    pub mean_job_gpus: f64,
+    /// Lognormal duration parameters (underlying mu/sigma, seconds).
+    pub duration_mu: f64,
+    pub duration_sigma: f64,
+}
+
+impl Default for PrimaryWorkload {
+    fn default() -> Self {
+        Self {
+            capacity: 567,
+            mean_interarrival_s: 180.0,
+            diurnal_amplitude: 0.6,
+            mean_job_gpus: 24.0,
+            // exp(mu) ≈ 2.2 h median job, heavy right tail.
+            duration_mu: 9.0,
+            duration_sigma: 0.8,
+        }
+    }
+}
+
+impl PrimaryWorkload {
+    /// Submission-rate multiplier at local hour `h` (peak 21:00).
+    fn rate_factor(&self, hour: f64) -> f64 {
+        let phase = (hour - 21.0) / 24.0 * std::f64::consts::TAU;
+        1.0 + self.diurnal_amplitude * phase.cos()
+    }
+
+    /// Simulate the primary job stream and emit the backfill-availability
+    /// trace sampled every `step_s` over `duration_s`, starting at
+    /// `start_hour` local time.
+    ///
+    /// `warmup_s` of virtual pre-roll fills the cluster with in-flight
+    /// jobs so the trace doesn't start from an empty (fully available)
+    /// cluster.
+    pub fn availability_trace(
+        &self,
+        start_hour: f64,
+        duration_s: f64,
+        step_s: f64,
+        rng: &mut Rng,
+    ) -> LoadTrace {
+        let warmup_s = 12.0 * 3600.0;
+        // Running jobs as (end_time, gpus), over warmup + duration.
+        let mut running: Vec<(f64, u32)> = Vec::new();
+        let mut held: i64 = 0;
+
+        let mut samples = Vec::new();
+        let mut next_arrival = 0.0f64;
+        let mut t = 0.0f64;
+        let horizon = warmup_s + duration_s;
+        let mut next_sample = warmup_s;
+
+        while t <= horizon {
+            // Retire finished jobs up to t.
+            running.retain(|&(end, gpus)| {
+                if end <= t {
+                    held -= gpus as i64;
+                    false
+                } else {
+                    true
+                }
+            });
+
+            if t >= next_arrival {
+                // Thinned Poisson arrival.
+                let hour =
+                    (start_hour - warmup_s / 3600.0 + t / 3600.0).rem_euclid(24.0);
+                let rate = self.rate_factor(hour) / self.mean_interarrival_s;
+                next_arrival = t + rng.exponential(1.0 / rate.max(1e-9));
+                // Geometric-ish size, clamped to free capacity (AGE holds
+                // jobs that don't fit; we drop them for simplicity — the
+                // queue pressure is already captured by the arrival rate).
+                let size = (rng.exponential(self.mean_job_gpus).ceil() as u32)
+                    .clamp(1, self.capacity);
+                let free = self.capacity as i64 - held;
+                let take = (size as i64).min(free).max(0) as u32;
+                if take > 0 {
+                    let dur = rng.lognormal(self.duration_mu, self.duration_sigma);
+                    running.push((t + dur, take));
+                    held += take as i64;
+                }
+            }
+
+            if t >= next_sample {
+                let avail = (self.capacity as i64 - held).max(0) as u32;
+                samples.push((t - warmup_s, avail));
+                next_sample += step_s;
+            }
+
+            // Advance to the next interesting instant.
+            let next_end = running
+                .iter()
+                .map(|&(e, _)| e)
+                .fold(f64::INFINITY, f64::min);
+            t = next_arrival.min(next_end).min(next_sample).max(t + 1e-6);
+        }
+
+        if samples.is_empty() || samples[0].0 != 0.0 {
+            samples.insert(0, (0.0, (self.capacity as i64 - held).max(0) as u32));
+        }
+        // Deduplicate non-increasing times from the event-stepping.
+        let mut steps: Vec<(f64, u32)> = Vec::with_capacity(samples.len());
+        for (st, v) in samples {
+            match steps.last() {
+                Some(&(lt, _)) if st <= lt => continue,
+                _ => steps.push((st, v)),
+            }
+        }
+        LoadTrace::from_steps(steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(start_hour: f64, seed: u64) -> LoadTrace {
+        let mut rng = Rng::new(seed);
+        PrimaryWorkload::default().availability_trace(
+            start_hour,
+            12.0 * 3600.0,
+            300.0,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn availability_within_capacity() {
+        let tr = trace(10.0, 1);
+        for t in (0..(12 * 3600)).step_by(600) {
+            assert!(tr.target_at(t as f64) <= 567);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = trace(10.0, 7);
+        let b = trace(10.0, 7);
+        for t in (0..(12 * 3600)).step_by(900) {
+            assert_eq!(a.target_at(t as f64), b.target_at(t as f64));
+        }
+    }
+
+    #[test]
+    fn cluster_is_busy_not_empty() {
+        // The warmup must leave a meaningfully loaded cluster: average
+        // availability well below capacity and above zero.
+        let tr = trace(14.0, 3);
+        let mut sum = 0u64;
+        let mut n = 0u64;
+        for t in (0..(12 * 3600)).step_by(300) {
+            sum += tr.target_at(t as f64) as u64;
+            n += 1;
+        }
+        let avg = sum as f64 / n as f64;
+        assert!(
+            (10.0..500.0).contains(&avg),
+            "avg availability {avg} suggests a broken primary load"
+        );
+    }
+
+    #[test]
+    fn availability_fluctuates() {
+        let tr = trace(10.0, 5);
+        let targets: Vec<u32> = (0..(12 * 3600))
+            .step_by(300)
+            .map(|t| tr.target_at(t as f64))
+            .collect();
+        let min = targets.iter().min().unwrap();
+        let max = targets.iter().max().unwrap();
+        assert!(max > min, "primary load must churn availability");
+    }
+
+    #[test]
+    fn night_runs_see_less_availability_on_average() {
+        // Evening submissions (peak 21:00) eat the cluster overnight:
+        // average a 22:00-start trace vs a 10:00-start trace over many
+        // seeds — the overnight window should offer less backfill.
+        let avg_avail = |start: f64| -> f64 {
+            let mut total = 0.0;
+            for seed in 0..8u64 {
+                let tr = trace(start, seed);
+                let mut sum = 0u64;
+                let mut n = 0u64;
+                for t in (0..(8 * 3600)).step_by(600) {
+                    sum += tr.target_at(t as f64) as u64;
+                    n += 1;
+                }
+                total += sum as f64 / n as f64;
+            }
+            total / 8.0
+        };
+        let day = avg_avail(10.0);
+        let night = avg_avail(22.0);
+        assert!(
+            night < day,
+            "night availability {night:.1} !< day {day:.1}"
+        );
+    }
+
+    #[test]
+    fn trace_feeds_simulation() {
+        use crate::cluster::node::full_cluster;
+        use crate::coordinator::{ContextPolicy, SimConfig, SimDriver};
+        let mut rng = Rng::new(9);
+        let tr = PrimaryWorkload::default().availability_trace(
+            14.0,
+            12.0 * 3600.0,
+            120.0,
+            &mut rng,
+        );
+        let mut cfg = SimConfig::new(
+            "primary-fed",
+            ContextPolicy::Pervasive,
+            100,
+            full_cluster(),
+            tr,
+            9,
+        );
+        cfg.total_inferences = 10_000;
+        cfg.start_gate_fraction = 0.0;
+        let out = SimDriver::new(cfg).run();
+        assert_eq!(out.summary.completed_inferences, 10_000);
+    }
+}

@@ -1,0 +1,180 @@
+//! Cluster-load traces: how many backfill slots exist over time.
+//!
+//! A trace is a step function `time → target available nodes`. Builders
+//! cover the paper's three regimes:
+//!
+//! * [`LoadTrace::constant`] — the controlled 20-GPU pool (pv1–pv4).
+//! * [`LoadTrace::drain`] — pv5: 15 undisturbed minutes, then the cluster
+//!   "suddenly becomes busy" and reclaims 1 GPU/minute.
+//! * [`LoadTrace::diurnal`] — pv6: availability follows the day/night
+//!   load cycle of a production cluster (users run more jobs overnight,
+//!   §6.3 Effort 6), with seeded stochastic wobble.
+
+use crate::util::Rng;
+
+/// Step function of target available node counts.
+#[derive(Debug, Clone)]
+pub struct LoadTrace {
+    /// `(time_s, target)` steps, strictly increasing in time, starting at 0.
+    steps: Vec<(f64, u32)>,
+}
+
+impl LoadTrace {
+    /// Build from raw steps (must start at t=0 and be time-sorted).
+    pub fn from_steps(steps: Vec<(f64, u32)>) -> Self {
+        assert!(!steps.is_empty(), "empty trace");
+        assert_eq!(steps[0].0, 0.0, "trace must start at t=0");
+        for w in steps.windows(2) {
+            assert!(w[0].0 < w[1].0, "trace times must increase");
+        }
+        Self { steps }
+    }
+
+    /// Constant availability (the controlled experiments).
+    pub fn constant(target: u32) -> Self {
+        Self::from_steps(vec![(0.0, target)])
+    }
+
+    /// pv5 drain: full pool until `start_s`, then lose one node every
+    /// `interval_s` until zero.
+    pub fn drain(pool: u32, start_s: f64, interval_s: f64) -> Self {
+        let mut steps = vec![(0.0, pool)];
+        for i in 1..=pool {
+            steps.push((start_s + interval_s * i as f64, pool - i));
+        }
+        Self::from_steps(steps)
+    }
+
+    /// pv6 diurnal availability: sampled every `step_s` over `duration_s`,
+    /// following an inverted day-load sinusoid (most opportunistic
+    /// capacity mid-day in the paper's cluster, least late-night when
+    /// users queue big jobs), plus seeded noise.
+    ///
+    /// `start_hour` is the local time-of-day the experiment starts;
+    /// `lo`/`hi` bracket the available-GPU envelope.
+    pub fn diurnal(
+        start_hour: f64,
+        duration_s: f64,
+        step_s: f64,
+        lo: u32,
+        hi: u32,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(hi >= lo);
+        let mut steps = Vec::new();
+        let mut t = 0.0;
+        let span = (hi - lo) as f64;
+        while t <= duration_s {
+            let hour = (start_hour + t / 3600.0) % 24.0;
+            // Availability peaks ≈ 14:00, troughs ≈ 02:00 (phase-shifted
+            // cosine); matches the paper's 10a..11p ordering of pv6 runs.
+            let phase = (hour - 14.0) / 24.0 * std::f64::consts::TAU;
+            let base = lo as f64 + span * 0.5 * (1.0 + phase.cos());
+            let noise = rng.normal() * span * 0.08;
+            let target = (base + noise).round().clamp(lo as f64, hi as f64);
+            steps.push((t, target as u32));
+            t += step_s;
+        }
+        Self::from_steps(steps)
+    }
+
+    /// Target at time `t` (steps hold until the next step).
+    pub fn target_at(&self, t: f64) -> u32 {
+        let mut cur = self.steps[0].1;
+        for &(st, v) in &self.steps {
+            if st <= t {
+                cur = v;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// All step times (the driver schedules a `TraceStep` event per entry).
+    pub fn step_times(&self) -> impl Iterator<Item = f64> + '_ {
+        self.steps.iter().map(|&(t, _)| t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn max_target(&self) -> u32 {
+        self.steps.iter().map(|&(_, v)| v).max().unwrap_or(0)
+    }
+
+    /// Largest target at or after time `t` (the current step included).
+    /// 0 means the pool is gone for good — no future capacity exists.
+    pub fn max_target_from(&self, t: f64) -> u32 {
+        let mut best = self.target_at(t);
+        for &(st, v) in &self.steps {
+            if st >= t {
+                best = best.max(v);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_holds() {
+        let tr = LoadTrace::constant(20);
+        assert_eq!(tr.target_at(0.0), 20);
+        assert_eq!(tr.target_at(1e9), 20);
+    }
+
+    #[test]
+    fn drain_schedule_matches_paper() {
+        // pv5: 15 min quiet, then 1 GPU/min.
+        let tr = LoadTrace::drain(20, 900.0, 60.0);
+        assert_eq!(tr.target_at(0.0), 20);
+        assert_eq!(tr.target_at(899.0), 20);
+        assert_eq!(tr.target_at(960.0), 19);
+        assert_eq!(tr.target_at(900.0 + 60.0 * 10.0), 10);
+        assert_eq!(tr.target_at(900.0 + 60.0 * 20.0), 0);
+        assert_eq!(tr.target_at(1e9), 0);
+    }
+
+    #[test]
+    fn diurnal_envelope_respected() {
+        let mut rng = Rng::new(42);
+        let tr =
+            LoadTrace::diurnal(10.0, 24.0 * 3600.0, 300.0, 11, 64, &mut rng);
+        for &(_, v) in &tr.steps {
+            assert!((11..=64).contains(&v));
+        }
+        // Mid-day availability should beat late-night on average.
+        let midday = tr.target_at(4.0 * 3600.0); // 14:00
+        let night = tr.target_at(16.0 * 3600.0); // 02:00
+        assert!(midday > night, "midday={midday} night={night}");
+    }
+
+    #[test]
+    fn diurnal_is_deterministic_per_seed() {
+        let a = LoadTrace::diurnal(10.0, 7200.0, 60.0, 5, 50, &mut Rng::new(7));
+        let b = LoadTrace::diurnal(10.0, 7200.0, 60.0, 5, 50, &mut Rng::new(7));
+        assert_eq!(a.steps, b.steps);
+    }
+
+    #[test]
+    #[should_panic(expected = "must start at t=0")]
+    fn rejects_bad_start() {
+        LoadTrace::from_steps(vec![(5.0, 1)]);
+    }
+
+    #[test]
+    fn step_times_exposed() {
+        let tr = LoadTrace::drain(2, 10.0, 5.0);
+        let times: Vec<f64> = tr.step_times().collect();
+        assert_eq!(times, vec![0.0, 15.0, 20.0]);
+    }
+}

@@ -1,0 +1,245 @@
+//! Batching: workload → tasks, plus the adaptive batch-size tuner.
+//!
+//! Challenge #6: "a batch size too large unlocks higher throughput but
+//! risks a higher chance of eviction and thus no throughput; a batch size
+//! too small safeguards incremental throughput but wastes resources on
+//! initialization overheads." The paper mitigates by trial-and-error
+//! search (§4); with pervasive context management the penalty surface
+//! flattens so much that any B ∈ [1, 1000] is within ~12% (§6.3 Effort 4).
+
+use super::context::ContextId;
+use super::task::{Task, TaskId};
+
+/// Splits an inference workload into equally sized tasks.
+#[derive(Debug, Clone, Copy)]
+pub struct Batcher {
+    pub batch_size: u64,
+}
+
+impl Batcher {
+    pub fn new(batch_size: u64) -> Self {
+        assert!(batch_size > 0, "batch size must be positive");
+        Self { batch_size }
+    }
+
+    /// Partition `[0, total)` into tasks of `batch_size` (last task takes
+    /// the remainder). Task ids are dense from `first_id`.
+    pub fn split(
+        &self,
+        total: u64,
+        context: ContextId,
+        first_id: TaskId,
+    ) -> Vec<Task> {
+        let mut tasks = Vec::with_capacity(
+            ((total + self.batch_size - 1) / self.batch_size) as usize,
+        );
+        let mut start = 0u64;
+        let mut id = first_id;
+        while start < total {
+            let count = self.batch_size.min(total - start);
+            tasks.push(Task::new(id, start, count, context));
+            start += count;
+            id += 1;
+        }
+        tasks
+    }
+}
+
+/// Trial-and-error batch-size tuner (§4, Challenge #6 mitigation).
+///
+/// Golden-section-flavored multiplicative search over a log-spaced grid:
+/// observes net throughput (inferences/s of *completed* work, evicted work
+/// counting zero) per candidate and narrows toward the best neighborhood.
+#[derive(Debug, Clone)]
+pub struct BatchTuner {
+    /// Candidate batch sizes still in play (log-spaced, sorted).
+    candidates: Vec<u64>,
+    /// Observed throughput per candidate (None = not yet tried).
+    observed: Vec<Option<f64>>,
+}
+
+impl BatchTuner {
+    /// Standard grid from the paper's sweep: 1, 10, 100, 1k, 3k, 7.5k.
+    pub fn paper_grid() -> Self {
+        Self::new(vec![1, 10, 100, 1_000, 3_000, 7_500])
+    }
+
+    pub fn new(mut candidates: Vec<u64>) -> Self {
+        assert!(!candidates.is_empty());
+        candidates.sort_unstable();
+        candidates.dedup();
+        let n = candidates.len();
+        Self { candidates, observed: vec![None; n] }
+    }
+
+    /// Next untried candidate (middle-out order: try the center of the
+    /// grid first, then expand — the center is the least-risky prior).
+    pub fn next_candidate(&self) -> Option<u64> {
+        let n = self.candidates.len();
+        let mid = n / 2;
+        // Order: mid, mid±1, mid±2, ...
+        let mut order = vec![mid];
+        for d in 1..=n {
+            if mid >= d {
+                order.push(mid - d);
+            }
+            if mid + d < n {
+                order.push(mid + d);
+            }
+        }
+        order
+            .into_iter()
+            .find(|&i| self.observed[i].is_none())
+            .map(|i| self.candidates[i])
+    }
+
+    /// Report the measured net throughput for a candidate.
+    pub fn observe(&mut self, batch: u64, throughput: f64) {
+        if let Some(i) = self.candidates.iter().position(|&b| b == batch) {
+            self.observed[i] = Some(throughput);
+        }
+    }
+
+    /// Best candidate seen so far.
+    pub fn best(&self) -> Option<(u64, f64)> {
+        self.candidates
+            .iter()
+            .zip(&self.observed)
+            .filter_map(|(&b, o)| o.map(|t| (b, t)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// All candidates measured?
+    pub fn exhausted(&self) -> bool {
+        self.observed.iter().all(|o| o.is_some())
+    }
+
+    /// Refine: keep the best candidate and its immediate neighbors, add
+    /// the geometric midpoints — one narrowing step of the paper's
+    /// "gradually narrow down the range" loop.
+    pub fn refine(&mut self) {
+        let Some((best, _)) = self.best() else { return };
+        let i = self.candidates.iter().position(|&b| b == best).unwrap();
+        let lo = if i > 0 { self.candidates[i - 1] } else { best };
+        let hi = if i + 1 < self.candidates.len() {
+            self.candidates[i + 1]
+        } else {
+            best
+        };
+        let mut next = vec![
+            lo,
+            geometric_mid(lo, best),
+            best,
+            geometric_mid(best, hi),
+            hi,
+        ];
+        next.sort_unstable();
+        next.dedup();
+        // Carry over observations we already have.
+        let mut observed = vec![None; next.len()];
+        for (j, &b) in next.iter().enumerate() {
+            if let Some(k) = self.candidates.iter().position(|&c| c == b) {
+                observed[j] = self.observed[k];
+            }
+        }
+        self.candidates = next;
+        self.observed = observed;
+    }
+
+    pub fn candidates(&self) -> &[u64] {
+        &self.candidates
+    }
+}
+
+fn geometric_mid(a: u64, b: u64) -> u64 {
+    (((a as f64) * (b as f64)).sqrt().round() as u64).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_workload_exactly() {
+        let tasks = Batcher::new(100).split(150_000, 0, 0);
+        assert_eq!(tasks.len(), 1_500);
+        let total: u64 = tasks.iter().map(|t| t.count).sum();
+        assert_eq!(total, 150_000);
+        // Contiguous, non-overlapping.
+        let mut expect = 0;
+        for t in &tasks {
+            assert_eq!(t.start, expect);
+            expect += t.count;
+        }
+    }
+
+    #[test]
+    fn split_remainder() {
+        let tasks = Batcher::new(7_500).split(150_000, 0, 0);
+        assert_eq!(tasks.len(), 20);
+        let tasks = Batcher::new(7_000).split(150_000, 0, 0);
+        assert_eq!(tasks.len(), 22);
+        assert_eq!(tasks.last().unwrap().count, 150_000 % 7_000);
+    }
+
+    #[test]
+    fn split_batch_one() {
+        let tasks = Batcher::new(1).split(5, 3, 10);
+        assert_eq!(tasks.len(), 5);
+        assert_eq!(tasks[0].id, 10);
+        assert!(tasks.iter().all(|t| t.count == 1 && t.context == 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_batch_rejected() {
+        Batcher::new(0);
+    }
+
+    #[test]
+    fn tuner_tries_center_first() {
+        let t = BatchTuner::paper_grid();
+        // Grid 1,10,100,1k,3k,7.5k → center index 3 → 1000.
+        assert_eq!(t.next_candidate(), Some(1_000));
+    }
+
+    #[test]
+    fn tuner_converges_to_best() {
+        let mut t = BatchTuner::paper_grid();
+        // Synthetic parabola peaking at 100 (the pv4 optimum).
+        let tp = |b: u64| {
+            let x = (b as f64).ln();
+            let peak = (100.0f64).ln();
+            50.0 - (x - peak) * (x - peak)
+        };
+        while let Some(b) = t.next_candidate() {
+            t.observe(b, tp(b));
+        }
+        assert!(t.exhausted());
+        assert_eq!(t.best().unwrap().0, 100);
+        t.refine();
+        // Refined grid brackets 100 with geometric midpoints.
+        assert!(t.candidates().contains(&100));
+        assert!(t.candidates().len() <= 5);
+        assert!(t.candidates().iter().all(|&b| (10..=1_000).contains(&b)));
+    }
+
+    #[test]
+    fn tuner_refine_preserves_observations() {
+        let mut t = BatchTuner::new(vec![10, 100, 1000]);
+        t.observe(10, 1.0);
+        t.observe(100, 5.0);
+        t.observe(1000, 2.0);
+        t.refine();
+        assert_eq!(t.best(), Some((100, 5.0)));
+        // Midpoints 31/32 and 316 appear and are untried.
+        assert!(!t.exhausted());
+    }
+
+    #[test]
+    fn geometric_mid_sane() {
+        assert_eq!(geometric_mid(1, 100), 10);
+        assert_eq!(geometric_mid(100, 100), 100);
+        assert!(geometric_mid(1, 1) >= 1);
+    }
+}

@@ -1,0 +1,247 @@
+//! Context recipes and management policies (paper §5.2–5.3).
+//!
+//! A *computational context* is everything an inference task needs before
+//! its first useful FLOP: the function's code, its software dependencies
+//! (a Poncho-style packed environment), the context code (e.g.
+//! `load_model`) and the context inputs (e.g. the weight files). The
+//! paper's core observation is that this context is (a) expensive to
+//! create, (b) identical across tasks of the same function, and (c)
+//! traditionally torn down after every task — so registering it with the
+//! system and *reusing* it is the whole game.
+
+use crate::util::fmt_bytes;
+
+/// Dense context identifier.
+pub type ContextId = u32;
+
+/// Where a component's bytes come from on first acquisition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataOrigin {
+    /// The cluster's shared parallel filesystem (contended, Challenge #5).
+    SharedFs,
+    /// The public internet (model hubs); slow, per-download bandwidth.
+    Internet,
+    /// The manager node itself (function code, small inputs).
+    Manager,
+}
+
+/// The four context elements of §5.3.1, plus the weights themselves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComponentKind {
+    /// Poncho-packed software environment.
+    DepsPackage,
+    /// Model parameter files.
+    ModelWeights,
+    /// Serialized (cloudpickle-style) task function.
+    FunctionCode,
+    /// The context-creating function (e.g. `load_model`).
+    ContextCode,
+    /// Arguments to the context code (paths, config).
+    ContextInputs,
+}
+
+/// One distributable piece of a context.
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub kind: ComponentKind,
+    pub name: String,
+    pub size_bytes: u64,
+    pub origin: DataOrigin,
+}
+
+/// How much of the context the system manages — the experimental axis of
+/// the whole paper (pv1 = None, pv2/pv3 = Partial, pv4+ = Pervasive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ContextPolicy {
+    /// Nothing registered: every task stages everything into a fresh
+    /// sandbox and tears it down (pv1 "naive").
+    None,
+    /// Files (deps + weights) cached on workers and peer-transferable,
+    /// but every task still materializes the model into the GPU (pv2/pv3).
+    Partial,
+    /// Full recipe registered; a library process keeps the materialized
+    /// context resident, tasks run against it (pv4+).
+    Pervasive,
+}
+
+impl ContextPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ContextPolicy::None => "none",
+            ContextPolicy::Partial => "partial",
+            ContextPolicy::Pervasive => "pervasive",
+        }
+    }
+
+    /// Are components cached on the worker across tasks?
+    pub fn caches_files(&self) -> bool {
+        !matches!(self, ContextPolicy::None)
+    }
+
+    /// Does a materialized context survive across tasks?
+    pub fn retains_materialized(&self) -> bool {
+        matches!(self, ContextPolicy::Pervasive)
+    }
+}
+
+/// A context recipe: the registered, shareable description of a
+/// function's context (§5.2 "context recipe").
+#[derive(Debug, Clone)]
+pub struct ContextRecipe {
+    pub id: ContextId,
+    pub name: String,
+    pub components: Vec<Component>,
+}
+
+impl ContextRecipe {
+    /// The paper's evaluation context: SmolLM2-1.7B as a fact verifier.
+    ///
+    /// * deps: 3.7 GB Poncho package (308-package conda env, §6.2)
+    /// * weights: 3.7 GB on disk (§6.2)
+    /// * code/context/inputs: O(KB) from the manager.
+    pub fn smollm2_pff(id: ContextId) -> Self {
+        Self {
+            id,
+            name: "smollm2-1.7b-fact-verifier".to_string(),
+            components: vec![
+                Component {
+                    kind: ComponentKind::DepsPackage,
+                    name: "poncho-env.tar.gz".to_string(),
+                    size_bytes: 3_700_000_000,
+                    origin: DataOrigin::SharedFs,
+                },
+                Component {
+                    kind: ComponentKind::ModelWeights,
+                    name: "smollm2-1.7b".to_string(),
+                    size_bytes: 3_700_000_000,
+                    origin: DataOrigin::Internet,
+                },
+                Component {
+                    kind: ComponentKind::FunctionCode,
+                    name: "infer_model.pkl".to_string(),
+                    size_bytes: 20_000,
+                    origin: DataOrigin::Manager,
+                },
+                Component {
+                    kind: ComponentKind::ContextCode,
+                    name: "load_model.pkl".to_string(),
+                    size_bytes: 10_000,
+                    origin: DataOrigin::Manager,
+                },
+                Component {
+                    kind: ComponentKind::ContextInputs,
+                    name: "model-path+config".to_string(),
+                    size_bytes: 1_000,
+                    origin: DataOrigin::Manager,
+                },
+            ],
+        }
+    }
+
+    /// A small recipe matching the live-mode SmolVerify artifacts (sizes
+    /// of the real files this repo stages in live mode).
+    pub fn smolverify(id: ContextId, weights_bytes: u64) -> Self {
+        let mut r = Self::smollm2_pff(id);
+        r.name = "smolverify".to_string();
+        for c in &mut r.components {
+            if c.kind == ComponentKind::ModelWeights {
+                c.size_bytes = weights_bytes;
+                c.origin = DataOrigin::SharedFs;
+            }
+            if c.kind == ComponentKind::DepsPackage {
+                c.size_bytes = weights_bytes / 2;
+            }
+        }
+        r
+    }
+
+    pub fn component(&self, kind: ComponentKind) -> Option<&Component> {
+        self.components.iter().find(|c| c.kind == kind)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.components.iter().map(|c| c.size_bytes).sum()
+    }
+
+    /// Components a given policy stages into the worker cache up front
+    /// (vs. per-task into a throwaway sandbox).
+    pub fn cached_components(&self, policy: ContextPolicy) -> Vec<&Component> {
+        match policy {
+            ContextPolicy::None => Vec::new(),
+            // Partial context = "software dependencies and model
+            // parameters" (§6.1).
+            ContextPolicy::Partial => self
+                .components
+                .iter()
+                .filter(|c| {
+                    matches!(
+                        c.kind,
+                        ComponentKind::DepsPackage | ComponentKind::ModelWeights
+                    )
+                })
+                .collect(),
+            ContextPolicy::Pervasive => self.components.iter().collect(),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} ({} components, {})",
+            self.name,
+            self.components.len(),
+            fmt_bytes(self.total_bytes())
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_recipe_sizes() {
+        let r = ContextRecipe::smollm2_pff(0);
+        assert_eq!(
+            r.component(ComponentKind::DepsPackage).unwrap().size_bytes,
+            3_700_000_000
+        );
+        assert_eq!(
+            r.component(ComponentKind::ModelWeights).unwrap().size_bytes,
+            3_700_000_000
+        );
+        assert!(r.total_bytes() > 7_000_000_000);
+    }
+
+    #[test]
+    fn policy_component_selection() {
+        let r = ContextRecipe::smollm2_pff(0);
+        assert!(r.cached_components(ContextPolicy::None).is_empty());
+        assert_eq!(r.cached_components(ContextPolicy::Partial).len(), 2);
+        assert_eq!(
+            r.cached_components(ContextPolicy::Pervasive).len(),
+            r.components.len()
+        );
+    }
+
+    #[test]
+    fn policy_flags() {
+        assert!(!ContextPolicy::None.caches_files());
+        assert!(ContextPolicy::Partial.caches_files());
+        assert!(!ContextPolicy::Partial.retains_materialized());
+        assert!(ContextPolicy::Pervasive.retains_materialized());
+    }
+
+    #[test]
+    fn smolverify_overrides_weights() {
+        let r = ContextRecipe::smolverify(1, 13_795_340);
+        let w = r.component(ComponentKind::ModelWeights).unwrap();
+        assert_eq!(w.size_bytes, 13_795_340);
+        assert_eq!(w.origin, DataOrigin::SharedFs);
+    }
+
+    #[test]
+    fn describe_mentions_name() {
+        let r = ContextRecipe::smollm2_pff(2);
+        assert!(r.describe().contains("smollm2"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Calibrated service-time model for the simulated driver.
+//!
+//! Every constant traces back to a number the paper itself reports:
+//!
+//! * `a10_per_inference_s = 0.2727` — pv0: 150 k inferences on one
+//!   dedicated A10 take 40.9 ks (§6.3 Baseline); Table 2 corroborates
+//!   (pv4_1 mean task time 0.32 s ≈ inference + dispatch).
+//! * materialization ≈ 4 s + 4 s / speed — Figure 5: partial-context
+//!   batch-1 tasks cluster in 6–12 s (A10 ≈ 8 s, TITAN X ≈ 12 s), and
+//!   Table 2's pv3_1 min is 5.55 s (a lucky fast A10 draw).
+//! * deps package 3.7 GB, weights 3.7 GB (§6.2); internet download
+//!   bandwidth set so pv1's per-task model pull dominates its 3.9×
+//!   "disappointing speedup".
+//! * peer links 10 Gb/s — commodity cluster Ethernet.
+//!
+//! Service times multiply a mild lognormal jitter; heavy tails appear
+//! mechanistically (FS contention bursts), not by fiat.
+
+use crate::cluster::{GpuModel, SharedFilesystem};
+use crate::util::Rng;
+
+use super::context::DataOrigin;
+
+/// Calibrated constants + stochastic draws for one simulation run.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Seconds per inference on the reference A10 (batch-linear).
+    pub a10_per_inference_s: f64,
+    /// Materialization (model → GPU + library startup): fixed part.
+    pub materialize_base_s: f64,
+    /// Materialization: GPU-speed-scaled part (PCIe/driver variance).
+    pub materialize_speed_s: f64,
+    /// Sandbox setup + teardown paid by non-pervasive tasks.
+    pub sandbox_s: f64,
+    /// Manager→worker dispatch + result round trip per task.
+    pub dispatch_s: f64,
+    /// Internet bandwidth for model-hub downloads, bytes/s (pv1 path).
+    pub internet_bps: f64,
+    /// Peer-transfer link bandwidth, bytes/s.
+    pub peer_bps: f64,
+    /// Worker startup (pilot-job launch + registration).
+    pub worker_startup_s: f64,
+    /// Lognormal sigma applied to compute/materialize times.
+    pub jitter_sigma: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            a10_per_inference_s: 0.2727,
+            materialize_base_s: 4.0,
+            materialize_speed_s: 4.0,
+            sandbox_s: 1.0,
+            dispatch_s: 0.05,
+            internet_bps: 60.0e6,
+            peer_bps: 10.0e9 / 8.0,
+            worker_startup_s: 10.0,
+            jitter_sigma: 0.18,
+        }
+    }
+}
+
+impl CostModel {
+    fn jitter(&self, rng: &mut Rng) -> f64 {
+        // Mean-1 lognormal: exp(σZ − σ²/2).
+        rng.lognormal(-self.jitter_sigma * self.jitter_sigma / 2.0, self.jitter_sigma)
+    }
+
+    /// Pure inference time for `n` inferences on `gpu`.
+    pub fn execute_s(&self, n: u64, gpu: GpuModel, rng: &mut Rng) -> f64 {
+        n as f64 * self.a10_per_inference_s / gpu.relative_speed()
+            * self.jitter(rng)
+    }
+
+    /// Context materialization (model → GPU) on `gpu`.
+    pub fn materialize_s(&self, gpu: GpuModel, rng: &mut Rng) -> f64 {
+        (self.materialize_base_s
+            + self.materialize_speed_s / gpu.relative_speed())
+            * self.jitter(rng)
+    }
+
+    /// Stage `bytes` from `origin` (shared FS contention applies there;
+    /// internet/manager are flat-rate links with jitter).
+    pub fn stage_from_origin_s(
+        &self,
+        bytes: u64,
+        origin: DataOrigin,
+        fs: &SharedFilesystem,
+        rng: &mut Rng,
+    ) -> f64 {
+        match origin {
+            DataOrigin::SharedFs => fs.read_time(bytes, rng),
+            DataOrigin::Internet => {
+                bytes as f64 / self.internet_bps * rng.uniform(0.85, 1.3)
+            }
+            DataOrigin::Manager => {
+                // Small control-plane payloads over the manager link.
+                0.01 + bytes as f64 / self.peer_bps
+            }
+        }
+    }
+
+    /// Stage `bytes` from a peer worker over the cluster network.
+    pub fn stage_from_peer_s(&self, bytes: u64, rng: &mut Rng) -> f64 {
+        0.005 + bytes as f64 / self.peer_bps * rng.uniform(0.95, 1.15)
+    }
+
+    /// Per-task dispatch + result latency.
+    pub fn dispatch_s(&self, rng: &mut Rng) -> f64 {
+        self.dispatch_s * rng.uniform(0.8, 1.6)
+    }
+
+    /// Sandbox create/teardown for non-pervasive tasks.
+    pub fn sandbox_s(&self, rng: &mut Rng) -> f64 {
+        self.sandbox_s * self.jitter(rng)
+    }
+
+    /// Worker pilot-job startup delay.
+    pub fn worker_startup_s(&self, rng: &mut Rng) -> f64 {
+        self.worker_startup_s * rng.uniform(0.5, 1.8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean<F: FnMut(&mut Rng) -> f64>(mut f: F) -> f64 {
+        let mut rng = Rng::new(123);
+        let n = 5000;
+        (0..n).map(|_| f(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn pv0_baseline_calibration() {
+        // 150k inferences on a dedicated A10 ≈ 40.9 ks (paper baseline).
+        let cm = CostModel::default();
+        let total = mean(|r| cm.execute_s(150_000, GpuModel::A10, r));
+        assert!(
+            (39_000.0..43_000.0).contains(&total),
+            "150k A10 inferences = {total}, want ≈40.9k"
+        );
+    }
+
+    #[test]
+    fn materialize_matches_figure5_band() {
+        // Figure 5: partial-context 1-inference tasks mostly 6–12 s.
+        let cm = CostModel::default();
+        let a10 = mean(|r| cm.materialize_s(GpuModel::A10, r));
+        let titan = mean(|r| cm.materialize_s(GpuModel::TitanXPascal, r));
+        assert!((6.0..10.0).contains(&a10), "a10={a10}");
+        assert!((10.0..14.0).contains(&titan), "titan={titan}");
+    }
+
+    #[test]
+    fn slower_gpu_executes_slower() {
+        let cm = CostModel::default();
+        let fast = mean(|r| cm.execute_s(100, GpuModel::H100, r));
+        let slow = mean(|r| cm.execute_s(100, GpuModel::GtxTitanX, r));
+        assert!(slow > 5.0 * fast);
+    }
+
+    #[test]
+    fn internet_download_dominates_pv1_overhead() {
+        // 3.7 GB from the model hub ≈ a minute — the pv1 per-task tax.
+        let cm = CostModel::default();
+        let fs = SharedFilesystem::panasas_as16();
+        let t = mean(|r| {
+            cm.stage_from_origin_s(
+                3_700_000_000,
+                DataOrigin::Internet,
+                &fs,
+                r,
+            )
+        });
+        assert!((50.0..90.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn peer_transfer_beats_internet() {
+        let cm = CostModel::default();
+        let fs = SharedFilesystem::panasas_as16();
+        let mut rng = Rng::new(5);
+        let peer = cm.stage_from_peer_s(3_700_000_000, &mut rng);
+        let net = cm.stage_from_origin_s(
+            3_700_000_000,
+            DataOrigin::Internet,
+            &fs,
+            &mut rng,
+        );
+        assert!(peer < net / 10.0, "peer={peer} net={net}");
+    }
+
+    #[test]
+    fn jitter_is_mean_preserving() {
+        let cm = CostModel::default();
+        let m = mean(|r| cm.jitter(r));
+        assert!((0.97..1.03).contains(&m), "jitter mean={m}");
+    }
+}

@@ -1,0 +1,134 @@
+//! The factory: the daemon that maintains the worker pool (§5.1).
+//!
+//! "The pool of resources is maintained by the TaskVine factory, a
+//! daemon-like process that monitors the current resource pool and
+//! adjusts it based on a given resource policy and the current load of
+//! the cluster."
+//!
+//! Policy per §5.3.2: many *small* workers (1 GPU, 1 task) submitted as
+//! independent batch jobs — fine-grained eviction losses beat fast bulk
+//! acquisition (the straggling-risk argument).
+
+use crate::cluster::NodeId;
+
+/// Worker-pool policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FactoryPolicy {
+    /// Hard cap on simultaneously connected workers (None = take all
+    /// offered resources — the pv6 "unrestricted" mode).
+    pub max_workers: Option<u32>,
+    /// Do not bother keeping more workers than outstanding tasks.
+    pub cap_to_ready_tasks: bool,
+}
+
+impl Default for FactoryPolicy {
+    fn default() -> Self {
+        Self { max_workers: None, cap_to_ready_tasks: true }
+    }
+}
+
+/// The factory daemon (pure decision logic; drivers apply the decisions).
+#[derive(Debug, Clone)]
+pub struct Factory {
+    pub policy: FactoryPolicy,
+    /// Nodes with a submitted-but-not-yet-registered pilot job.
+    pending: Vec<NodeId>,
+}
+
+impl Factory {
+    pub fn new(policy: FactoryPolicy) -> Self {
+        Self { policy, pending: Vec::new() }
+    }
+
+    /// Given freshly offered nodes and the current pool state, decide
+    /// which nodes to submit pilot jobs to (in offer order).
+    pub fn decide_submissions(
+        &mut self,
+        offered: &[NodeId],
+        connected_workers: u32,
+        outstanding_tasks: usize,
+    ) -> Vec<NodeId> {
+        let mut budget = match self.policy.max_workers {
+            Some(cap) => {
+                cap.saturating_sub(connected_workers + self.pending.len() as u32)
+                    as usize
+            }
+            None => offered.len(),
+        };
+        if self.policy.cap_to_ready_tasks {
+            let useful = outstanding_tasks
+                .saturating_sub(connected_workers as usize + self.pending.len());
+            budget = budget.min(useful);
+        }
+        let take: Vec<NodeId> = offered
+            .iter()
+            .copied()
+            .filter(|n| !self.pending.contains(n))
+            .take(budget)
+            .collect();
+        self.pending.extend(&take);
+        take
+    }
+
+    /// A pilot job registered (or died before registering): clear pending.
+    pub fn submission_resolved(&mut self, node: NodeId) {
+        self.pending.retain(|&n| n != node);
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unrestricted_takes_everything() {
+        let mut f = Factory::new(FactoryPolicy {
+            max_workers: None,
+            cap_to_ready_tasks: false,
+        });
+        let offered: Vec<NodeId> = (0..50).collect();
+        let take = f.decide_submissions(&offered, 10, 5);
+        assert_eq!(take.len(), 50);
+    }
+
+    #[test]
+    fn max_workers_cap_respected() {
+        let mut f = Factory::new(FactoryPolicy {
+            max_workers: Some(20),
+            cap_to_ready_tasks: false,
+        });
+        let offered: Vec<NodeId> = (0..50).collect();
+        let take = f.decide_submissions(&offered, 15, 1000);
+        assert_eq!(take.len(), 5);
+        // Pending submissions count against the cap.
+        let take2 = f.decide_submissions(&offered[10..], 15, 1000);
+        assert!(take2.is_empty());
+        f.submission_resolved(offered[0]);
+        assert_eq!(f.pending_count(), 4);
+    }
+
+    #[test]
+    fn no_more_workers_than_tasks() {
+        let mut f = Factory::new(FactoryPolicy::default());
+        let offered: Vec<NodeId> = (0..50).collect();
+        let take = f.decide_submissions(&offered, 2, 10);
+        assert_eq!(take.len(), 8, "2 connected + 8 new = 10 tasks");
+    }
+
+    #[test]
+    fn already_pending_nodes_not_resubmitted() {
+        let mut f = Factory::new(FactoryPolicy {
+            max_workers: None,
+            cap_to_ready_tasks: false,
+        });
+        let offered: Vec<NodeId> = vec![1, 2, 3];
+        let t1 = f.decide_submissions(&offered, 0, 100);
+        assert_eq!(t1.len(), 3);
+        let t2 = f.decide_submissions(&offered, 0, 100);
+        assert!(t2.is_empty());
+    }
+}

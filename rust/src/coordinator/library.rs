@@ -1,0 +1,76 @@
+//! Library-process lifecycle on a worker (paper §5.2, Figure 2).
+//!
+//! The *library* is the fork-exec'd helper a worker runs to host a
+//! materialized context: it deserializes the function, executes the
+//! context code once, keeps the resulting state in its address space, and
+//! then serves invocations in-process. Here the lifecycle is modeled as a
+//! state machine; in live mode the "address space" is a
+//! [`crate::runtime::ModelContext`] (compiled executables + device-resident
+//! weights) owned by the worker thread.
+
+use super::context::ContextId;
+
+/// State of the (at most one) library on a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LibraryState {
+    /// No library process.
+    #[default]
+    Absent,
+    /// Components staged; context code executing (model → GPU).
+    Materializing { context: ContextId },
+    /// Context resident; invocations run directly against it.
+    Ready { context: ContextId },
+}
+
+impl LibraryState {
+    /// Is a ready context for `ctx` available?
+    pub fn is_ready_for(&self, ctx: ContextId) -> bool {
+        matches!(self, LibraryState::Ready { context } if *context == ctx)
+    }
+
+    /// Begin materialization (fork-exec + context code).
+    pub fn begin_materialize(&mut self, ctx: ContextId) {
+        debug_assert!(
+            !self.is_ready_for(ctx),
+            "re-materializing an already-ready context"
+        );
+        *self = LibraryState::Materializing { context: ctx };
+    }
+
+    /// Materialization finished; the library acks readiness to the worker.
+    pub fn finish_materialize(&mut self) {
+        if let LibraryState::Materializing { context } = *self {
+            *self = LibraryState::Ready { context };
+        } else {
+            debug_assert!(false, "finish_materialize without begin");
+        }
+    }
+
+    /// Tear down (task cleanup under non-pervasive policies, or eviction).
+    pub fn teardown(&mut self) {
+        *self = LibraryState::Absent;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut lib = LibraryState::default();
+        assert_eq!(lib, LibraryState::Absent);
+        assert!(!lib.is_ready_for(0));
+
+        lib.begin_materialize(7);
+        assert_eq!(lib, LibraryState::Materializing { context: 7 });
+        assert!(!lib.is_ready_for(7));
+
+        lib.finish_materialize();
+        assert!(lib.is_ready_for(7));
+        assert!(!lib.is_ready_for(8));
+
+        lib.teardown();
+        assert_eq!(lib, LibraryState::Absent);
+    }
+}

@@ -1,0 +1,221 @@
+//! Observability: time series + run summaries (Challenge #2).
+//!
+//! "This can only be alleviated by observability tools that transparently
+//! inform users of the current rate of throughput and the overall
+//! progress of the application." These are the data behind Figures 4, 6
+//! and 7 and Table 2.
+
+use crate::util::{fmt_duration, Summary};
+
+use super::task::TaskRecord;
+
+/// One sample of the run's externally visible state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricPoint {
+    pub t: f64,
+    pub connected_workers: u32,
+    pub completed_inferences: u64,
+}
+
+/// Time-series collector.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    points: Vec<MetricPoint>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn sample(&mut self, t: f64, workers: u32, inferences: u64) {
+        self.points.push(MetricPoint {
+            t,
+            connected_workers: workers,
+            completed_inferences: inferences,
+        });
+    }
+
+    pub fn points(&self) -> &[MetricPoint] {
+        &self.points
+    }
+
+    /// Time-weighted average of connected workers over `[t0, t1]`
+    /// (the "Average Number of Connected Workers" axis of Figure 4).
+    pub fn avg_workers(&self, t0: f64, t1: f64) -> f64 {
+        if self.points.is_empty() || t1 <= t0 {
+            return 0.0;
+        }
+        let mut area = 0.0;
+        let mut prev_t = t0;
+        let mut prev_w: Option<f64> = None;
+        for p in &self.points {
+            if p.t < t0 {
+                prev_w = Some(p.connected_workers as f64);
+                continue;
+            }
+            if p.t > t1 {
+                break;
+            }
+            if let Some(w) = prev_w {
+                area += w * (p.t - prev_t);
+            }
+            prev_t = p.t;
+            prev_w = Some(p.connected_workers as f64);
+        }
+        if let Some(w) = prev_w {
+            area += w * (t1 - prev_t);
+        }
+        area / (t1 - t0)
+    }
+
+    /// Instantaneous throughput (inferences/s) between consecutive samples.
+    pub fn throughput_series(&self) -> Vec<(f64, f64)> {
+        self.points
+            .windows(2)
+            .map(|w| {
+                let dt = (w[1].t - w[0].t).max(1e-9);
+                let di = w[1]
+                    .completed_inferences
+                    .saturating_sub(w[0].completed_inferences);
+                (w[1].t, di as f64 / dt)
+            })
+            .collect()
+    }
+}
+
+/// Figure-4-style per-experiment result row.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub id: String,
+    pub policy: &'static str,
+    pub batch_size: u64,
+    pub exec_time_s: f64,
+    pub avg_workers: f64,
+    pub completed_inferences: u64,
+    pub evicted_inferences: u64,
+    pub evictions: u32,
+    /// Task execution-time statistics (Table 2 columns).
+    pub task_mean_s: f64,
+    pub task_std_s: f64,
+    pub task_min_s: f64,
+    pub task_max_s: f64,
+}
+
+impl RunSummary {
+    pub fn from_records(
+        id: impl Into<String>,
+        policy: &'static str,
+        batch_size: u64,
+        exec_time_s: f64,
+        avg_workers: f64,
+        completed_inferences: u64,
+        evicted_inferences: u64,
+        evictions: u32,
+        records: &[TaskRecord],
+    ) -> Self {
+        let mut s = Summary::new();
+        for r in records {
+            s.add(r.exec_time_s());
+        }
+        Self {
+            id: id.into(),
+            policy,
+            batch_size,
+            exec_time_s,
+            avg_workers,
+            completed_inferences,
+            evicted_inferences,
+            evictions,
+            task_mean_s: s.mean(),
+            task_std_s: s.std_dev(),
+            task_min_s: if s.count() == 0 { 0.0 } else { s.min() },
+            task_max_s: if s.count() == 0 { 0.0 } else { s.max() },
+        }
+    }
+
+    /// One row of the Figure 4 table dump.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<10} {:>9} {:>6} {:>10.1} {:>9} {:>8.1} {:>8} {:>6}",
+            self.id,
+            self.policy,
+            self.batch_size,
+            self.exec_time_s,
+            fmt_duration(self.exec_time_s),
+            self.avg_workers,
+            self.completed_inferences,
+            self.evictions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_workers_time_weighted() {
+        let mut m = Metrics::new();
+        m.sample(0.0, 10, 0);
+        m.sample(10.0, 20, 0); // 10 workers for t∈[0,10)
+        m.sample(30.0, 0, 0); // 20 workers for t∈[10,30)
+        // avg over [0,30] with final 0 extending to 30 (zero width).
+        let avg = m.avg_workers(0.0, 30.0);
+        assert!(((10.0 * 10.0 + 20.0 * 20.0) / 30.0 - avg).abs() < 1e-9);
+    }
+
+    #[test]
+    fn avg_workers_window_subset() {
+        let mut m = Metrics::new();
+        m.sample(0.0, 10, 0);
+        m.sample(100.0, 10, 0);
+        let avg = m.avg_workers(50.0, 100.0);
+        assert!((avg - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn avg_workers_empty_or_degenerate() {
+        let m = Metrics::new();
+        assert_eq!(m.avg_workers(0.0, 10.0), 0.0);
+        let mut m2 = Metrics::new();
+        m2.sample(0.0, 5, 0);
+        assert_eq!(m2.avg_workers(10.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn throughput_series_diffs() {
+        let mut m = Metrics::new();
+        m.sample(0.0, 1, 0);
+        m.sample(10.0, 1, 50);
+        m.sample(20.0, 1, 150);
+        let tp = m.throughput_series();
+        assert_eq!(tp.len(), 2);
+        assert!((tp[0].1 - 5.0).abs() < 1e-9);
+        assert!((tp[1].1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_summary_stats() {
+        use crate::cluster::GpuModel;
+        let rec = |d: f64| TaskRecord {
+            task: 0,
+            worker: 0,
+            gpu: GpuModel::A10,
+            attempts: 1,
+            inferences: 1,
+            dispatched_at: 0.0,
+            completed_at: d,
+            context_s: 0.0,
+            execute_s: d,
+        };
+        let records = vec![rec(1.0), rec(2.0), rec(3.0)];
+        let s = RunSummary::from_records(
+            "x", "pervasive", 1, 100.0, 5.0, 3, 0, 0, &records,
+        );
+        assert!((s.task_mean_s - 2.0).abs() < 1e-9);
+        assert_eq!(s.task_min_s, 1.0);
+        assert_eq!(s.task_max_s, 3.0);
+        assert!(s.row().contains("pervasive"));
+    }
+}

@@ -1,0 +1,46 @@
+//! The paper's system contribution: a TaskVine-style throughput-oriented
+//! coordinator with **pervasive context management**.
+//!
+//! Module map (≈ paper §5):
+//!
+//! * [`task`] / [`batcher`] — the workload: inference ranges batched into
+//!   independent, eviction-tolerant tasks (§2.1, Challenge #6).
+//! * [`context`] — context recipes (function code, software deps, context
+//!   code, context inputs) and the None / Partial / Pervasive policies
+//!   (§5.2, the core idea).
+//! * [`library`] — the library-process lifecycle on a worker: staged →
+//!   materializing → ready, hosting the reusable context (§5.2, Fig. 2).
+//! * [`worker`] — workers: 1 GPU, 1 task at a time, local cache (§5.3.2).
+//! * [`transfer`] — peer-transfer planner: spanning-tree context
+//!   distribution with per-source fan-out cap N (§5.3.1).
+//! * [`scheduler`] — the manager: ready queue, context-aware dispatch,
+//!   eviction detection + requeue, completion bookkeeping (§5.1).
+//! * [`factory`] — the daemon reconciling the worker pool against cluster
+//!   availability (§5.1, "TaskVine factory").
+//! * [`costmodel`] — calibrated service-time model used by the simulated
+//!   driver (constants derived from the paper's own measurements).
+//! * [`sim_driver`] — glues scheduler + cluster + filesystem + cost model
+//!   under the discrete-event engine; produces the per-experiment metrics.
+//! * [`metrics`] — time series + task statistics (Figures 4–7, Table 2).
+
+pub mod batcher;
+pub mod context;
+pub mod costmodel;
+pub mod factory;
+pub mod library;
+pub mod metrics;
+pub mod scheduler;
+pub mod sim_driver;
+pub mod task;
+pub mod transfer;
+pub mod worker;
+
+pub use batcher::Batcher;
+pub use context::{Component, ComponentKind, ContextId, ContextPolicy, ContextRecipe, DataOrigin};
+pub use library::LibraryState;
+pub use metrics::{Metrics, RunSummary};
+pub use scheduler::{Dispatch, Scheduler};
+pub use sim_driver::{SimConfig, SimDriver, SimOutcome};
+pub use task::{Task, TaskId, TaskRecord, TaskState};
+pub use transfer::TransferPlanner;
+pub use worker::{Worker, WorkerId};

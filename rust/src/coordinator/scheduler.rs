@@ -1,0 +1,670 @@
+//! The manager: ready queue, context-aware dispatch, eviction recovery.
+//!
+//! The scheduler is a *pure state machine* — it owns no clock and spawns
+//! no threads. Drivers (the discrete-event [`super::sim_driver`] or the
+//! live PJRT driver in [`crate::live`]) feed it worker joins/evictions and
+//! phase/task completions, and it answers with dispatch plans. This is
+//! what lets the full-scale simulated experiments and the real-inference
+//! live mode exercise the *same* coordination code.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use super::context::{ComponentKind, ContextId, ContextPolicy, ContextRecipe};
+use super::task::{Task, TaskId, TaskRecord, TaskState};
+use super::transfer::{StageSource, TransferPlanner};
+use super::worker::{Worker, WorkerId};
+use crate::cluster::Node;
+
+/// One phase of a task's execution plan on a specific worker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PhaseKind {
+    /// Move a context component into the worker's sandbox/cache.
+    Stage {
+        component: ComponentKind,
+        bytes: u64,
+        source: StageSource,
+        /// Cache it (Partial/Pervasive) or sandbox-only (None policy).
+        cache: bool,
+    },
+    /// Create the sandbox (None/Partial pay this per task).
+    Sandbox,
+    /// Run the context code: model → GPU, library startup.
+    Materialize { context: ContextId },
+    /// The actual inferences.
+    Execute { inferences: u64 },
+    /// Sandbox/library teardown (non-pervasive cleanup).
+    Teardown,
+}
+
+impl PhaseKind {
+    /// Is this phase part of context acquisition (vs. useful work)?
+    pub fn is_context_overhead(&self) -> bool {
+        !matches!(self, PhaseKind::Execute { .. })
+    }
+}
+
+/// A dispatch decision: run `task` on `worker` through `phases`.
+#[derive(Debug, Clone)]
+pub struct Dispatch {
+    pub task: TaskId,
+    pub worker: WorkerId,
+    pub phases: Vec<PhaseKind>,
+}
+
+/// Progress counters (monotonic within a run).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Progress {
+    pub completed_tasks: u64,
+    pub completed_inferences: u64,
+    /// Inferences that were in flight when their worker was evicted
+    /// (work discarded and requeued — the pv5 waste metric).
+    pub evicted_inferences: u64,
+    pub evictions: u32,
+}
+
+/// The TaskVine-style manager.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: ContextPolicy,
+    recipe: ContextRecipe,
+    planner: TransferPlanner,
+    tasks: BTreeMap<TaskId, Task>,
+    ready: VecDeque<TaskId>,
+    workers: BTreeMap<WorkerId, Worker>,
+    /// Remaining (not-yet-completed) phases per running task.
+    in_flight: HashMap<TaskId, (WorkerId, Vec<PhaseKind>, usize)>,
+    next_worker_id: WorkerId,
+    progress: Progress,
+    records: Vec<TaskRecord>,
+}
+
+impl Scheduler {
+    pub fn new(
+        policy: ContextPolicy,
+        recipe: ContextRecipe,
+        planner: TransferPlanner,
+    ) -> Self {
+        Self {
+            policy,
+            recipe,
+            planner,
+            tasks: BTreeMap::new(),
+            ready: VecDeque::new(),
+            workers: BTreeMap::new(),
+            in_flight: HashMap::new(),
+            next_worker_id: 0,
+            progress: Progress::default(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> ContextPolicy {
+        self.policy
+    }
+
+    pub fn recipe(&self) -> &ContextRecipe {
+        &self.recipe
+    }
+
+    /// Submit the workload (tasks enter the ready queue in id order).
+    pub fn submit_tasks(&mut self, tasks: Vec<Task>) {
+        for t in tasks {
+            assert!(t.is_ready());
+            self.ready.push_back(t.id);
+            self.tasks.insert(t.id, t);
+        }
+    }
+
+    // ------------------------------------------------------------ workers
+
+    /// A pilot job registered; returns the new worker's id.
+    pub fn worker_join(&mut self, node: Node, now: f64) -> WorkerId {
+        let id = self.next_worker_id;
+        self.next_worker_id += 1;
+        self.workers.insert(id, Worker::new(id, node, now));
+        id
+    }
+
+    /// A worker was reclaimed: kill it, requeue its task (if any).
+    /// Returns the requeued task id and its batch size.
+    pub fn worker_evict(&mut self, id: WorkerId) -> Option<(TaskId, u64)> {
+        let worker = self.workers.remove(&id)?;
+        self.progress.evictions += 1;
+        let task_id = worker.running?;
+        // Release peer-upload slots claimed for this task's unfinished
+        // stage phases (sources may themselves be gone — skip those).
+        if let Some((_, phases, next)) = self.in_flight.remove(&task_id) {
+            for ph in &phases[next.min(phases.len())..] {
+                if let PhaseKind::Stage {
+                    source: StageSource::Peer(src), ..
+                } = ph
+                {
+                    if let Some(peer) = self.workers.get_mut(src) {
+                        peer.release_upload();
+                    }
+                }
+            }
+        }
+        let task = self.tasks.get_mut(&task_id).expect("running task exists");
+        debug_assert_eq!(task.state, TaskState::Running { worker: id });
+        task.state = TaskState::Ready;
+        self.progress.evicted_inferences += task.count;
+        // Requeue at the FRONT: evicted work is oldest and re-runs first.
+        self.ready.push_front(task_id);
+        Some((task_id, task.count))
+    }
+
+    /// A worker finished its workload and left voluntarily (end of run).
+    pub fn worker_release(&mut self, id: WorkerId) -> Option<Worker> {
+        self.workers.remove(&id)
+    }
+
+    pub fn worker(&self, id: WorkerId) -> Option<&Worker> {
+        self.workers.get(&id)
+    }
+
+    pub fn workers(&self) -> impl Iterator<Item = &Worker> {
+        self.workers.values()
+    }
+
+    pub fn connected_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn worker_on_node(&self, node: crate::cluster::NodeId) -> Option<WorkerId> {
+        self.workers
+            .values()
+            .find(|w| w.node_id() == node)
+            .map(|w| w.id)
+    }
+
+    // ----------------------------------------------------------- dispatch
+
+    /// Assign ready tasks to idle workers. Context-aware placement: among
+    /// idle workers, those with a ready library for the task's context go
+    /// first (zero-overhead execution), then faster GPUs.
+    pub fn try_dispatch(&mut self) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        if self.ready.is_empty() {
+            return out;
+        }
+        let mut idle: Vec<WorkerId> = self
+            .workers
+            .values()
+            .filter(|w| w.is_idle())
+            .map(|w| w.id)
+            .collect();
+        if idle.is_empty() {
+            return out;
+        }
+        // Ready-context workers first, then by GPU speed (desc), id
+        // tiebreak. The single-idle-worker case (every task completion in
+        // steady state) skips the sort entirely (§Perf L3 iteration 3).
+        if idle.len() > 1 {
+            idle.sort_by(|a, b| {
+                let (wa, wb) = (&self.workers[a], &self.workers[b]);
+                let next_ctx = self.recipe.id;
+                let ra = wa.library.is_ready_for(next_ctx);
+                let rb = wb.library.is_ready_for(next_ctx);
+                rb.cmp(&ra)
+                    .then(
+                        wb.relative_speed()
+                            .partial_cmp(&wa.relative_speed())
+                            .unwrap(),
+                    )
+                    .then(wa.id.cmp(&wb.id))
+            });
+        }
+
+        out.reserve(idle.len().min(self.ready.len()));
+        for wid in idle {
+            let Some(task_id) = self.ready.pop_front() else { break };
+            let phases = self.build_plan(task_id, wid);
+            let task = self.tasks.get_mut(&task_id).unwrap();
+            task.state = TaskState::Running { worker: wid };
+            task.attempts += 1;
+            self.workers.get_mut(&wid).unwrap().running = Some(task_id);
+            self.in_flight
+                .insert(task_id, (wid, phases.clone(), 0));
+            out.push(Dispatch { task: task_id, worker: wid, phases });
+        }
+        out
+    }
+
+    /// Build the phase plan for `task` on `worker` under the current
+    /// policy and cache state. Claims peer upload slots immediately.
+    fn build_plan(&mut self, task_id: TaskId, wid: WorkerId) -> Vec<PhaseKind> {
+        let task = &self.tasks[&task_id];
+        let ctx = task.context;
+        let inferences = task.count;
+        let mut phases = Vec::new();
+
+        let lib_ready =
+            self.workers[&wid].library.is_ready_for(ctx);
+
+        if self.policy.retains_materialized() && lib_ready {
+            // Pervasive fast path: context resident, just run.
+            phases.push(PhaseKind::Execute { inferences });
+            return phases;
+        }
+
+        if !self.policy.retains_materialized() {
+            phases.push(PhaseKind::Sandbox);
+        }
+
+        // Stage whatever this worker is missing. Registering a component
+        // as managed context (Partial/Pervasive) re-homes internet-origin
+        // data onto the cluster's shared storage: the manager fetches it
+        // once at registration and the workers stage from inside the
+        // cluster — pv1's per-task "download its own copy of the model
+        // from the Internet" (§6.3 Effort 1) is exactly the unregistered
+        // path.
+        let cache = self.policy.caches_files();
+        let components: Vec<(ComponentKind, u64, super::context::DataOrigin)> =
+            self.recipe
+                .components
+                .iter()
+                .map(|c| {
+                    let origin = if cache
+                        && c.origin == super::context::DataOrigin::Internet
+                    {
+                        super::context::DataOrigin::SharedFs
+                    } else {
+                        c.origin
+                    };
+                    (c.kind, c.size_bytes, origin)
+                })
+                .collect();
+        for (kind, bytes, origin) in components {
+            let have = cache && self.workers[&wid].has_cached(ctx, kind);
+            if have {
+                continue;
+            }
+            // Pick a source: peer with the component cached + free slot,
+            // else origin. (Peers only useful when caching is on.)
+            let source = if cache {
+                let dest = wid;
+                let planner = self.planner;
+                let mut peers: Vec<&mut Worker> =
+                    self.workers.values_mut().collect();
+                planner.pick_source(
+                    ctx,
+                    kind,
+                    origin,
+                    dest,
+                    peers.iter_mut().map(|w| &mut **w),
+                )
+            } else {
+                StageSource::Origin(origin)
+            };
+            phases.push(PhaseKind::Stage { component: kind, bytes, source, cache });
+        }
+
+        phases.push(PhaseKind::Materialize { context: ctx });
+        phases.push(PhaseKind::Execute { inferences });
+        if !self.policy.retains_materialized() {
+            phases.push(PhaseKind::Teardown);
+        }
+        phases
+    }
+
+    // -------------------------------------------------------- completions
+
+    /// A phase finished on a worker: update cache/library/transfer state.
+    /// Returns the next phase to run, if any.
+    pub fn phase_done(
+        &mut self,
+        task_id: TaskId,
+        phase_idx: usize,
+    ) -> Option<PhaseKind> {
+        let (wid, phases, next) = self.in_flight.get_mut(&task_id)?;
+        debug_assert_eq!(*next, phase_idx, "phases complete in order");
+        let done = phases[phase_idx];
+        let wid = *wid;
+        *next += 1;
+        let next_phase = phases.get(*next).copied();
+
+        match done {
+            PhaseKind::Stage { component, source, cache, .. } => {
+                if let StageSource::Peer(src) = source {
+                    if let Some(peer) = self.workers.get_mut(&src) {
+                        peer.release_upload();
+                    }
+                }
+                if cache {
+                    if let Some(w) = self.workers.get_mut(&wid) {
+                        let ctx = self.tasks[&task_id].context;
+                        w.insert_cached(ctx, component);
+                    }
+                }
+            }
+            PhaseKind::Materialize { context } => {
+                if let Some(w) = self.workers.get_mut(&wid) {
+                    w.library.begin_materialize(context);
+                    w.library.finish_materialize();
+                }
+            }
+            PhaseKind::Teardown => {
+                if let Some(w) = self.workers.get_mut(&wid) {
+                    w.library.teardown();
+                    if !self.policy.caches_files() {
+                        w.clear_cache();
+                    }
+                }
+            }
+            PhaseKind::Sandbox | PhaseKind::Execute { .. } => {}
+        }
+        next_phase
+    }
+
+    /// All phases of `task` finished; the result reached the manager.
+    pub fn task_done(&mut self, task_id: TaskId, record: TaskRecord) {
+        let (wid, _, _) = self
+            .in_flight
+            .remove(&task_id)
+            .expect("completing an unknown task");
+        let task = self.tasks.get_mut(&task_id).unwrap();
+        task.state = TaskState::Done;
+        self.progress.completed_tasks += 1;
+        self.progress.completed_inferences += task.count;
+        if let Some(w) = self.workers.get_mut(&wid) {
+            w.running = None;
+            w.tasks_completed += 1;
+            w.inferences_completed += task.count;
+        }
+        self.records.push(record);
+    }
+
+    // ------------------------------------------------------------- status
+
+    pub fn all_done(&self) -> bool {
+        // O(1): completed_tasks only ever counts first-time completions.
+        self.progress.completed_tasks == self.tasks.len() as u64
+    }
+
+    pub fn ready_count(&self) -> usize {
+        self.ready.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn progress(&self) -> Progress {
+        self.progress
+    }
+
+    pub fn records(&self) -> &[TaskRecord] {
+        &self.records
+    }
+
+    pub fn into_records(self) -> Vec<TaskRecord> {
+        self.records
+    }
+
+    /// Attempts + batch size of a task (for completion records).
+    pub fn task_meta(&self, id: TaskId) -> Option<(u32, u64)> {
+        self.tasks.get(&id).map(|t| (t.attempts, t.count))
+    }
+
+    /// Task-conservation invariant: every task is exactly one of
+    /// ready / running / done. Called by tests and (per-event) debug
+    /// assertions — O(1) via the completion counter.
+    pub fn check_conservation(&self) -> bool {
+        self.ready.len() + self.in_flight.len()
+            + self.progress.completed_tasks as usize
+            == self.tasks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuModel, Node};
+    use crate::coordinator::context::DataOrigin;
+
+    fn mk(policy: ContextPolicy) -> Scheduler {
+        let recipe = ContextRecipe::smollm2_pff(0);
+        Scheduler::new(policy, recipe, TransferPlanner::new(3))
+    }
+
+    fn node(id: u32, gpu: GpuModel) -> Node {
+        Node { id, gpu }
+    }
+
+    fn tasks(n: u64, batch: u64) -> Vec<Task> {
+        (0..n).map(|i| Task::new(i, i * batch, batch, 0)).collect()
+    }
+
+    fn record(task: TaskId, worker: WorkerId, n: u64) -> TaskRecord {
+        TaskRecord {
+            task,
+            worker,
+            gpu: GpuModel::A10,
+            attempts: 1,
+            inferences: n,
+            dispatched_at: 0.0,
+            completed_at: 1.0,
+            context_s: 0.0,
+            execute_s: 1.0,
+        }
+    }
+
+    /// Drive all phases of a dispatch to completion.
+    fn complete(s: &mut Scheduler, d: &Dispatch) {
+        for i in 0..d.phases.len() {
+            s.phase_done(d.task, i);
+        }
+        let n = match d.phases.last().unwrap() {
+            PhaseKind::Execute { inferences } => *inferences,
+            PhaseKind::Teardown => match d.phases[d.phases.len() - 2] {
+                PhaseKind::Execute { inferences } => inferences,
+                _ => 0,
+            },
+            _ => 0,
+        };
+        s.task_done(d.task, record(d.task, d.worker, n));
+    }
+
+    #[test]
+    fn pervasive_first_task_full_plan_second_task_execute_only() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 100));
+        s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        assert_eq!(d1.len(), 1);
+        // First task: stages (5 components) + materialize + execute.
+        let kinds: Vec<_> = d1[0].phases.iter().collect();
+        assert_eq!(kinds.len(), 7);
+        assert!(matches!(kinds[0], PhaseKind::Stage { .. }));
+        assert!(matches!(
+            kinds[5],
+            PhaseKind::Materialize { .. }
+        ));
+        assert!(matches!(kinds[6], PhaseKind::Execute { inferences: 100 }));
+        complete(&mut s, &d1[0]);
+
+        // Second task on the same worker: context resident → execute only.
+        let d2 = s.try_dispatch();
+        assert_eq!(d2.len(), 1);
+        assert_eq!(
+            d2[0].phases,
+            vec![PhaseKind::Execute { inferences: 100 }]
+        );
+    }
+
+    #[test]
+    fn partial_still_materializes_every_task() {
+        let mut s = mk(ContextPolicy::Partial);
+        s.submit_tasks(tasks(2, 50));
+        s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        let d2 = s.try_dispatch();
+        // Deps+weights cached → no Stage for them, but sandbox +
+        // materialize + stage of non-cached (code) components + teardown.
+        let has_materialize = d2[0]
+            .phases
+            .iter()
+            .any(|p| matches!(p, PhaseKind::Materialize { .. }));
+        assert!(has_materialize, "partial re-materializes: {:?}", d2[0].phases);
+        let stages_weights = d2[0].phases.iter().any(|p| {
+            matches!(
+                p,
+                PhaseKind::Stage { component: ComponentKind::ModelWeights, .. }
+            )
+        });
+        assert!(!stages_weights, "weights cached under partial");
+    }
+
+    #[test]
+    fn none_policy_restages_everything() {
+        let mut s = mk(ContextPolicy::None);
+        s.submit_tasks(tasks(2, 10));
+        s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        let d2 = s.try_dispatch();
+        let stage_count = |d: &Dispatch| {
+            d.phases
+                .iter()
+                .filter(|p| matches!(p, PhaseKind::Stage { .. }))
+                .count()
+        };
+        assert_eq!(stage_count(&d1[0]), stage_count(&d2[0]));
+        // And weights come from the internet every time (no peer cache).
+        let from_internet = d2[0].phases.iter().any(|p| {
+            matches!(
+                p,
+                PhaseKind::Stage {
+                    source: StageSource::Origin(DataOrigin::Internet),
+                    ..
+                }
+            )
+        });
+        assert!(from_internet);
+    }
+
+    #[test]
+    fn second_worker_stages_from_peer() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(3, 10));
+        let w0 = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        // w0 now caches everything. New worker joins:
+        let w1 = s.worker_join(node(1, GpuModel::TitanXPascal), 1.0);
+        let d2 = s.try_dispatch();
+        // Both idle workers get a task; the cold one stages from the warm.
+        assert_eq!(d2.len(), 2);
+        let cold = d2.iter().find(|d| d.worker == w1).unwrap();
+        let peer_stages = cold
+            .phases
+            .iter()
+            .filter(|p| {
+                matches!(
+                    p,
+                    PhaseKind::Stage { source: StageSource::Peer(src), .. }
+                    if *src == w0
+                )
+            })
+            .count();
+        assert!(peer_stages >= 2, "deps+weights come from the peer");
+    }
+
+    #[test]
+    fn eviction_requeues_task_at_front() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(3, 100));
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d = s.try_dispatch();
+        assert_eq!(d[0].task, 0);
+        let (requeued, lost) = s.worker_evict(w).unwrap();
+        assert_eq!(requeued, 0);
+        assert_eq!(lost, 100);
+        assert_eq!(s.progress().evicted_inferences, 100);
+        assert_eq!(s.progress().evictions, 1);
+        assert!(s.check_conservation());
+        // Next dispatch re-runs task 0 first.
+        s.worker_join(node(1, GpuModel::A10), 2.0);
+        let d2 = s.try_dispatch();
+        assert_eq!(d2[0].task, 0);
+        assert_eq!(s.tasks[&0].attempts, 2);
+    }
+
+    #[test]
+    fn eviction_of_idle_worker_is_clean() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        assert!(s.worker_evict(w).is_none());
+        assert_eq!(s.connected_workers(), 0);
+        assert_eq!(s.progress().evictions, 1);
+    }
+
+    #[test]
+    fn eviction_releases_peer_upload_slots() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(3, 10));
+        let w0 = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        let w1 = s.worker_join(node(1, GpuModel::A10), 1.0);
+        let _d2 = s.try_dispatch(); // w1 staging from w0 (slots claimed)
+        let before = s.worker(w0).unwrap().active_uploads;
+        assert!(before > 0);
+        s.worker_evict(w1);
+        assert_eq!(s.worker(w0).unwrap().active_uploads, 0);
+    }
+
+    #[test]
+    fn fastest_idle_worker_dispatched_first() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(1, 10));
+        s.worker_join(node(0, GpuModel::TitanXPascal), 0.0);
+        let fast = s.worker_join(node(1, GpuModel::H100), 0.0);
+        let d = s.try_dispatch();
+        assert_eq!(d[0].worker, fast);
+    }
+
+    #[test]
+    fn ready_library_worker_preferred_over_faster_cold_worker() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(3, 10));
+        let slow = s.worker_join(node(0, GpuModel::TitanXPascal), 0.0);
+        let d1 = s.try_dispatch();
+        assert_eq!(d1[0].worker, slow);
+        complete(&mut s, &d1[0]); // slow worker now has a ready library
+        s.worker_join(node(1, GpuModel::H100), 1.0);
+        let d2 = s.try_dispatch();
+        // Two idle workers, two ready tasks: the warm (slow) one must get
+        // one of them first in plan order.
+        assert_eq!(d2[0].worker, slow);
+        assert_eq!(d2[0].phases.len(), 1, "warm worker executes directly");
+    }
+
+    #[test]
+    fn conservation_through_full_run() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(10, 10));
+        for i in 0..3 {
+            s.worker_join(node(i, GpuModel::A10), 0.0);
+        }
+        let mut guard = 0;
+        while !s.all_done() {
+            guard += 1;
+            assert!(guard < 100, "run did not converge");
+            let ds = s.try_dispatch();
+            assert!(s.check_conservation());
+            for d in &ds {
+                complete(&mut s, d);
+            }
+            assert!(s.check_conservation());
+        }
+        assert_eq!(s.progress().completed_tasks, 10);
+        assert_eq!(s.progress().completed_inferences, 100);
+    }
+}

@@ -1,0 +1,583 @@
+//! Simulated driver: scheduler + cluster + filesystem + cost model under
+//! the discrete-event engine.
+//!
+//! Runs a full experiment (e.g. 150 k inferences over an opportunistic
+//! pool) in milliseconds of wall-clock and returns the metrics each paper
+//! figure needs. The coordination logic itself lives in
+//! [`super::scheduler`] — this driver only turns phases into timed events
+//! and cluster actions into worker lifecycle calls, exactly like the live
+//! PJRT driver does with real work.
+
+use std::collections::HashMap;
+
+use super::context::{ContextPolicy, ContextRecipe, DataOrigin};
+use super::costmodel::CostModel;
+use super::factory::{Factory, FactoryPolicy};
+use super::metrics::{MetricPoint, Metrics, RunSummary};
+use super::scheduler::{Dispatch, PhaseKind, Scheduler};
+use super::task::{Task, TaskId, TaskRecord};
+use super::transfer::{StageSource, TransferPlanner};
+use super::worker::WorkerId;
+use crate::cluster::{
+    ClusterAction, ClusterSim, GpuModel, LoadTrace, Node, SharedFilesystem,
+};
+use crate::simulation::{EventKind, SimEngine};
+use crate::util::Rng;
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub name: String,
+    pub policy: ContextPolicy,
+    pub batch_size: u64,
+    pub total_inferences: u64,
+    pub nodes: Vec<Node>,
+    pub trace: LoadTrace,
+    /// pv5-style eviction priority (empty = random victims).
+    pub reclaim_priority: Vec<GpuModel>,
+    pub seed: u64,
+    pub cost: CostModel,
+    pub fanout_cap: u32,
+    pub factory: FactoryPolicy,
+    /// Metrics sampling period.
+    pub metrics_dt: f64,
+    /// Fraction of the initial trace target that must be connected before
+    /// tasks start flowing (§6.2: "an experiment starts when 95% of all
+    /// GPUs join the pool"). 0.0 disables the gate.
+    pub start_gate_fraction: f64,
+    pub recipe: ContextRecipe,
+}
+
+impl SimConfig {
+    /// Reasonable defaults over a node pool + trace; experiments override
+    /// fields as needed.
+    pub fn new(
+        name: impl Into<String>,
+        policy: ContextPolicy,
+        batch_size: u64,
+        nodes: Vec<Node>,
+        trace: LoadTrace,
+        seed: u64,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            policy,
+            batch_size,
+            total_inferences: 150_000,
+            nodes,
+            trace,
+            reclaim_priority: Vec::new(),
+            seed,
+            cost: CostModel::default(),
+            fanout_cap: 3,
+            factory: FactoryPolicy::default(),
+            metrics_dt: 10.0,
+            start_gate_fraction: 0.95,
+            recipe: ContextRecipe::smollm2_pff(0),
+        }
+    }
+}
+
+/// Everything a figure needs from one run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub summary: RunSummary,
+    pub series: Vec<MetricPoint>,
+    pub records: Vec<TaskRecord>,
+    /// Sim time at which the start gate opened (t=0 of the measurement).
+    pub started_at: f64,
+    pub finished_at: f64,
+}
+
+/// Per-running-task driver-side state.
+struct InFlight {
+    worker: WorkerId,
+    next: usize,
+    dispatched_at: f64,
+    context_s: f64,
+    execute_s: f64,
+    /// Current phase holds a shared-FS read slot.
+    fs_reading: bool,
+}
+
+/// The simulated experiment driver.
+pub struct SimDriver {
+    cfg: SimConfig,
+    engine: SimEngine,
+    cluster: ClusterSim,
+    fs: SharedFilesystem,
+    sched: Scheduler,
+    factory: Factory,
+    metrics: Metrics,
+    rng: Rng,
+    in_flight: HashMap<TaskId, InFlight>,
+    started_at: Option<f64>,
+    finished_at: Option<f64>,
+    /// Worker → node binding for eviction lookups.
+    node_of_worker: HashMap<WorkerId, crate::cluster::NodeId>,
+}
+
+impl SimDriver {
+    pub fn new(cfg: SimConfig) -> Self {
+        let mut root = Rng::new(cfg.seed ^ 0x5eed_c0de);
+        let cluster_rng = root.fork(1);
+        let driver_rng = root.fork(2);
+        let mut cluster =
+            ClusterSim::new(cfg.nodes.clone(), cfg.trace.clone(), cluster_rng);
+        cluster.reclaim_priority = cfg.reclaim_priority.clone();
+        let sched = Scheduler::new(
+            cfg.policy,
+            cfg.recipe.clone(),
+            TransferPlanner::new(cfg.fanout_cap),
+        );
+        let factory = Factory::new(cfg.factory);
+        Self {
+            cfg,
+            engine: SimEngine::new(),
+            cluster,
+            fs: SharedFilesystem::panasas_as16(),
+            sched,
+            factory,
+            metrics: Metrics::new(),
+            rng: driver_rng,
+            in_flight: HashMap::new(),
+            started_at: None,
+            finished_at: None,
+            node_of_worker: HashMap::new(),
+        }
+    }
+
+    /// Run to completion; panics if the event heap drains with tasks
+    /// outstanding and no possibility of progress (a driver bug).
+    pub fn run(mut self) -> SimOutcome {
+        // Workload.
+        let tasks: Vec<Task> = super::batcher::Batcher::new(self.cfg.batch_size)
+            .split(self.cfg.total_inferences, self.cfg.recipe.id, 0);
+        self.sched.submit_tasks(tasks);
+
+        // Trace steps + first metrics tick.
+        let times: Vec<f64> = self.cfg.trace.step_times().collect();
+        for (i, t) in times.iter().enumerate() {
+            self.engine.schedule_at(*t, EventKind::TraceStep { step: i });
+        }
+        self.engine.schedule(0.0, EventKind::MetricsTick);
+
+        while let Some(ev) = self.engine.pop() {
+            let now = self.engine.now();
+            // Runaway guard: no experiment legitimately exceeds 100 sim
+            // days — a stall here is a driver bug, fail loudly.
+            assert!(
+                now < 100.0 * 86_400.0,
+                "{}: sim runaway (ready={} running={} workers={})",
+                self.cfg.name,
+                self.sched.ready_count(),
+                self.sched.running_count(),
+                self.sched.connected_workers()
+            );
+            match ev.kind {
+                EventKind::TraceStep { .. } => self.on_trace_step(now),
+                EventKind::WorkerJoin { node } => self.on_worker_join(node, now),
+                EventKind::WorkerEvict { worker } => {
+                    self.on_worker_evict(worker)
+                }
+                EventKind::PhaseComplete { worker, task, phase } => {
+                    self.on_phase_complete(worker, task, phase, now)
+                }
+                EventKind::TaskComplete { .. } => {
+                    unreachable!("completion is the last PhaseComplete")
+                }
+                EventKind::FactoryTick => {}
+                EventKind::MetricsTick => self.on_metrics_tick(now),
+            }
+            if self.finished_at.is_some() {
+                break;
+            }
+            // Terminal stall: work remains but the cluster has drained to
+            // zero for good (pv5: the paper's drain runs end here, with
+            // partial completion — that's the Figure 6 comparison).
+            if !self.sched.all_done()
+                && self.sched.connected_workers() == 0
+                && self.in_flight.is_empty()
+                && self.factory.pending_count() == 0
+                && self.cfg.trace.max_target_from(now) == 0
+            {
+                self.finished_at = Some(now);
+                break;
+            }
+            debug_assert!(self.sched.check_conservation());
+        }
+
+        let finished_at = self.finished_at.unwrap_or_else(|| {
+            panic!(
+                "{}: event heap drained with {} tasks outstanding",
+                self.cfg.name,
+                self.sched.ready_count() + self.sched.running_count()
+            )
+        });
+        let started_at = self.started_at.unwrap_or(0.0);
+        // Final metrics sample at the finish line.
+        let progress = self.sched.progress();
+        self.metrics.sample(
+            finished_at,
+            self.sched.connected_workers() as u32,
+            progress.completed_inferences,
+        );
+
+        let exec_time = finished_at - started_at;
+        let avg_workers = self.metrics.avg_workers(started_at, finished_at);
+        let records = self.sched.records().to_vec();
+        let summary = RunSummary::from_records(
+            self.cfg.name.clone(),
+            self.cfg.policy.as_str(),
+            self.cfg.batch_size,
+            exec_time,
+            avg_workers,
+            progress.completed_inferences,
+            progress.evicted_inferences,
+            progress.evictions,
+            &records,
+        );
+        SimOutcome {
+            summary,
+            series: self.metrics.points().to_vec(),
+            records,
+            started_at,
+            finished_at,
+        }
+    }
+
+    // ------------------------------------------------------------- events
+
+    fn on_trace_step(&mut self, now: f64) {
+        let actions = self.cluster.reconcile(now);
+        let mut offered = Vec::new();
+        for a in &actions {
+            match a {
+                ClusterAction::Grant(node) => offered.push(*node),
+                ClusterAction::Reclaim(node) => {
+                    if let Some(w) = self.sched.worker_on_node(*node) {
+                        // Immediate eviction, no grace period (§7).
+                        self.engine
+                            .schedule(0.0, EventKind::WorkerEvict { worker: w });
+                    }
+                }
+            }
+        }
+        // Also re-offer nodes that were granted earlier but not taken
+        // (e.g. factory was at cap then; tasks may have freed up).
+        let mut all_offered = self.cluster.offered_nodes();
+        all_offered.retain(|n| !offered.contains(n));
+        offered.extend(all_offered);
+
+        let outstanding =
+            self.sched.ready_count() + self.sched.running_count();
+        let take = self.factory.decide_submissions(
+            &offered,
+            self.sched.connected_workers() as u32,
+            outstanding,
+        );
+        for node in take {
+            let delay = self.cfg.cost.worker_startup_s(&mut self.rng);
+            self.engine.schedule(delay, EventKind::WorkerJoin { node });
+        }
+    }
+
+    fn on_worker_join(&mut self, node_id: crate::cluster::NodeId, now: f64) {
+        self.factory.submission_resolved(node_id);
+        // The node may have been reclaimed while the pilot job was in the
+        // queue — then the job just dies in the cluster.
+        if !self.cluster.offered_nodes().contains(&node_id) {
+            return;
+        }
+        self.cluster.mark_held(node_id);
+        let node = *self.cluster.node(node_id);
+        let wid = self.sched.worker_join(node, now);
+        self.node_of_worker.insert(wid, node_id);
+
+        // Start gate (§6.2): hold dispatch until 95% of the pool joined.
+        // "The pool" is what the factory will actually provide: the trace
+        // target clamped by max_workers and by the task count (a 10-task
+        // workload never asks for 20 workers).
+        if self.started_at.is_none() {
+            let mut target = self.cfg.trace.target_at(now) as u64;
+            if let Some(cap) = self.cfg.factory.max_workers {
+                target = target.min(cap as u64);
+            }
+            if self.cfg.factory.cap_to_ready_tasks {
+                target = target.min(self.sched.total_tasks() as u64);
+            }
+            let need =
+                (target.max(1) as f64 * self.cfg.start_gate_fraction).ceil();
+            if (self.sched.connected_workers() as f64) >= need {
+                self.started_at = Some(now);
+            }
+        }
+        if self.started_at.is_some() {
+            self.dispatch(now);
+        }
+    }
+
+    fn on_worker_evict(&mut self, worker: WorkerId) {
+        if let Some(node) = self.node_of_worker.remove(&worker) {
+            let _ = node; // node already reclaimed by the cluster
+        }
+        // Clean driver-side state of the running task, if any.
+        let victim_task = self
+            .in_flight
+            .iter()
+            .find(|(_, f)| f.worker == worker)
+            .map(|(t, _)| *t);
+        if let Some(task) = victim_task {
+            let f = self.in_flight.remove(&task).unwrap();
+            if f.fs_reading {
+                self.fs.end_read();
+            }
+        }
+        self.sched.worker_evict(worker);
+        // The freed task may dispatch to another idle worker immediately.
+        if self.started_at.is_some() {
+            self.dispatch(self.engine.now());
+        }
+    }
+
+    fn on_phase_complete(
+        &mut self,
+        worker: WorkerId,
+        task: TaskId,
+        phase: usize,
+        now: f64,
+    ) {
+        // Eviction raced ahead of this event: the task was requeued.
+        let Some(f) = self.in_flight.get_mut(&task) else { return };
+        if f.worker != worker || f.next != phase {
+            return;
+        }
+        if f.fs_reading {
+            self.fs.end_read();
+            f.fs_reading = false;
+        }
+        f.next += 1;
+        let next_phase = self.sched.phase_done(task, phase);
+
+        match next_phase {
+            Some(p) => self.start_phase(task, p, now),
+            None => {
+                // All phases done → task complete.
+                let f = self.in_flight.remove(&task).unwrap();
+                let gpu = self
+                    .sched
+                    .worker(worker)
+                    .map(|w| w.gpu())
+                    .unwrap_or(GpuModel::A10);
+                let (attempts, inferences) =
+                    self.sched.task_meta(task).unwrap_or((1, 0));
+                let record = TaskRecord {
+                    task,
+                    worker,
+                    gpu,
+                    attempts,
+                    inferences,
+                    dispatched_at: f.dispatched_at,
+                    completed_at: now,
+                    context_s: f.context_s,
+                    execute_s: f.execute_s,
+                };
+                self.sched.task_done(task, record);
+                if self.sched.all_done() {
+                    self.finished_at = Some(now);
+                    return;
+                }
+                self.dispatch(now);
+            }
+        }
+    }
+
+    fn on_metrics_tick(&mut self, now: f64) {
+        let progress = self.sched.progress();
+        self.metrics.sample(
+            now,
+            self.sched.connected_workers() as u32,
+            progress.completed_inferences,
+        );
+        if self.finished_at.is_none() {
+            self.engine.schedule(self.cfg.metrics_dt, EventKind::MetricsTick);
+        }
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    fn dispatch(&mut self, now: f64) {
+        let dispatches: Vec<Dispatch> = self.sched.try_dispatch();
+        for d in dispatches {
+            let first = d.phases[0];
+            self.in_flight.insert(
+                d.task,
+                InFlight {
+                    worker: d.worker,
+                    next: 0,
+                    dispatched_at: now,
+                    context_s: 0.0,
+                    execute_s: 0.0,
+                    fs_reading: false,
+                },
+            );
+            self.start_phase(d.task, first, now);
+        }
+    }
+
+    /// Compute the duration of `phase` and schedule its completion.
+    fn start_phase(&mut self, task: TaskId, phase: PhaseKind, _now: f64) {
+        let f = self.in_flight.get_mut(&task).expect("in flight");
+        let worker = f.worker;
+        let gpu = self
+            .sched
+            .worker(worker)
+            .map(|w| w.gpu())
+            .unwrap_or(GpuModel::A10);
+        let cost = &self.cfg.cost;
+        let dur = match phase {
+            PhaseKind::Stage { bytes, source, .. } => match source {
+                StageSource::Peer(_) => {
+                    cost.stage_from_peer_s(bytes, &mut self.rng)
+                }
+                StageSource::Origin(origin) => {
+                    if origin == DataOrigin::SharedFs {
+                        self.fs.begin_read();
+                        f.fs_reading = true;
+                    }
+                    cost.stage_from_origin_s(
+                        bytes,
+                        origin,
+                        &self.fs,
+                        &mut self.rng,
+                    )
+                }
+            },
+            PhaseKind::Sandbox => cost.sandbox_s(&mut self.rng) * 0.3,
+            PhaseKind::Materialize { .. } => {
+                cost.materialize_s(gpu, &mut self.rng)
+            }
+            PhaseKind::Execute { inferences } => {
+                cost.dispatch_s(&mut self.rng)
+                    + cost.execute_s(inferences, gpu, &mut self.rng)
+            }
+            PhaseKind::Teardown => cost.sandbox_s(&mut self.rng) * 0.7,
+        };
+        if phase.is_context_overhead() {
+            f.context_s += dur;
+        } else {
+            f.execute_s += dur;
+        }
+        let idx = f.next;
+        self.engine.schedule(
+            dur,
+            EventKind::PhaseComplete { worker, task, phase: idx },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::pool_20_mixed;
+
+    fn small_cfg(policy: ContextPolicy, batch: u64) -> SimConfig {
+        let mut cfg = SimConfig::new(
+            "test",
+            policy,
+            batch,
+            pool_20_mixed(),
+            LoadTrace::constant(20),
+            7,
+        );
+        cfg.total_inferences = 2_000;
+        cfg
+    }
+
+    #[test]
+    fn pervasive_run_completes_all_inferences() {
+        let out = SimDriver::new(small_cfg(ContextPolicy::Pervasive, 100)).run();
+        assert_eq!(out.summary.completed_inferences, 2_000);
+        assert!(out.summary.exec_time_s > 0.0);
+        assert!(out.summary.avg_workers > 10.0);
+        assert_eq!(out.records.len(), 20);
+    }
+
+    #[test]
+    fn pervasive_beats_partial_beats_none_at_small_batch() {
+        let perv =
+            SimDriver::new(small_cfg(ContextPolicy::Pervasive, 10)).run();
+        let part = SimDriver::new(small_cfg(ContextPolicy::Partial, 10)).run();
+        let none = SimDriver::new(small_cfg(ContextPolicy::None, 10)).run();
+        assert!(
+            perv.summary.exec_time_s < part.summary.exec_time_s,
+            "pervasive {} !< partial {}",
+            perv.summary.exec_time_s,
+            part.summary.exec_time_s
+        );
+        assert!(
+            part.summary.exec_time_s < none.summary.exec_time_s,
+            "partial {} !< none {}",
+            part.summary.exec_time_s,
+            none.summary.exec_time_s
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SimDriver::new(small_cfg(ContextPolicy::Pervasive, 50)).run();
+        let b = SimDriver::new(small_cfg(ContextPolicy::Pervasive, 50)).run();
+        assert_eq!(a.summary.exec_time_s, b.summary.exec_time_s);
+        assert_eq!(a.series.len(), b.series.len());
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let mut cfg = small_cfg(ContextPolicy::Pervasive, 50);
+        cfg.seed = 99;
+        let a = SimDriver::new(cfg).run();
+        let b = SimDriver::new(small_cfg(ContextPolicy::Pervasive, 50)).run();
+        assert_ne!(a.summary.exec_time_s, b.summary.exec_time_s);
+    }
+
+    #[test]
+    fn drain_trace_still_completes_with_requeues() {
+        let mut cfg = small_cfg(ContextPolicy::Pervasive, 100);
+        // Pool shrinks to 2 nodes mid-run; evicted tasks must re-run.
+        cfg.trace = LoadTrace::from_steps(vec![(0.0, 20), (120.0, 2)]);
+        cfg.total_inferences = 6_000;
+        let out = SimDriver::new(cfg).run();
+        assert_eq!(out.summary.completed_inferences, 6_000);
+        assert!(out.summary.evictions > 0, "drain must evict someone");
+        assert!(out.summary.evicted_inferences > 0);
+    }
+
+    #[test]
+    fn start_gate_delays_measurement() {
+        let out = SimDriver::new(small_cfg(ContextPolicy::Pervasive, 100)).run();
+        // Workers take ~5-18s to start; the gate needs 19 of 20.
+        assert!(out.started_at > 0.0);
+        assert!(out.finished_at > out.started_at);
+    }
+
+    #[test]
+    fn single_node_baseline_matches_cost_model() {
+        use crate::cluster::node::pool_single_a10;
+        let mut cfg = SimConfig::new(
+            "pv0-ish",
+            ContextPolicy::Pervasive,
+            100,
+            pool_single_a10(),
+            LoadTrace::constant(1),
+            3,
+        );
+        cfg.total_inferences = 1_000;
+        cfg.start_gate_fraction = 1.0;
+        let out = SimDriver::new(cfg).run();
+        // 1000 inferences on one A10 ≈ 272.7 s compute + one-time context
+        // acquisition (deps ~0.4 s, weights download ~62 s, materialize
+        // ~8 s) ≈ 343 s ± jitter.
+        let t = out.summary.exec_time_s;
+        assert!((280.0..420.0).contains(&t), "t={t}");
+    }
+}

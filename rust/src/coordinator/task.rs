@@ -1,0 +1,116 @@
+//! Tasks: independent, eviction-tolerant batches of inferences.
+//!
+//! A task owns a contiguous range of inference indices over the
+//! workload. Tasks carry no inter-task dependencies (paper §2.1
+//! "inter-task independence") and may be killed at any instant by an
+//! eviction; the scheduler then requeues the *whole* batch — partial
+//! results are discarded, which is exactly why the batch size matters so
+//! much under eviction pressure (pv5, §6.3 Effort 5).
+
+use super::context::ContextId;
+use super::worker::WorkerId;
+use crate::cluster::GpuModel;
+
+/// Dense task identifier.
+pub type TaskId = u64;
+
+/// Lifecycle of a task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// In the ready queue, waiting for a worker.
+    Ready,
+    /// Dispatched; phases running on a worker.
+    Running { worker: WorkerId },
+    /// All inferences delivered.
+    Done,
+}
+
+/// One batch of inferences bound to a context.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    /// Inference index range `[start, start+count)` in the workload.
+    pub start: u64,
+    pub count: u64,
+    pub context: ContextId,
+    pub state: TaskState,
+    /// Dispatch attempts (1 + number of evictions suffered).
+    pub attempts: u32,
+}
+
+impl Task {
+    pub fn new(id: TaskId, start: u64, count: u64, context: ContextId) -> Self {
+        assert!(count > 0, "empty task");
+        Self { id, start, count, context, state: TaskState::Ready, attempts: 0 }
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.state == TaskState::Ready
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == TaskState::Done
+    }
+}
+
+/// Completion record for one *successful* task execution — the raw data
+/// behind Figure 5 histograms and Table 2 statistics.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task: TaskId,
+    pub worker: WorkerId,
+    pub gpu: GpuModel,
+    pub attempts: u32,
+    pub inferences: u64,
+    /// Sim-time the task was dispatched to the worker.
+    pub dispatched_at: f64,
+    /// Sim-time the result reached the manager.
+    pub completed_at: f64,
+    /// Context-acquisition portion (staging + materialization) of the
+    /// execution, 0 when a ready context was reused.
+    pub context_s: f64,
+    /// Pure inference portion.
+    pub execute_s: f64,
+}
+
+impl TaskRecord {
+    /// Task execution time as the paper measures it (dispatch→result).
+    pub fn exec_time_s(&self) -> f64 {
+        self.completed_at - self.dispatched_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_task_is_ready() {
+        let t = Task::new(0, 0, 100, 0);
+        assert!(t.is_ready());
+        assert!(!t.is_done());
+        assert_eq!(t.attempts, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty task")]
+    fn zero_count_rejected() {
+        Task::new(0, 0, 0, 0);
+    }
+
+    #[test]
+    fn record_exec_time() {
+        let r = TaskRecord {
+            task: 1,
+            worker: 2,
+            gpu: GpuModel::A10,
+            attempts: 1,
+            inferences: 100,
+            dispatched_at: 10.0,
+            completed_at: 47.3,
+            context_s: 8.0,
+            execute_s: 27.3,
+        };
+        assert!((r.exec_time_s() - 37.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,248 @@
+//! Peer-transfer planning: spanning-tree context distribution (§5.3.1).
+//!
+//! "The context distribution takes the shape of a spanning tree: the
+//! scheduler first sends the context to an arbitrary worker, and this
+//! worker sends the context to N other workers, and so on."
+//!
+//! Two faces:
+//!
+//! * **Online source selection** ([`TransferPlanner::pick_source`]) — used
+//!   by the scheduler when a worker needs a component *now*: prefer a
+//!   peer that has it cached and has a free upload slot (capped at N),
+//!   fall back to the component's origin (shared FS / internet / manager).
+//!   The spanning tree emerges from repeated application of this rule.
+//! * **Offline broadcast planning** ([`plan_broadcast`]) — computes the
+//!   full tree for a known worker set (used by benches, tests, and the
+//!   ablation experiments on the fan-out cap).
+
+use super::context::{ComponentKind, ContextId, DataOrigin};
+use super::worker::{Worker, WorkerId};
+
+/// Where a stage-in reads from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageSource {
+    /// From a peer worker's cache (claims one of its upload slots).
+    Peer(WorkerId),
+    /// From the component's origin (SharedFs / Internet / Manager).
+    Origin(DataOrigin),
+}
+
+/// Planner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferPlanner {
+    /// Max concurrent outbound transfers per worker ("capped at N", §5.3.1).
+    pub fanout_cap: u32,
+}
+
+impl Default for TransferPlanner {
+    fn default() -> Self {
+        Self { fanout_cap: 3 }
+    }
+}
+
+impl TransferPlanner {
+    pub fn new(fanout_cap: u32) -> Self {
+        assert!(fanout_cap > 0);
+        Self { fanout_cap }
+    }
+
+    /// Choose a source for `(ctx, kind)` needed by `dest`. Claims the
+    /// upload slot on the chosen peer (caller must `release_upload` when
+    /// the transfer finishes). Peers are scanned in worker-id order for
+    /// determinism; the first cached-and-free peer wins.
+    pub fn pick_source<'a, I>(
+        &self,
+        ctx: ContextId,
+        kind: ComponentKind,
+        origin: DataOrigin,
+        dest: WorkerId,
+        peers: I,
+    ) -> StageSource
+    where
+        I: IntoIterator<Item = &'a mut Worker>,
+    {
+        for peer in peers {
+            if peer.id == dest {
+                continue;
+            }
+            if peer.has_cached(ctx, kind)
+                && peer.try_claim_upload(self.fanout_cap)
+            {
+                return StageSource::Peer(peer.id);
+            }
+        }
+        StageSource::Origin(origin)
+    }
+}
+
+/// One edge of a broadcast tree: `parent → child` (parent `None` = the
+/// seed transfer from the manager/filesystem).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreeEdge {
+    pub parent: Option<WorkerId>,
+    pub child: WorkerId,
+    /// Completion "round" of this edge (seed = round 1); with uniform
+    /// link times, round r finishes at r × transfer_time.
+    pub round: u32,
+}
+
+/// Plan a full broadcast of one component to `workers`, fan-out `cap`:
+/// classic pipelined spanning tree where every worker that has the data
+/// serves up to `cap` children per round. Returns edges in round order.
+pub fn plan_broadcast(workers: &[WorkerId], cap: u32) -> Vec<TreeEdge> {
+    assert!(cap > 0);
+    let mut edges = Vec::with_capacity(workers.len());
+    if workers.is_empty() {
+        return edges;
+    }
+    // Seed: manager → first worker.
+    edges.push(TreeEdge { parent: None, child: workers[0], round: 1 });
+    let mut have: Vec<WorkerId> = vec![workers[0]];
+    let mut next = 1usize;
+    let mut round = 2u32;
+    while next < workers.len() {
+        let mut new_holders = Vec::new();
+        // Each holder serves up to `cap` new children this round.
+        'outer: for &src in &have {
+            for _ in 0..cap {
+                if next >= workers.len() {
+                    break 'outer;
+                }
+                edges.push(TreeEdge {
+                    parent: Some(src),
+                    child: workers[next],
+                    round,
+                });
+                new_holders.push(workers[next]);
+                next += 1;
+            }
+        }
+        have.extend(new_holders);
+        round += 1;
+    }
+    edges
+}
+
+/// Number of rounds a broadcast to `n` workers takes at fan-out `cap`
+/// (the latency model of the spanning tree: O(log_{cap+1} n)).
+pub fn broadcast_rounds(n: usize, cap: u32) -> u32 {
+    plan_broadcast(&(0..n as WorkerId).collect::<Vec<_>>(), cap)
+        .iter()
+        .map(|e| e.round)
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuModel, Node};
+
+    fn mk_worker(id: WorkerId) -> Worker {
+        Worker::new(id, Node { id, gpu: GpuModel::A10 }, 0.0)
+    }
+
+    #[test]
+    fn origin_when_no_peer_has_it() {
+        let planner = TransferPlanner::default();
+        let mut peers = vec![mk_worker(0), mk_worker(1)];
+        let src = planner.pick_source(
+            0,
+            ComponentKind::DepsPackage,
+            DataOrigin::SharedFs,
+            2,
+            peers.iter_mut(),
+        );
+        assert_eq!(src, StageSource::Origin(DataOrigin::SharedFs));
+    }
+
+    #[test]
+    fn peer_preferred_and_slot_claimed() {
+        let planner = TransferPlanner::new(1);
+        let mut peers = vec![mk_worker(0), mk_worker(1)];
+        peers[0].insert_cached(0, ComponentKind::ModelWeights);
+        let src = planner.pick_source(
+            0,
+            ComponentKind::ModelWeights,
+            DataOrigin::Internet,
+            2,
+            peers.iter_mut(),
+        );
+        assert_eq!(src, StageSource::Peer(0));
+        // Slot now taken; second request falls back to origin.
+        let src2 = planner.pick_source(
+            0,
+            ComponentKind::ModelWeights,
+            DataOrigin::Internet,
+            3,
+            peers.iter_mut(),
+        );
+        assert_eq!(src2, StageSource::Origin(DataOrigin::Internet));
+    }
+
+    #[test]
+    fn dest_never_picked_as_its_own_source() {
+        let planner = TransferPlanner::default();
+        let mut peers = vec![mk_worker(5)];
+        peers[0].insert_cached(0, ComponentKind::ModelWeights);
+        let src = planner.pick_source(
+            0,
+            ComponentKind::ModelWeights,
+            DataOrigin::Internet,
+            5,
+            peers.iter_mut(),
+        );
+        assert_eq!(src, StageSource::Origin(DataOrigin::Internet));
+    }
+
+    #[test]
+    fn broadcast_covers_everyone_exactly_once() {
+        let ids: Vec<WorkerId> = (0..50).collect();
+        let edges = plan_broadcast(&ids, 3);
+        assert_eq!(edges.len(), 50);
+        let mut seen = std::collections::HashSet::new();
+        for e in &edges {
+            assert!(seen.insert(e.child), "duplicate child {}", e.child);
+        }
+        assert_eq!(seen.len(), 50);
+    }
+
+    #[test]
+    fn broadcast_respects_fanout_per_round() {
+        let ids: Vec<WorkerId> = (0..100).collect();
+        let cap = 3;
+        let edges = plan_broadcast(&ids, cap);
+        // No parent serves more than `cap` children in one round.
+        use std::collections::HashMap;
+        let mut per_round: HashMap<(Option<WorkerId>, u32), u32> =
+            HashMap::new();
+        for e in &edges {
+            *per_round.entry((e.parent, e.round)).or_default() += 1;
+        }
+        for ((parent, _round), count) in per_round {
+            if parent.is_some() {
+                assert!(count <= cap);
+            } else {
+                assert_eq!(count, 1, "single seed from the manager");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_rounds_logarithmic() {
+        // fan-out 3: holders grow 1 → 4 → 16 → 64 → 256 …
+        assert_eq!(broadcast_rounds(1, 3), 1);
+        assert_eq!(broadcast_rounds(4, 3), 2);
+        assert_eq!(broadcast_rounds(16, 3), 3);
+        assert_eq!(broadcast_rounds(64, 3), 4);
+        assert!(broadcast_rounds(186, 3) <= 5);
+        // fan-out 1: chain, linear-ish (doubling): rounds = ceil(log2 n)+1.
+        assert_eq!(broadcast_rounds(8, 1), 4);
+    }
+
+    #[test]
+    fn empty_broadcast() {
+        assert!(plan_broadcast(&[], 3).is_empty());
+        assert_eq!(broadcast_rounds(0, 3), 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Workers: the base unit of opportunistic resource acquisition.
+//!
+//! Per the paper's policy (§5.3.2) each worker is minimal — 1 GPU, runs
+//! at most **one task at a time** — so evictions lose fine-grained chunks
+//! and fast GPUs naturally pull more tasks (the heterogeneity answer to
+//! Challenge #4). A worker owns a local cache of context components and
+//! at most one library process.
+
+use std::collections::HashSet;
+
+use super::context::{ComponentKind, ContextId};
+use super::library::LibraryState;
+use super::task::TaskId;
+use crate::cluster::{GpuModel, Node, NodeId};
+
+/// Dense worker identifier (never reused within a run).
+pub type WorkerId = u32;
+
+/// One connected worker.
+#[derive(Debug, Clone)]
+pub struct Worker {
+    pub id: WorkerId,
+    pub node: Node,
+    pub joined_at: f64,
+    /// Context components staged in the local cache (survives tasks under
+    /// Partial/Pervasive; wiped with the worker on eviction).
+    cache: HashSet<(ContextId, ComponentKind)>,
+    /// The (single) library process.
+    pub library: LibraryState,
+    /// Currently running task, if any (1-to-1 task:worker policy).
+    pub running: Option<TaskId>,
+    /// Peer-transfer source slots in use (fan-out cap enforcement).
+    pub active_uploads: u32,
+    pub tasks_completed: u64,
+    pub inferences_completed: u64,
+}
+
+impl Worker {
+    pub fn new(id: WorkerId, node: Node, joined_at: f64) -> Self {
+        Self {
+            id,
+            node,
+            joined_at,
+            cache: HashSet::new(),
+            library: LibraryState::Absent,
+            running: None,
+            active_uploads: 0,
+            tasks_completed: 0,
+            inferences_completed: 0,
+        }
+    }
+
+    pub fn node_id(&self) -> NodeId {
+        self.node.id
+    }
+
+    pub fn gpu(&self) -> GpuModel {
+        self.node.gpu
+    }
+
+    pub fn relative_speed(&self) -> f64 {
+        self.node.relative_speed()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.running.is_none()
+    }
+
+    // ---------------------------------------------------------- cache ops
+
+    pub fn has_cached(&self, ctx: ContextId, kind: ComponentKind) -> bool {
+        self.cache.contains(&(ctx, kind))
+    }
+
+    pub fn insert_cached(&mut self, ctx: ContextId, kind: ComponentKind) {
+        self.cache.insert((ctx, kind));
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Drop per-task sandbox state (None policy caches nothing anyway;
+    /// this models the sandbox teardown of §5.2 observation 3).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    // ------------------------------------------------------ transfer slots
+
+    /// Try to claim an upload slot (peer-transfer source), capped at
+    /// `fanout_cap` concurrent transfers per worker (§5.3.1).
+    pub fn try_claim_upload(&mut self, fanout_cap: u32) -> bool {
+        if self.active_uploads < fanout_cap {
+            self.active_uploads += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release_upload(&mut self) {
+        debug_assert!(self.active_uploads > 0);
+        self.active_uploads = self.active_uploads.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuModel;
+
+    fn worker() -> Worker {
+        Worker::new(0, Node { id: 3, gpu: GpuModel::A10 }, 5.0)
+    }
+
+    #[test]
+    fn fresh_worker_is_idle_and_empty() {
+        let w = worker();
+        assert!(w.is_idle());
+        assert_eq!(w.cached_count(), 0);
+        assert_eq!(w.library, LibraryState::Absent);
+        assert_eq!(w.node_id(), 3);
+        assert_eq!(w.relative_speed(), 1.0);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let mut w = worker();
+        w.insert_cached(0, ComponentKind::DepsPackage);
+        assert!(w.has_cached(0, ComponentKind::DepsPackage));
+        assert!(!w.has_cached(0, ComponentKind::ModelWeights));
+        assert!(!w.has_cached(1, ComponentKind::DepsPackage));
+        w.clear_cache();
+        assert_eq!(w.cached_count(), 0);
+    }
+
+    #[test]
+    fn upload_slots_respect_cap() {
+        let mut w = worker();
+        assert!(w.try_claim_upload(2));
+        assert!(w.try_claim_upload(2));
+        assert!(!w.try_claim_upload(2));
+        w.release_upload();
+        assert!(w.try_claim_upload(2));
+    }
+}

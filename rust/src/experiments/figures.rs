@@ -1,0 +1,274 @@
+//! Figure/table renderers: each function regenerates one artifact of the
+//! paper's evaluation as text (stdout) + CSV (under `results/`).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::cluster::gpu::{total_cluster_gpus, GPU_CATALOG};
+use crate::util::Summary;
+
+use super::runner::ExperimentResult;
+
+/// Write `content` to `results/<name>` (directory created on demand).
+pub fn write_result_file(
+    results_dir: impl AsRef<Path>,
+    name: &str,
+    content: &str,
+) -> crate::Result<std::path::PathBuf> {
+    let dir = results_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Table 1: the GPU inventory (straight from the catalog).
+pub fn table1() -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{:<34} {:>12} {:>6} {:>7}", "Device Name", "Release Year", "Count", "Speed");
+    for s in GPU_CATALOG {
+        let _ = writeln!(
+            out,
+            "{:<34} {:>12} {:>6} {:>7.2}",
+            s.name, s.release_year, s.count, s.relative_speed
+        );
+    }
+    let _ = writeln!(out, "{:<34} {:>12} {:>6}", "TOTAL", "", total_cluster_gpus());
+    out
+}
+
+/// Figure 4: the 21-experiment summary (avg workers + exec time).
+pub fn figure4_text(results: &[ExperimentResult]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<10} {:>10} {:>7} {:>12} {:>12} {:>9}",
+        "exp", "policy", "batch", "exec_time_s", "avg_workers", "speedup"
+    );
+    let baseline = results
+        .iter()
+        .find(|r| r.id == "pv0")
+        .map(|r| r.exec_time_s)
+        .unwrap_or(f64::NAN);
+    for r in results {
+        let _ = writeln!(
+            out,
+            "{:<10} {:>10} {:>7} {:>12.1} {:>12.1} {:>9.2}",
+            r.id,
+            r.policy,
+            r.batch_size,
+            r.exec_time_s,
+            r.avg_workers,
+            baseline / r.exec_time_s,
+        );
+    }
+    out
+}
+
+/// Figure 4 CSV.
+pub fn figure4_csv(results: &[ExperimentResult]) -> String {
+    let mut out = String::from(
+        "exp,policy,batch,exec_time_s,avg_workers,completed,evicted,evictions\n",
+    );
+    for r in results {
+        let s = &r.outcome.summary;
+        let _ = writeln!(
+            out,
+            "{},{},{},{:.1},{:.2},{},{},{}",
+            r.id,
+            r.policy,
+            r.batch_size,
+            r.exec_time_s,
+            r.avg_workers,
+            s.completed_inferences,
+            s.evicted_inferences,
+            s.evictions
+        );
+    }
+    out
+}
+
+/// Figure 5: task exec-time histograms for pv[3,4]_[1,100].
+/// Bins follow the paper's plots: (0, hi) in `bins` equal steps.
+pub fn figure5_text(results: &[ExperimentResult]) -> String {
+    let mut out = String::new();
+    for r in results {
+        let mut s = Summary::new();
+        for rec in &r.outcome.records {
+            s.add(rec.exec_time_s());
+        }
+        let hi = if r.batch_size <= 1 { 20.0 } else { 120.0 };
+        let bins = 20;
+        let hist = s.histogram(0.0, hi, bins);
+        let peak = *hist.iter().max().unwrap_or(&1) as f64;
+        let _ = writeln!(out, "\n{} (n={} tasks, bin={}s)", r.id, s.count(), hi / bins as f64);
+        for (i, count) in hist.iter().enumerate() {
+            let lo = hi * i as f64 / bins as f64;
+            let bar = "#".repeat(((*count as f64 / peak) * 50.0).round() as usize);
+            let _ = writeln!(out, "{lo:>7.1}s |{bar:<50} {count}");
+        }
+    }
+    out
+}
+
+/// Figure 5 CSV: one row per task record.
+pub fn figure5_csv(results: &[ExperimentResult]) -> String {
+    let mut out = String::from("exp,task,gpu,exec_time_s,context_s,execute_s\n");
+    for r in results {
+        for rec in &r.outcome.records {
+            let _ = writeln!(
+                out,
+                "{},{},{},{:.4},{:.4},{:.4}",
+                r.id,
+                rec.task,
+                rec.gpu.name(),
+                rec.exec_time_s(),
+                rec.context_s,
+                rec.execute_s
+            );
+        }
+    }
+    out
+}
+
+/// Table 2: mean/std/min/max of task exec times for the 4 sweep runs.
+pub fn table2(results: &[ExperimentResult]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<10} {:>9} {:>10} {:>9} {:>9}",
+        "Exp. ID", "Mean", "Std. Dev.", "Min", "Max"
+    );
+    for r in results {
+        let s = &r.outcome.summary;
+        let _ = writeln!(
+            out,
+            "{:<10} {:>9.2} {:>10.2} {:>9.4} {:>9.2}",
+            r.id, s.task_mean_s, s.task_std_s, s.task_min_s, s.task_max_s
+        );
+    }
+    out
+}
+
+/// Figure 6/7: time series of connected workers + completed inferences.
+pub fn timeseries_csv(results: &[ExperimentResult]) -> String {
+    let mut out = String::from("exp,t,connected_workers,completed_inferences\n");
+    for r in results {
+        for p in &r.outcome.series {
+            let _ = writeln!(
+                out,
+                "{},{:.1},{},{}",
+                r.id, p.t, p.connected_workers, p.completed_inferences
+            );
+        }
+    }
+    out
+}
+
+/// Figure 6 headline: completed-inference gap between pv5s and pv5p.
+pub fn figure6_text(results: &[ExperimentResult]) -> String {
+    let mut out = String::new();
+    let get = |id: &str| results.iter().find(|r| r.id == id);
+    if let (Some(s), Some(p)) = (get("pv5s"), get("pv5p")) {
+        let cs = s.outcome.summary.completed_inferences;
+        let cp = p.outcome.summary.completed_inferences;
+        let _ = writeln!(out, "pv5s (pervasive, B=100):  {cs} inferences completed");
+        let _ = writeln!(out, "pv5p (partial,   B=1000): {cp} inferences completed");
+        let _ = writeln!(
+            out,
+            "gap: {} inferences ({:+.1}% more work done by pervasive)",
+            cs as i64 - cp as i64,
+            (cs as f64 / cp as f64 - 1.0) * 100.0
+        );
+        let _ = writeln!(
+            out,
+            "evicted in-flight work: pv5s={} pv5p={}",
+            s.outcome.summary.evicted_inferences,
+            p.outcome.summary.evicted_inferences
+        );
+    }
+    out
+}
+
+/// Figure 7 text: per-run resilience summary.
+pub fn figure7_text(results: &[ExperimentResult]) -> String {
+    let mut out = String::new();
+    for r in results {
+        let s = &r.outcome.summary;
+        let _ = writeln!(
+            out,
+            "{:<10} exec={:>8.1}s avg_workers={:>6.1} evictions={:>4} completed={}",
+            r.id, s.exec_time_s, s.avg_workers, s.evictions, s.completed_inferences
+        );
+    }
+    out
+}
+
+/// Headline claims (§1/§6): % reduction vs the pv0 baseline, and the
+/// inattentive-scaling degradation.
+pub fn headline_text(results: &[ExperimentResult]) -> String {
+    let mut out = String::new();
+    let time = |id: &str| {
+        results
+            .iter()
+            .find(|r| r.id == id)
+            .map(|r| r.exec_time_s)
+            .unwrap_or(f64::NAN)
+    };
+    let pv0 = time("pv0");
+    let best = results
+        .iter()
+        .filter(|r| r.id != "pv0")
+        .min_by(|a, b| a.exec_time_s.partial_cmp(&b.exec_time_s).unwrap());
+    if let Some(best) = best {
+        let _ = writeln!(
+            out,
+            "baseline pv0 (dedicated A10): {:.0}s ({:.1}h)",
+            pv0,
+            pv0 / 3600.0
+        );
+        let _ = writeln!(
+            out,
+            "best opportunistic run {}: {:.0}s ({:.1}min) → {:.1}% reduction \
+             (paper: 98.1%, 40.9ks → 783s)",
+            best.id,
+            best.exec_time_s,
+            best.exec_time_s / 60.0,
+            (1.0 - best.exec_time_s / pv0) * 100.0
+        );
+    }
+    let worst = time("pv3_1");
+    let _ = writeln!(
+        out,
+        "inattentive scaling pv3_1: {:.0}s → {:+.1}% vs baseline \
+         (paper: +245.3%, 40.9ks → 141.1ks)",
+        worst,
+        (worst / pv0 - 1.0) * 100.0
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_contains_all_models_and_total() {
+        let t = table1();
+        assert!(t.contains("NVIDIA A10"));
+        assert!(t.contains("NVIDIA H100 80GB HBM3"));
+        assert!(t.contains("567"));
+    }
+
+    #[test]
+    fn write_result_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "pcm-test-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let p = write_result_file(&dir, "x.csv", "a,b\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "a,b\n1,2\n");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

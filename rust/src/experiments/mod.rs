@@ -1,0 +1,16 @@
+//! Experiment harness: builders + runners for every table and figure in
+//! the paper's evaluation (§6).
+//!
+//! * [`specs`] — the 21 experiment configurations of Figure 4 (pv0…pv6)
+//!   plus drain (Figure 6 / pv5) and diurnal (Figure 7 / pv6) scenarios.
+//! * [`runner`] — executes specs through the simulated driver.
+//! * [`figures`] — renders each figure/table as text + CSV into
+//!   `results/` (the artifacts EXPERIMENTS.md references).
+
+pub mod ablations;
+pub mod figures;
+pub mod runner;
+pub mod specs;
+
+pub use runner::{run_all, run_one};
+pub use specs::ExperimentSpec;

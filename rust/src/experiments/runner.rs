@@ -1,0 +1,59 @@
+//! Spec execution: build → simulate → summarize.
+
+use crate::coordinator::{SimDriver, SimOutcome};
+
+use super::specs::ExperimentSpec;
+
+/// Figure-4-style result row (plus the raw outcome for detail figures).
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub id: String,
+    pub policy: &'static str,
+    pub batch_size: u64,
+    pub exec_time_s: f64,
+    pub avg_workers: f64,
+    pub outcome: SimOutcome,
+}
+
+/// Run one experiment at `seed`.
+pub fn run_one(spec: &ExperimentSpec, seed: u64) -> ExperimentResult {
+    let cfg = spec.build(seed);
+    let outcome = SimDriver::new(cfg).run();
+    ExperimentResult {
+        id: outcome.summary.id.clone(),
+        policy: outcome.summary.policy,
+        batch_size: outcome.summary.batch_size,
+        exec_time_s: outcome.summary.exec_time_s,
+        avg_workers: outcome.summary.avg_workers,
+        outcome,
+    }
+}
+
+/// Run a spec list (threaded — each experiment is independent).
+pub fn run_all(specs: &[ExperimentSpec], seed: u64) -> Vec<ExperimentResult> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|spec| {
+                let spec = spec.clone();
+                scope.spawn(move || run_one(&spec, seed))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("run")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::experiments::specs::spec_by_id;
+
+    #[test]
+    fn run_one_smoke_small() {
+        // Shrink pv4_100 to a fast smoke size via a custom spec build.
+        let spec = spec_by_id("pv4_100").unwrap();
+        let mut cfg = spec.build(1);
+        cfg.total_inferences = 1_000;
+        let out = crate::coordinator::SimDriver::new(cfg).run();
+        assert_eq!(out.summary.completed_inferences, 1_000);
+    }
+}

@@ -1,0 +1,288 @@
+//! The paper's 21 experiments (Figure 4) and the scenario builders behind
+//! Figures 5–7 and Table 2.
+//!
+//! Experiment id glossary (§6.3):
+//!
+//! | id        | pool        | policy    | batch | scenario            |
+//! |-----------|-------------|-----------|-------|---------------------|
+//! | pv0       | 1×A10       | pervasive | 100   | dedicated baseline  |
+//! | pv1       | 20 mixed    | none      | 100   | naive scaling       |
+//! | pv2       | 20 mixed    | partial   | 100   | partial context     |
+//! | pv3_B     | 20 mixed    | partial   | B     | batch sweep         |
+//! | pv4_B     | 20 mixed    | pervasive | B     | batch sweep         |
+//! | pv5p/pv5s | 20 → drain  | part/perv | 1k/100| busy-cluster drain  |
+//! | pv6_*     | full cluster| pervasive | 100   | diurnal, capped 64  |
+//! | pv6       | full cluster| pervasive | 100   | quiet day, ≤186     |
+
+use crate::cluster::node::{full_cluster, pool_20_mixed, pool_single_a10};
+use crate::cluster::{GpuModel, LoadTrace};
+use crate::coordinator::factory::FactoryPolicy;
+use crate::coordinator::{ContextPolicy, SimConfig};
+use crate::util::Rng;
+
+/// A named, seedable experiment recipe.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub id: &'static str,
+    builder: fn(u64) -> SimConfig,
+}
+
+impl ExperimentSpec {
+    pub fn build(&self, seed: u64) -> SimConfig {
+        (self.builder)(seed)
+    }
+}
+
+/// Batch sizes of the pv3/pv4 sweeps (§6.3 Efforts 3–4).
+pub const SWEEP_BATCHES: [u64; 5] = [1, 100, 1_000, 3_000, 7_500];
+
+fn base_20(
+    id: &str,
+    policy: ContextPolicy,
+    batch: u64,
+    seed: u64,
+) -> SimConfig {
+    SimConfig::new(id, policy, batch, pool_20_mixed(), LoadTrace::constant(20), seed)
+}
+
+fn pv0(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        "pv0",
+        ContextPolicy::Pervasive,
+        100,
+        pool_single_a10(),
+        LoadTrace::constant(1),
+        seed,
+    );
+    cfg.start_gate_fraction = 1.0;
+    cfg
+}
+
+fn pv1(seed: u64) -> SimConfig {
+    base_20("pv1", ContextPolicy::None, 100, seed)
+}
+
+fn pv2(seed: u64) -> SimConfig {
+    base_20("pv2", ContextPolicy::Partial, 100, seed)
+}
+
+macro_rules! sweep_fn {
+    ($name:ident, $id:literal, $policy:expr, $batch:literal) => {
+        fn $name(seed: u64) -> SimConfig {
+            base_20($id, $policy, $batch, seed)
+        }
+    };
+}
+
+sweep_fn!(pv3_1, "pv3_1", ContextPolicy::Partial, 1);
+sweep_fn!(pv3_100, "pv3_100", ContextPolicy::Partial, 100);
+sweep_fn!(pv3_1k, "pv3_1k", ContextPolicy::Partial, 1_000);
+sweep_fn!(pv3_3k, "pv3_3k", ContextPolicy::Partial, 3_000);
+sweep_fn!(pv3_7_5k, "pv3_7.5k", ContextPolicy::Partial, 7_500);
+sweep_fn!(pv4_1, "pv4_1", ContextPolicy::Pervasive, 1);
+sweep_fn!(pv4_100, "pv4_100", ContextPolicy::Pervasive, 100);
+sweep_fn!(pv4_1k, "pv4_1k", ContextPolicy::Pervasive, 1_000);
+sweep_fn!(pv4_3k, "pv4_3k", ContextPolicy::Pervasive, 3_000);
+sweep_fn!(pv4_7_5k, "pv4_7.5k", ContextPolicy::Pervasive, 7_500);
+
+/// pv5 drain trace: 15 undisturbed minutes (after the start gate), then
+/// 1 GPU/min, A10s reclaimed first (§6.3 Effort 5).
+fn pv5_config(id: &'static str, policy: ContextPolicy, batch: u64, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        id,
+        policy,
+        batch,
+        pool_20_mixed(),
+        // Gate opens ~20-30 s in; give the pool 15 min from then.
+        LoadTrace::drain(20, 950.0, 60.0),
+        seed,
+    );
+    cfg.reclaim_priority = vec![GpuModel::A10, GpuModel::TitanXPascal];
+    cfg
+}
+
+fn pv5p(seed: u64) -> SimConfig {
+    pv5_config("pv5p", ContextPolicy::Partial, 1_000, seed)
+}
+
+fn pv5s(seed: u64) -> SimConfig {
+    pv5_config("pv5s", ContextPolicy::Pervasive, 100, seed)
+}
+
+/// pv6 family: unrestricted scaling on the full 567-GPU cluster with
+/// diurnal opportunistic availability (§6.3 Effort 6). The time-of-day
+/// suffix sets where on the day-curve the run starts; the busy-day runs
+/// see 11–64 GPUs, the quiet-day run (plain `pv6`) up to 186.
+fn pv6_at(
+    id: &'static str,
+    start_hour: f64,
+    lo: u32,
+    hi: u32,
+    seed: u64,
+) -> SimConfig {
+    let mut trace_rng = Rng::new(seed ^ (start_hour.to_bits()));
+    let trace = LoadTrace::diurnal(
+        start_hour,
+        12.0 * 3600.0,
+        60.0,
+        lo,
+        hi,
+        &mut trace_rng,
+    );
+    let mut cfg = SimConfig::new(
+        id,
+        ContextPolicy::Pervasive,
+        100,
+        full_cluster(),
+        trace,
+        seed,
+    );
+    cfg.factory = FactoryPolicy { max_workers: None, cap_to_ready_tasks: true };
+    // Unrestricted runs start as soon as resources trickle in.
+    cfg.start_gate_fraction = 0.0;
+    cfg
+}
+
+fn pv6_10a(seed: u64) -> SimConfig {
+    pv6_at("pv6_10a", 10.0, 11, 64, seed)
+}
+fn pv6_1p(seed: u64) -> SimConfig {
+    pv6_at("pv6_1p", 13.0, 11, 64, seed)
+}
+fn pv6_2p(seed: u64) -> SimConfig {
+    pv6_at("pv6_2p", 14.0, 11, 64, seed)
+}
+fn pv6_6p(seed: u64) -> SimConfig {
+    pv6_at("pv6_6p", 18.0, 11, 64, seed)
+}
+fn pv6_11p(seed: u64) -> SimConfig {
+    pv6_at("pv6_11p", 23.0, 11, 64, seed)
+}
+fn pv6(seed: u64) -> SimConfig {
+    // A different, less busy day: up to 186 opportunistic GPUs (§6.2).
+    pv6_at("pv6", 14.0, 100, 186, seed)
+}
+
+/// All 21 experiments of Figure 4, in the paper's left-to-right order.
+pub fn figure4_specs() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec { id: "pv0", builder: pv0 },
+        ExperimentSpec { id: "pv1", builder: pv1 },
+        ExperimentSpec { id: "pv2", builder: pv2 },
+        ExperimentSpec { id: "pv3_1", builder: pv3_1 },
+        ExperimentSpec { id: "pv3_100", builder: pv3_100 },
+        ExperimentSpec { id: "pv3_1k", builder: pv3_1k },
+        ExperimentSpec { id: "pv3_3k", builder: pv3_3k },
+        ExperimentSpec { id: "pv3_7.5k", builder: pv3_7_5k },
+        ExperimentSpec { id: "pv4_1", builder: pv4_1 },
+        ExperimentSpec { id: "pv4_100", builder: pv4_100 },
+        ExperimentSpec { id: "pv4_1k", builder: pv4_1k },
+        ExperimentSpec { id: "pv4_3k", builder: pv4_3k },
+        ExperimentSpec { id: "pv4_7.5k", builder: pv4_7_5k },
+        ExperimentSpec { id: "pv5p", builder: pv5p },
+        ExperimentSpec { id: "pv5s", builder: pv5s },
+        ExperimentSpec { id: "pv6_10a", builder: pv6_10a },
+        ExperimentSpec { id: "pv6_1p", builder: pv6_1p },
+        ExperimentSpec { id: "pv6_2p", builder: pv6_2p },
+        ExperimentSpec { id: "pv6_6p", builder: pv6_6p },
+        ExperimentSpec { id: "pv6_11p", builder: pv6_11p },
+        ExperimentSpec { id: "pv6", builder: pv6 },
+    ]
+}
+
+/// The four runs behind Figure 5 / Table 2.
+pub fn figure5_specs() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec { id: "pv3_1", builder: pv3_1 },
+        ExperimentSpec { id: "pv4_1", builder: pv4_1 },
+        ExperimentSpec { id: "pv3_100", builder: pv3_100 },
+        ExperimentSpec { id: "pv4_100", builder: pv4_100 },
+    ]
+}
+
+/// The drain pair behind Figure 6.
+pub fn figure6_specs() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec { id: "pv5p", builder: pv5p },
+        ExperimentSpec { id: "pv5s", builder: pv5s },
+    ]
+}
+
+/// The three time-series runs plotted in Figure 7.
+pub fn figure7_specs() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec { id: "pv6_10a", builder: pv6_10a },
+        ExperimentSpec { id: "pv6_11p", builder: pv6_11p },
+        ExperimentSpec { id: "pv6", builder: pv6 },
+    ]
+}
+
+/// Find one spec by id.
+pub fn spec_by_id(id: &str) -> Option<ExperimentSpec> {
+    figure4_specs().into_iter().find(|s| s.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_one_experiments() {
+        assert_eq!(figure4_specs().len(), 21);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let specs = figure4_specs();
+        let mut ids: Vec<&str> = specs.iter().map(|s| s.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 21);
+    }
+
+    #[test]
+    fn builders_match_ids_and_paper_parameters() {
+        for spec in figure4_specs() {
+            let cfg = spec.build(0);
+            assert_eq!(cfg.name, spec.id);
+            assert_eq!(cfg.total_inferences, 150_000);
+        }
+        let pv5s = spec_by_id("pv5s").unwrap().build(0);
+        assert_eq!(pv5s.policy, ContextPolicy::Pervasive);
+        assert_eq!(pv5s.batch_size, 100);
+        assert_eq!(pv5s.reclaim_priority[0], GpuModel::A10);
+        let pv5p = spec_by_id("pv5p").unwrap().build(0);
+        assert_eq!(pv5p.policy, ContextPolicy::Partial);
+        assert_eq!(pv5p.batch_size, 1_000);
+    }
+
+    #[test]
+    fn pv6_pools_are_full_cluster() {
+        let cfg = spec_by_id("pv6").unwrap().build(0);
+        assert_eq!(cfg.nodes.len(), 567);
+        assert_eq!(cfg.trace.max_target(), 186);
+        let busy = spec_by_id("pv6_11p").unwrap().build(0);
+        assert!(busy.trace.max_target() <= 64);
+    }
+
+    #[test]
+    fn sweep_ids_cover_batches() {
+        for b in SWEEP_BATCHES {
+            let suffix = match b {
+                1 => "1",
+                100 => "100",
+                1_000 => "1k",
+                3_000 => "3k",
+                7_500 => "7.5k",
+                _ => unreachable!(),
+            };
+            for prefix in ["pv3", "pv4"] {
+                let id = format!("{prefix}_{suffix}");
+                let spec = spec_by_id(&id).unwrap_or_else(|| {
+                    panic!("missing spec {id}")
+                });
+                assert_eq!(spec.build(0).batch_size, b);
+            }
+        }
+    }
+}

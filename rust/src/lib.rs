@@ -1,0 +1,54 @@
+//! # pcm — Pervasive Context Management
+//!
+//! A reproduction of *"Scaling Up Throughput-oriented LLM Inference
+//! Applications on Heterogeneous Opportunistic GPU Clusters with Pervasive
+//! Context Management"* (Phung & Thain, CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate is organized by the paper's own structure:
+//!
+//! * [`coordinator`] — the paper's contribution: a TaskVine-style
+//!   throughput-oriented scheduler with **pervasive context management**
+//!   (context recipes, library processes, peer-transfer spanning trees,
+//!   eviction-tolerant requeue, worker-sizing and batch-size policies).
+//! * [`cluster`] — the substrate the paper ran on, rebuilt: an
+//!   opportunistic heterogeneous GPU cluster (HTCondor-style backfill,
+//!   evictions, diurnal load traces, shared-filesystem contention).
+//! * [`simulation`] — deterministic discrete-event engine driving
+//!   full-scale experiments (150 k inferences, 186 GPUs) in seconds.
+//! * [`runtime`] — the PJRT side: loads AOT-compiled HLO (JAX + Pallas,
+//!   lowered at build time by `python/compile/aot.py`) and executes real
+//!   inference from the Rust hot path. Python never runs at request time.
+//! * [`live`] — tokio-based live mode: the same coordinator code driving
+//!   real PJRT executions on emulated heterogeneous workers.
+//! * [`app`] — the paper's evaluation application: *Prompt-for-Fact*
+//!   (PfF) optimal-prompt search over a FEVER-like fact-verification
+//!   dataset.
+//! * [`experiments`] — builders + runners for every table and figure in
+//!   the paper's evaluation (Table 1/2, Figures 4–7, headline claims).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pcm::experiments::{specs, runner};
+//!
+//! // Regenerate the paper's Figure 4 (all 21 experiments) in simulation:
+//! let results = runner::run_all(&specs::figure4_specs(), 42);
+//! for r in &results {
+//!     println!("{:<10} workers≈{:>6.1} exec={:>9.1}s", r.id, r.avg_workers, r.exec_time_s);
+//! }
+//! ```
+//!
+//! For live PJRT serving see `examples/fact_verification.rs`.
+
+pub mod app;
+pub mod cluster;
+pub mod coordinator;
+pub mod experiments;
+pub mod live;
+pub mod runtime;
+pub mod simulation;
+pub mod util;
+
+/// Crate-wide result type (library code reports rich errors via `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,243 @@
+//! Live driver: the Scheduler state machine over real worker threads.
+//!
+//! The same dispatch/phase/complete protocol as the simulated driver,
+//! with wall-clock time and real work. Used by
+//! `examples/fact_verification.rs` (the end-to-end driver recorded in
+//! EXPERIMENTS.md) and the live integration tests.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::app::{AccuracyReport, InferenceWorkload, PffApp};
+use crate::cluster::{GpuModel, Node};
+use crate::coordinator::{
+    Batcher, ContextPolicy, ContextRecipe, Scheduler, TaskRecord,
+    TransferPlanner,
+};
+use crate::runtime::Manifest;
+use crate::util::Summary;
+use crate::Result;
+
+use super::worker::{LiveWorker, WorkOrder, WorkerMsg};
+
+/// Live-run configuration.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    pub profile: String,
+    pub policy: ContextPolicy,
+    pub batch_size: u64,
+    pub total_inferences: u64,
+    /// Worker speed multipliers (1.0 = full speed); length = worker count.
+    pub worker_speeds: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self {
+            profile: "tiny".to_string(),
+            policy: ContextPolicy::Pervasive,
+            batch_size: 16,
+            total_inferences: 64,
+            worker_speeds: vec![1.0, 1.0],
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a live run.
+#[derive(Debug)]
+pub struct LiveOutcome {
+    pub wall_s: f64,
+    pub completed_inferences: u64,
+    pub throughput_inf_per_s: f64,
+    pub accuracy: AccuracyReport,
+    pub records: Vec<TaskRecord>,
+    /// Task latency stats (dispatch→result, seconds).
+    pub task_latency: Summary,
+}
+
+/// Orchestrates scheduler + live workers.
+pub struct LiveDriver {
+    cfg: LiveConfig,
+    manifest: Arc<Manifest>,
+    workload: Arc<InferenceWorkload>,
+}
+
+impl LiveDriver {
+    pub fn new(cfg: LiveConfig, manifest: Manifest) -> Self {
+        let workload = Arc::new(InferenceWorkload::new(
+            crate::app::FeverDataset::generate(cfg.total_inferences, cfg.seed),
+            crate::app::PromptTemplate::Direct,
+        ));
+        Self { cfg, manifest: Arc::new(manifest), workload }
+    }
+
+    pub fn workload(&self) -> &InferenceWorkload {
+        &self.workload
+    }
+
+    pub fn run(&self) -> Result<LiveOutcome> {
+        let profile = self.manifest.profile(&self.cfg.profile)?;
+        let weights_bytes = profile.weights.bytes;
+        let recipe = ContextRecipe::smolverify(0, weights_bytes);
+        let mut sched = Scheduler::new(
+            self.cfg.policy,
+            recipe,
+            TransferPlanner::new(3),
+        );
+        sched.submit_tasks(
+            Batcher::new(self.cfg.batch_size)
+                .split(self.cfg.total_inferences, 0, 0),
+        );
+
+        // Spin up worker threads.
+        let cache_root = std::env::temp_dir().join(format!(
+            "pcm-live-{}-{}",
+            std::process::id(),
+            self.cfg.seed
+        ));
+        let (result_tx, result_rx) = mpsc::channel::<WorkerMsg>();
+        let mut order_txs: HashMap<u32, mpsc::Sender<WorkOrder>> =
+            HashMap::new();
+        let mut joins = Vec::new();
+        for (i, &speed) in self.cfg.worker_speeds.iter().enumerate() {
+            // Register with the scheduler (GPU label ≈ speed class).
+            let gpu = if speed >= 1.0 {
+                GpuModel::A10
+            } else {
+                GpuModel::TitanXPascal
+            };
+            let wid = sched.worker_join(Node { id: i as u32, gpu }, 0.0);
+            let (tx, rx) = mpsc::channel::<WorkOrder>();
+            // ModelContext (PJRT handles) is !Send — build the worker
+            // inside its own thread from Send-able parts only.
+            let manifest = Arc::clone(&self.manifest);
+            let profile = self.cfg.profile.clone();
+            let workload = Arc::clone(&self.workload);
+            let root = cache_root.clone();
+            let out = result_tx.clone();
+            joins.push(std::thread::spawn(move || {
+                let w = LiveWorker::new(
+                    wid, speed, manifest, profile, workload, &root,
+                );
+                w.run(rx, out)
+            }));
+            order_txs.insert(wid, tx);
+        }
+        drop(result_tx);
+
+        let app = PffApp::new((*self.workload).clone());
+        let mut accuracy =
+            AccuracyReport::new(self.workload.template());
+        let t0 = Instant::now();
+        let mut dispatched_at: HashMap<u64, f64> = HashMap::new();
+        let mut latency = Summary::new();
+        let mut records = Vec::new();
+
+        // Initial dispatch.
+        let send_dispatches =
+            |sched: &mut Scheduler,
+             dispatched_at: &mut HashMap<u64, f64>| {
+                for d in sched.try_dispatch() {
+                    let (start, count) = {
+                        let meta = sched.task_meta(d.task).unwrap();
+                        // start is task.start; scheduler does not expose it —
+                        // recompute from batching (dense contiguous split).
+                        let start = d.task * self.cfg.batch_size;
+                        (start, meta.1)
+                    };
+                    dispatched_at
+                        .insert(d.task, t0.elapsed().as_secs_f64());
+                    order_txs[&d.worker]
+                        .send(WorkOrder {
+                            task: d.task,
+                            start,
+                            count,
+                            phases: d.phases,
+                        })
+                        .expect("worker alive");
+                }
+            };
+        send_dispatches(&mut sched, &mut dispatched_at);
+
+        // Event loop.
+        while !sched.all_done() {
+            let msg = result_rx.recv().expect("workers alive");
+            match msg {
+                WorkerMsg::PhaseDone { task, phase, .. } => {
+                    sched.phase_done(task, phase);
+                }
+                WorkerMsg::TaskDone {
+                    worker,
+                    task,
+                    verdicts,
+                    context_s,
+                    execute_s,
+                } => {
+                    let now = t0.elapsed().as_secs_f64();
+                    let start = task * self.cfg.batch_size;
+                    accuracy.merge(&app.score_batch(start, &verdicts));
+                    let d_at =
+                        dispatched_at.remove(&task).unwrap_or(0.0);
+                    latency.add(now - d_at);
+                    let (attempts, inferences) =
+                        sched.task_meta(task).unwrap_or((1, 0));
+                    let gpu = sched
+                        .worker(worker)
+                        .map(|w| w.gpu())
+                        .unwrap_or(GpuModel::A10);
+                    let rec = TaskRecord {
+                        task,
+                        worker,
+                        gpu,
+                        attempts,
+                        inferences,
+                        dispatched_at: d_at,
+                        completed_at: now,
+                        context_s,
+                        execute_s,
+                    };
+                    records.push(rec.clone());
+                    sched.task_done(task, rec);
+                    send_dispatches(&mut sched, &mut dispatched_at);
+                }
+                WorkerMsg::Failed { task, error, .. } => {
+                    anyhow::bail!("live task {task} failed: {error}");
+                }
+            }
+        }
+
+        // Shut workers down.
+        drop(order_txs);
+        for j in joins {
+            let _ = j.join();
+        }
+        let _ = std::fs::remove_dir_all(&cache_root);
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let completed = sched.progress().completed_inferences;
+        Ok(LiveOutcome {
+            wall_s,
+            completed_inferences: completed,
+            throughput_inf_per_s: completed as f64 / wall_s,
+            accuracy,
+            records,
+            task_latency: latency,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = LiveConfig::default();
+        assert_eq!(c.profile, "tiny");
+        assert!(c.total_inferences % c.batch_size == 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Live mode: the same coordinator driving **real PJRT inference**.
+//!
+//! Workers are OS threads, each owning its own PJRT client and (under the
+//! pervasive policy) a resident [`crate::runtime::ModelContext`]. Phase
+//! plans come from the exact same [`crate::coordinator::Scheduler`] the
+//! simulator uses — but here `Stage` copies real artifact bytes into the
+//! worker's cache directory, `Materialize` compiles the HLO and uploads
+//! weights, and `Execute` runs real SmolVerify batches and scores them
+//! against the FEVER-like ground truth.
+//!
+//! This is the end-to-end proof that all three layers compose: Pallas
+//! kernels (L1) inside the JAX-lowered HLO (L2) served by the Rust
+//! coordinator (L3) with Python nowhere on the request path.
+
+pub mod driver;
+pub mod worker;
+
+pub use driver::{LiveConfig, LiveDriver, LiveOutcome};

@@ -1,0 +1,251 @@
+//! Live worker threads: execute phase plans with real I/O and inference.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Context as _;
+
+use crate::app::InferenceWorkload;
+use crate::coordinator::scheduler::PhaseKind;
+use crate::coordinator::{TaskId, WorkerId};
+use crate::runtime::engine::Verdict;
+use crate::runtime::{Manifest, ModelContext, WeightStore};
+use crate::Result;
+
+/// Work order from the driver to a worker thread.
+pub struct WorkOrder {
+    pub task: TaskId,
+    /// Inference range `[start, start+count)`.
+    pub start: u64,
+    pub count: u64,
+    pub phases: Vec<PhaseKind>,
+}
+
+/// Messages back to the driver.
+pub enum WorkerMsg {
+    PhaseDone {
+        worker: WorkerId,
+        task: TaskId,
+        phase: usize,
+        elapsed_s: f64,
+    },
+    TaskDone {
+        worker: WorkerId,
+        task: TaskId,
+        verdicts: Vec<Verdict>,
+        context_s: f64,
+        execute_s: f64,
+    },
+    Failed {
+        worker: WorkerId,
+        task: TaskId,
+        error: String,
+    },
+}
+
+/// Thread-side state of one live worker.
+pub struct LiveWorker {
+    pub id: WorkerId,
+    /// Emulated GPU speed (1.0 = A10-class; <1 adds proportional stall —
+    /// the live-mode stand-in for cluster heterogeneity).
+    pub speed: f64,
+    manifest: Arc<Manifest>,
+    profile: String,
+    workload: Arc<InferenceWorkload>,
+    cache_dir: PathBuf,
+    staged_weights: Option<WeightStore>,
+    context: Option<ModelContext>,
+}
+
+impl LiveWorker {
+    pub fn new(
+        id: WorkerId,
+        speed: f64,
+        manifest: Arc<Manifest>,
+        profile: String,
+        workload: Arc<InferenceWorkload>,
+        cache_root: &std::path::Path,
+    ) -> Self {
+        let cache_dir = cache_root.join(format!("worker-{id}"));
+        Self {
+            id,
+            speed,
+            manifest,
+            profile,
+            workload,
+            cache_dir,
+            staged_weights: None,
+            context: None,
+        }
+    }
+
+    /// Worker main loop: run orders until the channel closes.
+    pub fn run(mut self, orders: Receiver<WorkOrder>, out: Sender<WorkerMsg>) {
+        while let Ok(order) = orders.recv() {
+            if let Err(e) = self.run_order(&order, &out) {
+                let _ = out.send(WorkerMsg::Failed {
+                    worker: self.id,
+                    task: order.task,
+                    error: format!("{e:#}"),
+                });
+            }
+        }
+        // Cleanup the cache dir on exit.
+        let _ = std::fs::remove_dir_all(&self.cache_dir);
+    }
+
+    fn throttle(&self, real_elapsed_s: f64) {
+        if self.speed < 1.0 {
+            let extra = real_elapsed_s * (1.0 / self.speed - 1.0);
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                extra.min(5.0),
+            ));
+        }
+    }
+
+    fn run_order(
+        &mut self,
+        order: &WorkOrder,
+        out: &Sender<WorkerMsg>,
+    ) -> Result<()> {
+        let mut context_s = 0.0;
+        let mut execute_s = 0.0;
+        let mut verdicts = Vec::new();
+        for (idx, phase) in order.phases.iter().enumerate() {
+            let t0 = Instant::now();
+            match phase {
+                PhaseKind::Stage { component, .. } => {
+                    self.stage(*component)?;
+                }
+                PhaseKind::Sandbox => {
+                    std::fs::create_dir_all(self.cache_dir.join("sandbox"))?;
+                }
+                PhaseKind::Materialize { .. } => self.materialize()?,
+                PhaseKind::Execute { .. } => {
+                    verdicts = self.execute(order.start, order.count)?;
+                }
+                PhaseKind::Teardown => {
+                    // Drop the materialized context (partial policy keeps
+                    // staged files; the None policy plan re-stages anyway).
+                    self.context = None;
+                    let _ =
+                        std::fs::remove_dir_all(self.cache_dir.join("sandbox"));
+                }
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+            self.throttle(elapsed);
+            let total = if self.speed < 1.0 {
+                elapsed / self.speed.max(0.05)
+            } else {
+                elapsed
+            };
+            if phase.is_context_overhead() {
+                context_s += total;
+            } else {
+                execute_s += total;
+            }
+            out.send(WorkerMsg::PhaseDone {
+                worker: self.id,
+                task: order.task,
+                phase: idx,
+                elapsed_s: total,
+            })
+            .ok();
+        }
+        out.send(WorkerMsg::TaskDone {
+            worker: self.id,
+            task: order.task,
+            verdicts,
+            context_s,
+            execute_s,
+        })
+        .ok();
+        Ok(())
+    }
+
+    /// Stage a component: real byte copies from the artifacts directory
+    /// into this worker's cache (the SSD→node hop).
+    fn stage(&mut self, component: crate::coordinator::ComponentKind) -> Result<()> {
+        use crate::coordinator::ComponentKind::*;
+        std::fs::create_dir_all(&self.cache_dir)?;
+        let profile = self.manifest.profile(&self.profile)?;
+        match component {
+            ModelWeights => {
+                let src = self.manifest.path_of(&profile.weights.file);
+                let dst = self.cache_dir.join("weights.bin");
+                std::fs::copy(&src, &dst)
+                    .with_context(|| format!("staging {}", src.display()))?;
+                // A fresh copy invalidates any in-memory parse (the None
+                // policy re-pays the full staging cost every task).
+                self.staged_weights = None;
+            }
+            DepsPackage => {
+                // The HLO files play the role of the software package.
+                for b in &profile.batch_sizes {
+                    let f = profile.hlo_file(*b)?;
+                    std::fs::copy(
+                        self.manifest.path_of(f),
+                        self.cache_dir.join(f),
+                    )?;
+                }
+            }
+            FunctionCode | ContextCode | ContextInputs => {
+                // Small control-plane payloads: the manifest itself.
+                std::fs::copy(
+                    self.manifest.dir.join("manifest.json"),
+                    self.cache_dir.join("manifest.json"),
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize: parse staged weights, compile HLO, upload buffers.
+    fn materialize(&mut self) -> Result<()> {
+        let profile = self.manifest.profile(&self.profile)?.clone();
+        if self.staged_weights.is_none() {
+            let path = self.cache_dir.join("weights.bin");
+            // Fall back to the artifact file if the plan skipped staging
+            // (cached from an earlier task under Partial policy).
+            let path = if path.exists() {
+                path
+            } else {
+                self.manifest.path_of(&profile.weights.file)
+            };
+            self.staged_weights = Some(WeightStore::load(&profile, path)?);
+        }
+        let ctx = ModelContext::materialize_with_weights(
+            &self.manifest,
+            &profile,
+            &profile.batch_sizes,
+            self.staged_weights.as_ref().unwrap(),
+        )?;
+        self.context = Some(ctx);
+        Ok(())
+    }
+
+    /// Execute: real batched inference over the task's claim range.
+    fn execute(&mut self, start: u64, count: u64) -> Result<Vec<Verdict>> {
+        let ctx = self
+            .context
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("execute without context"))?;
+        let prompts = self.workload.prompt_batch(start, count);
+        let refs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
+        let logits = ctx.infer_texts(&refs)?;
+        Ok(logits
+            .iter()
+            .map(|row| {
+                let mut best = 0;
+                for (i, v) in row.iter().enumerate() {
+                    if *v > row[best] {
+                        best = i;
+                    }
+                }
+                Verdict::from_class(best)
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,346 @@
+//! `pcm` — the leader binary: experiments, live serving, inventory.
+//!
+//! Subcommands (hand-rolled parser; the offline build has no clap):
+//!
+//! ```text
+//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|headline|all>
+//!     [--seed N] [--scale F] [--results DIR]
+//! pcm run <pv-id> [--seed N] [--scale F]
+//! pcm serve [--profile tiny|small] [--policy pervasive|partial|none]
+//!     [--workers N] [--batch B] [--inferences N]
+//! pcm tune [--seed N] [--scale F]
+//! pcm inventory
+//! ```
+
+use pcm::coordinator::{ContextPolicy, SimDriver};
+use pcm::experiments::{figures, runner, specs};
+use pcm::live::{LiveConfig, LiveDriver};
+use pcm::runtime::manifest::default_artifacts_dir;
+use pcm::runtime::Manifest;
+use pcm::util::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny flag parser: `--key value` pairs after positional args.
+struct Flags<'a>(&'a [String]);
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.0.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn run(args: &[String]) -> pcm::Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = Flags(args);
+    match cmd {
+        "inventory" => {
+            print!("{}", figures::table1());
+            Ok(())
+        }
+        "experiment" => experiment(args.get(1).map(|s| s.as_str()), &flags),
+        "run" => {
+            let id = args
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: pcm run <pv-id>"))?;
+            run_single(id, &flags)
+        }
+        "serve" => serve(&flags),
+        "tune" => tune(&flags),
+        "ablate" => {
+            let seed = flags.get_u64("--seed", 42);
+            let inferences = flags.get_u64("--inferences", 5_000);
+            print!(
+                "{}",
+                pcm::experiments::ablations::report(seed, inferences)
+            );
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+pcm — pervasive context management for throughput-oriented LLM inference
+
+USAGE:
+  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|headline|all>
+      [--seed N] [--scale F] [--results DIR]
+  pcm run <pv-id>        run one experiment (e.g. pv4_100)
+  pcm serve              live PJRT serving demo
+      [--profile tiny|small] [--policy pervasive|partial|none]
+      [--workers N] [--batch B] [--inferences N]
+  pcm tune               adaptive batch-size search (Challenge #6)
+  pcm ablate             design-choice ablations (fan-out, eviction
+                         granularity, start gate, FS contention)
+  pcm inventory          Table 1 GPU catalog
+";
+
+/// Scale a config's workload (quick runs: `--scale 0.01` = 1.5k inferences).
+fn scaled(
+    spec: &specs::ExperimentSpec,
+    seed: u64,
+    scale: f64,
+) -> pcm::coordinator::SimConfig {
+    let mut cfg = spec.build(seed);
+    cfg.total_inferences =
+        ((cfg.total_inferences as f64 * scale).round() as u64).max(100);
+    cfg
+}
+
+fn run_specs_scaled(
+    list: Vec<specs::ExperimentSpec>,
+    seed: u64,
+    scale: f64,
+) -> Vec<runner::ExperimentResult> {
+    let cfgs: Vec<_> = list.iter().map(|s| scaled(s, seed, scale)).collect();
+    std::thread::scope(|scope| {
+        let hs: Vec<_> = cfgs
+            .into_iter()
+            .map(|cfg| scope.spawn(move || SimDriver::new(cfg).run()))
+            .collect();
+        hs.into_iter()
+            .zip(list.iter())
+            .map(|(h, spec)| {
+                let outcome = h.join().expect("sim run");
+                runner::ExperimentResult {
+                    id: spec.id.to_string(),
+                    policy: outcome.summary.policy,
+                    batch_size: outcome.summary.batch_size,
+                    exec_time_s: outcome.summary.exec_time_s,
+                    avg_workers: outcome.summary.avg_workers,
+                    outcome,
+                }
+            })
+            .collect::<Vec<_>>()
+    })
+}
+
+fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
+    let which = which.unwrap_or("all");
+    let seed = flags.get_u64("--seed", 42);
+    let scale = flags.get_f64("--scale", 1.0);
+    let results_dir = flags.get("--results").unwrap_or("results").to_string();
+
+    match which {
+        "table1" => print!("{}", figures::table1()),
+        "fig4" | "all" => {
+            eprintln!("running 21 experiments (seed={seed}, scale={scale})…");
+            let results = run_specs_scaled(specs::figure4_specs(), seed, scale);
+            print!("{}", figures::figure4_text(&results));
+            figures::write_result_file(
+                &results_dir,
+                "figure4.csv",
+                &figures::figure4_csv(&results),
+            )?;
+            print!("\n{}", figures::headline_text(&results));
+            if which == "all" {
+                let f5: Vec<_> = results
+                    .iter()
+                    .filter(|r| {
+                        ["pv3_1", "pv4_1", "pv3_100", "pv4_100"]
+                            .contains(&r.id.as_str())
+                    })
+                    .cloned()
+                    .collect();
+                print!("\nTable 2:\n{}", figures::table2(&f5));
+                figures::write_result_file(
+                    &results_dir,
+                    "figure5.csv",
+                    &figures::figure5_csv(&f5),
+                )?;
+                let f6: Vec<_> = results
+                    .iter()
+                    .filter(|r| ["pv5p", "pv5s"].contains(&r.id.as_str()))
+                    .cloned()
+                    .collect();
+                print!("\nFigure 6:\n{}", figures::figure6_text(&f6));
+                figures::write_result_file(
+                    &results_dir,
+                    "figure6_timeseries.csv",
+                    &figures::timeseries_csv(&f6),
+                )?;
+                let f7: Vec<_> = results
+                    .iter()
+                    .filter(|r| {
+                        ["pv6_10a", "pv6_11p", "pv6"].contains(&r.id.as_str())
+                    })
+                    .cloned()
+                    .collect();
+                print!("\nFigure 7:\n{}", figures::figure7_text(&f7));
+                figures::write_result_file(
+                    &results_dir,
+                    "figure7_timeseries.csv",
+                    &figures::timeseries_csv(&f7),
+                )?;
+            }
+            eprintln!("\nCSV written under {results_dir}/");
+        }
+        "fig5" | "table2" => {
+            let results = run_specs_scaled(specs::figure5_specs(), seed, scale);
+            if which == "fig5" {
+                print!("{}", figures::figure5_text(&results));
+                figures::write_result_file(
+                    &results_dir,
+                    "figure5.csv",
+                    &figures::figure5_csv(&results),
+                )?;
+            } else {
+                print!("{}", figures::table2(&results));
+            }
+        }
+        "fig6" => {
+            let results = run_specs_scaled(specs::figure6_specs(), seed, scale);
+            print!("{}", figures::figure6_text(&results));
+            figures::write_result_file(
+                &results_dir,
+                "figure6_timeseries.csv",
+                &figures::timeseries_csv(&results),
+            )?;
+        }
+        "fig7" => {
+            let results = run_specs_scaled(specs::figure7_specs(), seed, scale);
+            print!("{}", figures::figure7_text(&results));
+            figures::write_result_file(
+                &results_dir,
+                "figure7_timeseries.csv",
+                &figures::timeseries_csv(&results),
+            )?;
+        }
+        "headline" => {
+            let results = run_specs_scaled(specs::figure4_specs(), seed, scale);
+            print!("{}", figures::headline_text(&results));
+        }
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn run_single(id: &str, flags: &Flags) -> pcm::Result<()> {
+    let seed = flags.get_u64("--seed", 42);
+    let scale = flags.get_f64("--scale", 1.0);
+    let spec = specs::spec_by_id(id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment id {id:?}"))?;
+    let cfg = scaled(&spec, seed, scale);
+    let out = SimDriver::new(cfg).run();
+    let s = &out.summary;
+    println!(
+        "{}: exec={:.1}s ({}) avg_workers={:.1} completed={} evicted={} evictions={}",
+        s.id,
+        s.exec_time_s,
+        fmt_duration(s.exec_time_s),
+        s.avg_workers,
+        s.completed_inferences,
+        s.evicted_inferences,
+        s.evictions
+    );
+    println!(
+        "task exec time: mean={:.2}s std={:.2}s min={:.4}s max={:.2}s",
+        s.task_mean_s, s.task_std_s, s.task_min_s, s.task_max_s
+    );
+    Ok(())
+}
+
+fn serve(flags: &Flags) -> pcm::Result<()> {
+    let profile = flags.get("--profile").unwrap_or("tiny").to_string();
+    let policy = match flags.get("--policy").unwrap_or("pervasive") {
+        "none" => ContextPolicy::None,
+        "partial" => ContextPolicy::Partial,
+        _ => ContextPolicy::Pervasive,
+    };
+    let workers = flags.get_u64("--workers", 2) as usize;
+    let batch = flags.get_u64("--batch", 16);
+    let inferences = flags.get_u64("--inferences", 128);
+
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let cfg = LiveConfig {
+        profile,
+        policy,
+        batch_size: batch,
+        total_inferences: inferences,
+        worker_speeds: vec![1.0; workers],
+        seed: flags.get_u64("--seed", 0),
+    };
+    eprintln!(
+        "live serving: {} inferences, batch {}, {} workers, {} policy…",
+        inferences,
+        batch,
+        workers,
+        policy.as_str()
+    );
+    let out = LiveDriver::new(cfg, manifest).run()?;
+    println!(
+        "wall={:.2}s throughput={:.1} inf/s accuracy={:.3} (n={})",
+        out.wall_s,
+        out.throughput_inf_per_s,
+        out.accuracy.accuracy(),
+        out.accuracy.total
+    );
+    println!(
+        "task latency: p50={:.3}s p95={:.3}s max={:.3}s",
+        out.task_latency.percentile(50.0),
+        out.task_latency.percentile(95.0),
+        out.task_latency.max()
+    );
+    Ok(())
+}
+
+fn tune(flags: &Flags) -> pcm::Result<()> {
+    use pcm::cluster::node::pool_20_mixed;
+    use pcm::cluster::LoadTrace;
+    use pcm::coordinator::batcher::BatchTuner;
+    use pcm::coordinator::SimConfig;
+
+    let seed = flags.get_u64("--seed", 42);
+    let scale = flags.get_f64("--scale", 0.1);
+    let mut tuner = BatchTuner::paper_grid();
+    println!("adaptive batch-size search (pervasive, 20-GPU pool):");
+    while let Some(batch) = tuner.next_candidate() {
+        let mut cfg = SimConfig::new(
+            format!("tune_b{batch}"),
+            ContextPolicy::Pervasive,
+            batch,
+            pool_20_mixed(),
+            LoadTrace::constant(20),
+            seed,
+        );
+        cfg.total_inferences =
+            ((150_000.0 * scale).round() as u64).max(batch.max(100));
+        let out = SimDriver::new(cfg).run();
+        let tp = out.summary.completed_inferences as f64
+            / out.summary.exec_time_s;
+        println!("  B={batch:<6} throughput={tp:.1} inf/s");
+        tuner.observe(batch, tp);
+    }
+    let (best, tp) = tuner.best().unwrap();
+    println!("best batch size: {best} ({tp:.1} inf/s)");
+    tuner.refine();
+    println!("refined candidates: {:?}", tuner.candidates());
+    Ok(())
+}

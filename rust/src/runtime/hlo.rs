@@ -1,0 +1,307 @@
+//! HLO-text introspection: validate artifacts without compiling them.
+//!
+//! The HLO text emitted by `aot.py` carries the full entry signature.
+//! This module extracts it so the runtime can cross-check an artifact
+//! against the manifest *before* paying PJRT compilation (useful for
+//! fast startup validation and for diagnosing a stale `artifacts/`
+//! directory after a model-config change).
+//!
+//! This is a narrow, purpose-built scanner — it understands exactly the
+//! constructs `aot.py` produces (`ENTRY ... = (...) -> ... { ... }`,
+//! `f32[...]`/`s32[...]` shapes), not the general HLO grammar.
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+/// One parameter (or result) shape in an HLO entry signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloShape {
+    /// Element type as spelled in HLO text (`f32`, `s32`, …).
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl HloShape {
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn parse(text: &str) -> Result<HloShape> {
+        let text = text.trim();
+        let open = text
+            .find('[')
+            .ok_or_else(|| anyhow!("shape without [: {text:?}"))?;
+        let close = text
+            .find(']')
+            .ok_or_else(|| anyhow!("shape without ]: {text:?}"))?;
+        let dtype = text[..open].trim().to_string();
+        if dtype.is_empty() {
+            bail!("empty dtype in {text:?}");
+        }
+        let inner = &text[open + 1..close];
+        let dims = if inner.trim().is_empty() {
+            Vec::new()
+        } else {
+            inner
+                .split(',')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad dim {d:?} in {text:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(HloShape { dtype, dims })
+    }
+}
+
+/// Parsed entry signature of an HLO module.
+#[derive(Debug, Clone)]
+pub struct HloSignature {
+    pub parameters: Vec<HloShape>,
+    pub results: Vec<HloShape>,
+}
+
+/// Strip the layout suffix from a shape string: `f32[2,3]{1,0}` → `f32[2,3]`.
+fn strip_layout(s: &str) -> &str {
+    match s.find('{') {
+        Some(i) => s[..i].trim(),
+        None => s.trim(),
+    }
+}
+
+/// Extract the ENTRY signature from HLO text.
+///
+/// The XLA text printer spells entry parameters as instructions inside
+/// the ENTRY block (`Arg_0.21 = f32[256,64]{1,0} parameter(0)`) and the
+/// result as the ROOT instruction (`ROOT tuple.1 = (f32[1,3]{1,0})
+/// tuple(...)`); this scans those.
+pub fn parse_entry_signature(hlo_text: &str) -> Result<HloSignature> {
+    let mut in_entry = false;
+    // parameter index → shape (parameters may print out of order).
+    let mut params: Vec<(usize, HloShape)> = Vec::new();
+    let mut results: Vec<HloShape> = Vec::new();
+
+    for line in hlo_text.lines() {
+        let trimmed = line.trim();
+        if trimmed.starts_with("ENTRY ") {
+            in_entry = true;
+            continue;
+        }
+        if !in_entry {
+            continue;
+        }
+        if trimmed == "}" {
+            break;
+        }
+        if let Some((lhs, rhs)) = trimmed.split_once(" = ") {
+            if let Some(idx_part) = rhs
+                .split_once(" parameter(")
+                .map(|(shape, rest)| (shape, rest))
+            {
+                let (shape_str, rest) = idx_part;
+                let idx: usize = rest
+                    .split(')')
+                    .next()
+                    .and_then(|s| s.trim().parse().ok())
+                    .ok_or_else(|| anyhow!("bad parameter index: {trimmed}"))?;
+                params.push((idx, HloShape::parse(strip_layout(shape_str))?));
+            } else if lhs.starts_with("ROOT") {
+                // `ROOT name = (shape, shape) tuple(...)` or
+                // `ROOT name = shape op(...)`.
+                let rhs = rhs.trim();
+                let type_str = if rhs.starts_with('(') {
+                    let close = rhs
+                        .find(')')
+                        .ok_or_else(|| anyhow!("unbalanced ROOT tuple"))?;
+                    &rhs[..=close]
+                } else {
+                    rhs.split_whitespace().next().unwrap_or(rhs)
+                };
+                if let Some(inner) =
+                    type_str.strip_prefix('(').and_then(|s| s.strip_suffix(')'))
+                {
+                    for part in split_top_level(inner) {
+                        results.push(HloShape::parse(strip_layout(&part))?);
+                    }
+                } else {
+                    results.push(HloShape::parse(strip_layout(type_str))?);
+                }
+            }
+        }
+    }
+
+    if !in_entry {
+        bail!("no ENTRY computation in HLO text");
+    }
+    if results.is_empty() {
+        bail!("ENTRY has no ROOT instruction");
+    }
+    params.sort_by_key(|(i, _)| *i);
+    for (want, (got, _)) in params.iter().enumerate() {
+        if *got != want {
+            bail!("parameter indices not dense: found {got}, expected {want}");
+        }
+    }
+    Ok(HloSignature {
+        parameters: params.into_iter().map(|(_, s)| s).collect(),
+        results,
+    })
+}
+
+/// Split on commas at paren/bracket depth zero.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '(' | '[' | '{' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ')' | ']' | '}' => {
+                depth -= 1;
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                if !cur.trim().is_empty() {
+                    out.push(cur.trim().to_string());
+                }
+                cur.clear();
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Validate one HLO artifact against the manifest profile: the entry must
+/// take every weight tensor (shape-exact, f32) followed by the `[batch,
+/// seq]` s32 token array, and return a 1-tuple of `[batch, n_classes]`
+/// f32 logits.
+pub fn validate_artifact(
+    hlo_text: &str,
+    profile: &super::manifest::ModelProfile,
+    batch: usize,
+) -> Result<()> {
+    let sig = parse_entry_signature(hlo_text)?;
+    let want_params = profile.params.len() + 1;
+    if sig.parameters.len() != want_params {
+        bail!(
+            "HLO has {} parameters, manifest expects {want_params}",
+            sig.parameters.len()
+        );
+    }
+    for (i, spec) in profile.params.iter().enumerate() {
+        let got = &sig.parameters[i];
+        if got.dtype != "f32" || got.dims != spec.shape {
+            bail!(
+                "parameter {i} ({}) mismatch: HLO {:?}{:?}, manifest {:?}",
+                spec.name,
+                got.dtype,
+                got.dims,
+                spec.shape
+            );
+        }
+    }
+    let tokens = sig.parameters.last().unwrap();
+    if tokens.dtype != "s32"
+        || tokens.dims != vec![batch, profile.config.seq_len]
+    {
+        bail!(
+            "token parameter mismatch: {:?}{:?}, want s32[{batch},{}]",
+            tokens.dtype,
+            tokens.dims,
+            profile.config.seq_len
+        );
+    }
+    if sig.results.len() != 1 {
+        bail!("expected 1-tuple result, got {}", sig.results.len());
+    }
+    let logits = &sig.results[0];
+    if logits.dims != vec![batch, profile.config.n_classes] {
+        bail!(
+            "logits shape {:?}, want [{batch},{}]",
+            logits.dims,
+            profile.config.n_classes
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+HloModule xla_computation, entry_computation_layout={...}
+
+ENTRY main.42 {
+  Arg_0.1 = f32[16,8]{1,0} parameter(0)
+  Arg_1.2 = f32[3]{0} parameter(1)
+  Arg_2.3 = s32[1,4]{1,0} parameter(2)
+  dot.5 = f32[1,3]{1,0} dot(Arg_0.1, Arg_1.2)
+  ROOT tuple.6 = (f32[1,3]{1,0}) tuple(dot.5)
+}
+";
+
+    #[test]
+    fn parses_signature() {
+        let sig = parse_entry_signature(SAMPLE).unwrap();
+        assert_eq!(sig.parameters.len(), 3);
+        assert_eq!(sig.parameters[0].dtype, "f32");
+        assert_eq!(sig.parameters[0].dims, vec![16, 8]);
+        assert_eq!(sig.parameters[2].dtype, "s32");
+        assert_eq!(sig.results.len(), 1);
+        assert_eq!(sig.results[0].dims, vec![1, 3]);
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        let s = HloShape::parse("f32[]").unwrap();
+        assert!(s.dims.is_empty());
+        assert_eq!(s.num_elements(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_entry_signature("no entry here").is_err());
+        assert!(HloShape::parse("nodims").is_err());
+        assert!(HloShape::parse("f32[1,x]").is_err());
+    }
+
+    #[test]
+    fn split_top_level_respects_nesting() {
+        let parts = split_top_level("a: f32[1,2], b: (f32[3], s32[4,5])");
+        assert_eq!(parts.len(), 2);
+        assert!(parts[1].contains("s32[4,5]"));
+    }
+
+    #[test]
+    fn validates_against_manifest() {
+        let m = crate::runtime::manifest::Manifest::from_json_str(
+            &crate::runtime::manifest::sample_manifest_json(),
+        )
+        .unwrap();
+        let p = m.profile("t").unwrap();
+        validate_artifact(SAMPLE, p, 1).unwrap();
+        // Wrong batch: rejected.
+        assert!(validate_artifact(SAMPLE, p, 4).is_err());
+    }
+
+    #[test]
+    fn catches_shape_drift() {
+        let m = crate::runtime::manifest::Manifest::from_json_str(
+            &crate::runtime::manifest::sample_manifest_json(),
+        )
+        .unwrap();
+        let mut p = m.profile("t").unwrap().clone();
+        p.params[0].shape = vec![999, 8]; // stale manifest
+        assert!(validate_artifact(SAMPLE, &p, 1).is_err());
+    }
+}

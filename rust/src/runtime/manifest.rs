@@ -1,0 +1,400 @@
+//! `artifacts/manifest.json` parsing — the Python↔Rust artifact contract.
+//!
+//! The manifest records, per model profile, the model config, the ordered
+//! parameter tensor specs (the `weights.bin` layout), the HLO file per
+//! static batch size, and content hashes. The Rust side never guesses
+//! shapes: everything comes from here. Parsed with the in-tree JSON
+//! parser (`util::json`) — the offline build has no serde.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+/// Model hyperparameters (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelConfigJson {
+    pub profile: String,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub eps: f64,
+}
+
+impl ModelConfigJson {
+    fn from_json(j: &Json) -> Result<Self> {
+        let us = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("config {k} not a number"))
+        };
+        Ok(Self {
+            profile: j
+                .req("profile")?
+                .as_str()
+                .ok_or_else(|| anyhow!("profile not a string"))?
+                .to_string(),
+            vocab_size: us("vocab_size")?,
+            seq_len: us("seq_len")?,
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            d_ff: us("d_ff")?,
+            n_classes: us("n_classes")?,
+            eps: j
+                .req("eps")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("eps not a number"))?,
+        })
+    }
+}
+
+/// One named parameter tensor in `weights.bin` order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsInfo {
+    pub file: String,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct HloInfo {
+    pub file: String,
+    pub sha256: String,
+}
+
+/// One model profile (tiny / small) in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub config: ModelConfigJson,
+    pub params: Vec<ParamSpec>,
+    pub num_params: usize,
+    pub weights: WeightsInfo,
+    pub batch_sizes: Vec<usize>,
+    /// batch size → HLO file info.
+    pub hlo: BTreeMap<usize, HloInfo>,
+    pub golden: String,
+}
+
+impl ModelProfile {
+    fn from_json(j: &Json) -> Result<Self> {
+        let config = ModelConfigJson::from_json(j.req("config")?)?;
+        let params = j
+            .req("params")?
+            .as_array()
+            .ok_or_else(|| anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_array()
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let w = j.req("weights")?;
+        let weights = WeightsInfo {
+            file: w.req("file")?.as_str().unwrap_or_default().to_string(),
+            sha256: w.req("sha256")?.as_str().unwrap_or_default().to_string(),
+            bytes: w
+                .req("bytes")?
+                .as_u64()
+                .ok_or_else(|| anyhow!("weights bytes"))?,
+        };
+        let batch_sizes: Vec<usize> = j
+            .req("batch_sizes")?
+            .as_array()
+            .ok_or_else(|| anyhow!("batch_sizes not an array"))?
+            .iter()
+            .filter_map(|b| b.as_usize())
+            .collect();
+        let mut hlo = BTreeMap::new();
+        for (k, v) in j
+            .req("hlo")?
+            .as_object()
+            .ok_or_else(|| anyhow!("hlo not an object"))?
+        {
+            let b: usize = k.parse().context("hlo batch key")?;
+            hlo.insert(
+                b,
+                HloInfo {
+                    file: v.req("file")?.as_str().unwrap_or_default().to_string(),
+                    sha256: v
+                        .req("sha256")?
+                        .as_str()
+                        .unwrap_or_default()
+                        .to_string(),
+                },
+            );
+        }
+        Ok(Self {
+            config,
+            params,
+            num_params: j
+                .req("num_params")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("num_params"))?,
+            weights,
+            batch_sizes,
+            hlo,
+            golden: j.req("golden")?.as_str().unwrap_or_default().to_string(),
+        })
+    }
+
+    /// The HLO file for a given static batch size.
+    pub fn hlo_file(&self, batch: usize) -> Result<&str> {
+        self.hlo
+            .get(&batch)
+            .map(|h| h.file.as_str())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no HLO artifact for batch size {batch} (have: {:?})",
+                    self.batch_sizes
+                )
+            })
+    }
+
+    /// Largest artifact batch size ≤ `want`, falling back to the smallest.
+    pub fn best_batch_le(&self, want: usize) -> usize {
+        let mut best = None;
+        for &b in &self.batch_sizes {
+            if b <= want && best.map_or(true, |cur| b > cur) {
+                best = Some(b);
+            }
+        }
+        best.unwrap_or_else(|| {
+            self.batch_sizes.iter().copied().min().unwrap_or(1)
+        })
+    }
+
+    /// Total parameter element count (must equal `num_params`).
+    pub fn param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.num_elements()).sum()
+    }
+}
+
+/// The whole manifest: all profiles emitted by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub seed: u64,
+    pub profiles: BTreeMap<String, ModelProfile>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut m = Self::from_json_str(&text)?;
+        m.dir = dir;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Parse manifest JSON (directory defaults to "."; used by tests).
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut profiles = BTreeMap::new();
+        for (name, pj) in j
+            .req("profiles")?
+            .as_object()
+            .ok_or_else(|| anyhow!("profiles not an object"))?
+        {
+            profiles.insert(
+                name.clone(),
+                ModelProfile::from_json(pj)
+                    .with_context(|| format!("profile {name}"))?,
+            );
+        }
+        Ok(Self {
+            version: j.req("version")?.as_u64().unwrap_or(0),
+            seed: j.req("seed")?.as_u64().unwrap_or(0),
+            profiles,
+            dir: PathBuf::from("."),
+        })
+    }
+
+    /// Structural sanity checks (shape bookkeeping, profile coherence).
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in &self.profiles {
+            if p.param_elements() != p.num_params {
+                bail!(
+                    "profile {name}: param elements {} != num_params {}",
+                    p.param_elements(),
+                    p.num_params
+                );
+            }
+            if p.weights.bytes != 4 * p.num_params as u64 {
+                bail!(
+                    "profile {name}: weights bytes {} != 4*{}",
+                    p.weights.bytes,
+                    p.num_params
+                );
+            }
+            if p.config.d_model % p.config.n_heads != 0 {
+                bail!("profile {name}: d_model % n_heads != 0");
+            }
+            for b in &p.batch_sizes {
+                if !p.hlo.contains_key(b) {
+                    bail!("profile {name}: missing HLO for b={b}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&ModelProfile> {
+        self.profiles.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown profile {name:?} (have: {:?})",
+                self.profiles.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+/// Locate the artifacts directory: `$PCM_ARTIFACTS` or walk up from cwd.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("PCM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn sample_manifest_json() -> String {
+    r#"{
+      "version": 2,
+      "seed": 0,
+      "profiles": {
+        "t": {
+          "config": {"profile":"t","vocab_size":16,"seq_len":4,
+            "d_model":8,"n_layers":1,"n_heads":2,"d_ff":16,
+            "n_classes":3,"eps":1e-6},
+          "params": [
+            {"name":"embed","shape":[16,8]},
+            {"name":"head_b","shape":[3]}
+          ],
+          "num_params": 131,
+          "weights": {"file":"w.bin","sha256":"00","bytes":524},
+          "batch_sizes": [1,4],
+          "hlo": {"1":{"file":"m1.hlo.txt","sha256":"00"},
+                  "4":{"file":"m4.hlo.txt","sha256":"00"}},
+          "golden": "golden_t.json"
+        }
+      }
+    }"#
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(json: &str) -> Manifest {
+        Manifest::from_json_str(json).unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = parse(&sample_manifest_json());
+        m.validate().unwrap();
+        let p = m.profile("t").unwrap();
+        assert_eq!(p.config.seq_len, 4);
+        assert_eq!(p.param_elements(), 131);
+        assert_eq!(p.config.eps, 1e-6);
+    }
+
+    #[test]
+    fn hlo_file_lookup() {
+        let m = parse(&sample_manifest_json());
+        let p = m.profile("t").unwrap();
+        assert_eq!(p.hlo_file(4).unwrap(), "m4.hlo.txt");
+        assert!(p.hlo_file(2).is_err());
+    }
+
+    #[test]
+    fn best_batch_le_picks_floor() {
+        let m = parse(&sample_manifest_json());
+        let p = m.profile("t").unwrap();
+        assert_eq!(p.best_batch_le(100), 4);
+        assert_eq!(p.best_batch_le(4), 4);
+        assert_eq!(p.best_batch_le(3), 1);
+        assert_eq!(p.best_batch_le(1), 1);
+        // Nothing ≤ 0: fall back to smallest artifact.
+        assert_eq!(p.best_batch_le(0), 1);
+    }
+
+    #[test]
+    fn unknown_profile_errors() {
+        let m = parse(&sample_manifest_json());
+        assert!(m.profile("nope").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_bytes() {
+        let mut m = parse(&sample_manifest_json());
+        m.profiles.get_mut("t").unwrap().weights.bytes = 3;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_param_mismatch() {
+        let mut m = parse(&sample_manifest_json());
+        m.profiles.get_mut("t").unwrap().num_params = 999;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn path_of_joins_dir() {
+        let mut m = parse(&sample_manifest_json());
+        m.dir = PathBuf::from("/x/y");
+        assert_eq!(m.path_of("w.bin"), PathBuf::from("/x/y/w.bin"));
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute inference.
+//!
+//! This is the only module that touches the `xla` crate. The build path
+//! (`make artifacts` → `python/compile/aot.py`) emits **HLO text** (never
+//! serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids), a raw
+//! `weights_{profile}.bin`, and a `manifest.json` describing both. This
+//! module stages the weights, compiles the HLO per static batch size, and
+//! serves logits from the coordinator hot path with Python nowhere in
+//! sight.
+//!
+//! The split between [`weights`] staging, [`engine::ModelContext`]
+//! materialization, and [`engine::InferenceEngine`] execution deliberately
+//! mirrors the paper's context lifecycle: *staging* is the SSD→node copy,
+//! *materialization* is the node→GPU load (here: PJRT compile + buffer
+//! upload), and the engine invocation is the per-task work that pervasive
+//! context management amortizes the first two across.
+
+pub mod engine;
+pub mod hlo;
+pub mod manifest;
+pub mod tokenizer;
+pub mod weights;
+
+pub use engine::{InferenceEngine, ModelContext};
+pub use manifest::{Manifest, ModelProfile};
+pub use tokenizer::HashTokenizer;
+pub use weights::WeightStore;

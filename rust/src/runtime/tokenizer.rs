@@ -1,0 +1,170 @@
+//! Request-path tokenizer — the Rust half of the Python parity contract.
+//!
+//! Implements *exactly* the algorithm in `python/compile/tokenizer.py`
+//! (FNV-1a word hashing into a fixed vocab; BOS/EOS framing; pad/truncate
+//! to `seq_len`). Parity is enforced by an integration test against
+//! `artifacts/tokenizer_fixture.json`.
+
+/// Reserved token ids (must match the Python constants).
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+pub const SEP_ID: u32 = 3;
+pub const CLS_SUPPORTED_ID: u32 = 4;
+pub const CLS_REFUTED_ID: u32 = 5;
+pub const CLS_NEI_ID: u32 = 6;
+pub const RESERVED: u32 = 8;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// 64-bit FNV-1a (same constants as the Python side).
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Lowercase and split on non-ASCII-alphanumeric boundaries.
+pub fn split_words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        // Match Python's `ch.isascii() and ch.isalnum()` after lowercasing.
+        let lowered = ch.to_lowercase().next().unwrap_or(ch);
+        if lowered.is_ascii_alphanumeric() {
+            cur.push(lowered);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Stateless deterministic tokenizer over a fixed-size vocab.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HashTokenizer {
+    pub vocab_size: u32,
+    pub seq_len: usize,
+}
+
+impl HashTokenizer {
+    pub fn new(vocab_size: u32, seq_len: usize) -> Self {
+        assert!(vocab_size > RESERVED, "vocab too small");
+        assert!(seq_len >= 2, "seq_len must fit BOS+EOS");
+        Self { vocab_size, seq_len }
+    }
+
+    /// Map one word to its vocab id.
+    pub fn word_id(&self, word: &str) -> u32 {
+        let span = (self.vocab_size - RESERVED) as u64;
+        RESERVED + (fnv1a64(word.as_bytes()) % span) as u32
+    }
+
+    /// BOS + word ids + EOS, padded/truncated to `seq_len`.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(self.seq_len);
+        ids.push(BOS_ID);
+        for w in split_words(text) {
+            if ids.len() >= self.seq_len - 1 {
+                break;
+            }
+            ids.push(self.word_id(&w));
+        }
+        ids.truncate(self.seq_len - 1);
+        ids.push(EOS_ID);
+        while ids.len() < self.seq_len {
+            ids.push(PAD_ID);
+        }
+        ids
+    }
+
+    /// Encode a batch into a flat row-major `[batch * seq_len]` i32 buffer
+    /// (the layout the PJRT literal wants). Short batches are padded with
+    /// all-PAD rows up to `batch` rows.
+    pub fn encode_batch_flat(&self, texts: &[&str], batch: usize) -> Vec<i32> {
+        assert!(texts.len() <= batch);
+        let mut flat = Vec::with_capacity(batch * self.seq_len);
+        for t in texts {
+            flat.extend(self.encode(t).into_iter().map(|x| x as i32));
+        }
+        flat.resize(batch * self.seq_len, PAD_ID as i32);
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Same vectors as python/tests/test_tokenizer.py.
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_F739_67E8);
+    }
+
+    #[test]
+    fn split_words_basic() {
+        assert_eq!(split_words("The quick fox"), vec!["the", "quick", "fox"]);
+        assert_eq!(split_words("a,b;c--d"), vec!["a", "b", "c", "d"]);
+        assert!(split_words("").is_empty());
+        assert!(split_words("  ,, ").is_empty());
+    }
+
+    #[test]
+    fn split_words_non_ascii_separates() {
+        assert_eq!(split_words("naïve"), vec!["na", "ve"]);
+    }
+
+    #[test]
+    fn encode_framing() {
+        let t = HashTokenizer::new(1024, 8);
+        let ids = t.encode("hi there");
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(ids[3], EOS_ID);
+        assert!(ids[4..].iter().all(|&i| i == PAD_ID));
+    }
+
+    #[test]
+    fn encode_truncation_keeps_eos() {
+        let t = HashTokenizer::new(1024, 8);
+        let long = "w ".repeat(100);
+        let ids = t.encode(&long);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(*ids.last().unwrap(), EOS_ID);
+    }
+
+    #[test]
+    fn word_ids_in_range() {
+        let t = HashTokenizer::new(64, 16);
+        for w in ["alpha", "beta", "1234", "x"] {
+            let id = t.word_id(w);
+            assert!((RESERVED..64).contains(&id));
+        }
+    }
+
+    #[test]
+    fn deterministic_and_case_insensitive() {
+        let t = HashTokenizer::new(1024, 32);
+        assert_eq!(t.encode("Hello World"), t.encode("hello world"));
+    }
+
+    #[test]
+    fn batch_flat_layout() {
+        let t = HashTokenizer::new(1024, 4);
+        let flat = t.encode_batch_flat(&["a"], 3);
+        assert_eq!(flat.len(), 12);
+        assert_eq!(flat[0], BOS_ID as i32);
+        // Rows 1..3 are all-PAD filler.
+        assert!(flat[4..].iter().all(|&x| x == PAD_ID as i32));
+    }
+}

@@ -1,0 +1,145 @@
+//! Weight staging: read `weights_{profile}.bin` into host tensors.
+//!
+//! This is the live-mode analogue of the paper's "stage the LLM's
+//! parameters to a compute node's SSD/memory" step — a real, measurable
+//! cost that the context manager amortizes. The file is raw little-endian
+//! f32 in `manifest.params` order; shapes come from the manifest, never
+//! from the file.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use super::manifest::ModelProfile;
+use crate::Result;
+
+/// One staged parameter tensor (host side).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// All parameters of one profile, staged into host memory.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub profile: String,
+    pub tensors: Vec<HostTensor>,
+}
+
+impl WeightStore {
+    /// Read the weights file for `profile` from `path`.
+    pub fn load(profile: &ModelProfile, path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("staging weights {}", path.display()))?;
+        Self::from_bytes(profile, &bytes)
+    }
+
+    /// Parse raw weight bytes (LE f32, spec order).
+    pub fn from_bytes(profile: &ModelProfile, bytes: &[u8]) -> Result<Self> {
+        let expect = 4 * profile.num_params;
+        if bytes.len() != expect {
+            return Err(anyhow!(
+                "weights size mismatch: got {} bytes, manifest says {expect}",
+                bytes.len()
+            ));
+        }
+        let mut tensors = Vec::with_capacity(profile.params.len());
+        let mut off = 0usize;
+        for spec in &profile.params {
+            let n = spec.num_elements();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += 4 * n;
+            tensors.push(HostTensor {
+                name: spec.name.clone(),
+                shape: spec.shape.clone(),
+                data,
+            });
+        }
+        debug_assert_eq!(off, bytes.len());
+        Ok(Self {
+            profile: profile.config.profile.clone(),
+            tensors,
+        })
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| 4 * t.data.len()).sum()
+    }
+
+    /// Basic numeric health check: everything finite.
+    pub fn check_finite(&self) -> Result<()> {
+        for t in &self.tensors {
+            if t.data.iter().any(|x| !x.is_finite()) {
+                return Err(anyhow!("non-finite values in tensor {}", t.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny_profile() -> ModelProfile {
+        let json = r#"{
+          "version": 2, "seed": 0,
+          "profiles": { "t": {
+            "config": {"profile":"t","vocab_size":4,"seq_len":4,"d_model":2,
+              "n_layers":1,"n_heads":1,"d_ff":4,"n_classes":3,"eps":1e-6},
+            "params": [
+              {"name":"a","shape":[2,2]},
+              {"name":"b","shape":[3]}
+            ],
+            "num_params": 7,
+            "weights": {"file":"w.bin","sha256":"00","bytes":28},
+            "batch_sizes": [1],
+            "hlo": {"1":{"file":"m.hlo.txt","sha256":"00"}},
+            "golden": "g.json"
+          }}}"#;
+        let m = Manifest::from_json_str(json).unwrap();
+        m.profile("t").unwrap().clone()
+    }
+
+    fn encode(vals: &[f32]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn parses_in_spec_order() {
+        let p = tiny_profile();
+        let bytes = encode(&[1., 2., 3., 4., 5., 6., 7.]);
+        let w = WeightStore::from_bytes(&p, &bytes).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.tensor("a").unwrap().data, vec![1., 2., 3., 4.]);
+        assert_eq!(w.tensor("b").unwrap().data, vec![5., 6., 7.]);
+        assert_eq!(w.total_bytes(), 28);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let p = tiny_profile();
+        assert!(WeightStore::from_bytes(&p, &encode(&[1., 2.])).is_err());
+    }
+
+    #[test]
+    fn finite_check() {
+        let p = tiny_profile();
+        let mut vals = vec![0.0f32; 7];
+        vals[3] = f32::NAN;
+        let w = WeightStore::from_bytes(&p, &encode(&vals)).unwrap();
+        assert!(w.check_finite().is_err());
+    }
+}

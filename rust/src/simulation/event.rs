@@ -1,0 +1,90 @@
+//! Simulation events and their total ordering.
+//!
+//! Events order by `(time, seq)`: `seq` is a monotone tie-breaker assigned
+//! at scheduling time so same-instant events fire in insertion order —
+//! without it, BinaryHeap tie order would be unspecified and determinism
+//! would silently die.
+
+use crate::cluster::NodeId;
+use crate::coordinator::{TaskId, WorkerId};
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// The cluster grants a backfill slot → a worker comes up on a node.
+    WorkerJoin { node: NodeId },
+    /// The cluster reclaims a node → the worker on it is evicted, its
+    /// running task killed without cleanup (the paper's Challenge #1).
+    WorkerEvict { worker: WorkerId },
+    /// A task finished all its phases on a worker.
+    TaskComplete { worker: WorkerId, task: TaskId },
+    /// A context-staging / materialization phase finished on a worker
+    /// (frees any peer-transfer slot it held).
+    PhaseComplete { worker: WorkerId, task: TaskId, phase: usize },
+    /// The factory daemon wakes up to reconcile the worker pool against
+    /// cluster availability.
+    FactoryTick,
+    /// Periodic metrics sample (connected workers, completed inferences).
+    MetricsTick,
+    /// Cluster load trace step (drives availability up or down).
+    TraceStep { step: usize },
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest event pops first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    fn ev(time: f64, seq: u64) -> Event {
+        Event { time, seq, kind: EventKind::FactoryTick }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = BinaryHeap::new();
+        h.push(ev(5.0, 0));
+        h.push(ev(1.0, 1));
+        h.push(ev(3.0, 2));
+        assert_eq!(h.pop().unwrap().time, 1.0);
+        assert_eq!(h.pop().unwrap().time, 3.0);
+        assert_eq!(h.pop().unwrap().time, 5.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_seq() {
+        let mut h = BinaryHeap::new();
+        h.push(ev(2.0, 7));
+        h.push(ev(2.0, 3));
+        h.push(ev(2.0, 5));
+        assert_eq!(h.pop().unwrap().seq, 3);
+        assert_eq!(h.pop().unwrap().seq, 5);
+        assert_eq!(h.pop().unwrap().seq, 7);
+    }
+}

@@ -1,0 +1,13 @@
+//! Deterministic discrete-event simulation engine.
+//!
+//! Drives the full-scale experiments (150 k inferences, up to 186
+//! opportunistic GPUs) in milliseconds of wall-clock. Determinism is a
+//! hard requirement: every figure in EXPERIMENTS.md regenerates
+//! bit-identically from its seed, so all stochastic inputs flow from
+//! [`crate::util::Rng`] streams owned by the engine's components.
+
+pub mod engine;
+pub mod event;
+
+pub use engine::{SimEngine, SimTime};
+pub use event::{Event, EventKind};

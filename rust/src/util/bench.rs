@@ -1,0 +1,108 @@
+//! Minimal benchmark harness (the offline crate set has no criterion).
+//!
+//! `cargo bench` targets are plain `main()` binaries using this module:
+//! warmup + N timed iterations, reporting min/median/mean like criterion's
+//! terse output. Deterministic workloads + medians keep the numbers
+//! stable enough for the EXPERIMENTS.md §Perf before/after log.
+
+use std::time::Instant;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12}",
+            self.name,
+            format_time(self.min_s),
+            format_time(self.median_s),
+            format_time(self.mean_s)
+        );
+    }
+}
+
+/// Pretty time formatting (s / ms / µs / ns).
+pub fn format_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Print the standard header row.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12}",
+        "benchmark", "min", "median", "mean"
+    );
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+/// `f` returns a value that is black-boxed to keep the optimizer honest.
+pub fn bench<T>(
+    name: impl Into<String>,
+    warmup: u32,
+    iters: u32,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.into(),
+        iters,
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+    };
+    result.report();
+    result
+}
+
+/// Optimizer barrier (std::hint::black_box re-export for stable use).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.min_s >= 0.0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(format_time(2.0), "2.000s");
+        assert_eq!(format_time(0.002), "2.000ms");
+        assert_eq!(format_time(2e-6), "2.000µs");
+        assert_eq!(format_time(2e-9), "2.0ns");
+    }
+}

@@ -1,0 +1,55 @@
+//! Small shared utilities: deterministic RNG, id generation, stats.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Format a byte count human-readably (GiB/MiB/KiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format seconds as `H:MM:SS` (sim-time pretty printer).
+pub fn fmt_duration(secs: f64) -> String {
+    let total = secs.max(0.0).round() as u64;
+    let h = total / 3600;
+    let m = (total % 3600) / 60;
+    let s = total % 60;
+    format!("{h}:{m:02}:{s:02}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_bytes(4 * 1024 * 1024 * 1024), "4.00 GiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.0), "0:00:00");
+        assert_eq!(fmt_duration(61.0), "0:01:01");
+        assert_eq!(fmt_duration(40_900.0), "11:21:40");
+        assert_eq!(fmt_duration(-5.0), "0:00:00");
+    }
+}

@@ -1,0 +1,147 @@
+//! Streaming summary statistics (mean / std / min / max / percentiles).
+//!
+//! Used for Table 2 (task execution-time statistics) and the metrics
+//! subsystem. Percentiles keep the raw samples; the experiments are small
+//! enough (≤150 k tasks) that exact percentiles are cheap.
+
+/// Collected sample summary.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator, 0 for n<2).
+    pub fn std_dev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var: f64 =
+            self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile by nearest-rank (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank =
+            ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Histogram over `[lo, hi)` with `bins` equal-width buckets; values
+    /// outside the range clamp to the edge buckets (used for Figure 5).
+    pub fn histogram(&self, lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+        assert!(bins > 0 && hi > lo);
+        let mut counts = vec![0usize; bins];
+        let width = (hi - lo) / bins as f64;
+        for &x in &self.samples {
+            let idx = ((x - lo) / width).floor();
+            let idx = (idx.max(0.0) as usize).min(bins - 1);
+            counts[idx] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(values: &[f64]) -> Summary {
+        let mut s = Summary::new();
+        for &v in values {
+            s.add(v);
+        }
+        s
+    }
+
+    #[test]
+    fn mean_std() {
+        let s = summary(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std_dev() - 2.13808993529939).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_max() {
+        let s = summary(&[3.0, -1.0, 7.5]);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 7.5);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std_dev(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = summary(&(1..=100).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_clamps_outliers() {
+        let s = summary(&[-5.0, 0.5, 1.5, 99.0]);
+        let h = s.histogram(0.0, 2.0, 2);
+        assert_eq!(h, vec![2, 2]); // -5→bin0, 0.5→bin0, 1.5→bin1, 99→bin1
+    }
+
+    #[test]
+    fn single_sample_std_zero() {
+        let s = summary(&[42.0]);
+        assert_eq!(s.std_dev(), 0.0);
+        assert_eq!(s.mean(), 42.0);
+    }
+}

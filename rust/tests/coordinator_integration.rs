@@ -1,0 +1,220 @@
+//! Coordinator integration: full simulated runs across policies, batch
+//! sizes, eviction scenarios, and pool shapes — the cross-module behavior
+//! the paper's claims rest on (all scaled down for test speed).
+
+use pcm::cluster::node::{full_cluster, pool_20_mixed};
+use pcm::cluster::{GpuModel, LoadTrace};
+use pcm::coordinator::{ContextPolicy, SimConfig, SimDriver};
+use pcm::util::Rng;
+
+fn cfg(
+    name: &str,
+    policy: ContextPolicy,
+    batch: u64,
+    inferences: u64,
+) -> SimConfig {
+    let mut c = SimConfig::new(
+        name,
+        policy,
+        batch,
+        pool_20_mixed(),
+        LoadTrace::constant(20),
+        11,
+    );
+    c.total_inferences = inferences;
+    c
+}
+
+#[test]
+fn all_policies_complete_the_workload() {
+    for policy in [
+        ContextPolicy::None,
+        ContextPolicy::Partial,
+        ContextPolicy::Pervasive,
+    ] {
+        let out = SimDriver::new(cfg("t", policy, 100, 3_000)).run();
+        assert_eq!(out.summary.completed_inferences, 3_000, "{policy:?}");
+        assert_eq!(out.records.len(), 30, "{policy:?}");
+    }
+}
+
+#[test]
+fn batch_sweep_pervasive_flattens_overhead() {
+    // Effort 4's key observation: with pervasive context management the
+    // batch-size penalty collapses — B=10 and B=100 land close together,
+    // while partial context pays brutally at tiny batches. (B is kept ≤
+    // inferences/pool so straggling doesn't confound the comparison.)
+    let perv_small =
+        SimDriver::new(cfg("p10", ContextPolicy::Pervasive, 10, 10_000)).run();
+    let perv_mid =
+        SimDriver::new(cfg("p100", ContextPolicy::Pervasive, 100, 10_000))
+            .run();
+    let part_small =
+        SimDriver::new(cfg("q10", ContextPolicy::Partial, 10, 10_000)).run();
+    let ratio_perv =
+        perv_small.summary.exec_time_s / perv_mid.summary.exec_time_s;
+    let ratio_part =
+        part_small.summary.exec_time_s / perv_mid.summary.exec_time_s;
+    assert!(ratio_perv < 1.5, "pervasive small-batch penalty {ratio_perv}");
+    assert!(ratio_part > 2.0, "partial small-batch penalty {ratio_part}");
+}
+
+#[test]
+fn task_exec_times_shrink_under_pervasive() {
+    // Figure 5 / Table 2: pervasive mean ≪ partial mean at batch 1.
+    let perv =
+        SimDriver::new(cfg("p1", ContextPolicy::Pervasive, 1, 1_000)).run();
+    let part =
+        SimDriver::new(cfg("q1", ContextPolicy::Partial, 1, 1_000)).run();
+    assert!(
+        perv.summary.task_mean_s * 5.0 < part.summary.task_mean_s,
+        "pervasive {} vs partial {}",
+        perv.summary.task_mean_s,
+        part.summary.task_mean_s
+    );
+    assert!(perv.summary.task_std_s < part.summary.task_std_s);
+}
+
+#[test]
+fn drain_scenario_pervasive_wastes_less() {
+    // Figure 6: under a drain, pervasive@100 discards less in-flight work
+    // per eviction than partial@1000 (20 × 100 vs 20 × 1000 in the paper).
+    let mk = |name: &str, policy, batch| {
+        let mut c = SimConfig::new(
+            name,
+            policy,
+            batch,
+            pool_20_mixed(),
+            LoadTrace::drain(20, 300.0, 30.0),
+            13,
+        );
+        c.reclaim_priority = vec![GpuModel::A10, GpuModel::TitanXPascal];
+        c.total_inferences = 20_000;
+        c
+    };
+    let s = SimDriver::new(mk("ps", ContextPolicy::Pervasive, 100)).run();
+    let p = SimDriver::new(mk("pp", ContextPolicy::Partial, 1_000)).run();
+    assert!(s.summary.evictions > 0 && p.summary.evictions > 0);
+    assert!(
+        s.summary.evicted_inferences < p.summary.evicted_inferences,
+        "pervasive discards less: {} vs {}",
+        s.summary.evicted_inferences,
+        p.summary.evicted_inferences
+    );
+}
+
+#[test]
+fn diurnal_full_cluster_run_adapts() {
+    // Figure 7 shape: throughput tracks worker availability.
+    let mut rng = Rng::new(7);
+    let trace = LoadTrace::diurnal(10.0, 6.0 * 3600.0, 120.0, 5, 40, &mut rng);
+    let mut c = SimConfig::new(
+        "diurnal",
+        ContextPolicy::Pervasive,
+        100,
+        full_cluster(),
+        trace,
+        7,
+    );
+    c.total_inferences = 30_000;
+    c.start_gate_fraction = 0.0;
+    let out = SimDriver::new(c).run();
+    assert_eq!(out.summary.completed_inferences, 30_000);
+    assert!(out.summary.avg_workers > 5.0);
+    // Worker count varies over the run (opportunistic wobble).
+    let ws: Vec<u32> = out.series.iter().map(|p| p.connected_workers).collect();
+    let min = ws.iter().min().unwrap();
+    let max = ws.iter().max().unwrap();
+    assert!(max > min, "availability must fluctuate: {min}..{max}");
+}
+
+#[test]
+fn heterogeneous_pool_fast_gpus_do_more_tasks() {
+    // §5.3.2: the 1-task-per-worker policy routes more work to fast GPUs.
+    let out =
+        SimDriver::new(cfg("h", ContextPolicy::Pervasive, 100, 20_000)).run();
+    let mut a10 = 0u64;
+    let mut titan = 0u64;
+    for r in &out.records {
+        match r.gpu {
+            GpuModel::A10 => a10 += 1,
+            GpuModel::TitanXPascal => titan += 1,
+            _ => {}
+        }
+    }
+    assert!(
+        a10 > titan,
+        "A10s (2x faster) must complete more tasks: {a10} vs {titan}"
+    );
+}
+
+#[test]
+fn eviction_mid_run_loses_no_inferences() {
+    // Work conservation under a brutal shrink-then-recover cycle.
+    let mut c = SimConfig::new(
+        "shrink",
+        ContextPolicy::Pervasive,
+        50,
+        pool_20_mixed(),
+        LoadTrace::from_steps(vec![(0.0, 20), (100.0, 3), (2_000.0, 20)]),
+        17,
+    );
+    c.total_inferences = 10_000;
+    let out = SimDriver::new(c).run();
+    assert_eq!(out.summary.completed_inferences, 10_000);
+    assert!(out.summary.evictions >= 10);
+    // Attempts reflect re-runs.
+    assert!(out.records.iter().any(|r| r.attempts > 1));
+}
+
+#[test]
+fn metrics_series_is_monotone_in_completions() {
+    let out =
+        SimDriver::new(cfg("m", ContextPolicy::Pervasive, 100, 5_000)).run();
+    let mut last = 0u64;
+    for p in &out.series {
+        assert!(p.completed_inferences >= last);
+        last = p.completed_inferences;
+    }
+    assert_eq!(last, 5_000);
+}
+
+#[test]
+fn naive_policy_is_overhead_dominated() {
+    // pv1's pathology: everyone hammers the shared FS + internet per task.
+    let out = SimDriver::new(cfg("n", ContextPolicy::None, 100, 4_000)).run();
+    let ctx: f64 = out.records.iter().map(|r| r.context_s).sum();
+    let exec: f64 = out.records.iter().map(|r| r.execute_s).sum();
+    assert!(
+        ctx > exec,
+        "naive scaling must be overhead-dominated: ctx={ctx:.0} exec={exec:.0}"
+    );
+}
+
+#[test]
+fn pervasive_is_execution_dominated() {
+    let out =
+        SimDriver::new(cfg("pd", ContextPolicy::Pervasive, 100, 10_000)).run();
+    let ctx: f64 = out.records.iter().map(|r| r.context_s).sum();
+    let exec: f64 = out.records.iter().map(|r| r.execute_s).sum();
+    assert!(
+        exec > 3.0 * ctx,
+        "pervasive must be execution-dominated: ctx={ctx:.0} exec={exec:.0}"
+    );
+}
+
+#[test]
+fn start_gate_produces_comparable_measurements() {
+    // The 95% gate (§6.2) exists so exec time measures steady-state work,
+    // not pool ramp-up. started_at must be after the first join and
+    // before the first completion.
+    let out =
+        SimDriver::new(cfg("g", ContextPolicy::Pervasive, 100, 2_000)).run();
+    assert!(out.started_at > 0.0);
+    let first_done = out
+        .records
+        .iter()
+        .map(|r| r.completed_at)
+        .fold(f64::INFINITY, f64::min);
+    assert!(out.started_at < first_done);
+}

@@ -1,0 +1,205 @@
+//! Experiments-harness integration: scaled-down versions of the paper's
+//! evaluation, asserting the *shape* of every headline claim (who wins,
+//! by roughly what factor, where crossovers fall). The full-scale runs
+//! live in `cargo bench` / `pcm experiment` and EXPERIMENTS.md.
+
+use pcm::coordinator::SimDriver;
+use pcm::experiments::figures;
+use pcm::experiments::runner::ExperimentResult;
+use pcm::experiments::specs::{figure4_specs, spec_by_id};
+
+const SEED: u64 = 42;
+/// 10% of the paper's 150 k inferences — big enough for stable shapes.
+const SCALE: f64 = 0.10;
+
+fn run_scaled(id: &str) -> ExperimentResult {
+    let spec = spec_by_id(id).expect(id);
+    let mut cfg = spec.build(SEED);
+    cfg.total_inferences =
+        ((cfg.total_inferences as f64 * SCALE) as u64).max(100);
+    let outcome = SimDriver::new(cfg).run();
+    ExperimentResult {
+        id: id.to_string(),
+        policy: outcome.summary.policy,
+        batch_size: outcome.summary.batch_size,
+        exec_time_s: outcome.summary.exec_time_s,
+        avg_workers: outcome.summary.avg_workers,
+        outcome,
+    }
+}
+
+#[test]
+fn effort1_naive_scaling_is_disappointing() {
+    // pv1 on 20 GPUs speeds up pv0 by only ~3.9× (paper) — far below the
+    // ideal 15×. Accept the 2–8× band.
+    let pv0 = run_scaled("pv0");
+    let pv1 = run_scaled("pv1");
+    let speedup = pv0.exec_time_s / pv1.exec_time_s;
+    assert!(
+        (2.0..8.0).contains(&speedup),
+        "naive speedup {speedup:.2} (paper: 3.9)"
+    );
+}
+
+#[test]
+fn effort2_partial_context_improves_on_naive() {
+    // pv2 ≈ 7.7× vs pv1 ≈ 3.9× (paper): partial context must beat naive.
+    let pv1 = run_scaled("pv1");
+    let pv2 = run_scaled("pv2");
+    assert!(
+        pv2.exec_time_s < pv1.exec_time_s * 0.8,
+        "pv2 {} !≪ pv1 {}",
+        pv2.exec_time_s,
+        pv1.exec_time_s
+    );
+}
+
+#[test]
+fn effort3_partial_batch_sweep_is_parabolic() {
+    // pv3: both extremes lose to the middle; pv3_1 is catastrophic
+    // (paper: 141.1 ks, 3.4× WORSE than the 1-GPU baseline).
+    let b1 = run_scaled("pv3_1");
+    let b1k = run_scaled("pv3_1k");
+    let b75 = run_scaled("pv3_7.5k");
+    assert!(b1.exec_time_s > 2.0 * b1k.exec_time_s, "left arm of parabola");
+    assert!(
+        b75.exec_time_s > 1.2 * b1k.exec_time_s,
+        "right arm: {} vs {}",
+        b75.exec_time_s,
+        b1k.exec_time_s
+    );
+    let pv0 = run_scaled("pv0");
+    assert!(
+        b1.exec_time_s > pv0.exec_time_s,
+        "pv3_1 must be worse than the dedicated baseline"
+    );
+}
+
+#[test]
+fn effort4_pervasive_flattens_batch_curve_and_shifts_optimum() {
+    // pv4: any B in [1, 1k] within ~tens of %; optimum shifts to small B;
+    // pv4_1 and pv4_100 beat their pv3 counterparts dramatically.
+    let p1 = run_scaled("pv4_1");
+    let p100 = run_scaled("pv4_100");
+    let q1 = run_scaled("pv3_1");
+    let q100 = run_scaled("pv3_100");
+
+    // (B=1000 would mean 15 tasks on 20 workers at 10% scale — a pure
+    // straggler artifact — so the flatness check uses B ∈ {1, 100}; the
+    // full [1, 1k] spread is asserted at full scale in bench_fig4.)
+    let spread = [p1.exec_time_s, p100.exec_time_s];
+    let max = spread.iter().cloned().fold(f64::MIN, f64::max);
+    let min = spread.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        max / min < 1.6,
+        "pervasive batch spread {:.2} (paper: ≤1.12)",
+        max / min
+    );
+    // Paper: pv4_1 97.8% better than pv3_1; pv4_100 44.5% better than pv3_100.
+    assert!(p1.exec_time_s < 0.15 * q1.exec_time_s, "pv4_1 vs pv3_1");
+    assert!(p100.exec_time_s < 0.9 * q100.exec_time_s, "pv4_100 vs pv3_100");
+}
+
+#[test]
+fn effort5_drain_pervasive_does_more_work() {
+    // Figure 6: pv5s completes meaningfully more inferences than pv5p
+    // (paper: +36.7%, 16.9 k gap). Full scale — at 10% the workload
+    // finishes before the drain begins and the comparison degenerates.
+    let run_full = |id: &str| {
+        let spec = spec_by_id(id).expect(id);
+        let outcome = SimDriver::new(spec.build(SEED)).run();
+        ExperimentResult {
+            id: id.to_string(),
+            policy: outcome.summary.policy,
+            batch_size: outcome.summary.batch_size,
+            exec_time_s: outcome.summary.exec_time_s,
+            avg_workers: outcome.summary.avg_workers,
+            outcome,
+        }
+    };
+    let s = run_full("pv5s");
+    let p = run_full("pv5p");
+    let cs = s.outcome.summary.completed_inferences;
+    let cp = p.outcome.summary.completed_inferences;
+    assert!(
+        cs > cp,
+        "pervasive must complete more under drain: {cs} vs {cp}"
+    );
+    // And discard less in-flight work per eviction (B=100 vs B=1000).
+    assert!(
+        s.outcome.summary.evicted_inferences
+            < p.outcome.summary.evicted_inferences
+    );
+    // Throughput dominance at (almost) all times: compare completion
+    // curves at each shared sample instant.
+    let better_or_equal = s
+        .outcome
+        .series
+        .iter()
+        .zip(p.outcome.series.iter())
+        .filter(|(a, b)| {
+            a.completed_inferences >= b.completed_inferences
+        })
+        .count();
+    let total = s.outcome.series.len().min(p.outcome.series.len());
+    assert!(
+        better_or_equal as f64 / total as f64 > 0.8,
+        "pv5s throughput should dominate most of the run"
+    );
+}
+
+#[test]
+fn effort6_unrestricted_scaling_tracks_availability() {
+    // pv6 (quiet day, up to 186 GPUs) must beat every 20-GPU experiment
+    // and the busy-night run (pv6_11p) must be the slow one.
+    let pv6 = run_scaled("pv6");
+    let pv6_11p = run_scaled("pv6_11p");
+    let pv4_100 = run_scaled("pv4_100");
+    assert!(pv6.exec_time_s < pv4_100.exec_time_s, "186 GPUs beat 20");
+    assert!(pv6.avg_workers > 80.0, "avg={}", pv6.avg_workers);
+    assert!(
+        pv6_11p.exec_time_s > pv6.exec_time_s,
+        "busy night slower than quiet day"
+    );
+    assert!(pv6_11p.avg_workers < 70.0);
+}
+
+#[test]
+fn headline_98_percent_reduction_shape() {
+    // Paper headline: 98.1% reduction (40.9 ks → 783 s = 52×). At 10%
+    // scale ramp-up overheads weigh more; accept ≥90% reduction (≥10×).
+    let pv0 = run_scaled("pv0");
+    let pv6 = run_scaled("pv6");
+    let reduction = 1.0 - pv6.exec_time_s / pv0.exec_time_s;
+    assert!(
+        reduction > 0.90,
+        "reduction {:.3} (paper: 0.981)",
+        reduction
+    );
+}
+
+#[test]
+fn figure_renderers_produce_wellformed_output() {
+    let results = vec![run_scaled("pv0"), run_scaled("pv4_100")];
+    let t = figures::figure4_text(&results);
+    assert!(t.contains("pv0") && t.contains("pv4_100"));
+    let csv = figures::figure4_csv(&results);
+    assert_eq!(csv.lines().count(), 3); // header + 2 rows
+    let t2 = figures::table2(&results);
+    assert!(t2.contains("Mean"));
+    let ts = figures::timeseries_csv(&results);
+    assert!(ts.lines().count() > 10);
+    let f5 = figures::figure5_csv(&results);
+    assert!(f5.lines().count() > 100); // one row per task record
+}
+
+#[test]
+fn spec_list_is_complete_and_buildable() {
+    let specs = figure4_specs();
+    assert_eq!(specs.len(), 21);
+    for s in &specs {
+        let cfg = s.build(7);
+        assert!(!cfg.nodes.is_empty());
+        assert!(cfg.batch_size >= 1);
+    }
+}

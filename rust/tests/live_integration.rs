@@ -1,0 +1,109 @@
+//! Live-mode integration: the same coordinator driving real PJRT
+//! inference on worker threads. Requires `make artifacts` (skips when
+//! absent). These tests are the proof that L1 (Pallas) + L2 (JAX HLO) +
+//! L3 (Rust coordinator) compose with Python nowhere on the request path.
+
+use pcm::coordinator::ContextPolicy;
+use pcm::live::{LiveConfig, LiveDriver};
+use pcm::runtime::manifest::default_artifacts_dir;
+use pcm::runtime::Manifest;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest loads"))
+}
+
+fn cfg(policy: ContextPolicy, workers: usize, n: u64, batch: u64) -> LiveConfig {
+    LiveConfig {
+        profile: "tiny".to_string(),
+        policy,
+        batch_size: batch,
+        total_inferences: n,
+        worker_speeds: vec![1.0; workers],
+        seed: 3,
+    }
+}
+
+#[test]
+fn live_pervasive_end_to_end() {
+    let Some(m) = manifest_or_skip() else { return };
+    let out = LiveDriver::new(cfg(ContextPolicy::Pervasive, 2, 64, 16), m)
+        .run()
+        .unwrap();
+    assert_eq!(out.completed_inferences, 64);
+    assert_eq!(out.accuracy.total, 64);
+    assert!(out.throughput_inf_per_s > 0.0);
+    assert_eq!(out.records.len(), 4);
+    // At least one task per worker reused a warm context: its context
+    // time is ~0.
+    let warm = out.records.iter().filter(|r| r.context_s < 0.01).count();
+    assert!(warm >= 1, "expected warm-context tasks, records: {:?}",
+        out.records.iter().map(|r| r.context_s).collect::<Vec<_>>());
+}
+
+#[test]
+fn live_pervasive_amortizes_context_costs() {
+    let Some(m) = manifest_or_skip() else { return };
+    // 6 tasks on 1 worker: pervasive pays context once, partial 6 times.
+    let perv = LiveDriver::new(cfg(ContextPolicy::Pervasive, 1, 48, 8), m)
+        .run()
+        .unwrap();
+    let m2 = manifest_or_skip().unwrap();
+    let part = LiveDriver::new(cfg(ContextPolicy::Partial, 1, 48, 8), m2)
+        .run()
+        .unwrap();
+    let perv_ctx: f64 = perv.records.iter().map(|r| r.context_s).sum();
+    let part_ctx: f64 = part.records.iter().map(|r| r.context_s).sum();
+    assert!(
+        part_ctx > 2.0 * perv_ctx,
+        "partial total context {part_ctx:.3}s must dwarf pervasive {perv_ctx:.3}s"
+    );
+    // Both deliver identical verdict counts.
+    assert_eq!(perv.completed_inferences, part.completed_inferences);
+}
+
+#[test]
+fn live_accuracy_is_deterministic_across_policies() {
+    // Same workload, same model → identical accuracy regardless of the
+    // context-management policy (it only changes *when* work happens).
+    let Some(m) = manifest_or_skip() else { return };
+    let a = LiveDriver::new(cfg(ContextPolicy::Pervasive, 2, 32, 8), m)
+        .run()
+        .unwrap();
+    let m2 = manifest_or_skip().unwrap();
+    let b = LiveDriver::new(cfg(ContextPolicy::None, 1, 32, 8), m2)
+        .run()
+        .unwrap();
+    assert_eq!(a.accuracy.correct, b.accuracy.correct);
+    assert_eq!(a.accuracy.confusion, b.accuracy.confusion);
+}
+
+#[test]
+fn live_heterogeneous_workers_complete() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut c = cfg(ContextPolicy::Pervasive, 2, 48, 8);
+    c.worker_speeds = vec![1.0, 0.4]; // one emulated slow GPU
+    let out = LiveDriver::new(c, m).run().unwrap();
+    assert_eq!(out.completed_inferences, 48);
+    // The fast worker should complete more tasks than the slow one.
+    let mut per_worker = std::collections::HashMap::new();
+    for r in &out.records {
+        *per_worker.entry(r.worker).or_insert(0u32) += 1;
+    }
+    assert_eq!(per_worker.values().sum::<u32>(), 6);
+}
+
+#[test]
+fn live_latency_stats_populated() {
+    let Some(m) = manifest_or_skip() else { return };
+    let out = LiveDriver::new(cfg(ContextPolicy::Pervasive, 2, 32, 8), m)
+        .run()
+        .unwrap();
+    assert_eq!(out.task_latency.count(), 4);
+    assert!(out.task_latency.max() >= out.task_latency.percentile(50.0));
+    assert!(out.task_latency.min() > 0.0);
+}

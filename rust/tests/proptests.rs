@@ -1,0 +1,358 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The vendored offline crate set has no `proptest`, so this file uses an
+//! in-tree property harness: each property runs against a few hundred
+//! randomized cases drawn from the deterministic SplitMix64 RNG, with the
+//! failing seed printed on panic — same methodology, zero dependencies.
+
+use pcm::cluster::node::pool_20_mixed;
+use pcm::cluster::{ClusterAction, ClusterSim, GpuModel, LoadTrace, Node};
+use pcm::coordinator::batcher::Batcher;
+use pcm::coordinator::scheduler::PhaseKind;
+use pcm::coordinator::transfer::{broadcast_rounds, plan_broadcast};
+use pcm::coordinator::{
+    ContextPolicy, ContextRecipe, Scheduler, TaskRecord,
+    TransferPlanner,
+};
+use pcm::util::Rng;
+
+/// Run `prop` for `cases` seeds; panic messages carry the seed.
+fn forall(cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ 0xABCD);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)),
+        );
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- batcher
+
+#[test]
+fn prop_batcher_partition_is_exact_cover() {
+    forall(300, |rng| {
+        let total = 1 + rng.below(50_000) as u64;
+        let batch = 1 + rng.below(9_000) as u64;
+        let tasks = Batcher::new(batch).split(total, 0, 0);
+        // Covers [0, total) exactly, in order, without gaps or overlap.
+        let mut expect = 0u64;
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.id, i as u64);
+            assert_eq!(t.start, expect);
+            assert!(t.count >= 1 && t.count <= batch);
+            expect += t.count;
+        }
+        assert_eq!(expect, total);
+        // All but the last task are full-size.
+        for t in &tasks[..tasks.len() - 1] {
+            assert_eq!(t.count, batch);
+        }
+    });
+}
+
+// ------------------------------------------------------------ broadcast
+
+#[test]
+fn prop_broadcast_tree_valid() {
+    forall(300, |rng| {
+        let n = rng.below(300);
+        let cap = 1 + rng.below(6) as u32;
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let edges = plan_broadcast(&ids, cap);
+        assert_eq!(edges.len(), n);
+        // Every worker covered exactly once; parents must already hold
+        // the data (appear as an earlier child or be the seed).
+        let mut seen = std::collections::HashSet::new();
+        for e in &edges {
+            if let Some(p) = e.parent {
+                assert!(seen.contains(&p), "parent {p} before child");
+            }
+            assert!(seen.insert(e.child));
+        }
+        // Rounds are logarithmic: holders multiply by (cap+1) per round.
+        if n > 0 {
+            let rounds = broadcast_rounds(n, cap);
+            let mut holders = 1u64;
+            let mut needed = 1u32;
+            while (holders as usize) < n {
+                holders += holders * cap as u64;
+                needed += 1;
+            }
+            assert_eq!(rounds, needed.max(1), "n={n} cap={cap}");
+        }
+    });
+}
+
+// ----------------------------------------------------- task conservation
+
+/// Drive a scheduler through a random storm of joins, evictions, phase
+/// completions and task completions; conservation must hold throughout
+/// and the workload must finish.
+#[test]
+fn prop_no_task_lost_under_random_evictions() {
+    forall(120, |rng| {
+        let policy = match rng.below(3) {
+            0 => ContextPolicy::None,
+            1 => ContextPolicy::Partial,
+            _ => ContextPolicy::Pervasive,
+        };
+        let mut sched = Scheduler::new(
+            policy,
+            ContextRecipe::smollm2_pff(0),
+            TransferPlanner::new(1 + rng.below(4) as u32),
+        );
+        let n_tasks = 1 + rng.below(40) as u64;
+        let batch = 1 + rng.below(200) as u64;
+        sched.submit_tasks(
+            Batcher::new(batch).split(n_tasks * batch, 0, 0),
+        );
+        let total_inferences = n_tasks * batch;
+
+        let mut next_node = 0u32;
+        // In-flight work: (task, worker, remaining phase count, next idx).
+        let mut running: Vec<(u64, u32, Vec<PhaseKind>, usize)> = Vec::new();
+        let mut guard = 0;
+        while !sched.all_done() {
+            guard += 1;
+            assert!(guard < 100_000, "storm did not converge");
+            match rng.below(10) {
+                // Join a worker.
+                0 | 1 => {
+                    let gpu = if rng.chance(0.5) {
+                        GpuModel::A10
+                    } else {
+                        GpuModel::TitanXPascal
+                    };
+                    let node = Node { id: next_node, gpu };
+                    next_node += 1;
+                    sched.worker_join(node, guard as f64);
+                }
+                // Evict a random worker.
+                2 => {
+                    let ids: Vec<u32> =
+                        sched.workers().map(|w| w.id).collect();
+                    if !ids.is_empty() {
+                        let victim = ids[rng.below(ids.len())];
+                        sched.worker_evict(victim);
+                        running.retain(|(_, w, _, _)| *w != victim);
+                    }
+                }
+                // Progress one in-flight task by one phase.
+                _ => {
+                    if running.is_empty() {
+                        for d in sched.try_dispatch() {
+                            running.push((d.task, d.worker, d.phases, 0));
+                        }
+                    } else {
+                        let i = rng.below(running.len());
+                        let (task, worker, phases, next) = &mut running[i];
+                        sched.phase_done(*task, *next);
+                        *next += 1;
+                        if *next == phases.len() {
+                            let (attempts, inferences) =
+                                sched.task_meta(*task).unwrap();
+                            let rec = TaskRecord {
+                                task: *task,
+                                worker: *worker,
+                                gpu: GpuModel::A10,
+                                attempts,
+                                inferences,
+                                dispatched_at: 0.0,
+                                completed_at: guard as f64,
+                                context_s: 0.0,
+                                execute_s: 1.0,
+                            };
+                            sched.task_done(*task, rec);
+                            running.remove(i);
+                        }
+                    }
+                }
+            }
+            assert!(sched.check_conservation(), "conservation violated");
+        }
+        let p = sched.progress();
+        assert_eq!(p.completed_inferences, total_inferences);
+        assert_eq!(p.completed_tasks, n_tasks);
+    });
+}
+
+// --------------------------------------------------------------- cluster
+
+#[test]
+fn prop_cluster_reconcile_converges_to_target() {
+    forall(200, |rng| {
+        let mut sim;
+        let mut t = 0.0;
+        // Random walk of targets; after each reconcile availability must
+        // equal min(target, pool size).
+        for _ in 0..30 {
+            let target = rng.below(25) as u32;
+            sim = ClusterSim::new(
+                pool_20_mixed(),
+                LoadTrace::constant(target),
+                rng.fork(target as u64),
+            );
+            t += 1.0;
+            let actions = sim.reconcile(t);
+            assert_eq!(sim.available(), target.min(20));
+            // Grants reference offered nodes only.
+            for a in actions {
+                if let ClusterAction::Grant(id) = a {
+                    assert!(sim.offered_nodes().contains(&id));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_eviction_respects_priority() {
+    forall(100, |rng| {
+        let mut sim = ClusterSim::new(
+            pool_20_mixed(),
+            LoadTrace::from_steps(vec![(0.0, 20), (10.0, 10)]),
+            rng.fork(3),
+        );
+        sim.reclaim_priority =
+            vec![GpuModel::A10, GpuModel::TitanXPascal];
+        sim.reconcile(0.0);
+        for id in sim.offered_nodes() {
+            sim.mark_held(id);
+        }
+        let actions = sim.reconcile(10.0);
+        // All 10 reclaims must be A10s (10 A10s exist, need exactly 10).
+        for a in actions {
+            if let ClusterAction::Reclaim(id) = a {
+                assert_eq!(sim.node(id).gpu, GpuModel::A10);
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------- tokenizer
+
+#[test]
+fn prop_tokenizer_encode_invariants() {
+    use pcm::runtime::tokenizer::{HashTokenizer, BOS_ID, EOS_ID, PAD_ID};
+    forall(300, |rng| {
+        let vocab = 16 + rng.below(8192) as u32;
+        let seq = 2 + rng.below(256);
+        let tok = HashTokenizer::new(vocab, seq);
+        // Random ASCII-ish text.
+        let len = rng.below(400);
+        let text: String = (0..len)
+            .map(|_| {
+                let c = rng.below(96) as u8 + 32;
+                c as char
+            })
+            .collect();
+        let ids = tok.encode(&text);
+        assert_eq!(ids.len(), seq);
+        assert_eq!(ids[0], BOS_ID);
+        assert!(ids.iter().all(|&i| i < vocab));
+        assert!(ids.contains(&EOS_ID));
+        // After the first EOS, everything is PAD.
+        let eos_pos = ids.iter().position(|&i| i == EOS_ID).unwrap();
+        assert!(ids[eos_pos + 1..].iter().all(|&i| i == PAD_ID));
+        // Deterministic.
+        assert_eq!(tok.encode(&text), ids);
+    });
+}
+
+// ------------------------------------------------------------- summary
+
+#[test]
+fn prop_summary_stats_match_naive_computation() {
+    use pcm::util::Summary;
+    forall(200, |rng| {
+        let n = 1 + rng.below(500);
+        let xs: Vec<f64> =
+            (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((s.mean() - mean).abs() < 1e-9);
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.min(), min);
+        assert_eq!(s.max(), max);
+        assert!(s.percentile(0.0) >= min && s.percentile(100.0) <= max);
+        // Histogram conserves mass.
+        let hist = s.histogram(-100.0, 100.0, 10);
+        assert_eq!(hist.iter().sum::<usize>(), n);
+    });
+}
+
+// ----------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip() {
+    use pcm::util::Json;
+    use std::collections::BTreeMap;
+
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.uniform(-1e6, 1e6)).round()),
+            3 => {
+                let len = rng.below(12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| (rng.below(94) as u8 + 33) as char)
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut m = BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    forall(300, |rng| {
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "roundtrip failed for {text}");
+    });
+}
+
+// -------------------------------------------------------------- sim end
+
+#[test]
+fn prop_sim_runs_complete_for_any_batch_and_policy() {
+    use pcm::coordinator::{SimConfig, SimDriver};
+    forall(25, |rng| {
+        let policy = match rng.below(3) {
+            0 => ContextPolicy::None,
+            1 => ContextPolicy::Partial,
+            _ => ContextPolicy::Pervasive,
+        };
+        let batch = [1u64, 7, 50, 333, 1000][rng.below(5)];
+        let total = 500 + rng.below(2_000) as u64;
+        let mut cfg = SimConfig::new(
+            "prop",
+            policy,
+            batch,
+            pool_20_mixed(),
+            LoadTrace::constant(1 + rng.below(20) as u32),
+            rng.next_u64(),
+        );
+        cfg.total_inferences = total;
+        let out = SimDriver::new(cfg).run();
+        assert_eq!(out.summary.completed_inferences, total);
+    });
+}

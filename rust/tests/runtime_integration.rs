@@ -1,0 +1,195 @@
+//! Runtime integration: load real AOT artifacts, execute, and match the
+//! Python-exported golden logits — the cross-language numerics oracle.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent,
+//! e.g. in a fresh checkout).
+
+use pcm::runtime::{
+    manifest::default_artifacts_dir, HashTokenizer, InferenceEngine,
+    Manifest, ModelContext, WeightStore,
+};
+use pcm::util::Json;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest loads"))
+}
+
+fn read_json(m: &Manifest, file: &str) -> Json {
+    Json::parse(&std::fs::read_to_string(m.path_of(file)).unwrap()).unwrap()
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(m) = manifest_or_skip() else { return };
+    assert!(m.profiles.contains_key("tiny"));
+    assert!(m.profiles.contains_key("small"));
+}
+
+#[test]
+fn weights_stage_and_are_finite() {
+    let Some(m) = manifest_or_skip() else { return };
+    let p = m.profile("tiny").unwrap();
+    let w = WeightStore::load(p, m.path_of(&p.weights.file)).unwrap();
+    assert_eq!(w.total_bytes() as u64, p.weights.bytes);
+    w.check_finite().unwrap();
+}
+
+#[test]
+fn tiny_model_matches_python_golden_logits() {
+    let Some(m) = manifest_or_skip() else { return };
+    let p = m.profile("tiny").unwrap().clone();
+    let ctx = ModelContext::materialize(&m, "tiny", &p.batch_sizes).unwrap();
+
+    let golden = read_json(&m, &p.golden);
+    for case in golden.req("cases").unwrap().as_array().unwrap() {
+        let batch = case.req("batch").unwrap().as_usize().unwrap();
+        let tokens: Vec<i32> = case
+            .req("tokens")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .flat_map(|row| row.as_array().unwrap().iter())
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let want: Vec<Vec<f64>> = case
+            .req("logits")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|row| {
+                row.as_array()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_f64().unwrap())
+                    .collect()
+            })
+            .collect();
+
+        let got = ctx.execute_tokens(&tokens, batch).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g_row, w_row) in got.iter().zip(&want) {
+            for (g, w) in g_row.iter().zip(w_row) {
+                assert!(
+                    (*g as f64 - w).abs() < 1e-3,
+                    "logit mismatch: rust={g} python={w} (batch {batch})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rust_tokenizer_matches_golden_tokens() {
+    // The golden file stores Python-tokenized claims; re-tokenize the same
+    // texts in Rust and compare ids — end-to-end tokenizer parity on real
+    // claim strings (the fixture test covers adversarial cases).
+    let Some(m) = manifest_or_skip() else { return };
+    let p = m.profile("tiny").unwrap();
+    let tok =
+        HashTokenizer::new(p.config.vocab_size as u32, p.config.seq_len);
+    let golden = read_json(&m, &p.golden);
+    let case = golden.req("cases").unwrap().idx(0).unwrap();
+    let texts: Vec<&str> = case
+        .req("texts")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_str().unwrap())
+        .collect();
+    let want: Vec<i64> = case
+        .req("tokens")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .flat_map(|row| row.as_array().unwrap().iter())
+        .map(|v| v.as_f64().unwrap() as i64)
+        .collect();
+    let got: Vec<i64> = texts
+        .iter()
+        .flat_map(|t| tok.encode(t))
+        .map(|x| x as i64)
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn tokenizer_fixture_parity() {
+    let Some(m) = manifest_or_skip() else { return };
+    let fixture = read_json(&m, "tokenizer_fixture.json");
+    assert_eq!(
+        fixture.req("reserved").unwrap().as_u64().unwrap(),
+        pcm::runtime::tokenizer::RESERVED as u64
+    );
+    for entry in fixture.req("entries").unwrap().as_array().unwrap() {
+        let tok = HashTokenizer::new(
+            entry.req("vocab_size").unwrap().as_u64().unwrap() as u32,
+            entry.req("seq_len").unwrap().as_usize().unwrap(),
+        );
+        for case in entry.req("cases").unwrap().as_array().unwrap() {
+            let text = case.req("text").unwrap().as_str().unwrap();
+            let want: Vec<u32> = case
+                .req("ids")
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as u32)
+                .collect();
+            assert_eq!(tok.encode(text), want, "text={text:?}");
+        }
+    }
+}
+
+#[test]
+fn infer_texts_handles_ragged_batch_sizes() {
+    let Some(m) = manifest_or_skip() else { return };
+    let p = m.profile("tiny").unwrap().clone();
+    let ctx = ModelContext::materialize(&m, "tiny", &p.batch_sizes).unwrap();
+    // 7 texts over artifacts {1,4}: chunks 4+1+1+1, all rows returned.
+    let texts: Vec<String> =
+        (0..7).map(|i| format!("claim number {i} is great")).collect();
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let logits = ctx.infer_texts(&refs).unwrap();
+    assert_eq!(logits.len(), 7);
+    for row in &logits {
+        assert_eq!(row.len(), 3);
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+    // Same text in different chunk positions must yield identical logits.
+    let twice = ctx.infer_texts(&[refs[0], refs[0]]).unwrap();
+    for (a, b) in twice[0].iter().zip(&twice[1]) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn engine_classifies_deterministically() {
+    let Some(m) = manifest_or_skip() else { return };
+    let p = m.profile("tiny").unwrap().clone();
+    let ctx = ModelContext::materialize(&m, "tiny", &p.batch_sizes).unwrap();
+    let engine = InferenceEngine::new(ctx);
+    let texts = ["water is wet", "the moon is cheese"];
+    let a = engine.classify(&texts).unwrap();
+    let b = engine.classify(&texts).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn context_init_stats_populated() {
+    let Some(m) = manifest_or_skip() else { return };
+    let ctx = ModelContext::materialize(&m, "tiny", &[1]).unwrap();
+    // Staging/compile take nonzero time; upload may round to ~0 but the
+    // total must be positive — this is the cost pervasive context
+    // management amortizes.
+    assert!(ctx.init_stats.total_s() > 0.0);
+    assert!(ctx.init_stats.compile_s > 0.0);
+}
