@@ -61,6 +61,7 @@ fn main() -> pcm::Result<()> {
         total_inferences: inferences,
         worker_speeds: speeds,
         seed: 7,
+        ..LiveConfig::default()
     };
 
     println!(

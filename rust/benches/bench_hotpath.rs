@@ -1,6 +1,10 @@
 //! Hot-path micro-benchmarks: the L3 coordinator inner loops and (when
 //! artifacts exist) the real PJRT inference path. This is the profile
 //! target for the EXPERIMENTS.md §Perf iteration log.
+//!
+//! Set `PCM_BENCH_JSON=<path>` to also write the results as JSON — the
+//! repo-root `BENCH_hotpath.json` baseline is regenerated with
+//! `PCM_BENCH_JSON=BENCH_hotpath.json cargo bench --bench bench_hotpath`.
 
 use pcm::cluster::node::pool_20_mixed;
 use pcm::cluster::{GpuModel, LoadTrace, Node};
@@ -42,6 +46,7 @@ fn scheduler_churn(tasks: u64, workers: u32) -> u64 {
                 d.task,
                 TaskRecord {
                     task: d.task,
+                    context: 0,
                     worker: d.worker,
                     gpu: GpuModel::A10,
                     attempts,
@@ -58,24 +63,53 @@ fn scheduler_churn(tasks: u64, workers: u32) -> u64 {
     completed
 }
 
+/// Write collected results as JSON when `PCM_BENCH_JSON` names a path
+/// (the perf-trajectory baseline future PRs diff against).
+fn emit_json(results: &[pcm::util::bench::BenchResult]) {
+    use pcm::util::Json;
+    use std::collections::BTreeMap;
+
+    let Ok(path) = std::env::var("PCM_BENCH_JSON") else { return };
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(r.name.clone()));
+            m.insert("iters".to_string(), Json::Num(r.iters as f64));
+            m.insert("min_s".to_string(), Json::Num(r.min_s));
+            m.insert("median_s".to_string(), Json::Num(r.median_s));
+            m.insert("mean_s".to_string(), Json::Num(r.mean_s));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("bench_hotpath".to_string()));
+    top.insert("results".to_string(), Json::Arr(rows));
+    match std::fs::write(&path, Json::Obj(top).to_string()) {
+        Ok(()) => eprintln!("baseline written to {path}"),
+        Err(e) => eprintln!("failed writing {path}: {e}"),
+    }
+}
+
 fn main() {
+    let mut results = Vec::new();
     header("L3 coordinator hot paths");
-    bench("scheduler churn: 1k tasks / 20 workers", 2, 10, || {
+    results.push(bench("scheduler churn: 1k tasks / 20 workers", 2, 10, || {
         scheduler_churn(1_000, 20)
-    });
-    bench("scheduler churn: 10k tasks / 100 workers", 1, 5, || {
+    }));
+    results.push(bench("scheduler churn: 10k tasks / 100 workers", 1, 5, || {
         scheduler_churn(10_000, 100)
-    });
-    bench("broadcast plan: 567 workers, fanout 3", 5, 50, || {
+    }));
+    results.push(bench("broadcast plan: 567 workers, fanout 3", 5, 50, || {
         let ids: Vec<u32> = (0..567).collect();
         plan_broadcast(&ids, 3)
-    });
-    bench("batcher split: 150k inferences @ B=100", 5, 50, || {
+    }));
+    results.push(bench("batcher split: 150k inferences @ B=100", 5, 50, || {
         Batcher::new(100).split(150_000, 0, 0)
-    });
+    }));
 
     header("DES end-to-end (simulated experiments)");
-    bench("sim pv4_100-shape @ 5k inferences", 1, 5, || {
+    results.push(bench("sim pv4_100-shape @ 5k inferences", 1, 5, || {
         let mut cfg = SimConfig::new(
             "bench",
             ContextPolicy::Pervasive,
@@ -86,7 +120,16 @@ fn main() {
         );
         cfg.total_inferences = 5_000;
         SimDriver::new(cfg).run().summary.exec_time_s
-    });
+    }));
+    results.push(bench("sim mixed 2-app @ 1k inferences/app", 1, 5, || {
+        let cfg = pcm::experiments::mixed::mixed_config(
+            "bench_mixed",
+            ContextPolicy::Pervasive,
+            42,
+            1_000,
+        );
+        SimDriver::new(cfg).run().summary.exec_time_s
+    }));
 
     // Real PJRT inference path (needs `make artifacts`).
     let dir = default_artifacts_dir();
@@ -143,4 +186,5 @@ fn main() {
     } else {
         eprintln!("(artifacts not built; skipping PJRT benches)");
     }
+    emit_json(&results);
 }

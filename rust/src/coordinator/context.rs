@@ -49,6 +49,21 @@ pub struct Component {
     pub origin: DataOrigin,
 }
 
+impl Component {
+    /// Where this component is actually staged from under a caching
+    /// policy: registering a component as managed context re-homes
+    /// internet-origin data onto the cluster's shared storage (the
+    /// manager fetches it once at registration); the unregistered path
+    /// keeps the per-task internet download (pv1, §6.3 Effort 1).
+    pub fn effective_origin(&self, cached: bool) -> DataOrigin {
+        if cached && self.origin == DataOrigin::Internet {
+            DataOrigin::SharedFs
+        } else {
+            self.origin
+        }
+    }
+}
+
 /// How much of the context the system manages — the experimental axis of
 /// the whole paper (pv1 = None, pv2/pv3 = Partial, pv4+ = Pervasive).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -135,6 +150,57 @@ impl ContextRecipe {
                     origin: DataOrigin::Manager,
                 },
             ],
+        }
+    }
+
+    /// A parametric recipe for additional applications in a multi-tenant
+    /// pool: `deps_bytes` of packed environment (shared FS) plus
+    /// `weights_bytes` of model parameters (internet-origin until
+    /// registration re-homes them), with the usual O(KB) code/context
+    /// components. Distinct model sizes are how mixed workloads compete
+    /// for worker cache capacity.
+    pub fn custom(
+        id: ContextId,
+        name: impl Into<String>,
+        deps_bytes: u64,
+        weights_bytes: u64,
+    ) -> Self {
+        let name = name.into();
+        Self {
+            id,
+            components: vec![
+                Component {
+                    kind: ComponentKind::DepsPackage,
+                    name: format!("{name}-poncho-env.tar.gz"),
+                    size_bytes: deps_bytes,
+                    origin: DataOrigin::SharedFs,
+                },
+                Component {
+                    kind: ComponentKind::ModelWeights,
+                    name: format!("{name}-weights"),
+                    size_bytes: weights_bytes,
+                    origin: DataOrigin::Internet,
+                },
+                Component {
+                    kind: ComponentKind::FunctionCode,
+                    name: format!("{name}-infer.pkl"),
+                    size_bytes: 20_000,
+                    origin: DataOrigin::Manager,
+                },
+                Component {
+                    kind: ComponentKind::ContextCode,
+                    name: format!("{name}-load.pkl"),
+                    size_bytes: 10_000,
+                    origin: DataOrigin::Manager,
+                },
+                Component {
+                    kind: ComponentKind::ContextInputs,
+                    name: format!("{name}-inputs"),
+                    size_bytes: 1_000,
+                    origin: DataOrigin::Manager,
+                },
+            ],
+            name,
         }
     }
 
@@ -237,6 +303,21 @@ mod tests {
         let w = r.component(ComponentKind::ModelWeights).unwrap();
         assert_eq!(w.size_bytes, 13_795_340);
         assert_eq!(w.origin, DataOrigin::SharedFs);
+    }
+
+    #[test]
+    fn custom_recipe_sizes_and_origins() {
+        let r = ContextRecipe::custom(3, "big-pff", 5_000_000_000, 10_000_000_000);
+        assert_eq!(r.id, 3);
+        assert_eq!(
+            r.component(ComponentKind::DepsPackage).unwrap().size_bytes,
+            5_000_000_000
+        );
+        let w = r.component(ComponentKind::ModelWeights).unwrap();
+        assert_eq!(w.size_bytes, 10_000_000_000);
+        assert_eq!(w.origin, DataOrigin::Internet);
+        assert_eq!(r.components.len(), 5);
+        assert!(r.total_bytes() > 15_000_000_000);
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct CostModel {
     pub worker_startup_s: f64,
     /// Lognormal sigma applied to compute/materialize times.
     pub jitter_sigma: f64,
+    /// Typical per-reader shared-FS bandwidth under moderate contention,
+    /// bytes/s — used only by the deterministic dispatch-time estimates
+    /// (the stochastic path asks the live [`SharedFilesystem`] instead).
+    pub shared_fs_est_bps: f64,
 }
 
 impl Default for CostModel {
@@ -56,6 +60,7 @@ impl Default for CostModel {
             peer_bps: 10.0e9 / 8.0,
             worker_startup_s: 10.0,
             jitter_sigma: 0.18,
+            shared_fs_est_bps: 1.0e9,
         }
     }
 }
@@ -118,6 +123,43 @@ impl CostModel {
     /// Worker pilot-job startup delay.
     pub fn worker_startup_s(&self, rng: &mut Rng) -> f64 {
         self.worker_startup_s * rng.uniform(0.5, 1.8)
+    }
+
+    // ------------------------------------------------- dispatch estimates
+    //
+    // Deterministic mean-value estimates for context-affinity scoring at
+    // dispatch time (no RNG draws — scoring candidates must not perturb
+    // the simulation's random streams, and the live driver has no RNG at
+    // all). Only the *ordering* of candidate workers matters, so these
+    // use flat-rate links and a fixed contention assumption.
+
+    /// Estimated seconds to stage `bytes` for a worker that is missing
+    /// them. `peer_available` says some connected worker already caches
+    /// the component (the spanning-tree fast path).
+    pub fn est_stage_s(
+        &self,
+        bytes: u64,
+        origin: DataOrigin,
+        peer_available: bool,
+    ) -> f64 {
+        if peer_available {
+            return 0.005 + bytes as f64 / self.peer_bps;
+        }
+        match origin {
+            DataOrigin::SharedFs => bytes as f64 / self.shared_fs_est_bps,
+            DataOrigin::Internet => bytes as f64 / self.internet_bps,
+            DataOrigin::Manager => 0.01 + bytes as f64 / self.peer_bps,
+        }
+    }
+
+    /// Estimated materialization seconds on `gpu` (mean, no jitter).
+    pub fn est_materialize_s(&self, gpu: GpuModel) -> f64 {
+        self.materialize_base_s + self.materialize_speed_s / gpu.relative_speed()
+    }
+
+    /// Estimated sandbox setup+teardown seconds (mean, no jitter).
+    pub fn est_sandbox_s(&self) -> f64 {
+        self.sandbox_s
     }
 }
 
@@ -189,6 +231,22 @@ mod tests {
             &mut rng,
         );
         assert!(peer < net / 10.0, "peer={peer} net={net}");
+    }
+
+    #[test]
+    fn dispatch_estimates_order_sanely() {
+        let cm = CostModel::default();
+        let b = 3_700_000_000;
+        let peer = cm.est_stage_s(b, DataOrigin::SharedFs, true);
+        let fs = cm.est_stage_s(b, DataOrigin::SharedFs, false);
+        let net = cm.est_stage_s(b, DataOrigin::Internet, false);
+        assert!(peer < fs, "peer {peer} !< fs {fs}");
+        assert!(fs < net, "fs {fs} !< net {net}");
+        assert!(
+            cm.est_materialize_s(GpuModel::H100)
+                < cm.est_materialize_s(GpuModel::TitanXPascal)
+        );
+        assert_eq!(cm.est_sandbox_s(), cm.sandbox_s);
     }
 
     #[test]

@@ -5,9 +5,82 @@
 //! progress of the application." These are the data behind Figures 4, 6
 //! and 7 and Table 2.
 
+use std::collections::BTreeMap;
+
 use crate::util::{fmt_duration, Summary};
 
+use super::context::ContextId;
 use super::task::TaskRecord;
+
+/// Cache counters for one context (application).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ContextCacheCounters {
+    /// Component needed at plan time and already resident on the chosen
+    /// worker (cache or ready library) — no stage phase emitted.
+    pub hits: u64,
+    /// Component needed but missing — a stage phase was paid.
+    pub misses: u64,
+    /// Times this context was LRU-evicted from some worker's cache to
+    /// make room for a competing context.
+    pub evictions: u64,
+}
+
+impl ContextCacheCounters {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Per-context cache statistics for a whole run — the multi-application
+/// observability the context registry adds (hit/miss at dispatch-plan
+/// time, LRU evictions under worker cache pressure).
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub per_context: BTreeMap<ContextId, ContextCacheCounters>,
+}
+
+impl CacheStats {
+    pub fn ctx_mut(&mut self, ctx: ContextId) -> &mut ContextCacheCounters {
+        self.per_context.entry(ctx).or_default()
+    }
+
+    pub fn ctx(&self, ctx: ContextId) -> ContextCacheCounters {
+        self.per_context.get(&ctx).copied().unwrap_or_default()
+    }
+
+    /// Summed counters across contexts.
+    pub fn totals(&self) -> ContextCacheCounters {
+        let mut t = ContextCacheCounters::default();
+        for c in self.per_context.values() {
+            t.hits += c.hits;
+            t.misses += c.misses;
+            t.evictions += c.evictions;
+        }
+        t
+    }
+
+    /// One line per context: `ctx=N hits=... misses=... evictions=...`.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (ctx, c) in &self.per_context {
+            let _ = writeln!(
+                out,
+                "ctx={ctx} hits={} misses={} evictions={} hit_rate={:.3}",
+                c.hits,
+                c.misses,
+                c.evictions,
+                c.hit_rate()
+            );
+        }
+        out
+    }
+}
 
 /// One sample of the run's externally visible state.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -196,10 +269,26 @@ mod tests {
     }
 
     #[test]
+    fn cache_stats_aggregate_per_context() {
+        let mut s = CacheStats::default();
+        s.ctx_mut(0).hits += 3;
+        s.ctx_mut(0).misses += 1;
+        s.ctx_mut(1).evictions += 2;
+        assert_eq!(s.ctx(0).hits, 3);
+        assert!((s.ctx(0).hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.ctx(2), ContextCacheCounters::default());
+        let t = s.totals();
+        assert_eq!((t.hits, t.misses, t.evictions), (3, 1, 2));
+        let r = s.report();
+        assert!(r.contains("ctx=0") && r.contains("ctx=1"));
+    }
+
+    #[test]
     fn run_summary_stats() {
         use crate::cluster::GpuModel;
         let rec = |d: f64| TaskRecord {
             task: 0,
+            context: 0,
             worker: 0,
             gpu: GpuModel::A10,
             attempts: 1,

@@ -13,8 +13,10 @@
 //! * [`worker`] — workers: 1 GPU, 1 task at a time, local cache (§5.3.2).
 //! * [`transfer`] — peer-transfer planner: spanning-tree context
 //!   distribution with per-source fan-out cap N (§5.3.1).
-//! * [`scheduler`] — the manager: ready queue, context-aware dispatch,
-//!   eviction detection + requeue, completion bookkeeping (§5.1).
+//! * [`scheduler`] — the manager: ready queue, a multi-application
+//!   **context registry** with cache-affinity dispatch (warm library →
+//!   partial cache → cold, scored by `CostModel` estimates), eviction
+//!   detection + requeue, completion bookkeeping (§5.1).
 //! * [`factory`] — the daemon reconciling the worker pool against cluster
 //!   availability (§5.1, "TaskVine factory").
 //! * [`costmodel`] — calibrated service-time model used by the simulated
@@ -37,10 +39,11 @@ pub mod worker;
 
 pub use batcher::Batcher;
 pub use context::{Component, ComponentKind, ContextId, ContextPolicy, ContextRecipe, DataOrigin};
+pub use costmodel::CostModel;
 pub use library::LibraryState;
-pub use metrics::{Metrics, RunSummary};
+pub use metrics::{CacheStats, ContextCacheCounters, Metrics, RunSummary};
 pub use scheduler::{Dispatch, Scheduler};
-pub use sim_driver::{SimConfig, SimDriver, SimOutcome};
+pub use sim_driver::{AppSpec, SimConfig, SimDriver, SimOutcome};
 pub use task::{Task, TaskId, TaskRecord, TaskState};
 pub use transfer::TransferPlanner;
-pub use worker::{Worker, WorkerId};
+pub use worker::{Worker, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};

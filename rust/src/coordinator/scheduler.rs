@@ -6,13 +6,27 @@
 //! phase/task completions, and it answers with dispatch plans. This is
 //! what lets the full-scale simulated experiments and the real-inference
 //! live mode exercise the *same* coordination code.
+//!
+//! Multi-application serving: the scheduler holds a **context registry**
+//! (many [`ContextRecipe`]s), every task carries a [`ContextId`], and
+//! dispatch scores each idle worker by *cache affinity* — the estimated
+//! seconds of context acquisition the placement would pay, from zero (a
+//! ready library) through partial cache hits up to a full cold stage.
+//! Worker caches are finite, so competing contexts evict each other LRU
+//! (never a context with an in-flight task); per-context hit/miss/evict
+//! counters land in [`CacheStats`].
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
-use super::context::{ComponentKind, ContextId, ContextPolicy, ContextRecipe};
+use super::context::{
+    ComponentKind, ContextId, ContextPolicy, ContextRecipe, DataOrigin,
+};
+use super::costmodel::CostModel;
+use super::library::LibraryState;
+use super::metrics::CacheStats;
 use super::task::{Task, TaskId, TaskRecord, TaskState};
 use super::transfer::{StageSource, TransferPlanner};
-use super::worker::{Worker, WorkerId};
+use super::worker::{Worker, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};
 use crate::cluster::Node;
 
 /// One phase of a task's execution plan on a specific worker.
@@ -66,8 +80,14 @@ pub struct Progress {
 #[derive(Debug)]
 pub struct Scheduler {
     policy: ContextPolicy,
-    recipe: ContextRecipe,
+    /// The context registry: every application's recipe, keyed by id.
+    recipes: BTreeMap<ContextId, ContextRecipe>,
     planner: TransferPlanner,
+    /// Deterministic estimates backing the affinity score.
+    cost: CostModel,
+    /// Cache capacity handed to every joining worker.
+    cache_capacity_bytes: u64,
+    cache_stats: CacheStats,
     tasks: BTreeMap<TaskId, Task>,
     ready: VecDeque<TaskId>,
     workers: BTreeMap<WorkerId, Worker>,
@@ -79,15 +99,43 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Single-application convenience constructor (the paper's pv runs).
     pub fn new(
         policy: ContextPolicy,
         recipe: ContextRecipe,
         planner: TransferPlanner,
     ) -> Self {
+        Self::with_registry(
+            policy,
+            vec![recipe],
+            planner,
+            CostModel::default(),
+            DEFAULT_CACHE_CAPACITY_BYTES,
+        )
+    }
+
+    /// Multi-application constructor: register every recipe up front and
+    /// bound each worker's cache at `cache_capacity_bytes`.
+    pub fn with_registry(
+        policy: ContextPolicy,
+        recipes: Vec<ContextRecipe>,
+        planner: TransferPlanner,
+        cost: CostModel,
+        cache_capacity_bytes: u64,
+    ) -> Self {
+        assert!(!recipes.is_empty(), "context registry must not be empty");
+        let mut map = BTreeMap::new();
+        for r in recipes {
+            let prev = map.insert(r.id, r);
+            assert!(prev.is_none(), "duplicate context id in registry");
+        }
         Self {
             policy,
-            recipe,
+            recipes: map,
             planner,
+            cost,
+            cache_capacity_bytes,
+            cache_stats: CacheStats::default(),
             tasks: BTreeMap::new(),
             ready: VecDeque::new(),
             workers: BTreeMap::new(),
@@ -102,14 +150,34 @@ impl Scheduler {
         self.policy
     }
 
-    pub fn recipe(&self) -> &ContextRecipe {
-        &self.recipe
+    /// Register another application's recipe mid-run.
+    pub fn register_recipe(&mut self, recipe: ContextRecipe) {
+        let prev = self.recipes.insert(recipe.id, recipe);
+        assert!(prev.is_none(), "duplicate context id in registry");
     }
 
-    /// Submit the workload (tasks enter the ready queue in id order).
+    pub fn recipe(&self, ctx: ContextId) -> Option<&ContextRecipe> {
+        self.recipes.get(&ctx)
+    }
+
+    pub fn recipes(&self) -> impl Iterator<Item = &ContextRecipe> {
+        self.recipes.values()
+    }
+
+    pub fn cache_stats(&self) -> &CacheStats {
+        &self.cache_stats
+    }
+
+    /// Submit the workload (tasks enter the ready queue in given order).
     pub fn submit_tasks(&mut self, tasks: Vec<Task>) {
         for t in tasks {
             assert!(t.is_ready());
+            assert!(
+                self.recipes.contains_key(&t.context),
+                "task {} references unregistered context {}",
+                t.id,
+                t.context
+            );
             self.ready.push_back(t.id);
             self.tasks.insert(t.id, t);
         }
@@ -121,7 +189,8 @@ impl Scheduler {
     pub fn worker_join(&mut self, node: Node, now: f64) -> WorkerId {
         let id = self.next_worker_id;
         self.next_worker_id += 1;
-        self.workers.insert(id, Worker::new(id, node, now));
+        self.workers
+            .insert(id, Worker::new(id, node, now, self.cache_capacity_bytes));
         id
     }
 
@@ -180,9 +249,67 @@ impl Scheduler {
 
     // ----------------------------------------------------------- dispatch
 
-    /// Assign ready tasks to idle workers. Context-aware placement: among
-    /// idle workers, those with a ready library for the task's context go
-    /// first (zero-overhead execution), then faster GPUs.
+    /// Estimated context-acquisition seconds if the next task of `ctx`
+    /// ran on `w` right now: 0 for a ready library under Pervasive,
+    /// otherwise sandbox + the stage cost of every missing component
+    /// (peer-rate when some connected worker caches it) + materialization
+    /// on this worker's GPU. This is the affinity score — lower is
+    /// better, and a fully-warm worker always beats a cold one.
+    fn acquisition_estimate_s(
+        &self,
+        w: &Worker,
+        ctx: ContextId,
+        peer_kinds: &HashSet<ComponentKind>,
+    ) -> f64 {
+        if self.policy.retains_materialized() && w.library.is_ready_for(ctx) {
+            return 0.0;
+        }
+        let recipe = &self.recipes[&ctx];
+        let mut est = 0.0;
+        if !self.policy.retains_materialized() {
+            est += self.cost.est_sandbox_s();
+        }
+        let cache = self.policy.caches_files();
+        for c in &recipe.components {
+            if cache && w.has_cached(ctx, c.kind) {
+                continue;
+            }
+            let peer = cache && peer_kinds.contains(&c.kind);
+            est += self.cost.est_stage_s(
+                c.size_bytes,
+                c.effective_origin(cache),
+                peer,
+            );
+        }
+        est + self.cost.est_materialize_s(w.gpu())
+    }
+
+    /// Is `w` fully warm for `ctx` under the current policy — i.e. would
+    /// a task of `ctx` start useful work with zero staging?
+    fn warm_for(&self, w: &Worker, ctx: ContextId) -> bool {
+        if self.policy.retains_materialized() {
+            w.library.is_ready_for(ctx)
+        } else if self.policy.caches_files() {
+            self.recipes[&ctx]
+                .cached_components(self.policy)
+                .iter()
+                .all(|c| w.has_cached(ctx, c.kind))
+        } else {
+            false
+        }
+    }
+
+    /// Assign ready tasks to idle workers with context-affine placement:
+    ///
+    /// 1. **Warm pairing** — every idle worker that is fully warm for
+    ///    some context claims the earliest queued task of that context
+    ///    (bounded look-ahead), so a freed worker keeps serving its
+    ///    resident application instead of thrashing its cache on
+    ///    whatever tenant happens to head the queue.
+    /// 2. **FIFO + affinity scoring** — remaining tasks go in queue
+    ///    order to the idle worker with the cheapest estimated context
+    ///    acquisition (partial cache hits, peer availability, GPU-scaled
+    ///    materialization), tie-broken by GPU speed (desc) then id.
     pub fn try_dispatch(&mut self) -> Vec<Dispatch> {
         let mut out = Vec::new();
         if self.ready.is_empty() {
@@ -197,53 +324,128 @@ impl Scheduler {
         if idle.is_empty() {
             return out;
         }
-        // Ready-context workers first, then by GPU speed (desc), id
-        // tiebreak. The single-idle-worker case (every task completion in
-        // steady state) skips the sort entirely (§Perf L3 iteration 3).
-        if idle.len() > 1 {
-            idle.sort_by(|a, b| {
-                let (wa, wb) = (&self.workers[a], &self.workers[b]);
-                let next_ctx = self.recipe.id;
-                let ra = wa.library.is_ready_for(next_ctx);
-                let rb = wb.library.is_ready_for(next_ctx);
-                rb.cmp(&ra)
-                    .then(
-                        wb.relative_speed()
-                            .partial_cmp(&wa.relative_speed())
-                            .unwrap(),
-                    )
-                    .then(wa.id.cmp(&wb.id))
-            });
+        idle.sort_unstable();
+
+        // How deep into the ready queue warm pairing may reach. Warm
+        // matches can bypass the queue front (including a requeued
+        // evicted task) while no idle worker is warm for its context —
+        // deliberately throughput-greedy; whenever warm matches run out,
+        // the FIFO phase below dispatches the front task, so nothing is
+        // starved past the warm stream. A fairness/latency knob on top
+        // of this is a ROADMAP open item (per-context fair share).
+        const LOOKAHEAD: usize = 64;
+
+        let mut paired: Vec<(TaskId, WorkerId)> = Vec::new();
+        let mut i = 0;
+        while i < idle.len() {
+            let wid = idle[i];
+            let w = &self.workers[&wid];
+            let mut found = None;
+            for (pos, tid) in self.ready.iter().enumerate().take(LOOKAHEAD) {
+                let ctx = self.tasks[tid].context;
+                if self.warm_for(w, ctx) {
+                    found = Some((pos, *tid));
+                    break;
+                }
+            }
+            if let Some((pos, tid)) = found {
+                let _ = self.ready.remove(pos);
+                let _ = idle.remove(i);
+                paired.push((tid, wid));
+            } else {
+                i += 1;
+            }
         }
 
-        out.reserve(idle.len().min(self.ready.len()));
-        for wid in idle {
+        // Which component kinds have *some* cached copy in the pool, per
+        // context (computed lazily once per context per call — cache
+        // contents only change on phase completions, which cannot
+        // interleave with this loop).
+        let mut peer_cached: HashMap<ContextId, HashSet<ComponentKind>> =
+            HashMap::new();
+
+        while !idle.is_empty() {
             let Some(task_id) = self.ready.pop_front() else { break };
+            let ctx = self.tasks[&task_id].context;
+            if !peer_cached.contains_key(&ctx) {
+                let mut set = HashSet::new();
+                if self.policy.caches_files() {
+                    for w in self.workers.values() {
+                        for c in &self.recipes[&ctx].components {
+                            if w.has_cached(ctx, c.kind) {
+                                set.insert(c.kind);
+                            }
+                        }
+                    }
+                }
+                peer_cached.insert(ctx, set);
+            }
+            let kinds = &peer_cached[&ctx];
+
+            let mut best: Option<(usize, f64)> = None;
+            for (i, wid) in idle.iter().enumerate() {
+                let w = &self.workers[wid];
+                let est = self.acquisition_estimate_s(w, ctx, kinds);
+                let replace = match &best {
+                    None => true,
+                    Some((bi, best_est)) => {
+                        let bw = &self.workers[&idle[*bi]];
+                        match est.partial_cmp(best_est).unwrap() {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Greater => false,
+                            std::cmp::Ordering::Equal => match bw
+                                .relative_speed()
+                                .partial_cmp(&w.relative_speed())
+                                .unwrap()
+                            {
+                                std::cmp::Ordering::Less => true,
+                                std::cmp::Ordering::Greater => false,
+                                std::cmp::Ordering::Equal => w.id < bw.id,
+                            },
+                        }
+                    }
+                };
+                if replace {
+                    best = Some((i, est));
+                }
+            }
+            let (best_i, _) = best.expect("idle is non-empty");
+            let wid = idle.swap_remove(best_i);
+            paired.push((task_id, wid));
+        }
+
+        // Materialize the pairings in order (plans claim peer upload
+        // slots, so warm pairings go first — they claim none).
+        for (task_id, wid) in paired {
+            let ctx = self.tasks[&task_id].context;
             let phases = self.build_plan(task_id, wid);
             let task = self.tasks.get_mut(&task_id).unwrap();
             task.state = TaskState::Running { worker: wid };
             task.attempts += 1;
-            self.workers.get_mut(&wid).unwrap().running = Some(task_id);
-            self.in_flight
-                .insert(task_id, (wid, phases.clone(), 0));
+            let w = self.workers.get_mut(&wid).unwrap();
+            w.running = Some(task_id);
+            w.touch_context(ctx);
+            self.in_flight.insert(task_id, (wid, phases.clone(), 0));
             out.push(Dispatch { task: task_id, worker: wid, phases });
         }
         out
     }
 
     /// Build the phase plan for `task` on `worker` under the current
-    /// policy and cache state. Claims peer upload slots immediately.
+    /// policy and cache state. Claims peer upload slots immediately and
+    /// charges per-context cache hit/miss counters.
     fn build_plan(&mut self, task_id: TaskId, wid: WorkerId) -> Vec<PhaseKind> {
         let task = &self.tasks[&task_id];
         let ctx = task.context;
         let inferences = task.count;
         let mut phases = Vec::new();
 
-        let lib_ready =
-            self.workers[&wid].library.is_ready_for(ctx);
+        let lib_ready = self.workers[&wid].library.is_ready_for(ctx);
+        let n_components = self.recipes[&ctx].components.len() as u64;
 
         if self.policy.retains_materialized() && lib_ready {
             // Pervasive fast path: context resident, just run.
+            self.cache_stats.ctx_mut(ctx).hits += n_components;
             phases.push(PhaseKind::Execute { inferences });
             return phases;
         }
@@ -252,34 +454,23 @@ impl Scheduler {
             phases.push(PhaseKind::Sandbox);
         }
 
-        // Stage whatever this worker is missing. Registering a component
-        // as managed context (Partial/Pervasive) re-homes internet-origin
-        // data onto the cluster's shared storage: the manager fetches it
-        // once at registration and the workers stage from inside the
-        // cluster — pv1's per-task "download its own copy of the model
-        // from the Internet" (§6.3 Effort 1) is exactly the unregistered
-        // path.
+        // Stage whatever this worker is missing (Partial/Pervasive stage
+        // from the component's re-homed origin, see
+        // `Component::effective_origin`).
         let cache = self.policy.caches_files();
-        let components: Vec<(ComponentKind, u64, super::context::DataOrigin)> =
-            self.recipe
-                .components
-                .iter()
-                .map(|c| {
-                    let origin = if cache
-                        && c.origin == super::context::DataOrigin::Internet
-                    {
-                        super::context::DataOrigin::SharedFs
-                    } else {
-                        c.origin
-                    };
-                    (c.kind, c.size_bytes, origin)
-                })
-                .collect();
+        let components: Vec<(ComponentKind, u64, DataOrigin)> = self.recipes
+            [&ctx]
+            .components
+            .iter()
+            .map(|c| (c.kind, c.size_bytes, c.effective_origin(cache)))
+            .collect();
         for (kind, bytes, origin) in components {
             let have = cache && self.workers[&wid].has_cached(ctx, kind);
             if have {
+                self.cache_stats.ctx_mut(ctx).hits += 1;
                 continue;
             }
+            self.cache_stats.ctx_mut(ctx).misses += 1;
             // Pick a source: peer with the component cached + free slot,
             // else origin. (Peers only useful when caching is on.)
             let source = if cache {
@@ -325,16 +516,34 @@ impl Scheduler {
         let next_phase = phases.get(*next).copied();
 
         match done {
-            PhaseKind::Stage { component, source, cache, .. } => {
+            PhaseKind::Stage { component, bytes, source, cache } => {
                 if let StageSource::Peer(src) = source {
                     if let Some(peer) = self.workers.get_mut(&src) {
                         peer.release_upload();
                     }
                 }
                 if cache {
+                    let ctx = self.tasks[&task_id].context;
                     if let Some(w) = self.workers.get_mut(&wid) {
-                        let ctx = self.tasks[&task_id].context;
-                        w.insert_cached(ctx, component);
+                        // The in-flight task's context is pinned: with one
+                        // task per worker that is exactly `ctx`.
+                        let (_cached, evicted) =
+                            w.insert_cached(ctx, component, bytes, Some(ctx));
+                        for e in evicted {
+                            // Evicting a context's files also retires its
+                            // materialized library, if it holds one.
+                            let lib_ctx = match w.library {
+                                LibraryState::Ready { context }
+                                | LibraryState::Materializing { context } => {
+                                    Some(context)
+                                }
+                                LibraryState::Absent => None,
+                            };
+                            if lib_ctx == Some(e) {
+                                w.library.teardown();
+                            }
+                            self.cache_stats.ctx_mut(e).evictions += 1;
+                        }
                     }
                 }
             }
@@ -411,6 +620,11 @@ impl Scheduler {
         self.tasks.get(&id).map(|t| (t.attempts, t.count))
     }
 
+    /// Context a task is bound to (for completion records).
+    pub fn task_context(&self, id: TaskId) -> Option<ContextId> {
+        self.tasks.get(&id).map(|t| t.context)
+    }
+
     /// Task-conservation invariant: every task is exactly one of
     /// ready / running / done. Called by tests and (per-event) debug
     /// assertions — O(1) via the completion counter.
@@ -418,6 +632,13 @@ impl Scheduler {
         self.ready.len() + self.in_flight.len()
             + self.progress.completed_tasks as usize
             == self.tasks.len()
+    }
+
+    /// Cache-capacity invariant: no worker's cache exceeds its capacity.
+    pub fn check_cache_capacity(&self) -> bool {
+        self.workers
+            .values()
+            .all(|w| w.cached_bytes_total() <= w.cache_capacity())
     }
 }
 
@@ -432,6 +653,19 @@ mod tests {
         Scheduler::new(policy, recipe, TransferPlanner::new(3))
     }
 
+    fn mk_multi(policy: ContextPolicy, capacity: u64) -> Scheduler {
+        Scheduler::with_registry(
+            policy,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "big-pff", 5_000_000_000, 10_000_000_000),
+            ],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            capacity,
+        )
+    }
+
     fn node(id: u32, gpu: GpuModel) -> Node {
         Node { id, gpu }
     }
@@ -443,6 +677,7 @@ mod tests {
     fn record(task: TaskId, worker: WorkerId, n: u64) -> TaskRecord {
         TaskRecord {
             task,
+            context: 0,
             worker,
             gpu: GpuModel::A10,
             attempts: 1,
@@ -666,5 +901,93 @@ mod tests {
         }
         assert_eq!(s.progress().completed_tasks, 10);
         assert_eq!(s.progress().completed_inferences, 100);
+    }
+
+    // ------------------------------------------------- multi-application
+
+    /// Submit one task per context and warm one worker per context; the
+    /// affinity score must route each follow-up task back to its warm
+    /// worker even when a faster cold worker is idle.
+    #[test]
+    fn multi_context_affinity_partitions_workers() {
+        let mut s = mk_multi(ContextPolicy::Pervasive, u64::MAX);
+        // Interleaved tasks of ctx 0 and ctx 1.
+        s.submit_tasks(vec![
+            Task::new(0, 0, 10, 0),
+            Task::new(1, 0, 10, 1),
+            Task::new(2, 10, 10, 0),
+            Task::new(3, 10, 10, 1),
+        ]);
+        let w0 = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let w1 = s.worker_join(node(1, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        assert_eq!(d1.len(), 2);
+        for d in &d1 {
+            complete(&mut s, d);
+        }
+        let warm0 = d1.iter().find(|d| d.task == 0).unwrap().worker;
+        let warm1 = d1.iter().find(|d| d.task == 1).unwrap().worker;
+        assert_eq!({ let mut v = vec![warm0, warm1]; v.sort(); v }, vec![w0, w1]);
+
+        // Round 2: each context's task lands on its warm worker with a
+        // bare Execute plan.
+        let d2 = s.try_dispatch();
+        assert_eq!(d2.len(), 2);
+        let t2 = d2.iter().find(|d| d.task == 2).unwrap();
+        let t3 = d2.iter().find(|d| d.task == 3).unwrap();
+        assert_eq!(t2.worker, warm0, "ctx-0 task follows its warm worker");
+        assert_eq!(t3.worker, warm1, "ctx-1 task follows its warm worker");
+        assert_eq!(t2.phases.len(), 1);
+        assert_eq!(t3.phases.len(), 1);
+    }
+
+    #[test]
+    fn cache_stats_count_misses_then_hits() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 10));
+        s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        let after_first = s.cache_stats().ctx(0);
+        assert_eq!(after_first.misses, 5, "cold worker misses all 5");
+        assert_eq!(after_first.hits, 0);
+        let d2 = s.try_dispatch();
+        complete(&mut s, &d2[0]);
+        let after_second = s.cache_stats().ctx(0);
+        assert_eq!(after_second.misses, 5);
+        assert_eq!(after_second.hits, 5, "warm fast path hits all 5");
+    }
+
+    /// Two big contexts on a worker whose cache fits only one: finishing
+    /// a task of the other context LRU-evicts the first, the eviction is
+    /// counted, and the evicted context's library is retired.
+    #[test]
+    fn cache_pressure_evicts_cold_context_and_counts_it() {
+        // Capacity fits either context alone (A ≈ 7.4 GB, B = 15 GB
+        // + small parts) but not both.
+        let mut s = mk_multi(ContextPolicy::Pervasive, 16_000_000_000);
+        s.submit_tasks(vec![
+            Task::new(0, 0, 10, 0),
+            Task::new(1, 0, 10, 1),
+        ]);
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        assert_eq!(d1.len(), 1);
+        assert_eq!(d1[0].task, 0);
+        complete(&mut s, &d1[0]);
+        assert!(s.worker(w).unwrap().library.is_ready_for(0));
+
+        let d2 = s.try_dispatch();
+        assert_eq!(d2[0].task, 1);
+        complete(&mut s, &d2[0]);
+        let w_ref = s.worker(w).unwrap();
+        // Context 0 was evicted to make room for context 1.
+        assert_eq!(s.cache_stats().ctx(0).evictions, 1);
+        assert!(!w_ref.has_cached(0, ComponentKind::ModelWeights));
+        assert!(w_ref.has_cached(1, ComponentKind::ModelWeights));
+        // The worker's library now belongs to context 1 (materialized by
+        // task 1), and occupancy respects capacity throughout.
+        assert!(w_ref.library.is_ready_for(1));
+        assert!(s.check_cache_capacity());
     }
 }

@@ -8,21 +8,30 @@
 //! and cluster actions into worker lifecycle calls, exactly like the live
 //! PJRT driver does with real work.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
+use super::batcher::Batcher;
 use super::context::{ContextPolicy, ContextRecipe, DataOrigin};
 use super::costmodel::CostModel;
 use super::factory::{Factory, FactoryPolicy};
-use super::metrics::{MetricPoint, Metrics, RunSummary};
+use super::metrics::{CacheStats, MetricPoint, Metrics, RunSummary};
 use super::scheduler::{Dispatch, PhaseKind, Scheduler};
 use super::task::{Task, TaskId, TaskRecord};
 use super::transfer::{StageSource, TransferPlanner};
-use super::worker::WorkerId;
+use super::worker::{WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};
 use crate::cluster::{
     ClusterAction, ClusterSim, GpuModel, LoadTrace, Node, SharedFilesystem,
 };
 use crate::simulation::{EventKind, SimEngine};
 use crate::util::Rng;
+
+/// One application (context + workload) in a multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub recipe: ContextRecipe,
+    pub total_inferences: u64,
+    pub batch_size: u64,
+}
 
 /// Full experiment configuration.
 #[derive(Debug, Clone)]
@@ -46,6 +55,15 @@ pub struct SimConfig {
     /// GPUs join the pool"). 0.0 disables the gate.
     pub start_gate_fraction: f64,
     pub recipe: ContextRecipe,
+    /// Multi-application workloads: when non-empty, `recipe`,
+    /// `batch_size` and `total_inferences` above are ignored and each
+    /// app's task stream is round-robin interleaved so tenants compete
+    /// for the pool (and for worker caches) from the first dispatch.
+    pub apps: Vec<AppSpec>,
+    /// Per-worker context-cache capacity in bytes (the ~70 GB scratch
+    /// disk of §5.3.2 by default; mixed experiments shrink it to force
+    /// genuine cache competition).
+    pub worker_cache_bytes: u64,
 }
 
 impl SimConfig {
@@ -74,6 +92,8 @@ impl SimConfig {
             metrics_dt: 10.0,
             start_gate_fraction: 0.95,
             recipe: ContextRecipe::smollm2_pff(0),
+            apps: Vec::new(),
+            worker_cache_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
         }
     }
 }
@@ -84,6 +104,8 @@ pub struct SimOutcome {
     pub summary: RunSummary,
     pub series: Vec<MetricPoint>,
     pub records: Vec<TaskRecord>,
+    /// Per-context cache hit/miss/evict counters (multi-app telemetry).
+    pub cache: CacheStats,
     /// Sim time at which the start gate opened (t=0 of the measurement).
     pub started_at: f64,
     pub finished_at: f64,
@@ -125,10 +147,17 @@ impl SimDriver {
         let mut cluster =
             ClusterSim::new(cfg.nodes.clone(), cfg.trace.clone(), cluster_rng);
         cluster.reclaim_priority = cfg.reclaim_priority.clone();
-        let sched = Scheduler::new(
+        let recipes: Vec<ContextRecipe> = if cfg.apps.is_empty() {
+            vec![cfg.recipe.clone()]
+        } else {
+            cfg.apps.iter().map(|a| a.recipe.clone()).collect()
+        };
+        let sched = Scheduler::with_registry(
             cfg.policy,
-            cfg.recipe.clone(),
+            recipes,
             TransferPlanner::new(cfg.fanout_cap),
+            cfg.cost.clone(),
+            cfg.worker_cache_bytes,
         );
         let factory = Factory::new(cfg.factory);
         Self {
@@ -150,9 +179,46 @@ impl SimDriver {
     /// Run to completion; panics if the event heap drains with tasks
     /// outstanding and no possibility of progress (a driver bug).
     pub fn run(mut self) -> SimOutcome {
-        // Workload.
-        let tasks: Vec<Task> = super::batcher::Batcher::new(self.cfg.batch_size)
-            .split(self.cfg.total_inferences, self.cfg.recipe.id, 0);
+        // Workload. Multi-app runs interleave the tenants' task streams
+        // round-robin (dense merged ids) so both applications contend for
+        // workers — and worker caches — from the first dispatch.
+        let tasks: Vec<Task> = if self.cfg.apps.is_empty() {
+            Batcher::new(self.cfg.batch_size).split(
+                self.cfg.total_inferences,
+                self.cfg.recipe.id,
+                0,
+            )
+        } else {
+            let mut streams: Vec<VecDeque<Task>> = self
+                .cfg
+                .apps
+                .iter()
+                .map(|a| {
+                    VecDeque::from(Batcher::new(a.batch_size).split(
+                        a.total_inferences,
+                        a.recipe.id,
+                        0,
+                    ))
+                })
+                .collect();
+            let mut merged = Vec::new();
+            let mut id = 0u64;
+            loop {
+                let mut any = false;
+                for s in &mut streams {
+                    if let Some(mut t) = s.pop_front() {
+                        t.id = id;
+                        id += 1;
+                        merged.push(t);
+                        any = true;
+                    }
+                }
+                if !any {
+                    break;
+                }
+            }
+            merged
+        };
         self.sched.submit_tasks(tasks);
 
         // Trace steps + first metrics tick.
@@ -241,6 +307,7 @@ impl SimDriver {
             summary,
             series: self.metrics.points().to_vec(),
             records,
+            cache: self.sched.cache_stats().clone(),
             started_at,
             finished_at,
         }
@@ -373,6 +440,7 @@ impl SimDriver {
                     self.sched.task_meta(task).unwrap_or((1, 0));
                 let record = TaskRecord {
                     task,
+                    context: self.sched.task_context(task).unwrap_or(0),
                     worker,
                     gpu,
                     attempts,
@@ -558,6 +626,45 @@ mod tests {
         // Workers take ~5-18s to start; the gate needs 19 of 20.
         assert!(out.started_at > 0.0);
         assert!(out.finished_at > out.started_at);
+    }
+
+    #[test]
+    fn mixed_apps_complete_and_tag_records() {
+        let mut cfg = small_cfg(ContextPolicy::Pervasive, 100);
+        cfg.apps = vec![
+            AppSpec {
+                recipe: ContextRecipe::smollm2_pff(0),
+                total_inferences: 1_000,
+                batch_size: 50,
+            },
+            AppSpec {
+                recipe: ContextRecipe::custom(
+                    1,
+                    "big-pff",
+                    5_000_000_000,
+                    10_000_000_000,
+                ),
+                total_inferences: 1_000,
+                batch_size: 50,
+            },
+        ];
+        let out = SimDriver::new(cfg).run();
+        assert_eq!(out.summary.completed_inferences, 2_000);
+        let c0: u64 = out
+            .records
+            .iter()
+            .filter(|r| r.context == 0)
+            .map(|r| r.inferences)
+            .sum();
+        let c1: u64 = out
+            .records
+            .iter()
+            .filter(|r| r.context == 1)
+            .map(|r| r.inferences)
+            .sum();
+        assert_eq!((c0, c1), (1_000, 1_000));
+        assert!(out.cache.ctx(0).misses > 0, "ctx 0 staged something");
+        assert!(out.cache.ctx(1).misses > 0, "ctx 1 staged something");
     }
 
     #[test]

@@ -58,6 +58,9 @@ impl Task {
 #[derive(Debug, Clone)]
 pub struct TaskRecord {
     pub task: TaskId,
+    /// The context (application) this task ran against — the key the
+    /// mixed-workload reports aggregate by.
+    pub context: ContextId,
     pub worker: WorkerId,
     pub gpu: GpuModel,
     pub attempts: u32,
@@ -102,6 +105,7 @@ mod tests {
     fn record_exec_time() {
         let r = TaskRecord {
             task: 1,
+            context: 0,
             worker: 2,
             gpu: GpuModel::A10,
             attempts: 1,

@@ -139,7 +139,12 @@ mod tests {
     use crate::cluster::{GpuModel, Node};
 
     fn mk_worker(id: WorkerId) -> Worker {
-        Worker::new(id, Node { id, gpu: GpuModel::A10 }, 0.0)
+        Worker::new(
+            id,
+            Node { id, gpu: GpuModel::A10 },
+            0.0,
+            crate::coordinator::worker::DEFAULT_CACHE_CAPACITY_BYTES,
+        )
     }
 
     #[test]
@@ -160,7 +165,7 @@ mod tests {
     fn peer_preferred_and_slot_claimed() {
         let planner = TransferPlanner::new(1);
         let mut peers = vec![mk_worker(0), mk_worker(1)];
-        peers[0].insert_cached(0, ComponentKind::ModelWeights);
+        peers[0].insert_cached(0, ComponentKind::ModelWeights, 1_000, None);
         let src = planner.pick_source(
             0,
             ComponentKind::ModelWeights,
@@ -184,7 +189,7 @@ mod tests {
     fn dest_never_picked_as_its_own_source() {
         let planner = TransferPlanner::default();
         let mut peers = vec![mk_worker(5)];
-        peers[0].insert_cached(0, ComponentKind::ModelWeights);
+        peers[0].insert_cached(0, ComponentKind::ModelWeights, 1_000, None);
         let src = planner.pick_source(
             0,
             ComponentKind::ModelWeights,

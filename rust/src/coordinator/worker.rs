@@ -5,8 +5,15 @@
 //! and fast GPUs naturally pull more tasks (the heterogeneity answer to
 //! Challenge #4). A worker owns a local cache of context components and
 //! at most one library process.
+//!
+//! The cache is **finite**: a worker slot ships with ~70 GB of scratch
+//! disk (§5.3.2), so under multi-application serving the cached contexts
+//! genuinely compete for space. Eviction is LRU at *context* granularity
+//! (a half-evicted context is worthless — the next task would re-stage
+//! the missing half anyway), and a context needed by the worker's
+//! in-flight task is pinned and never evicted.
 
-use std::collections::HashSet;
+use std::collections::HashMap;
 
 use super::context::{ComponentKind, ContextId};
 use super::library::LibraryState;
@@ -16,15 +23,25 @@ use crate::cluster::{GpuModel, Node, NodeId};
 /// Dense worker identifier (never reused within a run).
 pub type WorkerId = u32;
 
+/// Default per-worker cache capacity: the ~70 GB scratch disk of the
+/// paper's worker sizing policy (§5.3.2).
+pub const DEFAULT_CACHE_CAPACITY_BYTES: u64 = 70_000_000_000;
+
 /// One connected worker.
 #[derive(Debug, Clone)]
 pub struct Worker {
     pub id: WorkerId,
     pub node: Node,
     pub joined_at: f64,
-    /// Context components staged in the local cache (survives tasks under
-    /// Partial/Pervasive; wiped with the worker on eviction).
-    cache: HashSet<(ContextId, ComponentKind)>,
+    /// Context components staged in the local cache, with their sizes
+    /// (survives tasks under Partial/Pervasive; wiped with the worker on
+    /// cluster eviction).
+    cache: HashMap<(ContextId, ComponentKind), u64>,
+    cache_used: u64,
+    cache_capacity: u64,
+    /// Last-use stamp per context with cached bytes (LRU bookkeeping).
+    lru: HashMap<ContextId, u64>,
+    clock: u64,
     /// The (single) library process.
     pub library: LibraryState,
     /// Currently running task, if any (1-to-1 task:worker policy).
@@ -36,12 +53,21 @@ pub struct Worker {
 }
 
 impl Worker {
-    pub fn new(id: WorkerId, node: Node, joined_at: f64) -> Self {
+    pub fn new(
+        id: WorkerId,
+        node: Node,
+        joined_at: f64,
+        cache_capacity: u64,
+    ) -> Self {
         Self {
             id,
             node,
             joined_at,
-            cache: HashSet::new(),
+            cache: HashMap::new(),
+            cache_used: 0,
+            cache_capacity,
+            lru: HashMap::new(),
+            clock: 0,
             library: LibraryState::Absent,
             running: None,
             active_uploads: 0,
@@ -69,21 +95,110 @@ impl Worker {
     // ---------------------------------------------------------- cache ops
 
     pub fn has_cached(&self, ctx: ContextId, kind: ComponentKind) -> bool {
-        self.cache.contains(&(ctx, kind))
+        self.cache.contains_key(&(ctx, kind))
     }
 
-    pub fn insert_cached(&mut self, ctx: ContextId, kind: ComponentKind) {
-        self.cache.insert((ctx, kind));
-    }
-
+    /// Number of cached components (across all contexts).
     pub fn cached_count(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Bytes cached for one context.
+    pub fn cached_bytes(&self, ctx: ContextId) -> u64 {
+        self.cache
+            .iter()
+            .filter(|((c, _), _)| *c == ctx)
+            .map(|(_, b)| *b)
+            .sum()
+    }
+
+    /// Total cache occupancy in bytes (the capacity invariant's subject).
+    pub fn cached_bytes_total(&self) -> u64 {
+        self.cache_used
+    }
+
+    pub fn cache_capacity(&self) -> u64 {
+        self.cache_capacity
+    }
+
+    /// Mark `ctx` as recently used (dispatch of one of its tasks).
+    pub fn touch_context(&mut self, ctx: ContextId) {
+        self.clock += 1;
+        if let Some(stamp) = self.lru.get_mut(&ctx) {
+            *stamp = self.clock;
+        }
+    }
+
+    /// Insert one staged component, evicting least-recently-used *cold*
+    /// contexts wholesale until it fits. `pinned` (the context of the
+    /// worker's in-flight task) is never evicted, and neither is `ctx`
+    /// itself. Returns whether the component was cached plus the list of
+    /// contexts evicted to make room; if nothing evictable remains and
+    /// the component still does not fit, it is simply not cached (the
+    /// next task of that context re-stages it — correct, just slower).
+    pub fn insert_cached(
+        &mut self,
+        ctx: ContextId,
+        kind: ComponentKind,
+        bytes: u64,
+        pinned: Option<ContextId>,
+    ) -> (bool, Vec<ContextId>) {
+        let mut evicted = Vec::new();
+        if self.cache.contains_key(&(ctx, kind)) {
+            self.touch_context(ctx);
+            return (true, evicted);
+        }
+        if bytes > self.cache_capacity {
+            return (false, evicted);
+        }
+        while self.cache_used.saturating_add(bytes) > self.cache_capacity {
+            let victim = self
+                .lru
+                .iter()
+                .filter(|(c, _)| **c != ctx && Some(**c) != pinned)
+                .min_by_key(|(c, stamp)| (**stamp, **c))
+                .map(|(c, _)| *c);
+            let Some(victim) = victim else {
+                return (false, evicted);
+            };
+            self.evict_context(victim);
+            evicted.push(victim);
+        }
+        self.cache.insert((ctx, kind), bytes);
+        self.cache_used += bytes;
+        self.clock += 1;
+        self.lru.insert(ctx, self.clock);
+        (true, evicted)
+    }
+
+    /// Drop every cached component of `ctx`.
+    fn evict_context(&mut self, ctx: ContextId) {
+        let freed: u64 = self
+            .cache
+            .iter()
+            .filter(|((c, _), _)| *c == ctx)
+            .map(|(_, b)| *b)
+            .sum();
+        self.cache.retain(|(c, _), _| *c != ctx);
+        self.cache_used -= freed;
+        self.lru.remove(&ctx);
+    }
+
+    /// Contexts currently holding cached bytes, LRU-first (for tests and
+    /// observability).
+    pub fn cached_contexts_lru(&self) -> Vec<ContextId> {
+        let mut v: Vec<(ContextId, u64)> =
+            self.lru.iter().map(|(c, s)| (*c, *s)).collect();
+        v.sort_by_key(|(c, s)| (*s, *c));
+        v.into_iter().map(|(c, _)| c).collect()
     }
 
     /// Drop per-task sandbox state (None policy caches nothing anyway;
     /// this models the sandbox teardown of §5.2 observation 3).
     pub fn clear_cache(&mut self) {
         self.cache.clear();
+        self.lru.clear();
+        self.cache_used = 0;
     }
 
     // ------------------------------------------------------ transfer slots
@@ -111,7 +226,16 @@ mod tests {
     use crate::cluster::GpuModel;
 
     fn worker() -> Worker {
-        Worker::new(0, Node { id: 3, gpu: GpuModel::A10 }, 5.0)
+        Worker::new(
+            0,
+            Node { id: 3, gpu: GpuModel::A10 },
+            5.0,
+            DEFAULT_CACHE_CAPACITY_BYTES,
+        )
+    }
+
+    fn small_worker(capacity: u64) -> Worker {
+        Worker::new(0, Node { id: 0, gpu: GpuModel::A10 }, 0.0, capacity)
     }
 
     #[test]
@@ -119,6 +243,7 @@ mod tests {
         let w = worker();
         assert!(w.is_idle());
         assert_eq!(w.cached_count(), 0);
+        assert_eq!(w.cached_bytes_total(), 0);
         assert_eq!(w.library, LibraryState::Absent);
         assert_eq!(w.node_id(), 3);
         assert_eq!(w.relative_speed(), 1.0);
@@ -127,12 +252,68 @@ mod tests {
     #[test]
     fn cache_roundtrip() {
         let mut w = worker();
-        w.insert_cached(0, ComponentKind::DepsPackage);
+        w.insert_cached(0, ComponentKind::DepsPackage, 100, None);
         assert!(w.has_cached(0, ComponentKind::DepsPackage));
         assert!(!w.has_cached(0, ComponentKind::ModelWeights));
         assert!(!w.has_cached(1, ComponentKind::DepsPackage));
+        assert_eq!(w.cached_bytes(0), 100);
+        assert_eq!(w.cached_bytes_total(), 100);
         w.clear_cache();
         assert_eq!(w.cached_count(), 0);
+        assert_eq!(w.cached_bytes_total(), 0);
+    }
+
+    #[test]
+    fn duplicate_insert_does_not_double_count() {
+        let mut w = worker();
+        let (ok, _) = w.insert_cached(0, ComponentKind::ModelWeights, 50, None);
+        assert!(ok);
+        let (ok, _) = w.insert_cached(0, ComponentKind::ModelWeights, 50, None);
+        assert!(ok);
+        assert_eq!(w.cached_bytes_total(), 50);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_context_wholesale() {
+        let mut w = small_worker(100);
+        w.insert_cached(0, ComponentKind::DepsPackage, 30, None);
+        w.insert_cached(0, ComponentKind::ModelWeights, 30, None);
+        w.insert_cached(1, ComponentKind::DepsPackage, 30, None);
+        // Touch ctx 0 so ctx 1 is the cold one.
+        w.touch_context(0);
+        let (ok, evicted) =
+            w.insert_cached(2, ComponentKind::ModelWeights, 35, None);
+        assert!(ok);
+        assert_eq!(evicted, vec![1]);
+        // Context 1 is gone entirely; 0 and 2 survive.
+        assert!(!w.has_cached(1, ComponentKind::DepsPackage));
+        assert!(w.has_cached(0, ComponentKind::DepsPackage));
+        assert!(w.has_cached(0, ComponentKind::ModelWeights));
+        assert!(w.has_cached(2, ComponentKind::ModelWeights));
+        assert!(w.cached_bytes_total() <= w.cache_capacity());
+    }
+
+    #[test]
+    fn pinned_context_survives_pressure() {
+        let mut w = small_worker(100);
+        w.insert_cached(7, ComponentKind::ModelWeights, 60, Some(7));
+        // Inserting a huge component for ctx 8 cannot evict pinned 7, so
+        // it fails to cache and occupancy stays within capacity.
+        let (ok, evicted) =
+            w.insert_cached(8, ComponentKind::ModelWeights, 60, Some(7));
+        assert!(!ok);
+        assert!(evicted.is_empty());
+        assert!(w.has_cached(7, ComponentKind::ModelWeights));
+        assert!(w.cached_bytes_total() <= w.cache_capacity());
+    }
+
+    #[test]
+    fn oversized_component_never_caches() {
+        let mut w = small_worker(10);
+        let (ok, evicted) =
+            w.insert_cached(0, ComponentKind::ModelWeights, 11, None);
+        assert!(!ok && evicted.is_empty());
+        assert_eq!(w.cached_bytes_total(), 0);
     }
 
     #[test]

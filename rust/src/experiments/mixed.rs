@@ -1,0 +1,197 @@
+//! Mixed-workload experiment: **two PfF applications with distinct
+//! contexts sharing one opportunistic pool** — the multi-tenant scenario
+//! the context registry exists for.
+//!
+//! App A is the paper's SmolLM2-1.7B fact verifier (≈7.4 GB context);
+//! app B is a larger model (≈15 GB context). Worker caches are capped at
+//! 16 GB, so a worker can hold either context but never both — the two
+//! applications genuinely compete for cache, and dispatch has to use
+//! affinity (route tasks to workers already warm for their context) to
+//! keep LRU thrash down. Reported per policy with the paper's effort
+//! numbering: pv1 = None, pv2 = Partial, pv4 = Pervasive.
+
+use std::fmt::Write as _;
+
+use crate::cluster::node::pool_20_mixed;
+use crate::cluster::LoadTrace;
+use crate::coordinator::{
+    AppSpec, ContextPolicy, ContextRecipe, SimConfig, SimDriver, SimOutcome,
+};
+
+/// Policy axis of the mixed experiment (paper effort numbering).
+pub const POLICIES: [(&str, ContextPolicy); 3] = [
+    ("mixed_pv1", ContextPolicy::None),
+    ("mixed_pv2", ContextPolicy::Partial),
+    ("mixed_pv4", ContextPolicy::Pervasive),
+];
+
+/// Per-worker cache capacity for the mixed runs: fits either tenant's
+/// context alone (7.4 GB / 15 GB), never both.
+pub const MIXED_WORKER_CACHE_BYTES: u64 = 16_000_000_000;
+
+/// Default per-app workload of the CLI run (`pcm experiment mixed`).
+pub const DEFAULT_INFERENCES_PER_APP: u64 = 15_000;
+
+/// Build the two-tenant configuration for one policy.
+pub fn mixed_config(
+    id: impl Into<String>,
+    policy: ContextPolicy,
+    seed: u64,
+    inferences_per_app: u64,
+) -> SimConfig {
+    // Batch 10: small enough that the None policy's per-task context
+    // tax (re-download + re-materialize) dominates, exactly the paper's
+    // pv1 pathology — now paid by two tenants at once.
+    let mut cfg = SimConfig::new(
+        id,
+        policy,
+        10,
+        pool_20_mixed(),
+        LoadTrace::constant(20),
+        seed,
+    );
+    cfg.apps = vec![
+        AppSpec {
+            recipe: ContextRecipe::smollm2_pff(0),
+            total_inferences: inferences_per_app,
+            batch_size: 10,
+        },
+        AppSpec {
+            recipe: ContextRecipe::custom(
+                1,
+                "pff-large",
+                5_000_000_000,
+                10_000_000_000,
+            ),
+            total_inferences: inferences_per_app,
+            batch_size: 10,
+        },
+    ];
+    cfg.worker_cache_bytes = MIXED_WORKER_CACHE_BYTES;
+    cfg
+}
+
+/// One policy's mixed-run result.
+#[derive(Debug, Clone)]
+pub struct MixedResult {
+    pub id: String,
+    pub policy: ContextPolicy,
+    pub outcome: SimOutcome,
+}
+
+impl MixedResult {
+    /// Inferences completed for one context (from tagged task records).
+    pub fn completed_for(&self, ctx: u32) -> u64 {
+        self.outcome
+            .records
+            .iter()
+            .filter(|r| r.context == ctx)
+            .map(|r| r.inferences)
+            .sum()
+    }
+}
+
+/// Run the mixed experiment across all three policies.
+pub fn run_mixed(seed: u64, inferences_per_app: u64) -> Vec<MixedResult> {
+    POLICIES
+        .iter()
+        .map(|(id, policy)| MixedResult {
+            id: (*id).to_string(),
+            policy: *policy,
+            outcome: SimDriver::new(mixed_config(
+                *id,
+                *policy,
+                seed,
+                inferences_per_app,
+            ))
+            .run(),
+        })
+        .collect()
+}
+
+/// Render the mixed-experiment report: per-policy execution time plus
+/// per-context completion and cache hit/miss/evict counters.
+pub fn report(results: &[MixedResult]) -> String {
+    let mut out = String::new();
+    let none_time = results
+        .iter()
+        .find(|r| r.policy == ContextPolicy::None)
+        .map(|r| r.outcome.summary.exec_time_s)
+        .unwrap_or(f64::NAN);
+    let _ = writeln!(
+        out,
+        "mixed workload: {} tenant contexts sharing one 20-node pool \
+         (16 GB worker caches)",
+        results
+            .first()
+            .map(|r| r.outcome.cache.per_context.len())
+            .unwrap_or(0)
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>10} {:>12} {:>12} {:>10}",
+        "exp", "policy", "exec_time_s", "avg_workers", "vs_pv1"
+    );
+    for r in results {
+        let s = &r.outcome.summary;
+        let _ = writeln!(
+            out,
+            "{:<10} {:>10} {:>12.1} {:>12.1} {:>9.2}x",
+            r.id,
+            r.policy.as_str(),
+            s.exec_time_s,
+            s.avg_workers,
+            none_time / s.exec_time_s
+        );
+    }
+    let _ = writeln!(out, "\nper-context cache behaviour:");
+    for r in results {
+        for (ctx, c) in &r.outcome.cache.per_context {
+            let _ = writeln!(
+                out,
+                "{:<10} ctx={} done={:>7} hits={:>5} misses={:>5} \
+                 evictions={:>4} hit_rate={:.3}",
+                r.id,
+                ctx,
+                r.completed_for(*ctx),
+                c.hits,
+                c.misses,
+                c.evictions,
+                c.hit_rate()
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_has_two_competing_apps() {
+        let cfg = mixed_config("m", ContextPolicy::Pervasive, 1, 1_000);
+        assert_eq!(cfg.apps.len(), 2);
+        let total: u64 = cfg.apps.iter().map(|a| a.recipe.total_bytes()).sum();
+        assert!(
+            total > cfg.worker_cache_bytes,
+            "both contexts must not fit one worker cache"
+        );
+        for a in &cfg.apps {
+            assert!(
+                a.recipe.total_bytes() < cfg.worker_cache_bytes,
+                "each context alone must fit"
+            );
+        }
+    }
+
+    #[test]
+    fn report_renders_policies_and_contexts() {
+        let results = run_mixed(5, 500);
+        let text = report(&results);
+        assert!(text.contains("mixed_pv1"));
+        assert!(text.contains("mixed_pv4"));
+        assert!(text.contains("ctx=0"));
+        assert!(text.contains("ctx=1"));
+    }
+}

@@ -3,12 +3,16 @@
 //!
 //! * [`specs`] — the 21 experiment configurations of Figure 4 (pv0…pv6)
 //!   plus drain (Figure 6 / pv5) and diurnal (Figure 7 / pv6) scenarios.
+//! * [`mixed`] — beyond the paper: two applications with distinct
+//!   contexts sharing one pool (multi-tenant context registry + finite
+//!   worker caches), reported per policy pv1/pv2/pv4.
 //! * [`runner`] — executes specs through the simulated driver.
 //! * [`figures`] — renders each figure/table as text + CSV into
 //!   `results/` (the artifacts EXPERIMENTS.md references).
 
 pub mod ablations;
 pub mod figures;
+pub mod mixed;
 pub mod runner;
 pub mod specs;
 

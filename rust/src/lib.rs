@@ -10,7 +10,13 @@
 //! * [`coordinator`] — the paper's contribution: a TaskVine-style
 //!   throughput-oriented scheduler with **pervasive context management**
 //!   (context recipes, library processes, peer-transfer spanning trees,
-//!   eviction-tolerant requeue, worker-sizing and batch-size policies).
+//!   eviction-tolerant requeue, worker-sizing and batch-size policies) —
+//!   generalized to a **multi-application context registry**: the
+//!   scheduler serves many `ContextRecipe`s at once, every task carries a
+//!   `ContextId`, dispatch scores workers by *cache affinity* (warm
+//!   library → partial cache → cold, via `CostModel` estimates), and
+//!   finite per-worker caches LRU-evict cold contexts under pressure
+//!   (per-context hit/miss/evict counters in `CacheStats`).
 //! * [`cluster`] — the substrate the paper ran on, rebuilt: an
 //!   opportunistic heterogeneous GPU cluster (HTCondor-style backfill,
 //!   evictions, diurnal load traces, shared-filesystem contention).
@@ -25,7 +31,10 @@
 //!   (PfF) optimal-prompt search over a FEVER-like fact-verification
 //!   dataset.
 //! * [`experiments`] — builders + runners for every table and figure in
-//!   the paper's evaluation (Table 1/2, Figures 4–7, headline claims).
+//!   the paper's evaluation (Table 1/2, Figures 4–7, headline claims),
+//!   plus the beyond-paper **mixed** experiment: two applications with
+//!   different model sizes contending for one pool and for worker cache
+//!   capacity (`pcm experiment mixed`).
 //!
 //! ## Quickstart
 //!

@@ -13,8 +13,8 @@ use std::time::Instant;
 use crate::app::{AccuracyReport, InferenceWorkload, PffApp};
 use crate::cluster::{GpuModel, Node};
 use crate::coordinator::{
-    Batcher, ContextPolicy, ContextRecipe, Scheduler, TaskRecord,
-    TransferPlanner,
+    Batcher, CacheStats, ContextPolicy, ContextRecipe, CostModel, Scheduler,
+    TaskRecord, TransferPlanner, DEFAULT_CACHE_CAPACITY_BYTES,
 };
 use crate::runtime::Manifest;
 use crate::util::Summary;
@@ -32,6 +32,10 @@ pub struct LiveConfig {
     /// Worker speed multipliers (1.0 = full speed); length = worker count.
     pub worker_speeds: Vec<f64>,
     pub seed: u64,
+    /// Per-worker context-cache capacity in bytes (same knob the sim
+    /// driver threads through — live artifacts are tiny, so the default
+    /// never evicts; tests can shrink it to exercise LRU paths).
+    pub cache_capacity_bytes: u64,
 }
 
 impl Default for LiveConfig {
@@ -43,6 +47,7 @@ impl Default for LiveConfig {
             total_inferences: 64,
             worker_speeds: vec![1.0, 1.0],
             seed: 0,
+            cache_capacity_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
         }
     }
 }
@@ -57,6 +62,8 @@ pub struct LiveOutcome {
     pub records: Vec<TaskRecord>,
     /// Task latency stats (dispatch→result, seconds).
     pub task_latency: Summary,
+    /// Per-context cache hit/miss/evict counters from the scheduler.
+    pub cache: CacheStats,
 }
 
 /// Orchestrates scheduler + live workers.
@@ -83,10 +90,15 @@ impl LiveDriver {
         let profile = self.manifest.profile(&self.cfg.profile)?;
         let weights_bytes = profile.weights.bytes;
         let recipe = ContextRecipe::smolverify(0, weights_bytes);
-        let mut sched = Scheduler::new(
+        // Same registry entry point the multi-context sim driver uses —
+        // live mode currently serves one application, but through the
+        // identical scheduler state machine and cache accounting.
+        let mut sched = Scheduler::with_registry(
             self.cfg.policy,
-            recipe,
+            vec![recipe],
             TransferPlanner::new(3),
+            CostModel::default(),
+            self.cfg.cache_capacity_bytes,
         );
         sched.submit_tasks(
             Batcher::new(self.cfg.batch_size)
@@ -191,6 +203,7 @@ impl LiveDriver {
                         .unwrap_or(GpuModel::A10);
                     let rec = TaskRecord {
                         task,
+                        context: sched.task_context(task).unwrap_or(0),
                         worker,
                         gpu,
                         attempts,
@@ -226,6 +239,7 @@ impl LiveDriver {
             accuracy,
             records,
             task_latency: latency,
+            cache: sched.cache_stats().clone(),
         })
     }
 }

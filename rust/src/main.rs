@@ -3,7 +3,7 @@
 //! Subcommands (hand-rolled parser; the offline build has no clap):
 //!
 //! ```text
-//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|headline|all>
+//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|headline|all>
 //!     [--seed N] [--scale F] [--results DIR]
 //! pcm run <pv-id> [--seed N] [--scale F]
 //! pcm serve [--profile tiny|small] [--policy pervasive|partial|none]
@@ -90,8 +90,10 @@ const HELP: &str = "\
 pcm — pervasive context management for throughput-oriented LLM inference
 
 USAGE:
-  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|headline|all>
+  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|headline|all>
       [--seed N] [--scale F] [--results DIR]
+      (mixed: two applications with distinct contexts on one pool,
+       per-context cache hit/miss/evict counters, policies pv1/pv2/pv4)
   pcm run <pv-id>        run one experiment (e.g. pv4_100)
   pcm serve              live PJRT serving demo
       [--profile tiny|small] [--policy pervasive|partial|none]
@@ -233,6 +235,21 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
                 &figures::timeseries_csv(&results),
             )?;
         }
+        "mixed" => {
+            use pcm::experiments::mixed;
+            let per_app = ((mixed::DEFAULT_INFERENCES_PER_APP as f64 * scale)
+                .round() as u64)
+                .max(100);
+            eprintln!(
+                "running mixed 2-app experiment ({per_app} inferences/app, \
+                 seed={seed})…"
+            );
+            let results = mixed::run_mixed(seed, per_app);
+            let text = mixed::report(&results);
+            print!("{text}");
+            figures::write_result_file(&results_dir, "mixed.txt", &text)?;
+            eprintln!("\nreport written under {results_dir}/");
+        }
         "headline" => {
             let results = run_specs_scaled(specs::figure4_specs(), seed, scale);
             print!("{}", figures::headline_text(&results));
@@ -286,6 +303,7 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
         total_inferences: inferences,
         worker_speeds: vec![1.0; workers],
         seed: flags.get_u64("--seed", 0),
+        ..LiveConfig::default()
     };
     eprintln!(
         "live serving: {} inferences, batch {}, {} workers, {} policy…",

@@ -25,6 +25,7 @@ fn cfg(policy: ContextPolicy, workers: usize, n: u64, batch: u64) -> LiveConfig 
         total_inferences: n,
         worker_speeds: vec![1.0; workers],
         seed: 3,
+        ..LiveConfig::default()
     }
 }
 

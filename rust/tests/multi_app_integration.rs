@@ -1,0 +1,119 @@
+//! Multi-application integration: two PfF apps with distinct contexts
+//! (7.4 GB vs 15 GB) sharing one opportunistic 20-node pool, with worker
+//! caches too small to hold both contexts at once. End-to-end through
+//! the simulated driver: completion, policy ordering, per-context cache
+//! accounting, affinity behaviour, and determinism.
+
+use pcm::cluster::LoadTrace;
+use pcm::coordinator::{ContextPolicy, SimDriver};
+use pcm::experiments::mixed::{self, MixedResult};
+
+const SEED: u64 = 42;
+const PER_APP: u64 = 1_000;
+
+fn by_policy(results: &[MixedResult], p: ContextPolicy) -> &MixedResult {
+    results.iter().find(|r| r.policy == p).expect("policy present")
+}
+
+#[test]
+fn mixed_run_completes_both_apps_under_all_policies() {
+    let results = mixed::run_mixed(SEED, PER_APP);
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert_eq!(
+            r.outcome.summary.completed_inferences,
+            2 * PER_APP,
+            "{} must finish both apps",
+            r.id
+        );
+        assert_eq!(r.completed_for(0), PER_APP, "{} app A complete", r.id);
+        assert_eq!(r.completed_for(1), PER_APP, "{} app B complete", r.id);
+    }
+}
+
+#[test]
+fn mixed_pervasive_beats_none_by_at_least_5x() {
+    let results = mixed::run_mixed(SEED, PER_APP);
+    let none = by_policy(&results, ContextPolicy::None)
+        .outcome
+        .summary
+        .exec_time_s;
+    let perv = by_policy(&results, ContextPolicy::Pervasive)
+        .outcome
+        .summary
+        .exec_time_s;
+    assert!(
+        perv * 5.0 <= none,
+        "pervasive {perv:.1}s must beat none {none:.1}s by >= 5x \
+         (ratio {:.2})",
+        none / perv
+    );
+    // And partial sits in between.
+    let part = by_policy(&results, ContextPolicy::Partial)
+        .outcome
+        .summary
+        .exec_time_s;
+    assert!(perv < part && part < none, "pv4 < pv2 < pv1 ordering");
+}
+
+#[test]
+fn mixed_reports_per_context_cache_counters() {
+    let results = mixed::run_mixed(SEED, PER_APP);
+    for r in &results {
+        // Both contexts staged something at least once.
+        assert!(r.outcome.cache.ctx(0).misses > 0, "{} ctx0 misses", r.id);
+        assert!(r.outcome.cache.ctx(1).misses > 0, "{} ctx1 misses", r.id);
+    }
+    // Under Pervasive the warm fast path produces hits for both tenants.
+    let perv = by_policy(&results, ContextPolicy::Pervasive);
+    assert!(perv.outcome.cache.ctx(0).hits > 0, "pv4 ctx0 hits");
+    assert!(perv.outcome.cache.ctx(1).hits > 0, "pv4 ctx1 hits");
+    // The None policy never caches, so it can never hit.
+    let none = by_policy(&results, ContextPolicy::None);
+    assert_eq!(none.outcome.cache.totals().hits, 0, "pv1 cannot hit");
+    assert_eq!(none.outcome.cache.totals().evictions, 0);
+    // The report renders every policy row and both context lines.
+    let text = mixed::report(&results);
+    for needle in ["mixed_pv1", "mixed_pv2", "mixed_pv4", "ctx=0", "ctx=1"] {
+        assert!(text.contains(needle), "report missing {needle}");
+    }
+}
+
+#[test]
+fn unbalanced_apps_force_context_eviction_under_cache_pressure() {
+    // 2 workers, app A much smaller than app B: when A drains, its warm
+    // worker must flip to B — and with 16 GB caches that flip cannot
+    // happen without LRU-evicting A's 7.4 GB context.
+    let mut cfg = mixed::mixed_config(
+        "mixed_flip",
+        ContextPolicy::Pervasive,
+        7,
+        1_000,
+    );
+    cfg.nodes.truncate(2);
+    cfg.trace = LoadTrace::constant(2);
+    cfg.apps[0].total_inferences = 200;
+    cfg.apps[1].total_inferences = 1_000;
+    let out = SimDriver::new(cfg).run();
+    assert_eq!(out.summary.completed_inferences, 1_200);
+    assert!(
+        out.cache.ctx(0).evictions > 0,
+        "draining app A must get LRU-evicted when its worker flips to B \
+         (stats: {:?})",
+        out.cache.per_context
+    );
+}
+
+#[test]
+fn mixed_runs_are_deterministic_per_seed() {
+    let a = mixed::run_mixed(9, 500);
+    let b = mixed::run_mixed(9, 500);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.outcome.summary.exec_time_s, y.outcome.summary.exec_time_s);
+        assert_eq!(
+            x.outcome.cache.per_context, y.outcome.cache.per_context,
+            "{} cache stats must be reproducible",
+            x.id
+        );
+    }
+}

@@ -11,8 +11,8 @@ use pcm::coordinator::batcher::Batcher;
 use pcm::coordinator::scheduler::PhaseKind;
 use pcm::coordinator::transfer::{broadcast_rounds, plan_broadcast};
 use pcm::coordinator::{
-    ContextPolicy, ContextRecipe, Scheduler, TaskRecord,
-    TransferPlanner,
+    ComponentKind, ContextPolicy, ContextRecipe, CostModel, Scheduler, Task,
+    TaskRecord, TransferPlanner, Worker,
 };
 use pcm::util::Rng;
 
@@ -157,6 +157,7 @@ fn prop_no_task_lost_under_random_evictions() {
                                 sched.task_meta(*task).unwrap();
                             let rec = TaskRecord {
                                 task: *task,
+                                context: sched.task_context(*task).unwrap_or(0),
                                 worker: *worker,
                                 gpu: GpuModel::A10,
                                 attempts,
@@ -327,6 +328,219 @@ fn prop_json_roundtrip() {
         let text = v.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back, v, "roundtrip failed for {text}");
+    });
+}
+
+// ----------------------------------------------- multi-context caching
+
+const KINDS: [ComponentKind; 5] = [
+    ComponentKind::DepsPackage,
+    ComponentKind::ModelWeights,
+    ComponentKind::FunctionCode,
+    ComponentKind::ContextCode,
+    ComponentKind::ContextInputs,
+];
+
+/// Random multi-context storm: worker cache occupancy must never exceed
+/// capacity, at every step, for every worker, under every policy.
+#[test]
+fn prop_cache_occupancy_never_exceeds_capacity() {
+    forall(60, |rng| {
+        let policy = match rng.below(3) {
+            0 => ContextPolicy::None,
+            1 => ContextPolicy::Partial,
+            _ => ContextPolicy::Pervasive,
+        };
+        // 1–30 GB: sometimes fits both contexts, sometimes neither.
+        let capacity = (1 + rng.below(30) as u64) * 1_000_000_000;
+        let mut sched = Scheduler::with_registry(
+            policy,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "big", 5_000_000_000, 10_000_000_000),
+            ],
+            TransferPlanner::new(1 + rng.below(4) as u32),
+            CostModel::default(),
+            capacity,
+        );
+        let n_tasks = 1 + rng.below(30) as u64;
+        let batch = 1 + rng.below(100) as u64;
+        let tasks: Vec<Task> = (0..n_tasks)
+            .map(|i| Task::new(i, i * batch, batch, rng.below(2) as u32))
+            .collect();
+        sched.submit_tasks(tasks);
+
+        let mut next_node = 0u32;
+        let mut running: Vec<(u64, u32, Vec<PhaseKind>, usize)> = Vec::new();
+        let mut guard = 0;
+        while !sched.all_done() {
+            guard += 1;
+            assert!(guard < 100_000, "storm did not converge");
+            match rng.below(10) {
+                0 | 1 => {
+                    let gpu = if rng.chance(0.5) {
+                        GpuModel::A10
+                    } else {
+                        GpuModel::TitanXPascal
+                    };
+                    let node = Node { id: next_node, gpu };
+                    next_node += 1;
+                    sched.worker_join(node, guard as f64);
+                }
+                2 => {
+                    let ids: Vec<u32> =
+                        sched.workers().map(|w| w.id).collect();
+                    if !ids.is_empty() {
+                        let victim = ids[rng.below(ids.len())];
+                        sched.worker_evict(victim);
+                        running.retain(|(_, w, _, _)| *w != victim);
+                    }
+                }
+                _ => {
+                    if running.is_empty() {
+                        for d in sched.try_dispatch() {
+                            running.push((d.task, d.worker, d.phases, 0));
+                        }
+                    } else {
+                        let i = rng.below(running.len());
+                        let (task, worker, phases, next) = &mut running[i];
+                        sched.phase_done(*task, *next);
+                        *next += 1;
+                        if *next == phases.len() {
+                            let (attempts, inferences) =
+                                sched.task_meta(*task).unwrap();
+                            let rec = TaskRecord {
+                                task: *task,
+                                context: sched
+                                    .task_context(*task)
+                                    .unwrap_or(0),
+                                worker: *worker,
+                                gpu: GpuModel::A10,
+                                attempts,
+                                inferences,
+                                dispatched_at: 0.0,
+                                completed_at: guard as f64,
+                                context_s: 0.0,
+                                execute_s: 1.0,
+                            };
+                            sched.task_done(*task, rec);
+                            running.remove(i);
+                        }
+                    }
+                }
+            }
+            assert!(
+                sched.check_cache_capacity(),
+                "cache occupancy exceeded capacity {capacity}"
+            );
+            assert!(sched.check_conservation());
+        }
+        assert_eq!(sched.progress().completed_inferences, n_tasks * batch);
+    });
+}
+
+/// Worker-level LRU property: an insert never evicts the pinned context
+/// (nor the context being inserted), pinned components survive intact,
+/// and occupancy stays within capacity.
+#[test]
+fn prop_lru_never_evicts_pinned_context() {
+    forall(200, |rng| {
+        let capacity = 1_000 + rng.below(100_000) as u64;
+        let mut w = Worker::new(
+            0,
+            Node { id: 0, gpu: GpuModel::A10 },
+            0.0,
+            capacity,
+        );
+        for _ in 0..200 {
+            let ctx = rng.below(6) as u32;
+            let kind = KINDS[rng.below(KINDS.len())];
+            let bytes = 1 + rng.below(40_000) as u64;
+            let cached = w.cached_contexts_lru();
+            let pinned = if cached.is_empty() || rng.chance(0.3) {
+                ctx
+            } else {
+                cached[rng.below(cached.len())]
+            };
+            let before: Vec<ComponentKind> = KINDS
+                .iter()
+                .filter(|k| w.has_cached(pinned, **k))
+                .copied()
+                .collect();
+            let (_ok, evicted) =
+                w.insert_cached(ctx, kind, bytes, Some(pinned));
+            assert!(!evicted.contains(&pinned), "pinned context evicted");
+            assert!(!evicted.contains(&ctx), "inserting context evicted");
+            for k in &before {
+                assert!(
+                    w.has_cached(pinned, *k),
+                    "pinned context lost component {k:?}"
+                );
+            }
+            assert!(w.cached_bytes_total() <= w.cache_capacity());
+        }
+    });
+}
+
+/// Affinity dispatch: whenever a worker with the task's context
+/// materialized is idle, it wins over any number of colder (even much
+/// faster) workers, and the plan degenerates to a bare Execute.
+#[test]
+fn prop_affinity_prefers_materialized_worker() {
+    forall(150, |rng| {
+        let gpus = [
+            GpuModel::A10,
+            GpuModel::TitanXPascal,
+            GpuModel::H100,
+            GpuModel::A40,
+        ];
+        let mut sched = Scheduler::new(
+            ContextPolicy::Pervasive,
+            ContextRecipe::smollm2_pff(0),
+            TransferPlanner::new(3),
+        );
+        sched.submit_tasks(vec![
+            Task::new(0, 0, 10, 0),
+            Task::new(1, 10, 10, 0),
+        ]);
+        // Warm exactly one worker by running the first task on it.
+        let warm_gpu = gpus[rng.below(gpus.len())];
+        let warm = sched.worker_join(Node { id: 0, gpu: warm_gpu }, 0.0);
+        let d1 = sched.try_dispatch();
+        assert_eq!(d1.len(), 1);
+        for i in 0..d1[0].phases.len() {
+            sched.phase_done(d1[0].task, i);
+        }
+        sched.task_done(
+            d1[0].task,
+            TaskRecord {
+                task: 0,
+                context: 0,
+                worker: warm,
+                gpu: warm_gpu,
+                attempts: 1,
+                inferences: 10,
+                dispatched_at: 0.0,
+                completed_at: 1.0,
+                context_s: 0.0,
+                execute_s: 1.0,
+            },
+        );
+        // Join 1–6 cold workers with arbitrary (possibly faster) GPUs.
+        let n_cold = 1 + rng.below(6);
+        for i in 0..n_cold {
+            sched.worker_join(
+                Node { id: 1 + i as u32, gpu: gpus[rng.below(gpus.len())] },
+                1.0,
+            );
+        }
+        let d2 = sched.try_dispatch();
+        let mine = d2.iter().find(|d| d.task == 1).unwrap();
+        assert_eq!(
+            mine.worker, warm,
+            "affinity must route to the materialized worker"
+        );
+        assert_eq!(mine.phases.len(), 1, "warm plan is a bare Execute");
     });
 }
 
