@@ -11,19 +11,20 @@ use pcm::cluster::{GpuModel, LoadTrace, Node};
 use pcm::coordinator::batcher::Batcher;
 use pcm::coordinator::transfer::plan_broadcast;
 use pcm::coordinator::{
-    ContextPolicy, ContextRecipe, Scheduler, SimConfig, SimDriver,
-    TaskRecord, TransferPlanner,
+    ContextPolicy, ContextRecipe, PolicyKind, Scheduler, SimConfig,
+    SimDriver, TaskRecord, TransferPlanner,
 };
 use pcm::runtime::manifest::default_artifacts_dir;
 use pcm::runtime::{Manifest, ModelContext};
 use pcm::util::bench::{bench, black_box, header};
 
-fn scheduler_churn(tasks: u64, workers: u32) -> u64 {
+fn scheduler_churn(tasks: u64, workers: u32, placement: PolicyKind) -> u64 {
     let mut s = Scheduler::new(
         ContextPolicy::Pervasive,
         ContextRecipe::smollm2_pff(0),
         TransferPlanner::new(3),
-    );
+    )
+    .with_policy(placement.build());
     s.submit_tasks(Batcher::new(100).split(tasks * 100, 0, 0));
     for i in 0..workers {
         s.worker_join(
@@ -40,6 +41,10 @@ fn scheduler_churn(tasks: u64, workers: u32) -> u64 {
         for d in ds {
             for i in 0..d.phases.len() {
                 s.phase_done(d.task, i);
+            }
+            if Scheduler::is_prefetch_id(d.task) {
+                // Prefetch dispatch: retired by its last phase_done.
+                continue;
             }
             let (attempts, inferences) = s.task_meta(d.task).unwrap();
             s.task_done(
@@ -95,11 +100,25 @@ fn main() {
     let mut results = Vec::new();
     header("L3 coordinator hot paths");
     results.push(bench("scheduler churn: 1k tasks / 20 workers", 2, 10, || {
-        scheduler_churn(1_000, 20)
+        scheduler_churn(1_000, 20, PolicyKind::Greedy)
     }));
     results.push(bench("scheduler churn: 10k tasks / 100 workers", 1, 5, || {
-        scheduler_churn(10_000, 100)
+        scheduler_churn(10_000, 100, PolicyKind::Greedy)
     }));
+    // Dispatch-policy overhead: same churn through each pluggable
+    // placement policy, so policy regressions show up in the baseline.
+    results.push(bench(
+        "dispatch policy churn: fairshare 1k tasks / 20 workers",
+        2,
+        10,
+        || scheduler_churn(1_000, 20, PolicyKind::FairShare),
+    ));
+    results.push(bench(
+        "dispatch policy churn: prefetch 1k tasks / 20 workers",
+        2,
+        10,
+        || scheduler_churn(1_000, 20, PolicyKind::Prefetch),
+    ));
     results.push(bench("broadcast plan: 567 workers, fanout 3", 5, 50, || {
         let ids: Vec<u32> = (0..567).collect();
         plan_broadcast(&ids, 3)

@@ -106,6 +106,10 @@ pub struct ContextRecipe {
     pub id: ContextId,
     pub name: String,
     pub components: Vec<Component>,
+    /// Fair-share weight of this application (> 0, 1.0 = equal share).
+    /// Consumed by `coordinator::policy::WeightedFairShare`; ignored by
+    /// the other placement policies.
+    pub weight: f64,
 }
 
 impl ContextRecipe {
@@ -150,6 +154,7 @@ impl ContextRecipe {
                     origin: DataOrigin::Manager,
                 },
             ],
+            weight: 1.0,
         }
     }
 
@@ -201,7 +206,16 @@ impl ContextRecipe {
                 },
             ],
             name,
+            weight: 1.0,
         }
+    }
+
+    /// Set the fair-share weight (> 0; 1.0 = equal share) consumed by
+    /// the `WeightedFairShare` placement policy.
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        assert!(weight > 0.0, "recipe weight must be positive");
+        self.weight = weight;
+        self
     }
 
     /// A small recipe matching the live-mode SmolVerify artifacts (sizes
@@ -324,5 +338,19 @@ mod tests {
     fn describe_mentions_name() {
         let r = ContextRecipe::smollm2_pff(2);
         assert!(r.describe().contains("smollm2"));
+    }
+
+    #[test]
+    fn weight_defaults_to_one_and_is_settable() {
+        let r = ContextRecipe::smollm2_pff(0);
+        assert_eq!(r.weight, 1.0);
+        let r = ContextRecipe::custom(1, "x", 10, 10).with_weight(2.5);
+        assert_eq!(r.weight, 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight must be positive")]
+    fn zero_weight_rejected() {
+        let _ = ContextRecipe::smollm2_pff(0).with_weight(0.0);
     }
 }

@@ -23,6 +23,9 @@ pub struct ContextCacheCounters {
     /// Times this context was LRU-evicted from some worker's cache to
     /// make room for a competing context.
     pub evictions: u64,
+    /// Components staged proactively by a `WarmPrefetch` placement
+    /// decision (not charged as misses — no task was waiting on them).
+    pub prefetched: u64,
 }
 
 impl ContextCacheCounters {
@@ -60,6 +63,7 @@ impl CacheStats {
             t.hits += c.hits;
             t.misses += c.misses;
             t.evictions += c.evictions;
+            t.prefetched += c.prefetched;
         }
         t
     }
@@ -71,10 +75,12 @@ impl CacheStats {
         for (ctx, c) in &self.per_context {
             let _ = writeln!(
                 out,
-                "ctx={ctx} hits={} misses={} evictions={} hit_rate={:.3}",
+                "ctx={ctx} hits={} misses={} evictions={} prefetched={} \
+                 hit_rate={:.3}",
                 c.hits,
                 c.misses,
                 c.evictions,
+                c.prefetched,
                 c.hit_rate()
             );
         }

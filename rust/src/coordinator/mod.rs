@@ -13,10 +13,15 @@
 //! * [`worker`] — workers: 1 GPU, 1 task at a time, local cache (§5.3.2).
 //! * [`transfer`] — peer-transfer planner: spanning-tree context
 //!   distribution with per-source fan-out cap N (§5.3.1).
-//! * [`scheduler`] — the manager: ready queue, a multi-application
-//!   **context registry** with cache-affinity dispatch (warm library →
-//!   partial cache → cold, scored by `CostModel` estimates), eviction
-//!   detection + requeue, completion bookkeeping (§5.1).
+//! * [`scheduler`] — the manager *mechanisms*: ready queue, a
+//!   multi-application **context registry**, finite worker caches,
+//!   eviction detection + requeue, completion bookkeeping (§5.1).
+//! * [`policy`] — the pluggable dispatch *decision* layer: a
+//!   `PlacementPolicy` reads a read-only `SchedulerView` and returns
+//!   typed placement decisions. Ships `AffinityGreedy` (warm pairing +
+//!   cache-affinity scoring — the default), `WeightedFairShare`
+//!   (deficit round robin over tenants) and `WarmPrefetch` (proactive
+//!   context staging for cold backlogged tenants).
 //! * [`factory`] — the daemon reconciling the worker pool against cluster
 //!   availability (§5.1, "TaskVine factory").
 //! * [`costmodel`] — calibrated service-time model used by the simulated
@@ -31,6 +36,7 @@ pub mod costmodel;
 pub mod factory;
 pub mod library;
 pub mod metrics;
+pub mod policy;
 pub mod scheduler;
 pub mod sim_driver;
 pub mod task;
@@ -42,6 +48,10 @@ pub use context::{Component, ComponentKind, ContextId, ContextPolicy, ContextRec
 pub use costmodel::CostModel;
 pub use library::LibraryState;
 pub use metrics::{CacheStats, ContextCacheCounters, Metrics, RunSummary};
+pub use policy::{
+    AffinityGreedy, PlacementDecision, PlacementPolicy, PolicyKind,
+    SchedulerView, WarmPrefetch, WeightedFairShare,
+};
 pub use scheduler::{Dispatch, Scheduler};
 pub use sim_driver::{AppSpec, SimConfig, SimDriver, SimOutcome};
 pub use task::{Task, TaskId, TaskRecord, TaskState};

@@ -1,0 +1,269 @@
+//! Weighted deficit-round-robin placement across contexts.
+//!
+//! The greedy policy maximizes throughput but lets a tenant whose
+//! context is warm everywhere monopolize the pool while a cold tenant's
+//! tasks sit queued (the ROADMAP's starvation scenario). This policy
+//! ports classic DRR (Shreedhar & Varghese) to task dispatch: each
+//! context has a deficit counter denominated in *inferences*; every
+//! placement sweep credits each backlogged context `quantum × weight`
+//! and serves its queued tasks while the deficit covers their batch
+//! size, choosing the cheapest-acquisition idle worker for each (the
+//! same affinity scoring greedy uses — fairness decides *who* runs,
+//! affinity still decides *where*).
+//!
+//! Starvation bound: after every sweep a context's deficit is clamped
+//! to its largest still-queued batch, and the deficit is dropped
+//! entirely when the context has nothing queued — so no tenant can
+//! bank more than one max-task burst of priority, and conversely a
+//! backlogged tenant is served at least once per full sweep.
+//! `tests/proptests.rs` checks the bound under random storms.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::super::context::ContextId;
+use super::{
+    pick_best_worker, PlacementDecision, PlacementPolicy, QueuedTask,
+    SchedulerView,
+};
+
+/// Deficit-round-robin over contexts with per-recipe weights.
+#[derive(Debug, Clone, Default)]
+pub struct WeightedFairShare {
+    /// Deficit per context, in inferences. Persists across rounds while
+    /// the context stays backlogged; reset when its queue drains.
+    deficits: BTreeMap<ContextId, f64>,
+}
+
+impl WeightedFairShare {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current deficit of a context (0 when untracked) — exposed for
+    /// the starvation-bound property tests.
+    pub fn deficit(&self, ctx: ContextId) -> f64 {
+        self.deficits.get(&ctx).copied().unwrap_or(0.0)
+    }
+}
+
+impl PlacementPolicy for WeightedFairShare {
+    fn name(&self) -> &'static str {
+        "fairshare"
+    }
+
+    fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
+        let mut decisions = Vec::new();
+        let queued = view.queued();
+        if queued.is_empty() {
+            self.deficits.clear();
+            return decisions;
+        }
+        let mut idle = view.idle_workers();
+
+        // Per-context FIFO queues (queue order preserved within a ctx).
+        let mut queues: BTreeMap<ContextId, VecDeque<QueuedTask>> =
+            BTreeMap::new();
+        for q in queued {
+            queues.entry(q.context).or_default().push_back(q);
+        }
+        // A context with no backlog holds no credit (classic DRR reset).
+        self.deficits.retain(|ctx, _| queues.contains_key(ctx));
+
+        // Quantum: the largest queued batch, so one credit of weight 1.0
+        // always affords at least the head task — every backlogged
+        // context is served within one sweep of a free worker.
+        let quantum = queues
+            .values()
+            .flat_map(|q| q.iter().map(|t| t.inferences))
+            .max()
+            .unwrap_or(1) as f64;
+
+        while !idle.is_empty() && queues.values().any(|q| !q.is_empty()) {
+            let mut progressed = false;
+            for (ctx, q) in queues.iter_mut() {
+                if q.is_empty() || idle.is_empty() {
+                    continue;
+                }
+                let d = self.deficits.entry(*ctx).or_insert(0.0);
+                // `ContextRecipe.weight` is a pub field, so a negative
+                // or NaN weight can bypass `with_weight`'s assert; a
+                // negative credit would fight the no-progress top-up
+                // below and spin this loop forever. Treat any
+                // non-positive or non-finite weight as zero credit —
+                // the top-up then guarantees eventual (lowest-priority)
+                // service and termination.
+                let w = view.recipe_weight(*ctx);
+                if w.is_finite() && w > 0.0 {
+                    *d += quantum * w;
+                }
+                while let Some(head) = q.front().copied() {
+                    if idle.is_empty() || *d + 1e-9 < head.inferences as f64 {
+                        break;
+                    }
+                    let best = pick_best_worker(view, &idle, *ctx);
+                    let wid = idle.swap_remove(best);
+                    *d -= head.inferences as f64;
+                    q.pop_front();
+                    decisions.push(PlacementDecision::Assign {
+                        task: head.task,
+                        worker: wid,
+                    });
+                    progressed = true;
+                }
+                // Starvation bound: never bank more than one max burst.
+                if let Some(max_left) = q.iter().map(|t| t.inferences).max() {
+                    *d = d.min(max_left as f64);
+                }
+            }
+            if !progressed {
+                if idle.is_empty() {
+                    break;
+                }
+                // No head was affordable this sweep. A degenerate weight
+                // (e.g. 1e-9) would otherwise need ~head/(quantum×weight)
+                // sweeps to accrue enough credit — top every backlogged
+                // context straight up to its head cost so the next sweep
+                // must serve something. Relative weight order within a
+                // sweep is unaffected, and the one-burst bound still
+                // holds (head ≤ max remaining burst).
+                for (ctx, q) in queues.iter() {
+                    if let Some(head) = q.front() {
+                        let d = self.deficits.entry(*ctx).or_insert(0.0);
+                        *d = d.max(head.inferences as f64);
+                    }
+                }
+            }
+        }
+
+        // Normalize leftover credit: drained contexts forfeit theirs,
+        // backlogged ones stay within one burst of what remains queued.
+        self.deficits.retain(|ctx, d| match queues.get(ctx) {
+            Some(q) if !q.is_empty() => {
+                let max_left =
+                    q.iter().map(|t| t.inferences).max().unwrap_or(1);
+                *d = d.min(max_left as f64);
+                true
+            }
+            _ => false,
+        });
+        decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::context::{ContextPolicy, ContextRecipe};
+    use super::super::super::costmodel::CostModel;
+    use super::super::super::scheduler::Scheduler;
+    use super::super::super::task::Task;
+    use super::super::super::transfer::TransferPlanner;
+    use super::super::{PlacementDecision, PlacementPolicy, SchedulerView};
+    use super::WeightedFairShare;
+    use crate::cluster::{GpuModel, Node};
+
+    fn sched_two_ctx(weight0: f64, weight1: f64) -> Scheduler {
+        Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![
+                ContextRecipe::smollm2_pff(0).with_weight(weight0),
+                ContextRecipe::custom(1, "b", 1_000, 1_000).with_weight(weight1),
+            ],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            u64::MAX,
+        )
+    }
+
+    fn submit_interleaved(s: &mut Scheduler, per_ctx: u64, batch: u64) {
+        let mut tasks = Vec::new();
+        for i in 0..per_ctx {
+            for ctx in [0u32, 1u32] {
+                let id = tasks.len() as u64;
+                tasks.push(Task::new(id, i * batch, batch, ctx));
+            }
+        }
+        s.submit_tasks(tasks);
+    }
+
+    fn assigns_per_ctx(
+        s: &Scheduler,
+        ds: &[PlacementDecision],
+    ) -> (usize, usize) {
+        let mut c = (0, 0);
+        for d in ds {
+            if let PlacementDecision::Assign { task, .. } = d {
+                match s.task_context(*task).unwrap() {
+                    0 => c.0 += 1,
+                    _ => c.1 += 1,
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn equal_weights_split_workers_evenly() {
+        let mut s = sched_two_ctx(1.0, 1.0);
+        submit_interleaved(&mut s, 20, 10);
+        for i in 0..10 {
+            s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+        }
+        let mut p = WeightedFairShare::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        let (a, b) = assigns_per_ctx(&s, &ds);
+        assert_eq!(a + b, 10, "all idle workers used");
+        assert_eq!(a, 5);
+        assert_eq!(b, 5);
+    }
+
+    #[test]
+    fn double_weight_gets_double_share() {
+        let mut s = sched_two_ctx(2.0, 1.0);
+        submit_interleaved(&mut s, 30, 10);
+        for i in 0..9 {
+            s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+        }
+        let mut p = WeightedFairShare::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        let (a, b) = assigns_per_ctx(&s, &ds);
+        assert_eq!(a + b, 9);
+        assert!(
+            a >= 2 * b - 1,
+            "weight-2 tenant should get ~2x the workers: a={a} b={b}"
+        );
+    }
+
+    /// Regression: a near-zero weight used to need ~head/(quantum×w)
+    /// sweeps before its context could afford one task — the no-progress
+    /// top-up must keep the round bounded and still use every worker.
+    #[test]
+    fn degenerate_weight_terminates_and_serves_everyone() {
+        let mut s = sched_two_ctx(1e-9, 1.0);
+        submit_interleaved(&mut s, 5, 10);
+        for i in 0..8 {
+            s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+        }
+        let mut p = WeightedFairShare::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        let (a, b) = assigns_per_ctx(&s, &ds);
+        assert_eq!(a + b, 8, "all idle workers used: a={a} b={b}");
+        assert_eq!(b, 5, "weight-1 tenant drains first");
+        assert_eq!(a, 3, "near-zero-weight tenant still served after");
+    }
+
+    #[test]
+    fn deficit_resets_when_context_drains() {
+        let mut s = sched_two_ctx(1.0, 1.0);
+        s.submit_tasks(vec![Task::new(0, 0, 10, 0)]);
+        s.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        let mut p = WeightedFairShare::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        assert_eq!(ds.len(), 1);
+        let dispatched = s.apply_decisions(ds);
+        assert_eq!(dispatched.len(), 1);
+        // Context 0 has nothing queued anymore: no banked credit.
+        let _ = p.place(&SchedulerView::new(&s));
+        assert_eq!(p.deficit(0), 0.0);
+        assert_eq!(p.deficit(1), 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! The original throughput-greedy affinity policy, extracted verbatim
+//! from the pre-policy `Scheduler::try_dispatch`.
+//!
+//! Decision parity with the monolithic scheduler is a hard contract:
+//! `tests/policy_golden.rs` replays a port of the old algorithm against
+//! this implementation over randomized multi-tenant storms and asserts
+//! identical (task, worker) assignments every round.
+
+use super::{
+    pick_best_worker, PlacementDecision, PlacementPolicy, SchedulerView,
+};
+
+/// How deep into the ready queue warm pairing may reach. Warm matches
+/// can bypass the queue front (including a requeued evicted task) while
+/// no idle worker is warm for its context — deliberately
+/// throughput-greedy; whenever warm matches run out, the FIFO phase
+/// dispatches the front task, so nothing is starved past the warm
+/// stream. [`super::WeightedFairShare`] is the fairness alternative.
+pub const WARM_LOOKAHEAD: usize = 64;
+
+/// Throughput-greedy context-affine placement:
+///
+/// 1. **Warm pairing** — every idle worker that is fully warm for some
+///    context claims the earliest queued task of that context (bounded
+///    look-ahead), so a freed worker keeps serving its resident
+///    application instead of thrashing its cache on whatever tenant
+///    happens to head the queue.
+/// 2. **FIFO + affinity scoring** — remaining tasks go in queue order
+///    to the idle worker with the cheapest estimated context
+///    acquisition (partial cache hits, peer availability, GPU-scaled
+///    materialization), tie-broken by GPU speed (desc) then id.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AffinityGreedy;
+
+impl AffinityGreedy {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl PlacementPolicy for AffinityGreedy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
+        let mut decisions = Vec::new();
+        let mut idle = view.idle_workers();
+        if idle.is_empty() {
+            return decisions;
+        }
+        // Decisions depend only on a bounded queue prefix: warm pairing
+        // examines a sliding window within the first
+        // `WARM_LOOKAHEAD + paired` positions, and the FIFO phase then
+        // assigns at most one task per remaining idle worker from the
+        // entries after the removed ones — all inside the first
+        // `WARM_LOOKAHEAD + idle` positions (the golden parity test
+        // exercises this against the full queue). Materializing only
+        // that prefix keeps a deep backlog O(look-ahead + idle) per
+        // round, like the pre-policy dispatch.
+        let mut queue = view.queued_prefix(WARM_LOOKAHEAD + idle.len());
+        if queue.is_empty() {
+            return decisions;
+        }
+
+        // Phase 1: warm pairing (remove matched tasks/workers in place —
+        // the look-ahead window slides over what remains, exactly like
+        // the original's mutation of the live ready queue).
+        let mut i = 0;
+        while i < idle.len() {
+            let wid = idle[i];
+            let mut found = None;
+            for (pos, q) in queue.iter().enumerate().take(WARM_LOOKAHEAD) {
+                if view.warm_for(wid, q.context) {
+                    found = Some(pos);
+                    break;
+                }
+            }
+            if let Some(pos) = found {
+                let q = queue.remove(pos);
+                let wid = idle.remove(i);
+                decisions
+                    .push(PlacementDecision::Assign { task: q.task, worker: wid });
+            } else {
+                i += 1;
+            }
+        }
+
+        // Phase 2: FIFO order, cheapest-acquisition worker per task.
+        for q in queue {
+            if idle.is_empty() {
+                break;
+            }
+            let best = pick_best_worker(view, &idle, q.context);
+            let wid = idle.swap_remove(best);
+            decisions
+                .push(PlacementDecision::Assign { task: q.task, worker: wid });
+        }
+        decisions
+    }
+}

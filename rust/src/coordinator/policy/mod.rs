@@ -1,0 +1,386 @@
+//! Pluggable placement policies: the *decision* layer of dispatch.
+//!
+//! The paper separates context-management *mechanisms* (context staging,
+//! worker caches, spanning-tree transfer — §5.3) from *policies* (which
+//! placement to prefer). The [`Scheduler`] owns the mechanisms: the ready
+//! queue, the context registry, cache/library state, peer-transfer slot
+//! accounting, and metrics. A [`PlacementPolicy`] owns the choices: each
+//! dispatch round it reads a read-only [`SchedulerView`] and returns a
+//! list of [`PlacementDecision`]s, which the scheduler validates and
+//! executes ([`Scheduler::apply_decisions`]). Invalid decisions (busy
+//! worker, unknown task) are skipped, never executed — a policy bug can
+//! waste a round but cannot corrupt scheduler state.
+//!
+//! Shipped policies (selectable via [`PolicyKind`] and the `--policy`
+//! CLI flag):
+//!
+//! * [`AffinityGreedy`] — the original throughput-greedy dispatch (warm
+//!   pairing + cheapest-acquisition FIFO), extracted verbatim from the
+//!   pre-policy `Scheduler::try_dispatch`; decision parity is locked by
+//!   `tests/policy_golden.rs`.
+//! * [`WeightedFairShare`] — deficit round robin over contexts with
+//!   per-recipe weights ([`ContextRecipe::with_weight`]); bounds any
+//!   tenant's wait to roughly one task burst per competing context.
+//! * [`WarmPrefetch`] — greedy assignment plus proactive staging of a
+//!   queued-but-cold tenant's context onto idle workers (via the same
+//!   stage phases and spanning-tree peer sources as task plans), so the
+//!   tenant's first task finds a warm cache instead of a cold pool.
+//!
+//! # Writing a policy
+//!
+//! Implement [`PlacementPolicy::place`]: inspect the view (queued tasks
+//! in order, idle workers, per-worker warmth and acquisition estimates,
+//! per-context backlog/in-flight/completed counts) and return decisions
+//! in the order they should execute — earlier decisions claim peer
+//! upload slots first. Return [`PlacementDecision::Assign`] to dispatch
+//! a queued task, [`PlacementDecision::Prefetch`] to stage a context
+//! onto an idle worker without running anything, or
+//! [`PlacementDecision::Hold`] to deliberately stop placing this round
+//! (e.g. to keep workers free for an anticipated tenant). Policies may
+//! keep state across rounds (`&mut self`) — that is how
+//! [`WeightedFairShare`] carries deficits.
+//!
+//! [`ContextRecipe::with_weight`]: super::context::ContextRecipe::with_weight
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::context::{ComponentKind, ContextId, ContextPolicy};
+use super::costmodel::CostModel;
+use super::scheduler::Scheduler;
+use super::task::TaskId;
+use super::worker::WorkerId;
+
+mod fairshare;
+mod greedy;
+mod prefetch;
+
+pub use fairshare::WeightedFairShare;
+pub use greedy::AffinityGreedy;
+pub use prefetch::WarmPrefetch;
+
+/// One queued task, as a policy sees it (queue order preserved).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuedTask {
+    pub task: TaskId,
+    pub context: ContextId,
+    /// Batch size — the cost unit fair-share deficits are counted in.
+    pub inferences: u64,
+}
+
+/// A policy's verdict for one worker (or one deliberate pause).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementDecision {
+    /// Dispatch `task` (must be queued) on `worker` (must be idle).
+    Assign { task: TaskId, worker: WorkerId },
+    /// Stage `ctx`'s cacheable components onto idle `worker` without
+    /// running a task — the worker is busy until staging completes.
+    Prefetch { ctx: ContextId, worker: WorkerId },
+    /// Stop executing this round's decisions (everything after a `Hold`
+    /// is ignored). An empty decision list means the same thing.
+    Hold,
+}
+
+/// The dispatch-decision interface. `Send + Debug` because the scheduler
+/// (and therefore the policy) crosses thread boundaries in the threaded
+/// experiment runner.
+pub trait PlacementPolicy: std::fmt::Debug + Send {
+    /// Short stable name (CLI/report label).
+    fn name(&self) -> &'static str;
+
+    /// Decide this round's placements from the scheduler's state.
+    fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision>;
+}
+
+/// Placeholder policy the scheduler swaps in while the real policy runs
+/// (it is never asked to place anything).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct HoldAll;
+
+impl PlacementPolicy for HoldAll {
+    fn name(&self) -> &'static str {
+        "hold"
+    }
+
+    fn place(&mut self, _view: &SchedulerView) -> Vec<PlacementDecision> {
+        Vec::new()
+    }
+}
+
+/// Selector for the shipped policies (CLI `--policy`, config structs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Throughput-greedy cache affinity (the default).
+    Greedy,
+    /// Weighted deficit-round-robin across contexts.
+    FairShare,
+    /// Greedy assignment + proactive context staging.
+    Prefetch,
+}
+
+impl PolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::Greedy => "greedy",
+            PolicyKind::FairShare => "fairshare",
+            PolicyKind::Prefetch => "prefetch",
+        }
+    }
+
+    /// Parse a CLI spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "greedy" => Some(PolicyKind::Greedy),
+            "fairshare" | "fair-share" => Some(PolicyKind::FairShare),
+            "prefetch" => Some(PolicyKind::Prefetch),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy with its default parameters.
+    pub fn build(&self) -> Box<dyn PlacementPolicy> {
+        match self {
+            PolicyKind::Greedy => Box::new(AffinityGreedy::new()),
+            PolicyKind::FairShare => Box::new(WeightedFairShare::new()),
+            PolicyKind::Prefetch => Box::new(WarmPrefetch::new()),
+        }
+    }
+}
+
+/// Read-only window onto scheduler state for one placement round.
+///
+/// Everything a policy may consult lives here: the queue (in order),
+/// idle workers, warmth predicates, deterministic `CostModel`-backed
+/// acquisition estimates (peer-cache lookups memoized per round), and
+/// per-context progress counters. Policies cannot mutate the scheduler
+/// through the view — decisions are the only channel back.
+pub struct SchedulerView<'a> {
+    sched: &'a Scheduler,
+    /// Component kinds with some cached copy in the pool, per context
+    /// (lazily computed once per round — cache contents cannot change
+    /// mid-round).
+    peer_kinds: RefCell<HashMap<ContextId, HashSet<ComponentKind>>>,
+}
+
+impl<'a> SchedulerView<'a> {
+    pub fn new(sched: &'a Scheduler) -> Self {
+        Self { sched, peer_kinds: RefCell::new(HashMap::new()) }
+    }
+
+    /// The context-management policy (None/Partial/Pervasive) in force.
+    pub fn context_policy(&self) -> ContextPolicy {
+        self.sched.policy()
+    }
+
+    /// Deterministic cost estimates (the same the scheduler plans with).
+    pub fn cost(&self) -> &CostModel {
+        self.sched.cost_model()
+    }
+
+    /// Ready tasks in queue order.
+    pub fn queued(&self) -> Vec<QueuedTask> {
+        self.queued_prefix(usize::MAX)
+    }
+
+    /// The first `limit` ready tasks in queue order. Policies that can
+    /// only consume a bounded slice of the backlog per round (e.g.
+    /// [`AffinityGreedy`]: warm-pairing look-ahead + one task per idle
+    /// worker) should use this instead of [`queued`] so a deep queue
+    /// costs O(limit), not O(queue), per dispatch round.
+    ///
+    /// [`queued`]: Self::queued
+    pub fn queued_prefix(&self, limit: usize) -> Vec<QueuedTask> {
+        self.sched
+            .ready_tasks()
+            .take(limit)
+            .map(|t| QueuedTask {
+                task: t.id,
+                context: t.context,
+                inferences: t.count,
+            })
+            .collect()
+    }
+
+    /// Idle workers, sorted by id (deterministic iteration order).
+    pub fn idle_workers(&self) -> Vec<WorkerId> {
+        let mut idle: Vec<WorkerId> = self
+            .sched
+            .workers()
+            .filter(|w| w.is_idle())
+            .map(|w| w.id)
+            .collect();
+        idle.sort_unstable();
+        idle
+    }
+
+    /// Relative GPU speed of a worker (1.0 = reference A10).
+    pub fn worker_speed(&self, w: WorkerId) -> f64 {
+        self.sched.worker(w).map(|w| w.relative_speed()).unwrap_or(0.0)
+    }
+
+    /// Bytes currently cached on a worker (all contexts).
+    pub fn worker_cached_bytes(&self, w: WorkerId) -> u64 {
+        self.sched.worker(w).map(|w| w.cached_bytes_total()).unwrap_or(0)
+    }
+
+    /// A worker's cache capacity in bytes.
+    pub fn worker_cache_capacity(&self, w: WorkerId) -> u64 {
+        self.sched.worker(w).map(|w| w.cache_capacity()).unwrap_or(0)
+    }
+
+    /// Would a task of `ctx` start useful work on `w` with zero staging
+    /// (ready library under Pervasive, full file cache under Partial)?
+    pub fn warm_for(&self, w: WorkerId, ctx: ContextId) -> bool {
+        self.sched
+            .worker(w)
+            .map(|wk| self.sched.warm_for(wk, ctx))
+            .unwrap_or(false)
+    }
+
+    /// Weaker warmth: every component the current policy caches is in
+    /// `w`'s file cache (or its library is ready). Unlike [`warm_for`]
+    /// under Pervasive this does not require a materialized library —
+    /// it is the state a completed prefetch leaves a worker in.
+    ///
+    /// [`warm_for`]: Self::warm_for
+    pub fn cache_warm_for(&self, w: WorkerId, ctx: ContextId) -> bool {
+        let Some(worker) = self.sched.worker(w) else { return false };
+        if worker.library.is_ready_for(ctx) {
+            return true;
+        }
+        let policy = self.context_policy();
+        if !policy.caches_files() {
+            return false;
+        }
+        let Some(recipe) = self.sched.recipe(ctx) else { return false };
+        let comps = recipe.cached_components(policy);
+        !comps.is_empty()
+            && comps.iter().all(|c| worker.has_cached(ctx, c.kind))
+    }
+
+    /// Estimated context-acquisition seconds if the next task of `ctx`
+    /// ran on `w` right now — the affinity score (lower is better).
+    pub fn acquisition_estimate_s(&self, w: WorkerId, ctx: ContextId) -> f64 {
+        let worker = self.sched.worker(w).expect("estimating a live worker");
+        let mut memo = self.peer_kinds.borrow_mut();
+        let kinds = memo
+            .entry(ctx)
+            .or_insert_with(|| self.sched.peer_cached_kinds(ctx));
+        self.sched.acquisition_estimate_s(worker, ctx, kinds)
+    }
+
+    /// Registered context ids, ascending.
+    pub fn contexts(&self) -> Vec<ContextId> {
+        self.sched.recipes().map(|r| r.id).collect()
+    }
+
+    /// Fair-share weight of a context's recipe (1.0 default).
+    pub fn recipe_weight(&self, ctx: ContextId) -> f64 {
+        self.sched.recipe(ctx).map(|r| r.weight).unwrap_or(1.0)
+    }
+
+    /// Bytes the current policy would cache for `ctx` (prefetch sizing).
+    pub fn recipe_cached_bytes(&self, ctx: ContextId) -> u64 {
+        let policy = self.context_policy();
+        self.sched
+            .recipe(ctx)
+            .map(|r| {
+                r.cached_components(policy)
+                    .iter()
+                    .map(|c| c.size_bytes)
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Queued-task counts per context.
+    pub fn queued_by_context(&self) -> BTreeMap<ContextId, u64> {
+        let mut m = BTreeMap::new();
+        for t in self.sched.ready_tasks() {
+            *m.entry(t.context).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// In-flight (dispatched, unfinished) task counts per context.
+    pub fn in_flight_by_context(&self) -> BTreeMap<ContextId, u64> {
+        self.sched.running_context_counts()
+    }
+
+    /// Completed-task counts per context.
+    pub fn completed_by_context(&self) -> BTreeMap<ContextId, u64> {
+        self.sched.completed_context_counts()
+    }
+
+    /// Connected workers (idle or busy) that are [`cache_warm_for`]
+    /// `ctx` — the pool's current warmth for a tenant.
+    ///
+    /// [`cache_warm_for`]: Self::cache_warm_for
+    pub fn warm_worker_count(&self, ctx: ContextId) -> usize {
+        self.sched
+            .workers()
+            .filter(|w| self.cache_warm_for(w.id, ctx))
+            .count()
+    }
+
+    /// Prefetches of `ctx` currently staging somewhere in the pool.
+    pub fn prefetching_count(&self, ctx: ContextId) -> usize {
+        self.sched.prefetch_count(ctx)
+    }
+}
+
+/// Index into `idle` of the cheapest worker for `ctx`: lowest
+/// acquisition estimate, ties broken by GPU speed (descending) then
+/// worker id (ascending). Exactly the pre-policy scheduler's candidate
+/// comparison — [`AffinityGreedy`]'s parity depends on it.
+///
+/// Panics if `idle` is empty.
+pub fn pick_best_worker(
+    view: &SchedulerView,
+    idle: &[WorkerId],
+    ctx: ContextId,
+) -> usize {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, wid) in idle.iter().enumerate() {
+        let est = view.acquisition_estimate_s(*wid, ctx);
+        let replace = match &best {
+            None => true,
+            Some((bi, best_est)) => {
+                let best_speed = view.worker_speed(idle[*bi]);
+                match est.partial_cmp(best_est).unwrap() {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => match best_speed
+                        .partial_cmp(&view.worker_speed(*wid))
+                        .unwrap()
+                    {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Greater => false,
+                        std::cmp::Ordering::Equal => *wid < idle[*bi],
+                    },
+                }
+            }
+        };
+        if replace {
+            best = Some((i, est));
+        }
+    }
+    best.expect("pick_best_worker over a non-empty idle set").0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_kind_roundtrip() {
+        for kind in
+            [PolicyKind::Greedy, PolicyKind::FairShare, PolicyKind::Prefetch]
+        {
+            assert_eq!(PolicyKind::parse(kind.as_str()), Some(kind));
+            assert_eq!(kind.build().name(), kind.as_str());
+        }
+        assert_eq!(PolicyKind::parse("fair-share"), Some(PolicyKind::FairShare));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,297 @@
+//! Proactive context staging: warm the pool *before* a tenant's first
+//! task is dispatched.
+//!
+//! The greedy policy only stages a context when a task of that context
+//! is placed — a cold tenant queued behind a long warm stream pays its
+//! full staging cost at the worst moment (when its first task finally
+//! reaches a worker). This policy uses queue knowledge the mechanism
+//! already has: when a backlogged context has no warm (or prefetching)
+//! worker and its first queued task is too deep in the queue to be
+//! served this round, it reserves idle workers and issues
+//! [`PlacementDecision::Prefetch`] for them. The scheduler turns each
+//! prefetch into the same `Stage` phases a task plan would use —
+//! including spanning-tree peer sources with fan-out caps — so the
+//! second prefetch of a context typically streams from the first.
+//!
+//! Assignment otherwise mirrors [`super::AffinityGreedy`], with one
+//! deliberate difference: warm pairing accepts *cache*-warm workers
+//! (what a finished prefetch produces) and scans the whole queue, so a
+//! prefetched worker reaches deep into the backlog for its tenant's
+//! first task instead of being burned on the queue-front context.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::super::context::ContextId;
+use super::super::worker::WorkerId;
+use super::{
+    pick_best_worker, PlacementDecision, PlacementPolicy, SchedulerView,
+};
+
+/// Greedy assignment + proactive staging for cold backlogged tenants.
+#[derive(Debug, Clone, Copy)]
+pub struct WarmPrefetch {
+    /// Warm-or-prefetching workers to aim for per cold context.
+    pub width: usize,
+}
+
+impl Default for WarmPrefetch {
+    fn default() -> Self {
+        Self { width: 2 }
+    }
+}
+
+impl WarmPrefetch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_width(width: usize) -> Self {
+        assert!(width > 0, "prefetch width must be positive");
+        Self { width }
+    }
+}
+
+impl PlacementPolicy for WarmPrefetch {
+    fn name(&self) -> &'static str {
+        "prefetch"
+    }
+
+    fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
+        let mut decisions = Vec::new();
+        let queue = view.queued();
+        if queue.is_empty() {
+            return decisions;
+        }
+        let mut idle = view.idle_workers();
+        if idle.is_empty() {
+            return decisions;
+        }
+        let caches = view.context_policy().caches_files();
+
+        // Phase 1: warmth pairing — library-warm OR fully file-cached
+        // workers claim the earliest queued task of their resident
+        // context, scanning the whole queue (a prefetched context's
+        // first task may be far behind the front). Warmth is invariant
+        // within a round and contexts are few, so each idle worker's
+        // warm-context set is derived once — the queue scan is then an
+        // O(1) membership test per entry instead of a component walk.
+        let contexts = view.contexts();
+        let warm_of: HashMap<WorkerId, HashSet<ContextId>> = idle
+            .iter()
+            .map(|w| {
+                let set = contexts
+                    .iter()
+                    .copied()
+                    .filter(|c| view.cache_warm_for(*w, *c))
+                    .collect();
+                (*w, set)
+            })
+            .collect();
+        let mut claimed = vec![false; queue.len()];
+        let mut i = 0;
+        while i < idle.len() {
+            let wid = idle[i];
+            let warm = &warm_of[&wid];
+            let mut found = None;
+            for (pos, q) in queue.iter().enumerate() {
+                if !claimed[pos] && warm.contains(&q.context) {
+                    found = Some(pos);
+                    break;
+                }
+            }
+            if let Some(pos) = found {
+                claimed[pos] = true;
+                let wid = idle.remove(i);
+                decisions.push(PlacementDecision::Assign {
+                    task: queue[pos].task,
+                    worker: wid,
+                });
+            } else {
+                i += 1;
+            }
+        }
+
+        // Phase 2: prefetch reservation. Rank of each context's first
+        // unclaimed task among unclaimed tasks = how many dispatches it
+        // is away from a worker under FIFO.
+        if caches {
+            let mut first_rank: BTreeMap<ContextId, usize> = BTreeMap::new();
+            let mut rank = 0usize;
+            for (pos, q) in queue.iter().enumerate() {
+                if claimed[pos] {
+                    continue;
+                }
+                first_rank.entry(q.context).or_insert(rank);
+                rank += 1;
+            }
+            for (ctx, first) in first_rank {
+                if idle.is_empty() {
+                    break;
+                }
+                if first < idle.len() {
+                    // Served by the FIFO phase this round anyway.
+                    continue;
+                }
+                let mut warmish =
+                    view.warm_worker_count(ctx) + view.prefetching_count(ctx);
+                while warmish < self.width && !idle.is_empty() {
+                    // Emptiest-cache idle worker that can hold the
+                    // context without (much) eviction pressure, lowest
+                    // id on ties; skip the context entirely if it fits
+                    // no idle worker's cache.
+                    let need = view.recipe_cached_bytes(ctx);
+                    let target = idle
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, w)| view.worker_cache_capacity(**w) >= need)
+                        .min_by(|(_, a), (_, b)| {
+                            view.worker_cached_bytes(**a)
+                                .cmp(&view.worker_cached_bytes(**b))
+                                .then(a.cmp(b))
+                        })
+                        .map(|(i, _)| i);
+                    let Some(t) = target else { break };
+                    let wid = idle.remove(t);
+                    decisions
+                        .push(PlacementDecision::Prefetch { ctx, worker: wid });
+                    warmish += 1;
+                }
+            }
+        }
+
+        // Phase 3: FIFO + affinity over whatever remains (greedy's
+        // second phase, unchanged).
+        for (pos, q) in queue.iter().enumerate() {
+            if claimed[pos] {
+                continue;
+            }
+            if idle.is_empty() {
+                break;
+            }
+            let best = pick_best_worker(view, &idle, q.context);
+            let wid = idle.swap_remove(best);
+            decisions
+                .push(PlacementDecision::Assign { task: q.task, worker: wid });
+        }
+        decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::context::{ContextPolicy, ContextRecipe};
+    use super::super::super::costmodel::CostModel;
+    use super::super::super::scheduler::Scheduler;
+    use super::super::super::task::Task;
+    use super::super::super::transfer::TransferPlanner;
+    use super::super::{PlacementDecision, PlacementPolicy, SchedulerView};
+    use super::WarmPrefetch;
+    use crate::cluster::{GpuModel, Node};
+
+    /// 30 tasks of ctx 0 queued ahead of 1 task of ctx 1, three idle
+    /// workers: the cold back-of-queue tenant gets prefetched while the
+    /// front tenant keeps most of the workers.
+    fn sched_with_backlog() -> Scheduler {
+        let mut s = Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "cold", 1_000_000, 2_000_000),
+            ],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            u64::MAX,
+        );
+        let mut tasks: Vec<Task> =
+            (0..30).map(|i| Task::new(i, i * 10, 10, 0)).collect();
+        tasks.push(Task::new(30, 0, 10, 1));
+        s.submit_tasks(tasks);
+        for i in 0..3 {
+            s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+        }
+        s
+    }
+
+    #[test]
+    fn cold_backlogged_context_is_prefetched() {
+        let s = sched_with_backlog();
+        let mut p = WarmPrefetch::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        let prefetches: Vec<_> = ds
+            .iter()
+            .filter_map(|d| match d {
+                PlacementDecision::Prefetch { ctx, worker } => {
+                    Some((*ctx, *worker))
+                }
+                _ => None,
+            })
+            .collect();
+        // Ctx 1's first task sits at rank 30 >= 3 idle workers, ctx 1 is
+        // cold nowhere warm: width-2 prefetch fires; ctx 0 (front, rank
+        // 0) is never prefetched.
+        assert_eq!(prefetches.len(), 2, "decisions: {ds:?}");
+        assert!(prefetches.iter().all(|(c, _)| *c == 1));
+        // The remaining worker still serves the queue front.
+        let assigns = ds
+            .iter()
+            .filter(|d| matches!(d, PlacementDecision::Assign { .. }))
+            .count();
+        assert_eq!(assigns, 1);
+    }
+
+    #[test]
+    fn prefetched_worker_pairs_with_its_tenants_first_task() {
+        let mut s = sched_with_backlog();
+        let mut p = WarmPrefetch::new();
+        let ds = s.apply_decisions(p.place(&SchedulerView::new(&s)));
+        assert_eq!(ds.len(), 3);
+        // Complete the prefetch stage phases on one prefetching worker.
+        let pf = ds
+            .iter()
+            .find(|d| Scheduler::is_prefetch_id(d.task))
+            .expect("a prefetch dispatch");
+        for i in 0..pf.phases.len() {
+            s.phase_done(pf.task, i);
+        }
+        // Its worker is idle again and fully file-cached for ctx 1.
+        let view = SchedulerView::new(&s);
+        assert!(view.idle_workers().contains(&pf.worker));
+        assert!(view.cache_warm_for(pf.worker, 1));
+        // Next round: phase-1 pairing reaches past 29 queued ctx-0
+        // tasks and hands the worker ctx 1's first task.
+        let ds2 = p.place(&view);
+        let paired = ds2.iter().find_map(|d| match d {
+            PlacementDecision::Assign { task, worker }
+                if *worker == pf.worker =>
+            {
+                Some(*task)
+            }
+            _ => None,
+        });
+        assert_eq!(paired, Some(30), "decisions: {ds2:?}");
+    }
+
+    #[test]
+    fn no_prefetch_when_caching_disabled() {
+        let mut s = Scheduler::with_registry(
+            ContextPolicy::None,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "cold", 1_000, 2_000),
+            ],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            u64::MAX,
+        );
+        let mut tasks: Vec<Task> =
+            (0..20).map(|i| Task::new(i, i * 10, 10, 0)).collect();
+        tasks.push(Task::new(20, 0, 10, 1));
+        s.submit_tasks(tasks);
+        s.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        let mut p = WarmPrefetch::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        assert!(ds
+            .iter()
+            .all(|d| matches!(d, PlacementDecision::Assign { .. })));
+    }
+}

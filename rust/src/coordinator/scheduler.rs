@@ -9,12 +9,19 @@
 //!
 //! Multi-application serving: the scheduler holds a **context registry**
 //! (many [`ContextRecipe`]s), every task carries a [`ContextId`], and
-//! dispatch scores each idle worker by *cache affinity* — the estimated
-//! seconds of context acquisition the placement would pay, from zero (a
-//! ready library) through partial cache hits up to a full cold stage.
-//! Worker caches are finite, so competing contexts evict each other LRU
+//! worker caches are finite, so competing contexts evict each other LRU
 //! (never a context with an in-flight task); per-context hit/miss/evict
 //! counters land in [`CacheStats`].
+//!
+//! **Mechanism vs. policy:** this type owns only mechanisms — queues,
+//! the registry, cache/library state, transfer slot accounting,
+//! metrics, plan construction. *Which* task runs *where* (and what gets
+//! prefetched) is decided by a pluggable [`PlacementPolicy`] from
+//! [`super::policy`]: each [`Self::try_dispatch`] round the scheduler
+//! hands the policy a read-only [`SchedulerView`] and then validates
+//! and executes the returned [`PlacementDecision`]s. Swap policies with
+//! [`Self::with_policy`]; the default is the throughput-greedy
+//! [`AffinityGreedy`].
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
@@ -24,6 +31,10 @@ use super::context::{
 use super::costmodel::CostModel;
 use super::library::LibraryState;
 use super::metrics::CacheStats;
+use super::policy::{
+    AffinityGreedy, HoldAll, PlacementDecision, PlacementPolicy,
+    SchedulerView,
+};
 use super::task::{Task, TaskId, TaskRecord, TaskState};
 use super::transfer::{StageSource, TransferPlanner};
 use super::worker::{Worker, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};
@@ -58,11 +69,26 @@ impl PhaseKind {
 }
 
 /// A dispatch decision: run `task` on `worker` through `phases`.
+///
+/// Prefetch dispatches reuse this shape with a synthetic id in the
+/// [`Scheduler::PREFETCH_ID_BASE`] range (check with
+/// [`Scheduler::is_prefetch_id`]) and a stage-only phase list; drivers
+/// time their phases exactly like a task's but record no completion.
 #[derive(Debug, Clone)]
 pub struct Dispatch {
     pub task: TaskId,
     pub worker: WorkerId,
     pub phases: Vec<PhaseKind>,
+}
+
+impl Dispatch {
+    /// Is this a prefetch dispatch (synthetic id, stage-only plan)?
+    /// Consumers must not call [`Scheduler::task_meta`] /
+    /// [`Scheduler::task_done`] for prefetch dispatches — the scheduler
+    /// retires them itself on their last `phase_done`.
+    pub fn is_prefetch(&self) -> bool {
+        Scheduler::is_prefetch_id(self.task)
+    }
 }
 
 /// Progress counters (monotonic within a run).
@@ -76,10 +102,22 @@ pub struct Progress {
     pub evictions: u32,
 }
 
+/// An in-flight context prefetch: stage-only phases warming a worker's
+/// cache for a context no task of which has been dispatched yet.
+#[derive(Debug)]
+struct PrefetchFlight {
+    worker: WorkerId,
+    context: ContextId,
+    phases: Vec<PhaseKind>,
+    next: usize,
+}
+
 /// The TaskVine-style manager.
 #[derive(Debug)]
 pub struct Scheduler {
     policy: ContextPolicy,
+    /// The pluggable dispatch policy (decisions only; see module docs).
+    placement: Box<dyn PlacementPolicy>,
     /// The context registry: every application's recipe, keyed by id.
     recipes: BTreeMap<ContextId, ContextRecipe>,
     planner: TransferPlanner,
@@ -93,12 +131,24 @@ pub struct Scheduler {
     workers: BTreeMap<WorkerId, Worker>,
     /// Remaining (not-yet-completed) phases per running task.
     in_flight: HashMap<TaskId, (WorkerId, Vec<PhaseKind>, usize)>,
+    /// Running prefetches, keyed by their synthetic dispatch id.
+    prefetch_flight: HashMap<TaskId, PrefetchFlight>,
+    next_prefetch_seq: u64,
     next_worker_id: WorkerId,
     progress: Progress,
     records: Vec<TaskRecord>,
 }
 
 impl Scheduler {
+    /// Synthetic dispatch ids at or above this value are prefetches,
+    /// not tasks (drivers must not complete them as tasks).
+    pub const PREFETCH_ID_BASE: TaskId = 1 << 62;
+
+    /// Is `id` a synthetic prefetch-dispatch id?
+    pub fn is_prefetch_id(id: TaskId) -> bool {
+        id >= Self::PREFETCH_ID_BASE
+    }
+
     /// Single-application convenience constructor (the paper's pv runs).
     pub fn new(
         policy: ContextPolicy,
@@ -131,6 +181,7 @@ impl Scheduler {
         }
         Self {
             policy,
+            placement: Box::new(AffinityGreedy::new()),
             recipes: map,
             planner,
             cost,
@@ -140,10 +191,24 @@ impl Scheduler {
             ready: VecDeque::new(),
             workers: BTreeMap::new(),
             in_flight: HashMap::new(),
+            prefetch_flight: HashMap::new(),
+            next_prefetch_seq: 0,
             next_worker_id: 0,
             progress: Progress::default(),
             records: Vec::new(),
         }
+    }
+
+    /// Swap the placement policy (builder style):
+    /// `Scheduler::with_registry(...).with_policy(PolicyKind::FairShare.build())`.
+    pub fn with_policy(mut self, placement: Box<dyn PlacementPolicy>) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Name of the active placement policy (CLI/report label).
+    pub fn placement_name(&self) -> &'static str {
+        self.placement.name()
     }
 
     pub fn policy(&self) -> ContextPolicy {
@@ -173,6 +238,11 @@ impl Scheduler {
         for t in tasks {
             assert!(t.is_ready());
             assert!(
+                !Self::is_prefetch_id(t.id),
+                "task id {} collides with the prefetch id range",
+                t.id
+            );
+            assert!(
                 self.recipes.contains_key(&t.context),
                 "task {} references unregistered context {}",
                 t.id,
@@ -200,19 +270,20 @@ impl Scheduler {
         let worker = self.workers.remove(&id)?;
         self.progress.evictions += 1;
         let task_id = worker.running?;
+        if Self::is_prefetch_id(task_id) {
+            // A dying prefetch only holds peer-upload slots; no task to
+            // requeue, no work lost.
+            if let Some(pf) = self.prefetch_flight.remove(&task_id) {
+                self.release_pending_uploads(
+                    &pf.phases[pf.next.min(pf.phases.len())..],
+                );
+            }
+            return None;
+        }
         // Release peer-upload slots claimed for this task's unfinished
         // stage phases (sources may themselves be gone — skip those).
         if let Some((_, phases, next)) = self.in_flight.remove(&task_id) {
-            for ph in &phases[next.min(phases.len())..] {
-                if let PhaseKind::Stage {
-                    source: StageSource::Peer(src), ..
-                } = ph
-                {
-                    if let Some(peer) = self.workers.get_mut(src) {
-                        peer.release_upload();
-                    }
-                }
-            }
+            self.release_pending_uploads(&phases[next.min(phases.len())..]);
         }
         let task = self.tasks.get_mut(&task_id).expect("running task exists");
         debug_assert_eq!(task.state, TaskState::Running { worker: id });
@@ -221,6 +292,20 @@ impl Scheduler {
         // Requeue at the FRONT: evicted work is oldest and re-runs first.
         self.ready.push_front(task_id);
         Some((task_id, task.count))
+    }
+
+    /// Release the peer slots claimed by not-yet-completed stage phases.
+    fn release_pending_uploads(&mut self, pending: &[PhaseKind]) {
+        for ph in pending {
+            if let PhaseKind::Stage {
+                source: StageSource::Peer(src), ..
+            } = ph
+            {
+                if let Some(peer) = self.workers.get_mut(src) {
+                    peer.release_upload();
+                }
+            }
+        }
     }
 
     /// A worker finished its workload and left voluntarily (end of run).
@@ -255,7 +340,7 @@ impl Scheduler {
     /// (peer-rate when some connected worker caches it) + materialization
     /// on this worker's GPU. This is the affinity score — lower is
     /// better, and a fully-warm worker always beats a cold one.
-    fn acquisition_estimate_s(
+    pub(crate) fn acquisition_estimate_s(
         &self,
         w: &Worker,
         ctx: ContextId,
@@ -286,7 +371,7 @@ impl Scheduler {
 
     /// Is `w` fully warm for `ctx` under the current policy — i.e. would
     /// a task of `ctx` start useful work with zero staging?
-    fn warm_for(&self, w: &Worker, ctx: ContextId) -> bool {
+    pub(crate) fn warm_for(&self, w: &Worker, ctx: ContextId) -> bool {
         if self.policy.retains_materialized() {
             w.library.is_ready_for(ctx)
         } else if self.policy.caches_files() {
@@ -299,134 +384,160 @@ impl Scheduler {
         }
     }
 
-    /// Assign ready tasks to idle workers with context-affine placement:
-    ///
-    /// 1. **Warm pairing** — every idle worker that is fully warm for
-    ///    some context claims the earliest queued task of that context
-    ///    (bounded look-ahead), so a freed worker keeps serving its
-    ///    resident application instead of thrashing its cache on
-    ///    whatever tenant happens to head the queue.
-    /// 2. **FIFO + affinity scoring** — remaining tasks go in queue
-    ///    order to the idle worker with the cheapest estimated context
-    ///    acquisition (partial cache hits, peer availability, GPU-scaled
-    ///    materialization), tie-broken by GPU speed (desc) then id.
-    pub fn try_dispatch(&mut self) -> Vec<Dispatch> {
-        let mut out = Vec::new();
-        if self.ready.is_empty() {
-            return out;
+    /// Component kinds of `ctx` with some cached copy anywhere in the
+    /// pool (empty when the policy caches nothing) — the peer-transfer
+    /// fast-path input of the affinity estimate.
+    pub(crate) fn peer_cached_kinds(
+        &self,
+        ctx: ContextId,
+    ) -> HashSet<ComponentKind> {
+        let mut set = HashSet::new();
+        if self.policy.caches_files() {
+            for w in self.workers.values() {
+                for c in &self.recipes[&ctx].components {
+                    if w.has_cached(ctx, c.kind) {
+                        set.insert(c.kind);
+                    }
+                }
+            }
         }
-        let mut idle: Vec<WorkerId> = self
-            .workers
+        set
+    }
+
+    /// Ready tasks in queue order (policy-view support).
+    pub(crate) fn ready_tasks(&self) -> impl Iterator<Item = &Task> + '_ {
+        self.ready.iter().map(move |id| &self.tasks[id])
+    }
+
+    /// The deterministic cost model (policy-view support).
+    pub(crate) fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// Prefetches of `ctx` currently staging.
+    pub(crate) fn prefetch_count(&self, ctx: ContextId) -> usize {
+        self.prefetch_flight
             .values()
-            .filter(|w| w.is_idle())
-            .map(|w| w.id)
-            .collect();
-        if idle.is_empty() {
-            return out;
-        }
-        idle.sort_unstable();
+            .filter(|p| p.context == ctx)
+            .count()
+    }
 
-        // How deep into the ready queue warm pairing may reach. Warm
-        // matches can bypass the queue front (including a requeued
-        // evicted task) while no idle worker is warm for its context —
-        // deliberately throughput-greedy; whenever warm matches run out,
-        // the FIFO phase below dispatches the front task, so nothing is
-        // starved past the warm stream. A fairness/latency knob on top
-        // of this is a ROADMAP open item (per-context fair share).
-        const LOOKAHEAD: usize = 64;
-
-        let mut paired: Vec<(TaskId, WorkerId)> = Vec::new();
-        let mut i = 0;
-        while i < idle.len() {
-            let wid = idle[i];
-            let w = &self.workers[&wid];
-            let mut found = None;
-            for (pos, tid) in self.ready.iter().enumerate().take(LOOKAHEAD) {
-                let ctx = self.tasks[tid].context;
-                if self.warm_for(w, ctx) {
-                    found = Some((pos, *tid));
-                    break;
-                }
-            }
-            if let Some((pos, tid)) = found {
-                let _ = self.ready.remove(pos);
-                let _ = idle.remove(i);
-                paired.push((tid, wid));
-            } else {
-                i += 1;
+    /// In-flight task counts per context (policy-view support).
+    pub(crate) fn running_context_counts(&self) -> BTreeMap<ContextId, u64> {
+        let mut m = BTreeMap::new();
+        for id in self.in_flight.keys() {
+            if let Some(t) = self.tasks.get(id) {
+                *m.entry(t.context).or_insert(0) += 1;
             }
         }
+        m
+    }
 
-        // Which component kinds have *some* cached copy in the pool, per
-        // context (computed lazily once per context per call — cache
-        // contents only change on phase completions, which cannot
-        // interleave with this loop).
-        let mut peer_cached: HashMap<ContextId, HashSet<ComponentKind>> =
-            HashMap::new();
+    /// Completed-task counts per context (policy-view support).
+    pub(crate) fn completed_context_counts(&self) -> BTreeMap<ContextId, u64> {
+        let mut m = BTreeMap::new();
+        for r in &self.records {
+            *m.entry(r.context).or_insert(0) += 1;
+        }
+        m
+    }
 
-        while !idle.is_empty() {
-            let Some(task_id) = self.ready.pop_front() else { break };
-            let ctx = self.tasks[&task_id].context;
-            if !peer_cached.contains_key(&ctx) {
-                let mut set = HashSet::new();
-                if self.policy.caches_files() {
-                    for w in self.workers.values() {
-                        for c in &self.recipes[&ctx].components {
-                            if w.has_cached(ctx, c.kind) {
-                                set.insert(c.kind);
-                            }
-                        }
+    /// One dispatch round. Pure mechanism: build a read-only
+    /// [`SchedulerView`], ask the pluggable [`PlacementPolicy`] for
+    /// decisions, validate and execute them. All placement *choices* —
+    /// warm pairing, affinity scoring, fairness, prefetching — live in
+    /// [`super::policy`].
+    pub fn try_dispatch(&mut self) -> Vec<Dispatch> {
+        if self.ready.is_empty()
+            || !self.workers.values().any(|w| w.is_idle())
+        {
+            return Vec::new();
+        }
+        // The policy needs `&mut self` (it may carry state, e.g.
+        // fair-share deficits) while the view borrows the scheduler —
+        // park a placeholder in the field for the duration of the call.
+        let mut placement: Box<dyn PlacementPolicy> =
+            std::mem::replace(&mut self.placement, Box::new(HoldAll));
+        let decisions = placement.place(&SchedulerView::new(self));
+        self.placement = placement;
+        self.apply_decisions(decisions)
+    }
+
+    /// Validate and execute placement decisions, in order (order
+    /// matters: plans claim peer upload slots as they are built).
+    /// Invalid decisions — a busy/unknown worker, a task that is not
+    /// queued, a prefetch under a non-caching policy or of an
+    /// already-cached context — are skipped, never executed: a policy
+    /// bug can waste a round but cannot corrupt scheduler state.
+    pub fn apply_decisions(
+        &mut self,
+        decisions: Vec<PlacementDecision>,
+    ) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        for decision in decisions {
+            match decision {
+                PlacementDecision::Hold => break,
+                PlacementDecision::Assign { task, worker } => {
+                    let idle = self
+                        .workers
+                        .get(&worker)
+                        .map(|w| w.is_idle())
+                        .unwrap_or(false);
+                    if !idle {
+                        continue;
                     }
+                    let Some(pos) =
+                        self.ready.iter().position(|t| *t == task)
+                    else {
+                        continue;
+                    };
+                    self.ready.remove(pos);
+                    let ctx = self.tasks[&task].context;
+                    let phases = self.build_plan(task, worker);
+                    let t = self.tasks.get_mut(&task).unwrap();
+                    t.state = TaskState::Running { worker };
+                    t.attempts += 1;
+                    let w = self.workers.get_mut(&worker).unwrap();
+                    w.running = Some(task);
+                    w.touch_context(ctx);
+                    self.in_flight.insert(task, (worker, phases.clone(), 0));
+                    out.push(Dispatch { task, worker, phases });
                 }
-                peer_cached.insert(ctx, set);
-            }
-            let kinds = &peer_cached[&ctx];
-
-            let mut best: Option<(usize, f64)> = None;
-            for (i, wid) in idle.iter().enumerate() {
-                let w = &self.workers[wid];
-                let est = self.acquisition_estimate_s(w, ctx, kinds);
-                let replace = match &best {
-                    None => true,
-                    Some((bi, best_est)) => {
-                        let bw = &self.workers[&idle[*bi]];
-                        match est.partial_cmp(best_est).unwrap() {
-                            std::cmp::Ordering::Less => true,
-                            std::cmp::Ordering::Greater => false,
-                            std::cmp::Ordering::Equal => match bw
-                                .relative_speed()
-                                .partial_cmp(&w.relative_speed())
-                                .unwrap()
-                            {
-                                std::cmp::Ordering::Less => true,
-                                std::cmp::Ordering::Greater => false,
-                                std::cmp::Ordering::Equal => w.id < bw.id,
-                            },
-                        }
+                PlacementDecision::Prefetch { ctx, worker } => {
+                    let idle = self
+                        .workers
+                        .get(&worker)
+                        .map(|w| w.is_idle())
+                        .unwrap_or(false);
+                    if !idle
+                        || !self.policy.caches_files()
+                        || !self.recipes.contains_key(&ctx)
+                    {
+                        continue;
                     }
-                };
-                if replace {
-                    best = Some((i, est));
+                    let phases = self.build_prefetch_plan(ctx, worker);
+                    if phases.is_empty() {
+                        // Everything cacheable is already resident.
+                        continue;
+                    }
+                    let id =
+                        Self::PREFETCH_ID_BASE + self.next_prefetch_seq;
+                    self.next_prefetch_seq += 1;
+                    let w = self.workers.get_mut(&worker).unwrap();
+                    w.running = Some(id);
+                    w.touch_context(ctx);
+                    self.prefetch_flight.insert(
+                        id,
+                        PrefetchFlight {
+                            worker,
+                            context: ctx,
+                            phases: phases.clone(),
+                            next: 0,
+                        },
+                    );
+                    out.push(Dispatch { task: id, worker, phases });
                 }
             }
-            let (best_i, _) = best.expect("idle is non-empty");
-            let wid = idle.swap_remove(best_i);
-            paired.push((task_id, wid));
-        }
-
-        // Materialize the pairings in order (plans claim peer upload
-        // slots, so warm pairings go first — they claim none).
-        for (task_id, wid) in paired {
-            let ctx = self.tasks[&task_id].context;
-            let phases = self.build_plan(task_id, wid);
-            let task = self.tasks.get_mut(&task_id).unwrap();
-            task.state = TaskState::Running { worker: wid };
-            task.attempts += 1;
-            let w = self.workers.get_mut(&wid).unwrap();
-            w.running = Some(task_id);
-            w.touch_context(ctx);
-            self.in_flight.insert(task_id, (wid, phases.clone(), 0));
-            out.push(Dispatch { task: task_id, worker: wid, phases });
         }
         out
     }
@@ -474,17 +585,7 @@ impl Scheduler {
             // Pick a source: peer with the component cached + free slot,
             // else origin. (Peers only useful when caching is on.)
             let source = if cache {
-                let dest = wid;
-                let planner = self.planner;
-                let mut peers: Vec<&mut Worker> =
-                    self.workers.values_mut().collect();
-                planner.pick_source(
-                    ctx,
-                    kind,
-                    origin,
-                    dest,
-                    peers.iter_mut().map(|w| &mut **w),
-                )
+                self.pick_stage_source(ctx, kind, origin, wid)
             } else {
                 StageSource::Origin(origin)
             };
@@ -499,15 +600,75 @@ impl Scheduler {
         phases
     }
 
+    /// Stage-only plan warming `wid`'s cache for `ctx`: every component
+    /// the current policy caches and the worker is missing, sourced via
+    /// the same peer-preferring planner task plans use (so repeated
+    /// prefetches of one context form the §5.3.1 spanning tree). Counts
+    /// each staged component in the per-context `prefetched` counter.
+    fn build_prefetch_plan(
+        &mut self,
+        ctx: ContextId,
+        wid: WorkerId,
+    ) -> Vec<PhaseKind> {
+        let components: Vec<(ComponentKind, u64, DataOrigin)> = self.recipes
+            [&ctx]
+            .cached_components(self.policy)
+            .iter()
+            .map(|c| (c.kind, c.size_bytes, c.effective_origin(true)))
+            .collect();
+        let mut phases = Vec::new();
+        for (kind, bytes, origin) in components {
+            if self.workers[&wid].has_cached(ctx, kind) {
+                continue;
+            }
+            // The `prefetched` counter is charged per *completed* stage
+            // (in `prefetch_phase_done`), not here — an evicted prefetch
+            // must not inflate it.
+            let source = self.pick_stage_source(ctx, kind, origin, wid);
+            phases.push(PhaseKind::Stage {
+                component: kind,
+                bytes,
+                source,
+                cache: true,
+            });
+        }
+        phases
+    }
+
+    /// Choose a stage source for `(ctx, kind)` bound for `dest`,
+    /// claiming the upload slot on a chosen peer.
+    fn pick_stage_source(
+        &mut self,
+        ctx: ContextId,
+        kind: ComponentKind,
+        origin: DataOrigin,
+        dest: WorkerId,
+    ) -> StageSource {
+        let planner = self.planner;
+        let mut peers: Vec<&mut Worker> = self.workers.values_mut().collect();
+        planner.pick_source(
+            ctx,
+            kind,
+            origin,
+            dest,
+            peers.iter_mut().map(|w| &mut **w),
+        )
+    }
+
     // -------------------------------------------------------- completions
 
     /// A phase finished on a worker: update cache/library/transfer state.
-    /// Returns the next phase to run, if any.
+    /// Returns the next phase to run, if any. Handles task and prefetch
+    /// dispatches alike (prefetches finalize themselves on their last
+    /// phase — drivers must not call [`Self::task_done`] for them).
     pub fn phase_done(
         &mut self,
         task_id: TaskId,
         phase_idx: usize,
     ) -> Option<PhaseKind> {
+        if Self::is_prefetch_id(task_id) {
+            return self.prefetch_phase_done(task_id, phase_idx);
+        }
         let (wid, phases, next) = self.in_flight.get_mut(&task_id)?;
         debug_assert_eq!(*next, phase_idx, "phases complete in order");
         let done = phases[phase_idx];
@@ -524,27 +685,9 @@ impl Scheduler {
                 }
                 if cache {
                     let ctx = self.tasks[&task_id].context;
-                    if let Some(w) = self.workers.get_mut(&wid) {
-                        // The in-flight task's context is pinned: with one
-                        // task per worker that is exactly `ctx`.
-                        let (_cached, evicted) =
-                            w.insert_cached(ctx, component, bytes, Some(ctx));
-                        for e in evicted {
-                            // Evicting a context's files also retires its
-                            // materialized library, if it holds one.
-                            let lib_ctx = match w.library {
-                                LibraryState::Ready { context }
-                                | LibraryState::Materializing { context } => {
-                                    Some(context)
-                                }
-                                LibraryState::Absent => None,
-                            };
-                            if lib_ctx == Some(e) {
-                                w.library.teardown();
-                            }
-                            self.cache_stats.ctx_mut(e).evictions += 1;
-                        }
-                    }
+                    // The in-flight task's context is pinned: with one
+                    // task per worker that is exactly `ctx`.
+                    self.cache_component(wid, ctx, component, bytes);
                 }
             }
             PhaseKind::Materialize { context } => {
@@ -564,6 +707,68 @@ impl Scheduler {
             PhaseKind::Sandbox | PhaseKind::Execute { .. } => {}
         }
         next_phase
+    }
+
+    /// Prefetch counterpart of [`Self::phase_done`]: apply the stage to
+    /// the worker cache; on the last phase the prefetch retires and the
+    /// worker goes idle again.
+    fn prefetch_phase_done(
+        &mut self,
+        id: TaskId,
+        phase_idx: usize,
+    ) -> Option<PhaseKind> {
+        let pf = self.prefetch_flight.get_mut(&id)?;
+        debug_assert_eq!(pf.next, phase_idx, "prefetch phases complete in order");
+        let done = pf.phases[phase_idx];
+        let wid = pf.worker;
+        let ctx = pf.context;
+        pf.next += 1;
+        let next_phase = pf.phases.get(pf.next).copied();
+
+        if let PhaseKind::Stage { component, bytes, source, .. } = done {
+            if let StageSource::Peer(src) = source {
+                if let Some(peer) = self.workers.get_mut(&src) {
+                    peer.release_upload();
+                }
+            }
+            self.cache_stats.ctx_mut(ctx).prefetched += 1;
+            self.cache_component(wid, ctx, component, bytes);
+        }
+        if next_phase.is_none() {
+            self.prefetch_flight.remove(&id);
+            if let Some(w) = self.workers.get_mut(&wid) {
+                w.running = None;
+            }
+        }
+        next_phase
+    }
+
+    /// Insert a staged component into `wid`'s cache (`ctx` pinned),
+    /// retiring evicted contexts' libraries and counting evictions.
+    fn cache_component(
+        &mut self,
+        wid: WorkerId,
+        ctx: ContextId,
+        component: ComponentKind,
+        bytes: u64,
+    ) {
+        if let Some(w) = self.workers.get_mut(&wid) {
+            let (_cached, evicted) =
+                w.insert_cached(ctx, component, bytes, Some(ctx));
+            for e in evicted {
+                // Evicting a context's files also retires its
+                // materialized library, if it holds one.
+                let lib_ctx = match w.library {
+                    LibraryState::Ready { context }
+                    | LibraryState::Materializing { context } => Some(context),
+                    LibraryState::Absent => None,
+                };
+                if lib_ctx == Some(e) {
+                    w.library.teardown();
+                }
+                self.cache_stats.ctx_mut(e).evictions += 1;
+            }
+        }
     }
 
     /// All phases of `task` finished; the result reached the manager.
@@ -599,6 +804,11 @@ impl Scheduler {
         self.in_flight.len()
     }
 
+    /// Prefetches currently staging (excluded from task accounting).
+    pub fn prefetching_count_total(&self) -> usize {
+        self.prefetch_flight.len()
+    }
+
     pub fn total_tasks(&self) -> usize {
         self.tasks.len()
     }
@@ -627,7 +837,8 @@ impl Scheduler {
 
     /// Task-conservation invariant: every task is exactly one of
     /// ready / running / done. Called by tests and (per-event) debug
-    /// assertions — O(1) via the completion counter.
+    /// assertions — O(1) via the completion counter. Prefetches carry
+    /// no task, so they do not appear in the ledger.
     pub fn check_conservation(&self) -> bool {
         self.ready.len() + self.in_flight.len()
             + self.progress.completed_tasks as usize
@@ -644,6 +855,7 @@ impl Scheduler {
 
 #[cfg(test)]
 mod tests {
+    use super::super::policy::PolicyKind;
     use super::*;
     use crate::cluster::{GpuModel, Node};
     use crate::coordinator::context::DataOrigin;
@@ -989,5 +1201,146 @@ mod tests {
         // task 1), and occupancy respects capacity throughout.
         assert!(w_ref.library.is_ready_for(1));
         assert!(s.check_cache_capacity());
+    }
+
+    // --------------------------------------------------- placement policy
+
+    /// `apply_decisions` skips invalid decisions instead of corrupting
+    /// state: unknown tasks, busy workers, double-assignments.
+    #[test]
+    fn apply_decisions_skips_invalid() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 10));
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let ds = s.apply_decisions(vec![
+            PlacementDecision::Assign { task: 99, worker: w }, // unknown task
+            PlacementDecision::Assign { task: 0, worker: 42 }, // unknown worker
+            PlacementDecision::Assign { task: 0, worker: w },  // valid
+            PlacementDecision::Assign { task: 1, worker: w },  // worker now busy
+        ]);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].task, 0);
+        assert!(s.check_conservation());
+        assert_eq!(s.ready_count(), 1);
+    }
+
+    /// `Hold` stops execution of the remaining decisions.
+    #[test]
+    fn hold_short_circuits_the_round() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 10));
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let ds = s.apply_decisions(vec![
+            PlacementDecision::Hold,
+            PlacementDecision::Assign { task: 0, worker: w },
+        ]);
+        assert!(ds.is_empty());
+        assert_eq!(s.ready_count(), 2);
+    }
+
+    /// Prefetch lifecycle: stage-only plan, worker busy while staging,
+    /// cache warm and worker idle after, `prefetched` counters charged,
+    /// and no effect on task conservation.
+    #[test]
+    fn prefetch_warms_cache_without_a_task() {
+        let mut s = mk_multi(ContextPolicy::Pervasive, u64::MAX);
+        s.submit_tasks(vec![Task::new(0, 0, 10, 0)]);
+        s.worker_join(node(0, GpuModel::A10), 0.0);
+        let extra = s.worker_join(node(1, GpuModel::A10), 0.0);
+        let ds = s.apply_decisions(vec![PlacementDecision::Prefetch {
+            ctx: 1,
+            worker: extra,
+        }]);
+        assert_eq!(ds.len(), 1);
+        let pf = &ds[0];
+        assert!(Scheduler::is_prefetch_id(pf.task));
+        assert!(pf
+            .phases
+            .iter()
+            .all(|p| matches!(p, PhaseKind::Stage { cache: true, .. })));
+        assert_eq!(pf.phases.len(), 5, "all five components staged");
+        assert!(!s.worker(extra).unwrap().is_idle(), "busy while staging");
+        assert_eq!(s.prefetching_count_total(), 1);
+        assert!(s.check_conservation(), "prefetch is not a task");
+        assert_eq!(
+            s.cache_stats().ctx(1).prefetched,
+            0,
+            "prefetched counts completed stages, not planned ones"
+        );
+
+        for i in 0..pf.phases.len() {
+            s.phase_done(pf.task, i);
+        }
+        let wref = s.worker(extra).unwrap();
+        assert!(wref.is_idle(), "idle again after staging");
+        assert!(wref.has_cached(1, ComponentKind::ModelWeights));
+        assert!(wref.has_cached(1, ComponentKind::DepsPackage));
+        assert_eq!(s.cache_stats().ctx(1).prefetched, 5);
+        assert_eq!(s.cache_stats().ctx(1).misses, 0, "prefetch is no miss");
+        assert_eq!(s.prefetching_count_total(), 0);
+    }
+
+    /// Prefetch of an already-cached context is a no-op (empty plan).
+    #[test]
+    fn prefetch_of_cached_context_is_noop() {
+        let mut s = mk_multi(ContextPolicy::Pervasive, u64::MAX);
+        s.submit_tasks(vec![Task::new(0, 0, 10, 0)]);
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]); // ctx 0 fully cached on w
+        let ds = s
+            .apply_decisions(vec![PlacementDecision::Prefetch { ctx: 0, worker: w }]);
+        assert!(ds.is_empty());
+        assert!(s.worker(w).unwrap().is_idle());
+    }
+
+    /// Evicting a worker mid-prefetch releases the peer upload slots it
+    /// claimed and leaves no dangling prefetch state.
+    #[test]
+    fn eviction_mid_prefetch_releases_slots() {
+        let mut s = mk_multi(ContextPolicy::Pervasive, u64::MAX);
+        s.submit_tasks(vec![Task::new(0, 0, 10, 1)]);
+        let w0 = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]); // w0 caches ctx 1
+        let w1 = s.worker_join(node(1, GpuModel::A10), 1.0);
+        let ds = s
+            .apply_decisions(vec![PlacementDecision::Prefetch { ctx: 1, worker: w1 }]);
+        assert_eq!(ds.len(), 1);
+        assert!(s.worker(w0).unwrap().active_uploads > 0, "peer slot claimed");
+        assert!(s.worker_evict(w1).is_none(), "no task to requeue");
+        assert_eq!(s.worker(w0).unwrap().active_uploads, 0);
+        assert_eq!(s.prefetching_count_total(), 0);
+        assert_eq!(
+            s.cache_stats().ctx(1).prefetched,
+            0,
+            "an evicted prefetch that staged nothing counts nothing"
+        );
+        assert!(s.check_conservation());
+    }
+
+    /// `with_policy` swaps the decision layer end-to-end: a fair-share
+    /// scheduler still dispatches and completes through the same
+    /// mechanism code.
+    #[test]
+    fn with_policy_swaps_dispatch_decisions() {
+        let mut s = mk(ContextPolicy::Pervasive)
+            .with_policy(PolicyKind::FairShare.build());
+        assert_eq!(s.placement_name(), "fairshare");
+        s.submit_tasks(tasks(4, 10));
+        for i in 0..2 {
+            s.worker_join(node(i, GpuModel::A10), 0.0);
+        }
+        let mut guard = 0;
+        while !s.all_done() {
+            guard += 1;
+            assert!(guard < 50, "fair-share run did not converge");
+            let ds = s.try_dispatch();
+            for d in &ds {
+                complete(&mut s, d);
+            }
+            assert!(s.check_conservation());
+        }
+        assert_eq!(s.progress().completed_tasks, 4);
     }
 }

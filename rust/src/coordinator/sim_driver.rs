@@ -15,6 +15,7 @@ use super::context::{ContextPolicy, ContextRecipe, DataOrigin};
 use super::costmodel::CostModel;
 use super::factory::{Factory, FactoryPolicy};
 use super::metrics::{CacheStats, MetricPoint, Metrics, RunSummary};
+use super::policy::PolicyKind;
 use super::scheduler::{Dispatch, PhaseKind, Scheduler};
 use super::task::{Task, TaskId, TaskRecord};
 use super::transfer::{StageSource, TransferPlanner};
@@ -64,6 +65,14 @@ pub struct SimConfig {
     /// disk of §5.3.2 by default; mixed experiments shrink it to force
     /// genuine cache competition).
     pub worker_cache_bytes: u64,
+    /// Placement (dispatch) policy: greedy affinity, weighted fair
+    /// share, or warm prefetch (`coordinator::policy`).
+    pub placement: PolicyKind,
+    /// Multi-app task ordering: `true` (default) interleaves the
+    /// tenants' streams round-robin; `false` concatenates them (tenant
+    /// 0's whole backlog queues ahead of tenant 1's — the starvation
+    /// scenario the fair-share and prefetch policies exist for).
+    pub interleave_apps: bool,
 }
 
 impl SimConfig {
@@ -94,6 +103,8 @@ impl SimConfig {
             recipe: ContextRecipe::smollm2_pff(0),
             apps: Vec::new(),
             worker_cache_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
+            placement: PolicyKind::Greedy,
+            interleave_apps: true,
         }
     }
 }
@@ -158,7 +169,8 @@ impl SimDriver {
             TransferPlanner::new(cfg.fanout_cap),
             cfg.cost.clone(),
             cfg.worker_cache_bytes,
-        );
+        )
+        .with_policy(cfg.placement.build());
         let factory = Factory::new(cfg.factory);
         Self {
             cfg,
@@ -203,18 +215,30 @@ impl SimDriver {
                 .collect();
             let mut merged = Vec::new();
             let mut id = 0u64;
-            loop {
-                let mut any = false;
+            if self.cfg.interleave_apps {
+                loop {
+                    let mut any = false;
+                    for s in &mut streams {
+                        if let Some(mut t) = s.pop_front() {
+                            t.id = id;
+                            id += 1;
+                            merged.push(t);
+                            any = true;
+                        }
+                    }
+                    if !any {
+                        break;
+                    }
+                }
+            } else {
+                // Sequential: each tenant's whole backlog ahead of the
+                // next tenant's (first-come-first-served arrival).
                 for s in &mut streams {
-                    if let Some(mut t) = s.pop_front() {
+                    while let Some(mut t) = s.pop_front() {
                         t.id = id;
                         id += 1;
                         merged.push(t);
-                        any = true;
                     }
-                }
-                if !any {
-                    break;
                 }
             }
             merged
@@ -428,6 +452,13 @@ impl SimDriver {
 
         match next_phase {
             Some(p) => self.start_phase(task, p, now),
+            None if Scheduler::is_prefetch_id(task) => {
+                // Prefetch staging finished: the worker is idle again
+                // with a warm cache; nothing to record, but the freed
+                // worker may immediately take a task.
+                self.in_flight.remove(&task);
+                self.dispatch(now);
+            }
             None => {
                 // All phases done → task complete.
                 let f = self.in_flight.remove(&task).unwrap();
@@ -665,6 +696,73 @@ mod tests {
         assert_eq!((c0, c1), (1_000, 1_000));
         assert!(out.cache.ctx(0).misses > 0, "ctx 0 staged something");
         assert!(out.cache.ctx(1).misses > 0, "ctx 1 staged something");
+    }
+
+    fn two_app_cfg(per_app: u64) -> SimConfig {
+        let mut cfg = small_cfg(ContextPolicy::Pervasive, 100);
+        cfg.apps = vec![
+            AppSpec {
+                recipe: ContextRecipe::smollm2_pff(0),
+                total_inferences: per_app,
+                batch_size: 50,
+            },
+            AppSpec {
+                recipe: ContextRecipe::custom(
+                    1,
+                    "big-pff",
+                    5_000_000_000,
+                    10_000_000_000,
+                ),
+                total_inferences: per_app,
+                batch_size: 50,
+            },
+        ];
+        cfg
+    }
+
+    #[test]
+    fn every_placement_policy_completes_the_mixed_workload() {
+        for placement in
+            [PolicyKind::Greedy, PolicyKind::FairShare, PolicyKind::Prefetch]
+        {
+            let mut cfg = two_app_cfg(1_000);
+            cfg.placement = placement;
+            cfg.interleave_apps = false;
+            let out = SimDriver::new(cfg).run();
+            assert_eq!(
+                out.summary.completed_inferences,
+                2_000,
+                "{} must finish both tenants",
+                placement.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_policy_stages_the_backlogged_tenant_proactively() {
+        let mut cfg = two_app_cfg(1_000);
+        cfg.placement = PolicyKind::Prefetch;
+        cfg.interleave_apps = false;
+        let out = SimDriver::new(cfg).run();
+        assert_eq!(out.summary.completed_inferences, 2_000);
+        assert!(
+            out.cache.ctx(1).prefetched > 0,
+            "tenant B queued behind tenant A must get prefetched: {:?}",
+            out.cache.per_context
+        );
+    }
+
+    #[test]
+    fn placement_policies_are_deterministic_per_seed() {
+        for placement in [PolicyKind::FairShare, PolicyKind::Prefetch] {
+            let mk = || {
+                let mut cfg = two_app_cfg(500);
+                cfg.placement = placement;
+                SimDriver::new(cfg).run()
+            };
+            let (a, b) = (mk(), mk());
+            assert_eq!(a.summary.exec_time_s, b.summary.exec_time_s);
+        }
     }
 
     #[test]

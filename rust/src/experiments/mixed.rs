@@ -15,7 +15,8 @@ use std::fmt::Write as _;
 use crate::cluster::node::pool_20_mixed;
 use crate::cluster::LoadTrace;
 use crate::coordinator::{
-    AppSpec, ContextPolicy, ContextRecipe, SimConfig, SimDriver, SimOutcome,
+    AppSpec, ContextPolicy, ContextRecipe, PolicyKind, SimConfig, SimDriver,
+    SimOutcome,
 };
 
 /// Policy axis of the mixed experiment (paper effort numbering).
@@ -91,20 +92,30 @@ impl MixedResult {
     }
 }
 
-/// Run the mixed experiment across all three policies.
+/// Run the mixed experiment across all three context policies with the
+/// default (greedy) placement.
 pub fn run_mixed(seed: u64, inferences_per_app: u64) -> Vec<MixedResult> {
+    run_mixed_with(seed, inferences_per_app, PolicyKind::Greedy)
+}
+
+/// Run the mixed experiment with an explicit placement policy (the CLI
+/// `pcm experiment mixed --policy …` path).
+pub fn run_mixed_with(
+    seed: u64,
+    inferences_per_app: u64,
+    placement: PolicyKind,
+) -> Vec<MixedResult> {
     POLICIES
         .iter()
-        .map(|(id, policy)| MixedResult {
-            id: (*id).to_string(),
-            policy: *policy,
-            outcome: SimDriver::new(mixed_config(
-                *id,
-                *policy,
-                seed,
-                inferences_per_app,
-            ))
-            .run(),
+        .map(|(id, policy)| {
+            let mut cfg =
+                mixed_config(*id, *policy, seed, inferences_per_app);
+            cfg.placement = placement;
+            MixedResult {
+                id: (*id).to_string(),
+                policy: *policy,
+                outcome: SimDriver::new(cfg).run(),
+            }
         })
         .collect()
 }

@@ -6,6 +6,9 @@
 //! * [`mixed`] — beyond the paper: two applications with distinct
 //!   contexts sharing one pool (multi-tenant context registry + finite
 //!   worker caches), reported per policy pv1/pv2/pv4.
+//! * [`policies`] — placement-policy comparison (greedy vs fair-share
+//!   vs prefetch) on a sequential two-tenant workload, with per-context
+//!   makespan and first-completion (starvation) metrics.
 //! * [`runner`] — executes specs through the simulated driver.
 //! * [`figures`] — renders each figure/table as text + CSV into
 //!   `results/` (the artifacts EXPERIMENTS.md references).
@@ -13,6 +16,7 @@
 pub mod ablations;
 pub mod figures;
 pub mod mixed;
+pub mod policies;
 pub mod runner;
 pub mod specs;
 

@@ -13,10 +13,13 @@
 //!   eviction-tolerant requeue, worker-sizing and batch-size policies) —
 //!   generalized to a **multi-application context registry**: the
 //!   scheduler serves many `ContextRecipe`s at once, every task carries a
-//!   `ContextId`, dispatch scores workers by *cache affinity* (warm
-//!   library → partial cache → cold, via `CostModel` estimates), and
-//!   finite per-worker caches LRU-evict cold contexts under pressure
-//!   (per-context hit/miss/evict counters in `CacheStats`).
+//!   `ContextId`, and finite per-worker caches LRU-evict cold contexts
+//!   under pressure (per-context hit/miss/evict counters in
+//!   `CacheStats`). Dispatch *decisions* are pluggable
+//!   (`coordinator::policy`): the scheduler is pure mechanism, and a
+//!   `PlacementPolicy` — greedy cache affinity, weighted fair share, or
+//!   warm prefetch — chooses placements over a read-only
+//!   `SchedulerView` (see *Writing a scheduling policy* below).
 //! * [`cluster`] — the substrate the paper ran on, rebuilt: an
 //!   opportunistic heterogeneous GPU cluster (HTCondor-style backfill,
 //!   evictions, diurnal load traces, shared-filesystem contention).
@@ -49,6 +52,53 @@
 //! ```
 //!
 //! For live PJRT serving see `examples/fact_verification.rs`.
+//!
+//! ## Writing a scheduling policy
+//!
+//! Placement is split from mechanism: implement
+//! [`coordinator::policy::PlacementPolicy`] and hand it to
+//! [`coordinator::Scheduler::with_policy`] (or pick a shipped one via
+//! [`coordinator::PolicyKind`] / the `--policy` CLI flag). A policy
+//! reads queued tasks, idle workers, warmth and cost estimates from the
+//! read-only [`coordinator::SchedulerView`] and returns
+//! [`coordinator::PlacementDecision`]s; the scheduler validates and
+//! executes them, so a buggy policy can waste a dispatch round but not
+//! corrupt state. Policies may keep state across rounds (`&mut self`):
+//!
+//! ```no_run
+//! use pcm::coordinator::policy::{
+//!     PlacementDecision, PlacementPolicy, SchedulerView,
+//! };
+//!
+//! /// Plain FIFO: queue order onto idle workers, no affinity at all.
+//! #[derive(Debug)]
+//! struct Fifo;
+//!
+//! impl PlacementPolicy for Fifo {
+//!     fn name(&self) -> &'static str {
+//!         "fifo"
+//!     }
+//!
+//!     fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
+//!         view.queued()
+//!             .into_iter()
+//!             .zip(view.idle_workers())
+//!             .map(|(t, w)| PlacementDecision::Assign {
+//!                 task: t.task,
+//!                 worker: w,
+//!             })
+//!             .collect()
+//!     }
+//! }
+//!
+//! use pcm::coordinator::{ContextPolicy, ContextRecipe, Scheduler, TransferPlanner};
+//! let _sched = Scheduler::new(
+//!     ContextPolicy::Pervasive,
+//!     ContextRecipe::smollm2_pff(0),
+//!     TransferPlanner::new(3),
+//! )
+//! .with_policy(Box::new(Fifo));
+//! ```
 
 pub mod app;
 pub mod cluster;

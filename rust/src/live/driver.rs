@@ -13,8 +13,8 @@ use std::time::Instant;
 use crate::app::{AccuracyReport, InferenceWorkload, PffApp};
 use crate::cluster::{GpuModel, Node};
 use crate::coordinator::{
-    Batcher, CacheStats, ContextPolicy, ContextRecipe, CostModel, Scheduler,
-    TaskRecord, TransferPlanner, DEFAULT_CACHE_CAPACITY_BYTES,
+    Batcher, CacheStats, ContextPolicy, ContextRecipe, CostModel, PolicyKind,
+    Scheduler, TaskRecord, TransferPlanner, DEFAULT_CACHE_CAPACITY_BYTES,
 };
 use crate::runtime::Manifest;
 use crate::util::Summary;
@@ -36,6 +36,9 @@ pub struct LiveConfig {
     /// driver threads through — live artifacts are tiny, so the default
     /// never evicts; tests can shrink it to exercise LRU paths).
     pub cache_capacity_bytes: u64,
+    /// Placement (dispatch) policy — the same pluggable decision layer
+    /// the sim driver uses (`coordinator::policy`).
+    pub placement: PolicyKind,
 }
 
 impl Default for LiveConfig {
@@ -48,6 +51,7 @@ impl Default for LiveConfig {
             worker_speeds: vec![1.0, 1.0],
             seed: 0,
             cache_capacity_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
+            placement: PolicyKind::Greedy,
         }
     }
 }
@@ -99,7 +103,8 @@ impl LiveDriver {
             TransferPlanner::new(3),
             CostModel::default(),
             self.cfg.cache_capacity_bytes,
-        );
+        )
+        .with_policy(self.cfg.placement.build());
         sched.submit_tasks(
             Batcher::new(self.cfg.batch_size)
                 .split(self.cfg.total_inferences, 0, 0),
@@ -154,15 +159,20 @@ impl LiveDriver {
             |sched: &mut Scheduler,
              dispatched_at: &mut HashMap<u64, f64>| {
                 for d in sched.try_dispatch() {
-                    let (start, count) = {
+                    let (start, count) = if Scheduler::is_prefetch_id(d.task)
+                    {
+                        // Stage-only prefetch plan: no inference range,
+                        // no latency accounting.
+                        (0, 0)
+                    } else {
                         let meta = sched.task_meta(d.task).unwrap();
                         // start is task.start; scheduler does not expose it —
                         // recompute from batching (dense contiguous split).
                         let start = d.task * self.cfg.batch_size;
+                        dispatched_at
+                            .insert(d.task, t0.elapsed().as_secs_f64());
                         (start, meta.1)
                     };
-                    dispatched_at
-                        .insert(d.task, t0.elapsed().as_secs_f64());
                     order_txs[&d.worker]
                         .send(WorkOrder {
                             task: d.task,
@@ -181,6 +191,14 @@ impl LiveDriver {
             match msg {
                 WorkerMsg::PhaseDone { task, phase, .. } => {
                     sched.phase_done(task, phase);
+                }
+                WorkerMsg::TaskDone { task, .. }
+                    if Scheduler::is_prefetch_id(task) =>
+                {
+                    // A prefetch finished staging (the scheduler already
+                    // retired it on its last PhaseDone); the freed warm
+                    // worker may take a task right away.
+                    send_dispatches(&mut sched, &mut dispatched_at);
                 }
                 WorkerMsg::TaskDone {
                     worker,
@@ -253,5 +271,6 @@ mod tests {
         let c = LiveConfig::default();
         assert_eq!(c.profile, "tiny");
         assert!(c.total_inferences % c.batch_size == 0);
+        assert_eq!(c.placement, PolicyKind::Greedy);
     }
 }

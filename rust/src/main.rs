@@ -3,16 +3,18 @@
 //! Subcommands (hand-rolled parser; the offline build has no clap):
 //!
 //! ```text
-//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|headline|all>
+//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|headline|all>
 //!     [--seed N] [--scale F] [--results DIR]
+//!     [--policy greedy|fairshare|prefetch]
 //! pcm run <pv-id> [--seed N] [--scale F]
 //! pcm serve [--profile tiny|small] [--policy pervasive|partial|none]
+//!     [--placement greedy|fairshare|prefetch]
 //!     [--workers N] [--batch B] [--inferences N]
 //! pcm tune [--seed N] [--scale F]
 //! pcm inventory
 //! ```
 
-use pcm::coordinator::{ContextPolicy, SimDriver};
+use pcm::coordinator::{ContextPolicy, PolicyKind, SimDriver};
 use pcm::experiments::{figures, runner, specs};
 use pcm::live::{LiveConfig, LiveDriver};
 use pcm::runtime::manifest::default_artifacts_dir;
@@ -49,6 +51,22 @@ impl<'a> Flags<'a> {
 
     fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Placement-policy selector: `--placement` everywhere, plus a
+    /// per-subcommand `alias` flag (the experiment subcommands accept
+    /// `--policy` since they have no competing context-policy flag).
+    /// `greedy` when neither is present.
+    fn get_placement(&self, alias: &str) -> pcm::Result<PolicyKind> {
+        match self.get("--placement").or_else(|| self.get(alias)) {
+            None => Ok(PolicyKind::Greedy),
+            Some(s) => PolicyKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown placement policy {s:?} \
+                     (expected greedy|fairshare|prefetch)"
+                )
+            }),
+        }
     }
 }
 
@@ -90,13 +108,18 @@ const HELP: &str = "\
 pcm — pervasive context management for throughput-oriented LLM inference
 
 USAGE:
-  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|headline|all>
+  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|headline|all>
       [--seed N] [--scale F] [--results DIR]
+      [--policy|--placement greedy|fairshare|prefetch]  (mixed: placement)
       (mixed: two applications with distinct contexts on one pool,
        per-context cache hit/miss/evict counters, policies pv1/pv2/pv4)
+      (policies: greedy vs fairshare vs prefetch placement on the
+       sequential two-tenant workload — per-context makespan and
+       first-completion/starvation metrics)
   pcm run <pv-id>        run one experiment (e.g. pv4_100)
   pcm serve              live PJRT serving demo
       [--profile tiny|small] [--policy pervasive|partial|none]
+      [--placement greedy|fairshare|prefetch]
       [--workers N] [--batch B] [--inferences N]
   pcm tune               adaptive batch-size search (Challenge #6)
   pcm ablate             design-choice ablations (fan-out, eviction
@@ -237,17 +260,36 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
         }
         "mixed" => {
             use pcm::experiments::mixed;
+            let placement = flags.get_placement("--policy")?;
             let per_app = ((mixed::DEFAULT_INFERENCES_PER_APP as f64 * scale)
                 .round() as u64)
                 .max(100);
             eprintln!(
                 "running mixed 2-app experiment ({per_app} inferences/app, \
-                 seed={seed})…"
+                 seed={seed}, placement={})…",
+                placement.as_str()
             );
-            let results = mixed::run_mixed(seed, per_app);
+            let results = mixed::run_mixed_with(seed, per_app, placement);
             let text = mixed::report(&results);
             print!("{text}");
             figures::write_result_file(&results_dir, "mixed.txt", &text)?;
+            eprintln!("\nreport written under {results_dir}/");
+        }
+        "policies" => {
+            use pcm::experiments::policies;
+            let per_app = ((policies::DEFAULT_INFERENCES_PER_APP as f64
+                * scale)
+                .round() as u64)
+                .max(100);
+            eprintln!(
+                "comparing placement policies (greedy vs fairshare vs \
+                 prefetch) on the sequential two-tenant workload \
+                 ({per_app} inferences/app, seed={seed})…"
+            );
+            let results = policies::run_policies(seed, per_app);
+            let text = policies::report(&results);
+            print!("{text}");
+            figures::write_result_file(&results_dir, "policies.txt", &text)?;
             eprintln!("\nreport written under {results_dir}/");
         }
         "headline" => {
@@ -289,8 +331,14 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
     let policy = match flags.get("--policy").unwrap_or("pervasive") {
         "none" => ContextPolicy::None,
         "partial" => ContextPolicy::Partial,
-        _ => ContextPolicy::Pervasive,
+        "pervasive" => ContextPolicy::Pervasive,
+        other => anyhow::bail!(
+            "unknown context policy {other:?} (expected \
+             pervasive|partial|none; placement policies go in \
+             --placement)"
+        ),
     };
+    let placement = flags.get_placement("--placement")?;
     let workers = flags.get_u64("--workers", 2) as usize;
     let batch = flags.get_u64("--batch", 16);
     let inferences = flags.get_u64("--inferences", 128);
@@ -303,14 +351,17 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
         total_inferences: inferences,
         worker_speeds: vec![1.0; workers],
         seed: flags.get_u64("--seed", 0),
+        placement,
         ..LiveConfig::default()
     };
     eprintln!(
-        "live serving: {} inferences, batch {}, {} workers, {} policy…",
+        "live serving: {} inferences, batch {}, {} workers, {} policy, \
+         {} placement…",
         inferences,
         batch,
         workers,
-        policy.as_str()
+        policy.as_str(),
+        placement.as_str()
     );
     let out = LiveDriver::new(cfg, manifest).run()?;
     println!(

@@ -1,0 +1,270 @@
+//! Golden decision-parity tests for `AffinityGreedy`.
+//!
+//! The policy refactor's contract is that the default policy makes
+//! *bit-for-bit identical* placement decisions to the pre-refactor
+//! monolithic `Scheduler::try_dispatch`. `reference_greedy` below is a
+//! verbatim port of that original algorithm (same warm-pairing
+//! look-ahead, same FIFO affinity scoring with identical float
+//! comparisons and tie-breaks); the tests replay it side by side with
+//! `AffinityGreedy` across randomized multi-tenant storms and a
+//! hand-traceable scenario, asserting identical `(task, worker)`
+//! assignment sequences every dispatch round.
+
+use pcm::cluster::{GpuModel, Node};
+use pcm::coordinator::policy::{
+    AffinityGreedy, PlacementDecision, PlacementPolicy, SchedulerView,
+};
+use pcm::coordinator::{
+    ContextPolicy, ContextRecipe, CostModel, PolicyKind, Scheduler, Task,
+    TaskId, TaskRecord, TransferPlanner, WorkerId,
+};
+use pcm::experiments::mixed;
+use pcm::util::Rng;
+
+/// The pre-refactor warm-pairing look-ahead depth.
+const LOOKAHEAD: usize = 64;
+
+/// Verbatim port of the pre-policy `Scheduler::try_dispatch` decision
+/// logic (phases 1 + 2), expressed over the read-only view.
+fn reference_greedy(view: &SchedulerView) -> Vec<(TaskId, WorkerId)> {
+    let mut paired = Vec::new();
+    let mut queue = view.queued();
+    if queue.is_empty() {
+        return paired;
+    }
+    let mut idle = view.idle_workers();
+    if idle.is_empty() {
+        return paired;
+    }
+
+    // Warm pairing with bounded look-ahead over the live queue.
+    let mut i = 0;
+    while i < idle.len() {
+        let wid = idle[i];
+        let mut found = None;
+        for (pos, q) in queue.iter().enumerate().take(LOOKAHEAD) {
+            if view.warm_for(wid, q.context) {
+                found = Some(pos);
+                break;
+            }
+        }
+        if let Some(pos) = found {
+            let q = queue.remove(pos);
+            let wid = idle.remove(i);
+            paired.push((q.task, wid));
+        } else {
+            i += 1;
+        }
+    }
+
+    // FIFO + affinity scoring with the original replace semantics.
+    for q in queue {
+        if idle.is_empty() {
+            break;
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for (i, wid) in idle.iter().enumerate() {
+            let est = view.acquisition_estimate_s(*wid, q.context);
+            let replace = match &best {
+                None => true,
+                Some((bi, best_est)) => {
+                    let b_speed = view.worker_speed(idle[*bi]);
+                    match est.partial_cmp(best_est).unwrap() {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Greater => false,
+                        std::cmp::Ordering::Equal => match b_speed
+                            .partial_cmp(&view.worker_speed(*wid))
+                            .unwrap()
+                        {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Greater => false,
+                            std::cmp::Ordering::Equal => *wid < idle[*bi],
+                        },
+                    }
+                }
+            };
+            if replace {
+                best = Some((i, est));
+            }
+        }
+        let (best_i, _) = best.expect("idle is non-empty");
+        paired.push((q.task, idle.swap_remove(best_i)));
+    }
+    paired
+}
+
+fn assigns_of(decisions: &[PlacementDecision]) -> Vec<(TaskId, WorkerId)> {
+    decisions
+        .iter()
+        .map(|d| match d {
+            PlacementDecision::Assign { task, worker } => (*task, *worker),
+            other => panic!("greedy must only Assign, got {other:?}"),
+        })
+        .collect()
+}
+
+fn record(task: TaskId, worker: WorkerId, n: u64, ctx: u32) -> TaskRecord {
+    TaskRecord {
+        task,
+        context: ctx,
+        worker,
+        gpu: GpuModel::A10,
+        attempts: 1,
+        inferences: n,
+        dispatched_at: 0.0,
+        completed_at: 1.0,
+        context_s: 0.0,
+        execute_s: 1.0,
+    }
+}
+
+/// Drive a randomized multi-tenant storm; at every dispatch round the
+/// extracted policy must reproduce the reference decisions exactly.
+#[test]
+fn golden_affinity_greedy_matches_pre_refactor_dispatch() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ 0x601d);
+        let policy = match rng.below(3) {
+            0 => ContextPolicy::None,
+            1 => ContextPolicy::Partial,
+            _ => ContextPolicy::Pervasive,
+        };
+        // 8–24 GB caches: sometimes both contexts fit, sometimes not.
+        let capacity = (8 + rng.below(17) as u64) * 1_000_000_000;
+        let mut sched = Scheduler::with_registry(
+            policy,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "big", 5_000_000_000, 10_000_000_000),
+            ],
+            TransferPlanner::new(1 + rng.below(4) as u32),
+            CostModel::default(),
+            capacity,
+        );
+        let n_tasks = 5 + rng.below(40) as u64;
+        let tasks: Vec<Task> = (0..n_tasks)
+            .map(|i| {
+                Task::new(i, i * 10, 1 + rng.below(100) as u64, rng.below(2) as u32)
+            })
+            .collect();
+        sched.submit_tasks(tasks);
+
+        let gpus =
+            [GpuModel::A10, GpuModel::TitanXPascal, GpuModel::H100, GpuModel::A40];
+        let mut next_node = 0u32;
+        let mut running: Vec<(u64, u32, usize, usize)> = Vec::new();
+        let mut guard = 0;
+        while !sched.all_done() {
+            guard += 1;
+            assert!(guard < 100_000, "storm did not converge (seed {seed})");
+            match rng.below(10) {
+                0 | 1 => {
+                    let node = Node {
+                        id: next_node,
+                        gpu: gpus[rng.below(gpus.len())],
+                    };
+                    next_node += 1;
+                    sched.worker_join(node, guard as f64);
+                }
+                2 => {
+                    let ids: Vec<u32> = sched.workers().map(|w| w.id).collect();
+                    if !ids.is_empty() {
+                        let victim = ids[rng.below(ids.len())];
+                        sched.worker_evict(victim);
+                        running.retain(|(_, w, _, _)| *w != victim);
+                    }
+                }
+                _ => {
+                    // Dispatch rounds also fire with tasks in flight, so
+                    // parity is checked with partially-idle pools too.
+                    if running.is_empty() || rng.chance(0.25) {
+                        // THE PARITY CHECK: reference vs extracted policy
+                        // on the same frozen view, then execute.
+                        let expect = reference_greedy(&SchedulerView::new(&sched));
+                        let mut greedy = AffinityGreedy::new();
+                        let decisions =
+                            greedy.place(&SchedulerView::new(&sched));
+                        assert_eq!(
+                            assigns_of(&decisions),
+                            expect,
+                            "decision divergence (seed {seed}, round {guard})"
+                        );
+                        // try_dispatch (the default policy) must agree too.
+                        let ds = sched.try_dispatch();
+                        let got: Vec<(u64, u32)> =
+                            ds.iter().map(|d| (d.task, d.worker)).collect();
+                        assert_eq!(got, expect, "try_dispatch divergence");
+                        for d in ds {
+                            running.push((d.task, d.worker, d.phases.len(), 0));
+                        }
+                    } else {
+                        let i = rng.below(running.len());
+                        let (task, worker, n_phases, next) = &mut running[i];
+                        sched.phase_done(*task, *next);
+                        *next += 1;
+                        if *next == *n_phases {
+                            let (_, inferences) =
+                                sched.task_meta(*task).unwrap();
+                            let ctx = sched.task_context(*task).unwrap();
+                            sched.task_done(
+                                *task,
+                                record(*task, *worker, inferences, ctx),
+                            );
+                            running.remove(i);
+                        }
+                    }
+                }
+            }
+            assert!(sched.check_conservation());
+            assert!(sched.check_cache_capacity());
+        }
+    }
+}
+
+/// End-to-end: the default scheduler and an explicit `--policy greedy`
+/// scheduler produce identical mixed-experiment outcomes (the
+/// `with_policy` plumbing is an identity for the default).
+#[test]
+fn golden_mixed_run_identical_under_explicit_greedy() {
+    let base = mixed::run_mixed(42, 500);
+    let explicit = mixed::run_mixed_with(42, 500, PolicyKind::Greedy);
+    for (a, b) in base.iter().zip(&explicit) {
+        assert_eq!(a.outcome.summary.exec_time_s, b.outcome.summary.exec_time_s);
+        assert_eq!(a.outcome.summary.completed_inferences,
+                   b.outcome.summary.completed_inferences);
+        assert_eq!(a.outcome.cache.per_context, b.outcome.cache.per_context);
+    }
+}
+
+/// Hand-traceable scenario: warm pairing wins over a faster cold
+/// worker, and the remaining task goes to the fastest cold worker.
+#[test]
+fn golden_hand_traced_warm_pairing_and_fifo() {
+    let mut s = Scheduler::new(
+        ContextPolicy::Pervasive,
+        ContextRecipe::smollm2_pff(0),
+        TransferPlanner::new(3),
+    );
+    s.submit_tasks(vec![
+        Task::new(0, 0, 10, 0),
+        Task::new(1, 10, 10, 0),
+        Task::new(2, 20, 10, 0),
+    ]);
+    let slow = s.worker_join(Node { id: 0, gpu: GpuModel::TitanXPascal }, 0.0);
+    let d1 = s.try_dispatch();
+    assert_eq!(d1.len(), 1);
+    assert_eq!(d1[0].task, 0);
+    for i in 0..d1[0].phases.len() {
+        s.phase_done(d1[0].task, i);
+    }
+    s.task_done(d1[0].task, record(0, slow, 10, 0));
+
+    // A much faster cold worker joins; warm pairing still hands the
+    // next task to the warm slow worker, FIFO gives the other task to
+    // the fast cold one.
+    let fast = s.worker_join(Node { id: 1, gpu: GpuModel::H100 }, 1.0);
+    let d2 = s.try_dispatch();
+    let got: Vec<(u64, u32)> = d2.iter().map(|d| (d.task, d.worker)).collect();
+    assert_eq!(got, vec![(1, slow), (2, fast)]);
+    assert_eq!(d2[0].phases.len(), 1, "warm plan is a bare Execute");
+}

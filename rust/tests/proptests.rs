@@ -8,6 +8,9 @@
 use pcm::cluster::node::pool_20_mixed;
 use pcm::cluster::{ClusterAction, ClusterSim, GpuModel, LoadTrace, Node};
 use pcm::coordinator::batcher::Batcher;
+use pcm::coordinator::policy::{
+    PlacementPolicy, SchedulerView, WeightedFairShare,
+};
 use pcm::coordinator::scheduler::PhaseKind;
 use pcm::coordinator::transfer::{broadcast_rounds, plan_broadcast};
 use pcm::coordinator::{
@@ -541,6 +544,141 @@ fn prop_affinity_prefers_materialized_worker() {
             "affinity must route to the materialized worker"
         );
         assert_eq!(mine.phases.len(), 1, "warm plan is a bare Execute");
+    });
+}
+
+// --------------------------------------------------- fair-share deficit
+
+/// DRR starvation bound: while a context has queued tasks, its banked
+/// deficit never exceeds one max-task burst (the largest batch it still
+/// has queued) — so no tenant can accumulate unbounded priority, and a
+/// backlogged tenant is never more than one burst away from service.
+/// Checked after every placement round of a random storm, under random
+/// weights, batch sizes, joins and evictions.
+#[test]
+fn prop_fairshare_deficit_bounded_by_one_burst() {
+    forall(50, |rng| {
+        let w0 = 0.25 + rng.uniform(0.0, 3.75);
+        let w1 = 0.25 + rng.uniform(0.0, 3.75);
+        let mut sched = Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![
+                ContextRecipe::smollm2_pff(0).with_weight(w0),
+                ContextRecipe::custom(1, "big", 5_000_000_000, 10_000_000_000)
+                    .with_weight(w1),
+            ],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            (8 + rng.below(17) as u64) * 1_000_000_000,
+        );
+        let n_tasks = 2 + rng.below(30) as u64;
+        let tasks: Vec<Task> = (0..n_tasks)
+            .map(|i| {
+                Task::new(
+                    i,
+                    i * 10,
+                    1 + rng.below(200) as u64,
+                    rng.below(2) as u32,
+                )
+            })
+            .collect();
+        sched.submit_tasks(tasks);
+
+        let mut policy = WeightedFairShare::new();
+        let check_bound = |sched: &Scheduler, policy: &WeightedFairShare| {
+            // Largest still-queued batch per context.
+            let mut max_burst = std::collections::BTreeMap::new();
+            for q in SchedulerView::new(sched).queued() {
+                let e = max_burst.entry(q.context).or_insert(0u64);
+                *e = (*e).max(q.inferences);
+            }
+            for ctx in [0u32, 1u32] {
+                match max_burst.get(&ctx) {
+                    Some(burst) => assert!(
+                        policy.deficit(ctx) <= *burst as f64 + 1e-6,
+                        "ctx {ctx} deficit {} exceeds burst {burst}",
+                        policy.deficit(ctx)
+                    ),
+                    None => assert_eq!(
+                        policy.deficit(ctx),
+                        0.0,
+                        "drained ctx {ctx} keeps no credit"
+                    ),
+                }
+            }
+        };
+
+        let mut next_node = 0u32;
+        let mut running: Vec<(u64, u32, usize, usize)> = Vec::new();
+        let mut guard = 0;
+        while !sched.all_done() {
+            guard += 1;
+            assert!(guard < 100_000, "storm did not converge");
+            match rng.below(10) {
+                0 | 1 => {
+                    let gpu = if rng.chance(0.5) {
+                        GpuModel::A10
+                    } else {
+                        GpuModel::H100
+                    };
+                    sched.worker_join(Node { id: next_node, gpu }, guard as f64);
+                    next_node += 1;
+                }
+                2 => {
+                    let ids: Vec<u32> =
+                        sched.workers().map(|w| w.id).collect();
+                    if !ids.is_empty() {
+                        let victim = ids[rng.below(ids.len())];
+                        sched.worker_evict(victim);
+                        running.retain(|(_, w, _, _)| *w != victim);
+                    }
+                }
+                _ => {
+                    if running.is_empty() || rng.chance(0.25) {
+                        let decisions =
+                            policy.place(&SchedulerView::new(&sched));
+                        let ds = sched.apply_decisions(decisions);
+                        check_bound(&sched, &policy);
+                        for d in ds {
+                            running.push((d.task, d.worker, d.phases.len(), 0));
+                        }
+                    } else {
+                        let i = rng.below(running.len());
+                        let (task, worker, n_phases, next) = &mut running[i];
+                        sched.phase_done(*task, *next);
+                        *next += 1;
+                        if *next == *n_phases {
+                            let (_, inferences) =
+                                sched.task_meta(*task).unwrap();
+                            let ctx = sched.task_context(*task).unwrap_or(0);
+                            sched.task_done(
+                                *task,
+                                TaskRecord {
+                                    task: *task,
+                                    context: ctx,
+                                    worker: *worker,
+                                    gpu: GpuModel::A10,
+                                    attempts: 1,
+                                    inferences,
+                                    dispatched_at: 0.0,
+                                    completed_at: guard as f64,
+                                    context_s: 0.0,
+                                    execute_s: 1.0,
+                                },
+                            );
+                            running.remove(i);
+                        }
+                    }
+                }
+            }
+            assert!(sched.check_conservation());
+            assert!(sched.check_cache_capacity());
+        }
+        assert_eq!(
+            sched.progress().completed_tasks,
+            n_tasks,
+            "fair share completes the whole workload"
+        );
     });
 }
 
