@@ -5,6 +5,10 @@
 //! Set `PCM_BENCH_JSON=<path>` to also write the results as JSON — the
 //! repo-root `BENCH_hotpath.json` baseline is regenerated with
 //! `PCM_BENCH_JSON=BENCH_hotpath.json cargo bench --bench bench_hotpath`.
+//! The emitter *merges* into an existing file by case name, so a
+//! partial run (or the reduced-iteration `PCM_BENCH_FAST=1` mode the
+//! `bench-smoke` CI job uses) updates its cases without erasing the
+//! rest.
 
 use pcm::cluster::node::pool_20_mixed;
 use pcm::cluster::{GpuModel, LoadTrace, Node};
@@ -17,6 +21,20 @@ use pcm::coordinator::{
 use pcm::runtime::manifest::default_artifacts_dir;
 use pcm::runtime::{Manifest, ModelContext};
 use pcm::util::bench::{bench, black_box, header};
+
+/// `PCM_BENCH_FAST=1` (the CI smoke mode) cuts timed iterations ~5× so
+/// the whole suite fits a PR gate; numbers stay comparable per case.
+fn fast_mode() -> bool {
+    std::env::var("PCM_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn iters(full: u32) -> u32 {
+    if fast_mode() {
+        (full / 5).max(1)
+    } else {
+        full
+    }
+}
 
 fn scheduler_churn(tasks: u64, workers: u32, placement: PolicyKind) -> u64 {
     let mut s = Scheduler::new(
@@ -68,30 +86,101 @@ fn scheduler_churn(tasks: u64, workers: u32, placement: PolicyKind) -> u64 {
     completed
 }
 
+/// Reclaim/rejoin churn through the node-cache persistence path: every
+/// few rounds one worker is evicted (disk tier snapshotted) and a fresh
+/// worker rejoins its node (snapshot replayed). Exercises persist +
+/// restore + risk-aware dispatch per cycle.
+fn churn_dispatch(tasks: u64, workers: u32) -> u64 {
+    let mut s = Scheduler::new(
+        ContextPolicy::Pervasive,
+        ContextRecipe::smollm2_pff(0),
+        TransferPlanner::new(3),
+    )
+    .with_policy(PolicyKind::RiskAware.build());
+    s.submit_tasks(Batcher::new(100).split(tasks * 100, 0, 0));
+    for i in 0..workers {
+        s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+    }
+    let mut completed = 0u64;
+    let mut round = 0u64;
+    while !s.all_done() {
+        round += 1;
+        if round % 7 == 0 {
+            // All workers are idle at round boundaries: reclaim one and
+            // immediately rejoin its node, warm-starting from disk.
+            if let Some(wid) = s.workers().map(|w| w.id).min() {
+                let node = s.worker(wid).unwrap().node;
+                s.worker_evict(wid);
+                s.worker_join(node, round as f64);
+            }
+        }
+        for d in s.try_dispatch() {
+            for i in 0..d.phases.len() {
+                s.phase_done(d.task, i);
+            }
+            let (attempts, inferences) = s.task_meta(d.task).unwrap();
+            s.task_done(
+                d.task,
+                TaskRecord {
+                    task: d.task,
+                    context: 0,
+                    worker: d.worker,
+                    gpu: GpuModel::A10,
+                    attempts,
+                    inferences,
+                    dispatched_at: 0.0,
+                    completed_at: 1.0,
+                    context_s: 0.0,
+                    execute_s: 1.0,
+                },
+            );
+            completed += 1;
+        }
+    }
+    completed
+}
+
 /// Write collected results as JSON when `PCM_BENCH_JSON` names a path
-/// (the perf-trajectory baseline future PRs diff against).
+/// (the perf-trajectory baseline future PRs diff against). Merges by
+/// case name into whatever the file already holds — a partial run must
+/// update its cases, not clobber the others — and preserves unrelated
+/// top-level keys (e.g. the `note`).
 fn emit_json(results: &[pcm::util::bench::BenchResult]) {
     use pcm::util::Json;
     use std::collections::BTreeMap;
 
     let Ok(path) = std::env::var("PCM_BENCH_JSON") else { return };
-    let rows: Vec<Json> = results
-        .iter()
-        .map(|r| {
-            let mut m = BTreeMap::new();
-            m.insert("name".to_string(), Json::Str(r.name.clone()));
-            m.insert("iters".to_string(), Json::Num(r.iters as f64));
-            m.insert("min_s".to_string(), Json::Num(r.min_s));
-            m.insert("median_s".to_string(), Json::Num(r.median_s));
-            m.insert("mean_s".to_string(), Json::Num(r.mean_s));
-            Json::Obj(m)
-        })
-        .collect();
-    let mut top = BTreeMap::new();
+    let mut top: BTreeMap<String, Json> = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_object().cloned())
+        .unwrap_or_default();
+    // Existing rows by name (insertion order is lost on merge; rows come
+    // back name-sorted, which diffs stably).
+    let mut by_name: BTreeMap<String, Json> = BTreeMap::new();
+    if let Some(rows) = top.get("results").and_then(|r| r.as_array()) {
+        for row in rows {
+            if let Some(name) = row.get("name").and_then(|n| n.as_str()) {
+                by_name.insert(name.to_string(), row.clone());
+            }
+        }
+    }
+    for r in results {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(r.name.clone()));
+        m.insert("iters".to_string(), Json::Num(r.iters as f64));
+        m.insert("min_s".to_string(), Json::Num(r.min_s));
+        m.insert("median_s".to_string(), Json::Num(r.median_s));
+        m.insert("mean_s".to_string(), Json::Num(r.mean_s));
+        by_name.insert(r.name.clone(), Json::Obj(m));
+    }
     top.insert("bench".to_string(), Json::Str("bench_hotpath".to_string()));
-    top.insert("results".to_string(), Json::Arr(rows));
+    top.insert(
+        "results".to_string(),
+        Json::Arr(by_name.into_values().collect()),
+    );
     match std::fs::write(&path, Json::Obj(top).to_string()) {
-        Ok(()) => eprintln!("baseline written to {path}"),
+        Ok(()) => eprintln!("baseline merged into {path}"),
         Err(e) => eprintln!("failed writing {path}: {e}"),
     }
 }
@@ -99,36 +188,62 @@ fn emit_json(results: &[pcm::util::bench::BenchResult]) {
 fn main() {
     let mut results = Vec::new();
     header("L3 coordinator hot paths");
-    results.push(bench("scheduler churn: 1k tasks / 20 workers", 2, 10, || {
-        scheduler_churn(1_000, 20, PolicyKind::Greedy)
-    }));
-    results.push(bench("scheduler churn: 10k tasks / 100 workers", 1, 5, || {
-        scheduler_churn(10_000, 100, PolicyKind::Greedy)
-    }));
+    results.push(bench(
+        "scheduler churn: 1k tasks / 20 workers",
+        2,
+        iters(10),
+        || scheduler_churn(1_000, 20, PolicyKind::Greedy),
+    ));
+    results.push(bench(
+        "scheduler churn: 10k tasks / 100 workers",
+        1,
+        iters(5),
+        || scheduler_churn(10_000, 100, PolicyKind::Greedy),
+    ));
     // Dispatch-policy overhead: same churn through each pluggable
     // placement policy, so policy regressions show up in the baseline.
     results.push(bench(
         "dispatch policy churn: fairshare 1k tasks / 20 workers",
         2,
-        10,
+        iters(10),
         || scheduler_churn(1_000, 20, PolicyKind::FairShare),
     ));
     results.push(bench(
         "dispatch policy churn: prefetch 1k tasks / 20 workers",
         2,
-        10,
+        iters(10),
         || scheduler_churn(1_000, 20, PolicyKind::Prefetch),
     ));
-    results.push(bench("broadcast plan: 567 workers, fanout 3", 5, 50, || {
-        let ids: Vec<u32> = (0..567).collect();
-        plan_broadcast(&ids, 3)
-    }));
-    results.push(bench("batcher split: 150k inferences @ B=100", 5, 50, || {
-        Batcher::new(100).split(150_000, 0, 0)
-    }));
+    results.push(bench(
+        "dispatch policy churn: riskaware 1k tasks / 20 workers",
+        2,
+        iters(10),
+        || scheduler_churn(1_000, 20, PolicyKind::RiskAware),
+    ));
+    results.push(bench(
+        "churn dispatch: reclaim/rejoin cycles 1k tasks / 20 workers",
+        1,
+        iters(10),
+        || churn_dispatch(1_000, 20),
+    ));
+    results.push(bench(
+        "broadcast plan: 567 workers, fanout 3",
+        5,
+        iters(50),
+        || {
+            let ids: Vec<u32> = (0..567).collect();
+            plan_broadcast(&ids, 3)
+        },
+    ));
+    results.push(bench(
+        "batcher split: 150k inferences @ B=100",
+        5,
+        iters(50),
+        || Batcher::new(100).split(150_000, 0, 0),
+    ));
 
     header("DES end-to-end (simulated experiments)");
-    results.push(bench("sim pv4_100-shape @ 5k inferences", 1, 5, || {
+    results.push(bench("sim pv4_100-shape @ 5k inferences", 1, iters(5), || {
         let mut cfg = SimConfig::new(
             "bench",
             ContextPolicy::Pervasive,
@@ -140,7 +255,7 @@ fn main() {
         cfg.total_inferences = 5_000;
         SimDriver::new(cfg).run().summary.exec_time_s
     }));
-    results.push(bench("sim mixed 2-app @ 1k inferences/app", 1, 5, || {
+    results.push(bench("sim mixed 2-app @ 1k inferences/app", 1, iters(5), || {
         let cfg = pcm::experiments::mixed::mixed_config(
             "bench_mixed",
             ContextPolicy::Pervasive,

@@ -101,6 +101,21 @@ impl ClusterSim {
         }
     }
 
+    /// A node-availability trace reclaimed this node out of band (the
+    /// `NodeReclaimed` churn event): the primary workload takes it back
+    /// whatever its current disposition. The caller evicts any worker.
+    pub fn force_reclaim(&mut self, id: NodeId) {
+        self.state[id as usize] = NodeState::Primary;
+    }
+
+    /// A node-availability trace returned this node (`NodeRejoined`): it
+    /// is offered for backfill again unless a worker already holds it.
+    pub fn force_offer(&mut self, id: NodeId) {
+        if self.state[id as usize] == NodeState::Primary {
+            self.state[id as usize] = NodeState::Offered;
+        }
+    }
+
     /// Reconcile against the trace target at time `t`. Returns the grants
     /// and reclaims the driver must apply (in order).
     pub fn reconcile(&mut self, t: f64) -> Vec<ClusterAction> {
@@ -256,6 +271,27 @@ mod tests {
             .collect();
         let sequential: Vec<NodeId> = (0..20).collect();
         assert_ne!(ids, sequential, "arrival order must be randomized");
+    }
+
+    #[test]
+    fn force_reclaim_and_offer_roundtrip() {
+        let mut s = sim(LoadTrace::constant(3));
+        s.reconcile(0.0);
+        let id = s.offered_nodes()[0];
+        s.mark_held(id);
+        // Out-of-band reclamation takes the node from any state.
+        s.force_reclaim(id);
+        assert!(!s.offered_nodes().contains(&id));
+        assert_eq!(s.available(), 2);
+        // Rejoin re-offers it; a second force_offer is a no-op.
+        s.force_offer(id);
+        assert!(s.offered_nodes().contains(&id));
+        s.force_offer(id);
+        assert_eq!(s.available(), 3);
+        // force_offer never steals a held node from its worker.
+        s.mark_held(id);
+        s.force_offer(id);
+        assert!(!s.offered_nodes().contains(&id));
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub use condor::{ClusterAction, ClusterSim};
 pub use filesystem::SharedFilesystem;
 pub use gpu::{GpuModel, GPU_CATALOG};
 pub use node::{Node, NodeId};
-pub use trace::LoadTrace;
+pub use trace::{LoadTrace, NodeAvailabilityTrace, NodeChurnEvent};

@@ -10,7 +10,9 @@
 //!   load cycle of a production cluster (users run more jobs overnight,
 //!   §6.3 Effort 6), with seeded stochastic wobble.
 
-use crate::util::Rng;
+use crate::util::{Json, Rng};
+
+use super::node::NodeId;
 
 /// Step function of target available node counts.
 #[derive(Debug, Clone)]
@@ -121,6 +123,170 @@ impl LoadTrace {
     }
 }
 
+/// One churn event of a [`NodeAvailabilityTrace`]: at `time`, `node`
+/// either comes back (`up = true`, a rejoin) or is reclaimed by the
+/// primary workload (`up = false`, immediate eviction of any worker).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeChurnEvent {
+    pub time: f64,
+    pub node: NodeId,
+    pub up: bool,
+}
+
+/// Per-node availability trace: an explicit schedule of reclamations and
+/// rejoins, complementing the aggregate [`LoadTrace`]. Where the load
+/// trace says *how many* nodes exist, this trace says *which* node goes
+/// down *when* and for how long — the information an eviction-risk-aware
+/// placement policy needs (a node's expected remaining lifetime) and the
+/// signal the driver turns into `NodeReclaimed`/`NodeRejoined` events.
+///
+/// Every node is assumed up at t=0; per node, events must alternate
+/// starting with a reclamation. Traces are recordable: [`Self::to_json`]
+/// / [`Self::from_json`] round-trip through the repo's dependency-free
+/// JSON layer so a captured reclamation storm replays deterministically.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NodeAvailabilityTrace {
+    /// Events sorted by `(time, node)`.
+    events: Vec<NodeChurnEvent>,
+}
+
+impl NodeAvailabilityTrace {
+    /// Build from raw events; sorts and validates per-node alternation
+    /// (down, up, down, … starting from the all-up state at t=0).
+    pub fn from_events(mut events: Vec<NodeChurnEvent>) -> Self {
+        events.sort_by(|a, b| {
+            a.time
+                .partial_cmp(&b.time)
+                .unwrap()
+                .then(a.node.cmp(&b.node))
+        });
+        let mut down: std::collections::HashSet<NodeId> =
+            std::collections::HashSet::new();
+        for e in &events {
+            assert!(e.time >= 0.0, "negative event time {}", e.time);
+            if e.up {
+                assert!(
+                    down.remove(&e.node),
+                    "node {} rejoins without a prior reclamation",
+                    e.node
+                );
+            } else {
+                assert!(
+                    down.insert(e.node),
+                    "node {} reclaimed twice without a rejoin",
+                    e.node
+                );
+            }
+        }
+        Self { events }
+    }
+
+    /// Synthetic reclamation storm: `waves` waves, one every
+    /// `wave_every_s` starting at `start_s`; each wave reclaims
+    /// `nodes_per_wave` randomly chosen currently-up nodes for
+    /// `down_for_s` seconds (with mild seeded jitter on both edges).
+    pub fn storm(
+        nodes: &[NodeId],
+        start_s: f64,
+        waves: u32,
+        wave_every_s: f64,
+        down_for_s: f64,
+        nodes_per_wave: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(!nodes.is_empty() && nodes_per_wave > 0);
+        // Next time each node is free to be reclaimed again.
+        let mut busy_until: std::collections::HashMap<NodeId, f64> =
+            std::collections::HashMap::new();
+        let mut events = Vec::new();
+        for w in 0..waves {
+            let t = start_s + wave_every_s * w as f64;
+            let mut candidates: Vec<NodeId> = nodes
+                .iter()
+                .copied()
+                .filter(|n| busy_until.get(n).copied().unwrap_or(0.0) <= t)
+                .collect();
+            rng.shuffle(&mut candidates);
+            for node in candidates.into_iter().take(nodes_per_wave) {
+                let down_at = t + rng.uniform(0.0, 2.0);
+                let up_at = down_at + down_for_s * rng.uniform(0.9, 1.2);
+                events.push(NodeChurnEvent { time: down_at, node, up: false });
+                events.push(NodeChurnEvent { time: up_at, node, up: true });
+                busy_until.insert(node, up_at + 1.0);
+            }
+        }
+        Self::from_events(events)
+    }
+
+    /// All events in `(time, node)` order.
+    pub fn events(&self) -> &[NodeChurnEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The next time `node` goes down strictly after `t` (`None` = no
+    /// reclamation ever again → infinite expected lifetime).
+    pub fn next_down_after(&self, node: NodeId, t: f64) -> Option<f64> {
+        self.events
+            .iter()
+            .find(|e| e.node == node && !e.up && e.time > t)
+            .map(|e| e.time)
+    }
+
+    /// Serialize as `{"events": [{"t":…, "node":…, "up":…}, …]}`.
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let rows: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("t".to_string(), Json::Num(e.time));
+                m.insert("node".to_string(), Json::Num(e.node as f64));
+                m.insert("up".to_string(), Json::Bool(e.up));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("events".to_string(), Json::Arr(rows));
+        Json::Obj(top).to_string()
+    }
+
+    /// Parse a recorded trace (the inverse of [`Self::to_json`]).
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        let v = Json::parse(text)?;
+        let rows = v
+            .req("events")?
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("\"events\" is not an array"))?;
+        let mut events = Vec::with_capacity(rows.len());
+        for r in rows {
+            let time = r
+                .req("t")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("event \"t\" not a number"))?;
+            let node = r
+                .req("node")?
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("event \"node\" not a number"))?
+                as NodeId;
+            let up = r
+                .req("up")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("event \"up\" not a bool"))?;
+            events.push(NodeChurnEvent { time, node, up });
+        }
+        Ok(Self::from_events(events))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,5 +342,86 @@ mod tests {
         let tr = LoadTrace::drain(2, 10.0, 5.0);
         let times: Vec<f64> = tr.step_times().collect();
         assert_eq!(times, vec![0.0, 15.0, 20.0]);
+    }
+
+    // ------------------------------------------------ node churn traces
+
+    #[test]
+    fn node_trace_orders_and_queries() {
+        let tr = NodeAvailabilityTrace::from_events(vec![
+            NodeChurnEvent { time: 50.0, node: 1, up: false },
+            NodeChurnEvent { time: 10.0, node: 0, up: false },
+            NodeChurnEvent { time: 30.0, node: 0, up: true },
+            NodeChurnEvent { time: 90.0, node: 1, up: true },
+        ]);
+        assert_eq!(tr.len(), 4);
+        assert_eq!(tr.events()[0].node, 0);
+        assert_eq!(tr.next_down_after(0, 0.0), Some(10.0));
+        assert_eq!(tr.next_down_after(0, 10.0), None, "strictly after");
+        assert_eq!(tr.next_down_after(1, 0.0), Some(50.0));
+        assert_eq!(tr.next_down_after(7, 0.0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "reclaimed twice")]
+    fn node_trace_rejects_double_reclaim() {
+        NodeAvailabilityTrace::from_events(vec![
+            NodeChurnEvent { time: 1.0, node: 0, up: false },
+            NodeChurnEvent { time: 2.0, node: 0, up: false },
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "without a prior reclamation")]
+    fn node_trace_rejects_rejoin_of_up_node() {
+        NodeAvailabilityTrace::from_events(vec![NodeChurnEvent {
+            time: 1.0,
+            node: 3,
+            up: true,
+        }]);
+    }
+
+    #[test]
+    fn storm_alternates_and_is_deterministic() {
+        let nodes: Vec<u32> = (0..20).collect();
+        let mk = || {
+            NodeAvailabilityTrace::storm(
+                &nodes,
+                100.0,
+                4,
+                60.0,
+                90.0,
+                5,
+                &mut Rng::new(11),
+            )
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "storms regenerate bit-identically per seed");
+        // 4 waves × 5 nodes × (down + up).
+        assert_eq!(a.len(), 40);
+        assert!(a.events().iter().all(|e| e.time >= 100.0));
+        // from_events already validated alternation; spot-check a node's
+        // first event is a reclamation.
+        let first = a.events().iter().find(|e| e.node == a.events()[0].node);
+        assert!(!first.unwrap().up);
+    }
+
+    #[test]
+    fn node_trace_json_roundtrip() {
+        let nodes: Vec<u32> = (0..8).collect();
+        let tr = NodeAvailabilityTrace::storm(
+            &nodes,
+            10.0,
+            3,
+            30.0,
+            20.0,
+            2,
+            &mut Rng::new(5),
+        );
+        let text = tr.to_json();
+        let back = NodeAvailabilityTrace::from_json(&text).unwrap();
+        assert_eq!(back, tr, "JSON roundtrip must be lossless");
+        assert!(NodeAvailabilityTrace::from_json("{}").is_err());
     }
 }

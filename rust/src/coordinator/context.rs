@@ -26,7 +26,9 @@ pub enum DataOrigin {
 }
 
 /// The four context elements of §5.3.1, plus the weights themselves.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Ord` follows declaration order — only used for deterministic
+/// iteration of node-resident cache snapshots, never for semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ComponentKind {
     /// Poncho-packed software environment.
     DepsPackage,
@@ -110,6 +112,12 @@ pub struct ContextRecipe {
     /// Consumed by `coordinator::policy::WeightedFairShare`; ignored by
     /// the other placement policies.
     pub weight: f64,
+    /// Monotone content version of the context (0 at registration).
+    /// Node-resident disk caches record the version they persisted, and
+    /// a rejoining worker only warm-starts from entries whose persisted
+    /// version matches the registry — a worker must never serve a
+    /// context newer (or older) than what its node actually holds.
+    pub version: u32,
 }
 
 impl ContextRecipe {
@@ -155,6 +163,7 @@ impl ContextRecipe {
                 },
             ],
             weight: 1.0,
+            version: 0,
         }
     }
 
@@ -207,6 +216,7 @@ impl ContextRecipe {
             ],
             name,
             weight: 1.0,
+            version: 0,
         }
     }
 
@@ -215,6 +225,14 @@ impl ContextRecipe {
     pub fn with_weight(mut self, weight: f64) -> Self {
         assert!(weight > 0.0, "recipe weight must be positive");
         self.weight = weight;
+        self
+    }
+
+    /// Set the content version (see the `version` field; registration
+    /// normally starts at 0 and bumps go through
+    /// `Scheduler::bump_context_version`).
+    pub fn with_version(mut self, version: u32) -> Self {
+        self.version = version;
         self
     }
 
@@ -346,6 +364,13 @@ mod tests {
         assert_eq!(r.weight, 1.0);
         let r = ContextRecipe::custom(1, "x", 10, 10).with_weight(2.5);
         assert_eq!(r.weight, 2.5);
+    }
+
+    #[test]
+    fn version_defaults_to_zero_and_is_settable() {
+        assert_eq!(ContextRecipe::smollm2_pff(0).version, 0);
+        let r = ContextRecipe::custom(1, "x", 10, 10).with_version(3);
+        assert_eq!(r.version, 3);
     }
 
     #[test]

@@ -26,6 +26,20 @@ pub struct ContextCacheCounters {
     /// Components staged proactively by a `WarmPrefetch` placement
     /// decision (not charged as misses — no task was waiting on them).
     pub prefetched: u64,
+    /// Bytes committed to stage transfers at plan time (task plans and
+    /// prefetches alike) — the "bytes re-transferred" axis of the churn
+    /// experiment. A stage interrupted by eviction still spent its
+    /// network bytes, so commitments count, and the inevitable re-stage
+    /// of the lost component counts again.
+    pub staged_bytes: u64,
+    /// Components replayed from a node-resident disk cache into a
+    /// rejoining worker (the §7 warm start: no stage phase, no bytes).
+    pub warm_restored: u64,
+    /// Bytes those warm restores saved from re-transfer.
+    pub warm_restored_bytes: u64,
+    /// Persisted components dropped at restore because their recipe
+    /// version no longer matched the registry.
+    pub stale_dropped: u64,
 }
 
 impl ContextCacheCounters {
@@ -35,6 +49,17 @@ impl ContextCacheCounters {
             0.0
         } else {
             self.hits as f64 / total as f64
+        }
+    }
+
+    /// Of every component a worker ever needed on disk, the fraction a
+    /// node-resident warm start supplied instead of a stage transfer.
+    pub fn warm_restart_hit_rate(&self) -> f64 {
+        let total = self.warm_restored + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_restored as f64 / total as f64
         }
     }
 }
@@ -64,6 +89,10 @@ impl CacheStats {
             t.misses += c.misses;
             t.evictions += c.evictions;
             t.prefetched += c.prefetched;
+            t.staged_bytes += c.staged_bytes;
+            t.warm_restored += c.warm_restored;
+            t.warm_restored_bytes += c.warm_restored_bytes;
+            t.stale_dropped += c.stale_dropped;
         }
         t
     }
@@ -76,12 +105,16 @@ impl CacheStats {
             let _ = writeln!(
                 out,
                 "ctx={ctx} hits={} misses={} evictions={} prefetched={} \
-                 hit_rate={:.3}",
+                 hit_rate={:.3} staged_bytes={} warm_restored={} \
+                 warm_hit_rate={:.3}",
                 c.hits,
                 c.misses,
                 c.evictions,
                 c.prefetched,
-                c.hit_rate()
+                c.hit_rate(),
+                c.staged_bytes,
+                c.warm_restored,
+                c.warm_restart_hit_rate()
             );
         }
         out
@@ -287,6 +320,28 @@ mod tests {
         assert_eq!((t.hits, t.misses, t.evictions), (3, 1, 2));
         let r = s.report();
         assert!(r.contains("ctx=0") && r.contains("ctx=1"));
+    }
+
+    #[test]
+    fn churn_counters_aggregate_and_rate() {
+        let mut s = CacheStats::default();
+        let c = s.ctx_mut(0);
+        c.misses = 3;
+        c.staged_bytes = 900;
+        c.warm_restored = 2;
+        c.warm_restored_bytes = 600;
+        c.stale_dropped = 1;
+        let t = s.totals();
+        assert_eq!(t.staged_bytes, 900);
+        assert_eq!(t.warm_restored, 2);
+        assert_eq!(t.warm_restored_bytes, 600);
+        assert_eq!(t.stale_dropped, 1);
+        assert!((s.ctx(0).warm_restart_hit_rate() - 0.4).abs() < 1e-12);
+        assert_eq!(
+            ContextCacheCounters::default().warm_restart_hit_rate(),
+            0.0
+        );
+        assert!(s.report().contains("warm_restored=2"));
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //!   (§5.2, the core idea).
 //! * [`library`] — the library-process lifecycle on a worker: staged →
 //!   materializing → ready, hosting the reusable context (§5.2, Fig. 2).
-//! * [`worker`] — workers: 1 GPU, 1 task at a time, local cache (§5.3.2).
+//! * [`worker`] — workers: 1 GPU, 1 task at a time, local cache (§5.3.2),
+//!   split into a volatile tier (library/GPU state) and a disk tier.
+//! * [`nodecache`] — node-resident disk caches surviving reclamation:
+//!   evictions snapshot the disk tier under the node id, rejoins replay
+//!   it for a warm start (§7 future work, now mechanism).
 //! * [`transfer`] — peer-transfer planner: spanning-tree context
 //!   distribution with per-source fan-out cap N (§5.3.1).
 //! * [`scheduler`] — the manager *mechanisms*: ready queue, a
@@ -20,8 +24,10 @@
 //!   `PlacementPolicy` reads a read-only `SchedulerView` and returns
 //!   typed placement decisions. Ships `AffinityGreedy` (warm pairing +
 //!   cache-affinity scoring — the default), `WeightedFairShare`
-//!   (deficit round robin over tenants) and `WarmPrefetch` (proactive
-//!   context staging for cold backlogged tenants).
+//!   (deficit round robin over tenants), `WarmPrefetch` (proactive
+//!   context staging for cold backlogged tenants) and `RiskAware`
+//!   (avoids staging onto nodes the availability trace says are about
+//!   to be reclaimed).
 //! * [`factory`] — the daemon reconciling the worker pool against cluster
 //!   availability (§5.1, "TaskVine factory").
 //! * [`costmodel`] — calibrated service-time model used by the simulated
@@ -36,6 +42,7 @@ pub mod costmodel;
 pub mod factory;
 pub mod library;
 pub mod metrics;
+pub mod nodecache;
 pub mod policy;
 pub mod scheduler;
 pub mod sim_driver;
@@ -48,9 +55,10 @@ pub use context::{Component, ComponentKind, ContextId, ContextPolicy, ContextRec
 pub use costmodel::CostModel;
 pub use library::LibraryState;
 pub use metrics::{CacheStats, ContextCacheCounters, Metrics, RunSummary};
+pub use nodecache::{NodeCacheDirectory, NodeCacheEntry, RestoreSummary};
 pub use policy::{
     AffinityGreedy, PlacementDecision, PlacementPolicy, PolicyKind,
-    SchedulerView, WarmPrefetch, WeightedFairShare,
+    RiskAware, SchedulerView, WarmPrefetch, WeightedFairShare,
 };
 pub use scheduler::{Dispatch, Scheduler};
 pub use sim_driver::{AppSpec, SimConfig, SimDriver, SimOutcome};

@@ -1,0 +1,267 @@
+//! Node-resident disk caches that survive worker reclamation (§7).
+//!
+//! A cluster eviction kills the worker *process* — its sandbox, its
+//! library, its GPU state — but the staged context files live on the
+//! node's scratch disk and stay there until the primary workload (or a
+//! cleanup daemon) wipes them. The paper names exploiting this as future
+//! work: "model disk caches surviving on the node for a fast re-join
+//! warm start". This module is that mechanism.
+//!
+//! The [`NodeCacheDirectory`] is manager-side bookkeeping of what each
+//! *node* (not worker) still holds: at eviction the scheduler snapshots
+//! the dying worker's disk tier here, and at join it replays the
+//! snapshot into the fresh worker — skipping any context whose persisted
+//! recipe version no longer matches the registry, so a rejoined worker
+//! can never serve bytes newer (or older) than what its node actually
+//! has on disk.
+//!
+//! Invariant (proptest-checked): a node entry's occupancy never exceeds
+//! the disk capacity it was recorded with, across arbitrarily many
+//! reclaim/rejoin cycles — a snapshot of a capacity-bounded worker cache
+//! is capacity-bounded by construction, and restores go through the
+//! worker's own LRU-bounded insert.
+
+use std::collections::BTreeMap;
+
+use super::context::{ComponentKind, ContextId};
+use super::worker::Worker;
+use crate::cluster::NodeId;
+
+/// What one node still holds on its scratch disk.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NodeCacheEntry {
+    /// Component files, keyed `(context, kind)` → bytes. BTreeMap so
+    /// restores replay in a deterministic order.
+    components: BTreeMap<(ContextId, ComponentKind), u64>,
+    /// Recipe version each context was persisted at.
+    versions: BTreeMap<ContextId, u32>,
+    /// Disk capacity of the worker slot that wrote the snapshot.
+    capacity: u64,
+}
+
+impl NodeCacheEntry {
+    /// Bytes held on this node's disk.
+    pub fn occupancy(&self) -> u64 {
+        self.components.values().sum()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Version `ctx` was persisted at, if any of it is on disk.
+    pub fn persisted_version(&self, ctx: ContextId) -> Option<u32> {
+        if self.components.keys().any(|(c, _)| *c == ctx) {
+            Some(self.versions.get(&ctx).copied().unwrap_or(0))
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-context tallies of one restore (what the scheduler charges to
+/// [`super::metrics::CacheStats`]).
+#[derive(Debug, Clone, Default)]
+pub struct RestoreSummary {
+    /// ctx → (components restored, bytes restored).
+    pub restored: BTreeMap<ContextId, (u64, u64)>,
+    /// ctx → components dropped because the persisted version no longer
+    /// matches the registry (stale disk state).
+    pub stale_dropped: BTreeMap<ContextId, u64>,
+}
+
+impl RestoreSummary {
+    pub fn total_components(&self) -> u64 {
+        self.restored.values().map(|(n, _)| n).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.restored.values().map(|(_, b)| b).sum()
+    }
+}
+
+/// Manager-side ledger of every node's surviving disk cache.
+#[derive(Debug, Clone, Default)]
+pub struct NodeCacheDirectory {
+    nodes: BTreeMap<NodeId, NodeCacheEntry>,
+}
+
+impl NodeCacheDirectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot a dying worker's disk tier under its node id (replacing
+    /// any older snapshot — the disk now holds exactly what the worker
+    /// had). An empty cache clears the entry: nothing survives.
+    pub fn persist(&mut self, worker: &Worker) {
+        let node = worker.node_id();
+        let components: BTreeMap<(ContextId, ComponentKind), u64> =
+            worker.cache_contents().collect();
+        if components.is_empty() {
+            self.nodes.remove(&node);
+            return;
+        }
+        let versions = components
+            .keys()
+            .map(|(ctx, _)| (*ctx, worker.cached_version(*ctx)))
+            .collect();
+        self.nodes.insert(
+            node,
+            NodeCacheEntry {
+                components,
+                versions,
+                capacity: worker.cache_capacity(),
+            },
+        );
+    }
+
+    /// Replay this node's snapshot into a freshly joined worker.
+    /// `current_version` looks a context up in the registry (`None` =
+    /// unregistered → skipped). Only contexts whose persisted version
+    /// matches the registry restore; everything else is stale and
+    /// dropped. The directory itself is untouched — the files are still
+    /// on disk whether or not this worker incarnation uses them.
+    pub fn restore_into(
+        &self,
+        worker: &mut Worker,
+        current_version: impl Fn(ContextId) -> Option<u32>,
+    ) -> RestoreSummary {
+        let mut summary = RestoreSummary::default();
+        let Some(entry) = self.nodes.get(&worker.node_id()) else {
+            return summary;
+        };
+        for (&(ctx, kind), &bytes) in &entry.components {
+            let persisted = entry.versions.get(&ctx).copied().unwrap_or(0);
+            match current_version(ctx) {
+                Some(v) if v == persisted => {
+                    let (cached, _evicted) =
+                        worker.insert_cached(ctx, kind, bytes, None);
+                    if cached {
+                        worker.set_cached_version(ctx, persisted);
+                        worker.warm_start_components += 1;
+                        let e = summary.restored.entry(ctx).or_insert((0, 0));
+                        e.0 += 1;
+                        e.1 += bytes;
+                    }
+                }
+                _ => {
+                    *summary.stale_dropped.entry(ctx).or_insert(0) += 1;
+                }
+            }
+        }
+        summary
+    }
+
+    pub fn entry(&self, node: NodeId) -> Option<&NodeCacheEntry> {
+        self.nodes.get(&node)
+    }
+
+    /// Nodes with surviving disk state.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The disk-tier capacity invariant: every node's surviving bytes
+    /// fit the disk it was recorded with.
+    pub fn check_capacity(&self) -> bool {
+        self.nodes.values().all(|e| e.occupancy() <= e.capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuModel, Node};
+
+    fn worker_on(node: NodeId, capacity: u64) -> Worker {
+        Worker::new(0, Node { id: node, gpu: GpuModel::A10 }, 0.0, capacity)
+    }
+
+    #[test]
+    fn persist_then_restore_roundtrips() {
+        let mut dir = NodeCacheDirectory::new();
+        let mut w = worker_on(4, 1_000);
+        w.insert_cached(0, ComponentKind::DepsPackage, 100, None);
+        w.insert_cached(0, ComponentKind::ModelWeights, 200, None);
+        w.set_cached_version(0, 1);
+        dir.persist(&w);
+        assert_eq!(dir.len(), 1);
+        assert_eq!(dir.entry(4).unwrap().occupancy(), 300);
+        assert_eq!(dir.entry(4).unwrap().persisted_version(0), Some(1));
+        assert!(dir.check_capacity());
+
+        let mut fresh = worker_on(4, 1_000);
+        let summary = dir.restore_into(&mut fresh, |ctx| {
+            (ctx == 0).then_some(1)
+        });
+        assert_eq!(summary.total_components(), 2);
+        assert_eq!(summary.total_bytes(), 300);
+        assert!(fresh.warm_started());
+        assert!(fresh.has_cached(0, ComponentKind::DepsPackage));
+        assert!(fresh.has_cached(0, ComponentKind::ModelWeights));
+        assert_eq!(fresh.cached_version(0), 1);
+    }
+
+    #[test]
+    fn restore_on_other_node_is_cold() {
+        let mut dir = NodeCacheDirectory::new();
+        let mut w = worker_on(4, 1_000);
+        w.insert_cached(0, ComponentKind::DepsPackage, 100, None);
+        dir.persist(&w);
+        let mut elsewhere = worker_on(5, 1_000);
+        let summary = dir.restore_into(&mut elsewhere, |_| Some(0));
+        assert_eq!(summary.total_components(), 0);
+        assert!(!elsewhere.warm_started());
+    }
+
+    #[test]
+    fn stale_version_is_dropped_not_restored() {
+        let mut dir = NodeCacheDirectory::new();
+        let mut w = worker_on(2, 1_000);
+        w.insert_cached(7, ComponentKind::ModelWeights, 50, None);
+        w.set_cached_version(7, 0);
+        dir.persist(&w);
+        // Registry moved to version 1 while the node was down.
+        let mut fresh = worker_on(2, 1_000);
+        let summary = dir.restore_into(&mut fresh, |_| Some(1));
+        assert_eq!(summary.total_components(), 0);
+        assert_eq!(summary.stale_dropped.get(&7), Some(&1));
+        assert!(!fresh.has_cached(7, ComponentKind::ModelWeights));
+        // Unregistered contexts are skipped the same way.
+        let mut fresh2 = worker_on(2, 1_000);
+        let summary2 = dir.restore_into(&mut fresh2, |_| None);
+        assert_eq!(summary2.total_components(), 0);
+    }
+
+    #[test]
+    fn empty_snapshot_clears_the_entry() {
+        let mut dir = NodeCacheDirectory::new();
+        let mut w = worker_on(1, 1_000);
+        w.insert_cached(0, ComponentKind::DepsPackage, 10, None);
+        dir.persist(&w);
+        assert_eq!(dir.len(), 1);
+        w.clear_cache();
+        dir.persist(&w);
+        assert!(dir.is_empty(), "wiped disk leaves no ghost entry");
+    }
+
+    #[test]
+    fn resnapshot_replaces_not_merges() {
+        let mut dir = NodeCacheDirectory::new();
+        let mut w = worker_on(1, 1_000);
+        w.insert_cached(0, ComponentKind::DepsPackage, 10, None);
+        dir.persist(&w);
+        // Next incarnation cached a different context only.
+        let mut w2 = worker_on(1, 1_000);
+        w2.insert_cached(1, ComponentKind::ModelWeights, 20, None);
+        dir.persist(&w2);
+        let e = dir.entry(1).unwrap();
+        assert_eq!(e.occupancy(), 20);
+        assert_eq!(e.persisted_version(0), None, "old context gone");
+    }
+}

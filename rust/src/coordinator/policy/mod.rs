@@ -25,6 +25,12 @@
 //!   queued-but-cold tenant's context onto idle workers (via the same
 //!   stage phases and spanning-tree peer sources as task plans), so the
 //!   tenant's first task finds a warm cache instead of a cold pool.
+//! * [`RiskAware`] — greedy assignment that consults the per-node
+//!   expected-remaining-lifetime forecast
+//!   ([`SchedulerView::expected_lifetime_s`]) and refuses to stage a
+//!   context onto a node the availability trace says will be reclaimed
+//!   before the task could finish — the SageServe/Aladdin-style answer
+//!   to wasted transfers under churn.
 //!
 //! # Writing a policy
 //!
@@ -54,10 +60,12 @@ use super::worker::WorkerId;
 mod fairshare;
 mod greedy;
 mod prefetch;
+mod riskaware;
 
 pub use fairshare::WeightedFairShare;
 pub use greedy::AffinityGreedy;
 pub use prefetch::WarmPrefetch;
+pub use riskaware::RiskAware;
 
 /// One queued task, as a policy sees it (queue order preserved).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -116,6 +124,9 @@ pub enum PolicyKind {
     FairShare,
     /// Greedy assignment + proactive context staging.
     Prefetch,
+    /// Greedy assignment that avoids staging onto nodes the availability
+    /// trace says are about to be reclaimed.
+    RiskAware,
 }
 
 impl PolicyKind {
@@ -124,6 +135,7 @@ impl PolicyKind {
             PolicyKind::Greedy => "greedy",
             PolicyKind::FairShare => "fairshare",
             PolicyKind::Prefetch => "prefetch",
+            PolicyKind::RiskAware => "riskaware",
         }
     }
 
@@ -133,6 +145,7 @@ impl PolicyKind {
             "greedy" => Some(PolicyKind::Greedy),
             "fairshare" | "fair-share" => Some(PolicyKind::FairShare),
             "prefetch" => Some(PolicyKind::Prefetch),
+            "riskaware" | "risk-aware" => Some(PolicyKind::RiskAware),
             _ => None,
         }
     }
@@ -143,6 +156,7 @@ impl PolicyKind {
             PolicyKind::Greedy => Box::new(AffinityGreedy::new()),
             PolicyKind::FairShare => Box::new(WeightedFairShare::new()),
             PolicyKind::Prefetch => Box::new(WarmPrefetch::new()),
+            PolicyKind::RiskAware => Box::new(RiskAware::new()),
         }
     }
 }
@@ -327,21 +341,52 @@ impl<'a> SchedulerView<'a> {
     pub fn prefetching_count(&self, ctx: ContextId) -> usize {
         self.sched.prefetch_count(ctx)
     }
+
+    /// Expected seconds until `w`'s node is reclaimed, per the driver's
+    /// availability-trace forecast. `INFINITY` when no reclamation is
+    /// known (constant pools, live mode) — risk-aware placement then
+    /// degenerates to plain greedy; `0.0` for an unknown worker.
+    pub fn expected_lifetime_s(&self, w: WorkerId) -> f64 {
+        self.sched
+            .worker(w)
+            .map(|wk| self.sched.expected_node_lifetime_s(wk.node_id()))
+            .unwrap_or(0.0)
+    }
+
+    /// Deterministic mean execute-time estimate for `inferences` on `w`
+    /// (no jitter draw — same contract as the acquisition estimate).
+    pub fn est_execute_s(&self, w: WorkerId, inferences: u64) -> f64 {
+        let speed = self.worker_speed(w).max(1e-9);
+        inferences as f64 * self.cost().a10_per_inference_s / speed
+    }
+
+    /// Total dispatched-but-unfinished work in the pool (tasks plus
+    /// prefetches) — the liveness signal [`RiskAware`] consults before
+    /// deliberately leaving a doomed worker idle.
+    pub fn in_flight_total(&self) -> u64 {
+        self.sched.running_count() as u64
+            + self.sched.prefetching_count_total() as u64
+    }
 }
 
-/// Index into `idle` of the cheapest worker for `ctx`: lowest
-/// acquisition estimate, ties broken by GPU speed (descending) then
-/// worker id (ascending). Exactly the pre-policy scheduler's candidate
-/// comparison — [`AffinityGreedy`]'s parity depends on it.
-///
-/// Panics if `idle` is empty.
-pub fn pick_best_worker(
+/// Index into `idle` of the cheapest worker for `ctx` among those
+/// passing `keep`: lowest acquisition estimate, ties broken by GPU
+/// speed (descending) then worker id (ascending) — exactly the
+/// pre-policy scheduler's candidate comparison, which both
+/// [`AffinityGreedy`] (via [`pick_best_worker`]) and [`RiskAware`]
+/// (with a survival filter) share so the comparators can never
+/// diverge. `None` when nothing passes the filter.
+pub fn pick_best_worker_filtered(
     view: &SchedulerView,
     idle: &[WorkerId],
     ctx: ContextId,
-) -> usize {
+    keep: impl Fn(WorkerId) -> bool,
+) -> Option<usize> {
     let mut best: Option<(usize, f64)> = None;
     for (i, wid) in idle.iter().enumerate() {
+        if !keep(*wid) {
+            continue;
+        }
         let est = view.acquisition_estimate_s(*wid, ctx);
         let replace = match &best {
             None => true,
@@ -365,7 +410,19 @@ pub fn pick_best_worker(
             best = Some((i, est));
         }
     }
-    best.expect("pick_best_worker over a non-empty idle set").0
+    best.map(|(i, _)| i)
+}
+
+/// Unfiltered [`pick_best_worker_filtered`] — the original affinity
+/// comparison over the whole idle set ([`AffinityGreedy`]'s golden
+/// parity depends on it). Panics if `idle` is empty.
+pub fn pick_best_worker(
+    view: &SchedulerView,
+    idle: &[WorkerId],
+    ctx: ContextId,
+) -> usize {
+    pick_best_worker_filtered(view, idle, ctx, |_| true)
+        .expect("pick_best_worker over a non-empty idle set")
 }
 
 #[cfg(test)]
@@ -374,13 +431,17 @@ mod tests {
 
     #[test]
     fn policy_kind_roundtrip() {
-        for kind in
-            [PolicyKind::Greedy, PolicyKind::FairShare, PolicyKind::Prefetch]
-        {
+        for kind in [
+            PolicyKind::Greedy,
+            PolicyKind::FairShare,
+            PolicyKind::Prefetch,
+            PolicyKind::RiskAware,
+        ] {
             assert_eq!(PolicyKind::parse(kind.as_str()), Some(kind));
             assert_eq!(kind.build().name(), kind.as_str());
         }
         assert_eq!(PolicyKind::parse("fair-share"), Some(PolicyKind::FairShare));
+        assert_eq!(PolicyKind::parse("risk-aware"), Some(PolicyKind::RiskAware));
         assert_eq!(PolicyKind::parse("nope"), None);
     }
 }

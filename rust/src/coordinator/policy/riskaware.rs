@@ -1,0 +1,381 @@
+//! Eviction-risk-aware placement: don't stage 15 GB onto a node the
+//! availability trace says is about to be reclaimed.
+//!
+//! Opportunistic nodes come with a forecast: the driver feeds the
+//! scheduler each node's next expected reclamation time from the
+//! [`crate::cluster::NodeAvailabilityTrace`], and the view exposes it as
+//! an expected remaining lifetime. A task placed on a worker that will
+//! not live long enough to *finish* wastes its whole context transfer —
+//! the bytes are spent, the inferences are discarded, and the task
+//! re-stages somewhere else anyway. This policy treats such placements
+//! as a last resort:
+//!
+//! 1. **Warm pairing** (as [`super::AffinityGreedy`]) — but a warm
+//!    worker only claims a task it is expected to survive.
+//! 2. **FIFO + affinity over safe workers** — each remaining task picks
+//!    the cheapest-acquisition worker among those whose lifetime covers
+//!    the estimated acquisition + execution (scaled by a safety
+//!    `margin`).
+//! 3. **Doomed workers stay idle** while other work is in flight:
+//!    letting a node idle into its reclamation is cheaper than feeding
+//!    it a transfer it cannot finish. Liveness is unconditional — if
+//!    nothing at all is running (so no future completion event would
+//!    retrigger dispatch), the task falls back onto the longest-lived
+//!    idle worker rather than stalling the run.
+//!
+//! Without a forecast every lifetime is `INFINITY`, every worker is
+//! safe, and the policy reduces to greedy's FIFO + affinity phase.
+
+use super::greedy::WARM_LOOKAHEAD;
+use super::{
+    pick_best_worker_filtered, PlacementDecision, PlacementPolicy,
+    SchedulerView,
+};
+
+/// Risk-aware greedy placement (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct RiskAware {
+    /// Safety factor on the estimated time-to-finish: a worker is safe
+    /// for a task when `margin × (acquisition + execute) ≤ lifetime`.
+    /// 1.0 trusts the deterministic estimates; raise it to also dodge
+    /// jitter-induced overruns.
+    pub margin: f64,
+}
+
+impl Default for RiskAware {
+    fn default() -> Self {
+        Self { margin: 1.0 }
+    }
+}
+
+impl RiskAware {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_margin(margin: f64) -> Self {
+        assert!(margin > 0.0, "risk margin must be positive");
+        Self { margin }
+    }
+
+    /// Is `w` expected to survive running `q` end to end?
+    fn survives(
+        &self,
+        view: &SchedulerView,
+        w: super::WorkerId,
+        ctx: super::ContextId,
+        inferences: u64,
+    ) -> bool {
+        let life = view.expected_lifetime_s(w);
+        if life.is_infinite() {
+            return true;
+        }
+        let need = view.acquisition_estimate_s(w, ctx)
+            + view.est_execute_s(w, inferences);
+        need * self.margin <= life
+    }
+}
+
+impl PlacementPolicy for RiskAware {
+    fn name(&self) -> &'static str {
+        "riskaware"
+    }
+
+    fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
+        let mut decisions = Vec::new();
+        let mut idle = view.idle_workers();
+        if idle.is_empty() {
+            return decisions;
+        }
+        let mut queue = view.queued_prefix(WARM_LOOKAHEAD + idle.len());
+        if queue.is_empty() {
+            return decisions;
+        }
+
+        // Phase 1: warm pairing, gated on survival (a warm task is just
+        // an execute, so the bar is low — but a worker reclaimed mid-
+        // batch still discards every inference it ran).
+        let mut i = 0;
+        while i < idle.len() {
+            let wid = idle[i];
+            let mut found = None;
+            for (pos, q) in queue.iter().enumerate().take(WARM_LOOKAHEAD) {
+                if view.warm_for(wid, q.context)
+                    && self.survives(view, wid, q.context, q.inferences)
+                {
+                    found = Some(pos);
+                    break;
+                }
+            }
+            if let Some(pos) = found {
+                let q = queue.remove(pos);
+                let wid = idle.remove(i);
+                decisions
+                    .push(PlacementDecision::Assign { task: q.task, worker: wid });
+            } else {
+                i += 1;
+            }
+        }
+
+        // Phase 2: FIFO, cheapest-acquisition worker among the *safe*
+        // candidates for each task; tasks with only doomed candidates
+        // stay queued — a later completion (or this round's own
+        // assignments) will reopen dispatch.
+        let in_flight = view.in_flight_total();
+        let mut held_back = None;
+        for q in queue {
+            if idle.is_empty() {
+                break;
+            }
+            let best_safe =
+                pick_best_worker_filtered(view, &idle, q.context, |w| {
+                    self.survives(view, w, q.context, q.inferences)
+                });
+            match best_safe {
+                Some(i) => {
+                    let wid = idle.swap_remove(i);
+                    decisions.push(PlacementDecision::Assign {
+                        task: q.task,
+                        worker: wid,
+                    });
+                }
+                None => {
+                    // Remember the frontmost held task: if the whole
+                    // round places nothing, liveness needs it.
+                    if held_back.is_none() {
+                        held_back = Some(q);
+                    }
+                }
+            }
+        }
+        // Deadlock backstop, decided only once the full queue prefix has
+        // had its chance: if nothing is running anywhere and this round
+        // placed nothing, no future event would retrigger dispatch — so
+        // the frontmost held task runs on the longest-lived worker and
+        // eats the risk. (Deciding per-task instead would burn a doomed
+        // transfer even when a later queued task had a safe placement.)
+        if decisions.is_empty() && in_flight == 0 {
+            if let Some(q) = held_back {
+                if !idle.is_empty() {
+                    let i = longest_lived(view, &idle);
+                    let wid = idle.swap_remove(i);
+                    decisions.push(PlacementDecision::Assign {
+                        task: q.task,
+                        worker: wid,
+                    });
+                }
+            }
+        }
+        decisions
+    }
+}
+
+/// Index into `idle` of the longest-expected-lifetime worker (ties by
+/// GPU speed desc, then id asc). `idle` must be non-empty.
+fn longest_lived(view: &SchedulerView, idle: &[super::WorkerId]) -> usize {
+    let mut best = 0usize;
+    for i in 1..idle.len() {
+        let (a, b) = (idle[best], idle[i]);
+        let (la, lb) = (view.expected_lifetime_s(a), view.expected_lifetime_s(b));
+        let better = match lb.partial_cmp(&la).unwrap() {
+            std::cmp::Ordering::Greater => true,
+            std::cmp::Ordering::Less => false,
+            std::cmp::Ordering::Equal => {
+                match view.worker_speed(b).partial_cmp(&view.worker_speed(a)).unwrap()
+                {
+                    std::cmp::Ordering::Greater => true,
+                    std::cmp::Ordering::Less => false,
+                    std::cmp::Ordering::Equal => b < a,
+                }
+            }
+        };
+        if better {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::context::{ContextPolicy, ContextRecipe};
+    use super::super::super::costmodel::CostModel;
+    use super::super::super::scheduler::Scheduler;
+    use super::super::super::task::Task;
+    use super::super::super::transfer::TransferPlanner;
+    use super::super::{PlacementDecision, PlacementPolicy, SchedulerView};
+    use super::RiskAware;
+    use crate::cluster::{GpuModel, Node};
+
+    fn sched() -> Scheduler {
+        Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![ContextRecipe::smollm2_pff(0)],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            u64::MAX,
+        )
+    }
+
+    /// Two cold workers, one about to be reclaimed: the task avoids the
+    /// doomed one even though ids/speeds would otherwise favour it.
+    #[test]
+    fn avoids_staging_onto_doomed_worker() {
+        let mut s = sched();
+        s.submit_tasks(vec![Task::new(0, 0, 100, 0)]);
+        let doomed = s.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        let safe = s.worker_join(Node { id: 1, gpu: GpuModel::A10 }, 0.0);
+        // Node 0 dies in 5 s — nowhere near the ~40 s a cold 7.4 GB
+        // acquisition + 100-inference batch needs.
+        s.set_clock_hint(0.0);
+        s.set_node_reclaim_hint(0, Some(5.0));
+        let mut p = RiskAware::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        assert_eq!(
+            ds,
+            vec![PlacementDecision::Assign { task: 0, worker: safe }],
+            "doomed worker {doomed} must stay idle"
+        );
+    }
+
+    /// With other work in flight, a task with only doomed candidates
+    /// stays queued; with nothing running it falls back rather than
+    /// deadlock.
+    #[test]
+    fn holds_when_safe_worker_will_free_up_but_never_deadlocks() {
+        let mut s = sched();
+        s.submit_tasks(vec![
+            Task::new(0, 0, 100, 0),
+            Task::new(1, 100, 100, 0),
+        ]);
+        let safe = s.worker_join(Node { id: 1, gpu: GpuModel::A10 }, 0.0);
+        let doomed = s.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        s.set_clock_hint(0.0);
+        s.set_node_reclaim_hint(0, Some(5.0));
+        let mut p = RiskAware::new();
+        // Round 1: task 0 → safe worker; task 1 has only the doomed
+        // candidate left and this round already placed work → held.
+        let ds = s.apply_decisions(p.place(&SchedulerView::new(&s)));
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].worker, safe);
+        assert_eq!(s.ready_count(), 1, "task 1 stays queued");
+        assert!(s.worker(doomed).unwrap().is_idle());
+
+        // Fresh scheduler, nothing running, only a doomed worker: the
+        // fallback assigns anyway (liveness beats bytes).
+        let mut s2 = sched();
+        s2.submit_tasks(vec![Task::new(0, 0, 100, 0)]);
+        let only = s2.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        s2.set_clock_hint(0.0);
+        s2.set_node_reclaim_hint(0, Some(5.0));
+        let ds2 = s2.apply_decisions(p.place(&SchedulerView::new(&s2)));
+        assert_eq!(ds2.len(), 1);
+        assert_eq!(ds2[0].worker, only);
+    }
+
+    /// The deadlock backstop waits for the whole round: a front task
+    /// with no safe candidate is held while a later task that *does*
+    /// have one is placed — liveness comes from that assignment, and no
+    /// doomed transfer is burned.
+    #[test]
+    fn holds_unsafe_front_task_but_places_safe_later_task() {
+        let mut s = Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "small", 1_000, 2_000),
+            ],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            u64::MAX,
+        );
+        s.submit_tasks(vec![
+            Task::new(0, 0, 100, 0), // huge context first
+            Task::new(1, 0, 10, 1),  // tiny context behind it
+        ]);
+        s.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        s.worker_join(Node { id: 1, gpu: GpuModel::A10 }, 0.0);
+        // Both nodes die in 30 s: enough for the tiny context's task
+        // (~11 s), nowhere near the 7.4 GB acquisition + batch (~42 s).
+        s.set_clock_hint(0.0);
+        s.set_node_reclaim_hint(0, Some(30.0));
+        s.set_node_reclaim_hint(1, Some(30.0));
+        let mut p = RiskAware::new();
+        let ds = s.apply_decisions(p.place(&SchedulerView::new(&s)));
+        assert_eq!(ds.len(), 1, "only the survivable task places");
+        assert_eq!(ds[0].task, 1);
+        assert_eq!(s.ready_count(), 1, "the huge task stays queued");
+    }
+
+    /// No forecast → INFINITE lifetimes → same FIFO+affinity choice as
+    /// greedy's second phase (fastest idle worker for a cold task).
+    #[test]
+    fn without_forecast_matches_greedy_choice() {
+        let mut s = sched();
+        s.submit_tasks(vec![Task::new(0, 0, 10, 0)]);
+        s.worker_join(Node { id: 0, gpu: GpuModel::TitanXPascal }, 0.0);
+        let fast = s.worker_join(Node { id: 1, gpu: GpuModel::H100 }, 0.0);
+        let mut p = RiskAware::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        assert_eq!(
+            ds,
+            vec![PlacementDecision::Assign { task: 0, worker: fast }]
+        );
+    }
+
+    /// A warm worker that will not survive even the bare execute does
+    /// not warm-pair (while other work is in flight); with ample life
+    /// it pairs warm exactly as greedy would.
+    #[test]
+    fn warm_pairing_respects_lifetime() {
+        let mut s = sched();
+        s.submit_tasks(vec![
+            Task::new(0, 0, 1000, 0),
+            Task::new(1, 1000, 1000, 0),
+            Task::new(2, 2000, 1000, 0),
+        ]);
+        let w = s.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        // Warm the worker through a real dispatch cycle.
+        let d = s.try_dispatch();
+        for i in 0..d[0].phases.len() {
+            s.phase_done(d[0].task, i);
+        }
+        s.task_done(
+            d[0].task,
+            crate::coordinator::TaskRecord {
+                task: 0,
+                context: 0,
+                worker: w,
+                gpu: GpuModel::A10,
+                attempts: 1,
+                inferences: 1000,
+                dispatched_at: 0.0,
+                completed_at: 1.0,
+                context_s: 0.0,
+                execute_s: 1.0,
+            },
+        );
+        // Keep task 1 in flight on a second worker so holding is legal.
+        let busy = s.worker_join(Node { id: 5, gpu: GpuModel::A10 }, 0.0);
+        let ds = s.apply_decisions(vec![PlacementDecision::Assign {
+            task: 1,
+            worker: busy,
+        }]);
+        assert_eq!(ds.len(), 1);
+
+        let mut p = RiskAware::new();
+        // 1000 inferences ≈ 273 s on an A10; 10 s of life is not enough
+        // even though the worker is fully warm.
+        s.set_clock_hint(0.0);
+        s.set_node_reclaim_hint(0, Some(10.0));
+        let held = p.place(&SchedulerView::new(&s));
+        assert!(held.is_empty(), "doomed warm worker stays idle: {held:?}");
+        // With ample life it pairs warm as greedy would.
+        s.set_node_reclaim_hint(0, Some(10_000.0));
+        let ds2 = p.place(&SchedulerView::new(&s));
+        assert_eq!(
+            ds2,
+            vec![PlacementDecision::Assign { task: 2, worker: w }]
+        );
+    }
+}

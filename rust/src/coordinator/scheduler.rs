@@ -31,6 +31,7 @@ use super::context::{
 use super::costmodel::CostModel;
 use super::library::LibraryState;
 use super::metrics::CacheStats;
+use super::nodecache::NodeCacheDirectory;
 use super::policy::{
     AffinityGreedy, HoldAll, PlacementDecision, PlacementPolicy,
     SchedulerView,
@@ -38,7 +39,7 @@ use super::policy::{
 use super::task::{Task, TaskId, TaskRecord, TaskState};
 use super::transfer::{StageSource, TransferPlanner};
 use super::worker::{Worker, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};
-use crate::cluster::Node;
+use crate::cluster::{Node, NodeId};
 
 /// One phase of a task's execution plan on a specific worker.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -110,6 +111,22 @@ struct PrefetchFlight {
     context: ContextId,
     phases: Vec<PhaseKind>,
     next: usize,
+    /// Recipe version the plan was built against (see `InFlightTask`).
+    version: u32,
+}
+
+/// Scheduler-side state of one dispatched task.
+#[derive(Debug)]
+struct InFlightTask {
+    worker: WorkerId,
+    phases: Vec<PhaseKind>,
+    next: usize,
+    /// Recipe version the plan was built against. Staged components are
+    /// cached under *this* version, not whatever the registry says at
+    /// completion time — a `bump_context_version` racing an in-flight
+    /// stage must not relabel old-version bytes as current (they are
+    /// simply not cached; see [`Scheduler::cache_component`]).
+    version: u32,
 }
 
 /// The TaskVine-style manager.
@@ -130,13 +147,22 @@ pub struct Scheduler {
     ready: VecDeque<TaskId>,
     workers: BTreeMap<WorkerId, Worker>,
     /// Remaining (not-yet-completed) phases per running task.
-    in_flight: HashMap<TaskId, (WorkerId, Vec<PhaseKind>, usize)>,
+    in_flight: HashMap<TaskId, InFlightTask>,
     /// Running prefetches, keyed by their synthetic dispatch id.
     prefetch_flight: HashMap<TaskId, PrefetchFlight>,
     next_prefetch_seq: u64,
     next_worker_id: WorkerId,
     progress: Progress,
     records: Vec<TaskRecord>,
+    /// Node-resident disk caches surviving reclamation (§7 warm starts):
+    /// populated on eviction, replayed on rejoin of the same node.
+    node_caches: NodeCacheDirectory,
+    /// Driver-supplied churn forecast: absolute sim time each node is
+    /// next expected to be reclaimed (absent = no reclamation known).
+    node_reclaim_at: HashMap<NodeId, f64>,
+    /// Driver-supplied "now" for lifetime arithmetic — the scheduler
+    /// stays clockless; this is data, refreshed before dispatch rounds.
+    clock_hint: f64,
 }
 
 impl Scheduler {
@@ -196,6 +222,9 @@ impl Scheduler {
             next_worker_id: 0,
             progress: Progress::default(),
             records: Vec::new(),
+            node_caches: NodeCacheDirectory::new(),
+            node_reclaim_at: HashMap::new(),
+            clock_hint: 0.0,
         }
     }
 
@@ -255,20 +284,49 @@ impl Scheduler {
 
     // ------------------------------------------------------------ workers
 
-    /// A pilot job registered; returns the new worker's id.
+    /// A pilot job registered; returns the new worker's id. If this
+    /// node's disk still holds a persisted cache from a previous worker
+    /// incarnation (and the policy caches files at all), the new worker
+    /// warm-starts from it: matching-version components replay straight
+    /// into the cache, stale ones are dropped, and the per-context
+    /// `warm_restored`/`stale_dropped` counters are charged.
     pub fn worker_join(&mut self, node: Node, now: f64) -> WorkerId {
         let id = self.next_worker_id;
         self.next_worker_id += 1;
-        self.workers
-            .insert(id, Worker::new(id, node, now, self.cache_capacity_bytes));
+        let mut worker = Worker::new(id, node, now, self.cache_capacity_bytes);
+        if self.policy.caches_files() {
+            let recipes = &self.recipes;
+            let summary = self
+                .node_caches
+                .restore_into(&mut worker, |ctx| {
+                    recipes.get(&ctx).map(|r| r.version)
+                });
+            for (ctx, (n, bytes)) in &summary.restored {
+                let c = self.cache_stats.ctx_mut(*ctx);
+                c.warm_restored += n;
+                c.warm_restored_bytes += bytes;
+            }
+            for (ctx, n) in &summary.stale_dropped {
+                self.cache_stats.ctx_mut(*ctx).stale_dropped += n;
+            }
+        }
+        self.workers.insert(id, worker);
         id
     }
 
     /// A worker was reclaimed: kill it, requeue its task (if any).
     /// Returns the requeued task id and its batch size.
+    ///
+    /// The worker's **volatile tier** (materialized library, GPU state)
+    /// dies here; its **disk tier** is snapshotted into the
+    /// [`NodeCacheDirectory`] under the node id, so a worker rejoining
+    /// the same node later warm-starts instead of re-staging.
     pub fn worker_evict(&mut self, id: WorkerId) -> Option<(TaskId, u64)> {
         let worker = self.workers.remove(&id)?;
         self.progress.evictions += 1;
+        if self.policy.caches_files() {
+            self.node_caches.persist(&worker);
+        }
         let task_id = worker.running?;
         if Self::is_prefetch_id(task_id) {
             // A dying prefetch only holds peer-upload slots; no task to
@@ -282,8 +340,10 @@ impl Scheduler {
         }
         // Release peer-upload slots claimed for this task's unfinished
         // stage phases (sources may themselves be gone — skip those).
-        if let Some((_, phases, next)) = self.in_flight.remove(&task_id) {
-            self.release_pending_uploads(&phases[next.min(phases.len())..]);
+        if let Some(f) = self.in_flight.remove(&task_id) {
+            self.release_pending_uploads(
+                &f.phases[f.next.min(f.phases.len())..],
+            );
         }
         let task = self.tasks.get_mut(&task_id).expect("running task exists");
         debug_assert_eq!(task.state, TaskState::Running { worker: id });
@@ -330,6 +390,69 @@ impl Scheduler {
             .values()
             .find(|w| w.node_id() == node)
             .map(|w| w.id)
+    }
+
+    // ------------------------------------------------------ churn outlook
+
+    /// Driver-supplied clock for lifetime arithmetic (the scheduler owns
+    /// no clock; this is refreshed before each dispatch round).
+    pub fn set_clock_hint(&mut self, now: f64) {
+        self.clock_hint = now;
+    }
+
+    /// Record (or clear, with `None`) the absolute sim time `node` is
+    /// next expected to be reclaimed — the availability-trace forecast
+    /// the risk-aware placement policy consumes via [`SchedulerView`].
+    pub fn set_node_reclaim_hint(&mut self, node: NodeId, at: Option<f64>) {
+        match at {
+            Some(t) => {
+                self.node_reclaim_at.insert(node, t);
+            }
+            None => {
+                self.node_reclaim_at.remove(&node);
+            }
+        }
+    }
+
+    /// Expected seconds until `node` is reclaimed, per the driver's
+    /// forecast (`INFINITY` when no reclamation is known — constant
+    /// pools, live mode, or nodes past their last trace event).
+    pub(crate) fn expected_node_lifetime_s(&self, node: NodeId) -> f64 {
+        match self.node_reclaim_at.get(&node) {
+            Some(at) => (at - self.clock_hint).max(0.0),
+            None => f64::INFINITY,
+        }
+    }
+
+    /// The node-resident disk-cache ledger (observability + tests).
+    pub fn node_caches(&self) -> &NodeCacheDirectory {
+        &self.node_caches
+    }
+
+    /// A context's content changed (new weights, new deps): bump its
+    /// registry version and invalidate every live worker's copy — both
+    /// the disk tier (cached files) and the volatile tier (a library
+    /// materialized from the old bytes must not keep serving via the
+    /// Pervasive fast path). Node-resident snapshots persisted at the
+    /// old version become stale and will be dropped (never served) at
+    /// the next warm start. Returns the new version, or `None` for an
+    /// unregistered context.
+    pub fn bump_context_version(&mut self, ctx: ContextId) -> Option<u32> {
+        let recipe = self.recipes.get_mut(&ctx)?;
+        recipe.version += 1;
+        let version = recipe.version;
+        for w in self.workers.values_mut() {
+            w.drop_context(ctx);
+            let lib_ctx = match w.library {
+                LibraryState::Ready { context }
+                | LibraryState::Materializing { context } => Some(context),
+                LibraryState::Absent => None,
+            };
+            if lib_ctx == Some(ctx) {
+                w.library.teardown();
+            }
+        }
+        Some(version)
     }
 
     // ----------------------------------------------------------- dispatch
@@ -493,6 +616,7 @@ impl Scheduler {
                     };
                     self.ready.remove(pos);
                     let ctx = self.tasks[&task].context;
+                    let version = self.recipes[&ctx].version;
                     let phases = self.build_plan(task, worker);
                     let t = self.tasks.get_mut(&task).unwrap();
                     t.state = TaskState::Running { worker };
@@ -500,7 +624,15 @@ impl Scheduler {
                     let w = self.workers.get_mut(&worker).unwrap();
                     w.running = Some(task);
                     w.touch_context(ctx);
-                    self.in_flight.insert(task, (worker, phases.clone(), 0));
+                    self.in_flight.insert(
+                        task,
+                        InFlightTask {
+                            worker,
+                            phases: phases.clone(),
+                            next: 0,
+                            version,
+                        },
+                    );
                     out.push(Dispatch { task, worker, phases });
                 }
                 PlacementDecision::Prefetch { ctx, worker } => {
@@ -523,6 +655,7 @@ impl Scheduler {
                     let id =
                         Self::PREFETCH_ID_BASE + self.next_prefetch_seq;
                     self.next_prefetch_seq += 1;
+                    let version = self.recipes[&ctx].version;
                     let w = self.workers.get_mut(&worker).unwrap();
                     w.running = Some(id);
                     w.touch_context(ctx);
@@ -533,6 +666,7 @@ impl Scheduler {
                             context: ctx,
                             phases: phases.clone(),
                             next: 0,
+                            version,
                         },
                     );
                     out.push(Dispatch { task: id, worker, phases });
@@ -581,7 +715,13 @@ impl Scheduler {
                 self.cache_stats.ctx_mut(ctx).hits += 1;
                 continue;
             }
-            self.cache_stats.ctx_mut(ctx).misses += 1;
+            // Bytes are committed at plan time: an eviction mid-stage
+            // has still spent the transfer, and re-staging the lost
+            // component later is charged again — exactly the waste the
+            // risk-aware policy exists to avoid.
+            let stats = self.cache_stats.ctx_mut(ctx);
+            stats.misses += 1;
+            stats.staged_bytes += bytes;
             // Pick a source: peer with the component cached + free slot,
             // else origin. (Peers only useful when caching is on.)
             let source = if cache {
@@ -623,7 +763,9 @@ impl Scheduler {
             }
             // The `prefetched` counter is charged per *completed* stage
             // (in `prefetch_phase_done`), not here — an evicted prefetch
-            // must not inflate it.
+            // must not inflate it. Transfer bytes, by contrast, are
+            // committed at plan time like task stages.
+            self.cache_stats.ctx_mut(ctx).staged_bytes += bytes;
             let source = self.pick_stage_source(ctx, kind, origin, wid);
             phases.push(PhaseKind::Stage {
                 component: kind,
@@ -669,12 +811,13 @@ impl Scheduler {
         if Self::is_prefetch_id(task_id) {
             return self.prefetch_phase_done(task_id, phase_idx);
         }
-        let (wid, phases, next) = self.in_flight.get_mut(&task_id)?;
-        debug_assert_eq!(*next, phase_idx, "phases complete in order");
-        let done = phases[phase_idx];
-        let wid = *wid;
-        *next += 1;
-        let next_phase = phases.get(*next).copied();
+        let f = self.in_flight.get_mut(&task_id)?;
+        debug_assert_eq!(f.next, phase_idx, "phases complete in order");
+        let done = f.phases[phase_idx];
+        let wid = f.worker;
+        let plan_version = f.version;
+        f.next += 1;
+        let next_phase = f.phases.get(f.next).copied();
 
         match done {
             PhaseKind::Stage { component, bytes, source, cache } => {
@@ -687,7 +830,13 @@ impl Scheduler {
                     let ctx = self.tasks[&task_id].context;
                     // The in-flight task's context is pinned: with one
                     // task per worker that is exactly `ctx`.
-                    self.cache_component(wid, ctx, component, bytes);
+                    self.cache_component(
+                        wid,
+                        ctx,
+                        component,
+                        bytes,
+                        plan_version,
+                    );
                 }
             }
             PhaseKind::Materialize { context } => {
@@ -722,6 +871,7 @@ impl Scheduler {
         let done = pf.phases[phase_idx];
         let wid = pf.worker;
         let ctx = pf.context;
+        let plan_version = pf.version;
         pf.next += 1;
         let next_phase = pf.phases.get(pf.next).copied();
 
@@ -732,7 +882,7 @@ impl Scheduler {
                 }
             }
             self.cache_stats.ctx_mut(ctx).prefetched += 1;
-            self.cache_component(wid, ctx, component, bytes);
+            self.cache_component(wid, ctx, component, bytes, plan_version);
         }
         if next_phase.is_none() {
             self.prefetch_flight.remove(&id);
@@ -745,16 +895,31 @@ impl Scheduler {
 
     /// Insert a staged component into `wid`'s cache (`ctx` pinned),
     /// retiring evicted contexts' libraries and counting evictions.
+    /// Stamps the bytes with `plan_version` — the recipe version the
+    /// dispatch plan was built against. If the registry moved on while
+    /// the stage was in flight (`bump_context_version` raced it), the
+    /// bytes belong to an outdated recipe: the task still executes with
+    /// them, but they are never cached, so they can never be persisted
+    /// or warm-restored under a version they do not have.
     fn cache_component(
         &mut self,
         wid: WorkerId,
         ctx: ContextId,
         component: ComponentKind,
         bytes: u64,
+        plan_version: u32,
     ) {
+        let current =
+            self.recipes.get(&ctx).map(|r| r.version).unwrap_or(0);
+        if plan_version != current {
+            return;
+        }
         if let Some(w) = self.workers.get_mut(&wid) {
-            let (_cached, evicted) =
+            let (cached, evicted) =
                 w.insert_cached(ctx, component, bytes, Some(ctx));
+            if cached {
+                w.set_cached_version(ctx, plan_version);
+            }
             for e in evicted {
                 // Evicting a context's files also retires its
                 // materialized library, if it holds one.
@@ -773,18 +938,27 @@ impl Scheduler {
 
     /// All phases of `task` finished; the result reached the manager.
     pub fn task_done(&mut self, task_id: TaskId, record: TaskRecord) {
-        let (wid, _, _) = self
+        let f = self
             .in_flight
             .remove(&task_id)
             .expect("completing an unknown task");
         let task = self.tasks.get_mut(&task_id).unwrap();
         task.state = TaskState::Done;
+        let (ctx, count) = (task.context, task.count);
         self.progress.completed_tasks += 1;
-        self.progress.completed_inferences += task.count;
-        if let Some(w) = self.workers.get_mut(&wid) {
+        self.progress.completed_inferences += count;
+        let current =
+            self.recipes.get(&ctx).map(|r| r.version).unwrap_or(0);
+        if let Some(w) = self.workers.get_mut(&f.worker) {
             w.running = None;
             w.tasks_completed += 1;
-            w.inferences_completed += task.count;
+            w.inferences_completed += count;
+            if f.version != current && w.library.is_ready_for(ctx) {
+                // The library was materialized from a plan the registry
+                // superseded mid-flight: retire it so the Pervasive
+                // fast path cannot serve the old version again.
+                w.library.teardown();
+            }
         }
         self.records.push(record);
     }
@@ -850,6 +1024,12 @@ impl Scheduler {
         self.workers
             .values()
             .all(|w| w.cached_bytes_total() <= w.cache_capacity())
+    }
+
+    /// Disk-tier invariant: no node's surviving cache snapshot exceeds
+    /// the scratch-disk capacity it was recorded with.
+    pub fn check_node_cache_capacity(&self) -> bool {
+        self.node_caches.check_capacity()
     }
 }
 
@@ -1317,6 +1497,200 @@ mod tests {
             "an evicted prefetch that staged nothing counts nothing"
         );
         assert!(s.check_conservation());
+    }
+
+    // --------------------------------------------- node cache persistence
+
+    /// Evicting a worker persists its disk tier under the node id; a
+    /// worker rejoining that node warm-starts (stage-free plan bar the
+    /// materialization), while a different node stays cold.
+    #[test]
+    fn rejoin_same_node_warm_starts_from_disk() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(3, 100));
+        let w0 = s.worker_join(node(7, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        // Reclamation: disk tier survives under node 7.
+        s.worker_evict(w0);
+        assert_eq!(s.node_caches().len(), 1);
+        let entry = s.node_caches().entry(7).unwrap();
+        assert!(entry.occupancy() > 7_000_000_000, "both big components");
+        assert!(s.check_node_cache_capacity());
+
+        // Rejoin the same node: warm start, no stage phases.
+        let w1 = s.worker_join(node(7, GpuModel::A10), 10.0);
+        let wref = s.worker(w1).unwrap();
+        assert!(wref.warm_started());
+        assert!(wref.has_cached(0, ComponentKind::ModelWeights));
+        assert_eq!(s.cache_stats().ctx(0).warm_restored, 5);
+        assert!(s.cache_stats().ctx(0).warm_restored_bytes > 7_000_000_000);
+        let d2 = s.try_dispatch();
+        assert!(
+            !d2[0].phases.iter().any(|p| matches!(p, PhaseKind::Stage { .. })),
+            "warm start skips staging: {:?}",
+            d2[0].phases
+        );
+        assert!(
+            d2[0]
+                .phases
+                .iter()
+                .any(|p| matches!(p, PhaseKind::Materialize { .. })),
+            "volatile tier (library) still re-materializes"
+        );
+        complete(&mut s, &d2[0]);
+
+        // A different node is cold: full staging again.
+        let w2 = s.worker_join(node(8, GpuModel::A10), 20.0);
+        assert!(!s.worker(w2).unwrap().warm_started());
+    }
+
+    /// Bumping a context's version invalidates live caches and makes
+    /// old node snapshots stale: the rejoined worker never serves a
+    /// version other than what the registry currently holds.
+    #[test]
+    fn version_bump_invalidates_persisted_snapshots() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 10));
+        let w0 = s.worker_join(node(3, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        s.worker_evict(w0);
+        assert_eq!(s.node_caches().entry(3).unwrap().persisted_version(0), Some(0));
+
+        assert_eq!(s.bump_context_version(0), Some(1));
+        assert_eq!(s.bump_context_version(99), None);
+
+        let w1 = s.worker_join(node(3, GpuModel::A10), 5.0);
+        let wref = s.worker(w1).unwrap();
+        assert!(!wref.warm_started(), "stale snapshot must not restore");
+        assert_eq!(wref.cached_count(), 0);
+        assert_eq!(s.cache_stats().ctx(0).stale_dropped, 5);
+        // The next plan re-stages at the new version and re-persists it.
+        let d2 = s.try_dispatch();
+        assert!(d2[0]
+            .phases
+            .iter()
+            .any(|p| matches!(p, PhaseKind::Stage { .. })));
+        complete(&mut s, &d2[0]);
+        assert_eq!(s.worker(w1).unwrap().cached_version(0), 1);
+        s.worker_evict(w1);
+        assert_eq!(s.node_caches().entry(3).unwrap().persisted_version(0), Some(1));
+    }
+
+    /// Bumping a version on a *live* warm worker retires its library
+    /// too: the Pervasive zero-acquisition fast path must not keep
+    /// serving the old context from GPU memory.
+    #[test]
+    fn version_bump_retires_live_library() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 10));
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        complete(&mut s, &d1[0]);
+        assert!(s.worker(w).unwrap().library.is_ready_for(0));
+        s.bump_context_version(0);
+        let wref = s.worker(w).unwrap();
+        assert_eq!(wref.library, LibraryState::Absent, "library retired");
+        assert_eq!(wref.cached_count(), 0, "disk tier invalidated");
+        // The next task re-stages and re-materializes at version 1.
+        let d2 = s.try_dispatch();
+        assert!(d2[0]
+            .phases
+            .iter()
+            .any(|p| matches!(p, PhaseKind::Stage { .. })));
+        assert!(d2[0]
+            .phases
+            .iter()
+            .any(|p| matches!(p, PhaseKind::Materialize { .. })));
+        complete(&mut s, &d2[0]);
+        assert_eq!(s.worker(w).unwrap().cached_version(0), 1);
+    }
+
+    /// A version bump racing an in-flight plan: the task completes with
+    /// its old-version bytes, but nothing stale is cached, persisted or
+    /// left materialized — the next task re-acquires at the new version.
+    #[test]
+    fn version_bump_mid_flight_never_caches_stale_bytes() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 10));
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d = s.try_dispatch();
+        assert!(d[0]
+            .phases
+            .iter()
+            .any(|p| matches!(p, PhaseKind::Stage { .. })));
+        // Registry moves on while the stages are still in flight.
+        s.bump_context_version(0);
+        complete(&mut s, &d[0]);
+        let wref = s.worker(w).unwrap();
+        assert_eq!(wref.cached_count(), 0, "stale-plan bytes never cached");
+        assert_eq!(
+            wref.library,
+            LibraryState::Absent,
+            "stale-plan library retired at completion"
+        );
+        // The next task re-acquires at version 1.
+        let d2 = s.try_dispatch();
+        assert!(d2[0]
+            .phases
+            .iter()
+            .any(|p| matches!(p, PhaseKind::Stage { .. })));
+        complete(&mut s, &d2[0]);
+        assert_eq!(s.worker(w).unwrap().cached_version(0), 1);
+        s.worker_evict(w);
+        assert_eq!(
+            s.node_caches().entry(0).unwrap().persisted_version(0),
+            Some(1),
+            "only current-version bytes persist"
+        );
+    }
+
+    /// The None policy caches nothing, so nothing persists either.
+    #[test]
+    fn none_policy_persists_nothing() {
+        let mut s = mk(ContextPolicy::None);
+        s.submit_tasks(tasks(2, 10));
+        let w = s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d = s.try_dispatch();
+        complete(&mut s, &d[0]);
+        s.worker_evict(w);
+        assert!(s.node_caches().is_empty());
+    }
+
+    /// Plan-time byte accounting: a dispatch that stages counts its
+    /// bytes once; the warm follow-up counts nothing new.
+    #[test]
+    fn staged_bytes_committed_at_plan_time() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        s.submit_tasks(tasks(2, 10));
+        s.worker_join(node(0, GpuModel::A10), 0.0);
+        let d1 = s.try_dispatch();
+        let after_plan = s.cache_stats().ctx(0).staged_bytes;
+        assert!(after_plan > 7_000_000_000, "full recipe committed");
+        complete(&mut s, &d1[0]);
+        let d2 = s.try_dispatch();
+        complete(&mut s, &d2[0]);
+        assert_eq!(
+            s.cache_stats().ctx(0).staged_bytes,
+            after_plan,
+            "warm task transfers nothing"
+        );
+    }
+
+    /// Churn hints: lifetime is INFINITY without a forecast, finite and
+    /// clock-relative with one.
+    #[test]
+    fn node_lifetime_hints() {
+        let mut s = mk(ContextPolicy::Pervasive);
+        assert_eq!(s.expected_node_lifetime_s(0), f64::INFINITY);
+        s.set_node_reclaim_hint(0, Some(100.0));
+        s.set_clock_hint(40.0);
+        assert_eq!(s.expected_node_lifetime_s(0), 60.0);
+        s.set_clock_hint(140.0);
+        assert_eq!(s.expected_node_lifetime_s(0), 0.0, "clamped at zero");
+        s.set_node_reclaim_hint(0, None);
+        assert_eq!(s.expected_node_lifetime_s(0), f64::INFINITY);
     }
 
     /// `with_policy` swaps the decision layer end-to-end: a fair-share

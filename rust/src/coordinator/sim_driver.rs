@@ -8,7 +8,7 @@
 //! and cluster actions into worker lifecycle calls, exactly like the live
 //! PJRT driver does with real work.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use super::batcher::Batcher;
 use super::context::{ContextPolicy, ContextRecipe, DataOrigin};
@@ -21,7 +21,8 @@ use super::task::{Task, TaskId, TaskRecord};
 use super::transfer::{StageSource, TransferPlanner};
 use super::worker::{WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};
 use crate::cluster::{
-    ClusterAction, ClusterSim, GpuModel, LoadTrace, Node, SharedFilesystem,
+    ClusterAction, ClusterSim, GpuModel, LoadTrace, Node,
+    NodeAvailabilityTrace, SharedFilesystem,
 };
 use crate::simulation::{EventKind, SimEngine};
 use crate::util::Rng;
@@ -73,6 +74,14 @@ pub struct SimConfig {
     /// 0's whole backlog queues ahead of tenant 1's — the starvation
     /// scenario the fair-share and prefetch policies exist for).
     pub interleave_apps: bool,
+    /// Per-node churn schedule: injects `NodeReclaimed`/`NodeRejoined`
+    /// events on top of the aggregate load trace (reclamation storms).
+    /// Also the forecast source for risk-aware placement — each joining
+    /// worker's node gets its next-reclamation hint from here. The node
+    /// trace wins over the aggregate trace: a node it currently holds
+    /// down never accepts a worker, even if a load-trace step re-offers
+    /// it in the meantime (the pilot job dies in the queue).
+    pub node_trace: Option<NodeAvailabilityTrace>,
 }
 
 impl SimConfig {
@@ -105,6 +114,7 @@ impl SimConfig {
             worker_cache_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
             placement: PolicyKind::Greedy,
             interleave_apps: true,
+            node_trace: None,
         }
     }
 }
@@ -117,6 +127,10 @@ pub struct SimOutcome {
     pub records: Vec<TaskRecord>,
     /// Per-context cache hit/miss/evict counters (multi-app telemetry).
     pub cache: CacheStats,
+    /// Workers that warm-started from a node-resident disk cache at
+    /// join (rejoins after reclamation) — pairs with the worker ids in
+    /// `records` to compare warm-restart vs cold first-task costs.
+    pub warm_started_workers: Vec<WorkerId>,
     /// Sim time at which the start gate opened (t=0 of the measurement).
     pub started_at: f64,
     pub finished_at: f64,
@@ -148,6 +162,11 @@ pub struct SimDriver {
     finished_at: Option<f64>,
     /// Worker → node binding for eviction lookups.
     node_of_worker: HashMap<WorkerId, crate::cluster::NodeId>,
+    /// Workers that warm-started from a node-resident cache at join.
+    warm_started: Vec<WorkerId>,
+    /// Nodes the availability trace currently holds down — no worker
+    /// may register on them, whatever the aggregate trace re-offers.
+    down_nodes: HashSet<crate::cluster::NodeId>,
 }
 
 impl SimDriver {
@@ -185,6 +204,8 @@ impl SimDriver {
             started_at: None,
             finished_at: None,
             node_of_worker: HashMap::new(),
+            warm_started: Vec::new(),
+            down_nodes: HashSet::new(),
         }
     }
 
@@ -250,6 +271,17 @@ impl SimDriver {
         for (i, t) in times.iter().enumerate() {
             self.engine.schedule_at(*t, EventKind::TraceStep { step: i });
         }
+        // Node-level churn schedule (reclamation storms), if any.
+        if let Some(nt) = self.cfg.node_trace.clone() {
+            self.engine.schedule_all(nt.events().iter().map(|e| {
+                let kind = if e.up {
+                    EventKind::NodeRejoined { node: e.node }
+                } else {
+                    EventKind::NodeReclaimed { node: e.node }
+                };
+                (e.time, kind)
+            }));
+        }
         self.engine.schedule(0.0, EventKind::MetricsTick);
 
         while let Some(ev) = self.engine.pop() {
@@ -278,6 +310,12 @@ impl SimDriver {
                 }
                 EventKind::FactoryTick => {}
                 EventKind::MetricsTick => self.on_metrics_tick(now),
+                EventKind::NodeReclaimed { node } => {
+                    self.on_node_reclaimed(node)
+                }
+                EventKind::NodeRejoined { node } => {
+                    self.on_node_rejoined(node)
+                }
             }
             if self.finished_at.is_some() {
                 break;
@@ -332,6 +370,7 @@ impl SimDriver {
             series: self.metrics.points().to_vec(),
             records,
             cache: self.sched.cache_stats().clone(),
+            warm_started_workers: self.warm_started.clone(),
             started_at,
             finished_at,
         }
@@ -359,11 +398,18 @@ impl SimDriver {
         let mut all_offered = self.cluster.offered_nodes();
         all_offered.retain(|n| !offered.contains(n));
         offered.extend(all_offered);
+        self.submit_offers(&offered);
+    }
 
+    /// Hand `offered` nodes (in that order — order decides who gets the
+    /// budget when the factory cannot take everyone) to the factory and
+    /// schedule pilot-job joins for the ones it accepts. Shared by the
+    /// trace-step and node-churn paths.
+    fn submit_offers(&mut self, offered: &[crate::cluster::NodeId]) {
         let outstanding =
             self.sched.ready_count() + self.sched.running_count();
         let take = self.factory.decide_submissions(
-            &offered,
+            offered,
             self.sched.connected_workers() as u32,
             outstanding,
         );
@@ -376,14 +422,31 @@ impl SimDriver {
     fn on_worker_join(&mut self, node_id: crate::cluster::NodeId, now: f64) {
         self.factory.submission_resolved(node_id);
         // The node may have been reclaimed while the pilot job was in the
-        // queue — then the job just dies in the cluster.
-        if !self.cluster.offered_nodes().contains(&node_id) {
+        // queue — then the job just dies in the cluster. The node trace
+        // is authoritative: a node it holds down stays closed even if an
+        // aggregate trace step re-offered it meanwhile.
+        if self.down_nodes.contains(&node_id)
+            || !self.cluster.offered_nodes().contains(&node_id)
+        {
             return;
         }
         self.cluster.mark_held(node_id);
         let node = *self.cluster.node(node_id);
         let wid = self.sched.worker_join(node, now);
         self.node_of_worker.insert(wid, node_id);
+        if self
+            .sched
+            .worker(wid)
+            .map(|w| w.warm_started())
+            .unwrap_or(false)
+        {
+            self.warm_started.push(wid);
+        }
+        // Feed the risk-aware forecast: when does this node go down next?
+        if let Some(nt) = &self.cfg.node_trace {
+            self.sched
+                .set_node_reclaim_hint(node_id, nt.next_down_after(node_id, now));
+        }
 
         // Start gate (§6.2): hold dispatch until 95% of the pool joined.
         // "The pool" is what the factory will actually provide: the trace
@@ -429,6 +492,39 @@ impl SimDriver {
         if self.started_at.is_some() {
             self.dispatch(self.engine.now());
         }
+    }
+
+    /// Node-trace reclamation: the primary workload takes the node back
+    /// NOW, evicting any worker on it (immediately — §7: no grace
+    /// period). The node's disk cache survives in the scheduler's
+    /// directory for the eventual rejoin. Losing a worker may make
+    /// previously-declined offered nodes worth taking again, so the
+    /// factory gets another look at the pool.
+    fn on_node_reclaimed(&mut self, node: crate::cluster::NodeId) {
+        self.down_nodes.insert(node);
+        self.cluster.force_reclaim(node);
+        if let Some(w) = self.sched.worker_on_node(node) {
+            self.on_worker_evict(w);
+        }
+        self.pump_offered_nodes();
+    }
+
+    /// Node-trace rejoin: the node is offered again; the factory decides
+    /// whether a fresh pilot job is worth submitting (it declines when
+    /// the remaining backlog no longer needs more workers).
+    fn on_node_rejoined(&mut self, node: crate::cluster::NodeId) {
+        self.down_nodes.remove(&node);
+        self.cluster.force_offer(node);
+        self.pump_offered_nodes();
+    }
+
+    /// Offer every idle (offered, workerless) node to the factory — the
+    /// same reconsideration `on_trace_step` performs, reused by the
+    /// node-churn events so a declined node is not lost forever when a
+    /// later reclamation shrinks the pool below the backlog again.
+    fn pump_offered_nodes(&mut self) {
+        let offered = self.cluster.offered_nodes();
+        self.submit_offers(&offered);
     }
 
     fn on_phase_complete(
@@ -506,6 +602,8 @@ impl SimDriver {
     // ------------------------------------------------------------ helpers
 
     fn dispatch(&mut self, now: f64) {
+        // Refresh the lifetime arithmetic before the policy looks.
+        self.sched.set_clock_hint(now);
         let dispatches: Vec<Dispatch> = self.sched.try_dispatch();
         for d in dispatches {
             let first = d.phases[0];
@@ -722,9 +820,12 @@ mod tests {
 
     #[test]
     fn every_placement_policy_completes_the_mixed_workload() {
-        for placement in
-            [PolicyKind::Greedy, PolicyKind::FairShare, PolicyKind::Prefetch]
-        {
+        for placement in [
+            PolicyKind::Greedy,
+            PolicyKind::FairShare,
+            PolicyKind::Prefetch,
+            PolicyKind::RiskAware,
+        ] {
             let mut cfg = two_app_cfg(1_000);
             cfg.placement = placement;
             cfg.interleave_apps = false;
@@ -763,6 +864,53 @@ mod tests {
             let (a, b) = (mk(), mk());
             assert_eq!(a.summary.exec_time_s, b.summary.exec_time_s);
         }
+    }
+
+    fn churn_cfg(placement: PolicyKind) -> SimConfig {
+        use crate::cluster::NodeAvailabilityTrace;
+        use crate::util::Rng;
+        let mut cfg = small_cfg(ContextPolicy::Pervasive, 50);
+        cfg.total_inferences = 10_000;
+        cfg.placement = placement;
+        let nodes: Vec<u32> = (0..20).collect();
+        cfg.node_trace = Some(NodeAvailabilityTrace::storm(
+            &nodes,
+            120.0,
+            3,
+            40.0,
+            60.0,
+            4,
+            &mut Rng::new(9),
+        ));
+        cfg
+    }
+
+    /// A reclamation storm evicts workers mid-run, rejoining nodes
+    /// warm-start from their node-resident disk caches, and the run
+    /// still completes every inference.
+    #[test]
+    fn node_trace_storm_completes_with_warm_restarts() {
+        let out = SimDriver::new(churn_cfg(PolicyKind::Greedy)).run();
+        assert_eq!(out.summary.completed_inferences, 10_000);
+        assert!(out.summary.evictions > 0, "storm must evict someone");
+        assert!(
+            !out.warm_started_workers.is_empty(),
+            "rejoined nodes must warm-start from disk"
+        );
+        assert!(out.cache.ctx(0).warm_restored > 0);
+    }
+
+    #[test]
+    fn node_trace_storm_is_deterministic() {
+        let a = SimDriver::new(churn_cfg(PolicyKind::RiskAware)).run();
+        let b = SimDriver::new(churn_cfg(PolicyKind::RiskAware)).run();
+        assert_eq!(a.summary.exec_time_s, b.summary.exec_time_s);
+        assert_eq!(a.warm_started_workers, b.warm_started_workers);
+        assert_eq!(
+            a.cache.ctx(0).staged_bytes,
+            b.cache.ctx(0).staged_bytes
+        );
+        assert_eq!(a.summary.completed_inferences, 10_000);
     }
 
     #[test]

@@ -12,6 +12,22 @@
 //! (a half-evicted context is worthless — the next task would re-stage
 //! the missing half anyway), and a context needed by the worker's
 //! in-flight task is pinned and never evicted.
+//!
+//! **Two tiers.** A worker's context state splits along what survives a
+//! cluster reclamation:
+//!
+//! * the **volatile tier** — the materialized [`LibraryState`] (model in
+//!   GPU memory, the running library process). Dies with the worker, no
+//!   exceptions.
+//! * the **disk tier** — the staged component files in `cache`. These
+//!   live on the *node's* scratch disk, not in the worker process, so a
+//!   reclamation only orphans them: the scheduler snapshots them into a
+//!   [`super::nodecache::NodeCacheDirectory`] keyed by node id at
+//!   eviction, and a worker rejoining the same node warm-starts from the
+//!   snapshot instead of re-staging gigabytes (paper §7 future work).
+//!
+//! Each cached context carries the recipe `version` it was staged at, so
+//! a warm start can refuse entries the registry has since superseded.
 
 use std::collections::HashMap;
 
@@ -41,7 +57,13 @@ pub struct Worker {
     cache_capacity: u64,
     /// Last-use stamp per context with cached bytes (LRU bookkeeping).
     lru: HashMap<ContextId, u64>,
+    /// Recipe version each cached context was staged at (disk-tier
+    /// provenance; consulted when persisting to the node directory).
+    ctx_versions: HashMap<ContextId, u32>,
     clock: u64,
+    /// Components restored from the node-resident disk cache at join
+    /// time (0 = this worker cold-started).
+    pub warm_start_components: u64,
     /// The (single) library process.
     pub library: LibraryState,
     /// Currently running task, if any (1-to-1 task:worker policy).
@@ -67,7 +89,9 @@ impl Worker {
             cache_used: 0,
             cache_capacity,
             lru: HashMap::new(),
+            ctx_versions: HashMap::new(),
             clock: 0,
+            warm_start_components: 0,
             library: LibraryState::Absent,
             running: None,
             active_uploads: 0,
@@ -119,6 +143,40 @@ impl Worker {
 
     pub fn cache_capacity(&self) -> u64 {
         self.cache_capacity
+    }
+
+    /// Snapshot iterator over the disk tier: every cached component with
+    /// its byte size (the node-cache directory persists exactly this).
+    pub fn cache_contents(
+        &self,
+    ) -> impl Iterator<Item = ((ContextId, ComponentKind), u64)> + '_ {
+        self.cache.iter().map(|(k, b)| (*k, *b))
+    }
+
+    /// Recipe version `ctx`'s cached components were staged at (0 when
+    /// nothing recorded — pre-versioning entries).
+    pub fn cached_version(&self, ctx: ContextId) -> u32 {
+        self.ctx_versions.get(&ctx).copied().unwrap_or(0)
+    }
+
+    /// Record the recipe version `ctx`'s cached bytes belong to.
+    pub fn set_cached_version(&mut self, ctx: ContextId, version: u32) {
+        self.ctx_versions.insert(ctx, version);
+    }
+
+    /// Did this worker warm-start from a node-resident cache at join?
+    pub fn warm_started(&self) -> bool {
+        self.warm_start_components > 0
+    }
+
+    /// Invalidate every cached component of `ctx` (registry version
+    /// bump: the bytes on disk no longer match the recipe). Returns the
+    /// bytes freed. Not counted as an LRU eviction — this is
+    /// invalidation, not capacity pressure.
+    pub fn drop_context(&mut self, ctx: ContextId) -> u64 {
+        let before = self.cache_used;
+        self.evict_context(ctx);
+        before - self.cache_used
     }
 
     /// Mark `ctx` as recently used (dispatch of one of its tasks).
@@ -182,6 +240,7 @@ impl Worker {
         self.cache.retain(|(c, _), _| *c != ctx);
         self.cache_used -= freed;
         self.lru.remove(&ctx);
+        self.ctx_versions.remove(&ctx);
     }
 
     /// Contexts currently holding cached bytes, LRU-first (for tests and
@@ -198,6 +257,7 @@ impl Worker {
     pub fn clear_cache(&mut self) {
         self.cache.clear();
         self.lru.clear();
+        self.ctx_versions.clear();
         self.cache_used = 0;
     }
 
@@ -314,6 +374,37 @@ mod tests {
             w.insert_cached(0, ComponentKind::ModelWeights, 11, None);
         assert!(!ok && evicted.is_empty());
         assert_eq!(w.cached_bytes_total(), 0);
+    }
+
+    #[test]
+    fn versions_tracked_and_dropped_with_context() {
+        let mut w = worker();
+        w.insert_cached(3, ComponentKind::ModelWeights, 100, None);
+        assert_eq!(w.cached_version(3), 0, "unrecorded version reads 0");
+        w.set_cached_version(3, 2);
+        assert_eq!(w.cached_version(3), 2);
+        let freed = w.drop_context(3);
+        assert_eq!(freed, 100);
+        assert!(!w.has_cached(3, ComponentKind::ModelWeights));
+        assert_eq!(w.cached_version(3), 0, "version dies with the context");
+        assert_eq!(w.drop_context(3), 0, "double drop is a no-op");
+    }
+
+    #[test]
+    fn cache_contents_snapshots_the_disk_tier() {
+        let mut w = worker();
+        w.insert_cached(0, ComponentKind::DepsPackage, 10, None);
+        w.insert_cached(1, ComponentKind::ModelWeights, 20, None);
+        let mut snap: Vec<_> = w.cache_contents().collect();
+        snap.sort();
+        assert_eq!(
+            snap,
+            vec![
+                ((0, ComponentKind::DepsPackage), 10),
+                ((1, ComponentKind::ModelWeights), 20)
+            ]
+        );
+        assert!(!w.warm_started());
     }
 
     #[test]

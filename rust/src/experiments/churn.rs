@@ -1,0 +1,379 @@
+//! Churn experiment: **greedy vs risk-aware placement under a
+//! reclamation storm**, plus the node-resident warm-restart payoff.
+//!
+//! Two scenarios, both on the 20-node pool with a
+//! [`NodeAvailabilityTrace`] storm layered over a constant load trace:
+//!
+//! * **bytes** — the two-tenant mixed workload (7.4 GB and 15 GB
+//!   contexts) with the storm timed to hit *during* initial context
+//!   staging. Greedy happily stages 15 GB onto a node the trace says
+//!   dies in ten seconds; the transfer is wasted and paid again after
+//!   the requeue. `RiskAware` reads each node's expected remaining
+//!   lifetime and routes those tasks to safer workers, so it must
+//!   re-transfer strictly fewer bytes (`CacheStats::staged_bytes`).
+//! * **warm** — a single-tenant run with the storm after staging
+//!   settles: every reclaimed node's disk cache survives in the
+//!   `NodeCacheDirectory`, so a rejoining worker's first task pays only
+//!   materialization while a cold worker's first task paid staging too.
+//!   The report compares mean first-task context seconds of
+//!   warm-started vs cold workers, and the per-context
+//!   `warm_restart_hit_rate` lands in the cache report.
+//!
+//! `pcm experiment churn` runs both and — at default scale — enforces
+//! both orderings, exiting non-zero on violation; the `churn-smoke` CI
+//! job is exactly that invocation.
+
+use std::collections::{BTreeMap, HashSet};
+use std::fmt::Write as _;
+
+use crate::cluster::node::pool_20_mixed;
+use crate::cluster::{LoadTrace, NodeAvailabilityTrace};
+use crate::coordinator::{
+    AppSpec, ContextPolicy, ContextRecipe, PolicyKind, SimConfig, SimDriver,
+    SimOutcome, WorkerId,
+};
+use crate::util::{fmt_bytes, Rng};
+
+/// The placement axis of the bytes comparison.
+pub const CHURN_KINDS: [PolicyKind; 2] =
+    [PolicyKind::Greedy, PolicyKind::RiskAware];
+
+/// Default per-tenant workload of the bytes scenario.
+pub const DEFAULT_INFERENCES_PER_APP: u64 = 4_000;
+
+/// Default workload of the warm-restart scenario.
+pub const DEFAULT_WARM_INFERENCES: u64 = 15_000;
+
+/// Storm for the bytes scenario: rolling waves that reclaim every node
+/// once while initial staging is still in flight (gate opens ≈ 18 s,
+/// contended 15 GB staging runs into the 40s–70s range).
+fn staging_storm(seed: u64) -> NodeAvailabilityTrace {
+    let nodes: Vec<u32> = (0..20).collect();
+    NodeAvailabilityTrace::storm(
+        &nodes,
+        25.0,
+        4,
+        15.0,
+        60.0,
+        5,
+        &mut Rng::new(seed ^ 0xC0FF_EE),
+    )
+}
+
+/// Storm for the warm-restart scenario: two waves well after staging
+/// has settled, so reclaimed nodes persist *complete* contexts and
+/// rejoin warm while plenty of backlog remains.
+fn settled_storm(seed: u64) -> NodeAvailabilityTrace {
+    let nodes: Vec<u32> = (0..20).collect();
+    NodeAvailabilityTrace::storm(
+        &nodes,
+        150.0,
+        2,
+        40.0,
+        60.0,
+        5,
+        &mut Rng::new(seed ^ 0x5707_11),
+    )
+}
+
+/// Two-tenant configuration for one placement policy under the
+/// staging-time storm (pervasive management; the default 70 GB worker
+/// cache fits both contexts, so every byte difference is churn waste,
+/// not LRU thrash).
+pub fn bytes_config(
+    kind: PolicyKind,
+    seed: u64,
+    inferences_per_app: u64,
+) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        format!("churn_{}", kind.as_str()),
+        ContextPolicy::Pervasive,
+        10,
+        pool_20_mixed(),
+        LoadTrace::constant(20),
+        seed,
+    );
+    cfg.apps = vec![
+        AppSpec {
+            recipe: ContextRecipe::smollm2_pff(0),
+            total_inferences: inferences_per_app,
+            batch_size: 10,
+        },
+        AppSpec {
+            recipe: ContextRecipe::custom(
+                1,
+                "pff-large",
+                5_000_000_000,
+                10_000_000_000,
+            ),
+            total_inferences: inferences_per_app,
+            batch_size: 10,
+        },
+    ];
+    cfg.placement = kind;
+    cfg.node_trace = Some(staging_storm(seed));
+    cfg
+}
+
+/// Single-tenant configuration under the settled storm (greedy
+/// placement — warm restarts are a mechanism property, not a policy
+/// one).
+pub fn warm_config(seed: u64, total_inferences: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        "churn_warmstart",
+        ContextPolicy::Pervasive,
+        50,
+        pool_20_mixed(),
+        LoadTrace::constant(20),
+        seed,
+    );
+    cfg.total_inferences = total_inferences;
+    cfg.node_trace = Some(settled_storm(seed));
+    cfg
+}
+
+/// One policy's result under the staging-time storm.
+#[derive(Debug, Clone)]
+pub struct ChurnResult {
+    pub id: String,
+    pub kind: PolicyKind,
+    pub outcome: SimOutcome,
+}
+
+impl ChurnResult {
+    /// Total bytes committed to stage transfers (the waste metric).
+    pub fn staged_bytes(&self) -> u64 {
+        self.outcome.cache.totals().staged_bytes
+    }
+}
+
+/// Everything `pcm experiment churn` reports on.
+#[derive(Debug)]
+pub struct ChurnReport {
+    pub bytes: Vec<ChurnResult>,
+    pub warm: SimOutcome,
+}
+
+/// First-task context seconds per worker, split warm-started vs cold.
+/// "First task" is the earliest-dispatched record of each worker; warm
+/// workers are those the driver saw restore from a node cache at join.
+pub fn first_task_context_split(
+    outcome: &SimOutcome,
+) -> (Vec<f64>, Vec<f64>) {
+    let warm_ids: HashSet<WorkerId> =
+        outcome.warm_started_workers.iter().copied().collect();
+    let mut first: BTreeMap<WorkerId, (f64, f64)> = BTreeMap::new();
+    for r in &outcome.records {
+        let e = first
+            .entry(r.worker)
+            .or_insert((r.dispatched_at, r.context_s));
+        if r.dispatched_at < e.0 {
+            *e = (r.dispatched_at, r.context_s);
+        }
+    }
+    let mut warm = Vec::new();
+    let mut cold = Vec::new();
+    for (wid, (_, ctx_s)) in first {
+        if warm_ids.contains(&wid) {
+            warm.push(ctx_s);
+        } else {
+            cold.push(ctx_s);
+        }
+    }
+    (warm, cold)
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Run both scenarios.
+pub fn run_churn(
+    seed: u64,
+    inferences_per_app: u64,
+    warm_inferences: u64,
+) -> ChurnReport {
+    let bytes = CHURN_KINDS
+        .iter()
+        .map(|kind| ChurnResult {
+            id: format!("churn_{}", kind.as_str()),
+            kind: *kind,
+            outcome: SimDriver::new(bytes_config(
+                *kind,
+                seed,
+                inferences_per_app,
+            ))
+            .run(),
+        })
+        .collect();
+    let warm = SimDriver::new(warm_config(seed, warm_inferences)).run();
+    ChurnReport { bytes, warm }
+}
+
+/// Render the comparison report.
+pub fn report(r: &ChurnReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "reclamation storm over the 20-node pool (waves hitting initial \
+         staging), two tenants, pervasive context management:"
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>11} {:>14} {:>10} {:>12} {:>10}",
+        "exp", "exec_time_s", "staged_bytes", "evictions", "evicted_inf",
+        "warm_rest"
+    );
+    for res in &r.bytes {
+        let s = &res.outcome.summary;
+        let t = res.outcome.cache.totals();
+        let _ = writeln!(
+            out,
+            "{:<16} {:>11.1} {:>14} {:>10} {:>12} {:>10}",
+            res.id,
+            s.exec_time_s,
+            fmt_bytes(t.staged_bytes),
+            s.evictions,
+            s.evicted_inferences,
+            t.warm_restored
+        );
+    }
+    if let (Some(g), Some(ra)) = (
+        r.bytes.iter().find(|x| x.kind == PolicyKind::Greedy),
+        r.bytes.iter().find(|x| x.kind == PolicyKind::RiskAware),
+    ) {
+        let (gb, rb) = (g.staged_bytes(), ra.staged_bytes());
+        let _ = writeln!(
+            out,
+            "\nbytes re-transferred: greedy {} vs riskaware {} \
+             ({} saved, {:.1}%)",
+            fmt_bytes(gb),
+            fmt_bytes(rb),
+            fmt_bytes(gb.saturating_sub(rb)),
+            100.0 * (gb.saturating_sub(rb)) as f64 / gb.max(1) as f64
+        );
+    }
+
+    let (warm, cold) = first_task_context_split(&r.warm);
+    let _ = writeln!(
+        out,
+        "\nwarm restart (single tenant, storm after staging settles): \
+         {} rejoined workers warm-started from node disk",
+        warm.len()
+    );
+    let _ = writeln!(
+        out,
+        "first-task context seconds: warm-started mean {:.1}s vs cold \
+         mean {:.1}s",
+        mean(&warm),
+        mean(&cold)
+    );
+    let c = r.warm.cache.ctx(0);
+    let _ = writeln!(
+        out,
+        "warm-restart hit rate: {:.3} ({} components restored, {} \
+         staged misses, {} re-transferred)",
+        c.warm_restart_hit_rate(),
+        c.warm_restored,
+        c.misses,
+        fmt_bytes(c.staged_bytes)
+    );
+    out
+}
+
+/// The acceptance gates the `churn-smoke` CI job (and the integration
+/// tests) enforce: risk-aware re-transfers strictly fewer bytes than
+/// greedy, and a rejoined node's first warm-start task beats a cold
+/// node's first task on context acquisition.
+pub fn verify(r: &ChurnReport) -> crate::Result<()> {
+    let g = r
+        .bytes
+        .iter()
+        .find(|x| x.kind == PolicyKind::Greedy)
+        .ok_or_else(|| anyhow::anyhow!("missing greedy run"))?;
+    let ra = r
+        .bytes
+        .iter()
+        .find(|x| x.kind == PolicyKind::RiskAware)
+        .ok_or_else(|| anyhow::anyhow!("missing riskaware run"))?;
+    anyhow::ensure!(
+        ra.staged_bytes() < g.staged_bytes(),
+        "risk-aware must re-transfer fewer bytes: riskaware {} !< greedy {}",
+        ra.staged_bytes(),
+        g.staged_bytes()
+    );
+    for res in &r.bytes {
+        anyhow::ensure!(
+            res.outcome.summary.evictions > 0,
+            "{}: the storm must actually evict workers",
+            res.id
+        );
+    }
+    let (warm, cold) = first_task_context_split(&r.warm);
+    anyhow::ensure!(
+        !warm.is_empty(),
+        "no worker warm-started — storm missed the run"
+    );
+    anyhow::ensure!(!cold.is_empty(), "no cold worker completed a task");
+    anyhow::ensure!(
+        mean(&warm) < mean(&cold),
+        "warm-start first task must beat cold: warm {:.2}s !< cold {:.2}s",
+        mean(&warm),
+        mean(&cold)
+    );
+    anyhow::ensure!(
+        r.warm.cache.ctx(0).warm_restored > 0,
+        "warm restarts must be counted in CacheStats"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEED: u64 = 42;
+
+    #[test]
+    fn churn_runs_complete_and_pass_the_gates() {
+        let r = run_churn(
+            SEED,
+            DEFAULT_INFERENCES_PER_APP,
+            DEFAULT_WARM_INFERENCES,
+        );
+        for res in &r.bytes {
+            assert_eq!(
+                res.outcome.summary.completed_inferences,
+                2 * DEFAULT_INFERENCES_PER_APP,
+                "{} finishes both tenants",
+                res.id
+            );
+        }
+        assert_eq!(
+            r.warm.summary.completed_inferences,
+            DEFAULT_WARM_INFERENCES
+        );
+        // The acceptance criteria of the churn subsystem, at the exact
+        // scale the churn-smoke CI job runs.
+        verify(&r).unwrap();
+    }
+
+    #[test]
+    fn report_renders_both_scenarios() {
+        let r = run_churn(SEED, 1_000, 5_000);
+        let text = report(&r);
+        for needle in [
+            "churn_greedy",
+            "churn_riskaware",
+            "staged_bytes",
+            "bytes re-transferred",
+            "warm-restart hit rate",
+        ] {
+            assert!(text.contains(needle), "report missing {needle}:\n{text}");
+        }
+    }
+}

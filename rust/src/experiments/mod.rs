@@ -9,11 +9,15 @@
 //! * [`policies`] — placement-policy comparison (greedy vs fair-share
 //!   vs prefetch) on a sequential two-tenant workload, with per-context
 //!   makespan and first-completion (starvation) metrics.
+//! * [`churn`] — greedy vs risk-aware placement under a reclamation
+//!   storm (bytes re-transferred, makespan) plus the node-resident
+//!   warm-restart payoff (first-task context seconds, warm hit rate).
 //! * [`runner`] — executes specs through the simulated driver.
 //! * [`figures`] — renders each figure/table as text + CSV into
 //!   `results/` (the artifacts EXPERIMENTS.md references).
 
 pub mod ablations;
+pub mod churn;
 pub mod figures;
 pub mod mixed;
 pub mod policies;

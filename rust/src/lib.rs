@@ -99,6 +99,73 @@
 //! )
 //! .with_policy(Box::new(Fifo));
 //! ```
+//!
+//! ## Surviving reclamation
+//!
+//! Opportunistic workers die without warning, but the gigabytes they
+//! staged live on the *node's* scratch disk, not in the worker process.
+//! The churn subsystem exploits that (the paper's §7 future-work
+//! direction):
+//!
+//! * A worker's context state is split into a **volatile tier** (the
+//!   materialized library/GPU state — always lost on eviction) and a
+//!   **disk tier** (staged component files). On eviction the scheduler
+//!   snapshots the disk tier into a
+//!   [`coordinator::NodeCacheDirectory`] keyed by node id; a worker
+//!   rejoining that node **warm-starts**: matching-version components
+//!   replay straight into its cache, so its first task pays only
+//!   materialization instead of re-pulling 15 GB. Version-bumped
+//!   (stale) snapshots are dropped, never served. Live mode lays the
+//!   groundwork: workers stage into *node-keyed* cache directories
+//!   that are left on disk when a worker thread exits
+//!   (`live::LiveConfig::persist_node_caches`), so a future
+//!   restart-worker path finds the previous incarnation's files —
+//!   the live driver does not yet restart workers mid-run.
+//! * Churn itself is first-class: a
+//!   [`cluster::NodeAvailabilityTrace`] (synthetic storm generator or
+//!   recorded JSON) injects per-node `NodeReclaimed`/`NodeRejoined`
+//!   events through the discrete-event driver, and doubles as the
+//!   per-node expected-remaining-lifetime forecast.
+//! * The [`coordinator::RiskAware`] placement policy reads that
+//!   forecast ([`coordinator::SchedulerView::expected_lifetime_s`]) and
+//!   refuses to stage a context onto a node that will not survive the
+//!   task — compare it against greedy under a reclamation storm with
+//!   `pcm experiment churn` (bytes re-transferred, evicted work, and
+//!   the warm-restart hit rate in `CacheStats`).
+//!
+//! ```no_run
+//! use pcm::cluster::{LoadTrace, NodeAvailabilityTrace};
+//! use pcm::cluster::node::pool_20_mixed;
+//! use pcm::coordinator::{ContextPolicy, PolicyKind, SimConfig, SimDriver};
+//! use pcm::util::Rng;
+//!
+//! // A reclamation storm over a constant 20-node pool, placed risk-aware.
+//! let mut cfg = SimConfig::new(
+//!     "churn-demo",
+//!     ContextPolicy::Pervasive,
+//!     50,
+//!     pool_20_mixed(),
+//!     LoadTrace::constant(20),
+//!     42,
+//! );
+//! cfg.placement = PolicyKind::RiskAware;
+//! cfg.node_trace = Some(NodeAvailabilityTrace::storm(
+//!     &(0..20).collect::<Vec<_>>(),
+//!     120.0, // first wave at t=120 s
+//!     3,     // three waves
+//!     40.0,  // one every 40 s
+//!     60.0,  // each node down ~60 s
+//!     4,     // four nodes per wave
+//!     &mut Rng::new(7),
+//! ));
+//! let out = SimDriver::new(cfg).run();
+//! println!(
+//!     "evictions={} warm_restored={} staged={}B",
+//!     out.summary.evictions,
+//!     out.cache.ctx(0).warm_restored,
+//!     out.cache.ctx(0).staged_bytes,
+//! );
+//! ```
 
 pub mod app;
 pub mod cluster;

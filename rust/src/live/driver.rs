@@ -39,6 +39,13 @@ pub struct LiveConfig {
     /// Placement (dispatch) policy — the same pluggable decision layer
     /// the sim driver uses (`coordinator::policy`).
     pub placement: PolicyKind,
+    /// Keep each node's cache directory on disk when its worker thread
+    /// exits (the live groundwork for the sim's `NodeCacheDirectory`:
+    /// dirs are keyed by node, so a future restart-worker path finds
+    /// the previous incarnation's staged files — today's driver spawns
+    /// each worker once, and the run's temp root is still removed at
+    /// the very end of the run).
+    pub persist_node_caches: bool,
 }
 
 impl Default for LiveConfig {
@@ -52,6 +59,7 @@ impl Default for LiveConfig {
             seed: 0,
             cache_capacity_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
             placement: PolicyKind::Greedy,
+            persist_node_caches: true,
         }
     }
 }
@@ -136,9 +144,12 @@ impl LiveDriver {
             let workload = Arc::clone(&self.workload);
             let root = cache_root.clone();
             let out = result_tx.clone();
+            let node_id = i as u32;
+            let persist = self.cfg.persist_node_caches;
             joins.push(std::thread::spawn(move || {
                 let w = LiveWorker::new(
-                    wid, speed, manifest, profile, workload, &root,
+                    wid, node_id, speed, manifest, profile, workload, &root,
+                    persist,
                 );
                 w.run(rx, out)
             }));
@@ -272,5 +283,6 @@ mod tests {
         assert_eq!(c.profile, "tiny");
         assert!(c.total_inferences % c.batch_size == 0);
         assert_eq!(c.placement, PolicyKind::Greedy);
+        assert!(c.persist_node_caches, "node caches survive by default");
     }
 }

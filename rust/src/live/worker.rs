@@ -55,20 +55,29 @@ pub struct LiveWorker {
     profile: String,
     workload: Arc<InferenceWorkload>,
     cache_dir: PathBuf,
+    /// Keep the cache dir on disk when this worker exits, so the next
+    /// worker incarnation on the same node warm-starts from it (the
+    /// live-mode mirror of the sim's node-resident cache directory).
+    persist_cache: bool,
     staged_weights: Option<WeightStore>,
     context: Option<ModelContext>,
 }
 
 impl LiveWorker {
+    #[allow(clippy::too_many_arguments)] // 1:1 with the worker CLI flags
     pub fn new(
         id: WorkerId,
+        node: u32,
         speed: f64,
         manifest: Arc<Manifest>,
         profile: String,
         workload: Arc<InferenceWorkload>,
         cache_root: &std::path::Path,
+        persist_cache: bool,
     ) -> Self {
-        let cache_dir = cache_root.join(format!("worker-{id}"));
+        // Keyed by NODE, not worker: a worker restarted on the same node
+        // finds the previous incarnation's staged files waiting.
+        let cache_dir = cache_root.join(format!("node-{node}"));
         Self {
             id,
             speed,
@@ -76,9 +85,15 @@ impl LiveWorker {
             profile,
             workload,
             cache_dir,
+            persist_cache,
             staged_weights: None,
             context: None,
         }
+    }
+
+    /// The node-keyed cache directory this worker stages into.
+    pub fn cache_dir(&self) -> &std::path::Path {
+        &self.cache_dir
     }
 
     /// Worker main loop: run orders until the channel closes.
@@ -92,8 +107,12 @@ impl LiveWorker {
                 });
             }
         }
-        // Cleanup the cache dir on exit.
-        let _ = std::fs::remove_dir_all(&self.cache_dir);
+        // The worker process dies; whether its staged files survive on
+        // the node is the persistence policy's call. The volatile tier
+        // (the materialized context) is dropped with `self` regardless.
+        if !self.persist_cache {
+            let _ = std::fs::remove_dir_all(&self.cache_dir);
+        }
     }
 
     fn throttle(&self, real_elapsed_s: f64) {

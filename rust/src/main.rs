@@ -3,9 +3,9 @@
 //! Subcommands (hand-rolled parser; the offline build has no clap):
 //!
 //! ```text
-//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|headline|all>
+//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|headline|all>
 //!     [--seed N] [--scale F] [--results DIR]
-//!     [--policy greedy|fairshare|prefetch]
+//!     [--policy greedy|fairshare|prefetch|riskaware]
 //! pcm run <pv-id> [--seed N] [--scale F]
 //! pcm serve [--profile tiny|small] [--policy pervasive|partial|none]
 //!     [--placement greedy|fairshare|prefetch]
@@ -63,7 +63,7 @@ impl<'a> Flags<'a> {
             Some(s) => PolicyKind::parse(s).ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown placement policy {s:?} \
-                     (expected greedy|fairshare|prefetch)"
+                     (expected greedy|fairshare|prefetch|riskaware)"
                 )
             }),
         }
@@ -108,18 +108,21 @@ const HELP: &str = "\
 pcm — pervasive context management for throughput-oriented LLM inference
 
 USAGE:
-  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|headline|all>
+  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|headline|all>
       [--seed N] [--scale F] [--results DIR]
-      [--policy|--placement greedy|fairshare|prefetch]  (mixed: placement)
+      [--policy|--placement greedy|fairshare|prefetch|riskaware]
       (mixed: two applications with distinct contexts on one pool,
        per-context cache hit/miss/evict counters, policies pv1/pv2/pv4)
       (policies: greedy vs fairshare vs prefetch placement on the
        sequential two-tenant workload — per-context makespan and
        first-completion/starvation metrics)
+      (churn: greedy vs riskaware under a reclamation storm — bytes
+       re-transferred, evicted work, node-resident warm restarts; at
+       scale 1.0 the acceptance gates are enforced, exit 1 on failure)
   pcm run <pv-id>        run one experiment (e.g. pv4_100)
   pcm serve              live PJRT serving demo
       [--profile tiny|small] [--policy pervasive|partial|none]
-      [--placement greedy|fairshare|prefetch]
+      [--placement greedy|fairshare|prefetch|riskaware]
       [--workers N] [--batch B] [--inferences N]
   pcm tune               adaptive batch-size search (Challenge #6)
   pcm ablate             design-choice ablations (fan-out, eviction
@@ -291,6 +294,39 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
             print!("{text}");
             figures::write_result_file(&results_dir, "policies.txt", &text)?;
             eprintln!("\nreport written under {results_dir}/");
+        }
+        "churn" => {
+            use pcm::experiments::churn;
+            let per_app = ((churn::DEFAULT_INFERENCES_PER_APP as f64 * scale)
+                .round() as u64)
+                .max(100);
+            let warm = ((churn::DEFAULT_WARM_INFERENCES as f64 * scale)
+                .round() as u64)
+                .max(500);
+            eprintln!(
+                "running churn experiment (greedy vs riskaware under a \
+                 reclamation storm; {per_app} inferences/app + {warm} \
+                 warm-restart inferences, seed={seed})…"
+            );
+            let r = churn::run_churn(seed, per_app, warm);
+            let text = churn::report(&r);
+            print!("{text}");
+            figures::write_result_file(&results_dir, "churn.txt", &text)?;
+            eprintln!("\nreport written under {results_dir}/");
+            if (scale - 1.0).abs() < 1e-9 {
+                // The churn-smoke CI gate: fail the process loudly when
+                // risk-aware placement stops beating greedy on bytes or
+                // warm restarts stop beating cold starts.
+                churn::verify(&r)?;
+                eprintln!(
+                    "churn gates passed: riskaware re-transfers fewer \
+                     bytes than greedy; warm restarts beat cold starts"
+                );
+            } else {
+                eprintln!(
+                    "(scale != 1.0 — churn acceptance gates not enforced)"
+                );
+            }
         }
         "headline" => {
             let results = run_specs_scaled(specs::figure4_specs(), seed, scale);

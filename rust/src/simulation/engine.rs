@@ -56,6 +56,19 @@ impl SimEngine {
         self.heap.push(Event { time: time.max(self.now), seq, kind });
     }
 
+    /// Schedule a batch of absolute-time events in iteration order (the
+    /// driver uses this to inject a whole node-availability trace before
+    /// the run starts; same-instant events keep their relative order via
+    /// the sequence number).
+    pub fn schedule_all(
+        &mut self,
+        events: impl IntoIterator<Item = (SimTime, EventKind)>,
+    ) {
+        for (time, kind) in events {
+            self.schedule_at(time, kind);
+        }
+    }
+
     /// Pop the next event and advance the clock to it.
     pub fn pop(&mut self) -> Option<Event> {
         let ev = self.heap.pop()?;
@@ -129,5 +142,28 @@ mod tests {
     fn empty_pop_is_none() {
         let mut e = SimEngine::new();
         assert!(e.pop().is_none());
+    }
+
+    #[test]
+    fn schedule_all_preserves_order() {
+        let mut e = SimEngine::new();
+        e.schedule_all([
+            (5.0, EventKind::NodeReclaimed { node: 0 }),
+            (5.0, EventKind::NodeRejoined { node: 1 }),
+            (2.0, EventKind::NodeReclaimed { node: 2 }),
+        ]);
+        assert_eq!(e.pending(), 3);
+        assert!(matches!(
+            e.pop().unwrap().kind,
+            EventKind::NodeReclaimed { node: 2 }
+        ));
+        assert!(matches!(
+            e.pop().unwrap().kind,
+            EventKind::NodeReclaimed { node: 0 }
+        ));
+        assert!(matches!(
+            e.pop().unwrap().kind,
+            EventKind::NodeRejoined { node: 1 }
+        ));
     }
 }

@@ -28,6 +28,13 @@ pub enum EventKind {
     MetricsTick,
     /// Cluster load trace step (drives availability up or down).
     TraceStep { step: usize },
+    /// A node-availability trace reclaims this specific node NOW: the
+    /// worker on it (if any) is evicted immediately, but the node's disk
+    /// cache survives for a later rejoin (paper §7 future work).
+    NodeReclaimed { node: NodeId },
+    /// The reclaimed node is back: re-offer it so the factory can start
+    /// a fresh worker that warm-starts from the node-resident cache.
+    NodeRejoined { node: NodeId },
 }
 
 /// A scheduled event.

@@ -1,0 +1,141 @@
+//! Churn-subsystem integration: recorded reclamation traces replay
+//! deterministically through the full sim driver, and the node-resident
+//! cache directory actually changes what a rejoined worker pays.
+
+use pcm::cluster::node::pool_20_mixed;
+use pcm::cluster::{LoadTrace, NodeAvailabilityTrace};
+use pcm::coordinator::{ContextPolicy, PolicyKind, SimConfig, SimDriver};
+use pcm::experiments::churn;
+use pcm::util::Rng;
+
+/// A churn config over an explicit (possibly JSON-loaded) node trace.
+fn cfg_with_trace(trace: NodeAvailabilityTrace, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        "churn_replay",
+        ContextPolicy::Pervasive,
+        50,
+        pool_20_mixed(),
+        LoadTrace::constant(20),
+        seed,
+    );
+    cfg.total_inferences = 8_000;
+    cfg.node_trace = Some(trace);
+    cfg
+}
+
+/// Record a storm to a JSON file on disk, load it back, and drive two
+/// full simulations from the loaded copy: the replay must be lossless
+/// and the runs bit-identical.
+#[test]
+fn recorded_trace_replays_deterministically() {
+    let nodes: Vec<u32> = (0..20).collect();
+    let storm = NodeAvailabilityTrace::storm(
+        &nodes,
+        120.0,
+        3,
+        40.0,
+        60.0,
+        4,
+        &mut Rng::new(17),
+    );
+    let path = std::env::temp_dir()
+        .join(format!("pcm-churn-trace-{}.json", std::process::id()));
+    std::fs::write(&path, storm.to_json()).expect("trace written");
+    let loaded = NodeAvailabilityTrace::from_json(
+        &std::fs::read_to_string(&path).expect("trace read"),
+    )
+    .expect("trace parses");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, storm, "disk roundtrip is lossless");
+
+    let a = SimDriver::new(cfg_with_trace(loaded.clone(), 3)).run();
+    let b = SimDriver::new(cfg_with_trace(loaded, 3)).run();
+    assert_eq!(a.summary.completed_inferences, 8_000);
+    assert_eq!(a.summary.exec_time_s, b.summary.exec_time_s);
+    assert_eq!(a.summary.evictions, b.summary.evictions);
+    assert_eq!(a.warm_started_workers, b.warm_started_workers);
+    assert_eq!(
+        a.cache.totals().staged_bytes,
+        b.cache.totals().staged_bytes
+    );
+    assert!(a.summary.evictions > 0, "the storm must bite");
+}
+
+/// The same storm with node-cache warm starts must re-transfer fewer
+/// bytes than a hypothetical cold rejoin — checked indirectly: every
+/// warm-started worker exists in the records and restored components
+/// were never charged as misses.
+#[test]
+fn warm_started_workers_restore_instead_of_restaging() {
+    let mut cfg = cfg_with_trace(
+        NodeAvailabilityTrace::storm(
+            &(0..20).collect::<Vec<u32>>(),
+            140.0,
+            2,
+            50.0,
+            60.0,
+            5,
+            &mut Rng::new(4),
+        ),
+        9,
+    );
+    // Enough backlog that both waves' rejoins still find queued work
+    // (the factory declines rejoins once the tail no longer needs them).
+    cfg.total_inferences = 12_000;
+    let out = SimDriver::new(cfg).run();
+    assert_eq!(out.summary.completed_inferences, 12_000);
+    assert!(
+        !out.warm_started_workers.is_empty(),
+        "rejoins must warm-start"
+    );
+    let c = out.cache.ctx(0);
+    assert!(c.warm_restored > 0);
+    assert!(
+        c.warm_restart_hit_rate() > 0.0,
+        "hit rate reflects restored components: {c:?}"
+    );
+    // Warm-started workers' first tasks must be cheaper on context
+    // acquisition than cold workers' first tasks (the §7 payoff).
+    let (warm, cold) = churn::first_task_context_split(&out);
+    assert!(!warm.is_empty() && !cold.is_empty());
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    assert!(
+        mean(&warm) < mean(&cold),
+        "warm {:.2}s !< cold {:.2}s",
+        mean(&warm),
+        mean(&cold)
+    );
+}
+
+/// Risk-aware placement under the staging-time storm re-transfers
+/// fewer bytes than greedy — the churn-smoke CI assertion, from the
+/// library instead of the CLI.
+#[test]
+fn riskaware_retransfers_fewer_bytes_than_greedy() {
+    let greedy = SimDriver::new(churn::bytes_config(
+        PolicyKind::Greedy,
+        42,
+        churn::DEFAULT_INFERENCES_PER_APP,
+    ))
+    .run();
+    let risk = SimDriver::new(churn::bytes_config(
+        PolicyKind::RiskAware,
+        42,
+        churn::DEFAULT_INFERENCES_PER_APP,
+    ))
+    .run();
+    assert_eq!(
+        greedy.summary.completed_inferences,
+        risk.summary.completed_inferences,
+        "both policies finish the workload"
+    );
+    let (gb, rb) = (
+        greedy.cache.totals().staged_bytes,
+        risk.cache.totals().staged_bytes,
+    );
+    assert!(
+        rb < gb,
+        "riskaware staged {rb} bytes, greedy {gb} — risk awareness must \
+         save transfers"
+    );
+}

@@ -682,6 +682,253 @@ fn prop_fairshare_deficit_bounded_by_one_burst() {
     });
 }
 
+// ------------------------------------------- node-resident disk caches
+
+/// Reclaim/rejoin storm over a small node pool (so node ids are reused
+/// and warm restores actually fire): the node-cache directory's
+/// per-node occupancy never exceeds the disk capacity it was recorded
+/// with, worker caches stay within capacity, and no task is ever lost —
+/// at every step, under every context policy.
+#[test]
+fn prop_disk_tier_occupancy_respects_node_capacity() {
+    forall(50, |rng| {
+        let policy = match rng.below(3) {
+            0 => ContextPolicy::None,
+            1 => ContextPolicy::Partial,
+            _ => ContextPolicy::Pervasive,
+        };
+        let capacity = (8 + rng.below(23) as u64) * 1_000_000_000;
+        let mut sched = Scheduler::with_registry(
+            policy,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "big", 5_000_000_000, 10_000_000_000),
+            ],
+            TransferPlanner::new(1 + rng.below(4) as u32),
+            CostModel::default(),
+            capacity,
+        );
+        let n_tasks = 1 + rng.below(25) as u64;
+        let batch = 1 + rng.below(100) as u64;
+        let tasks: Vec<Task> = (0..n_tasks)
+            .map(|i| Task::new(i, i * batch, batch, rng.below(2) as u32))
+            .collect();
+        sched.submit_tasks(tasks);
+
+        // 4 reusable nodes: joins take a free one, evictions free it.
+        let mut free_nodes: Vec<u32> = vec![0, 1, 2, 3];
+        let mut running: Vec<(u64, u32, Vec<PhaseKind>, usize)> = Vec::new();
+        let mut guard = 0;
+        while !sched.all_done() {
+            guard += 1;
+            assert!(guard < 100_000, "storm did not converge");
+            match rng.below(10) {
+                0 | 1 => {
+                    if !free_nodes.is_empty() {
+                        let pos = rng.below(free_nodes.len());
+                        let node_id = free_nodes.swap_remove(pos);
+                        let gpu = if rng.chance(0.5) {
+                            GpuModel::A10
+                        } else {
+                            GpuModel::TitanXPascal
+                        };
+                        sched.worker_join(
+                            Node { id: node_id, gpu },
+                            guard as f64,
+                        );
+                    }
+                }
+                2 => {
+                    let ids: Vec<u32> =
+                        sched.workers().map(|w| w.id).collect();
+                    if !ids.is_empty() {
+                        let victim = ids[rng.below(ids.len())];
+                        let node = sched.worker(victim).unwrap().node_id();
+                        sched.worker_evict(victim);
+                        free_nodes.push(node);
+                        running.retain(|(_, w, _, _)| *w != victim);
+                    }
+                }
+                3 if rng.chance(0.2) => {
+                    // Occasional content update mid-run.
+                    sched.bump_context_version(rng.below(2) as u32);
+                }
+                _ => {
+                    if running.is_empty() {
+                        for d in sched.try_dispatch() {
+                            running.push((d.task, d.worker, d.phases, 0));
+                        }
+                    } else {
+                        let i = rng.below(running.len());
+                        let (task, worker, phases, next) = &mut running[i];
+                        sched.phase_done(*task, *next);
+                        *next += 1;
+                        if *next == phases.len() {
+                            let (attempts, inferences) =
+                                sched.task_meta(*task).unwrap();
+                            let rec = TaskRecord {
+                                task: *task,
+                                context: sched
+                                    .task_context(*task)
+                                    .unwrap_or(0),
+                                worker: *worker,
+                                gpu: GpuModel::A10,
+                                attempts,
+                                inferences,
+                                dispatched_at: 0.0,
+                                completed_at: guard as f64,
+                                context_s: 0.0,
+                                execute_s: 1.0,
+                            };
+                            sched.task_done(*task, rec);
+                            running.remove(i);
+                        }
+                    }
+                }
+            }
+            assert!(
+                sched.check_node_cache_capacity(),
+                "disk-tier occupancy exceeded node capacity {capacity}"
+            );
+            assert!(sched.check_cache_capacity());
+            assert!(sched.check_conservation());
+        }
+        assert_eq!(sched.progress().completed_inferences, n_tasks * batch);
+    });
+}
+
+/// Version safety of warm restarts: whatever storm of evictions,
+/// rejoins and registry version bumps happens, a freshly joined worker
+/// only ever holds cached components at exactly the version its node
+/// persisted — and that version always equals the current registry
+/// version (stale snapshots are dropped, never served, and nothing is
+/// invented newer than the disk actually holds).
+#[test]
+fn prop_warm_restart_never_serves_newer_version_than_persisted() {
+    forall(60, |rng| {
+        let mut sched = Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "big", 2_000_000_000, 4_000_000_000),
+            ],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            30_000_000_000,
+        );
+        let n_tasks = 4 + rng.below(20) as u64;
+        let tasks: Vec<Task> = (0..n_tasks)
+            .map(|i| Task::new(i, i * 10, 10, rng.below(2) as u32))
+            .collect();
+        sched.submit_tasks(tasks);
+
+        let mut free_nodes: Vec<u32> = vec![0, 1, 2];
+        let mut running: Vec<(u64, u32, Vec<PhaseKind>, usize)> = Vec::new();
+        let mut guard = 0;
+        while !sched.all_done() && guard < 3_000 {
+            guard += 1;
+            match rng.below(10) {
+                0 | 1 => {
+                    if !free_nodes.is_empty() {
+                        let pos = rng.below(free_nodes.len());
+                        let node_id = free_nodes.swap_remove(pos);
+                        let wid = sched.worker_join(
+                            Node { id: node_id, gpu: GpuModel::A10 },
+                            guard as f64,
+                        );
+                        // The invariant under test, checked at the only
+                        // moment restores happen: join time.
+                        let persisted: Vec<(u32, Option<u32>)> = [0u32, 1]
+                            .iter()
+                            .map(|c| {
+                                (*c, sched
+                                    .node_caches()
+                                    .entry(node_id)
+                                    .and_then(|e| e.persisted_version(*c)))
+                            })
+                            .collect();
+                        let w = sched.worker(wid).unwrap();
+                        for (ctx, persisted_v) in persisted {
+                            let held = KINDS
+                                .iter()
+                                .filter(|k| w.has_cached(ctx, **k))
+                                .count();
+                            if held == 0 {
+                                continue;
+                            }
+                            let reg_v =
+                                sched.recipe(ctx).unwrap().version;
+                            let pv = persisted_v.expect(
+                                "restored bytes must come from a snapshot",
+                            );
+                            assert_eq!(
+                                w.cached_version(ctx),
+                                pv,
+                                "worker version must equal persisted"
+                            );
+                            assert_eq!(
+                                pv, reg_v,
+                                "mismatched versions must be dropped, \
+                                 not served"
+                            );
+                        }
+                    }
+                }
+                2 => {
+                    let ids: Vec<u32> =
+                        sched.workers().map(|w| w.id).collect();
+                    if !ids.is_empty() {
+                        let victim = ids[rng.below(ids.len())];
+                        let node = sched.worker(victim).unwrap().node_id();
+                        sched.worker_evict(victim);
+                        free_nodes.push(node);
+                        running.retain(|(_, w, _, _)| *w != victim);
+                    }
+                }
+                3 => {
+                    // Bump while snapshots exist: the next rejoin must
+                    // treat them as stale.
+                    sched.bump_context_version(rng.below(2) as u32);
+                }
+                _ => {
+                    if running.is_empty() {
+                        for d in sched.try_dispatch() {
+                            running.push((d.task, d.worker, d.phases, 0));
+                        }
+                    } else {
+                        let i = rng.below(running.len());
+                        let (task, worker, phases, next) = &mut running[i];
+                        sched.phase_done(*task, *next);
+                        *next += 1;
+                        if *next == phases.len() {
+                            let (attempts, inferences) =
+                                sched.task_meta(*task).unwrap();
+                            let rec = TaskRecord {
+                                task: *task,
+                                context: sched
+                                    .task_context(*task)
+                                    .unwrap_or(0),
+                                worker: *worker,
+                                gpu: GpuModel::A10,
+                                attempts,
+                                inferences,
+                                dispatched_at: 0.0,
+                                completed_at: guard as f64,
+                                context_s: 0.0,
+                                execute_s: 1.0,
+                            };
+                            sched.task_done(*task, rec);
+                            running.remove(i);
+                        }
+                    }
+                }
+            }
+            assert!(sched.check_node_cache_capacity());
+            assert!(sched.check_conservation());
+        }
+    });
+}
+
 // -------------------------------------------------------------- sim end
 
 #[test]
