@@ -139,6 +139,10 @@ pub struct NodeChurnEvent {
 /// down *when* and for how long — the information an eviction-risk-aware
 /// placement policy needs (a node's expected remaining lifetime) and the
 /// signal the driver turns into `NodeReclaimed`/`NodeRejoined` events.
+/// The sim driver maps event times onto sim time; the live driver maps
+/// the same trace onto wall-clock seconds since the run started
+/// (`live::LiveConfig::node_trace`), killing and respawning real worker
+/// threads.
 ///
 /// Every node is assumed up at t=0; per node, events must alternate
 /// starting with a reclamation. Traces are recordable: [`Self::to_json`]
@@ -153,7 +157,20 @@ pub struct NodeAvailabilityTrace {
 impl NodeAvailabilityTrace {
     /// Build from raw events; sorts and validates per-node alternation
     /// (down, up, down, … starting from the all-up state at t=0).
-    pub fn from_events(mut events: Vec<NodeChurnEvent>) -> Self {
+    /// Panics on invalid input — for programmatic construction; parse
+    /// untrusted (recorded, hand-edited) data with
+    /// [`Self::try_from_events`] / [`Self::from_json`] instead.
+    pub fn from_events(events: Vec<NodeChurnEvent>) -> Self {
+        Self::try_from_events(events)
+            .expect("invalid node availability trace")
+    }
+
+    /// Fallible twin of [`Self::from_events`]: same sorting and
+    /// alternation rules, but violations come back as errors instead of
+    /// panics — the entry point for recorded traces loaded from disk.
+    pub fn try_from_events(
+        mut events: Vec<NodeChurnEvent>,
+    ) -> crate::Result<Self> {
         events.sort_by(|a, b| {
             a.time
                 .partial_cmp(&b.time)
@@ -163,22 +180,26 @@ impl NodeAvailabilityTrace {
         let mut down: std::collections::HashSet<NodeId> =
             std::collections::HashSet::new();
         for e in &events {
-            assert!(e.time >= 0.0, "negative event time {}", e.time);
+            anyhow::ensure!(
+                e.time >= 0.0,
+                "negative event time {}",
+                e.time
+            );
             if e.up {
-                assert!(
+                anyhow::ensure!(
                     down.remove(&e.node),
                     "node {} rejoins without a prior reclamation",
                     e.node
                 );
             } else {
-                assert!(
+                anyhow::ensure!(
                     down.insert(e.node),
                     "node {} reclaimed twice without a rejoin",
                     e.node
                 );
             }
         }
-        Self { events }
+        Ok(Self { events })
     }
 
     /// Synthetic reclamation storm: `waves` waves, one every
@@ -283,7 +304,7 @@ impl NodeAvailabilityTrace {
                 .ok_or_else(|| anyhow::anyhow!("event \"up\" not a bool"))?;
             events.push(NodeChurnEvent { time, node, up });
         }
-        Ok(Self::from_events(events))
+        Self::try_from_events(events)
     }
 }
 
@@ -423,5 +444,23 @@ mod tests {
         let back = NodeAvailabilityTrace::from_json(&text).unwrap();
         assert_eq!(back, tr, "JSON roundtrip must be lossless");
         assert!(NodeAvailabilityTrace::from_json("{}").is_err());
+    }
+
+    /// A recorded trace that violates the alternation invariant (e.g. a
+    /// hand-edited or truncated file) is an error, never a panic.
+    #[test]
+    fn invalid_recorded_trace_is_an_error_not_a_panic() {
+        let bad = r#"{"events":[{"t":1,"node":0,"up":true}]}"#;
+        let err = NodeAvailabilityTrace::from_json(bad).unwrap_err();
+        assert!(err.to_string().contains("without a prior reclamation"));
+        let dup = r#"{"events":[
+            {"t":1,"node":0,"up":false},
+            {"t":2,"node":0,"up":false}
+        ]}"#;
+        assert!(NodeAvailabilityTrace::from_json(dup).is_err());
+        assert!(NodeAvailabilityTrace::try_from_events(vec![
+            NodeChurnEvent { time: -1.0, node: 0, up: false }
+        ])
+        .is_err());
     }
 }

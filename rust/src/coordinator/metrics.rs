@@ -5,12 +5,13 @@
 //! progress of the application." These are the data behind Figures 4, 6
 //! and 7 and Table 2.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 
 use crate::util::{fmt_duration, Summary};
 
 use super::context::ContextId;
 use super::task::TaskRecord;
+use super::worker::WorkerId;
 
 /// Cache counters for one context (application).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -119,6 +120,61 @@ impl CacheStats {
         }
         out
     }
+}
+
+/// First-task context-acquisition seconds per worker, split into
+/// warm-started vs cold workers — the §7 warm-restart payoff metric
+/// shared by the sim churn experiment and the live churn experiment.
+/// "First task" is each worker's earliest-dispatched completion record;
+/// `warm_started` lists the workers that restored from a node-resident
+/// cache at join.
+pub fn first_task_context_split(
+    records: &[TaskRecord],
+    warm_started: &[WorkerId],
+) -> (Vec<f64>, Vec<f64>) {
+    let warm_ids: HashSet<WorkerId> = warm_started.iter().copied().collect();
+    let mut first: BTreeMap<WorkerId, (f64, f64)> = BTreeMap::new();
+    for r in records {
+        let e = first
+            .entry(r.worker)
+            .or_insert((r.dispatched_at, r.context_s));
+        if r.dispatched_at < e.0 {
+            *e = (r.dispatched_at, r.context_s);
+        }
+    }
+    let mut warm = Vec::new();
+    let mut cold = Vec::new();
+    for (wid, (_, ctx_s)) in first {
+        if warm_ids.contains(&wid) {
+            warm.push(ctx_s);
+        } else {
+            cold.push(ctx_s);
+        }
+    }
+    (warm, cold)
+}
+
+/// First-task context seconds keyed per `(worker, context)`: each
+/// worker contributes its earliest-dispatched record *of each context*.
+/// Multi-application churn needs this shape — a restarted worker's
+/// first task overall may belong to a context it never restored, while
+/// its first task of a restored context is the apples-to-apples warm
+/// sample. Callers classify the keys (restored / cold / mixed)
+/// themselves.
+pub fn first_task_by_worker_context(
+    records: &[TaskRecord],
+) -> BTreeMap<(WorkerId, ContextId), f64> {
+    let mut first: BTreeMap<(WorkerId, ContextId), (f64, f64)> =
+        BTreeMap::new();
+    for r in records {
+        let e = first
+            .entry((r.worker, r.context))
+            .or_insert((r.dispatched_at, r.context_s));
+        if r.dispatched_at < e.0 {
+            *e = (r.dispatched_at, r.context_s);
+        }
+    }
+    first.into_iter().map(|(k, (_, ctx_s))| (k, ctx_s)).collect()
 }
 
 /// One sample of the run's externally visible state.
@@ -342,6 +398,38 @@ mod tests {
             0.0
         );
         assert!(s.report().contains("warm_restored=2"));
+    }
+
+    #[test]
+    fn first_task_splits_overall_and_per_context() {
+        use crate::cluster::GpuModel;
+        let rec = |worker, context, at: f64, ctx_s: f64| TaskRecord {
+            task: 0,
+            context,
+            worker,
+            gpu: GpuModel::A10,
+            attempts: 1,
+            inferences: 1,
+            dispatched_at: at,
+            completed_at: at + 1.0,
+            context_s: ctx_s,
+            execute_s: 1.0,
+        };
+        let records = vec![
+            rec(0, 0, 0.0, 9.0),  // cold worker 0, first of ctx 0
+            rec(0, 1, 1.0, 8.0),  // cold worker 0, first of ctx 1
+            rec(0, 0, 2.0, 0.1),  // later ctx-0 task — ignored
+            rec(2, 0, 5.0, 0.5),  // warm worker 2, first of ctx 0
+        ];
+        let (warm, cold) = first_task_context_split(&records, &[2]);
+        assert_eq!(warm, vec![0.5], "worker 2's earliest record");
+        assert_eq!(cold, vec![9.0], "worker 0's earliest record overall");
+
+        let by_wc = first_task_by_worker_context(&records);
+        assert_eq!(by_wc[&(0, 0)], 9.0, "later ctx-0 task ignored");
+        assert_eq!(by_wc[&(0, 1)], 8.0);
+        assert_eq!(by_wc[&(2, 0)], 0.5);
+        assert_eq!(by_wc.len(), 3);
     }
 
     #[test]

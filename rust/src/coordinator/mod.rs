@@ -54,7 +54,10 @@ pub use batcher::Batcher;
 pub use context::{Component, ComponentKind, ContextId, ContextPolicy, ContextRecipe, DataOrigin};
 pub use costmodel::CostModel;
 pub use library::LibraryState;
-pub use metrics::{CacheStats, ContextCacheCounters, Metrics, RunSummary};
+pub use metrics::{
+    first_task_by_worker_context, first_task_context_split, CacheStats,
+    ContextCacheCounters, Metrics, RunSummary,
+};
 pub use nodecache::{NodeCacheDirectory, NodeCacheEntry, RestoreSummary};
 pub use policy::{
     AffinityGreedy, PlacementDecision, PlacementPolicy, PolicyKind,

@@ -13,7 +13,11 @@
 //! snapshot into the fresh worker — skipping any context whose persisted
 //! recipe version no longer matches the registry, so a rejoined worker
 //! can never serve bytes newer (or older) than what its node actually
-//! has on disk.
+//! has on disk. Live mode pairs this ledger with real files: each node's
+//! `node-<id>/ctx-<ctx>/` cache directory outlives its worker thread
+//! (`live::LiveConfig::persist_node_caches`), so when the live driver
+//! kills and respawns a worker, the scheduler-side restore and the
+//! on-disk bytes agree and the warm start is real.
 //!
 //! Invariant (proptest-checked): a node entry's occupancy never exceeds
 //! the disk capacity it was recorded with, across arbitrarily many
@@ -157,6 +161,14 @@ impl NodeCacheDirectory {
         self.nodes.get(&node)
     }
 
+    /// Forget a node's snapshot (the node's disk was actually wiped —
+    /// e.g. a live worker exiting under `persist_node_caches: false`).
+    /// Without this, a later rejoin would "restore" bytes that no
+    /// longer exist anywhere.
+    pub fn remove(&mut self, node: NodeId) {
+        self.nodes.remove(&node);
+    }
+
     /// Nodes with surviving disk state.
     pub fn len(&self) -> usize {
         self.nodes.len()
@@ -248,6 +260,18 @@ mod tests {
         w.clear_cache();
         dir.persist(&w);
         assert!(dir.is_empty(), "wiped disk leaves no ghost entry");
+    }
+
+    #[test]
+    fn remove_forgets_a_node() {
+        let mut dir = NodeCacheDirectory::new();
+        let mut w = worker_on(3, 1_000);
+        w.insert_cached(0, ComponentKind::DepsPackage, 10, None);
+        dir.persist(&w);
+        assert!(dir.entry(3).is_some());
+        dir.remove(3);
+        assert!(dir.is_empty(), "wiped node leaves no snapshot");
+        dir.remove(3); // double remove is a no-op
     }
 
     #[test]

@@ -157,6 +157,11 @@ pub struct Scheduler {
     /// Node-resident disk caches surviving reclamation (§7 warm starts):
     /// populated on eviction, replayed on rejoin of the same node.
     node_caches: NodeCacheDirectory,
+    /// LRU evictions decided since the last [`Self::take_evictions`]
+    /// drain — live drivers forward these to worker threads so the
+    /// *real* on-disk bytes shrink along with the accounting (the sim
+    /// driver has no disk and drains-and-discards).
+    pending_evictions: Vec<(WorkerId, ContextId)>,
     /// Driver-supplied churn forecast: absolute sim time each node is
     /// next expected to be reclaimed (absent = no reclamation known).
     node_reclaim_at: HashMap<NodeId, f64>,
@@ -223,6 +228,7 @@ impl Scheduler {
             progress: Progress::default(),
             records: Vec::new(),
             node_caches: NodeCacheDirectory::new(),
+            pending_evictions: Vec::new(),
             node_reclaim_at: HashMap::new(),
             clock_hint: 0.0,
         }
@@ -427,6 +433,14 @@ impl Scheduler {
     /// The node-resident disk-cache ledger (observability + tests).
     pub fn node_caches(&self) -> &NodeCacheDirectory {
         &self.node_caches
+    }
+
+    /// Forget `node`'s persisted snapshot. Live drivers call this when
+    /// the node's real cache directory was wiped (a worker exiting
+    /// under `persist_node_caches: false`), so a later rejoin cannot
+    /// warm-restore accounting for bytes that no longer exist on disk.
+    pub fn drop_node_cache(&mut self, node: NodeId) {
+        self.node_caches.remove(node);
     }
 
     /// A context's content changed (new weights, new deps): bump its
@@ -932,8 +946,19 @@ impl Scheduler {
                     w.library.teardown();
                 }
                 self.cache_stats.ctx_mut(e).evictions += 1;
+                self.pending_evictions.push((wid, e));
             }
         }
+    }
+
+    /// Drain the LRU evictions decided since the last call, as
+    /// `(worker, context)` pairs. Live drivers forward each one to its
+    /// worker thread, which deletes the context's on-disk files and
+    /// in-memory staged state — without this, the byte budget would be
+    /// enforced only in the scheduler's accounting while the node's
+    /// real disk kept every staged context.
+    pub fn take_evictions(&mut self) -> Vec<(WorkerId, ContextId)> {
+        std::mem::take(&mut self.pending_evictions)
     }
 
     /// All phases of `task` finished; the result reached the manager.
@@ -1007,6 +1032,26 @@ impl Scheduler {
     /// Context a task is bound to (for completion records).
     pub fn task_context(&self, id: TaskId) -> Option<ContextId> {
         self.tasks.get(&id).map(|t| t.context)
+    }
+
+    /// Inference range `(start, count)` of a task — the authoritative
+    /// claim on the workload. Live drivers must use this instead of
+    /// recomputing `task * batch_size`, which silently breaks the moment
+    /// tasks come from multiple contexts with independent batchers (the
+    /// merged id stream no longer aligns with any one stream's offsets).
+    pub fn task_range(&self, id: TaskId) -> Option<(u64, u64)> {
+        self.tasks.get(&id).map(|t| (t.start, t.count))
+    }
+
+    /// Context of any dispatch id — real tasks *and* synthetic prefetch
+    /// ids (live drivers need it to route a stage-only prefetch plan to
+    /// the right per-context cache directory).
+    pub fn dispatch_context(&self, id: TaskId) -> Option<ContextId> {
+        if Self::is_prefetch_id(id) {
+            self.prefetch_flight.get(&id).map(|p| p.context)
+        } else {
+            self.task_context(id)
+        }
     }
 
     /// Task-conservation invariant: every task is exactly one of
@@ -1381,6 +1426,10 @@ mod tests {
         // task 1), and occupancy respects capacity throughout.
         assert!(w_ref.library.is_ready_for(1));
         assert!(s.check_cache_capacity());
+        // The eviction is queued for live drivers to forward, and the
+        // drain empties the queue.
+        assert_eq!(s.take_evictions(), vec![(w, 0)]);
+        assert!(s.take_evictions().is_empty(), "drain empties the queue");
     }
 
     // --------------------------------------------------- placement policy
@@ -1691,6 +1740,38 @@ mod tests {
         assert_eq!(s.expected_node_lifetime_s(0), 0.0, "clamped at zero");
         s.set_node_reclaim_hint(0, None);
         assert_eq!(s.expected_node_lifetime_s(0), f64::INFINITY);
+    }
+
+    /// `task_range` reports each task's authoritative inference claim —
+    /// including uneven multi-context splits where `task * batch_size`
+    /// arithmetic is meaningless — and `dispatch_context` resolves both
+    /// real tasks and synthetic prefetch ids.
+    #[test]
+    fn task_range_and_dispatch_context_resolve() {
+        let mut s = mk_multi(ContextPolicy::Pervasive, u64::MAX);
+        // Interleaved two-tenant stream with different batch sizes:
+        // merged ids no longer align with either tenant's offsets.
+        s.submit_tasks(vec![
+            Task::new(0, 0, 30, 0),
+            Task::new(1, 0, 7, 1),
+            Task::new(2, 30, 30, 0),
+            Task::new(3, 7, 7, 1),
+        ]);
+        assert_eq!(s.task_range(2), Some((30, 30)));
+        assert_eq!(s.task_range(3), Some((7, 7)));
+        assert_eq!(s.task_range(99), None);
+        assert_eq!(s.dispatch_context(3), Some(1));
+
+        // A prefetch dispatch resolves to its context too.
+        s.worker_join(node(0, GpuModel::A10), 0.0);
+        let extra = s.worker_join(node(1, GpuModel::A10), 0.0);
+        let ds = s.apply_decisions(vec![PlacementDecision::Prefetch {
+            ctx: 1,
+            worker: extra,
+        }]);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(s.dispatch_context(ds[0].task), Some(1));
+        assert_eq!(s.task_range(ds[0].task), None, "prefetch has no range");
     }
 
     /// `with_policy` swaps the decision layer end-to-end: a fair-share

@@ -545,6 +545,10 @@ impl SimDriver {
         }
         f.next += 1;
         let next_phase = self.sched.phase_done(task, phase);
+        // Simulated workers have no real disk to clean; drain the
+        // eviction queue (meant for live drivers) so it cannot grow
+        // for the length of a cache-thrashing run.
+        self.sched.take_evictions();
 
         match next_phase {
             Some(p) => self.start_phase(task, p, now),

@@ -23,14 +23,13 @@
 //! both orderings, exiting non-zero on violation; the `churn-smoke` CI
 //! job is exactly that invocation.
 
-use std::collections::{BTreeMap, HashSet};
 use std::fmt::Write as _;
 
 use crate::cluster::node::pool_20_mixed;
 use crate::cluster::{LoadTrace, NodeAvailabilityTrace};
 use crate::coordinator::{
     AppSpec, ContextPolicy, ContextRecipe, PolicyKind, SimConfig, SimDriver,
-    SimOutcome, WorkerId,
+    SimOutcome,
 };
 use crate::util::{fmt_bytes, Rng};
 
@@ -157,30 +156,15 @@ pub struct ChurnReport {
 /// First-task context seconds per worker, split warm-started vs cold.
 /// "First task" is the earliest-dispatched record of each worker; warm
 /// workers are those the driver saw restore from a node cache at join.
+/// (Delegates to the shared [`crate::coordinator::metrics`] helper the
+/// live churn experiment uses too.)
 pub fn first_task_context_split(
     outcome: &SimOutcome,
 ) -> (Vec<f64>, Vec<f64>) {
-    let warm_ids: HashSet<WorkerId> =
-        outcome.warm_started_workers.iter().copied().collect();
-    let mut first: BTreeMap<WorkerId, (f64, f64)> = BTreeMap::new();
-    for r in &outcome.records {
-        let e = first
-            .entry(r.worker)
-            .or_insert((r.dispatched_at, r.context_s));
-        if r.dispatched_at < e.0 {
-            *e = (r.dispatched_at, r.context_s);
-        }
-    }
-    let mut warm = Vec::new();
-    let mut cold = Vec::new();
-    for (wid, (_, ctx_s)) in first {
-        if warm_ids.contains(&wid) {
-            warm.push(ctx_s);
-        } else {
-            cold.push(ctx_s);
-        }
-    }
-    (warm, cold)
+    crate::coordinator::metrics::first_task_context_split(
+        &outcome.records,
+        &outcome.warm_started_workers,
+    )
 }
 
 fn mean(xs: &[f64]) -> f64 {

@@ -12,6 +12,11 @@
 //! * [`churn`] — greedy vs risk-aware placement under a reclamation
 //!   storm (bytes re-transferred, makespan) plus the node-resident
 //!   warm-restart payoff (first-task context seconds, warm hit rate).
+//! * [`live_churn`] — the live-path counterpart of `churn`: real worker
+//!   threads killed and restarted on a wall-clock trace (warm starts
+//!   from surviving node cache dirs) plus two-tenant contention for a
+//!   real byte-budgeted cache; self-asserting (the `live-smoke` CI
+//!   gate).
 //! * [`runner`] — executes specs through the simulated driver.
 //! * [`figures`] — renders each figure/table as text + CSV into
 //!   `results/` (the artifacts EXPERIMENTS.md references).
@@ -19,6 +24,7 @@
 pub mod ablations;
 pub mod churn;
 pub mod figures;
+pub mod live_churn;
 pub mod mixed;
 pub mod policies;
 pub mod runner;

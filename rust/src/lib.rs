@@ -28,8 +28,11 @@
 //! * [`runtime`] — the PJRT side: loads AOT-compiled HLO (JAX + Pallas,
 //!   lowered at build time by `python/compile/aot.py`) and executes real
 //!   inference from the Rust hot path. Python never runs at request time.
-//! * [`live`] — tokio-based live mode: the same coordinator code driving
-//!   real PJRT executions on emulated heterogeneous workers.
+//! * [`live`] — thread-based live mode: the same coordinator code
+//!   driving real inference on emulated heterogeneous workers — now
+//!   multi-application (many [`live::LiveApp`]s per run competing for
+//!   byte-budgeted caches) with trace-driven worker kill/restart warm
+//!   starts (see *Live warm restarts* below).
 //! * [`app`] — the paper's evaluation application: *Prompt-for-Fact*
 //!   (PfF) optimal-prompt search over a FEVER-like fact-verification
 //!   dataset.
@@ -115,12 +118,8 @@
 //!   rejoining that node **warm-starts**: matching-version components
 //!   replay straight into its cache, so its first task pays only
 //!   materialization instead of re-pulling 15 GB. Version-bumped
-//!   (stale) snapshots are dropped, never served. Live mode lays the
-//!   groundwork: workers stage into *node-keyed* cache directories
-//!   that are left on disk when a worker thread exits
-//!   (`live::LiveConfig::persist_node_caches`), so a future
-//!   restart-worker path finds the previous incarnation's files —
-//!   the live driver does not yet restart workers mid-run.
+//!   (stale) snapshots are dropped, never served. Live mode mirrors
+//!   the whole loop with real files — see *Live warm restarts* below.
 //! * Churn itself is first-class: a
 //!   [`cluster::NodeAvailabilityTrace`] (synthetic storm generator or
 //!   recorded JSON) injects per-node `NodeReclaimed`/`NodeRejoined`
@@ -165,6 +164,57 @@
 //!     out.cache.ctx(0).warm_restored,
 //!     out.cache.ctx(0).staged_bytes,
 //! );
+//! ```
+//!
+//! ## Live warm restarts
+//!
+//! The live driver runs the same loop against real worker threads and
+//! real files. One [`live::LiveDriver`] run hosts any number of
+//! applications ([`live::LiveApp`]s with distinct manifest profiles)
+//! competing for each worker's byte-budgeted cache, and a wall-clock
+//! [`cluster::NodeAvailabilityTrace`] kills and respawns workers
+//! mid-run: a kill requeues the in-flight task through the ordinary
+//! retry machinery and leaves the node-keyed cache directory on disk
+//! ([`live::LiveConfig::persist_node_caches`]); the respawned worker
+//! warm-starts from it — no stage phases, just re-materialization.
+//! Offline builds run this end to end via synthesized artifacts
+//! ([`runtime::synthetic`]) and the deterministic reference backend
+//! ([`runtime::BackendKind::Reference`]); `pcm experiment live-churn`
+//! gates it in CI (`live-smoke`).
+//!
+//! ```no_run
+//! use pcm::cluster::{NodeAvailabilityTrace, NodeChurnEvent};
+//! use pcm::live::{LiveApp, LiveConfig, LiveDriver};
+//! use pcm::runtime::{synthetic, BackendKind, Manifest};
+//!
+//! # fn main() -> pcm::Result<()> {
+//! // Two applications with different model profiles on two workers;
+//! // node 0 is reclaimed at t=2 s and rejoined half a second later.
+//! let dir = std::env::temp_dir().join("pcm-doc-live");
+//! synthetic::write_synthetic_artifacts(
+//!     &dir,
+//!     &synthetic::default_live_profiles(),
+//! )?;
+//! let cfg = LiveConfig {
+//!     apps: vec![
+//!         LiveApp { profile: "tiny".into(), total_inferences: 64, batch_size: 4 },
+//!         LiveApp { profile: "small".into(), total_inferences: 64, batch_size: 4 },
+//!     ],
+//!     worker_speeds: vec![1.0, 1.0],
+//!     backend: BackendKind::Reference, // offline-friendly
+//!     node_trace: Some(NodeAvailabilityTrace::from_events(vec![
+//!         NodeChurnEvent { time: 2.0, node: 0, up: false },
+//!         NodeChurnEvent { time: 2.5, node: 0, up: true },
+//!     ])),
+//!     execute_floor_s: 0.05,
+//!     ..LiveConfig::default()
+//! };
+//! let out = LiveDriver::new(cfg, Manifest::load(&dir)?).run()?;
+//! for (wid, bytes) in &out.warm_started {
+//!     println!("worker {wid} warm-restored {bytes} bytes from node disk");
+//! }
+//! # Ok(())
+//! # }
 //! ```
 
 pub mod app;

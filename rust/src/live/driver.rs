@@ -1,51 +1,130 @@
 //! Live driver: the Scheduler state machine over real worker threads.
 //!
 //! The same dispatch/phase/complete protocol as the simulated driver,
-//! with wall-clock time and real work. Used by
-//! `examples/fact_verification.rs` (the end-to-end driver recorded in
-//! EXPERIMENTS.md) and the live integration tests.
+//! with wall-clock time and real work — now including the parts churn
+//! makes interesting:
+//!
+//! * **Multi-application serving.** One run hosts any number of
+//!   [`LiveApp`]s, each with its own manifest profile, workload and
+//!   [`ContextRecipe`], registered through the same
+//!   [`Scheduler::with_registry`] entry point the sim driver uses. Their
+//!   task streams interleave round-robin and compete for each worker's
+//!   byte-budgeted cache; per-context accuracy, latency and
+//!   [`CacheStats`] land in [`LiveOutcome::per_app`].
+//! * **Kill/restart warm starts.** A [`NodeAvailabilityTrace`] mapped
+//!   onto wall-clock seconds reclaims live workers mid-run: the thread
+//!   is stopped, its in-flight task is requeued through the ordinary
+//!   retry machinery, and its node-keyed cache directory stays on disk.
+//!   When the trace rejoins the node, a fresh worker incarnation spawns
+//!   on the same node id and warm-starts from the surviving files
+//!   (scheduler-side via the [`NodeCacheDirectory`] snapshot, disk-side
+//!   via the per-context cache subdirs) — the live proof of the §7
+//!   warm-restart mechanism the sim exercises in `pcm experiment churn`.
+//!
+//! Used by `examples/fact_verification.rs`, the live integration tests,
+//! and `pcm experiment live-churn` (the CI `live-smoke` gate).
+//!
+//! [`NodeCacheDirectory`]: crate::coordinator::NodeCacheDirectory
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::app::{AccuracyReport, InferenceWorkload, PffApp};
-use crate::cluster::{GpuModel, Node};
+use crate::cluster::{GpuModel, Node, NodeAvailabilityTrace, NodeId};
 use crate::coordinator::{
-    Batcher, CacheStats, ContextPolicy, ContextRecipe, CostModel, PolicyKind,
-    Scheduler, TaskRecord, TransferPlanner, DEFAULT_CACHE_CAPACITY_BYTES,
+    Batcher, CacheStats, ContextId, ContextPolicy, ContextRecipe, CostModel,
+    PolicyKind, Scheduler, Task, TaskRecord, TransferPlanner, WorkerId,
+    DEFAULT_CACHE_CAPACITY_BYTES,
 };
-use crate::runtime::Manifest;
+use crate::runtime::{BackendKind, Manifest};
 use crate::util::Summary;
 use crate::Result;
 
-use super::worker::{LiveWorker, WorkOrder, WorkerMsg};
+use super::worker::{LiveOrder, LiveWorker, LiveWorkerShared, WorkOrder, WorkerMsg};
+
+/// Default [`LiveConfig::watchdog_s`]: generous enough for a real PJRT
+/// compile or a big batch (no worker message arrives mid-phase), small
+/// enough that a wedged CI run fails inside the job timeout.
+const DEFAULT_WATCHDOG_S: f64 = 600.0;
+
+/// One application in a live run: a manifest profile plus its workload
+/// share (the live analogue of the sim driver's `AppSpec`).
+#[derive(Debug, Clone)]
+pub struct LiveApp {
+    /// Manifest profile name (`tiny`, `small`, …) — distinct profiles
+    /// give applications genuinely different staging bytes and cache
+    /// footprints.
+    pub profile: String,
+    pub total_inferences: u64,
+    pub batch_size: u64,
+}
 
 /// Live-run configuration.
 #[derive(Debug, Clone)]
 pub struct LiveConfig {
+    /// Single-application profile (ignored when `apps` is non-empty).
     pub profile: String,
     pub policy: ContextPolicy,
+    /// Single-application batch size (ignored when `apps` is non-empty).
     pub batch_size: u64,
+    /// Single-application workload (ignored when `apps` is non-empty).
     pub total_inferences: u64,
-    /// Worker speed multipliers (1.0 = full speed); length = worker count.
+    /// Worker speed multipliers (1.0 = full speed); length = node count.
+    /// Indexed by node id, so a restarted worker inherits its node's
+    /// speed class.
     pub worker_speeds: Vec<f64>,
     pub seed: u64,
     /// Per-worker context-cache capacity in bytes (same knob the sim
     /// driver threads through — live artifacts are tiny, so the default
-    /// never evicts; tests can shrink it to exercise LRU paths).
+    /// never evicts; tests and the live-churn contention scenario shrink
+    /// it to exercise LRU paths).
     pub cache_capacity_bytes: u64,
     /// Placement (dispatch) policy — the same pluggable decision layer
     /// the sim driver uses (`coordinator::policy`).
     pub placement: PolicyKind,
     /// Keep each node's cache directory on disk when its worker thread
-    /// exits (the live groundwork for the sim's `NodeCacheDirectory`:
-    /// dirs are keyed by node, so a future restart-worker path finds
-    /// the previous incarnation's staged files — today's driver spawns
-    /// each worker once, and the run's temp root is still removed at
-    /// the very end of the run).
+    /// exits — the live half of the §7 warm-restart loop. A reclaimed
+    /// worker's staged files survive under `node-<id>/ctx-<ctx>/`, the
+    /// scheduler snapshots the matching cache state into its
+    /// `NodeCacheDirectory`, and a worker respawned on the same node id
+    /// (a `node_trace` rejoin) warm-starts from both: no stage phases,
+    /// just re-materialization. Node dirs are kept for the whole run;
+    /// the run's temp root is removed at the very end unless
+    /// `keep_cache_root` (or the `PCM_KEEP_LIVE_CACHE` env var) asks to
+    /// keep it for inspection. With `false`, each exiting worker wipes
+    /// its node dir and every restart is cold.
     pub persist_node_caches: bool,
+    /// Multi-application serving: when non-empty, each entry registers
+    /// its own `ContextRecipe` (context id = index) and the single-app
+    /// fields above are ignored. Task streams interleave round-robin
+    /// exactly like the sim driver's multi-app merge.
+    pub apps: Vec<LiveApp>,
+    /// Wall-clock churn schedule: trace times are seconds since the run
+    /// started. A `down` event kills the node's live worker (requeueing
+    /// its in-flight task); an `up` event respawns a worker on that
+    /// node, warm-starting from the node cache when one survives.
+    pub node_trace: Option<NodeAvailabilityTrace>,
+    /// Execution substrate for worker inference ([`BackendKind::Pjrt`]
+    /// by default; `Reference` keeps the whole path runnable offline).
+    pub backend: BackendKind,
+    /// Emulated stage bandwidth (bytes/s) — see
+    /// [`LiveWorkerShared::stage_bytes_per_s`].
+    pub stage_bytes_per_s: Option<f64>,
+    /// Minimum seconds per Execute phase — see
+    /// [`LiveWorkerShared::execute_floor_s`].
+    pub execute_floor_s: f64,
+    /// Keep the run's cache root on disk after the run (also enabled by
+    /// setting the `PCM_KEEP_LIVE_CACHE` environment variable).
+    pub keep_cache_root: bool,
+    /// Abort the run when no worker message and no churn event has been
+    /// processed for this many seconds — a stall watchdog, not a run
+    /// budget (steady progress never trips it, however long the run).
+    /// Workers report nothing mid-phase, so set this comfortably above
+    /// the longest single phase; `0.0` disables it.
+    pub watchdog_s: f64,
 }
 
 impl Default for LiveConfig {
@@ -60,8 +139,25 @@ impl Default for LiveConfig {
             cache_capacity_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
             placement: PolicyKind::Greedy,
             persist_node_caches: true,
+            apps: Vec::new(),
+            node_trace: None,
+            backend: BackendKind::Pjrt,
+            stage_bytes_per_s: None,
+            execute_floor_s: 0.0,
+            keep_cache_root: false,
+            watchdog_s: DEFAULT_WATCHDOG_S,
         }
     }
+}
+
+/// Per-application results of a live run.
+#[derive(Debug)]
+pub struct LiveAppOutcome {
+    pub profile: String,
+    pub completed_inferences: u64,
+    pub accuracy: AccuracyReport,
+    /// Task latency stats (dispatch→result, seconds) of this app alone.
+    pub task_latency: Summary,
 }
 
 /// Result of a live run.
@@ -70,138 +166,400 @@ pub struct LiveOutcome {
     pub wall_s: f64,
     pub completed_inferences: u64,
     pub throughput_inf_per_s: f64,
+    /// Accuracy merged across every application.
     pub accuracy: AccuracyReport,
     pub records: Vec<TaskRecord>,
-    /// Task latency stats (dispatch→result, seconds).
+    /// Task latency stats (dispatch→result, seconds), all apps.
     pub task_latency: Summary,
     /// Per-context cache hit/miss/evict counters from the scheduler.
     pub cache: CacheStats,
+    /// Per-application accuracy/latency/progress, keyed by context id.
+    pub per_app: BTreeMap<ContextId, LiveAppOutcome>,
+    /// Restarted workers that warm-started from a surviving node cache
+    /// at join → bytes their restore put back into the cache.
+    pub warm_started: BTreeMap<WorkerId, u64>,
+    /// For each warm-started worker, the contexts whose *complete*
+    /// cached-component set the restore replayed — the contexts whose
+    /// next task on that worker is stage-free. (A partial restore — the
+    /// kill landed mid-staging — leaves a context out of this list even
+    /// though some of its bytes came back.)
+    pub warm_contexts: BTreeMap<WorkerId, Vec<ContextId>>,
+    /// Worker respawns executed from `node_trace` rejoin events.
+    pub restarts: u32,
+    /// Workers reclaimed (trace kills), from scheduler progress.
+    pub evictions: u32,
+    /// Inferences that were in flight at a kill and had to be redone.
+    pub evicted_inferences: u64,
+}
+
+/// One wall-clock churn event awaiting execution.
+#[derive(Debug, Clone, Copy)]
+struct PendingChurn {
+    at: f64,
+    node: NodeId,
+    up: bool,
+}
+
+/// Thread-side handles of the live worker pool.
+#[derive(Default)]
+struct Pool {
+    order_txs: HashMap<WorkerId, mpsc::Sender<LiveOrder>>,
+    stop_flags: HashMap<WorkerId, Arc<AtomicBool>>,
+    threads: HashMap<WorkerId, std::thread::JoinHandle<()>>,
+    /// Stopped threads awaiting a join (same-node respawn joins them
+    /// first so two incarnations never write the node dir at once).
+    parked: HashMap<NodeId, std::thread::JoinHandle<()>>,
+    node_worker: HashMap<NodeId, WorkerId>,
+    /// Reclaimed worker ids: their queued messages are dropped (their
+    /// tasks were requeued — processing a stale completion would
+    /// double-score or corrupt the redispatched attempt).
+    dead: HashSet<WorkerId>,
+    down: HashSet<NodeId>,
+}
+
+/// Per-application accumulation while the run is in flight.
+struct AppAccum {
+    profile: String,
+    scorer: PffApp,
+    accuracy: AccuracyReport,
+    latency: Summary,
+    completed: u64,
 }
 
 /// Orchestrates scheduler + live workers.
 pub struct LiveDriver {
     cfg: LiveConfig,
     manifest: Arc<Manifest>,
-    workload: Arc<InferenceWorkload>,
+    apps: Vec<LiveApp>,
+    workloads: BTreeMap<ContextId, Arc<InferenceWorkload>>,
 }
 
 impl LiveDriver {
     pub fn new(cfg: LiveConfig, manifest: Manifest) -> Self {
-        let workload = Arc::new(InferenceWorkload::new(
-            crate::app::FeverDataset::generate(cfg.total_inferences, cfg.seed),
-            crate::app::PromptTemplate::Direct,
-        ));
-        Self { cfg, manifest: Arc::new(manifest), workload }
+        let apps: Vec<LiveApp> = if cfg.apps.is_empty() {
+            vec![LiveApp {
+                profile: cfg.profile.clone(),
+                total_inferences: cfg.total_inferences,
+                batch_size: cfg.batch_size,
+            }]
+        } else {
+            cfg.apps.clone()
+        };
+        let workloads = apps
+            .iter()
+            .enumerate()
+            .map(|(i, app)| {
+                let ctx = i as ContextId;
+                (
+                    ctx,
+                    Arc::new(InferenceWorkload::new(
+                        crate::app::FeverDataset::generate(
+                            app.total_inferences,
+                            cfg.seed.wrapping_add(ctx as u64),
+                        ),
+                        crate::app::PromptTemplate::Direct,
+                    )),
+                )
+            })
+            .collect();
+        Self { cfg, manifest: Arc::new(manifest), apps, workloads }
     }
 
-    pub fn workload(&self) -> &InferenceWorkload {
-        &self.workload
+    /// The workload of one application (context id = app index).
+    pub fn workload(&self, ctx: ContextId) -> Option<&InferenceWorkload> {
+        self.workloads.get(&ctx).map(|w| w.as_ref())
+    }
+
+    /// Round-robin merge of every app's task stream with dense merged
+    /// ids (identical to the sim driver's interleave).
+    fn merged_tasks(&self) -> Vec<Task> {
+        let mut streams: Vec<VecDeque<Task>> = self
+            .apps
+            .iter()
+            .enumerate()
+            .map(|(i, app)| {
+                VecDeque::from(Batcher::new(app.batch_size).split(
+                    app.total_inferences,
+                    i as ContextId,
+                    0,
+                ))
+            })
+            .collect();
+        let mut merged = Vec::new();
+        let mut id = 0u64;
+        loop {
+            let mut any = false;
+            for s in &mut streams {
+                if let Some(mut t) = s.pop_front() {
+                    t.id = id;
+                    id += 1;
+                    merged.push(t);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        merged
     }
 
     pub fn run(&self) -> Result<LiveOutcome> {
-        let profile = self.manifest.profile(&self.cfg.profile)?;
-        let weights_bytes = profile.weights.bytes;
-        let recipe = ContextRecipe::smolverify(0, weights_bytes);
-        // Same registry entry point the multi-context sim driver uses —
-        // live mode currently serves one application, but through the
-        // identical scheduler state machine and cache accounting.
+        // Registry: one recipe per app, sized from its manifest profile.
+        let mut recipes = Vec::with_capacity(self.apps.len());
+        let mut profiles = BTreeMap::new();
+        for (i, app) in self.apps.iter().enumerate() {
+            let ctx = i as ContextId;
+            let profile = self.manifest.profile(&app.profile)?;
+            let mut recipe =
+                ContextRecipe::smolverify(ctx, profile.weights.bytes);
+            recipe.name = format!("smolverify-{}", app.profile);
+            recipes.push(recipe);
+            profiles.insert(ctx, app.profile.clone());
+        }
         let mut sched = Scheduler::with_registry(
             self.cfg.policy,
-            vec![recipe],
+            recipes,
             TransferPlanner::new(3),
             CostModel::default(),
             self.cfg.cache_capacity_bytes,
         )
         .with_policy(self.cfg.placement.build());
-        sched.submit_tasks(
-            Batcher::new(self.cfg.batch_size)
-                .split(self.cfg.total_inferences, 0, 0),
-        );
+        sched.submit_tasks(self.merged_tasks());
+        let total_inferences: u64 =
+            self.apps.iter().map(|a| a.total_inferences).sum();
 
-        // Spin up worker threads.
         let cache_root = std::env::temp_dir().join(format!(
             "pcm-live-{}-{}",
             std::process::id(),
             self.cfg.seed
         ));
-        let (result_tx, result_rx) = mpsc::channel::<WorkerMsg>();
-        let mut order_txs: HashMap<u32, mpsc::Sender<WorkOrder>> =
-            HashMap::new();
-        let mut joins = Vec::new();
-        for (i, &speed) in self.cfg.worker_speeds.iter().enumerate() {
-            // Register with the scheduler (GPU label ≈ speed class).
-            let gpu = if speed >= 1.0 {
-                GpuModel::A10
-            } else {
-                GpuModel::TitanXPascal
-            };
-            let wid = sched.worker_join(Node { id: i as u32, gpu }, 0.0);
-            let (tx, rx) = mpsc::channel::<WorkOrder>();
-            // ModelContext (PJRT handles) is !Send — build the worker
-            // inside its own thread from Send-able parts only.
-            let manifest = Arc::clone(&self.manifest);
-            let profile = self.cfg.profile.clone();
-            let workload = Arc::clone(&self.workload);
-            let root = cache_root.clone();
-            let out = result_tx.clone();
-            let node_id = i as u32;
-            let persist = self.cfg.persist_node_caches;
-            joins.push(std::thread::spawn(move || {
-                let w = LiveWorker::new(
-                    wid, node_id, speed, manifest, profile, workload, &root,
-                    persist,
-                );
-                w.run(rx, out)
-            }));
-            order_txs.insert(wid, tx);
-        }
-        drop(result_tx);
+        let shared = Arc::new(LiveWorkerShared {
+            manifest: Arc::clone(&self.manifest),
+            profiles,
+            workloads: self.workloads.clone(),
+            cache_root: cache_root.clone(),
+            persist_cache: self.cfg.persist_node_caches,
+            backend: self.cfg.backend,
+            stage_bytes_per_s: self.cfg.stage_bytes_per_s,
+            execute_floor_s: self.cfg.execute_floor_s,
+        });
 
-        let app = PffApp::new((*self.workload).clone());
-        let mut accuracy =
-            AccuracyReport::new(self.workload.template());
+        // Keep one sender alive for respawns; worker clones hang off it.
+        let (result_tx, result_rx) = mpsc::channel::<WorkerMsg>();
+        let mut pool = Pool::default();
         let t0 = Instant::now();
+        for node in 0..self.cfg.worker_speeds.len() {
+            spawn_worker(
+                &mut sched,
+                &mut pool,
+                &shared,
+                &result_tx,
+                &self.cfg.worker_speeds,
+                node as NodeId,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+
+        // Wall-clock churn schedule (events on nodes without a worker
+        // slot are meaningless and dropped).
+        let mut churn: VecDeque<PendingChurn> = self
+            .cfg
+            .node_trace
+            .as_ref()
+            .map(|tr| {
+                tr.events()
+                    .iter()
+                    .filter(|e| {
+                        (e.node as usize) < self.cfg.worker_speeds.len()
+                    })
+                    .map(|e| PendingChurn {
+                        at: e.time,
+                        node: e.node,
+                        up: e.up,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let mut accum: BTreeMap<ContextId, AppAccum> = self
+            .apps
+            .iter()
+            .enumerate()
+            .map(|(i, app)| {
+                let ctx = i as ContextId;
+                let workload = (*self.workloads[&ctx]).clone();
+                let template = workload.template();
+                (
+                    ctx,
+                    AppAccum {
+                        profile: app.profile.clone(),
+                        scorer: PffApp::new(workload),
+                        accuracy: AccuracyReport::new(template),
+                        latency: Summary::new(),
+                        completed: 0,
+                    },
+                )
+            })
+            .collect();
         let mut dispatched_at: HashMap<u64, f64> = HashMap::new();
         let mut latency = Summary::new();
         let mut records = Vec::new();
+        let mut warm_started: BTreeMap<WorkerId, u64> = BTreeMap::new();
+        let mut warm_contexts: BTreeMap<WorkerId, Vec<ContextId>> =
+            BTreeMap::new();
+        let mut restarts = 0u32;
 
-        // Initial dispatch.
-        let send_dispatches =
-            |sched: &mut Scheduler,
-             dispatched_at: &mut HashMap<u64, f64>| {
-                for d in sched.try_dispatch() {
-                    let (start, count) = if Scheduler::is_prefetch_id(d.task)
+        send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
+
+        // Event loop: worker messages interleaved with due churn
+        // events. Wrapped so every exit — success, watchdog, drained
+        // pool, task failure — funnels through the shutdown below
+        // (threads joined, cache root cleaned) instead of leaking them
+        // on the error paths.
+        let loop_result: Result<()> = (|| {
+        let mut last_progress = Instant::now();
+        while !sched.all_done() {
+            let now = t0.elapsed().as_secs_f64();
+            // A still-scheduled churn event is progress-to-come (a long
+            // down window is not a stall — same reasoning as the
+            // drained-pool check below); once the trace is exhausted,
+            // silence means a wedge.
+            let awaiting_churn =
+                churn.front().is_some_and(|e| e.at > now);
+            anyhow::ensure!(
+                self.cfg.watchdog_s <= 0.0
+                    || awaiting_churn
+                    || last_progress.elapsed().as_secs_f64()
+                        < self.cfg.watchdog_s,
+                "live run watchdog: no progress for {}s with {} tasks \
+                 outstanding",
+                last_progress.elapsed().as_secs(),
+                sched.ready_count() + sched.running_count()
+            );
+
+            // Execute every churn event that has come due.
+            let mut churned = false;
+            while churn.front().is_some_and(|e| e.at <= now) {
+                let e = churn.pop_front().unwrap();
+                if e.up {
+                    if let Some(wid) = rejoin_node(
+                        &mut sched,
+                        &mut pool,
+                        &shared,
+                        &result_tx,
+                        &self.cfg.worker_speeds,
+                        e.node,
+                        t0.elapsed().as_secs_f64(),
+                    ) {
+                        restarts += 1;
+                        let (restored_bytes, full, dropped) = {
+                            let w = sched.worker(wid).expect("just joined");
+                            // Which contexts came back whole? Only those
+                            // start stage-free on this incarnation. And
+                            // which came back not at all? Their leftover
+                            // files (an eviction pending at kill time, a
+                            // stale-version drop) must leave the disk
+                            // too, or real usage would exceed the
+                            // restored accounting.
+                            let mut full = Vec::new();
+                            let mut dropped = Vec::new();
+                            for r in sched.recipes() {
+                                let comps =
+                                    r.cached_components(self.cfg.policy);
+                                if !comps.is_empty()
+                                    && comps.iter().all(|c| {
+                                        w.has_cached(r.id, c.kind)
+                                    })
+                                {
+                                    full.push(r.id);
+                                }
+                                if w.cached_bytes(r.id) == 0 {
+                                    dropped.push(r.id);
+                                }
+                            }
+                            let bytes = w
+                                .warm_started()
+                                .then_some(w.cached_bytes_total());
+                            (bytes, full, dropped)
+                        };
+                        if let Some(bytes) = restored_bytes {
+                            warm_started.insert(wid, bytes);
+                            warm_contexts.insert(wid, full);
+                        }
+                        // Prune before the incarnation serves anything
+                        // (its first order arrives only after the
+                        // send_dispatches below).
+                        let node_dir = shared
+                            .cache_root
+                            .join(format!("node-{}", e.node));
+                        for ctx in dropped {
+                            let _ = std::fs::remove_dir_all(
+                                node_dir.join(format!("ctx-{ctx}")),
+                            );
+                        }
+                    }
+                } else {
+                    kill_node(&mut sched, &mut pool, e.node);
+                    if !self.cfg.persist_node_caches {
+                        // The dying incarnation wipes its node dir on
+                        // exit, so the scheduler must not remember a
+                        // snapshot of bytes that no longer exist — a
+                        // rejoin under this config is genuinely cold.
+                        sched.drop_node_cache(e.node);
+                    }
+                }
+                churned = true;
+            }
+            if churned {
+                last_progress = Instant::now();
+                // Requeued tasks may redispatch; a respawned worker may
+                // take one immediately.
+                send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
+            }
+
+            let timeout = churn
+                .front()
+                .map(|e| (e.at - now).clamp(0.001, 0.2))
+                .unwrap_or(0.2);
+            let msg = match result_rx
+                .recv_timeout(Duration::from_secs_f64(timeout))
+            {
+                Ok(msg) => msg,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Nothing can ever progress again: no workers, no
+                    // scheduled rejoins, work outstanding.
+                    if sched.connected_workers() == 0
+                        && !churn.iter().any(|e| e.up)
                     {
-                        // Stage-only prefetch plan: no inference range,
-                        // no latency accounting.
-                        (0, 0)
-                    } else {
-                        let meta = sched.task_meta(d.task).unwrap();
-                        // start is task.start; scheduler does not expose it —
-                        // recompute from batching (dense contiguous split).
-                        let start = d.task * self.cfg.batch_size;
-                        dispatched_at
-                            .insert(d.task, t0.elapsed().as_secs_f64());
-                        (start, meta.1)
-                    };
-                    order_txs[&d.worker]
-                        .send(WorkOrder {
-                            task: d.task,
-                            start,
-                            count,
-                            phases: d.phases,
-                        })
-                        .expect("worker alive");
+                        anyhow::bail!(
+                            "live pool drained: no workers and no \
+                             scheduled rejoins with {} tasks outstanding",
+                            sched.ready_count() + sched.running_count()
+                        );
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    unreachable!("driver holds a result sender")
                 }
             };
-        send_dispatches(&mut sched, &mut dispatched_at);
-
-        // Event loop.
-        while !sched.all_done() {
-            let msg = result_rx.recv().expect("workers alive");
+            let from = match &msg {
+                WorkerMsg::PhaseDone { worker, .. }
+                | WorkerMsg::TaskDone { worker, .. }
+                | WorkerMsg::Failed { worker, .. } => *worker,
+            };
+            last_progress = Instant::now();
+            if pool.dead.contains(&from) {
+                // A reclaimed worker's parting words: its task was
+                // requeued (and possibly redispatched under the same
+                // id), so acting on these would corrupt the retry.
+                continue;
+            }
             match msg {
                 WorkerMsg::PhaseDone { task, phase, .. } => {
                     sched.phase_done(task, phase);
+                    forward_evictions(&mut sched, &pool);
                 }
                 WorkerMsg::TaskDone { task, .. }
                     if Scheduler::is_prefetch_id(task) =>
@@ -209,7 +567,7 @@ impl LiveDriver {
                     // A prefetch finished staging (the scheduler already
                     // retired it on its last PhaseDone); the freed warm
                     // worker may take a task right away.
-                    send_dispatches(&mut sched, &mut dispatched_at);
+                    send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
                 }
                 WorkerMsg::TaskDone {
                     worker,
@@ -219,20 +577,27 @@ impl LiveDriver {
                     execute_s,
                 } => {
                     let now = t0.elapsed().as_secs_f64();
-                    let start = task * self.cfg.batch_size;
-                    accuracy.merge(&app.score_batch(start, &verdicts));
+                    let ctx = sched.task_context(task).unwrap_or(0);
+                    let (start, _) =
+                        sched.task_range(task).unwrap_or((0, 0));
                     let d_at =
                         dispatched_at.remove(&task).unwrap_or(0.0);
-                    latency.add(now - d_at);
                     let (attempts, inferences) =
                         sched.task_meta(task).unwrap_or((1, 0));
+                    if let Some(a) = accum.get_mut(&ctx) {
+                        a.accuracy
+                            .merge(&a.scorer.score_batch(start, &verdicts));
+                        a.latency.add(now - d_at);
+                        a.completed += inferences;
+                    }
+                    latency.add(now - d_at);
                     let gpu = sched
                         .worker(worker)
                         .map(|w| w.gpu())
                         .unwrap_or(GpuModel::A10);
                     let rec = TaskRecord {
                         task,
-                        context: sched.task_context(task).unwrap_or(0),
+                        context: ctx,
                         worker,
                         gpu,
                         attempts,
@@ -244,33 +609,216 @@ impl LiveDriver {
                     };
                     records.push(rec.clone());
                     sched.task_done(task, rec);
-                    send_dispatches(&mut sched, &mut dispatched_at);
+                    send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
                 }
                 WorkerMsg::Failed { task, error, .. } => {
                     anyhow::bail!("live task {task} failed: {error}");
                 }
             }
+            debug_assert!(sched.check_conservation());
         }
+        Ok(())
+        })();
 
-        // Shut workers down.
-        drop(order_txs);
-        for j in joins {
+        // Shut workers down — also on the error paths. Stop flags make
+        // threads mid-emulation-sleep exit promptly; closing the order
+        // channels unblocks the idle ones; killed threads were parked.
+        for flag in pool.stop_flags.values() {
+            flag.store(true, Ordering::Relaxed);
+        }
+        pool.order_txs.clear();
+        for (_, j) in pool.threads.drain() {
             let _ = j.join();
         }
-        let _ = std::fs::remove_dir_all(&cache_root);
+        for (_, j) in pool.parked.drain() {
+            let _ = j.join();
+        }
+        let keep = self.cfg.keep_cache_root
+            || std::env::var_os("PCM_KEEP_LIVE_CACHE")
+                .is_some_and(|v| !v.is_empty() && v != "0");
+        if keep {
+            eprintln!(
+                "live cache root kept for inspection: {}",
+                cache_root.display()
+            );
+        } else {
+            let _ = std::fs::remove_dir_all(&cache_root);
+        }
+        loop_result?;
 
         let wall_s = t0.elapsed().as_secs_f64();
-        let completed = sched.progress().completed_inferences;
+        let progress = sched.progress();
+        let completed = progress.completed_inferences;
+        debug_assert_eq!(completed, total_inferences);
+        let mut merged_accuracy: Option<AccuracyReport> = None;
+        let mut per_app = BTreeMap::new();
+        for (ctx, a) in accum {
+            match &mut merged_accuracy {
+                None => merged_accuracy = Some(a.accuracy.clone()),
+                Some(m) => m.merge(&a.accuracy),
+            }
+            per_app.insert(
+                ctx,
+                LiveAppOutcome {
+                    profile: a.profile,
+                    completed_inferences: a.completed,
+                    accuracy: a.accuracy,
+                    task_latency: a.latency,
+                },
+            );
+        }
         Ok(LiveOutcome {
             wall_s,
             completed_inferences: completed,
             throughput_inf_per_s: completed as f64 / wall_s,
-            accuracy,
+            accuracy: merged_accuracy.expect("at least one app"),
             records,
             task_latency: latency,
             cache: sched.cache_stats().clone(),
+            per_app,
+            warm_started,
+            warm_contexts,
+            restarts,
+            evictions: progress.evictions,
+            evicted_inferences: progress.evicted_inferences,
         })
     }
+}
+
+/// One dispatch round: ask the scheduler, forward orders to worker
+/// threads. Ranges come from [`Scheduler::task_range`] — the merged
+/// multi-context id stream has no `task * batch_size` arithmetic. The
+/// scheduler only assigns to connected workers, so a missing channel or
+/// a dead receiver is a driver bug and fails loudly (a silent drop
+/// would park the task as Running forever).
+fn send_dispatches(
+    sched: &mut Scheduler,
+    pool: &Pool,
+    dispatched_at: &mut HashMap<u64, f64>,
+    t0: Instant,
+) {
+    for d in sched.try_dispatch() {
+        let context = sched.dispatch_context(d.task).unwrap_or(0);
+        let (start, count) = if Scheduler::is_prefetch_id(d.task) {
+            // Stage-only prefetch plan: no inference range, no latency
+            // accounting.
+            (0, 0)
+        } else {
+            let range = sched
+                .task_range(d.task)
+                .expect("dispatched task has a range");
+            dispatched_at.insert(d.task, t0.elapsed().as_secs_f64());
+            range
+        };
+        pool.order_txs
+            .get(&d.worker)
+            .expect("dispatched worker has an order channel")
+            .send(LiveOrder::Run(WorkOrder {
+                task: d.task,
+                context,
+                start,
+                count,
+                phases: d.phases,
+            }))
+            .expect("worker thread alive");
+    }
+}
+
+/// Forward freshly decided LRU evictions to their worker threads so the
+/// on-disk cache shrinks with the accounting. The evicted context is
+/// never the worker's in-flight one (the scheduler pins it), so the
+/// cleanup runs safely between that worker's orders. A worker killed
+/// between the decision and the forward has no channel anymore — its
+/// whole incarnation is gone, nothing to clean.
+fn forward_evictions(sched: &mut Scheduler, pool: &Pool) {
+    for (wid, ctx) in sched.take_evictions() {
+        if let Some(tx) = pool.order_txs.get(&wid) {
+            let _ = tx.send(LiveOrder::Evict(ctx));
+        }
+    }
+}
+
+/// Spawn one worker incarnation on `node` and register it everywhere.
+fn spawn_worker(
+    sched: &mut Scheduler,
+    pool: &mut Pool,
+    shared: &Arc<LiveWorkerShared>,
+    result_tx: &mpsc::Sender<WorkerMsg>,
+    speeds: &[f64],
+    node: NodeId,
+    now: f64,
+) -> WorkerId {
+    let speed = speeds[node as usize];
+    // GPU label ≈ speed class (live-mode heterogeneity emulation).
+    let gpu = if speed >= 1.0 {
+        GpuModel::A10
+    } else {
+        GpuModel::TitanXPascal
+    };
+    let wid = sched.worker_join(Node { id: node, gpu }, now);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<LiveOrder>();
+    // ModelContext (PJRT handles) is !Send — build the worker inside its
+    // own thread from Send-able parts only.
+    let worker_shared = Arc::clone(shared);
+    let worker_stop = Arc::clone(&stop);
+    let out = result_tx.clone();
+    let handle = std::thread::spawn(move || {
+        LiveWorker::new(wid, node, speed, worker_shared, worker_stop)
+            .run(rx, out)
+    });
+    pool.order_txs.insert(wid, tx);
+    pool.stop_flags.insert(wid, stop);
+    pool.threads.insert(wid, handle);
+    pool.node_worker.insert(node, wid);
+    wid
+}
+
+/// Reclaim `node` NOW: stop its worker thread, requeue its in-flight
+/// task, snapshot its disk tier for the eventual rejoin. Returns the
+/// killed worker id (None when the node had no live worker).
+fn kill_node(
+    sched: &mut Scheduler,
+    pool: &mut Pool,
+    node: NodeId,
+) -> Option<WorkerId> {
+    pool.down.insert(node);
+    let wid = pool.node_worker.remove(&node)?;
+    if let Some(flag) = pool.stop_flags.remove(&wid) {
+        flag.store(true, Ordering::Relaxed);
+    }
+    // Closing the order channel unblocks a worker waiting for work.
+    pool.order_txs.remove(&wid);
+    if let Some(handle) = pool.threads.remove(&wid) {
+        pool.parked.insert(node, handle);
+    }
+    pool.dead.insert(wid);
+    // Snapshots the disk tier under the node id and requeues the
+    // in-flight task at the queue front (the ordinary retry machinery).
+    sched.worker_evict(wid);
+    Some(wid)
+}
+
+/// A reclaimed node came back: respawn a worker incarnation on it. The
+/// previous incarnation's thread is joined first so two incarnations
+/// never touch the node cache dir concurrently.
+#[allow(clippy::too_many_arguments)]
+fn rejoin_node(
+    sched: &mut Scheduler,
+    pool: &mut Pool,
+    shared: &Arc<LiveWorkerShared>,
+    result_tx: &mpsc::Sender<WorkerMsg>,
+    speeds: &[f64],
+    node: NodeId,
+    now: f64,
+) -> Option<WorkerId> {
+    if !pool.down.remove(&node) {
+        return None; // the node was never reclaimed (or is already up)
+    }
+    if let Some(handle) = pool.parked.remove(&node) {
+        let _ = handle.join();
+    }
+    Some(spawn_worker(sched, pool, shared, result_tx, speeds, node, now))
 }
 
 #[cfg(test)]
@@ -284,5 +832,54 @@ mod tests {
         assert!(c.total_inferences % c.batch_size == 0);
         assert_eq!(c.placement, PolicyKind::Greedy);
         assert!(c.persist_node_caches, "node caches survive by default");
+        assert!(c.apps.is_empty(), "single-app by default");
+        assert!(c.node_trace.is_none(), "no churn by default");
+        assert_eq!(c.backend, BackendKind::Pjrt, "real inference by default");
+        assert_eq!(c.execute_floor_s, 0.0);
+        assert!(!c.keep_cache_root);
+        assert_eq!(c.watchdog_s, DEFAULT_WATCHDOG_S);
+    }
+
+    /// The merged multi-app stream interleaves round-robin with dense
+    /// ids and per-stream ranges intact (the `task_range` contract).
+    #[test]
+    fn merged_tasks_interleave_with_authoritative_ranges() {
+        let cfg = LiveConfig {
+            apps: vec![
+                LiveApp {
+                    profile: "tiny".into(),
+                    total_inferences: 20,
+                    batch_size: 10,
+                },
+                LiveApp {
+                    profile: "small".into(),
+                    total_inferences: 9,
+                    batch_size: 4,
+                },
+            ],
+            ..LiveConfig::default()
+        };
+        // One schema source: the synthetic generator's manifest JSON.
+        let manifest = crate::runtime::Manifest::from_json_str(
+            &crate::runtime::synthetic::synthetic_manifest_json(
+                &crate::runtime::synthetic::default_live_profiles(),
+            ),
+        )
+        .unwrap();
+        let driver = LiveDriver::new(cfg, manifest);
+        let tasks = driver.merged_tasks();
+        // 2 tasks of app 0 + 3 of app 1, round-robin: 0,1,0,1,1.
+        let ctxs: Vec<u32> = tasks.iter().map(|t| t.context).collect();
+        assert_eq!(ctxs, vec![0, 1, 0, 1, 1]);
+        let ids: Vec<u64> = tasks.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "merged ids are dense");
+        // Ranges stay per-stream: app 1's tail task is the 9 % 4 rest.
+        assert_eq!(tasks[4].start, 8);
+        assert_eq!(tasks[4].count, 1);
+        assert_eq!(tasks[2].start, 10, "app 0's second batch");
+        // And per-app workloads cover exactly their advertised totals.
+        assert_eq!(driver.workload(0).unwrap().len(), 20);
+        assert_eq!(driver.workload(1).unwrap().len(), 9);
+        assert!(driver.workload(2).is_none());
     }
 }

@@ -1,12 +1,27 @@
-//! Live mode: the same coordinator driving **real PJRT inference**.
+//! Live mode: the same coordinator driving **real inference**.
 //!
-//! Workers are OS threads, each owning its own PJRT client and (under the
-//! pervasive policy) a resident [`crate::runtime::ModelContext`]. Phase
-//! plans come from the exact same [`crate::coordinator::Scheduler`] the
-//! simulator uses — but here `Stage` copies real artifact bytes into the
-//! worker's cache directory, `Materialize` compiles the HLO and uploads
-//! weights, and `Execute` runs real SmolVerify batches and scores them
-//! against the FEVER-like ground truth.
+//! Workers are OS threads, each owning its own engine backend (real
+//! PJRT, or the deterministic reference scorer in offline builds) and —
+//! under the pervasive policy — a resident
+//! [`crate::runtime::ModelContext`]. Phase plans come from the exact
+//! same [`crate::coordinator::Scheduler`] the simulator uses: `Stage`
+//! copies real artifact bytes into the worker's node-keyed,
+//! per-context cache directory, `Materialize` compiles/loads the model,
+//! and `Execute` runs real SmolVerify batches scored against the
+//! FEVER-like ground truth.
+//!
+//! The live path now matches the sim path end to end:
+//!
+//! * **Multi-application serving** — one [`LiveDriver`] run hosts many
+//!   [`LiveApp`]s with distinct manifest profiles, competing for each
+//!   worker's byte-budgeted cache (registry-driven, per-context
+//!   accuracy/latency/`CacheStats` in [`LiveOutcome`]).
+//! * **Kill/restart warm starts** — a wall-clock-mapped
+//!   [`crate::cluster::NodeAvailabilityTrace`] reclaims live workers
+//!   mid-run (in-flight work requeues through the ordinary retry
+//!   machinery) and respawns them on the same node id, where they
+//!   warm-start from the surviving node cache dir. `pcm experiment
+//!   live-churn` gates this in CI (`live-smoke`).
 //!
 //! This is the end-to-end proof that all three layers compose: Pallas
 //! kernels (L1) inside the JAX-lowered HLO (L2) served by the Rust
@@ -15,4 +30,5 @@
 pub mod driver;
 pub mod worker;
 
-pub use driver::{LiveConfig, LiveDriver, LiveOutcome};
+pub use driver::{LiveApp, LiveAppOutcome, LiveConfig, LiveDriver, LiveOutcome};
+pub use worker::{LiveOrder, LiveWorker, LiveWorkerShared, WorkOrder, WorkerMsg};

@@ -1,6 +1,24 @@
 //! Live worker threads: execute phase plans with real I/O and inference.
+//!
+//! A live worker is one OS thread bound to a *node id*. It serves every
+//! registered application: each context stages into its own
+//! subdirectory of the node-keyed cache dir, carries its own staged
+//! [`WeightStore`], and materializes into the worker's single resident
+//! [`ModelContext`] slot (mirroring the scheduler's one-library-per-
+//! worker model — materializing context B drops context A's volatile
+//! tier, while both contexts' files stay on disk under the cache
+//! budget the scheduler enforces).
+//!
+//! Workers are killable mid-run: the driver flips the stop flag (see
+//! [`LiveWorker::new`]) and drops the order channel; the thread
+//! finishes (at most) its current phase and exits without reporting
+//! further, because the scheduler has already requeued its task. The
+//! node-keyed cache directory survives on disk, so the next incarnation
+//! on the same node warm-starts.
 
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -9,15 +27,32 @@ use anyhow::Context as _;
 
 use crate::app::InferenceWorkload;
 use crate::coordinator::scheduler::PhaseKind;
-use crate::coordinator::{TaskId, WorkerId};
+use crate::coordinator::{ContextId, TaskId, WorkerId};
 use crate::runtime::engine::Verdict;
-use crate::runtime::{Manifest, ModelContext, WeightStore};
+use crate::runtime::{BackendKind, Manifest, ModelContext, WeightStore};
 use crate::Result;
+
+/// Anything the driver can ask a worker thread to do.
+pub enum LiveOrder {
+    /// Execute a task (or prefetch) phase plan.
+    Run(WorkOrder),
+    /// The scheduler LRU-evicted this context from the worker's cache:
+    /// delete its on-disk files and in-memory staged state so the real
+    /// byte footprint shrinks along with the accounting. Never sent for
+    /// the context of an in-flight task (the scheduler pins it).
+    Evict(ContextId),
+}
 
 /// Work order from the driver to a worker thread.
 pub struct WorkOrder {
     pub task: TaskId,
-    /// Inference range `[start, start+count)`.
+    /// The application (context) this order belongs to — selects the
+    /// profile, the cache subdirectory and the workload. Prefetch
+    /// orders carry it too (stage-only plans still need a target dir).
+    pub context: ContextId,
+    /// Inference range `[start, start+count)` in the context's workload
+    /// (scheduler-authoritative via `Scheduler::task_range`; zero for
+    /// prefetch orders).
     pub start: u64,
     pub count: u64,
     pub phases: Vec<PhaseKind>,
@@ -45,48 +80,77 @@ pub enum WorkerMsg {
     },
 }
 
-/// Thread-side state of one live worker.
+/// Immutable configuration shared by every worker incarnation of one
+/// live run (cheap to `Arc` across spawns and respawns).
+pub struct LiveWorkerShared {
+    pub manifest: Arc<Manifest>,
+    /// Context id → manifest profile name (one entry per application).
+    pub profiles: BTreeMap<ContextId, String>,
+    /// Context id → that application's workload.
+    pub workloads: BTreeMap<ContextId, Arc<InferenceWorkload>>,
+    /// Root of the run's node-keyed cache directories.
+    pub cache_root: PathBuf,
+    /// Keep the node dir on disk when the worker exits (warm restarts).
+    pub persist_cache: bool,
+    /// Execution substrate (PJRT / deterministic reference / auto).
+    pub backend: BackendKind,
+    /// Emulated stage bandwidth in bytes/s: each `Stage` phase takes at
+    /// least `bytes / rate` wall seconds (sleeping the remainder after
+    /// the real copy). Live artifacts are small, so without this knob
+    /// staging costs vanish into timer noise; with it, context
+    /// acquisition is deterministic enough for CI gates. `None` = real
+    /// copy time only.
+    pub stage_bytes_per_s: Option<f64>,
+    /// Minimum wall seconds per `Execute` phase (emulates heavier
+    /// models so runs last long enough for mid-run churn; 0 = off).
+    pub execute_floor_s: f64,
+}
+
+impl LiveWorkerShared {
+    fn profile_name(&self, ctx: ContextId) -> Result<&str> {
+        self.profiles
+            .get(&ctx)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no profile for context {ctx}"))
+    }
+}
+
+/// Thread-side state of one live worker incarnation.
 pub struct LiveWorker {
     pub id: WorkerId,
     /// Emulated GPU speed (1.0 = A10-class; <1 adds proportional stall —
     /// the live-mode stand-in for cluster heterogeneity).
     pub speed: f64,
-    manifest: Arc<Manifest>,
-    profile: String,
-    workload: Arc<InferenceWorkload>,
+    shared: Arc<LiveWorkerShared>,
+    /// Kill switch: the driver sets it on reclamation; the thread exits
+    /// after (at most) the phase currently running.
+    stop: Arc<AtomicBool>,
     cache_dir: PathBuf,
-    /// Keep the cache dir on disk when this worker exits, so the next
-    /// worker incarnation on the same node warm-starts from it (the
-    /// live-mode mirror of the sim's node-resident cache directory).
-    persist_cache: bool,
-    staged_weights: Option<WeightStore>,
-    context: Option<ModelContext>,
+    staged_weights: HashMap<ContextId, WeightStore>,
+    /// The single materialized context slot (volatile tier): at most one
+    /// application resident at a time, exactly like the scheduler's
+    /// `LibraryState`.
+    context: Option<(ContextId, ModelContext)>,
 }
 
 impl LiveWorker {
-    #[allow(clippy::too_many_arguments)] // 1:1 with the worker CLI flags
     pub fn new(
         id: WorkerId,
         node: u32,
         speed: f64,
-        manifest: Arc<Manifest>,
-        profile: String,
-        workload: Arc<InferenceWorkload>,
-        cache_root: &std::path::Path,
-        persist_cache: bool,
+        shared: Arc<LiveWorkerShared>,
+        stop: Arc<AtomicBool>,
     ) -> Self {
         // Keyed by NODE, not worker: a worker restarted on the same node
         // finds the previous incarnation's staged files waiting.
-        let cache_dir = cache_root.join(format!("node-{node}"));
+        let cache_dir = shared.cache_root.join(format!("node-{node}"));
         Self {
             id,
             speed,
-            manifest,
-            profile,
-            workload,
+            shared,
+            stop,
             cache_dir,
-            persist_cache,
-            staged_weights: None,
+            staged_weights: HashMap::new(),
             context: None,
         }
     }
@@ -96,31 +160,73 @@ impl LiveWorker {
         &self.cache_dir
     }
 
-    /// Worker main loop: run orders until the channel closes.
-    pub fn run(mut self, orders: Receiver<WorkOrder>, out: Sender<WorkerMsg>) {
-        while let Ok(order) = orders.recv() {
-            if let Err(e) = self.run_order(&order, &out) {
-                let _ = out.send(WorkerMsg::Failed {
-                    worker: self.id,
-                    task: order.task,
-                    error: format!("{e:#}"),
-                });
+    /// One context's subdirectory of the node cache.
+    fn ctx_dir(&self, ctx: ContextId) -> PathBuf {
+        self.cache_dir.join(format!("ctx-{ctx}"))
+    }
+
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Worker main loop: run orders until the channel closes or the
+    /// driver reclaims the node.
+    pub fn run(mut self, orders: Receiver<LiveOrder>, out: Sender<WorkerMsg>) {
+        while !self.stopped() {
+            let Ok(order) = orders.recv() else { break };
+            match order {
+                LiveOrder::Run(order) => {
+                    if let Err(e) = self.run_order(&order, &out) {
+                        let _ = out.send(WorkerMsg::Failed {
+                            worker: self.id,
+                            task: order.task,
+                            error: format!("{e:#}"),
+                        });
+                    }
+                }
+                LiveOrder::Evict(ctx) => self.evict(ctx),
             }
         }
         // The worker process dies; whether its staged files survive on
         // the node is the persistence policy's call. The volatile tier
         // (the materialized context) is dropped with `self` regardless.
-        if !self.persist_cache {
+        if !self.shared.persist_cache {
             let _ = std::fs::remove_dir_all(&self.cache_dir);
+        }
+    }
+
+    /// Apply a scheduler LRU eviction for real: drop the context's
+    /// on-disk cache subdir, its parsed weights, and — mirroring the
+    /// scheduler retiring an evicted context's library — the resident
+    /// materialized context if it belongs to `ctx`.
+    fn evict(&mut self, ctx: ContextId) {
+        let _ = std::fs::remove_dir_all(self.ctx_dir(ctx));
+        self.staged_weights.remove(&ctx);
+        if self.context.as_ref().is_some_and(|(c, _)| *c == ctx) {
+            self.context = None;
+        }
+    }
+
+    /// Sleep `dur_s` wall seconds in small increments, returning early
+    /// when the driver reclaims this worker — emulation sleeps must not
+    /// delay a kill (or the respawn that joins this thread). The full
+    /// duration is honored otherwise: the `stage_bytes_per_s` /
+    /// `execute_floor_s` contracts are exact, and a runaway
+    /// configuration is the driver watchdog's problem, not a reason to
+    /// silently shorten phases.
+    fn sleep_interruptible(&self, dur_s: f64) {
+        let mut left = dur_s;
+        while left > 0.0 && !self.stopped() {
+            let step = left.min(0.025);
+            std::thread::sleep(std::time::Duration::from_secs_f64(step));
+            left -= step;
         }
     }
 
     fn throttle(&self, real_elapsed_s: f64) {
         if self.speed < 1.0 {
             let extra = real_elapsed_s * (1.0 / self.speed - 1.0);
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                extra.min(5.0),
-            ));
+            self.sleep_interruptible(extra.min(5.0));
         }
     }
 
@@ -133,17 +239,41 @@ impl LiveWorker {
         let mut execute_s = 0.0;
         let mut verdicts = Vec::new();
         for (idx, phase) in order.phases.iter().enumerate() {
+            if self.stopped() {
+                // Reclaimed mid-order: the scheduler already requeued
+                // this task; report nothing more (the driver drops any
+                // message from a dead worker id anyway).
+                return Ok(());
+            }
             let t0 = Instant::now();
             match phase {
-                PhaseKind::Stage { component, .. } => {
-                    self.stage(*component)?;
+                PhaseKind::Stage { component, bytes, .. } => {
+                    self.stage(order.context, *component)?;
+                    if let Some(rate) = self.shared.stage_bytes_per_s {
+                        let target = *bytes as f64 / rate.max(1.0);
+                        let left = target - t0.elapsed().as_secs_f64();
+                        if left > 0.0 {
+                            self.sleep_interruptible(left);
+                        }
+                    }
                 }
                 PhaseKind::Sandbox => {
                     std::fs::create_dir_all(self.cache_dir.join("sandbox"))?;
                 }
-                PhaseKind::Materialize { .. } => self.materialize()?,
+                PhaseKind::Materialize { context } => {
+                    self.materialize(*context)?
+                }
                 PhaseKind::Execute { .. } => {
-                    verdicts = self.execute(order.start, order.count)?;
+                    verdicts = self.execute(
+                        order.context,
+                        order.start,
+                        order.count,
+                    )?;
+                    let floor = self.shared.execute_floor_s;
+                    let left = floor - t0.elapsed().as_secs_f64();
+                    if left > 0.0 {
+                        self.sleep_interruptible(left);
+                    }
                 }
                 PhaseKind::Teardown => {
                     // Drop the materialized context (partial policy keeps
@@ -185,75 +315,102 @@ impl LiveWorker {
     }
 
     /// Stage a component: real byte copies from the artifacts directory
-    /// into this worker's cache (the SSD→node hop).
-    fn stage(&mut self, component: crate::coordinator::ComponentKind) -> Result<()> {
+    /// into this worker's per-context cache subdir (the SSD→node hop).
+    fn stage(
+        &mut self,
+        ctx: ContextId,
+        component: crate::coordinator::ComponentKind,
+    ) -> Result<()> {
         use crate::coordinator::ComponentKind::*;
-        std::fs::create_dir_all(&self.cache_dir)?;
-        let profile = self.manifest.profile(&self.profile)?;
+        let dir = self.ctx_dir(ctx);
+        std::fs::create_dir_all(&dir)?;
+        let manifest = &self.shared.manifest;
+        let profile =
+            manifest.profile(self.shared.profile_name(ctx)?)?;
         match component {
             ModelWeights => {
-                let src = self.manifest.path_of(&profile.weights.file);
-                let dst = self.cache_dir.join("weights.bin");
+                let src = manifest.path_of(&profile.weights.file);
+                let dst = dir.join("weights.bin");
                 std::fs::copy(&src, &dst)
                     .with_context(|| format!("staging {}", src.display()))?;
                 // A fresh copy invalidates any in-memory parse (the None
                 // policy re-pays the full staging cost every task).
-                self.staged_weights = None;
+                self.staged_weights.remove(&ctx);
             }
             DepsPackage => {
                 // The HLO files play the role of the software package.
                 for b in &profile.batch_sizes {
                     let f = profile.hlo_file(*b)?;
-                    std::fs::copy(
-                        self.manifest.path_of(f),
-                        self.cache_dir.join(f),
-                    )?;
+                    std::fs::copy(manifest.path_of(f), dir.join(f))?;
                 }
             }
             FunctionCode | ContextCode | ContextInputs => {
                 // Small control-plane payloads: the manifest itself.
                 std::fs::copy(
-                    self.manifest.dir.join("manifest.json"),
-                    self.cache_dir.join("manifest.json"),
+                    manifest.dir.join("manifest.json"),
+                    dir.join("manifest.json"),
                 )?;
             }
         }
         Ok(())
     }
 
-    /// Materialize: parse staged weights, compile HLO, upload buffers.
-    fn materialize(&mut self) -> Result<()> {
-        let profile = self.manifest.profile(&self.profile)?.clone();
-        if self.staged_weights.is_none() {
-            let path = self.cache_dir.join("weights.bin");
+    /// Materialize `ctx`: parse staged weights, "compile" the HLO (PJRT
+    /// or the reference scorer) and make it this worker's resident
+    /// context — displacing whatever context held the slot before.
+    fn materialize(&mut self, ctx: ContextId) -> Result<()> {
+        let profile = self
+            .shared
+            .manifest
+            .profile(self.shared.profile_name(ctx)?)?
+            .clone();
+        if !self.staged_weights.contains_key(&ctx) {
+            let staged = self.ctx_dir(ctx).join("weights.bin");
             // Fall back to the artifact file if the plan skipped staging
             // (cached from an earlier task under Partial policy).
-            let path = if path.exists() {
-                path
+            let path = if staged.exists() {
+                staged
             } else {
-                self.manifest.path_of(&profile.weights.file)
+                self.shared.manifest.path_of(&profile.weights.file)
             };
-            self.staged_weights = Some(WeightStore::load(&profile, path)?);
+            self.staged_weights
+                .insert(ctx, WeightStore::load(&profile, path)?);
         }
-        let ctx = ModelContext::materialize_with_weights(
-            &self.manifest,
+        let mctx = ModelContext::materialize_with_backend(
+            &self.shared.manifest,
             &profile,
             &profile.batch_sizes,
-            self.staged_weights.as_ref().unwrap(),
+            &self.staged_weights[&ctx],
+            self.shared.backend,
         )?;
-        self.context = Some(ctx);
+        self.context = Some((ctx, mctx));
         Ok(())
     }
 
-    /// Execute: real batched inference over the task's claim range.
-    fn execute(&mut self, start: u64, count: u64) -> Result<Vec<Verdict>> {
-        let ctx = self
+    /// Execute: real batched inference over the task's claim range in
+    /// its own context's workload.
+    fn execute(
+        &mut self,
+        ctx: ContextId,
+        start: u64,
+        count: u64,
+    ) -> Result<Vec<Verdict>> {
+        let (resident, mctx) = self
             .context
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("execute without context"))?;
-        let prompts = self.workload.prompt_batch(start, count);
+        anyhow::ensure!(
+            *resident == ctx,
+            "execute for context {ctx} but context {resident} is resident"
+        );
+        let workload = self
+            .shared
+            .workloads
+            .get(&ctx)
+            .ok_or_else(|| anyhow::anyhow!("no workload for context {ctx}"))?;
+        let prompts = workload.prompt_batch(start, count);
         let refs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
-        let logits = ctx.infer_texts(&refs)?;
+        let logits = mctx.infer_texts(&refs)?;
         Ok(logits
             .iter()
             .map(|row| {
@@ -266,5 +423,71 @@ impl LiveWorker {
                 Verdict::from_class(best)
             })
             .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The stop flag makes `run` exit without consuming further orders,
+    /// and a persisted cache dir is left alone while a non-persisted
+    /// one is wiped.
+    #[test]
+    fn stop_flag_exits_and_persistence_policy_applies() {
+        let root = std::env::temp_dir().join(format!(
+            "pcm-live-worker-test-{}",
+            std::process::id()
+        ));
+        crate::runtime::synthetic::write_synthetic_artifacts(
+            &root.join("artifacts"),
+            &crate::runtime::synthetic::default_live_profiles(),
+        )
+        .unwrap();
+        let manifest =
+            Arc::new(Manifest::load(root.join("artifacts")).unwrap());
+        let workload = Arc::new(InferenceWorkload::new(
+            crate::app::FeverDataset::generate(8, 0),
+            crate::app::PromptTemplate::Direct,
+        ));
+        let mk_shared = |persist: bool| {
+            Arc::new(LiveWorkerShared {
+                manifest: Arc::clone(&manifest),
+                profiles: [(0, "tiny".to_string())].into_iter().collect(),
+                workloads: [(0, Arc::clone(&workload))]
+                    .into_iter()
+                    .collect(),
+                cache_root: root.join("cache"),
+                persist_cache: persist,
+                backend: BackendKind::Reference,
+                stage_bytes_per_s: None,
+                execute_floor_s: 0.0,
+            })
+        };
+
+        // Persisting worker: dir survives its exit, but an eviction
+        // order deletes its context's files first.
+        let stop = Arc::new(AtomicBool::new(false));
+        let w = LiveWorker::new(0, 4, 1.0, mk_shared(true), Arc::clone(&stop));
+        let dir = w.cache_dir().to_path_buf();
+        std::fs::create_dir_all(dir.join("ctx-0")).unwrap();
+        std::fs::create_dir_all(dir.join("ctx-1")).unwrap();
+        let (otx, orx) = std::sync::mpsc::channel::<LiveOrder>();
+        let (rtx, _rrx) = std::sync::mpsc::channel::<WorkerMsg>();
+        otx.send(LiveOrder::Evict(1)).unwrap();
+        drop(otx); // channel drains the eviction, then closes
+        w.run(orx, rtx);
+        assert!(dir.join("ctx-0").exists(), "persisted dir survives");
+        assert!(!dir.join("ctx-1").exists(), "evicted ctx files deleted");
+        let _ = stop;
+
+        // Non-persisting worker: dir wiped on exit.
+        let stop2 = Arc::new(AtomicBool::new(true));
+        let w2 = LiveWorker::new(1, 4, 1.0, mk_shared(false), stop2);
+        let (_otx2, orx2) = std::sync::mpsc::channel::<LiveOrder>();
+        let (rtx2, _rrx2) = std::sync::mpsc::channel::<WorkerMsg>();
+        w2.run(orx2, rtx2);
+        assert!(!dir.exists(), "non-persisted dir wiped");
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -108,7 +108,7 @@ const HELP: &str = "\
 pcm — pervasive context management for throughput-oriented LLM inference
 
 USAGE:
-  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|headline|all>
+  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|live-churn|headline|all>
       [--seed N] [--scale F] [--results DIR]
       [--policy|--placement greedy|fairshare|prefetch|riskaware]
       (mixed: two applications with distinct contexts on one pool,
@@ -119,10 +119,15 @@ USAGE:
       (churn: greedy vs riskaware under a reclamation storm — bytes
        re-transferred, evicted work, node-resident warm restarts; at
        scale 1.0 the acceptance gates are enforced, exit 1 on failure)
+      (live-churn: the live path end to end — two tenants on real
+       worker threads, a forced mid-run kill/restart with a node-cache
+       warm start, and two-app contention for a byte-budgeted cache;
+       gates always enforced, exit 1 on failure)
   pcm run <pv-id>        run one experiment (e.g. pv4_100)
   pcm serve              live PJRT serving demo
       [--profile tiny|small] [--policy pervasive|partial|none]
       [--placement greedy|fairshare|prefetch|riskaware]
+      [--backend pjrt|reference|auto]
       [--workers N] [--batch B] [--inferences N]
   pcm tune               adaptive batch-size search (Challenge #6)
   pcm ablate             design-choice ablations (fan-out, eviction
@@ -295,6 +300,30 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
             figures::write_result_file(&results_dir, "policies.txt", &text)?;
             eprintln!("\nreport written under {results_dir}/");
         }
+        "live-churn" => {
+            use pcm::experiments::live_churn;
+            eprintln!(
+                "running live churn experiment (two tenants on real worker \
+                 threads, one forced kill/restart, cache contention; \
+                 synthetic artifacts + reference backend, seed={seed})…"
+            );
+            let r = live_churn::run_live_churn(seed)?;
+            let text = live_churn::report(&r);
+            print!("{text}");
+            figures::write_result_file(&results_dir, "live_churn.txt", &text)?;
+            eprintln!("\nreport written under {results_dir}/");
+            // The live-smoke CI gate: warm restarts must beat cold
+            // starts on the restarted node, the kill must lose no
+            // inference, and cache pressure must evict the larger
+            // context only. Always enforced — the scenario is already
+            // CI-sized.
+            live_churn::verify(&r)?;
+            eprintln!(
+                "live-churn gates passed: warm restart beat cold start; no \
+                 inference lost across the kill; larger context evicted \
+                 first under contention"
+            );
+        }
         "churn" => {
             use pcm::experiments::churn;
             let per_app = ((churn::DEFAULT_INFERENCES_PER_APP as f64 * scale)
@@ -375,6 +404,14 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
         ),
     };
     let placement = flags.get_placement("--placement")?;
+    let backend = match flags.get("--backend") {
+        None => pcm::runtime::BackendKind::Pjrt,
+        Some(s) => pcm::runtime::BackendKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown backend {s:?} (expected pjrt|reference|auto)"
+            )
+        })?,
+    };
     let workers = flags.get_u64("--workers", 2) as usize;
     let batch = flags.get_u64("--batch", 16);
     let inferences = flags.get_u64("--inferences", 128);
@@ -388,16 +425,18 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
         worker_speeds: vec![1.0; workers],
         seed: flags.get_u64("--seed", 0),
         placement,
+        backend,
         ..LiveConfig::default()
     };
     eprintln!(
         "live serving: {} inferences, batch {}, {} workers, {} policy, \
-         {} placement…",
+         {} placement, {} backend…",
         inferences,
         batch,
         workers,
         policy.as_str(),
-        placement.as_str()
+        placement.as_str(),
+        backend.as_str()
     );
     let out = LiveDriver::new(cfg, manifest).run()?;
     println!(

@@ -41,14 +41,87 @@ impl ContextInitStats {
     }
 }
 
+/// Which execution substrate a [`ModelContext`] materializes against.
+///
+/// The runtime's default is [`BackendKind::Pjrt`] — real compiled HLO on
+/// a PJRT device, the configuration every golden-logit number in
+/// EXPERIMENTS.md was recorded with. [`BackendKind::Reference`] is a
+/// deterministic pure-Rust scorer that needs no PJRT shared libraries:
+/// it still stages weights, still validates every HLO artifact against
+/// the manifest, but computes logits as a seeded hash of
+/// `(weights, tokens)` instead of running the model. That keeps the
+/// whole live path — staging, materialization, caching, warm restarts —
+/// executable in offline builds (the `xla` stub) and in CI, where the
+/// `live-smoke` job drives `pcm experiment live-churn` end to end.
+/// [`BackendKind::Auto`] tries PJRT and falls back to the reference
+/// scorer when client creation fails.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Real PJRT: compile the HLO, upload buffers, execute on device.
+    Pjrt,
+    /// Deterministic hash-based scorer; no PJRT required. Logits are a
+    /// pure function of (staged weights, token batch), so accuracy is
+    /// identical across workers, policies and restarts.
+    Reference,
+    /// PJRT when available, reference scorer otherwise.
+    Auto,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "reference",
+            BackendKind::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pjrt" => Some(BackendKind::Pjrt),
+            "reference" | "ref" => Some(BackendKind::Reference),
+            "auto" => Some(BackendKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Backend-specific materialized state.
+enum Backend {
+    Pjrt {
+        client: xla::PjRtClient,
+        executables: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        weight_buffers: Vec<xla::PjRtBuffer>,
+    },
+    Reference {
+        /// Batch sizes "compiled" (validated against the manifest).
+        batches: Vec<usize>,
+        /// FNV fold of every staged weight bit — the seed that makes the
+        /// reference logits a function of the actual staged bytes.
+        fingerprint: u64,
+    },
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(state: u64, value: u64) -> u64 {
+    let mut h = state;
+    for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+        h ^= (value >> shift) & 0xff;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
 /// A fully materialized model context: compiled executables + weights
-/// resident on the device, ready for repeated invocation.
+/// resident on the device (or the reference scorer's weight fingerprint),
+/// ready for repeated invocation.
 pub struct ModelContext {
     profile: ModelProfile,
     tokenizer: HashTokenizer,
-    client: xla::PjRtClient,
-    executables: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    weight_buffers: Vec<xla::PjRtBuffer>,
+    backend: Backend,
     pub init_stats: ContextInitStats,
 }
 
@@ -75,17 +148,43 @@ impl ModelContext {
     /// Materialize from already-staged weights (lets callers time the
     /// staging and materialization phases separately, and lets
     /// partial-context mode re-materialize without re-staging).
+    /// Always the PJRT backend — the historical entry point.
     pub fn materialize_with_weights(
         manifest: &Manifest,
         profile: &ModelProfile,
         batch_sizes: &[usize],
         weights: &WeightStore,
     ) -> Result<Self> {
+        Self::materialize_with_backend(
+            manifest,
+            profile,
+            batch_sizes,
+            weights,
+            BackendKind::Pjrt,
+        )
+    }
+
+    /// Materialize against an explicit backend (see [`BackendKind`]).
+    /// Both backends read and validate every HLO artifact against the
+    /// manifest, so a stale `artifacts/` directory fails identically.
+    pub fn materialize_with_backend(
+        manifest: &Manifest,
+        profile: &ModelProfile,
+        batch_sizes: &[usize],
+        weights: &WeightStore,
+        kind: BackendKind,
+    ) -> Result<Self> {
         if batch_sizes.is_empty() {
             return Err(anyhow!("no batch sizes requested"));
         }
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let client = match kind {
+            BackendKind::Pjrt => Some(
+                xla::PjRtClient::cpu()
+                    .map_err(|e| anyhow!("PJRT CPU client: {e}"))?,
+            ),
+            BackendKind::Reference => None,
+            BackendKind::Auto => xla::PjRtClient::cpu().ok(),
+        };
 
         let t0 = Instant::now();
         let mut executables = BTreeMap::new();
@@ -99,24 +198,44 @@ impl ModelContext {
                 .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
             super::hlo::validate_artifact(&text, profile, b)
                 .map_err(|e| anyhow!("{}: {e}", path.display()))?;
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
-            executables.insert(b, exe);
+            if let Some(client) = &client {
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+                executables.insert(b, exe);
+            }
         }
         let compile_s = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let mut weight_buffers = Vec::with_capacity(weights.tensors.len());
-        for t in &weights.tensors {
-            let buf = client
-                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-                .map_err(|e| anyhow!("uploading {}: {e}", t.name))?;
-            weight_buffers.push(buf);
-        }
+        let backend = match client {
+            Some(client) => {
+                let mut weight_buffers =
+                    Vec::with_capacity(weights.tensors.len());
+                for t in &weights.tensors {
+                    let buf = client
+                        .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                        .map_err(|e| anyhow!("uploading {}: {e}", t.name))?;
+                    weight_buffers.push(buf);
+                }
+                Backend::Pjrt { client, executables, weight_buffers }
+            }
+            None => {
+                let mut fp = FNV_OFFSET;
+                for t in &weights.tensors {
+                    for v in &t.data {
+                        fp = fnv_fold(fp, u64::from(v.to_bits()));
+                    }
+                }
+                Backend::Reference {
+                    batches: batch_sizes.to_vec(),
+                    fingerprint: fp,
+                }
+            }
+        };
         let upload_s = t1.elapsed().as_secs_f64();
 
         let tokenizer = HashTokenizer::new(
@@ -126,9 +245,7 @@ impl ModelContext {
         Ok(Self {
             profile: profile.clone(),
             tokenizer,
-            client,
-            executables,
-            weight_buffers,
+            backend,
             init_stats: ContextInitStats {
                 stage_weights_s: 0.0,
                 compile_s,
@@ -145,8 +262,24 @@ impl ModelContext {
         self.tokenizer
     }
 
+    /// Is this context served by the deterministic reference scorer (vs
+    /// real PJRT execution)?
+    pub fn is_reference(&self) -> bool {
+        matches!(self.backend, Backend::Reference { .. })
+    }
+
     pub fn available_batches(&self) -> Vec<usize> {
-        self.executables.keys().copied().collect()
+        match &self.backend {
+            Backend::Pjrt { executables, .. } => {
+                executables.keys().copied().collect()
+            }
+            Backend::Reference { batches, .. } => {
+                let mut b = batches.clone();
+                b.sort_unstable();
+                b.dedup();
+                b
+            }
+        }
     }
 
     /// Run one already-tokenized batch whose row count exactly matches a
@@ -163,21 +296,51 @@ impl ModelContext {
                 flat_tokens.len()
             ));
         }
-        let exe = self.executables.get(&batch).ok_or_else(|| {
+        let n_classes = self.profile.config.n_classes;
+        let (client, executables, weight_buffers) = match &self.backend {
+            Backend::Reference { batches, fingerprint } => {
+                if !batches.contains(&batch) {
+                    return Err(anyhow!(
+                        "no executable for batch {batch} (have {:?})",
+                        self.available_batches()
+                    ));
+                }
+                // Per-row deterministic logits: an FNV fold of the staged
+                // weights' fingerprint, the class index, and the row's
+                // tokens. Row-independent, so chunking a workload across
+                // different batch sizes cannot change any verdict.
+                let mut out = Vec::with_capacity(batch);
+                for row in flat_tokens.chunks(seq) {
+                    let mut logits = Vec::with_capacity(n_classes);
+                    for c in 0..n_classes {
+                        let mut h = fnv_fold(*fingerprint, c as u64 + 1);
+                        for &t in row {
+                            h = fnv_fold(h, t as u64);
+                        }
+                        logits.push((h % 1_000_003) as f32 / 1_000_003.0);
+                    }
+                    out.push(logits);
+                }
+                return Ok(out);
+            }
+            Backend::Pjrt { client, executables, weight_buffers } => {
+                (client, executables, weight_buffers)
+            }
+        };
+        let exe = executables.get(&batch).ok_or_else(|| {
             anyhow!(
                 "no executable for batch {batch} (have {:?})",
                 self.available_batches()
             )
         })?;
-        let tok_buf = self
-            .client
+        let tok_buf = client
             .buffer_from_host_buffer::<i32>(flat_tokens, &[batch, seq], None)
             .map_err(|e| anyhow!("uploading tokens: {e}"))?;
 
         // Hot path: weights stay device-resident; only tokens moved.
         let mut args: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(self.weight_buffers.len() + 1);
-        args.extend(self.weight_buffers.iter());
+            Vec::with_capacity(weight_buffers.len() + 1);
+        args.extend(weight_buffers.iter());
         args.push(&tok_buf);
 
         let outs = exe
@@ -192,7 +355,6 @@ impl ModelContext {
             .map_err(|e| anyhow!("untuple: {e}"))?
             .to_vec::<f32>()
             .map_err(|e| anyhow!("to_vec: {e}"))?;
-        let n_classes = self.profile.config.n_classes;
         if logits.len() != batch * n_classes {
             return Err(anyhow!(
                 "logits len {} != batch {batch} * classes {n_classes}",
@@ -309,5 +471,99 @@ mod tests {
             upload_s: 0.5,
         };
         assert!((s.total_s() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backend_kind_roundtrip() {
+        for k in [BackendKind::Pjrt, BackendKind::Reference, BackendKind::Auto]
+        {
+            assert_eq!(BackendKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("ref"), Some(BackendKind::Reference));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    fn reference_ctx(dir: &std::path::Path) -> ModelContext {
+        crate::runtime::synthetic::write_synthetic_artifacts(
+            dir,
+            &crate::runtime::synthetic::default_live_profiles(),
+        )
+        .unwrap();
+        let m = crate::runtime::Manifest::load(dir).unwrap();
+        let p = m.profile("tiny").unwrap().clone();
+        let w = crate::runtime::WeightStore::load(
+            &p,
+            m.path_of(&p.weights.file),
+        )
+        .unwrap();
+        ModelContext::materialize_with_backend(
+            &m,
+            &p,
+            &p.batch_sizes,
+            &w,
+            BackendKind::Reference,
+        )
+        .unwrap()
+    }
+
+    /// The reference scorer materializes without PJRT and its verdicts
+    /// are a pure function of (weights, tokens): identical across
+    /// contexts and invariant to batch chunking.
+    #[test]
+    fn reference_backend_is_deterministic_and_chunking_invariant() {
+        let dir = std::env::temp_dir().join(format!(
+            "pcm-ref-backend-{}",
+            std::process::id()
+        ));
+        let a = reference_ctx(&dir);
+        let b = reference_ctx(&dir);
+        assert!(a.is_reference());
+        let texts: Vec<String> =
+            (0..7).map(|i| format!("claim number {i}")).collect();
+        let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+        let la = a.infer_texts(&refs).unwrap();
+        let lb = b.infer_texts(&refs).unwrap();
+        assert_eq!(la, lb, "same weights + tokens → same logits");
+        // One-at-a-time inference agrees with the batched sweep.
+        for (i, r) in refs.iter().enumerate() {
+            let single = a.infer_texts(&[r]).unwrap();
+            assert_eq!(single[0], la[i], "row {i} differs under chunking");
+        }
+        // Logits genuinely depend on the class index (not all equal).
+        assert!(la.iter().any(|row| row[0] != row[1] || row[1] != row[2]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The auto backend degrades to the reference scorer when the PJRT
+    /// client cannot be created (this build links the offline stub).
+    #[test]
+    fn auto_backend_falls_back_to_reference_under_the_stub() {
+        let dir = std::env::temp_dir().join(format!(
+            "pcm-auto-backend-{}",
+            std::process::id()
+        ));
+        crate::runtime::synthetic::write_synthetic_artifacts(
+            &dir,
+            &crate::runtime::synthetic::default_live_profiles(),
+        )
+        .unwrap();
+        let m = crate::runtime::Manifest::load(&dir).unwrap();
+        let p = m.profile("small").unwrap().clone();
+        let w = crate::runtime::WeightStore::load(
+            &p,
+            m.path_of(&p.weights.file),
+        )
+        .unwrap();
+        let ctx = ModelContext::materialize_with_backend(
+            &m,
+            &p,
+            &p.batch_sizes,
+            &w,
+            BackendKind::Auto,
+        )
+        .unwrap();
+        assert!(ctx.is_reference());
+        assert_eq!(ctx.available_batches(), p.batch_sizes);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -16,13 +16,22 @@
 //! upload), and the engine invocation is the per-task work that pervasive
 //! context management amortizes the first two across.
 
+//!
+//! Two execution substrates sit behind [`engine::ModelContext`]
+//! ([`engine::BackendKind`]): real PJRT, and a deterministic pure-Rust
+//! **reference scorer** that needs no PJRT libraries — paired with the
+//! [`synthetic`] artifact generator it keeps the whole live path
+//! (staging, materialization, caching, warm restarts) executable in
+//! offline builds and CI.
+
 pub mod engine;
 pub mod hlo;
 pub mod manifest;
+pub mod synthetic;
 pub mod tokenizer;
 pub mod weights;
 
-pub use engine::{InferenceEngine, ModelContext};
+pub use engine::{BackendKind, InferenceEngine, ModelContext};
 pub use manifest::{Manifest, ModelProfile};
 pub use tokenizer::HashTokenizer;
 pub use weights::WeightStore;

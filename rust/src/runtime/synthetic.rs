@@ -1,0 +1,323 @@
+//! Synthetic artifact sets: a valid `artifacts/` directory without the
+//! Python build.
+//!
+//! The real artifact pipeline (`make artifacts` → `python/compile/aot.py`)
+//! needs JAX and emits multi-megabyte HLO + weight files; CI and the
+//! offline container have neither. This module fabricates a *manifest-
+//! valid* artifact directory — `manifest.json`, raw little-endian
+//! `weights_{profile}.bin`, and HLO text whose entry signature passes
+//! [`super::hlo::validate_artifact`] — so the live driver's staging,
+//! materialization and warm-restart machinery runs end to end against
+//! real files on disk. Pair it with
+//! [`super::engine::BackendKind::Reference`]: the HLO is shape-correct
+//! but not executable, so only the deterministic reference scorer (or a
+//! future real-PJRT artifact set) may sit underneath.
+//!
+//! Everything is deterministic: same spec → bit-identical files.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Context as _;
+
+use crate::util::Json;
+use crate::Result;
+
+/// One synthetic model profile to fabricate.
+#[derive(Debug, Clone)]
+pub struct SyntheticProfileSpec {
+    /// Profile name in the manifest (`tiny`, `small`, …).
+    pub name: String,
+    /// Extra bulk parameters padding the weights file to a target size
+    /// (4 bytes each). Distinct sizes are how two live applications get
+    /// genuinely different staging costs and cache footprints.
+    pub bulk_params: usize,
+    /// Static batch sizes to emit HLO artifacts for.
+    pub batch_sizes: Vec<usize>,
+}
+
+impl SyntheticProfileSpec {
+    pub fn new(
+        name: impl Into<String>,
+        bulk_params: usize,
+        batch_sizes: Vec<usize>,
+    ) -> Self {
+        assert!(!batch_sizes.is_empty(), "profile needs a batch size");
+        Self { name: name.into(), bulk_params, batch_sizes }
+    }
+}
+
+/// The two-profile set the live experiments use: a ~240 KB "tiny" model
+/// and a ~960 KB "small" one (4× the staging bytes), both serving
+/// batches of 1 and 8.
+pub fn default_live_profiles() -> Vec<SyntheticProfileSpec> {
+    vec![
+        SyntheticProfileSpec::new("tiny", 60_000, vec![1, 8]),
+        SyntheticProfileSpec::new("small", 240_000, vec![1, 8]),
+    ]
+}
+
+// Fixed hyperparameters of every synthetic profile (the scheduler and
+// the reference scorer only care about shapes lining up).
+const VOCAB: usize = 32;
+const SEQ: usize = 8;
+const D_MODEL: usize = 16;
+const N_CLASSES: usize = 3;
+
+/// `(name, shape)` of the structured tensors preceding the bulk blob.
+fn structured_params() -> Vec<(&'static str, Vec<usize>)> {
+    vec![
+        ("embed", vec![VOCAB, D_MODEL]),
+        ("head_w", vec![D_MODEL, N_CLASSES]),
+        ("head_b", vec![N_CLASSES]),
+    ]
+}
+
+fn param_specs(spec: &SyntheticProfileSpec) -> Vec<(String, Vec<usize>)> {
+    let mut params: Vec<(String, Vec<usize>)> = structured_params()
+        .into_iter()
+        .map(|(n, s)| (n.to_string(), s))
+        .collect();
+    params.push(("bulk".to_string(), vec![spec.bulk_params]));
+    params
+}
+
+/// Render an HLO text whose ENTRY signature matches the manifest: every
+/// weight tensor (f32, shape-exact, in spec order), then the
+/// `s32[batch, seq]` token array, returning a 1-tuple of
+/// `f32[batch, n_classes]` logits — exactly what
+/// [`super::hlo::validate_artifact`] checks.
+fn render_hlo(params: &[(String, Vec<usize>)], batch: usize) -> String {
+    use std::fmt::Write as _;
+    let dims = |shape: &[usize]| {
+        shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let mut out = String::new();
+    let _ = writeln!(out, "HloModule synthetic_b{batch}\n");
+    let _ = writeln!(out, "ENTRY main.{} {{", params.len() + 2);
+    for (i, (_, shape)) in params.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "  Arg_{i}.{} = f32[{}] parameter({i})",
+            i + 1,
+            dims(shape)
+        );
+    }
+    let n = params.len();
+    let _ = writeln!(
+        out,
+        "  Arg_{n}.{} = s32[{batch},{SEQ}] parameter({n})",
+        n + 1
+    );
+    let _ = writeln!(
+        out,
+        "  logits.{} = f32[{batch},{N_CLASSES}] custom-call(Arg_{n}.{}), \
+         custom_call_target=\"synthetic\"",
+        n + 2,
+        n + 1
+    );
+    let _ = writeln!(
+        out,
+        "  ROOT tuple.{} = (f32[{batch},{N_CLASSES}]) tuple(logits.{})",
+        n + 3,
+        n + 2
+    );
+    out.push_str("}\n");
+    out
+}
+
+/// Deterministic weight bytes: a cheap per-profile LCG pattern, finite
+/// by construction (values in [0, 1)).
+fn render_weights(name: &str, num_params: usize) -> Vec<u8> {
+    let mut state: u64 = 0x9E37_79B9_7F4A_7C15;
+    for b in name.bytes() {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(b as u64);
+    }
+    let mut bytes = Vec::with_capacity(4 * num_params);
+    for _ in 0..num_params {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let v = ((state >> 40) & 0xFFFF) as f32 / 65536.0;
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+fn profile_json(spec: &SyntheticProfileSpec) -> Json {
+    let params = param_specs(spec);
+    let num_params: usize =
+        params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+
+    let mut config = BTreeMap::new();
+    config.insert("profile".into(), Json::Str(spec.name.clone()));
+    config.insert("vocab_size".into(), Json::Num(VOCAB as f64));
+    config.insert("seq_len".into(), Json::Num(SEQ as f64));
+    config.insert("d_model".into(), Json::Num(D_MODEL as f64));
+    config.insert("n_layers".into(), Json::Num(1.0));
+    config.insert("n_heads".into(), Json::Num(2.0));
+    config.insert("d_ff".into(), Json::Num(32.0));
+    config.insert("n_classes".into(), Json::Num(N_CLASSES as f64));
+    config.insert("eps".into(), Json::Num(1e-6));
+
+    let params_json: Vec<Json> = params
+        .iter()
+        .map(|(name, shape)| {
+            let mut p = BTreeMap::new();
+            p.insert("name".into(), Json::Str(name.clone()));
+            p.insert(
+                "shape".into(),
+                Json::Arr(shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+            );
+            Json::Obj(p)
+        })
+        .collect();
+
+    let mut weights = BTreeMap::new();
+    weights.insert(
+        "file".into(),
+        Json::Str(format!("weights_{}.bin", spec.name)),
+    );
+    weights.insert("sha256".into(), Json::Str("synthetic".into()));
+    weights.insert("bytes".into(), Json::Num(4.0 * num_params as f64));
+
+    let mut hlo = BTreeMap::new();
+    for &b in &spec.batch_sizes {
+        let mut h = BTreeMap::new();
+        h.insert(
+            "file".into(),
+            Json::Str(format!("model_{}_b{b}.hlo.txt", spec.name)),
+        );
+        h.insert("sha256".into(), Json::Str("synthetic".into()));
+        hlo.insert(b.to_string(), Json::Obj(h));
+    }
+
+    let mut profile = BTreeMap::new();
+    profile.insert("config".into(), Json::Obj(config));
+    profile.insert("params".into(), Json::Arr(params_json));
+    profile.insert("num_params".into(), Json::Num(num_params as f64));
+    profile.insert("weights".into(), Json::Obj(weights));
+    profile.insert(
+        "batch_sizes".into(),
+        Json::Arr(
+            spec.batch_sizes.iter().map(|b| Json::Num(*b as f64)).collect(),
+        ),
+    );
+    profile.insert("hlo".into(), Json::Obj(hlo));
+    profile.insert(
+        "golden".into(),
+        Json::Str(format!("golden_{}.json", spec.name)),
+    );
+    Json::Obj(profile)
+}
+
+/// The `manifest.json` text for `specs`, without touching disk — the
+/// single source of the synthetic manifest schema (used by the artifact
+/// writer below and by tests that only need a parseable
+/// [`super::Manifest`], via [`super::Manifest::from_json_str`]).
+pub fn synthetic_manifest_json(specs: &[SyntheticProfileSpec]) -> String {
+    let mut profiles = BTreeMap::new();
+    for spec in specs {
+        profiles.insert(spec.name.clone(), profile_json(spec));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("version".into(), Json::Num(2.0));
+    top.insert("seed".into(), Json::Num(0.0));
+    top.insert("profiles".into(), Json::Obj(profiles));
+    Json::Obj(top).to_string()
+}
+
+/// Fabricate a complete artifacts directory at `dir` (created if
+/// missing, files overwritten): `manifest.json`, one weights file and
+/// one HLO text per batch size per profile. The result loads through
+/// [`super::Manifest::load`] and passes its structural validation.
+pub fn write_synthetic_artifacts(
+    dir: impl AsRef<Path>,
+    specs: &[SyntheticProfileSpec],
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+
+    for spec in specs {
+        let params = param_specs(spec);
+        let num_params: usize =
+            params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        std::fs::write(
+            dir.join(format!("weights_{}.bin", spec.name)),
+            render_weights(&spec.name, num_params),
+        )?;
+        for &b in &spec.batch_sizes {
+            std::fs::write(
+                dir.join(format!("model_{}_b{b}.hlo.txt", spec.name)),
+                render_hlo(&params, b),
+            )?;
+        }
+    }
+    std::fs::write(
+        dir.join("manifest.json"),
+        synthetic_manifest_json(specs),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, WeightStore};
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("pcm-synthetic-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn synthetic_artifacts_load_and_validate() {
+        let dir = temp("load");
+        write_synthetic_artifacts(&dir, &default_live_profiles()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["tiny", "small"] {
+            let p = m.profile(name).unwrap();
+            assert_eq!(p.param_elements(), p.num_params);
+            // Weights file exists with exactly the manifest's byte count.
+            let w = WeightStore::load(p, m.path_of(&p.weights.file)).unwrap();
+            w.check_finite().unwrap();
+            assert_eq!(w.total_bytes() as u64, p.weights.bytes);
+            // Every HLO artifact passes the manifest cross-check.
+            for &b in &p.batch_sizes {
+                let text = std::fs::read_to_string(
+                    m.path_of(p.hlo_file(b).unwrap()),
+                )
+                .unwrap();
+                crate::runtime::hlo::validate_artifact(&text, p, b).unwrap();
+            }
+        }
+        // The "small" profile really is bigger than "tiny".
+        let tiny = m.profile("tiny").unwrap().weights.bytes;
+        let small = m.profile("small").unwrap().weights.bytes;
+        assert!(small >= 4 * tiny / 2, "small {small} vs tiny {tiny}");
+        assert!(small > tiny);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn synthetic_artifacts_are_deterministic() {
+        let (d1, d2) = (temp("det-a"), temp("det-b"));
+        let specs = vec![SyntheticProfileSpec::new("t", 1_000, vec![1, 4])];
+        write_synthetic_artifacts(&d1, &specs).unwrap();
+        write_synthetic_artifacts(&d2, &specs).unwrap();
+        for f in ["manifest.json", "weights_t.bin", "model_t_b4.hlo.txt"] {
+            assert_eq!(
+                std::fs::read(d1.join(f)).unwrap(),
+                std::fs::read(d2.join(f)).unwrap(),
+                "{f} must be bit-identical"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Live kill/restart integration: the live driver hosting multiple
+//! applications, losing a worker mid-run to a wall-clock availability
+//! trace, and warm-starting its replacement from the surviving
+//! node-keyed cache directory.
+//!
+//! Unlike the PJRT-gated tests in `live_integration.rs`, everything
+//! here runs offline: artifacts are synthesized
+//! (`runtime::synthetic`) and workers use the deterministic reference
+//! backend — so these tests execute in CI, not just on
+//! artifact-equipped checkouts.
+
+use pcm::cluster::{NodeAvailabilityTrace, NodeChurnEvent};
+use pcm::coordinator::ContextPolicy;
+use pcm::experiments::live_churn;
+use pcm::live::{LiveApp, LiveConfig, LiveDriver};
+use pcm::runtime::synthetic::{
+    default_live_profiles, write_synthetic_artifacts,
+};
+use pcm::runtime::{BackendKind, Manifest};
+
+fn synthetic_manifest(tag: &str) -> (std::path::PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!(
+        "pcm-live-churn-test-{tag}-{}",
+        std::process::id()
+    ));
+    write_synthetic_artifacts(&dir, &default_live_profiles())
+        .expect("synthetic artifacts");
+    let m = Manifest::load(&dir).expect("manifest loads");
+    (dir, m)
+}
+
+/// The full `pcm experiment live-churn` path: both scenarios complete,
+/// every acceptance gate holds, and the report renders its key lines.
+/// This is exactly what the `live-smoke` CI job runs through the CLI.
+#[test]
+fn live_churn_experiment_passes_its_gates() {
+    let r = live_churn::run_live_churn(42).expect("live churn runs");
+    live_churn::verify(&r).expect("acceptance gates hold");
+
+    // (a) No inference lost or double-scored across the kill: every
+    // app's scheduler count and scored count equal its workload.
+    for (ctx, app) in &r.restart.per_app {
+        assert_eq!(
+            app.completed_inferences,
+            live_churn::RESTART_INFERENCES_PER_APP,
+            "ctx {ctx} completed"
+        );
+        assert_eq!(
+            app.accuracy.total,
+            live_churn::RESTART_INFERENCES_PER_APP,
+            "ctx {ctx} scored exactly once per inference"
+        );
+    }
+    // (b) The restarted worker warm-started with real bytes.
+    assert!(!r.restart.warm_started.is_empty());
+    assert!(r.restart.warm_started.values().all(|&b| b > 0));
+    // Restarted worker ids are fresh incarnations (never reused).
+    for wid in r.restart.warm_started.keys() {
+        assert!(*wid >= 1, "incarnation ids grow monotonically");
+    }
+    // (c) Under the shrunken cache, evictions hit the larger context
+    // only.
+    assert!(r.contention.cache.ctx(r.larger_ctx).evictions >= 1);
+    assert_eq!(r.contention.cache.ctx(r.smaller_ctx).evictions, 0);
+
+    let text = live_churn::report(&r);
+    for needle in [
+        "live restart scenario",
+        "warm_started_workers=1",
+        "first-task context seconds",
+        "live contention scenario",
+        "larger",
+    ] {
+        assert!(text.contains(needle), "report missing {needle}:\n{text}");
+    }
+}
+
+/// A hard kill that is *guaranteed* to land mid-task (the execute floor
+/// makes the first task outlive the kill time): the in-flight batch is
+/// requeued through the ordinary retry machinery onto the surviving
+/// worker, nothing is lost, nothing is double-scored, and the dead
+/// incarnation's late messages are discarded.
+#[test]
+fn hard_kill_mid_task_requeues_without_loss() {
+    let (dir, manifest) = synthetic_manifest("hardkill");
+    let per_app: u64 = 24;
+    let cfg = LiveConfig {
+        policy: ContextPolicy::Pervasive,
+        apps: vec![
+            LiveApp {
+                profile: "tiny".into(),
+                total_inferences: per_app,
+                batch_size: 8,
+            },
+            LiveApp {
+                profile: "small".into(),
+                total_inferences: per_app,
+                batch_size: 8,
+            },
+        ],
+        worker_speeds: vec![1.0, 1.0],
+        seed: 7,
+        backend: BackendKind::Reference,
+        // First TaskDone cannot arrive before the 0.25 s execute floor,
+        // so a kill at 0.12 s always interrupts an in-flight task.
+        execute_floor_s: 0.25,
+        node_trace: Some(NodeAvailabilityTrace::from_events(vec![
+            NodeChurnEvent { time: 0.12, node: 0, up: false },
+        ])),
+        ..LiveConfig::default()
+    };
+    let out = LiveDriver::new(cfg, manifest).run().expect("run completes");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_eq!(out.completed_inferences, 2 * per_app, "no work lost");
+    assert_eq!(out.evictions, 1, "exactly one kill");
+    assert_eq!(out.restarts, 0, "node 0 never rejoins");
+    assert!(
+        out.evicted_inferences > 0,
+        "the kill must have interrupted an in-flight batch"
+    );
+    // The interrupted batch re-ran: its completion record counts both
+    // attempts, and each app still scored exactly its workload.
+    assert!(
+        out.records.iter().any(|r| r.attempts >= 2),
+        "requeued task completes with attempts >= 2: {:?}",
+        out.records.iter().map(|r| r.attempts).collect::<Vec<_>>()
+    );
+    for (ctx, app) in &out.per_app {
+        assert_eq!(app.completed_inferences, per_app, "ctx {ctx}");
+        assert_eq!(app.accuracy.total, per_app, "ctx {ctx} single-scored");
+    }
+    // Every surviving completion ran on the surviving worker or before
+    // the kill on worker 0 — never on a dead incarnation after its kill.
+    assert!(out.warm_started.is_empty(), "nothing ever rejoined");
+}
+
+/// `keep_cache_root` (the `PCM_KEEP_LIVE_CACHE` config twin) leaves the
+/// run's node-keyed cache dirs on disk for inspection — including the
+/// per-context subdirectories a future incarnation would warm-start
+/// from.
+#[test]
+fn keep_cache_root_preserves_node_dirs() {
+    let (dir, manifest) = synthetic_manifest("keeproot");
+    let seed = 777_001;
+    let cfg = LiveConfig {
+        policy: ContextPolicy::Pervasive,
+        profile: "tiny".into(),
+        total_inferences: 16,
+        batch_size: 8,
+        worker_speeds: vec![1.0],
+        seed,
+        backend: BackendKind::Reference,
+        persist_node_caches: true,
+        keep_cache_root: true,
+        ..LiveConfig::default()
+    };
+    let out = LiveDriver::new(cfg, manifest).run().expect("run completes");
+    assert_eq!(out.completed_inferences, 16);
+    let root = std::env::temp_dir()
+        .join(format!("pcm-live-{}-{seed}", std::process::id()));
+    assert!(root.exists(), "cache root kept at {}", root.display());
+    let ctx_dir = root.join("node-0").join("ctx-0");
+    assert!(
+        ctx_dir.join("weights.bin").exists(),
+        "staged weights survive under the node-keyed per-context dir"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&dir);
+}
