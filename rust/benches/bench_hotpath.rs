@@ -140,6 +140,81 @@ fn churn_dispatch(tasks: u64, workers: u32) -> u64 {
     completed
 }
 
+fn rec(task: u64, worker: u32, attempts: u32, inferences: u64) -> TaskRecord {
+    TaskRecord {
+        task,
+        context: 0,
+        worker,
+        gpu: GpuModel::A10,
+        attempts,
+        inferences,
+        dispatched_at: 0.0,
+        completed_at: 1.0,
+        context_s: 0.0,
+        execute_s: 1.0,
+    }
+}
+
+/// Build a steady-state pool: `workers` warm workers all running a task,
+/// `tasks` single-inference tasks queued behind them. The returned
+/// in-flight ring is popped/refilled by [`dispatch_rounds`].
+fn steady_state(
+    workers: u32,
+    tasks: u64,
+) -> (Scheduler, std::collections::VecDeque<(u64, u32)>) {
+    let mut s = Scheduler::new(
+        ContextPolicy::Pervasive,
+        ContextRecipe::smollm2_pff(0),
+        TransferPlanner::new(3),
+    );
+    s.submit_tasks(Batcher::new(1).split(tasks, 0, 0));
+    for i in 0..workers {
+        s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+    }
+    // First wave stages the context everywhere; run it to completion so
+    // every worker is library-warm before anything is timed.
+    for d in s.try_dispatch() {
+        for i in 0..d.phases.len() {
+            s.phase_done(d.task, i);
+        }
+        let (attempts, inferences) = s.task_meta(d.task).unwrap();
+        s.task_done(d.task, rec(d.task, d.worker, attempts, inferences));
+    }
+    // Second wave is pure warm dispatch — this is the steady state.
+    let mut inflight = std::collections::VecDeque::new();
+    for d in s.try_dispatch() {
+        inflight.push_back((d.task, d.worker));
+    }
+    (s, inflight)
+}
+
+/// One steady-state dispatch round: complete the oldest in-flight task
+/// (freeing one warm worker) and re-dispatch from the deep backlog.
+/// Pre-index, each round re-derived idle/warm state by scanning the
+/// whole pool — O(workers) with 4999 of 5000 workers busy; indexed, it
+/// touches only the freed worker and the queue head. The CI flatness
+/// gate at the bottom of `main` asserts the 5k-node round costs no more
+/// than 3× the 1k-node round.
+fn dispatch_rounds(
+    s: &mut Scheduler,
+    inflight: &mut std::collections::VecDeque<(u64, u32)>,
+    rounds: u32,
+) -> u64 {
+    let mut dispatched = 0u64;
+    for _ in 0..rounds {
+        let (task, worker) = inflight.pop_front().expect("ring never drains");
+        // A warm plan is a bare Execute phase.
+        s.phase_done(task, 0);
+        let (attempts, inferences) = s.task_meta(task).unwrap();
+        s.task_done(task, rec(task, worker, attempts, inferences));
+        for d in s.try_dispatch() {
+            inflight.push_back((d.task, d.worker));
+            dispatched += 1;
+        }
+    }
+    dispatched
+}
+
 /// Write collected results as JSON when `PCM_BENCH_JSON` names a path
 /// (the perf-trajectory baseline future PRs diff against). Merges by
 /// case name into whatever the file already holds — a partial run must
@@ -226,6 +301,30 @@ fn main() {
         iters(10),
         || churn_dispatch(1_000, 20),
     ));
+    // Indexed-dispatch flatness: per-round cost must not scale with the
+    // pool. Both cases run 64 steady-state rounds against a 1M-task
+    // backlog; only the pool size differs (1k vs 5k nodes).
+    let (mut s1k, mut ring1k) = steady_state(1_000, 1_000_000);
+    let r1k = bench(
+        "dispatch round: 1k nodes / 1M queued (64 rounds)",
+        1,
+        iters(10),
+        || dispatch_rounds(&mut s1k, &mut ring1k, 64),
+    );
+    let median_1k = r1k.median_s;
+    results.push(r1k);
+    drop((s1k, ring1k));
+    let (mut s5k, mut ring5k) = steady_state(5_000, 1_000_000);
+    let r5k = bench(
+        "dispatch round: 5k nodes / 1M queued (64 rounds)",
+        1,
+        iters(10),
+        || dispatch_rounds(&mut s5k, &mut ring5k, 64),
+    );
+    let median_5k = r5k.median_s;
+    results.push(r5k);
+    drop((s5k, ring5k));
+
     results.push(bench(
         "broadcast plan: 567 workers, fanout 3",
         5,
@@ -321,4 +420,25 @@ fn main() {
         eprintln!("(artifacts not built; skipping PJRT benches)");
     }
     emit_json(&results);
+
+    // CI gate: a dispatch round must stay near-O(changes). With 5× the
+    // nodes (and the same 1M-task backlog) the per-round median may be
+    // at most 3× the 1k-node round — a linear pool re-scan would land at
+    // ~5×. The floor keeps sub-microsecond medians from tripping the
+    // ratio on timer noise.
+    let floor_s = 20e-6; // 64 rounds → ~0.3 µs/round noise floor
+    let base = median_1k.max(floor_s);
+    let ratio = median_5k / base;
+    eprintln!(
+        "dispatch-round flatness: 1k={:.1}us 5k={:.1}us ratio={ratio:.2} (limit 3.00)",
+        median_1k * 1e6,
+        median_5k * 1e6,
+    );
+    if median_5k > 3.0 * base {
+        eprintln!(
+            "FLATNESS VIOLATION: 5k-node dispatch round is {ratio:.2}x the \
+             1k-node round (limit 3x) — dispatch is scaling with pool size"
+        );
+        std::process::exit(1);
+    }
 }

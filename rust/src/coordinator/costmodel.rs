@@ -161,6 +161,22 @@ impl CostModel {
     pub fn est_sandbox_s(&self) -> f64 {
         self.sandbox_s
     }
+
+    /// Estimated mean execute seconds for `inferences` at
+    /// `relative_speed` (1.0 = reference A10), with the denominator
+    /// clamped to a positive epsilon: callers may hold a speed of `0.0`
+    /// for a worker that vanished mid-round, and `0 × c / 0` would
+    /// otherwise be NaN — a zero-speed query instead returns a finite,
+    /// astronomically large time (the correct "never place here"
+    /// ordering signal).
+    pub fn est_execute_clamped_s(
+        &self,
+        inferences: u64,
+        relative_speed: f64,
+    ) -> f64 {
+        inferences as f64 * self.a10_per_inference_s
+            / relative_speed.max(1e-9)
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +263,18 @@ mod tests {
                 < cm.est_materialize_s(GpuModel::TitanXPascal)
         );
         assert_eq!(cm.est_sandbox_s(), cm.sandbox_s);
+    }
+
+    #[test]
+    fn clamped_execute_estimate_never_nan() {
+        let cm = CostModel::default();
+        // Dead-worker sentinel speed, including the 0 × c / 0 corner.
+        assert!(cm.est_execute_clamped_s(0, 0.0).is_finite());
+        assert!(cm.est_execute_clamped_s(100, 0.0).is_finite());
+        assert!(cm.est_execute_clamped_s(100, 0.0) > 1e9);
+        // Live speeds match the unclamped arithmetic.
+        let live = cm.est_execute_clamped_s(100, 2.0);
+        assert!((live - 100.0 * cm.a10_per_inference_s / 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -139,8 +139,21 @@ impl NodeCacheDirectory {
             let persisted = entry.versions.get(&ctx).copied().unwrap_or(0);
             match current_version(ctx) {
                 Some(v) if v == persisted => {
-                    let (cached, _evicted) =
+                    let (cached, evicted) =
                         worker.insert_cached(ctx, kind, bytes, None);
+                    // A snapshot written by a bigger disk slot can
+                    // overflow this incarnation's cache: the insert
+                    // then LRU-evicts an earlier-restored context
+                    // wholesale. Un-count what just vanished, or the
+                    // summary (and the worker's warm-start tally)
+                    // would advertise warmth the cache no longer
+                    // holds.
+                    for e in evicted {
+                        if let Some((n, _)) = summary.restored.remove(&e) {
+                            worker.warm_start_components =
+                                worker.warm_start_components.saturating_sub(n);
+                        }
+                    }
                     if cached {
                         worker.set_cached_version(ctx, persisted);
                         worker.warm_start_components += 1;
@@ -248,6 +261,36 @@ mod tests {
         let mut fresh2 = worker_on(2, 1_000);
         let summary2 = dir.restore_into(&mut fresh2, |_| None);
         assert_eq!(summary2.total_components(), 0);
+    }
+
+    /// Regression: a snapshot written by a bigger disk slot can force
+    /// the restore's own inserts to LRU-evict an earlier-restored
+    /// context wholesale — the summary and the worker's warm-start
+    /// tally must only count what actually survives the whole replay.
+    #[test]
+    fn restore_into_smaller_disk_uncounts_evicted_contexts() {
+        let mut dir = NodeCacheDirectory::new();
+        let mut big = worker_on(9, 1_000);
+        big.insert_cached(0, ComponentKind::DepsPackage, 400, None);
+        big.insert_cached(1, ComponentKind::ModelWeights, 500, None);
+        dir.persist(&big);
+
+        // Replay order is (ctx, kind) ascending: ctx 0 restores first,
+        // then ctx 1's 500 bytes no longer fit 600 and evict it.
+        let mut small = worker_on(9, 600);
+        let summary = dir.restore_into(&mut small, |_| Some(0));
+        assert!(!small.has_cached(0, ComponentKind::DepsPackage));
+        assert!(small.has_cached(1, ComponentKind::ModelWeights));
+        assert_eq!(
+            summary.restored.get(&0),
+            None,
+            "evicted context must not be reported as restored"
+        );
+        assert_eq!(summary.restored.get(&1), Some(&(1, 500)));
+        assert_eq!(summary.total_components(), 1);
+        assert_eq!(summary.total_bytes(), 500);
+        assert_eq!(small.warm_start_components, 1);
+        assert!(dir.check_capacity());
     }
 
     #[test]

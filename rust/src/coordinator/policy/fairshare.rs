@@ -17,8 +17,17 @@
 //! bank more than one max-task burst of priority, and conversely a
 //! backlogged tenant is served at least once per full sweep.
 //! `tests/proptests.rs` checks the bound under random storms.
+//!
+//! Hot path: the sweep never materializes the backlog. It reads a
+//! bounded head *window* per backlogged context (window length = the
+//! idle-worker count, which upper-bounds total placements per round)
+//! plus the scheduler's O(1) per-context counters and batch-size
+//! multisets, so a million-task queue costs the same per round as a
+//! hundred-task one. `tests/policy_indexed_golden.rs` proves the
+//! windowed sweep's decisions byte-match the original whole-queue
+//! implementation.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
 use super::super::context::ContextId;
 use super::{
@@ -53,35 +62,52 @@ impl PlacementPolicy for WeightedFairShare {
 
     fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
         let mut decisions = Vec::new();
-        let queued = view.queued();
-        if queued.is_empty() {
+        if view.queued_total() == 0 {
             self.deficits.clear();
             return decisions;
         }
         let mut idle = view.idle_workers();
 
-        // Per-context FIFO queues (queue order preserved within a ctx).
-        let mut queues: BTreeMap<ContextId, VecDeque<QueuedTask>> =
-            BTreeMap::new();
-        for q in queued {
-            queues.entry(q.context).or_default().push_back(q);
+        // Bounded per-context state instead of cloning the backlog: the
+        // sweep places at most `idle.len()` tasks total, so a window of
+        // that many head tasks per context is exhaustive — draining a
+        // whole window consumes every idle worker and ends the round.
+        // `remaining` and the batch-size multiset track the *full*
+        // backlog (maintained counters, O(distinct sizes)), so deficit
+        // clamps still see tasks far beyond the window.
+        struct CtxQueue {
+            window: Vec<QueuedTask>,
+            cursor: usize,
+            remaining: u64,
+            sizes: BTreeMap<u64, u64>,
         }
+        let mut queues: BTreeMap<ContextId, CtxQueue> = view
+            .queued_by_context()
+            .iter()
+            .map(|(&ctx, &n)| {
+                let q = CtxQueue {
+                    window: view.queued_of_context(ctx, idle.len()),
+                    cursor: 0,
+                    remaining: n,
+                    sizes: view.queued_sizes_of(ctx),
+                };
+                (ctx, q)
+            })
+            .collect();
+        let mut remaining_total: u64 =
+            queues.values().map(|q| q.remaining).sum();
         // A context with no backlog holds no credit (classic DRR reset).
         self.deficits.retain(|ctx, _| queues.contains_key(ctx));
 
         // Quantum: the largest queued batch, so one credit of weight 1.0
         // always affords at least the head task — every backlogged
         // context is served within one sweep of a free worker.
-        let quantum = queues
-            .values()
-            .flat_map(|q| q.iter().map(|t| t.inferences))
-            .max()
-            .unwrap_or(1) as f64;
+        let quantum = view.max_queued_inferences().unwrap_or(1) as f64;
 
-        while !idle.is_empty() && queues.values().any(|q| !q.is_empty()) {
+        while !idle.is_empty() && remaining_total > 0 {
             let mut progressed = false;
             for (ctx, q) in queues.iter_mut() {
-                if q.is_empty() || idle.is_empty() {
+                if q.remaining == 0 || idle.is_empty() {
                     continue;
                 }
                 let d = self.deficits.entry(*ctx).or_insert(0.0);
@@ -96,22 +122,31 @@ impl PlacementPolicy for WeightedFairShare {
                 if w.is_finite() && w > 0.0 {
                     *d += quantum * w;
                 }
-                while let Some(head) = q.front().copied() {
+                // The window can only run out together with the idle
+                // set (window length = initial idle count), so cursor
+                // exhaustion exits exactly where an empty queue would.
+                while q.cursor < q.window.len() {
+                    let head = q.window[q.cursor];
                     if idle.is_empty() || *d + 1e-9 < head.inferences as f64 {
                         break;
                     }
                     let best = pick_best_worker(view, &idle, *ctx);
                     let wid = idle.swap_remove(best);
                     *d -= head.inferences as f64;
-                    q.pop_front();
+                    q.cursor += 1;
+                    q.remaining -= 1;
+                    remaining_total -= 1;
+                    dec_size(&mut q.sizes, head.inferences);
                     decisions.push(PlacementDecision::Assign {
                         task: head.task,
                         worker: wid,
                     });
                     progressed = true;
                 }
-                // Starvation bound: never bank more than one max burst.
-                if let Some(max_left) = q.iter().map(|t| t.inferences).max() {
+                // Starvation bound: never bank more than one max burst
+                // (multiset max = largest batch still queued anywhere
+                // in this context's backlog, windowed or not).
+                if let Some((&max_left, _)) = q.sizes.last_key_value() {
                     *d = d.min(max_left as f64);
                 }
             }
@@ -127,7 +162,10 @@ impl PlacementPolicy for WeightedFairShare {
                 // sweep is unaffected, and the one-burst bound still
                 // holds (head ≤ max remaining burst).
                 for (ctx, q) in queues.iter() {
-                    if let Some(head) = q.front() {
+                    if q.remaining == 0 {
+                        continue;
+                    }
+                    if let Some(head) = q.window.get(q.cursor) {
                         let d = self.deficits.entry(*ctx).or_insert(0.0);
                         *d = d.max(head.inferences as f64);
                     }
@@ -138,15 +176,25 @@ impl PlacementPolicy for WeightedFairShare {
         // Normalize leftover credit: drained contexts forfeit theirs,
         // backlogged ones stay within one burst of what remains queued.
         self.deficits.retain(|ctx, d| match queues.get(ctx) {
-            Some(q) if !q.is_empty() => {
+            Some(q) if q.remaining > 0 => {
                 let max_left =
-                    q.iter().map(|t| t.inferences).max().unwrap_or(1);
+                    q.sizes.last_key_value().map(|(&k, _)| k).unwrap_or(1);
                 *d = d.min(max_left as f64);
                 true
             }
             _ => false,
         });
         decisions
+    }
+}
+
+/// Decrement one batch size in a local multiset copy (drop at zero).
+fn dec_size(sizes: &mut BTreeMap<u64, u64>, size: u64) {
+    if let Some(c) = sizes.get_mut(&size) {
+        *c -= 1;
+        if *c == 0 {
+            sizes.remove(&size);
+        }
     }
 }
 
@@ -249,6 +297,35 @@ mod tests {
         assert_eq!(a + b, 8, "all idle workers used: a={a} b={b}");
         assert_eq!(b, 5, "weight-1 tenant drains first");
         assert_eq!(a, 3, "near-zero-weight tenant still served after");
+    }
+
+    /// Satellite fix: an exactly-zero recipe weight (set through the
+    /// pub field, bypassing `with_weight`'s positivity assert) must
+    /// neither NaN the deficit math nor starve the tenant forever —
+    /// the no-progress top-up serves it last, with finite deficits.
+    #[test]
+    fn zero_weight_recipe_served_without_nan() {
+        let mut zero = ContextRecipe::smollm2_pff(0);
+        zero.weight = 0.0;
+        let mut s = Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![zero, ContextRecipe::custom(1, "b", 1_000, 1_000)],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            u64::MAX,
+        );
+        submit_interleaved(&mut s, 4, 10);
+        for i in 0..8 {
+            s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+        }
+        let mut p = WeightedFairShare::new();
+        let ds = p.place(&SchedulerView::new(&s));
+        let (a, b) = assigns_per_ctx(&s, &ds);
+        assert_eq!(a + b, 8, "all idle workers used: a={a} b={b}");
+        assert_eq!(b, 4, "weight-1 tenant drains first");
+        assert_eq!(a, 4, "zero-weight tenant still served after");
+        assert!(p.deficit(0).is_finite());
+        assert!(p.deficit(1).is_finite());
     }
 
     #[test]

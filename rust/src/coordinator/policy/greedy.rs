@@ -69,6 +69,13 @@ impl PlacementPolicy for AffinityGreedy {
         let mut i = 0;
         while i < idle.len() {
             let wid = idle[i];
+            // Indexed short-circuit: a worker warm for no context at
+            // all cannot match any window entry — skip its scan
+            // entirely (decision-invariant: the scan would find None).
+            if !view.warm_for_some(wid) {
+                i += 1;
+                continue;
+            }
             let mut found = None;
             for (pos, q) in queue.iter().enumerate().take(WARM_LOOKAHEAD) {
                 if view.warm_for(wid, q.context) {

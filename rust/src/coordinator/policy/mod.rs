@@ -46,12 +46,42 @@
 //! keep state across rounds (`&mut self`) — that is how
 //! [`WeightedFairShare`] carries deficits.
 //!
+//! # View costs — the indexed contract
+//!
+//! The view is a thin window over scheduler state that the scheduler
+//! maintains *incrementally* at every mutating event (enqueue,
+//! dispatch, completion, cache insert/evict, materialize/teardown,
+//! version bump, worker join/reclaim). A dispatch round should cost
+//! O(changes), never O(pool) or O(backlog); pick accessors accordingly:
+//!
+//! * **O(1)** — [`SchedulerView::queued_total`],
+//!   [`SchedulerView::queued_count_of`],
+//!   [`SchedulerView::queued_order_key`],
+//!   [`SchedulerView::prefetching_count`],
+//!   [`SchedulerView::in_flight_total`].
+//! * **O(log)** — [`SchedulerView::warm_for`],
+//!   [`SchedulerView::cache_warm_for`] (indexed warm-set membership),
+//!   [`SchedulerView::max_queued_inferences`], and
+//!   [`SchedulerView::acquisition_estimate_s`] on a memo hit.
+//!   Estimates are memoized per (worker, context) and invalidated only
+//!   when that worker's cache or library, the context's version, or the
+//!   pool's peer-cached kinds for that context change — steady rounds
+//!   recompute nothing.
+//! * **O(result size)** — [`SchedulerView::idle_workers`],
+//!   [`SchedulerView::queued_prefix`],
+//!   [`SchedulerView::queued_of_context`],
+//!   [`SchedulerView::queued_by_context`],
+//!   [`SchedulerView::warm_worker_count`] (warm workers, not pool),
+//!   [`SchedulerView::queued_sizes_of`] (distinct batch sizes).
+//! * **O(queue)** — [`SchedulerView::queued`]. Reference ports and
+//!   tests only; per-round policy code must bound its reads with the
+//!   prefix/per-context accessors (see `queued`'s contract note).
+//!
 //! [`ContextRecipe::with_weight`]: super::context::ContextRecipe::with_weight
 
-use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap, HashSet};
+use std::collections::BTreeMap;
 
-use super::context::{ComponentKind, ContextId, ContextPolicy};
+use super::context::{ContextId, ContextPolicy};
 use super::costmodel::CostModel;
 use super::scheduler::Scheduler;
 use super::task::TaskId;
@@ -165,20 +195,18 @@ impl PolicyKind {
 ///
 /// Everything a policy may consult lives here: the queue (in order),
 /// idle workers, warmth predicates, deterministic `CostModel`-backed
-/// acquisition estimates (peer-cache lookups memoized per round), and
-/// per-context progress counters. Policies cannot mutate the scheduler
-/// through the view — decisions are the only channel back.
+/// acquisition estimates (memoized in the scheduler's incremental
+/// indexes, invalidated per (worker, context) change), and per-context
+/// progress counters. Policies cannot mutate the scheduler through the
+/// view — decisions are the only channel back. See the module docs for
+/// each accessor's cost class.
 pub struct SchedulerView<'a> {
     sched: &'a Scheduler,
-    /// Component kinds with some cached copy in the pool, per context
-    /// (lazily computed once per round — cache contents cannot change
-    /// mid-round).
-    peer_kinds: RefCell<HashMap<ContextId, HashSet<ComponentKind>>>,
 }
 
 impl<'a> SchedulerView<'a> {
     pub fn new(sched: &'a Scheduler) -> Self {
-        Self { sched, peer_kinds: RefCell::new(HashMap::new()) }
+        Self { sched }
     }
 
     /// The context-management policy (None/Partial/Pervasive) in force.
@@ -191,7 +219,19 @@ impl<'a> SchedulerView<'a> {
         self.sched.cost_model()
     }
 
-    /// Ready tasks in queue order.
+    /// Every ready task in queue order — **O(queue backlog)**.
+    ///
+    /// Bounded-prefix contract: per-round policy code must NOT call
+    /// this — with a million-task backlog it clones the whole queue
+    /// every dispatch round. It exists for reference implementations
+    /// and tests (the golden decision-parity ports replay full-queue
+    /// semantics); every shipped policy bounds its reads with
+    /// [`queued_prefix`] / [`queued_of_context`] plus the O(1)
+    /// counters, keeping a round O(look-ahead + idle) regardless of
+    /// backlog depth.
+    ///
+    /// [`queued_prefix`]: Self::queued_prefix
+    /// [`queued_of_context`]: Self::queued_of_context
     pub fn queued(&self) -> Vec<QueuedTask> {
         self.queued_prefix(usize::MAX)
     }
@@ -215,19 +255,20 @@ impl<'a> SchedulerView<'a> {
             .collect()
     }
 
-    /// Idle workers, sorted by id (deterministic iteration order).
+    /// Idle workers, sorted by id (deterministic iteration order) —
+    /// O(idle) from the maintained idle set, never an O(pool) scan.
     pub fn idle_workers(&self) -> Vec<WorkerId> {
-        let mut idle: Vec<WorkerId> = self
-            .sched
-            .workers()
-            .filter(|w| w.is_idle())
-            .map(|w| w.id)
-            .collect();
-        idle.sort_unstable();
-        idle
+        self.sched.idle_worker_ids()
     }
 
-    /// Relative GPU speed of a worker (1.0 = reference A10).
+    /// Relative GPU speed of a worker (1.0 = reference A10); `0.0` for
+    /// an unknown worker (e.g. reclaimed after the policy captured its
+    /// id). The zero is a sentinel safe for ordering comparisons only —
+    /// never divide by this raw value; use [`est_execute_s`], which
+    /// clamps the denominator so dead-worker (and zero-inference)
+    /// queries stay finite instead of going NaN.
+    ///
+    /// [`est_execute_s`]: Self::est_execute_s
     pub fn worker_speed(&self, w: WorkerId) -> f64 {
         self.sched.worker(w).map(|w| w.relative_speed()).unwrap_or(0.0)
     }
@@ -244,43 +285,41 @@ impl<'a> SchedulerView<'a> {
 
     /// Would a task of `ctx` start useful work on `w` with zero staging
     /// (ready library under Pervasive, full file cache under Partial)?
+    /// O(log) indexed warm-set membership; `false` for unknown workers.
     pub fn warm_for(&self, w: WorkerId, ctx: ContextId) -> bool {
-        self.sched
-            .worker(w)
-            .map(|wk| self.sched.warm_for(wk, ctx))
-            .unwrap_or(false)
+        self.sched.warm_for_id(w, ctx)
+    }
+
+    /// Is `w` [`warm_for`] *any* registered context at all? O(contexts
+    /// · log) — lets warm-pairing phases skip a worker that cannot
+    /// match anything instead of scanning a queue window to learn it.
+    ///
+    /// [`warm_for`]: Self::warm_for
+    pub fn warm_for_some(&self, w: WorkerId) -> bool {
+        self.sched.recipes().any(|r| self.sched.warm_for_id(w, r.id))
     }
 
     /// Weaker warmth: every component the current policy caches is in
     /// `w`'s file cache (or its library is ready). Unlike [`warm_for`]
     /// under Pervasive this does not require a materialized library —
-    /// it is the state a completed prefetch leaves a worker in.
+    /// it is the state a completed prefetch leaves a worker in. O(log)
+    /// indexed membership; `false` for unknown workers.
     ///
     /// [`warm_for`]: Self::warm_for
     pub fn cache_warm_for(&self, w: WorkerId, ctx: ContextId) -> bool {
-        let Some(worker) = self.sched.worker(w) else { return false };
-        if worker.library.is_ready_for(ctx) {
-            return true;
-        }
-        let policy = self.context_policy();
-        if !policy.caches_files() {
-            return false;
-        }
-        let Some(recipe) = self.sched.recipe(ctx) else { return false };
-        let comps = recipe.cached_components(policy);
-        !comps.is_empty()
-            && comps.iter().all(|c| worker.has_cached(ctx, c.kind))
+        self.sched.cache_warm_for_id(w, ctx)
     }
 
     /// Estimated context-acquisition seconds if the next task of `ctx`
     /// ran on `w` right now — the affinity score (lower is better).
+    /// Memoized in the scheduler's (worker, context) estimate cache and
+    /// invalidated only when that worker's cache/library, the context's
+    /// version, or the context's peer-cached kinds change, so steady
+    /// rounds are O(1) lookups. Returns `f64::INFINITY` for a vanished
+    /// worker (reclaimed after the policy captured its id): an unknown
+    /// worker is the worst possible placement, not a panic.
     pub fn acquisition_estimate_s(&self, w: WorkerId, ctx: ContextId) -> f64 {
-        let worker = self.sched.worker(w).expect("estimating a live worker");
-        let mut memo = self.peer_kinds.borrow_mut();
-        let kinds = memo
-            .entry(ctx)
-            .or_insert_with(|| self.sched.peer_cached_kinds(ctx));
-        self.sched.acquisition_estimate_s(worker, ctx, kinds)
+        self.sched.acquisition_estimate_cached(w, ctx)
     }
 
     /// Registered context ids, ascending.
@@ -307,37 +346,91 @@ impl<'a> SchedulerView<'a> {
             .unwrap_or(0)
     }
 
-    /// Queued-task counts per context.
+    /// Queued-task counts per context (non-zero entries) — a clone of
+    /// the incrementally maintained counters, O(backlogged contexts).
     pub fn queued_by_context(&self) -> BTreeMap<ContextId, u64> {
-        let mut m = BTreeMap::new();
-        for t in self.sched.ready_tasks() {
-            *m.entry(t.context).or_insert(0) += 1;
-        }
-        m
+        self.sched.queued_ctx_counts().clone()
     }
 
-    /// In-flight (dispatched, unfinished) task counts per context.
+    /// In-flight (dispatched, unfinished) task counts per context —
+    /// a clone of the maintained counters, O(active contexts).
     pub fn in_flight_by_context(&self) -> BTreeMap<ContextId, u64> {
-        self.sched.running_context_counts()
+        self.sched.running_ctx_counts().clone()
     }
 
-    /// Completed-task counts per context.
+    /// Completed-task counts per context — a clone of the maintained
+    /// counters, O(contexts).
     pub fn completed_by_context(&self) -> BTreeMap<ContextId, u64> {
-        self.sched.completed_context_counts()
+        self.sched.completed_ctx_counts().clone()
+    }
+
+    /// Total ready tasks — O(1).
+    pub fn queued_total(&self) -> usize {
+        self.sched.queued_total()
+    }
+
+    /// Ready tasks of one context — O(1) from the maintained counter.
+    pub fn queued_count_of(&self, ctx: ContextId) -> u64 {
+        self.sched.queued_count_of(ctx)
+    }
+
+    /// The first `limit` ready tasks *of one context*, in queue order —
+    /// O(limit · log), independent of the backlog size. Within a
+    /// context this is the same order [`queued`] would surface.
+    ///
+    /// [`queued`]: Self::queued
+    pub fn queued_of_context(
+        &self,
+        ctx: ContextId,
+        limit: usize,
+    ) -> Vec<QueuedTask> {
+        self.sched
+            .queued_of_context(ctx, limit)
+            .into_iter()
+            .map(|t| QueuedTask {
+                task: t.id,
+                context: t.context,
+                inferences: t.count,
+            })
+            .collect()
+    }
+
+    /// Opaque global queue-order key of a queued task: lower keys
+    /// dispatch earlier, keys are stable within a round. O(1); `None`
+    /// when the task is not queued. Lets a policy merge per-context
+    /// streams ([`queued_of_context`]) back into global FIFO order
+    /// without materializing the queue.
+    ///
+    /// [`queued_of_context`]: Self::queued_of_context
+    pub fn queued_order_key(&self, task: TaskId) -> Option<i64> {
+        self.sched.queued_order_key(task)
+    }
+
+    /// Multiset of queued batch sizes for `ctx` (size → count), empty
+    /// when nothing of `ctx` is queued — a clone of the maintained
+    /// multiset, O(distinct sizes). Decrement locally while placing to
+    /// track "largest batch still queued" exactly.
+    pub fn queued_sizes_of(&self, ctx: ContextId) -> BTreeMap<u64, u64> {
+        self.sched.queued_sizes_of(ctx).cloned().unwrap_or_default()
+    }
+
+    /// Largest queued batch size pool-wide — O(log) from the
+    /// maintained multiset; `None` on an empty queue.
+    pub fn max_queued_inferences(&self) -> Option<u64> {
+        self.sched.max_queued_inferences()
     }
 
     /// Connected workers (idle or busy) that are [`cache_warm_for`]
-    /// `ctx` — the pool's current warmth for a tenant.
+    /// `ctx` — the pool's current warmth for a tenant. O(warm workers)
+    /// from the per-context warm sets, never an O(pool) scan.
     ///
     /// [`cache_warm_for`]: Self::cache_warm_for
     pub fn warm_worker_count(&self, ctx: ContextId) -> usize {
-        self.sched
-            .workers()
-            .filter(|w| self.cache_warm_for(w.id, ctx))
-            .count()
+        self.sched.warm_worker_count_indexed(ctx)
     }
 
-    /// Prefetches of `ctx` currently staging somewhere in the pool.
+    /// Prefetches of `ctx` currently staging somewhere in the pool —
+    /// O(1) from the maintained per-context counter.
     pub fn prefetching_count(&self, ctx: ContextId) -> usize {
         self.sched.prefetch_count(ctx)
     }
@@ -355,9 +448,12 @@ impl<'a> SchedulerView<'a> {
 
     /// Deterministic mean execute-time estimate for `inferences` on `w`
     /// (no jitter draw — same contract as the acquisition estimate).
+    /// Safe for vanished workers: [`CostModel::est_execute_clamped_s`]
+    /// clamps the zero-speed sentinel, so the result is a finite,
+    /// astronomically large time rather than NaN or a panic.
     pub fn est_execute_s(&self, w: WorkerId, inferences: u64) -> f64 {
-        let speed = self.worker_speed(w).max(1e-9);
-        inferences as f64 * self.cost().a10_per_inference_s / speed
+        self.cost()
+            .est_execute_clamped_s(inferences, self.worker_speed(w))
     }
 
     /// Total dispatched-but-unfinished work in the pool (tasks plus
@@ -427,7 +523,46 @@ pub fn pick_best_worker(
 
 #[cfg(test)]
 mod tests {
+    use super::super::context::ContextRecipe;
+    use super::super::costmodel::CostModel;
+    use super::super::scheduler::Scheduler;
+    use super::super::transfer::TransferPlanner;
     use super::*;
+    use crate::cluster::{GpuModel, Node};
+
+    /// Satellite fix (churn regression): a policy can hold a `WorkerId`
+    /// from one round's view while the driver reclaims that node; every
+    /// per-worker accessor on a later view must degrade to
+    /// "worst possible placement" — never panic, never NaN.
+    #[test]
+    fn vanished_worker_estimates_degrade_not_panic() {
+        let mut s = Scheduler::with_registry(
+            ContextPolicy::Pervasive,
+            vec![ContextRecipe::smollm2_pff(0)],
+            TransferPlanner::new(3),
+            CostModel::default(),
+            u64::MAX,
+        );
+        let wid = s.worker_join(Node { id: 0, gpu: GpuModel::A10 }, 0.0);
+        // A policy captures the id from one round's view...
+        let seen = SchedulerView::new(&s).idle_workers();
+        assert_eq!(seen, vec![wid]);
+        // ...the node is reclaimed before its next query...
+        s.worker_evict(wid);
+        // ...and the stale id reads as the worst candidate everywhere.
+        let view = SchedulerView::new(&s);
+        assert_eq!(view.acquisition_estimate_s(wid, 0), f64::INFINITY);
+        assert_eq!(view.worker_speed(wid), 0.0);
+        assert!(view.est_execute_s(wid, 0).is_finite(), "0×c/0 NaN corner");
+        assert!(view.est_execute_s(wid, 100).is_finite());
+        assert!(!view.warm_for(wid, 0));
+        assert!(!view.cache_warm_for(wid, 0));
+        assert!(!view.warm_for_some(wid));
+        // The shared comparator survives INFINITY estimates too.
+        let pick = pick_best_worker_filtered(&view, &[wid], 0, |_| true);
+        assert_eq!(pick, Some(0));
+        assert!(s.check_index_consistency());
+    }
 
     #[test]
     fn policy_kind_roundtrip() {

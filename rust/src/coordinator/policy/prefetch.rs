@@ -15,16 +15,17 @@
 //!
 //! Assignment otherwise mirrors [`super::AffinityGreedy`], with one
 //! deliberate difference: warm pairing accepts *cache*-warm workers
-//! (what a finished prefetch produces) and scans the whole queue, so a
-//! prefetched worker reaches deep into the backlog for its tenant's
-//! first task instead of being burned on the queue-front context.
+//! (what a finished prefetch produces) and reaches arbitrarily deep
+//! into the backlog (via per-context indexed queues, not a scan), so a
+//! prefetched worker finds its tenant's first task instead of being
+//! burned on the queue-front context.
 
-use std::collections::{BTreeMap, HashMap, HashSet};
+use std::collections::{BTreeMap, HashSet};
 
 use super::super::context::ContextId;
-use super::super::worker::WorkerId;
 use super::{
-    pick_best_worker, PlacementDecision, PlacementPolicy, SchedulerView,
+    pick_best_worker, PlacementDecision, PlacementPolicy, QueuedTask,
+    SchedulerView,
 };
 
 /// Greedy assignment + proactive staging for cold backlogged tenants.
@@ -58,8 +59,7 @@ impl PlacementPolicy for WarmPrefetch {
 
     fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
         let mut decisions = Vec::new();
-        let queue = view.queued();
-        if queue.is_empty() {
+        if view.queued_total() == 0 {
             return decisions;
         }
         let mut idle = view.idle_workers();
@@ -67,43 +67,54 @@ impl PlacementPolicy for WarmPrefetch {
             return decisions;
         }
         let caches = view.context_policy().caches_files();
+        let idle0 = idle.len();
 
         // Phase 1: warmth pairing — library-warm OR fully file-cached
         // workers claim the earliest queued task of their resident
-        // context, scanning the whole queue (a prefetched context's
-        // first task may be far behind the front). Warmth is invariant
-        // within a round and contexts are few, so each idle worker's
-        // warm-context set is derived once — the queue scan is then an
-        // O(1) membership test per entry instead of a component walk.
-        let contexts = view.contexts();
-        let warm_of: HashMap<WorkerId, HashSet<ContextId>> = idle
-            .iter()
-            .map(|w| {
-                let set = contexts
-                    .iter()
-                    .copied()
-                    .filter(|c| view.cache_warm_for(*w, *c))
-                    .collect();
-                (*w, set)
-            })
+        // context, however deep in the backlog it sits (a prefetched
+        // context's first task may be far behind the front). Claims
+        // within one context are always FIFO, so per-context cursors
+        // over bounded head windows replace the old whole-queue scan:
+        // at most one claim per idle worker means `idle0` head tasks
+        // per backlogged context are exhaustive, and a worker's
+        // earliest claimable task is the minimum queue-order key over
+        // its warm contexts' cursor heads. O(idle × contexts · log)
+        // instead of O(idle × backlog).
+        let backlog = view.queued_by_context();
+        let windows: BTreeMap<ContextId, Vec<QueuedTask>> = backlog
+            .keys()
+            .map(|&ctx| (ctx, view.queued_of_context(ctx, idle0)))
             .collect();
-        let mut claimed = vec![false; queue.len()];
+        let mut cursor: BTreeMap<ContextId, usize> =
+            backlog.keys().map(|&ctx| (ctx, 0)).collect();
+        let mut claimed_ids: HashSet<u64> = HashSet::new();
         let mut i = 0;
         while i < idle.len() {
             let wid = idle[i];
-            let warm = &warm_of[&wid];
-            let mut found = None;
-            for (pos, q) in queue.iter().enumerate() {
-                if !claimed[pos] && warm.contains(&q.context) {
-                    found = Some(pos);
-                    break;
+            let mut best: Option<(i64, ContextId)> = None;
+            for (&ctx, win) in windows.iter() {
+                // A cursor can only exhaust its window together with
+                // the idle set (window length = initial idle count), so
+                // cursor-at-end means the context is fully claimed.
+                let cur = cursor[&ctx];
+                if cur >= win.len() || !view.cache_warm_for(wid, ctx) {
+                    continue;
+                }
+                let key = view
+                    .queued_order_key(win[cur].task)
+                    .expect("window entries are queued");
+                if best.map_or(true, |(bk, _)| key < bk) {
+                    best = Some((key, ctx));
                 }
             }
-            if let Some(pos) = found {
-                claimed[pos] = true;
+            if let Some((_, ctx)) = best {
+                let cur = cursor.get_mut(&ctx).unwrap();
+                let q = windows[&ctx][*cur];
+                *cur += 1;
+                claimed_ids.insert(q.task);
                 let wid = idle.remove(i);
                 decisions.push(PlacementDecision::Assign {
-                    task: queue[pos].task,
+                    task: q.task,
                     worker: wid,
                 });
             } else {
@@ -111,23 +122,39 @@ impl PlacementPolicy for WarmPrefetch {
             }
         }
 
+        // Bounded global prefix for phases 2 and 3: both only consult
+        // unclaimed-task ranks below the idle count. The first
+        // `idle0 + claims` queue positions hold at least `idle0`
+        // unclaimed tasks (claims can occupy at most `claims` of
+        // them), so every rank < idle0 — and every task phase 3 could
+        // place — lives inside this prefix; anything beyond it has
+        // rank ≥ idle0 and never places this round.
+        let prefix = view.queued_prefix(idle0 + claimed_ids.len());
+
         // Phase 2: prefetch reservation. Rank of each context's first
         // unclaimed task among unclaimed tasks = how many dispatches it
         // is away from a worker under FIFO.
         if caches {
             let mut first_rank: BTreeMap<ContextId, usize> = BTreeMap::new();
             let mut rank = 0usize;
-            for (pos, q) in queue.iter().enumerate() {
-                if claimed[pos] {
+            for q in &prefix {
+                if claimed_ids.contains(&q.task) {
                     continue;
                 }
                 first_rank.entry(q.context).or_insert(rank);
                 rank += 1;
             }
-            for (ctx, first) in first_rank {
+            for (&ctx, &count) in backlog.iter() {
                 if idle.is_empty() {
                     break;
                 }
+                if cursor[&ctx] as u64 >= count {
+                    // Fully claimed in phase 1: nothing left queued.
+                    continue;
+                }
+                // Beyond-prefix contexts rank ≥ idle0 ≥ idle.len().
+                let first =
+                    first_rank.get(&ctx).copied().unwrap_or(usize::MAX);
                 if first < idle.len() {
                     // Served by the FIFO phase this round anyway.
                     continue;
@@ -160,9 +187,10 @@ impl PlacementPolicy for WarmPrefetch {
         }
 
         // Phase 3: FIFO + affinity over whatever remains (greedy's
-        // second phase, unchanged).
-        for (pos, q) in queue.iter().enumerate() {
-            if claimed[pos] {
+        // second phase, unchanged) — at most `idle.len()` ≤ idle0
+        // placements, all inside the bounded prefix.
+        for q in &prefix {
+            if claimed_ids.contains(&q.task) {
                 continue;
             }
             if idle.is_empty() {

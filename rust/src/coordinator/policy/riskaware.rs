@@ -98,6 +98,12 @@ impl PlacementPolicy for RiskAware {
         let mut i = 0;
         while i < idle.len() {
             let wid = idle[i];
+            // Indexed short-circuit (as AffinityGreedy): nothing can
+            // warm-pair with a worker that is warm for no context.
+            if !view.warm_for_some(wid) {
+                i += 1;
+                continue;
+            }
             let mut found = None;
             for (pos, q) in queue.iter().enumerate().take(WARM_LOOKAHEAD) {
                 if view.warm_for(wid, q.context)

@@ -22,8 +22,23 @@
 //! and executes the returned [`PlacementDecision`]s. Swap policies with
 //! [`Self::with_policy`]; the default is the throughput-greedy
 //! [`AffinityGreedy`].
+//!
+//! **Indexed hot path:** a dispatch round must stay near-O(changes) at
+//! the 10k-node / million-task scale, so the scheduler maintains
+//! incremental indexes alongside the authoritative state: the ready
+//! queue is a sequence-keyed ordered map with per-context sub-queues
+//! and per-context queued/running/completed counters, idle workers are
+//! a sorted set, per-context warm-worker sets track library- and
+//! cache-warmth, pool-wide peer-cached component kinds are reference
+//! counts, and acquisition estimates are memoized per (context, worker)
+//! and invalidated only when that worker's cache, the context's
+//! version, or the peer-availability of a component kind actually
+//! changes. Every index is redundantly derivable from the base state;
+//! [`Self::check_index_consistency`] recomputes them from scratch and
+//! is debug-asserted by both drivers and fuzzed by the property tests.
 
-use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
 use super::context::{
     ComponentKind, ContextId, ContextPolicy, ContextRecipe, DataOrigin,
@@ -144,7 +159,56 @@ pub struct Scheduler {
     cache_capacity_bytes: u64,
     cache_stats: CacheStats,
     tasks: BTreeMap<TaskId, Task>,
-    ready: VecDeque<TaskId>,
+    /// Ready tasks in FIFO order, keyed by a monotone sequence number:
+    /// back-enqueues take increasing keys, front-requeues (eviction
+    /// recovery) take decreasing ones, so map order *is* queue order
+    /// while membership tests and removals stay O(log n) instead of the
+    /// old `VecDeque` O(n) scan-and-shift.
+    ready: BTreeMap<i64, TaskId>,
+    /// Task → ready-queue sequence number (O(1) indexed removal).
+    ready_pos: HashMap<TaskId, i64>,
+    /// Per-context sub-queues (sequence numbers, ascending = FIFO).
+    ready_by_ctx: HashMap<ContextId, BTreeSet<i64>>,
+    /// Next front/back sequence numbers for `ready`.
+    front_seq: i64,
+    back_seq: i64,
+    /// Queued-task counts per context (only non-zero entries).
+    queued_ctx: BTreeMap<ContextId, u64>,
+    /// Multiset of queued batch sizes, pool-wide and per context (the
+    /// fair-share quantum/clamp inputs, maintained incrementally).
+    queued_sizes: BTreeMap<u64, u64>,
+    queued_sizes_ctx: HashMap<ContextId, BTreeMap<u64, u64>>,
+    /// Running-task counts per context (only non-zero entries).
+    running_ctx: BTreeMap<ContextId, u64>,
+    /// Completed-task counts per context (only non-zero entries).
+    completed_ctx: BTreeMap<ContextId, u64>,
+    /// In-flight prefetch counts per context (only non-zero entries).
+    prefetch_ctx: HashMap<ContextId, usize>,
+    /// Idle workers, sorted — the policy-facing `idle_workers()` list
+    /// and the O(1) "anyone free?" dispatch-round early-out.
+    idle: BTreeSet<WorkerId>,
+    /// Per-context warm sets: workers whose *library* is materialized
+    /// and current for the context (the Pervasive fast path)...
+    library_warm: HashMap<ContextId, BTreeSet<WorkerId>>,
+    /// ...and workers holding *every* cacheable component of the
+    /// context (non-empty recipes only; disk-tier warmth).
+    cache_full: HashMap<ContextId, BTreeSet<WorkerId>>,
+    /// Contexts that are vacuously cache-warm on every worker (a
+    /// caching policy with an empty cacheable-component list).
+    unconditionally_warm: HashSet<ContextId>,
+    /// Pool-wide reference counts: how many connected workers cache
+    /// each (context, kind). Positive entries only — the peer-transfer
+    /// availability input of the affinity estimate, without the old
+    /// O(workers × components) sweep.
+    peer_kind_counts: HashMap<(ContextId, ComponentKind), u32>,
+    /// Memoized `acquisition_estimate_s` per (context → worker).
+    /// Filled lazily during dispatch rounds (interior mutability: the
+    /// policy only holds `&Scheduler`), invalidated surgically at every
+    /// state change that can move an estimate: the worker's cache or
+    /// library changed for that context, the context's version was
+    /// bumped (whole column dropped), or a peer-availability count
+    /// crossed zero (whole column dropped).
+    est_cache: RefCell<HashMap<ContextId, HashMap<WorkerId, f64>>>,
     workers: BTreeMap<WorkerId, Worker>,
     /// Remaining (not-yet-completed) phases per running task.
     in_flight: HashMap<TaskId, InFlightTask>,
@@ -206,7 +270,12 @@ impl Scheduler {
     ) -> Self {
         assert!(!recipes.is_empty(), "context registry must not be empty");
         let mut map = BTreeMap::new();
+        let mut unconditionally_warm = HashSet::new();
         for r in recipes {
+            if policy.caches_files() && r.cached_components(policy).is_empty()
+            {
+                unconditionally_warm.insert(r.id);
+            }
             let prev = map.insert(r.id, r);
             assert!(prev.is_none(), "duplicate context id in registry");
         }
@@ -219,7 +288,23 @@ impl Scheduler {
             cache_capacity_bytes,
             cache_stats: CacheStats::default(),
             tasks: BTreeMap::new(),
-            ready: VecDeque::new(),
+            ready: BTreeMap::new(),
+            ready_pos: HashMap::new(),
+            ready_by_ctx: HashMap::new(),
+            front_seq: 0,
+            back_seq: 0,
+            queued_ctx: BTreeMap::new(),
+            queued_sizes: BTreeMap::new(),
+            queued_sizes_ctx: HashMap::new(),
+            running_ctx: BTreeMap::new(),
+            completed_ctx: BTreeMap::new(),
+            prefetch_ctx: HashMap::new(),
+            idle: BTreeSet::new(),
+            library_warm: HashMap::new(),
+            cache_full: HashMap::new(),
+            unconditionally_warm,
+            peer_kind_counts: HashMap::new(),
+            est_cache: RefCell::new(HashMap::new()),
             workers: BTreeMap::new(),
             in_flight: HashMap::new(),
             prefetch_flight: HashMap::new(),
@@ -252,6 +337,11 @@ impl Scheduler {
 
     /// Register another application's recipe mid-run.
     pub fn register_recipe(&mut self, recipe: ContextRecipe) {
+        if self.policy.caches_files()
+            && recipe.cached_components(self.policy).is_empty()
+        {
+            self.unconditionally_warm.insert(recipe.id);
+        }
         let prev = self.recipes.insert(recipe.id, recipe);
         assert!(prev.is_none(), "duplicate context id in registry");
     }
@@ -283,9 +373,66 @@ impl Scheduler {
                 t.id,
                 t.context
             );
-            self.ready.push_back(t.id);
-            self.tasks.insert(t.id, t);
+            let id = t.id;
+            self.tasks.insert(id, t);
+            self.enqueue_ready(id, false);
         }
+    }
+
+    // ------------------------------------------------- ready-queue indexes
+
+    /// Put `id` into the ready queue (front = eviction requeue, back =
+    /// fresh submission), updating every queue-derived index: O(log n).
+    fn enqueue_ready(&mut self, id: TaskId, front: bool) {
+        let t = &self.tasks[&id];
+        let (ctx, n) = (t.context, t.count);
+        let seq = if front {
+            self.front_seq -= 1;
+            self.front_seq
+        } else {
+            let s = self.back_seq;
+            self.back_seq += 1;
+            s
+        };
+        let prev = self.ready.insert(seq, id);
+        debug_assert!(prev.is_none(), "sequence numbers are unique");
+        let prev = self.ready_pos.insert(id, seq);
+        debug_assert!(prev.is_none(), "a task is queued at most once");
+        self.ready_by_ctx.entry(ctx).or_default().insert(seq);
+        *self.queued_ctx.entry(ctx).or_insert(0) += 1;
+        *self.queued_sizes.entry(n).or_insert(0) += 1;
+        *self
+            .queued_sizes_ctx
+            .entry(ctx)
+            .or_default()
+            .entry(n)
+            .or_insert(0) += 1;
+    }
+
+    /// Remove `id` from the ready queue and all queue-derived indexes.
+    /// Returns false (and changes nothing) if the task is not queued.
+    fn dequeue_ready(&mut self, id: TaskId) -> bool {
+        let Some(seq) = self.ready_pos.remove(&id) else {
+            return false;
+        };
+        self.ready.remove(&seq);
+        let t = &self.tasks[&id];
+        let (ctx, n) = (t.context, t.count);
+        if let Some(s) = self.ready_by_ctx.get_mut(&ctx) {
+            s.remove(&seq);
+            if s.is_empty() {
+                self.ready_by_ctx.remove(&ctx);
+            }
+        }
+        dec_count(&mut self.queued_ctx, ctx);
+        dec_count(&mut self.queued_sizes, n);
+        if let Some(m) = self.queued_sizes_ctx.get_mut(&ctx) {
+            dec_count(m, n);
+            if m.is_empty() {
+                self.queued_sizes_ctx.remove(&ctx);
+            }
+        }
+        true
     }
 
     // ------------------------------------------------------------ workers
@@ -317,6 +464,21 @@ impl Scheduler {
             }
         }
         self.workers.insert(id, worker);
+        self.idle.insert(id);
+        if self.policy.caches_files() {
+            // The warm-restored disk tier raises pool-wide peer
+            // availability; crossing 0→1 invalidates the affected
+            // estimate columns inside `peer_inc`.
+            let restored: Vec<(ContextId, ComponentKind)> = self.workers
+                [&id]
+                .cache_contents()
+                .map(|((c, k), _)| (c, k))
+                .collect();
+            for (c, k) in restored {
+                self.peer_inc(c, k);
+            }
+        }
+        self.refresh_warmth(id);
         id
     }
 
@@ -333,11 +495,15 @@ impl Scheduler {
         if self.policy.caches_files() {
             self.node_caches.persist(&worker);
         }
-        let task_id = worker.running?;
+        self.purge_worker_indexes(id, &worker);
+        let Some(task_id) = worker.running else {
+            return None;
+        };
         if Self::is_prefetch_id(task_id) {
             // A dying prefetch only holds peer-upload slots; no task to
             // requeue, no work lost.
             if let Some(pf) = self.prefetch_flight.remove(&task_id) {
+                dec_usize(&mut self.prefetch_ctx, pf.context);
                 self.release_pending_uploads(
                     &pf.phases[pf.next.min(pf.phases.len())..],
                 );
@@ -354,10 +520,34 @@ impl Scheduler {
         let task = self.tasks.get_mut(&task_id).expect("running task exists");
         debug_assert_eq!(task.state, TaskState::Running { worker: id });
         task.state = TaskState::Ready;
-        self.progress.evicted_inferences += task.count;
+        let (ctx, count) = (task.context, task.count);
+        self.progress.evicted_inferences += count;
+        dec_count(&mut self.running_ctx, ctx);
         // Requeue at the FRONT: evicted work is oldest and re-runs first.
-        self.ready.push_front(task_id);
-        Some((task_id, task.count))
+        self.enqueue_ready(task_id, true);
+        Some((task_id, count))
+    }
+
+    /// Drop a departed worker from every worker-keyed index: the idle
+    /// set, the warm sets, its peer-availability contributions (which
+    /// may drop estimate columns via 1→0 transitions), and its memoized
+    /// estimates. O(contexts + cached components), not O(pool).
+    fn purge_worker_indexes(&mut self, id: WorkerId, departed: &Worker) {
+        self.idle.remove(&id);
+        for set in self.library_warm.values_mut() {
+            set.remove(&id);
+        }
+        for set in self.cache_full.values_mut() {
+            set.remove(&id);
+        }
+        let held: Vec<(ContextId, ComponentKind)> =
+            departed.cache_contents().map(|((c, k), _)| (c, k)).collect();
+        for (c, k) in held {
+            self.peer_dec(c, k);
+        }
+        for m in self.est_cache.get_mut().values_mut() {
+            m.remove(&id);
+        }
     }
 
     /// Release the peer slots claimed by not-yet-completed stage phases.
@@ -376,7 +566,9 @@ impl Scheduler {
 
     /// A worker finished its workload and left voluntarily (end of run).
     pub fn worker_release(&mut self, id: WorkerId) -> Option<Worker> {
-        self.workers.remove(&id)
+        let w = self.workers.remove(&id)?;
+        self.purge_worker_indexes(id, &w);
+        Some(w)
     }
 
     pub fn worker(&self, id: WorkerId) -> Option<&Worker> {
@@ -466,6 +658,14 @@ impl Scheduler {
                 w.library.teardown();
             }
         }
+        // Indexed state: every worker's copy of this context is gone in
+        // one stroke — reset its warm sets, peer-availability counts,
+        // and memoized estimate column wholesale (version bumps are
+        // rare; this is O(kinds + warm workers), not O(pool²)).
+        self.library_warm.remove(&ctx);
+        self.cache_full.remove(&ctx);
+        self.peer_kind_counts.retain(|&(c, _), _| c != ctx);
+        self.est_cache.get_mut().remove(&ctx);
         Some(version)
     }
 
@@ -541,9 +741,264 @@ impl Scheduler {
         set
     }
 
+    // ------------------------------------------------- incremental indexes
+
+    /// Memoized acquisition estimate for (`wid`, `ctx`): a cache hit is
+    /// O(1); a miss recomputes from the worker's cache plus the indexed
+    /// peer-availability counts and fills the cache. Entries are
+    /// invalidated surgically at every mutation that can move them, so
+    /// a steady dispatch round recomputes nothing. Returns `INFINITY`
+    /// (never cached) for a vanished worker: a policy may hold a
+    /// `WorkerId` across state it does not control, and an unknown
+    /// worker is simply the worst possible placement, not a panic.
+    pub(crate) fn acquisition_estimate_cached(
+        &self,
+        wid: WorkerId,
+        ctx: ContextId,
+    ) -> f64 {
+        if let Some(v) = self
+            .est_cache
+            .borrow()
+            .get(&ctx)
+            .and_then(|m| m.get(&wid).copied())
+        {
+            return v;
+        }
+        let Some(w) = self.workers.get(&wid) else {
+            return f64::INFINITY;
+        };
+        let peers = self.peer_kinds_indexed(ctx);
+        let est = self.acquisition_estimate_s(w, ctx, &peers);
+        self.est_cache
+            .borrow_mut()
+            .entry(ctx)
+            .or_default()
+            .insert(wid, est);
+        est
+    }
+
+    /// Peer-cached kinds of `ctx` from the maintained reference counts —
+    /// O(kinds), vs. the O(workers × components) scan of
+    /// [`Self::peer_cached_kinds`] (kept as the from-scratch referee).
+    fn peer_kinds_indexed(&self, ctx: ContextId) -> HashSet<ComponentKind> {
+        let mut set = HashSet::new();
+        if self.policy.caches_files() {
+            if let Some(r) = self.recipes.get(&ctx) {
+                for c in &r.components {
+                    if self.peer_kind_counts.contains_key(&(ctx, c.kind)) {
+                        set.insert(c.kind);
+                    }
+                }
+            }
+        }
+        set
+    }
+
+    /// Indexed [`Self::warm_for`]: O(log) set membership per query.
+    /// False for unknown workers (policies can hold stale ids).
+    pub(crate) fn warm_for_id(&self, wid: WorkerId, ctx: ContextId) -> bool {
+        if self.policy.retains_materialized() {
+            self.library_warm
+                .get(&ctx)
+                .is_some_and(|s| s.contains(&wid))
+        } else if self.policy.caches_files() {
+            (self.unconditionally_warm.contains(&ctx)
+                && self.workers.contains_key(&wid))
+                || self
+                    .cache_full
+                    .get(&ctx)
+                    .is_some_and(|s| s.contains(&wid))
+        } else {
+            false
+        }
+    }
+
+    /// Indexed disk-or-library warmth (prefetch-policy support): the
+    /// worker's library is current for `ctx` *or* it caches every
+    /// cacheable component. O(log) per query.
+    pub(crate) fn cache_warm_for_id(
+        &self,
+        wid: WorkerId,
+        ctx: ContextId,
+    ) -> bool {
+        self.library_warm
+            .get(&ctx)
+            .is_some_and(|s| s.contains(&wid))
+            || self
+                .cache_full
+                .get(&ctx)
+                .is_some_and(|s| s.contains(&wid))
+    }
+
+    /// Workers warm for `ctx` in either tier — O(warm workers), never
+    /// O(pool).
+    pub(crate) fn warm_worker_count_indexed(&self, ctx: ContextId) -> usize {
+        let lib = self.library_warm.get(&ctx);
+        let full = self.cache_full.get(&ctx);
+        match (lib, full) {
+            (None, None) => 0,
+            (Some(l), None) => l.len(),
+            (None, Some(f)) => f.len(),
+            (Some(l), Some(f)) => {
+                l.len() + f.iter().filter(|w| !l.contains(w)).count()
+            }
+        }
+    }
+
+    /// Idle workers, ascending (the policy-facing list): O(idle).
+    pub(crate) fn idle_worker_ids(&self) -> Vec<WorkerId> {
+        self.idle.iter().copied().collect()
+    }
+
+    /// Total queued tasks — O(1).
+    pub(crate) fn queued_total(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Queued tasks of `ctx` — O(1).
+    pub(crate) fn queued_count_of(&self, ctx: ContextId) -> u64 {
+        self.queued_ctx.get(&ctx).copied().unwrap_or(0)
+    }
+
+    /// Maintained queued-task counts per context (non-zero entries).
+    pub(crate) fn queued_ctx_counts(&self) -> &BTreeMap<ContextId, u64> {
+        &self.queued_ctx
+    }
+
+    /// Maintained running-task counts per context (non-zero entries).
+    pub(crate) fn running_ctx_counts(&self) -> &BTreeMap<ContextId, u64> {
+        &self.running_ctx
+    }
+
+    /// Maintained completed-task counts per context (non-zero entries).
+    pub(crate) fn completed_ctx_counts(&self) -> &BTreeMap<ContextId, u64> {
+        &self.completed_ctx
+    }
+
+    /// The first `limit` queued tasks *of one context*, in global queue
+    /// order — O(limit · log n), independent of the backlog size.
+    pub(crate) fn queued_of_context(
+        &self,
+        ctx: ContextId,
+        limit: usize,
+    ) -> Vec<&Task> {
+        match self.ready_by_ctx.get(&ctx) {
+            None => Vec::new(),
+            Some(seqs) => seqs
+                .iter()
+                .take(limit)
+                .map(|seq| &self.tasks[&self.ready[seq]])
+                .collect(),
+        }
+    }
+
+    /// Opaque global queue-order key of a queued task (lower = earlier;
+    /// stable within a round) — O(1). `None` when not queued.
+    pub(crate) fn queued_order_key(&self, task: TaskId) -> Option<i64> {
+        self.ready_pos.get(&task).copied()
+    }
+
+    /// Multiset of queued batch sizes for `ctx` (size → count), absent
+    /// when nothing of `ctx` is queued.
+    pub(crate) fn queued_sizes_of(
+        &self,
+        ctx: ContextId,
+    ) -> Option<&BTreeMap<u64, u64>> {
+        self.queued_sizes_ctx.get(&ctx)
+    }
+
+    /// Largest queued batch size pool-wide — O(log n) from the
+    /// maintained multiset.
+    pub(crate) fn max_queued_inferences(&self) -> Option<u64> {
+        self.queued_sizes.keys().next_back().copied()
+    }
+
+    /// Recompute `wid`'s membership in every per-context warm set from
+    /// its actual cache/library state. O(contexts × components) — paid
+    /// only when a worker's warmth can actually have changed (cache
+    /// insert/evict, materialize/teardown, join), never per round.
+    fn refresh_warmth(&mut self, wid: WorkerId) {
+        let computed = self.workers.get(&wid).map(|w| {
+            let mut lib = Vec::new();
+            let mut full = Vec::new();
+            for r in self.recipes.values() {
+                if w.library.is_ready_for(r.id) {
+                    lib.push(r.id);
+                }
+                if self.policy.caches_files() {
+                    let comps = r.cached_components(self.policy);
+                    if !comps.is_empty()
+                        && comps.iter().all(|c| w.has_cached(r.id, c.kind))
+                    {
+                        full.push(r.id);
+                    }
+                }
+            }
+            (lib, full)
+        });
+        match computed {
+            None => {
+                for set in self.library_warm.values_mut() {
+                    set.remove(&wid);
+                }
+                for set in self.cache_full.values_mut() {
+                    set.remove(&wid);
+                }
+            }
+            Some((lib, full)) => {
+                let ids: Vec<ContextId> =
+                    self.recipes.keys().copied().collect();
+                for id in ids {
+                    let ls = self.library_warm.entry(id).or_default();
+                    if lib.contains(&id) {
+                        ls.insert(wid);
+                    } else {
+                        ls.remove(&wid);
+                    }
+                    let fs = self.cache_full.entry(id).or_default();
+                    if full.contains(&id) {
+                        fs.insert(wid);
+                    } else {
+                        fs.remove(&wid);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One more worker caches (`ctx`, `kind`); a 0→1 transition changes
+    /// every worker's estimate for `ctx` (the peer fast path opened), so
+    /// the whole memoized column drops.
+    fn peer_inc(&mut self, ctx: ContextId, kind: ComponentKind) {
+        let c = self.peer_kind_counts.entry((ctx, kind)).or_insert(0);
+        *c += 1;
+        if *c == 1 {
+            self.est_cache.get_mut().remove(&ctx);
+        }
+    }
+
+    /// One fewer worker caches (`ctx`, `kind`); a 1→0 transition closes
+    /// the peer fast path — drop the memoized column.
+    fn peer_dec(&mut self, ctx: ContextId, kind: ComponentKind) {
+        if let Some(c) = self.peer_kind_counts.get_mut(&(ctx, kind)) {
+            *c -= 1;
+            if *c == 0 {
+                self.peer_kind_counts.remove(&(ctx, kind));
+                self.est_cache.get_mut().remove(&ctx);
+            }
+        }
+    }
+
+    /// Drop the memoized estimate for one (worker, context) pair.
+    fn invalidate_estimate(&mut self, wid: WorkerId, ctx: ContextId) {
+        if let Some(m) = self.est_cache.get_mut().get_mut(&ctx) {
+            m.remove(&wid);
+        }
+    }
+
     /// Ready tasks in queue order (policy-view support).
     pub(crate) fn ready_tasks(&self) -> impl Iterator<Item = &Task> + '_ {
-        self.ready.iter().map(move |id| &self.tasks[id])
+        self.ready.values().map(move |id| &self.tasks[id])
     }
 
     /// The deterministic cost model (policy-view support).
@@ -551,32 +1006,10 @@ impl Scheduler {
         &self.cost
     }
 
-    /// Prefetches of `ctx` currently staging.
+    /// Prefetches of `ctx` currently staging — O(1) from the
+    /// maintained per-context counter.
     pub(crate) fn prefetch_count(&self, ctx: ContextId) -> usize {
-        self.prefetch_flight
-            .values()
-            .filter(|p| p.context == ctx)
-            .count()
-    }
-
-    /// In-flight task counts per context (policy-view support).
-    pub(crate) fn running_context_counts(&self) -> BTreeMap<ContextId, u64> {
-        let mut m = BTreeMap::new();
-        for id in self.in_flight.keys() {
-            if let Some(t) = self.tasks.get(id) {
-                *m.entry(t.context).or_insert(0) += 1;
-            }
-        }
-        m
-    }
-
-    /// Completed-task counts per context (policy-view support).
-    pub(crate) fn completed_context_counts(&self) -> BTreeMap<ContextId, u64> {
-        let mut m = BTreeMap::new();
-        for r in &self.records {
-            *m.entry(r.context).or_insert(0) += 1;
-        }
-        m
+        self.prefetch_ctx.get(&ctx).copied().unwrap_or(0)
     }
 
     /// One dispatch round. Pure mechanism: build a read-only
@@ -585,9 +1018,9 @@ impl Scheduler {
     /// warm pairing, affinity scoring, fairness, prefetching — live in
     /// [`super::policy`].
     pub fn try_dispatch(&mut self) -> Vec<Dispatch> {
-        if self.ready.is_empty()
-            || !self.workers.values().any(|w| w.is_idle())
-        {
+        // O(1) early-out from the maintained indexes (the old
+        // `any(is_idle)` sweep was itself O(pool) per round).
+        if self.ready.is_empty() || self.idle.is_empty() {
             return Vec::new();
         }
         // The policy needs `&mut self` (it may carry state, e.g.
@@ -623,12 +1056,12 @@ impl Scheduler {
                     if !idle {
                         continue;
                     }
-                    let Some(pos) =
-                        self.ready.iter().position(|t| *t == task)
-                    else {
+                    // Indexed removal: O(log n) whatever queue position
+                    // the policy picked (the old scan-and-shift was
+                    // O(backlog) for anything off the queue front).
+                    if !self.dequeue_ready(task) {
                         continue;
-                    };
-                    self.ready.remove(pos);
+                    }
                     let ctx = self.tasks[&task].context;
                     let version = self.recipes[&ctx].version;
                     let phases = self.build_plan(task, worker);
@@ -638,6 +1071,8 @@ impl Scheduler {
                     let w = self.workers.get_mut(&worker).unwrap();
                     w.running = Some(task);
                     w.touch_context(ctx);
+                    self.idle.remove(&worker);
+                    *self.running_ctx.entry(ctx).or_insert(0) += 1;
                     self.in_flight.insert(
                         task,
                         InFlightTask {
@@ -673,6 +1108,8 @@ impl Scheduler {
                     let w = self.workers.get_mut(&worker).unwrap();
                     w.running = Some(id);
                     w.touch_context(ctx);
+                    self.idle.remove(&worker);
+                    *self.prefetch_ctx.entry(ctx).or_insert(0) += 1;
                     self.prefetch_flight.insert(
                         id,
                         PrefetchFlight {
@@ -854,18 +1291,49 @@ impl Scheduler {
                 }
             }
             PhaseKind::Materialize { context } => {
+                let mut prev = None;
                 if let Some(w) = self.workers.get_mut(&wid) {
+                    prev = match w.library {
+                        LibraryState::Ready { context: c }
+                        | LibraryState::Materializing { context: c } => {
+                            Some(c)
+                        }
+                        LibraryState::Absent => None,
+                    };
                     w.library.begin_materialize(context);
                     w.library.finish_materialize();
                 }
+                // Library transitions move Pervasive warmth and the
+                // zero-cost fast path of the estimate for the old and
+                // new library contexts on this worker only.
+                if let Some(p) = prev {
+                    self.invalidate_estimate(wid, p);
+                }
+                self.invalidate_estimate(wid, context);
+                self.refresh_warmth(wid);
             }
             PhaseKind::Teardown => {
+                let mut prev = None;
                 if let Some(w) = self.workers.get_mut(&wid) {
+                    prev = match w.library {
+                        LibraryState::Ready { context: c }
+                        | LibraryState::Materializing { context: c } => {
+                            Some(c)
+                        }
+                        LibraryState::Absent => None,
+                    };
                     w.library.teardown();
                     if !self.policy.caches_files() {
+                        // Sandbox teardown under the None policy; the
+                        // cache is never populated there, so no peer
+                        // counts move.
                         w.clear_cache();
                     }
                 }
+                if let Some(p) = prev {
+                    self.invalidate_estimate(wid, p);
+                }
+                self.refresh_warmth(wid);
             }
             PhaseKind::Sandbox | PhaseKind::Execute { .. } => {}
         }
@@ -900,8 +1368,10 @@ impl Scheduler {
         }
         if next_phase.is_none() {
             self.prefetch_flight.remove(&id);
+            dec_usize(&mut self.prefetch_ctx, ctx);
             if let Some(w) = self.workers.get_mut(&wid) {
                 w.running = None;
+                self.idle.insert(wid);
             }
         }
         next_phase
@@ -928,27 +1398,48 @@ impl Scheduler {
         if plan_version != current {
             return;
         }
-        if let Some(w) = self.workers.get_mut(&wid) {
-            let (cached, evicted) =
-                w.insert_cached(ctx, component, bytes, Some(ctx));
-            if cached {
-                w.set_cached_version(ctx, plan_version);
-            }
-            for e in evicted {
-                // Evicting a context's files also retires its
-                // materialized library, if it holds one.
-                let lib_ctx = match w.library {
-                    LibraryState::Ready { context }
-                    | LibraryState::Materializing { context } => Some(context),
-                    LibraryState::Absent => None,
-                };
-                if lib_ctx == Some(e) {
-                    w.library.teardown();
-                }
-                self.cache_stats.ctx_mut(e).evictions += 1;
-                self.pending_evictions.push((wid, e));
+        let Some(w) = self.workers.get_mut(&wid) else {
+            return;
+        };
+        // Snapshot the (context, kind) pairs *before* the insert: LRU
+        // victims are evicted wholesale inside `insert_cached`, and the
+        // peer-availability counts need to know exactly which kinds
+        // each victim held.
+        let was_cached = w.has_cached(ctx, component);
+        let held: Vec<(ContextId, ComponentKind)> =
+            w.cache_contents().map(|((c, k), _)| (c, k)).collect();
+        let (cached, evicted) =
+            w.insert_cached(ctx, component, bytes, Some(ctx));
+        if cached {
+            w.set_cached_version(ctx, plan_version);
+        }
+        for e in &evicted {
+            // Evicting a context's files also retires its
+            // materialized library, if it holds one.
+            let lib_ctx = match w.library {
+                LibraryState::Ready { context }
+                | LibraryState::Materializing { context } => Some(context),
+                LibraryState::Absent => None,
+            };
+            if lib_ctx == Some(*e) {
+                w.library.teardown();
             }
         }
+        for e in evicted {
+            self.cache_stats.ctx_mut(e).evictions += 1;
+            self.pending_evictions.push((wid, e));
+            for (c, k) in &held {
+                if *c == e {
+                    self.peer_dec(*c, *k);
+                }
+            }
+            self.invalidate_estimate(wid, e);
+        }
+        if cached && !was_cached {
+            self.peer_inc(ctx, component);
+        }
+        self.invalidate_estimate(wid, ctx);
+        self.refresh_warmth(wid);
     }
 
     /// Drain the LRU evictions decided since the last call, as
@@ -974,6 +1465,7 @@ impl Scheduler {
         self.progress.completed_inferences += count;
         let current =
             self.recipes.get(&ctx).map(|r| r.version).unwrap_or(0);
+        let mut torn_down = false;
         if let Some(w) = self.workers.get_mut(&f.worker) {
             w.running = None;
             w.tasks_completed += 1;
@@ -983,7 +1475,15 @@ impl Scheduler {
                 // superseded mid-flight: retire it so the Pervasive
                 // fast path cannot serve the old version again.
                 w.library.teardown();
+                torn_down = true;
             }
+            self.idle.insert(f.worker);
+        }
+        dec_count(&mut self.running_ctx, ctx);
+        *self.completed_ctx.entry(ctx).or_insert(0) += 1;
+        if torn_down {
+            self.invalidate_estimate(f.worker, ctx);
+            self.refresh_warmth(f.worker);
         }
         self.records.push(record);
     }
@@ -1075,6 +1575,182 @@ impl Scheduler {
     /// the scratch-disk capacity it was recorded with.
     pub fn check_node_cache_capacity(&self) -> bool {
         self.node_caches.check_capacity()
+    }
+
+    /// Index-coherence invariant: every incremental index — the
+    /// sequence-keyed ready queue and its per-context sub-queues, the
+    /// queued/running/completed counters, the batch-size multisets, the
+    /// idle set, the warm-worker sets, the peer-availability counts,
+    /// the prefetch counters, and every memoized estimate — exactly
+    /// matches a from-scratch recomputation over the authoritative
+    /// state. O(everything); called by tests and per-event debug
+    /// assertions in both drivers, never on the hot path.
+    pub fn check_index_consistency(&self) -> bool {
+        // Ready-queue structures agree with each other.
+        if self.ready.len() != self.ready_pos.len() {
+            return false;
+        }
+        for (seq, id) in &self.ready {
+            if self.ready_pos.get(id) != Some(seq) {
+                return false;
+            }
+            let Some(t) = self.tasks.get(id) else {
+                return false;
+            };
+            if !self
+                .ready_by_ctx
+                .get(&t.context)
+                .is_some_and(|s| s.contains(seq))
+            {
+                return false;
+            }
+        }
+        let sub_total: usize =
+            self.ready_by_ctx.values().map(|s| s.len()).sum();
+        if sub_total != self.ready.len() {
+            return false;
+        }
+        // Counters and multisets match a full queue walk.
+        let mut want_ctx: BTreeMap<ContextId, u64> = BTreeMap::new();
+        let mut want_sizes: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut want_sizes_ctx: HashMap<ContextId, BTreeMap<u64, u64>> =
+            HashMap::new();
+        for t in self.ready.values().map(|id| &self.tasks[id]) {
+            *want_ctx.entry(t.context).or_insert(0) += 1;
+            *want_sizes.entry(t.count).or_insert(0) += 1;
+            *want_sizes_ctx
+                .entry(t.context)
+                .or_default()
+                .entry(t.count)
+                .or_insert(0) += 1;
+        }
+        if want_ctx != self.queued_ctx
+            || want_sizes != self.queued_sizes
+            || want_sizes_ctx != self.queued_sizes_ctx
+        {
+            return false;
+        }
+        // Running / completed counters.
+        let mut want_running: BTreeMap<ContextId, u64> = BTreeMap::new();
+        for id in self.in_flight.keys() {
+            if let Some(t) = self.tasks.get(id) {
+                *want_running.entry(t.context).or_insert(0) += 1;
+            }
+        }
+        if want_running != self.running_ctx {
+            return false;
+        }
+        let mut want_completed: BTreeMap<ContextId, u64> = BTreeMap::new();
+        for r in &self.records {
+            *want_completed.entry(r.context).or_insert(0) += 1;
+        }
+        if want_completed != self.completed_ctx {
+            return false;
+        }
+        // Prefetch counters.
+        let mut want_prefetch: HashMap<ContextId, usize> = HashMap::new();
+        for p in self.prefetch_flight.values() {
+            *want_prefetch.entry(p.context).or_insert(0) += 1;
+        }
+        if want_prefetch != self.prefetch_ctx {
+            return false;
+        }
+        // Idle set.
+        let want_idle: BTreeSet<WorkerId> = self
+            .workers
+            .values()
+            .filter(|w| w.is_idle())
+            .map(|w| w.id)
+            .collect();
+        if want_idle != self.idle {
+            return false;
+        }
+        // Warm sets: compare membership per registered context; stray
+        // entries (dead workers, unknown contexts) must not exist.
+        for r in self.recipes.values() {
+            let want_lib: BTreeSet<WorkerId> = self
+                .workers
+                .values()
+                .filter(|w| w.library.is_ready_for(r.id))
+                .map(|w| w.id)
+                .collect();
+            let got_lib = self.library_warm.get(&r.id);
+            if want_lib != got_lib.cloned().unwrap_or_default() {
+                return false;
+            }
+            let comps = r.cached_components(self.policy);
+            let want_full: BTreeSet<WorkerId> = if self.policy.caches_files()
+                && !comps.is_empty()
+            {
+                self.workers
+                    .values()
+                    .filter(|w| {
+                        comps.iter().all(|c| w.has_cached(r.id, c.kind))
+                    })
+                    .map(|w| w.id)
+                    .collect()
+            } else {
+                BTreeSet::new()
+            };
+            if want_full != self.cache_full.get(&r.id).cloned().unwrap_or_default()
+            {
+                return false;
+            }
+        }
+        for (ctx, set) in self.library_warm.iter().chain(&self.cache_full) {
+            if !set.is_empty() && !self.recipes.contains_key(ctx) {
+                return false;
+            }
+        }
+        // Peer-availability reference counts.
+        let mut want_peers: HashMap<(ContextId, ComponentKind), u32> =
+            HashMap::new();
+        for w in self.workers.values() {
+            for ((c, k), _) in w.cache_contents() {
+                *want_peers.entry((c, k)).or_insert(0) += 1;
+            }
+        }
+        if want_peers != self.peer_kind_counts {
+            return false;
+        }
+        // Every memoized estimate equals its from-scratch recomputation
+        // (the scan-based `peer_cached_kinds` is the referee here).
+        for (ctx, col) in self.est_cache.borrow().iter() {
+            if !self.recipes.contains_key(ctx) {
+                return false;
+            }
+            let peers = self.peer_cached_kinds(*ctx);
+            for (wid, est) in col {
+                let Some(w) = self.workers.get(wid) else {
+                    return false;
+                };
+                if *est != self.acquisition_estimate_s(w, *ctx, &peers) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Decrement a sparse counter map, dropping the entry at zero (only
+/// non-zero entries exist, so cloned snapshots stay minimal).
+fn dec_count<K: Ord + Copy>(m: &mut BTreeMap<K, u64>, k: K) {
+    if let Some(c) = m.get_mut(&k) {
+        *c -= 1;
+        if *c == 0 {
+            m.remove(&k);
+        }
+    }
+}
+
+/// `dec_count` for the hash-keyed usize counters.
+fn dec_usize(m: &mut HashMap<ContextId, usize>, k: ContextId) {
+    if let Some(c) = m.get_mut(&k) {
+        *c -= 1;
+        if *c == 0 {
+            m.remove(&k);
+        }
     }
 }
 

@@ -333,6 +333,10 @@ impl SimDriver {
                 break;
             }
             debug_assert!(self.sched.check_conservation());
+            debug_assert!(
+                self.sched.check_index_consistency(),
+                "incremental scheduler indexes diverged from scan truth"
+            );
         }
 
         let finished_at = self.finished_at.unwrap_or_else(|| {

@@ -141,6 +141,20 @@ impl Worker {
         self.cache_used
     }
 
+    /// Component kinds currently cached for `ctx` (unordered) — lets
+    /// from-scratch referees (index-consistency checks, golden-parity
+    /// reference ports) recompute pool-wide peer availability from
+    /// public worker state alone.
+    pub fn cached_kinds(
+        &self,
+        ctx: ContextId,
+    ) -> impl Iterator<Item = ComponentKind> + '_ {
+        self.cache
+            .keys()
+            .filter(move |(c, _)| *c == ctx)
+            .map(|(_, k)| *k)
+    }
+
     pub fn cache_capacity(&self) -> u64 {
         self.cache_capacity
     }

@@ -66,7 +66,28 @@
 //! read-only [`coordinator::SchedulerView`] and returns
 //! [`coordinator::PlacementDecision`]s; the scheduler validates and
 //! executes them, so a buggy policy can waste a dispatch round but not
-//! corrupt state. Policies may keep state across rounds (`&mut self`):
+//! corrupt state. Policies may keep state across rounds (`&mut self`).
+//!
+//! The view is backed by **incrementally maintained indexes** — warm
+//! worker sets, per-context queue/in-flight counters, queue order keys,
+//! and a memoized acquisition-estimate table kept up to date at every
+//! scheduler mutation — so a dispatch round costs roughly what changed
+//! since the last one, not a rescan of a 5 000-node pool. Write policy
+//! code against the cheap accessors: per-round totals and counts
+//! ([`coordinator::SchedulerView::queued_total`],
+//! [`coordinator::SchedulerView::queued_count_of`],
+//! [`coordinator::SchedulerView::queued_by_context`]) are O(1)/O(result);
+//! warmth ([`coordinator::SchedulerView::warm_for`]) and estimates
+//! ([`coordinator::SchedulerView::acquisition_estimate_s`], memoized and
+//! invalidated per `(worker, context)` on cache/version/topology
+//! changes) are O(log n) or amortized O(1); and queue access should go
+//! through [`coordinator::SchedulerView::queued_prefix`] or
+//! [`coordinator::SchedulerView::queued_of_context`] with a bound
+//! derived from the idle-worker count — a round can place at most one
+//! task per idle worker, so deeper entries cannot matter. The unbounded
+//! [`coordinator::SchedulerView::queued`] walks the whole backlog and is
+//! for reference implementations and tests, not per-round code (the
+//! `coordinator::policy` module docs spell out the full cost contract).
 //!
 //! ```no_run
 //! use pcm::coordinator::policy::{
@@ -83,9 +104,12 @@
 //!     }
 //!
 //!     fn place(&mut self, view: &SchedulerView) -> Vec<PlacementDecision> {
-//!         view.queued()
+//!         // One task per idle worker can be placed, so a prefix of
+//!         // that length is all this round can ever need.
+//!         let idle = view.idle_workers();
+//!         view.queued_prefix(idle.len())
 //!             .into_iter()
-//!             .zip(view.idle_workers())
+//!             .zip(idle)
 //!             .map(|(t, w)| PlacementDecision::Assign {
 //!                 task: t.task,
 //!                 worker: w,

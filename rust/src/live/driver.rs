@@ -616,6 +616,10 @@ impl LiveDriver {
                 }
             }
             debug_assert!(sched.check_conservation());
+            debug_assert!(
+                sched.check_index_consistency(),
+                "incremental scheduler indexes diverged from scan truth"
+            );
         }
         Ok(())
         })();

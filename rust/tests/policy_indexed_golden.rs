@@ -1,0 +1,612 @@
+//! Golden decision-parity tests for the *indexed* scheduler state.
+//!
+//! The indexed-dispatch refactor's contract is that every shipped
+//! policy makes bit-for-bit identical placement decisions on top of the
+//! incremental indexes (warm-worker sets, per-context counters, order
+//! keys, memoized estimates) as it did over full scans. Each
+//! `reference_*` below is a verbatim port of the pre-index algorithm,
+//! recomputing warmth and idleness by scanning public worker state and
+//! walking the whole ready queue; the tests replay them side by side
+//! with the shipped policies across randomized multi-tenant churn
+//! storms (joins, evictions, reclaim forecasts, phase progress),
+//! asserting identical `Vec<PlacementDecision>` every dispatch round.
+//! `Scheduler::check_index_consistency` — itself a from-scratch
+//! recomputation of every index — is asserted after every event, which
+//! extends the parity to the accessor values the references share with
+//! the live policies (memoized acquisition estimates, prefetch
+//! counters).
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+use pcm::cluster::{GpuModel, Node};
+use pcm::coordinator::policy::{
+    pick_best_worker_filtered, AffinityGreedy, PlacementDecision,
+    PlacementPolicy, QueuedTask, RiskAware, SchedulerView, WarmPrefetch,
+    WeightedFairShare,
+};
+use pcm::coordinator::{
+    ContextId, ContextPolicy, ContextRecipe, CostModel, Scheduler, Task,
+    TaskId, TaskRecord, TransferPlanner, WorkerId,
+};
+use pcm::util::Rng;
+
+/// The warm-pairing look-ahead depth shared by greedy and riskaware.
+const LOOKAHEAD: usize = 64;
+
+// ------------------------------------------------ scan-based accessors
+//
+// The references must not trust the indexes they are refereeing, so
+// idleness and warmth are recomputed from public worker state on every
+// call — exactly what the pre-index `SchedulerView` did.
+
+fn idle_scan(sched: &Scheduler) -> Vec<WorkerId> {
+    let mut idle: Vec<WorkerId> = sched
+        .workers()
+        .filter(|w| w.is_idle())
+        .map(|w| w.id)
+        .collect();
+    idle.sort_unstable();
+    idle
+}
+
+/// Pre-index `SchedulerView::warm_for`: fully warm under the current
+/// policy (ready library under Pervasive; every cached-up-front
+/// component present under file-caching policies).
+fn warm_for_scan(sched: &Scheduler, wid: WorkerId, ctx: ContextId) -> bool {
+    let Some(w) = sched.worker(wid) else { return false };
+    let policy = sched.policy();
+    if policy.retains_materialized() {
+        w.library.is_ready_for(ctx)
+    } else if policy.caches_files() {
+        sched
+            .recipe(ctx)
+            .expect("storm contexts are registered")
+            .cached_components(policy)
+            .iter()
+            .all(|c| w.has_cached(ctx, c.kind))
+    } else {
+        false
+    }
+}
+
+/// Pre-index `SchedulerView::cache_warm_for`: ready library (any
+/// policy) or a complete, non-empty file cache.
+fn cache_warm_for_scan(sched: &Scheduler, wid: WorkerId, ctx: ContextId) -> bool {
+    let Some(w) = sched.worker(wid) else { return false };
+    if w.library.is_ready_for(ctx) {
+        return true;
+    }
+    let policy = sched.policy();
+    if !policy.caches_files() {
+        return false;
+    }
+    let Some(recipe) = sched.recipe(ctx) else { return false };
+    let comps = recipe.cached_components(policy);
+    !comps.is_empty() && comps.iter().all(|c| w.has_cached(ctx, c.kind))
+}
+
+/// Pre-index `SchedulerView::warm_worker_count`: a full pool scan.
+fn warm_worker_count_scan(sched: &Scheduler, ctx: ContextId) -> usize {
+    sched
+        .workers()
+        .filter(|w| cache_warm_for_scan(sched, w.id, ctx))
+        .count()
+}
+
+// ------------------------------------------------- reference policies
+
+/// Verbatim pre-index `AffinityGreedy::place` (whole queue walked, warm
+/// pairing by per-worker component scan).
+fn reference_greedy(
+    sched: &Scheduler,
+    view: &SchedulerView,
+) -> Vec<PlacementDecision> {
+    let mut decisions = Vec::new();
+    let mut idle = idle_scan(sched);
+    if idle.is_empty() {
+        return decisions;
+    }
+    let mut queue = view.queued();
+    if queue.is_empty() {
+        return decisions;
+    }
+    let mut i = 0;
+    while i < idle.len() {
+        let wid = idle[i];
+        let mut found = None;
+        for (pos, q) in queue.iter().enumerate().take(LOOKAHEAD) {
+            if warm_for_scan(sched, wid, q.context) {
+                found = Some(pos);
+                break;
+            }
+        }
+        if let Some(pos) = found {
+            let q = queue.remove(pos);
+            let wid = idle.remove(i);
+            decisions
+                .push(PlacementDecision::Assign { task: q.task, worker: wid });
+        } else {
+            i += 1;
+        }
+    }
+    for q in queue {
+        if idle.is_empty() {
+            break;
+        }
+        let best = pick_best_worker_filtered(view, &idle, q.context, |_| true)
+            .expect("idle is non-empty");
+        let wid = idle.swap_remove(best);
+        decisions.push(PlacementDecision::Assign { task: q.task, worker: wid });
+    }
+    decisions
+}
+
+/// Verbatim pre-index `WeightedFairShare::place`: whole-queue DRR over
+/// `VecDeque`s, deficits threaded by the caller across rounds.
+fn reference_fairshare(
+    sched: &Scheduler,
+    view: &SchedulerView,
+    deficits: &mut BTreeMap<ContextId, f64>,
+) -> Vec<PlacementDecision> {
+    let mut decisions = Vec::new();
+    let queued = view.queued();
+    if queued.is_empty() {
+        deficits.clear();
+        return decisions;
+    }
+    let mut idle = idle_scan(sched);
+
+    let mut queues: BTreeMap<ContextId, VecDeque<QueuedTask>> = BTreeMap::new();
+    for q in queued {
+        queues.entry(q.context).or_default().push_back(q);
+    }
+    deficits.retain(|ctx, _| queues.contains_key(ctx));
+
+    let quantum = queues
+        .values()
+        .flat_map(|q| q.iter().map(|t| t.inferences))
+        .max()
+        .unwrap_or(1) as f64;
+
+    while !idle.is_empty() && queues.values().any(|q| !q.is_empty()) {
+        let mut progressed = false;
+        for (ctx, q) in queues.iter_mut() {
+            if q.is_empty() || idle.is_empty() {
+                continue;
+            }
+            let d = deficits.entry(*ctx).or_insert(0.0);
+            let w = view.recipe_weight(*ctx);
+            if w.is_finite() && w > 0.0 {
+                *d += quantum * w;
+            }
+            while let Some(head) = q.front().copied() {
+                if idle.is_empty() || *d + 1e-9 < head.inferences as f64 {
+                    break;
+                }
+                let best =
+                    pick_best_worker_filtered(view, &idle, *ctx, |_| true)
+                        .expect("idle is non-empty");
+                let wid = idle.swap_remove(best);
+                *d -= head.inferences as f64;
+                q.pop_front();
+                decisions.push(PlacementDecision::Assign {
+                    task: head.task,
+                    worker: wid,
+                });
+                progressed = true;
+            }
+            if let Some(max_left) = q.iter().map(|t| t.inferences).max() {
+                *d = d.min(max_left as f64);
+            }
+        }
+        if !progressed {
+            if idle.is_empty() {
+                break;
+            }
+            for (ctx, q) in queues.iter() {
+                if let Some(head) = q.front() {
+                    let d = deficits.entry(*ctx).or_insert(0.0);
+                    *d = d.max(head.inferences as f64);
+                }
+            }
+        }
+    }
+
+    deficits.retain(|ctx, d| match queues.get(ctx) {
+        Some(q) if !q.is_empty() => {
+            let max_left = q.iter().map(|t| t.inferences).max().unwrap_or(1);
+            *d = d.min(max_left as f64);
+            true
+        }
+        _ => false,
+    });
+    decisions
+}
+
+/// Verbatim pre-index `WarmPrefetch::place`: whole-queue warm claim
+/// scan, unclaimed-rank walk, pool-scan warm counts.
+fn reference_prefetch(
+    sched: &Scheduler,
+    view: &SchedulerView,
+    width: usize,
+) -> Vec<PlacementDecision> {
+    let mut decisions = Vec::new();
+    let queue = view.queued();
+    if queue.is_empty() {
+        return decisions;
+    }
+    let mut idle = idle_scan(sched);
+    if idle.is_empty() {
+        return decisions;
+    }
+    let caches = view.context_policy().caches_files();
+
+    let contexts = view.contexts();
+    let warm_of: HashMap<WorkerId, HashSet<ContextId>> = idle
+        .iter()
+        .map(|w| {
+            let set = contexts
+                .iter()
+                .copied()
+                .filter(|c| cache_warm_for_scan(sched, *w, *c))
+                .collect();
+            (*w, set)
+        })
+        .collect();
+    let mut claimed = vec![false; queue.len()];
+    let mut i = 0;
+    while i < idle.len() {
+        let wid = idle[i];
+        let warm = &warm_of[&wid];
+        let mut found = None;
+        for (pos, q) in queue.iter().enumerate() {
+            if !claimed[pos] && warm.contains(&q.context) {
+                found = Some(pos);
+                break;
+            }
+        }
+        if let Some(pos) = found {
+            claimed[pos] = true;
+            let wid = idle.remove(i);
+            decisions
+                .push(PlacementDecision::Assign { task: queue[pos].task, worker: wid });
+        } else {
+            i += 1;
+        }
+    }
+
+    if caches {
+        let mut first_rank: BTreeMap<ContextId, usize> = BTreeMap::new();
+        let mut rank = 0usize;
+        for (pos, q) in queue.iter().enumerate() {
+            if claimed[pos] {
+                continue;
+            }
+            first_rank.entry(q.context).or_insert(rank);
+            rank += 1;
+        }
+        for (ctx, first) in first_rank {
+            if idle.is_empty() {
+                break;
+            }
+            if first < idle.len() {
+                continue;
+            }
+            let mut warmish =
+                warm_worker_count_scan(sched, ctx) + view.prefetching_count(ctx);
+            while warmish < width && !idle.is_empty() {
+                let need = view.recipe_cached_bytes(ctx);
+                let target = idle
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| view.worker_cache_capacity(**w) >= need)
+                    .min_by(|(_, a), (_, b)| {
+                        view.worker_cached_bytes(**a)
+                            .cmp(&view.worker_cached_bytes(**b))
+                            .then(a.cmp(b))
+                    })
+                    .map(|(i, _)| i);
+                let Some(t) = target else { break };
+                let wid = idle.remove(t);
+                decisions.push(PlacementDecision::Prefetch { ctx, worker: wid });
+                warmish += 1;
+            }
+        }
+    }
+
+    for (pos, q) in queue.iter().enumerate() {
+        if claimed[pos] {
+            continue;
+        }
+        if idle.is_empty() {
+            break;
+        }
+        let best = pick_best_worker_filtered(view, &idle, q.context, |_| true)
+            .expect("idle is non-empty");
+        let wid = idle.swap_remove(best);
+        decisions.push(PlacementDecision::Assign { task: q.task, worker: wid });
+    }
+    decisions
+}
+
+/// Verbatim pre-index `RiskAware::place`: survival-gated warm pairing by
+/// component scan, safe-filtered FIFO, longest-lived backstop.
+fn reference_riskaware(
+    sched: &Scheduler,
+    view: &SchedulerView,
+    margin: f64,
+) -> Vec<PlacementDecision> {
+    let survives = |w: WorkerId, ctx: ContextId, inferences: u64| -> bool {
+        let life = view.expected_lifetime_s(w);
+        if life.is_infinite() {
+            return true;
+        }
+        let need =
+            view.acquisition_estimate_s(w, ctx) + view.est_execute_s(w, inferences);
+        need * margin <= life
+    };
+
+    let mut decisions = Vec::new();
+    let mut idle = idle_scan(sched);
+    if idle.is_empty() {
+        return decisions;
+    }
+    let mut queue = view.queued();
+    if queue.is_empty() {
+        return decisions;
+    }
+
+    let mut i = 0;
+    while i < idle.len() {
+        let wid = idle[i];
+        let mut found = None;
+        for (pos, q) in queue.iter().enumerate().take(LOOKAHEAD) {
+            if warm_for_scan(sched, wid, q.context)
+                && survives(wid, q.context, q.inferences)
+            {
+                found = Some(pos);
+                break;
+            }
+        }
+        if let Some(pos) = found {
+            let q = queue.remove(pos);
+            let wid = idle.remove(i);
+            decisions
+                .push(PlacementDecision::Assign { task: q.task, worker: wid });
+        } else {
+            i += 1;
+        }
+    }
+
+    let in_flight = view.in_flight_total();
+    let mut held_back = None;
+    for q in queue {
+        if idle.is_empty() {
+            break;
+        }
+        let best_safe = pick_best_worker_filtered(view, &idle, q.context, |w| {
+            survives(w, q.context, q.inferences)
+        });
+        match best_safe {
+            Some(i) => {
+                let wid = idle.swap_remove(i);
+                decisions
+                    .push(PlacementDecision::Assign { task: q.task, worker: wid });
+            }
+            None => {
+                if held_back.is_none() {
+                    held_back = Some(q);
+                }
+            }
+        }
+    }
+    if decisions.is_empty() && in_flight == 0 {
+        if let Some(q) = held_back {
+            if !idle.is_empty() {
+                let mut best = 0usize;
+                for i in 1..idle.len() {
+                    let (a, b) = (idle[best], idle[i]);
+                    let (la, lb) =
+                        (view.expected_lifetime_s(a), view.expected_lifetime_s(b));
+                    let better = match lb.partial_cmp(&la).unwrap() {
+                        std::cmp::Ordering::Greater => true,
+                        std::cmp::Ordering::Less => false,
+                        std::cmp::Ordering::Equal => match view
+                            .worker_speed(b)
+                            .partial_cmp(&view.worker_speed(a))
+                            .unwrap()
+                        {
+                            std::cmp::Ordering::Greater => true,
+                            std::cmp::Ordering::Less => false,
+                            std::cmp::Ordering::Equal => b < a,
+                        },
+                    };
+                    if better {
+                        best = i;
+                    }
+                }
+                let wid = idle.swap_remove(best);
+                decisions
+                    .push(PlacementDecision::Assign { task: q.task, worker: wid });
+            }
+        }
+    }
+    decisions
+}
+
+// ------------------------------------------------------- storm harness
+
+fn task_record(task: TaskId, worker: WorkerId, n: u64, ctx: u32) -> TaskRecord {
+    TaskRecord {
+        task,
+        context: ctx,
+        worker,
+        gpu: GpuModel::A10,
+        attempts: 1,
+        inferences: n,
+        dispatched_at: 0.0,
+        completed_at: 1.0,
+        context_s: 0.0,
+        execute_s: 1.0,
+    }
+}
+
+/// Drive one randomized churn storm: joins, evictions, optional
+/// reclaim-forecast updates, phase progress, and parity-checked
+/// dispatch rounds executed through `apply_decisions` (so prefetches
+/// run too). Every event re-validates conservation, cache capacity, and
+/// full index consistency against from-scratch recomputation.
+fn run_storm(
+    seed: u64,
+    salt: u64,
+    reclaim_hints: bool,
+    live: &mut dyn PlacementPolicy,
+    reference: &mut dyn FnMut(&Scheduler, &SchedulerView) -> Vec<PlacementDecision>,
+) {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ salt);
+    let policy = match rng.below(3) {
+        0 => ContextPolicy::None,
+        1 => ContextPolicy::Partial,
+        _ => ContextPolicy::Pervasive,
+    };
+    let capacity = (8 + rng.below(17) as u64) * 1_000_000_000;
+    let mut big =
+        ContextRecipe::custom(1, "big", 5_000_000_000, 10_000_000_000);
+    // Unequal tenant weights so fair-share storms exercise real DRR
+    // credit ratios (ignored by the other policies).
+    big.weight = (1 + rng.below(4)) as f64 * 0.5;
+    let mut sched = Scheduler::with_registry(
+        policy,
+        vec![ContextRecipe::smollm2_pff(0), big],
+        TransferPlanner::new(1 + rng.below(4) as u32),
+        CostModel::default(),
+        capacity,
+    );
+    let n_tasks = 5 + rng.below(40) as u64;
+    let tasks: Vec<Task> = (0..n_tasks)
+        .map(|i| Task::new(i, i * 10, 1 + rng.below(100) as u64, rng.below(2) as u32))
+        .collect();
+    sched.submit_tasks(tasks);
+
+    let gpus =
+        [GpuModel::A10, GpuModel::TitanXPascal, GpuModel::H100, GpuModel::A40];
+    let mut next_node = 0u32;
+    // Running tasks AND in-flight prefetches: (id, worker, phases, next).
+    let mut running: Vec<(u64, u32, usize, usize)> = Vec::new();
+    let mut guard = 0;
+    while !sched.all_done() {
+        guard += 1;
+        assert!(guard < 100_000, "storm did not converge (seed {seed})");
+        sched.set_clock_hint(guard as f64);
+        match rng.below(10) {
+            0 | 1 => {
+                let node =
+                    Node { id: next_node, gpu: gpus[rng.below(gpus.len())] };
+                next_node += 1;
+                sched.worker_join(node, guard as f64);
+            }
+            2 => {
+                let ids: Vec<u32> = sched.workers().map(|w| w.id).collect();
+                if !ids.is_empty() {
+                    let victim = ids[rng.below(ids.len())];
+                    sched.worker_evict(victim);
+                    running.retain(|(_, w, _, _)| *w != victim);
+                }
+            }
+            3 if reclaim_hints && next_node > 0 => {
+                // Forecast churn: (re)set or clear a node's expected
+                // reclamation, sometimes already in the past.
+                let node = rng.below(next_node as usize) as u32;
+                let hint = if rng.chance(0.3) {
+                    None
+                } else {
+                    Some(guard as f64 + rng.below(2_000) as f64 - 100.0)
+                };
+                sched.set_node_reclaim_hint(node, hint);
+            }
+            _ => {
+                if running.is_empty() || rng.chance(0.25) {
+                    // THE PARITY CHECK: scan-based reference vs indexed
+                    // policy on the same frozen state, then execute.
+                    let expect =
+                        reference(&sched, &SchedulerView::new(&sched));
+                    let got = live.place(&SchedulerView::new(&sched));
+                    assert_eq!(
+                        got, expect,
+                        "decision divergence (seed {seed}, round {guard})"
+                    );
+                    for d in sched.apply_decisions(got) {
+                        running.push((d.task, d.worker, d.phases.len(), 0));
+                    }
+                } else {
+                    let i = rng.below(running.len());
+                    let (id, worker, n_phases, next) = &mut running[i];
+                    sched.phase_done(*id, *next);
+                    *next += 1;
+                    if *next == *n_phases {
+                        if !Scheduler::is_prefetch_id(*id) {
+                            let (_, inferences) = sched.task_meta(*id).unwrap();
+                            let ctx = sched.task_context(*id).unwrap();
+                            sched.task_done(
+                                *id,
+                                task_record(*id, *worker, inferences, ctx),
+                            );
+                        }
+                        running.remove(i);
+                    }
+                }
+            }
+        }
+        assert!(sched.check_conservation());
+        assert!(sched.check_cache_capacity());
+        assert!(
+            sched.check_index_consistency(),
+            "index divergence (seed {seed}, round {guard})"
+        );
+    }
+}
+
+#[test]
+fn indexed_greedy_matches_scan_reference() {
+    for seed in 0..16u64 {
+        let mut live = AffinityGreedy::new();
+        run_storm(seed, 0x16a1, false, &mut live, &mut |s, v| {
+            reference_greedy(s, v)
+        });
+    }
+}
+
+#[test]
+fn indexed_fairshare_matches_scan_reference() {
+    for seed in 0..16u64 {
+        let mut live = WeightedFairShare::new();
+        // Reference deficits evolve independently across the whole
+        // storm — stateful parity, not just per-round.
+        let mut deficits: BTreeMap<ContextId, f64> = BTreeMap::new();
+        run_storm(seed, 0xfa12, false, &mut live, &mut |s, v| {
+            reference_fairshare(s, v, &mut deficits)
+        });
+    }
+}
+
+#[test]
+fn indexed_prefetch_matches_scan_reference() {
+    for seed in 0..16u64 {
+        let mut live = WarmPrefetch::default();
+        let width = live.width;
+        run_storm(seed, 0x9f3c, false, &mut live, &mut |s, v| {
+            reference_prefetch(s, v, width)
+        });
+    }
+}
+
+#[test]
+fn indexed_riskaware_matches_scan_reference() {
+    for seed in 0..16u64 {
+        let mut live = RiskAware::new();
+        let margin = live.margin;
+        run_storm(seed, 0x415c, true, &mut live, &mut |s, v| {
+            reference_riskaware(s, v, margin)
+        });
+    }
+}

@@ -955,3 +955,165 @@ fn prop_sim_runs_complete_for_any_batch_and_policy() {
         assert_eq!(out.summary.completed_inferences, total);
     });
 }
+
+// ----------------------------------------------------- incremental indexes
+
+/// The indexed-dispatch refactor maintains warm-worker sets, per-context
+/// queue/in-flight/completed counters, batch-size multisets, ready-order
+/// keys, peer-kind counts, and a memoized estimate table incrementally
+/// across every mutation choke point. After ANY interleaving of enqueue,
+/// dispatch (greedy or prefetching), phase progress, completion,
+/// eviction, cached-node rejoin, reclaim-forecast update, and context
+/// version bump, each index must exactly match a from-scratch
+/// recomputation — `check_index_consistency` rebuilds all of them from
+/// ground-truth scans and compares.
+#[test]
+fn prop_indexed_state_matches_scan_after_any_interleaving() {
+    use pcm::coordinator::policy::WarmPrefetch;
+
+    forall(60, |rng| {
+        let policy = match rng.below(3) {
+            0 => ContextPolicy::None,
+            1 => ContextPolicy::Partial,
+            _ => ContextPolicy::Pervasive,
+        };
+        let mut sched = Scheduler::with_registry(
+            policy,
+            vec![
+                ContextRecipe::smollm2_pff(0),
+                ContextRecipe::custom(1, "big", 5_000_000_000, 10_000_000_000),
+                ContextRecipe::custom(2, "side", 1_000_000, 2_000_000),
+            ],
+            TransferPlanner::new(1 + rng.below(4) as u32),
+            CostModel::default(),
+            (8 + rng.below(17) as u64) * 1_000_000_000,
+        );
+        let gpus = [
+            GpuModel::A10,
+            GpuModel::TitanXPascal,
+            GpuModel::H100,
+            GpuModel::A40,
+        ];
+        let mut next_task = 0u64;
+        for _ in 0..1 + rng.below(10) {
+            sched.submit_tasks(vec![Task::new(
+                next_task,
+                next_task * 10,
+                1 + rng.below(100) as u64,
+                rng.below(3) as u32,
+            )]);
+            next_task += 1;
+        }
+
+        // In-flight tasks AND prefetches: (id, worker, phases, next).
+        let mut running: Vec<(u64, u32, usize, usize)> = Vec::new();
+        let steps = 200 + rng.below(200);
+        for step in 0..steps {
+            sched.set_clock_hint(step as f64);
+            match rng.below(12) {
+                // Enqueue a burst mid-storm.
+                0 => {
+                    let burst = 1 + rng.below(5);
+                    let tasks: Vec<Task> = (0..burst)
+                        .map(|_| {
+                            let t = Task::new(
+                                next_task,
+                                next_task * 10,
+                                1 + rng.below(100) as u64,
+                                rng.below(3) as u32,
+                            );
+                            next_task += 1;
+                            t
+                        })
+                        .collect();
+                    sched.submit_tasks(tasks);
+                }
+                // Join — the tiny node-id space forces rejoins onto
+                // nodes with persisted caches (restore replay).
+                1 | 2 => {
+                    let node =
+                        Node { id: rng.below(6) as u32, gpu: gpus[rng.below(4)] };
+                    if !sched.workers().any(|w| w.node_id() == node.id) {
+                        sched.worker_join(node, step as f64);
+                    }
+                }
+                // Evict a random worker (requeues its task, drops its
+                // prefetch, persists its cache).
+                3 => {
+                    let ids: Vec<u32> = sched.workers().map(|w| w.id).collect();
+                    if !ids.is_empty() {
+                        let victim = ids[rng.below(ids.len())];
+                        sched.worker_evict(victim);
+                        running.retain(|(_, w, _, _)| *w != victim);
+                    }
+                }
+                // Reclaim forecast set/cleared, sometimes in the past.
+                4 => {
+                    let hint = if rng.chance(0.3) {
+                        None
+                    } else {
+                        Some(step as f64 + rng.below(500) as f64 - 50.0)
+                    };
+                    sched.set_node_reclaim_hint(rng.below(6) as u32, hint);
+                }
+                // Version bump: every cached copy invalidated at once.
+                5 => {
+                    sched.bump_context_version(rng.below(3) as u32);
+                }
+                // Dispatch through the default greedy path or through a
+                // prefetching policy (exercises prefetch counters).
+                6 | 7 => {
+                    if rng.chance(0.5) {
+                        for d in sched.try_dispatch() {
+                            running.push((d.task, d.worker, d.phases.len(), 0));
+                        }
+                    } else {
+                        let mut pf = WarmPrefetch::default();
+                        let decisions = pf.place(&SchedulerView::new(&sched));
+                        for d in sched.apply_decisions(decisions) {
+                            running.push((d.task, d.worker, d.phases.len(), 0));
+                        }
+                    }
+                }
+                // Progress or complete something in flight.
+                _ => {
+                    if !running.is_empty() {
+                        let i = rng.below(running.len());
+                        let (id, worker, n_phases, next) = &mut running[i];
+                        sched.phase_done(*id, *next);
+                        *next += 1;
+                        if *next == *n_phases {
+                            if !Scheduler::is_prefetch_id(*id) {
+                                let (_, inferences) =
+                                    sched.task_meta(*id).unwrap();
+                                let ctx = sched.task_context(*id).unwrap();
+                                sched.task_done(
+                                    *id,
+                                    TaskRecord {
+                                        task: *id,
+                                        context: ctx,
+                                        worker: *worker,
+                                        gpu: GpuModel::A10,
+                                        attempts: 1,
+                                        inferences,
+                                        dispatched_at: 0.0,
+                                        completed_at: step as f64,
+                                        context_s: 0.0,
+                                        execute_s: 1.0,
+                                    },
+                                );
+                            }
+                            running.remove(i);
+                        }
+                    }
+                }
+            }
+            assert!(sched.check_conservation());
+            assert!(sched.check_cache_capacity());
+            assert!(
+                sched.check_index_consistency(),
+                "incremental index diverged from scan truth at step {step}"
+            );
+        }
+    });
+}
