@@ -18,6 +18,7 @@ use pcm::coordinator::{
     ContextPolicy, ContextRecipe, PolicyKind, Scheduler, SimConfig,
     SimDriver, TaskRecord, TransferPlanner,
 };
+use pcm::obs::{JsonlSink, NullSink, TraceHandle};
 use pcm::runtime::manifest::default_artifacts_dir;
 use pcm::runtime::{Manifest, ModelContext};
 use pcm::util::bench::{bench, black_box, header};
@@ -161,12 +162,14 @@ fn rec(task: u64, worker: u32, attempts: u32, inferences: u64) -> TaskRecord {
 fn steady_state(
     workers: u32,
     tasks: u64,
+    trace: TraceHandle,
 ) -> (Scheduler, std::collections::VecDeque<(u64, u32)>) {
     let mut s = Scheduler::new(
         ContextPolicy::Pervasive,
         ContextRecipe::smollm2_pff(0),
         TransferPlanner::new(3),
-    );
+    )
+    .with_trace(trace);
     s.submit_tasks(Batcher::new(1).split(tasks, 0, 0));
     for i in 0..workers {
         s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
@@ -304,7 +307,8 @@ fn main() {
     // Indexed-dispatch flatness: per-round cost must not scale with the
     // pool. Both cases run 64 steady-state rounds against a 1M-task
     // backlog; only the pool size differs (1k vs 5k nodes).
-    let (mut s1k, mut ring1k) = steady_state(1_000, 1_000_000);
+    let (mut s1k, mut ring1k) =
+        steady_state(1_000, 1_000_000, TraceHandle::null());
     let r1k = bench(
         "dispatch round: 1k nodes / 1M queued (64 rounds)",
         1,
@@ -314,7 +318,8 @@ fn main() {
     let median_1k = r1k.median_s;
     results.push(r1k);
     drop((s1k, ring1k));
-    let (mut s5k, mut ring5k) = steady_state(5_000, 1_000_000);
+    let (mut s5k, mut ring5k) =
+        steady_state(5_000, 1_000_000, TraceHandle::null());
     let r5k = bench(
         "dispatch round: 5k nodes / 1M queued (64 rounds)",
         1,
@@ -324,6 +329,49 @@ fn main() {
     let median_5k = r5k.median_s;
     results.push(r5k);
     drop((s5k, ring5k));
+
+    // Trace-emission overhead: the same steady-state round with tracing
+    // off, with an enabled-but-discarding NullSink, and with a real
+    // JSONL file sink. The NullSink case is the per-event cost every
+    // traced run pays on the hot path (construction + one uncontended
+    // lock); the gate at the bottom of `main` asserts it stays within
+    // noise of the untraced round. The JsonlSink case is informational
+    // — serialization + buffered file writes are expected to dominate.
+    let (mut s_off, mut ring_off) =
+        steady_state(200, 100_000, TraceHandle::null());
+    let r_off = bench(
+        "trace overhead: off (200 nodes, 64 rounds)",
+        2,
+        iters(10),
+        || dispatch_rounds(&mut s_off, &mut ring_off, 64),
+    );
+    let trace_off = r_off.median_s;
+    results.push(r_off);
+    drop((s_off, ring_off));
+    let (mut s_null, mut ring_null) =
+        steady_state(200, 100_000, TraceHandle::new(NullSink));
+    let r_null = bench(
+        "trace overhead: NullSink (200 nodes, 64 rounds)",
+        2,
+        iters(10),
+        || dispatch_rounds(&mut s_null, &mut ring_null, 64),
+    );
+    let trace_null = r_null.median_s;
+    results.push(r_null);
+    drop((s_null, ring_null));
+    let trace_path = std::env::temp_dir()
+        .join(format!("pcm-bench-trace-{}.jsonl", std::process::id()));
+    let jsonl = JsonlSink::create(&trace_path).expect("bench trace file");
+    let (mut s_file, mut ring_file) =
+        steady_state(200, 100_000, TraceHandle::new(jsonl));
+    results.push(bench(
+        "trace overhead: JsonlSink (200 nodes, 64 rounds)",
+        2,
+        iters(10),
+        || dispatch_rounds(&mut s_file, &mut ring_file, 64),
+    ));
+    drop((s_file, ring_file));
+    let _ = std::fs::remove_file(&trace_path);
 
     results.push(bench(
         "broadcast plan: 567 workers, fanout 3",
@@ -438,6 +486,27 @@ fn main() {
         eprintln!(
             "FLATNESS VIOLATION: 5k-node dispatch round is {ratio:.2}x the \
              1k-node round (limit 3x) — dispatch is scaling with pool size"
+        );
+        std::process::exit(1);
+    }
+
+    // CI gate: an attached-but-discarding sink must keep the dispatch
+    // round within noise of the untraced one. Emission sites are
+    // branch-guarded (`trace.on()`), so the NullSink round pays only
+    // event construction and an uncontended mutex — if this ratio
+    // drifts, somebody put allocation or scanning on the emit path.
+    let trace_base = trace_off.max(floor_s);
+    let trace_ratio = trace_null / trace_base;
+    eprintln!(
+        "trace overhead: off={:.1}us null={:.1}us ratio={trace_ratio:.2} (limit 2.00)",
+        trace_off * 1e6,
+        trace_null * 1e6,
+    );
+    if trace_null > 2.0 * trace_base {
+        eprintln!(
+            "TRACE OVERHEAD VIOLATION: NullSink dispatch round is \
+             {trace_ratio:.2}x the untraced round (limit 2x) — trace \
+             emission is no longer within noise of tracing off"
         );
         std::process::exit(1);
     }

@@ -7,7 +7,7 @@
 
 use std::collections::{BTreeMap, HashSet};
 
-use crate::util::{fmt_duration, Summary};
+use crate::util::Summary;
 
 use super::context::ContextId;
 use super::task::TaskRecord;
@@ -99,24 +99,13 @@ impl CacheStats {
     }
 
     /// One line per context: `ctx=N hits=... misses=... evictions=...`.
+    /// The line format lives in `obs::telemetry::cache_line` — the same
+    /// renderer trace summaries use, so the two cannot drift.
     pub fn report(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
         for (ctx, c) in &self.per_context {
-            let _ = writeln!(
-                out,
-                "ctx={ctx} hits={} misses={} evictions={} prefetched={} \
-                 hit_rate={:.3} staged_bytes={} warm_restored={} \
-                 warm_hit_rate={:.3}",
-                c.hits,
-                c.misses,
-                c.evictions,
-                c.prefetched,
-                c.hit_rate(),
-                c.staged_bytes,
-                c.warm_restored,
-                c.warm_restart_hit_rate()
-            );
+            let _ = writeln!(out, "{}", crate::obs::cache_line(*ctx, c));
         }
         out
     }
@@ -302,19 +291,10 @@ impl RunSummary {
         }
     }
 
-    /// One row of the Figure 4 table dump.
+    /// One row of the Figure 4 table dump. The column layout lives in
+    /// `obs::telemetry::summary_row` — shared with trace summaries.
     pub fn row(&self) -> String {
-        format!(
-            "{:<10} {:>9} {:>6} {:>10.1} {:>9} {:>8.1} {:>8} {:>6}",
-            self.id,
-            self.policy,
-            self.batch_size,
-            self.exec_time_s,
-            fmt_duration(self.exec_time_s),
-            self.avg_workers,
-            self.completed_inferences,
-            self.evictions,
-        )
+        crate::obs::summary_row(self)
     }
 }
 
@@ -349,6 +329,44 @@ mod tests {
         let mut m2 = Metrics::new();
         m2.sample(0.0, 5, 0);
         assert_eq!(m2.avg_workers(10.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn avg_workers_single_sample_extends_to_window_end() {
+        // One sample at t=2 carries its worker count to t1; the
+        // unsampled [0,2) prefix contributes nothing.
+        let mut m = Metrics::new();
+        m.sample(2.0, 8, 0);
+        let avg = m.avg_workers(0.0, 10.0);
+        assert!((avg - 8.0 * 8.0 / 10.0).abs() < 1e-9, "{avg}");
+        // A sample exactly at the window start covers the whole window.
+        let mut m2 = Metrics::new();
+        m2.sample(0.0, 4, 0);
+        assert!((m2.avg_workers(0.0, 5.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_series_empty_and_single_point() {
+        // An empty run (no samples) and a run with a single sample both
+        // have no consecutive pairs — the series is empty, not a panic.
+        assert!(Metrics::new().throughput_series().is_empty());
+        let mut m = Metrics::new();
+        m.sample(1.0, 1, 10);
+        assert!(m.throughput_series().is_empty());
+    }
+
+    #[test]
+    fn warm_restart_hit_rate_zero_restores() {
+        // Misses without a single warm restore: the rate is exactly
+        // zero, not NaN, and doesn't disturb the ordinary hit rate.
+        let mut s = CacheStats::default();
+        let c = s.ctx_mut(0);
+        c.hits = 5;
+        c.misses = 7;
+        assert_eq!(s.ctx(0).warm_restored, 0);
+        assert_eq!(s.ctx(0).warm_restart_hit_rate(), 0.0);
+        assert!((s.ctx(0).hit_rate() - 5.0 / 12.0).abs() < 1e-12);
+        assert!(s.report().contains("warm_hit_rate=0.000"));
     }
 
     #[test]

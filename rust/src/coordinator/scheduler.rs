@@ -55,6 +55,7 @@ use super::task::{Task, TaskId, TaskRecord, TaskState};
 use super::transfer::{StageSource, TransferPlanner};
 use super::worker::{Worker, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};
 use crate::cluster::{Node, NodeId};
+use crate::obs::{TraceEvent, TraceHandle};
 
 /// One phase of a task's execution plan on a specific worker.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -231,7 +232,13 @@ pub struct Scheduler {
     node_reclaim_at: HashMap<NodeId, f64>,
     /// Driver-supplied "now" for lifetime arithmetic — the scheduler
     /// stays clockless; this is data, refreshed before dispatch rounds.
+    /// Trace events are stamped with it, so drivers refresh it before
+    /// every mutating call, not just dispatch rounds.
     clock_hint: f64,
+    /// Structured event-trace handle (see [`crate::obs`]). Null by
+    /// default: every emission site guards on [`TraceHandle::on`], so
+    /// a disabled trace costs one branch and builds no event.
+    trace: TraceHandle,
 }
 
 impl Scheduler {
@@ -316,6 +323,7 @@ impl Scheduler {
             pending_evictions: Vec::new(),
             node_reclaim_at: HashMap::new(),
             clock_hint: 0.0,
+            trace: TraceHandle::null(),
         }
     }
 
@@ -324,6 +332,19 @@ impl Scheduler {
     pub fn with_policy(mut self, placement: Box<dyn PlacementPolicy>) -> Self {
         self.placement = placement;
         self
+    }
+
+    /// Attach a trace handle (builder style). A null handle — the
+    /// default — disables event emission entirely.
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// The attached trace handle (drivers emit their own events —
+    /// dispatch-round timing, node churn — through the same sink).
+    pub fn trace(&self) -> &TraceHandle {
+        &self.trace
     }
 
     /// Name of the active placement policy (CLI/report label).
@@ -374,6 +395,14 @@ impl Scheduler {
                 t.context
             );
             let id = t.id;
+            if self.trace.on() {
+                self.trace.emit(TraceEvent::TaskSubmit {
+                    at: self.clock_hint,
+                    task: id,
+                    ctx: t.context,
+                    inferences: t.count,
+                });
+            }
             self.tasks.insert(id, t);
             self.enqueue_ready(id, false);
         }
@@ -447,6 +476,15 @@ impl Scheduler {
         let id = self.next_worker_id;
         self.next_worker_id += 1;
         let mut worker = Worker::new(id, node, now, self.cache_capacity_bytes);
+        let node_id = worker.node_id();
+        if self.trace.on() {
+            self.trace.emit(TraceEvent::WorkerJoin {
+                at: now,
+                worker: id,
+                node: node_id,
+                capacity: self.cache_capacity_bytes,
+            });
+        }
         if self.policy.caches_files() {
             let recipes = &self.recipes;
             let summary = self
@@ -458,9 +496,34 @@ impl Scheduler {
                 let c = self.cache_stats.ctx_mut(*ctx);
                 c.warm_restored += n;
                 c.warm_restored_bytes += bytes;
+                if self.trace.on() && (*n > 0 || *bytes > 0) {
+                    let version = self
+                        .recipes
+                        .get(ctx)
+                        .map(|r| r.version)
+                        .unwrap_or(0);
+                    self.trace.emit(TraceEvent::CacheRestore {
+                        at: now,
+                        worker: id,
+                        node: node_id,
+                        ctx: *ctx,
+                        components: *n,
+                        bytes: *bytes,
+                        version,
+                    });
+                }
             }
             for (ctx, n) in &summary.stale_dropped {
                 self.cache_stats.ctx_mut(*ctx).stale_dropped += n;
+                if self.trace.on() && *n > 0 {
+                    self.trace.emit(TraceEvent::StaleDrop {
+                        at: now,
+                        worker: id,
+                        node: node_id,
+                        ctx: *ctx,
+                        components: *n,
+                    });
+                }
             }
         }
         self.workers.insert(id, worker);
@@ -494,6 +557,21 @@ impl Scheduler {
         self.progress.evictions += 1;
         if self.policy.caches_files() {
             self.node_caches.persist(&worker);
+            if self.trace.on() {
+                self.trace.emit(TraceEvent::CachePersist {
+                    at: self.clock_hint,
+                    node: worker.node_id(),
+                    worker: id,
+                    bytes: worker.cached_bytes_total(),
+                });
+            }
+        }
+        if self.trace.on() {
+            self.trace.emit(TraceEvent::WorkerLost {
+                at: self.clock_hint,
+                worker: id,
+                node: worker.node_id(),
+            });
         }
         self.purge_worker_indexes(id, &worker);
         let Some(task_id) = worker.running else {
@@ -525,6 +603,15 @@ impl Scheduler {
         dec_count(&mut self.running_ctx, ctx);
         // Requeue at the FRONT: evicted work is oldest and re-runs first.
         self.enqueue_ready(task_id, true);
+        if self.trace.on() {
+            self.trace.emit(TraceEvent::TaskRetry {
+                at: self.clock_hint,
+                task: task_id,
+                ctx,
+                worker: id,
+                inferences: count,
+            });
+        }
         Some((task_id, count))
     }
 
@@ -647,7 +734,24 @@ impl Scheduler {
         let recipe = self.recipes.get_mut(&ctx)?;
         recipe.version += 1;
         let version = recipe.version;
+        if self.trace.on() {
+            self.trace.emit(TraceEvent::VersionBump {
+                at: self.clock_hint,
+                ctx,
+                version,
+            });
+        }
         for w in self.workers.values_mut() {
+            // The trace-side occupancy ledger must shed the invalidated
+            // bytes too, or later stages would trip a false
+            // over-capacity violation in `obs::check_events`.
+            if self.trace.on() && w.cached_bytes(ctx) > 0 {
+                self.trace.emit(TraceEvent::CacheEvict {
+                    at: self.clock_hint,
+                    worker: w.id,
+                    ctx,
+                });
+            }
             w.drop_context(ctx);
             let lib_ctx = match w.library {
                 LibraryState::Ready { context }
@@ -1064,6 +1168,33 @@ impl Scheduler {
                     }
                     let ctx = self.tasks[&task].context;
                     let version = self.recipes[&ctx].version;
+                    if self.trace.on() {
+                        // Decision context captured *before* the state
+                        // mutates: warmth and estimates as the policy
+                        // saw them, plus the best rejected alternative
+                        // (another idle worker) for counterfactuals.
+                        let warm = self.warm_for_id(worker, ctx);
+                        let est_s =
+                            self.acquisition_estimate_cached(worker, ctx);
+                        let alt_worker = self
+                            .idle
+                            .iter()
+                            .find(|w| **w != worker)
+                            .copied();
+                        let alt_est_s = alt_worker.map(|w| {
+                            self.acquisition_estimate_cached(w, ctx)
+                        });
+                        self.trace.emit(TraceEvent::TaskDispatch {
+                            at: self.clock_hint,
+                            task,
+                            ctx,
+                            worker,
+                            warm,
+                            est_s,
+                            alt_worker,
+                            alt_est_s,
+                        });
+                    }
                     let phases = self.build_plan(task, worker);
                     let t = self.tasks.get_mut(&task).unwrap();
                     t.state = TaskState::Running { worker };
@@ -1105,6 +1236,14 @@ impl Scheduler {
                         Self::PREFETCH_ID_BASE + self.next_prefetch_seq;
                     self.next_prefetch_seq += 1;
                     let version = self.recipes[&ctx].version;
+                    if self.trace.on() {
+                        self.trace.emit(TraceEvent::PrefetchDispatch {
+                            at: self.clock_hint,
+                            ctx,
+                            worker,
+                            phases: phases.len() as u64,
+                        });
+                    }
                     let w = self.workers.get_mut(&worker).unwrap();
                     w.running = Some(id);
                     w.touch_context(ctx);
@@ -1142,6 +1281,14 @@ impl Scheduler {
         if self.policy.retains_materialized() && lib_ready {
             // Pervasive fast path: context resident, just run.
             self.cache_stats.ctx_mut(ctx).hits += n_components;
+            if self.trace.on() {
+                self.trace.emit(TraceEvent::CacheHit {
+                    at: self.clock_hint,
+                    worker: wid,
+                    ctx,
+                    count: n_components,
+                });
+            }
             phases.push(PhaseKind::Execute { inferences });
             return phases;
         }
@@ -1160,10 +1307,12 @@ impl Scheduler {
             .iter()
             .map(|c| (c.kind, c.size_bytes, c.effective_origin(cache)))
             .collect();
+        let mut hit_count = 0u64;
         for (kind, bytes, origin) in components {
             let have = cache && self.workers[&wid].has_cached(ctx, kind);
             if have {
                 self.cache_stats.ctx_mut(ctx).hits += 1;
+                hit_count += 1;
                 continue;
             }
             // Bytes are committed at plan time: an eviction mid-stage
@@ -1181,6 +1330,14 @@ impl Scheduler {
                 StageSource::Origin(origin)
             };
             phases.push(PhaseKind::Stage { component: kind, bytes, source, cache });
+        }
+        if hit_count > 0 && self.trace.on() {
+            self.trace.emit(TraceEvent::CacheHit {
+                at: self.clock_hint,
+                worker: wid,
+                ctx,
+                count: hit_count,
+            });
         }
 
         phases.push(PhaseKind::Materialize { context: ctx });
@@ -1291,6 +1448,13 @@ impl Scheduler {
                 }
             }
             PhaseKind::Materialize { context } => {
+                if self.trace.on() {
+                    self.trace.emit(TraceEvent::Materialize {
+                        at: self.clock_hint,
+                        worker: wid,
+                        ctx: context,
+                    });
+                }
                 let mut prev = None;
                 if let Some(w) = self.workers.get_mut(&wid) {
                     prev = match w.library {
@@ -1428,6 +1592,15 @@ impl Scheduler {
         for e in evicted {
             self.cache_stats.ctx_mut(e).evictions += 1;
             self.pending_evictions.push((wid, e));
+            // Victims leave the trace ledger *before* the stage lands,
+            // mirroring `insert_cached` making room first.
+            if self.trace.on() {
+                self.trace.emit(TraceEvent::CacheEvict {
+                    at: self.clock_hint,
+                    worker: wid,
+                    ctx: e,
+                });
+            }
             for (c, k) in &held {
                 if *c == e {
                     self.peer_dec(*c, *k);
@@ -1437,6 +1610,16 @@ impl Scheduler {
         }
         if cached && !was_cached {
             self.peer_inc(ctx, component);
+        }
+        if cached && self.trace.on() {
+            self.trace.emit(TraceEvent::CacheStage {
+                at: self.clock_hint,
+                worker: wid,
+                ctx,
+                component: format!("{component:?}"),
+                bytes,
+                version: plan_version,
+            });
         }
         self.invalidate_estimate(wid, ctx);
         self.refresh_warmth(wid);
@@ -1484,6 +1667,15 @@ impl Scheduler {
         if torn_down {
             self.invalidate_estimate(f.worker, ctx);
             self.refresh_warmth(f.worker);
+        }
+        if self.trace.on() {
+            self.trace.emit(TraceEvent::TaskDone {
+                at: self.clock_hint,
+                task: task_id,
+                ctx,
+                worker: f.worker,
+                inferences: count,
+            });
         }
         self.records.push(record);
     }

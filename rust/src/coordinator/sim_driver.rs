@@ -24,6 +24,7 @@ use crate::cluster::{
     ClusterAction, ClusterSim, GpuModel, LoadTrace, Node,
     NodeAvailabilityTrace, SharedFilesystem,
 };
+use crate::obs::{TraceEvent, TraceHandle};
 use crate::simulation::{EventKind, SimEngine};
 use crate::util::Rng;
 
@@ -82,6 +83,10 @@ pub struct SimConfig {
     /// down never accepts a worker, even if a load-trace step re-offers
     /// it in the meantime (the pilot job dies in the queue).
     pub node_trace: Option<NodeAvailabilityTrace>,
+    /// Structured event-trace sink (see [`crate::obs`]). Null by
+    /// default — attach a handle to record every scheduler / cache /
+    /// churn transition of the run (`--trace-out` on the CLI).
+    pub trace_sink: TraceHandle,
 }
 
 impl SimConfig {
@@ -115,6 +120,7 @@ impl SimConfig {
             placement: PolicyKind::Greedy,
             interleave_apps: true,
             node_trace: None,
+            trace_sink: TraceHandle::null(),
         }
     }
 }
@@ -189,7 +195,8 @@ impl SimDriver {
             cfg.cost.clone(),
             cfg.worker_cache_bytes,
         )
-        .with_policy(cfg.placement.build());
+        .with_policy(cfg.placement.build())
+        .with_trace(cfg.trace_sink.clone());
         let factory = Factory::new(cfg.factory);
         Self {
             cfg,
@@ -264,6 +271,13 @@ impl SimDriver {
             }
             merged
         };
+        if self.sched.trace().on() {
+            self.sched.trace().emit(TraceEvent::RunStart {
+                at: 0.0,
+                label: self.cfg.name.clone(),
+                policy: self.cfg.placement.as_str().to_string(),
+            });
+        }
         self.sched.submit_tasks(tasks);
 
         // Trace steps + first metrics tick.
@@ -369,6 +383,7 @@ impl SimDriver {
             progress.evictions,
             &records,
         );
+        self.sched.trace().flush();
         SimOutcome {
             summary,
             series: self.metrics.points().to_vec(),
@@ -491,6 +506,9 @@ impl SimDriver {
                 self.fs.end_read();
             }
         }
+        // Eviction events (worker_lost, cache_persist, task_retry) are
+        // stamped with the scheduler's clock hint — refresh it first.
+        self.sched.set_clock_hint(self.engine.now());
         self.sched.worker_evict(worker);
         // The freed task may dispatch to another idle worker immediately.
         if self.started_at.is_some() {
@@ -505,6 +523,12 @@ impl SimDriver {
     /// previously-declined offered nodes worth taking again, so the
     /// factory gets another look at the pool.
     fn on_node_reclaimed(&mut self, node: crate::cluster::NodeId) {
+        if self.sched.trace().on() {
+            self.sched.trace().emit(TraceEvent::NodeReclaim {
+                at: self.engine.now(),
+                node,
+            });
+        }
         self.down_nodes.insert(node);
         self.cluster.force_reclaim(node);
         if let Some(w) = self.sched.worker_on_node(node) {
@@ -517,6 +541,12 @@ impl SimDriver {
     /// whether a fresh pilot job is worth submitting (it declines when
     /// the remaining backlog no longer needs more workers).
     fn on_node_rejoined(&mut self, node: crate::cluster::NodeId) {
+        if self.sched.trace().on() {
+            self.sched.trace().emit(TraceEvent::NodeRejoin {
+                at: self.engine.now(),
+                node,
+            });
+        }
         self.down_nodes.remove(&node);
         self.cluster.force_offer(node);
         self.pump_offered_nodes();
@@ -548,6 +578,9 @@ impl SimDriver {
             f.fs_reading = false;
         }
         f.next += 1;
+        // Completion events (cache_stage, materialize, task_done) are
+        // stamped with the scheduler's clock hint — refresh it first.
+        self.sched.set_clock_hint(now);
         let next_phase = self.sched.phase_done(task, phase);
         // Simulated workers have no real disk to clean; drain the
         // eviction queue (meant for live drivers) so it cannot grow
@@ -612,7 +645,25 @@ impl SimDriver {
     fn dispatch(&mut self, now: f64) {
         // Refresh the lifetime arithmetic before the policy looks.
         self.sched.set_clock_hint(now);
+        let round_t0 = self
+            .sched
+            .trace()
+            .on()
+            .then(std::time::Instant::now);
         let dispatches: Vec<Dispatch> = self.sched.try_dispatch();
+        if let Some(t0) = round_t0 {
+            let assigned =
+                dispatches.iter().filter(|d| !d.is_prefetch()).count() as u64;
+            let prefetched = dispatches.len() as u64 - assigned;
+            self.sched.trace().emit(TraceEvent::DispatchRound {
+                at: now,
+                policy: self.sched.placement_name().to_string(),
+                assigned,
+                prefetched,
+                queued: self.sched.ready_count() as u64,
+                wall_s: t0.elapsed().as_secs_f64(),
+            });
+        }
         for d in dispatches {
             let first = d.phases[0];
             self.in_flight.insert(

@@ -31,6 +31,7 @@ use crate::coordinator::{
     AppSpec, ContextPolicy, ContextRecipe, PolicyKind, SimConfig, SimDriver,
     SimOutcome,
 };
+use crate::obs::TraceHandle;
 use crate::util::{fmt_bytes, Rng};
 
 /// The placement axis of the bytes comparison.
@@ -175,26 +176,31 @@ fn mean(xs: &[f64]) -> f64 {
     }
 }
 
-/// Run both scenarios.
+/// Run both scenarios. All three runs record into the same `trace`
+/// handle (pass [`TraceHandle::null`] to disable tracing); each run
+/// opens its own `run_start` segment, so one JSONL file holds the whole
+/// experiment and still replays cleanly through `pcm trace check`.
 pub fn run_churn(
     seed: u64,
     inferences_per_app: u64,
     warm_inferences: u64,
+    trace: TraceHandle,
 ) -> ChurnReport {
     let bytes = CHURN_KINDS
         .iter()
-        .map(|kind| ChurnResult {
-            id: format!("churn_{}", kind.as_str()),
-            kind: *kind,
-            outcome: SimDriver::new(bytes_config(
-                *kind,
-                seed,
-                inferences_per_app,
-            ))
-            .run(),
+        .map(|kind| {
+            let mut cfg = bytes_config(*kind, seed, inferences_per_app);
+            cfg.trace_sink = trace.clone();
+            ChurnResult {
+                id: format!("churn_{}", kind.as_str()),
+                kind: *kind,
+                outcome: SimDriver::new(cfg).run(),
+            }
         })
         .collect();
-    let warm = SimDriver::new(warm_config(seed, warm_inferences)).run();
+    let mut warm_cfg = warm_config(seed, warm_inferences);
+    warm_cfg.trace_sink = trace.clone();
+    let warm = SimDriver::new(warm_cfg).run();
     ChurnReport { bytes, warm }
 }
 
@@ -328,6 +334,7 @@ mod tests {
             SEED,
             DEFAULT_INFERENCES_PER_APP,
             DEFAULT_WARM_INFERENCES,
+            TraceHandle::null(),
         );
         for res in &r.bytes {
             assert_eq!(
@@ -348,7 +355,7 @@ mod tests {
 
     #[test]
     fn report_renders_both_scenarios() {
-        let r = run_churn(SEED, 1_000, 5_000);
+        let r = run_churn(SEED, 1_000, 5_000, TraceHandle::null());
         let text = report(&r);
         for needle in [
             "churn_greedy",

@@ -44,6 +44,7 @@ use crate::cluster::{NodeAvailabilityTrace, NodeChurnEvent};
 use crate::coordinator::metrics::first_task_by_worker_context;
 use crate::coordinator::{ContextId, ContextPolicy, PolicyKind};
 use crate::live::{LiveApp, LiveConfig, LiveDriver, LiveOutcome};
+use crate::obs::TraceHandle;
 use crate::runtime::synthetic::{
     default_live_profiles, write_synthetic_artifacts,
 };
@@ -177,13 +178,23 @@ fn synthesize_artifacts(tag: &str) -> Result<(PathBuf, Manifest)> {
     Ok((dir, manifest))
 }
 
-/// Run both scenarios against a synthesized artifact set.
-pub fn run_live_churn(seed: u64) -> Result<LiveChurnReport> {
+/// Run both scenarios against a synthesized artifact set. Both record
+/// into the same `trace` handle (pass [`TraceHandle::null`] to disable
+/// tracing); only the restart scenario warm-restores, so the whole
+/// file's `cache_restore` byte total equals
+/// [`LiveOutcome::warm_started`] of the restart run exactly.
+pub fn run_live_churn(
+    seed: u64,
+    trace: TraceHandle,
+) -> Result<LiveChurnReport> {
     let (dir, manifest) = synthesize_artifacts("run")?;
-    let restart =
-        LiveDriver::new(restart_config(seed), manifest.clone()).run();
-    let contention = contention_config(seed, &manifest)
-        .and_then(|cfg| LiveDriver::new(cfg, manifest).run());
+    let mut restart_cfg = restart_config(seed);
+    restart_cfg.trace_sink = trace.clone();
+    let restart = LiveDriver::new(restart_cfg, manifest.clone()).run();
+    let contention = contention_config(seed, &manifest).and_then(|mut cfg| {
+        cfg.trace_sink = trace.clone();
+        LiveDriver::new(cfg, manifest).run()
+    });
     let _ = std::fs::remove_dir_all(&dir);
     Ok(LiveChurnReport {
         restart: restart?,

@@ -240,12 +240,58 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! ## Observing a run
+//!
+//! Every scheduler mutation — submit, dispatch (with the rejected
+//! alternative's estimate), stage/hit/evict/persist/restore, retry,
+//! completion, version bump, churn, and per-round timing — can emit a
+//! typed [`obs::TraceEvent`] into a pluggable [`obs::TraceSink`].
+//! Attach a sink via `SimConfig::trace_sink` / `LiveConfig::trace_sink`
+//! (or `--trace-out file.jsonl` on `pcm experiment` / `pcm serve`),
+//! then aggregate with [`obs::Telemetry`] (`pcm trace summarize`) or
+//! replay the invariant checker [`obs::check_events`]
+//! (`pcm trace check`). A null handle (the default) keeps the hot path
+//! at one branch per site.
+//!
+//! ```
+//! use std::sync::{Arc, Mutex};
+//! use pcm::cluster::node::pool_20_mixed;
+//! use pcm::cluster::LoadTrace;
+//! use pcm::coordinator::{ContextPolicy, SimConfig, SimDriver};
+//! use pcm::obs::{self, MemorySink, TraceEvent, TraceHandle};
+//!
+//! let sink = Arc::new(Mutex::new(MemorySink::unbounded()));
+//! let mut cfg = SimConfig::new(
+//!     "observe-demo",
+//!     ContextPolicy::Pervasive,
+//!     100,
+//!     pool_20_mixed(),
+//!     LoadTrace::constant(4),
+//!     7,
+//! );
+//! cfg.total_inferences = 500;
+//! cfg.trace_sink = TraceHandle::from_shared(sink.clone());
+//! let out = SimDriver::new(cfg).run();
+//!
+//! let events = sink.lock().unwrap().events();
+//! // The run announces itself, then every completion is traced…
+//! assert!(matches!(events[0], TraceEvent::RunStart { .. }));
+//! let done = events
+//!     .iter()
+//!     .filter(|e| matches!(e, TraceEvent::TaskDone { .. }))
+//!     .count();
+//! assert_eq!(done, out.records.len());
+//! // …and the recorded stream satisfies the scheduler's invariants.
+//! assert!(obs::check_events(&events).is_empty());
+//! ```
 
 pub mod app;
 pub mod cluster;
 pub mod coordinator;
 pub mod experiments;
 pub mod live;
+pub mod obs;
 pub mod runtime;
 pub mod simulation;
 pub mod util;

@@ -39,6 +39,7 @@ use crate::coordinator::{
     PolicyKind, Scheduler, Task, TaskRecord, TransferPlanner, WorkerId,
     DEFAULT_CACHE_CAPACITY_BYTES,
 };
+use crate::obs::{TraceEvent, TraceHandle};
 use crate::runtime::{BackendKind, Manifest};
 use crate::util::Summary;
 use crate::Result;
@@ -125,6 +126,10 @@ pub struct LiveConfig {
     /// Workers report nothing mid-phase, so set this comfortably above
     /// the longest single phase; `0.0` disables it.
     pub watchdog_s: f64,
+    /// Structured event-trace sink (see [`crate::obs`]). Null by
+    /// default — attach a handle to record every scheduler / cache /
+    /// churn transition of the run (`--trace-out` on the CLI).
+    pub trace_sink: TraceHandle,
 }
 
 impl Default for LiveConfig {
@@ -146,6 +151,7 @@ impl Default for LiveConfig {
             execute_floor_s: 0.0,
             keep_cache_root: false,
             watchdog_s: DEFAULT_WATCHDOG_S,
+            trace_sink: TraceHandle::null(),
         }
     }
 }
@@ -324,7 +330,15 @@ impl LiveDriver {
             CostModel::default(),
             self.cfg.cache_capacity_bytes,
         )
-        .with_policy(self.cfg.placement.build());
+        .with_policy(self.cfg.placement.build())
+        .with_trace(self.cfg.trace_sink.clone());
+        if sched.trace().on() {
+            sched.trace().emit(TraceEvent::RunStart {
+                at: 0.0,
+                label: format!("live-{}", self.cfg.profile),
+                policy: self.cfg.placement.as_str().to_string(),
+            });
+        }
         sched.submit_tasks(self.merged_tasks());
         let total_inferences: u64 =
             self.apps.iter().map(|a| a.total_inferences).sum();
@@ -442,6 +456,14 @@ impl LiveDriver {
             let mut churned = false;
             while churn.front().is_some_and(|e| e.at <= now) {
                 let e = churn.pop_front().unwrap();
+                if sched.trace().on() {
+                    let at = t0.elapsed().as_secs_f64();
+                    sched.trace().emit(if e.up {
+                        TraceEvent::NodeRejoin { at, node: e.node }
+                    } else {
+                        TraceEvent::NodeReclaim { at, node: e.node }
+                    });
+                }
                 if e.up {
                     if let Some(wid) = rejoin_node(
                         &mut sched,
@@ -500,6 +522,9 @@ impl LiveDriver {
                         }
                     }
                 } else {
+                    // Eviction events are stamped with the scheduler's
+                    // clock hint — refresh it before the kill.
+                    sched.set_clock_hint(t0.elapsed().as_secs_f64());
                     kill_node(&mut sched, &mut pool, e.node);
                     if !self.cfg.persist_node_caches {
                         // The dying incarnation wipes its node dir on
@@ -558,6 +583,7 @@ impl LiveDriver {
             }
             match msg {
                 WorkerMsg::PhaseDone { task, phase, .. } => {
+                    sched.set_clock_hint(t0.elapsed().as_secs_f64());
                     sched.phase_done(task, phase);
                     forward_evictions(&mut sched, &pool);
                 }
@@ -608,6 +634,7 @@ impl LiveDriver {
                         execute_s,
                     };
                     records.push(rec.clone());
+                    sched.set_clock_hint(now);
                     sched.task_done(task, rec);
                     send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
                 }
@@ -650,6 +677,7 @@ impl LiveDriver {
         }
         loop_result?;
 
+        sched.trace().flush();
         let wall_s = t0.elapsed().as_secs_f64();
         let progress = sched.progress();
         let completed = progress.completed_inferences;
@@ -701,7 +729,24 @@ fn send_dispatches(
     dispatched_at: &mut HashMap<u64, f64>,
     t0: Instant,
 ) {
-    for d in sched.try_dispatch() {
+    let now = t0.elapsed().as_secs_f64();
+    sched.set_clock_hint(now);
+    let round_t0 = sched.trace().on().then(Instant::now);
+    let dispatches = sched.try_dispatch();
+    if let Some(rt0) = round_t0 {
+        let assigned =
+            dispatches.iter().filter(|d| !d.is_prefetch()).count() as u64;
+        let prefetched = dispatches.len() as u64 - assigned;
+        sched.trace().emit(TraceEvent::DispatchRound {
+            at: now,
+            policy: sched.placement_name().to_string(),
+            assigned,
+            prefetched,
+            queued: sched.ready_count() as u64,
+            wall_s: rt0.elapsed().as_secs_f64(),
+        });
+    }
+    for d in dispatches {
         let context = sched.dispatch_context(d.task).unwrap_or(0);
         let (start, count) = if Scheduler::is_prefetch_id(d.task) {
             // Stage-only prefetch plan: no inference range, no latency

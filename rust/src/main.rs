@@ -11,12 +11,14 @@
 //!     [--placement greedy|fairshare|prefetch]
 //!     [--workers N] [--batch B] [--inferences N]
 //! pcm tune [--seed N] [--scale F]
+//! pcm trace <summarize|check> <file.jsonl>
 //! pcm inventory
 //! ```
 
 use pcm::coordinator::{ContextPolicy, PolicyKind, SimDriver};
 use pcm::experiments::{figures, runner, specs};
 use pcm::live::{LiveConfig, LiveDriver};
+use pcm::obs::{self, JsonlSink, Telemetry, TraceHandle};
 use pcm::runtime::manifest::default_artifacts_dir;
 use pcm::runtime::Manifest;
 use pcm::util::fmt_duration;
@@ -53,6 +55,19 @@ impl<'a> Flags<'a> {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Build a trace handle from `--trace-out <path>`: a JSONL file
+    /// sink when the flag is present, the null handle otherwise.
+    fn get_trace(&self) -> pcm::Result<TraceHandle> {
+        match self.get("--trace-out") {
+            None => Ok(TraceHandle::null()),
+            Some(path) => {
+                Ok(TraceHandle::new(JsonlSink::create(path).map_err(|e| {
+                    anyhow::anyhow!("cannot open trace file {path:?}: {e}")
+                })?))
+            }
+        }
+    }
+
     /// Placement-policy selector: `--placement` everywhere, plus a
     /// per-subcommand `alias` flag (the experiment subcommands accept
     /// `--policy` since they have no competing context-policy flag).
@@ -86,6 +101,10 @@ fn run(args: &[String]) -> pcm::Result<()> {
             run_single(id, &flags)
         }
         "serve" => serve(&flags),
+        "trace" => trace(
+            args.get(1).map(|s| s.as_str()),
+            args.get(2).map(|s| s.as_str()),
+        ),
         "tune" => tune(&flags),
         "ablate" => {
             let seed = flags.get_u64("--seed", 42);
@@ -123,12 +142,24 @@ USAGE:
        worker threads, a forced mid-run kill/restart with a node-cache
        warm start, and two-app contention for a byte-budgeted cache;
        gates always enforced, exit 1 on failure)
+      (churn and live-churn accept --trace-out FILE.jsonl to record a
+       structured event trace of every run)
   pcm run <pv-id>        run one experiment (e.g. pv4_100)
   pcm serve              live PJRT serving demo
       [--profile tiny|small] [--policy pervasive|partial|none]
       [--placement greedy|fairshare|prefetch|riskaware]
       [--backend pjrt|reference|auto]
       [--workers N] [--batch B] [--inferences N]
+      [--trace-out FILE.jsonl]
+  pcm trace summarize FILE.jsonl
+                         aggregate a recorded trace: per-run task and
+                         cache totals, byte-seconds resident, warm/cold
+                         first-task split, dispatch-round p50/p99
+  pcm trace check FILE.jsonl
+                         replay a trace against the scheduler
+                         invariants (no double-scored task, no stale
+                         version served, occupancy <= capacity);
+                         exit 1 listing every violation
   pcm tune               adaptive batch-size search (Challenge #6)
   pcm ablate             design-choice ablations (fan-out, eviction
                          granularity, start gate, FS contention)
@@ -307,7 +338,9 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
                  threads, one forced kill/restart, cache contention; \
                  synthetic artifacts + reference backend, seed={seed})…"
             );
-            let r = live_churn::run_live_churn(seed)?;
+            let trace = flags.get_trace()?;
+            let r = live_churn::run_live_churn(seed, trace.clone())?;
+            trace.flush();
             let text = live_churn::report(&r);
             print!("{text}");
             figures::write_result_file(&results_dir, "live_churn.txt", &text)?;
@@ -337,7 +370,9 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
                  reclamation storm; {per_app} inferences/app + {warm} \
                  warm-restart inferences, seed={seed})…"
             );
-            let r = churn::run_churn(seed, per_app, warm);
+            let trace = flags.get_trace()?;
+            let r = churn::run_churn(seed, per_app, warm, trace.clone());
+            trace.flush();
             let text = churn::report(&r);
             print!("{text}");
             figures::write_result_file(&results_dir, "churn.txt", &text)?;
@@ -426,6 +461,7 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
         seed: flags.get_u64("--seed", 0),
         placement,
         backend,
+        trace_sink: flags.get_trace()?,
         ..LiveConfig::default()
     };
     eprintln!(
@@ -453,6 +489,53 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
         out.task_latency.max()
     );
     Ok(())
+}
+
+/// `pcm trace summarize|check <file.jsonl>` — offline analysis of a
+/// recorded event trace.
+fn trace(verb: Option<&str>, path: Option<&str>) -> pcm::Result<()> {
+    let usage = "usage: pcm trace <summarize|check> <file.jsonl>";
+    let verb = verb.ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+    let path = path.ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+    let events = obs::read_trace(path)?;
+    match verb {
+        "summarize" => {
+            let segments = obs::split_runs(&events);
+            if segments.is_empty() {
+                println!("empty trace: {path}");
+                return Ok(());
+            }
+            println!(
+                "{path}: {} events, {} run segment(s)\n",
+                events.len(),
+                segments.len()
+            );
+            for seg in segments {
+                print!("{}", Telemetry::from_events(seg).render());
+                println!();
+            }
+            Ok(())
+        }
+        "check" => {
+            let violations = obs::check_events(&events);
+            if violations.is_empty() {
+                println!(
+                    "{path}: OK ({} events, no invariant violations)",
+                    events.len()
+                );
+                Ok(())
+            } else {
+                for v in &violations {
+                    eprintln!("violation: {v}");
+                }
+                anyhow::bail!(
+                    "{path}: {} invariant violation(s)",
+                    violations.len()
+                )
+            }
+        }
+        other => anyhow::bail!("unknown trace verb {other:?}\n{usage}"),
+    }
 }
 
 fn tune(flags: &Flags) -> pcm::Result<()> {

@@ -1,0 +1,346 @@
+//! Replay-based trace invariant checker (`pcm trace check`).
+//!
+//! Replays a recorded event stream through an independent ledger and
+//! reports every violation of the scheduler's core correctness
+//! contracts:
+//!
+//! 1. **No task double-scored** — at most one `task_done` per task id
+//!    per run segment.
+//! 2. **No stale-version bytes served** — every `cache_stage` /
+//!    `cache_restore` carries the context's current registry version
+//!    (as established by `version_bump` events and the first sighting).
+//! 3. **Cache occupancy ≤ capacity at every event** — a per-worker
+//!    byte ledger rebuilt from stage/evict/restore events must never
+//!    exceed the capacity the worker joined with.
+//! 4. **No orphan cache traffic** — stage/evict/restore events must
+//!    name a worker that joined (and has not been lost).
+//!
+//! A `run_start` event resets all per-run state, so one JSONL file may
+//! hold many runs (the churn experiment records three scenarios
+//! back-to-back) without task-id or worker-id collisions tripping the
+//! checker.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::coordinator::{ContextId, TaskId, WorkerId};
+
+use super::event::TraceEvent;
+
+/// One invariant violation: the offending event's index in the stream
+/// plus a human-readable description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub index: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "event {}: {}", self.index, self.message)
+    }
+}
+
+#[derive(Default)]
+struct WorkerLedger {
+    capacity: u64,
+    /// (ctx, component) → bytes. Restores land under a synthetic
+    /// `"__restored"` component (the event doesn't decompose them);
+    /// a later stage of the same component replaces, never adds.
+    entries: HashMap<(ContextId, String), u64>,
+}
+
+impl WorkerLedger {
+    fn used(&self) -> u64 {
+        self.entries.values().sum()
+    }
+}
+
+#[derive(Default)]
+struct State {
+    done: HashSet<TaskId>,
+    versions: HashMap<ContextId, u32>,
+    workers: HashMap<WorkerId, WorkerLedger>,
+}
+
+/// Replay `events` and collect every invariant violation (empty = the
+/// trace is internally consistent).
+pub fn check_events(events: &[TraceEvent]) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let mut st = State::default();
+    for (i, e) in events.iter().enumerate() {
+        check_one(i, e, &mut st, &mut v);
+    }
+    v
+}
+
+fn violation(v: &mut Vec<Violation>, index: usize, message: String) {
+    v.push(Violation { index, message });
+}
+
+/// The context's current version per the trace: set by `version_bump`,
+/// seeded by the first stage/restore sighting (a trace need not start
+/// at version 0).
+fn expect_version(
+    st: &mut State,
+    v: &mut Vec<Violation>,
+    index: usize,
+    what: &str,
+    ctx: ContextId,
+    version: u32,
+) {
+    match st.versions.get(&ctx) {
+        Some(&current) if current != version => violation(
+            v,
+            index,
+            format!(
+                "{what} for ctx {ctx} carries version {version} but the \
+                 registry is at version {current} (stale bytes served)"
+            ),
+        ),
+        Some(_) => {}
+        None => {
+            st.versions.insert(ctx, version);
+        }
+    }
+}
+
+/// Fetch the ledger of a worker that must exist; `None` records an
+/// orphan-traffic violation.
+fn ledger<'a>(
+    st: &'a mut State,
+    v: &mut Vec<Violation>,
+    index: usize,
+    what: &str,
+    worker: WorkerId,
+) -> Option<&'a mut WorkerLedger> {
+    if st.workers.contains_key(&worker) {
+        st.workers.get_mut(&worker)
+    } else {
+        violation(
+            v,
+            index,
+            format!("{what} on worker {worker} which never joined (or was lost)"),
+        );
+        None
+    }
+}
+
+fn check_capacity(
+    led: &WorkerLedger,
+    v: &mut Vec<Violation>,
+    index: usize,
+    worker: WorkerId,
+) {
+    let used = led.used();
+    if used > led.capacity {
+        violation(
+            v,
+            index,
+            format!(
+                "worker {worker} cache occupancy {used} exceeds capacity {}",
+                led.capacity
+            ),
+        );
+    }
+}
+
+fn check_one(
+    i: usize,
+    e: &TraceEvent,
+    st: &mut State,
+    v: &mut Vec<Violation>,
+) {
+    match e {
+        TraceEvent::RunStart { .. } => *st = State::default(),
+        TraceEvent::TaskDone { task, .. } => {
+            if !st.done.insert(*task) {
+                violation(
+                    v,
+                    i,
+                    format!("task {task} completed twice (double-scored)"),
+                );
+            }
+        }
+        TraceEvent::VersionBump { ctx, version, .. } => {
+            st.versions.insert(*ctx, *version);
+        }
+        TraceEvent::WorkerJoin { worker, capacity, .. } => {
+            st.workers.insert(
+                *worker,
+                WorkerLedger { capacity: *capacity, ..Default::default() },
+            );
+        }
+        TraceEvent::WorkerLost { worker, .. } => {
+            st.workers.remove(worker);
+        }
+        TraceEvent::CacheStage { worker, ctx, component, bytes, version, .. } => {
+            expect_version(st, v, i, "cache_stage", *ctx, *version);
+            if let Some(led) = ledger(st, v, i, "cache_stage", *worker) {
+                led.entries.insert((*ctx, component.clone()), *bytes);
+                check_capacity(led, v, i, *worker);
+            }
+        }
+        TraceEvent::CacheRestore { worker, ctx, bytes, version, .. } => {
+            expect_version(st, v, i, "cache_restore", *ctx, *version);
+            if let Some(led) = ledger(st, v, i, "cache_restore", *worker) {
+                led.entries.insert((*ctx, "__restored".to_string()), *bytes);
+                check_capacity(led, v, i, *worker);
+            }
+        }
+        TraceEvent::CacheEvict { worker, ctx, .. } => {
+            if let Some(led) = ledger(st, v, i, "cache_evict", *worker) {
+                led.entries.retain(|(c, _), _| c != ctx);
+            }
+        }
+        // Pure-information events: no ledger effect.
+        TraceEvent::TaskSubmit { .. }
+        | TraceEvent::TaskDispatch { .. }
+        | TraceEvent::PrefetchDispatch { .. }
+        | TraceEvent::CacheHit { .. }
+        | TraceEvent::CachePersist { .. }
+        | TraceEvent::StaleDrop { .. }
+        | TraceEvent::Materialize { .. }
+        | TraceEvent::TaskRetry { .. }
+        | TraceEvent::NodeReclaim { .. }
+        | TraceEvent::NodeRejoin { .. }
+        | TraceEvent::DispatchRound { .. } => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn join(worker: WorkerId, capacity: u64) -> TraceEvent {
+        TraceEvent::WorkerJoin { at: 0.0, worker, node: worker, capacity }
+    }
+
+    fn stage(worker: WorkerId, ctx: ContextId, component: &str, bytes: u64, version: u32) -> TraceEvent {
+        TraceEvent::CacheStage {
+            at: 1.0,
+            worker,
+            ctx,
+            component: component.into(),
+            bytes,
+            version,
+        }
+    }
+
+    fn done(task: TaskId) -> TraceEvent {
+        TraceEvent::TaskDone { at: 2.0, task, ctx: 0, worker: 0, inferences: 1 }
+    }
+
+    fn start() -> TraceEvent {
+        TraceEvent::RunStart { at: 0.0, label: "t".into(), policy: "greedy".into() }
+    }
+
+    #[test]
+    fn clean_stream_passes() {
+        let events = vec![
+            start(),
+            join(0, 100),
+            stage(0, 0, "ModelWeights", 60, 0),
+            stage(0, 1, "ModelWeights", 40, 0),
+            done(1),
+            done(2),
+        ];
+        assert!(check_events(&events).is_empty());
+    }
+
+    #[test]
+    fn duplicate_task_done_flagged() {
+        let events = vec![start(), join(0, 100), done(7), done(7)];
+        let v = check_events(&events);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].index, 3);
+        assert!(v[0].message.contains("twice"), "{}", v[0]);
+    }
+
+    #[test]
+    fn run_start_resets_task_ids() {
+        // The same task id in two scenarios of one file is legal.
+        let events = vec![start(), done(7), start(), done(7)];
+        assert!(check_events(&events).is_empty());
+    }
+
+    #[test]
+    fn stale_version_stage_flagged() {
+        let events = vec![
+            start(),
+            join(0, 100),
+            stage(0, 0, "ModelWeights", 10, 0),
+            TraceEvent::VersionBump { at: 1.5, ctx: 0, version: 1 },
+            stage(0, 0, "ModelWeights", 10, 0), // stale: registry is at 1
+        ];
+        let v = check_events(&events);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("stale"), "{}", v[0]);
+    }
+
+    #[test]
+    fn over_capacity_flagged_and_replace_is_not_additive() {
+        let ok = vec![
+            start(),
+            join(0, 100),
+            stage(0, 0, "ModelWeights", 80, 0),
+            // Same component restaged: replaces, not adds.
+            stage(0, 0, "ModelWeights", 90, 0),
+        ];
+        assert!(check_events(&ok).is_empty());
+        let bad = vec![
+            start(),
+            join(0, 100),
+            stage(0, 0, "ModelWeights", 80, 0),
+            stage(0, 0, "DepsPackage", 30, 0),
+        ];
+        let v = check_events(&bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("exceeds capacity"), "{}", v[0]);
+    }
+
+    #[test]
+    fn evict_frees_the_context() {
+        let events = vec![
+            start(),
+            join(0, 100),
+            stage(0, 0, "ModelWeights", 80, 0),
+            TraceEvent::CacheEvict { at: 1.5, worker: 0, ctx: 0 },
+            stage(0, 1, "ModelWeights", 90, 0),
+        ];
+        assert!(check_events(&events).is_empty());
+    }
+
+    #[test]
+    fn orphan_worker_traffic_flagged() {
+        let events = vec![
+            start(),
+            join(0, 100),
+            TraceEvent::WorkerLost { at: 1.0, worker: 0, node: 0 },
+            stage(0, 0, "ModelWeights", 10, 0),
+        ];
+        let v = check_events(&events);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("never joined"), "{}", v[0]);
+    }
+
+    #[test]
+    fn restore_charges_the_ledger() {
+        let events = vec![
+            start(),
+            join(0, 100),
+            TraceEvent::CacheRestore {
+                at: 0.5,
+                worker: 0,
+                node: 0,
+                ctx: 0,
+                components: 2,
+                bytes: 70,
+                version: 3,
+            },
+            stage(0, 1, "ModelWeights", 40, 0),
+        ];
+        let v = check_events(&events);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("exceeds capacity"), "{}", v[0]);
+    }
+}

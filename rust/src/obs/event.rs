@@ -1,0 +1,695 @@
+//! Typed trace events and their JSONL wire form.
+//!
+//! One [`TraceEvent`] per observable transition: task lifecycle
+//! (submit → dispatch → stage → execute → done / retry), cache tier
+//! movements with byte counts (stage / hit / evict / persist / restore /
+//! stale-drop / materialize), churn (node reclaim / rejoin, worker
+//! join / loss), registry version bumps, and per-dispatch-round timing.
+//! Every event carries the run clock `at` (sim seconds for the
+//! discrete-event driver, wall-clock seconds since run start for the
+//! live driver) plus the ids needed to attribute it: `ContextId`,
+//! worker id, node id.
+//!
+//! The wire form is one JSON object per line (`*.jsonl`), with the
+//! variant name under the `"event"` key — stable enough for external
+//! tooling, parsed back losslessly by [`TraceEvent::from_json`] /
+//! [`read_trace`] for `pcm trace summarize|check`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context as _};
+
+use crate::cluster::NodeId;
+use crate::coordinator::{ContextId, TaskId, WorkerId};
+use crate::util::Json;
+use crate::Result;
+
+/// One observable scheduler / cache / churn transition.
+///
+/// Field conventions: `at` is the run clock in seconds; `ctx` is the
+/// [`ContextId`] the transition belongs to; `worker` / `node` identify
+/// where it happened. Byte counts are exact (the same numbers the
+/// scheduler's own accounting uses), so a trace can be replayed into
+/// an occupancy ledger — see [`crate::obs::check_events`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A driver run began; resets per-run checker state. `label` is the
+    /// config name, `policy` the placement policy in force.
+    RunStart { at: f64, label: String, policy: String },
+    /// A task entered the ready queue.
+    TaskSubmit { at: f64, task: TaskId, ctx: ContextId, inferences: u64 },
+    /// A task was placed on a worker. Carries the policy decision
+    /// context: whether the worker was warm for the task's context, the
+    /// acquisition estimate that justified the choice, and the best
+    /// rejected alternative (another idle worker) with its estimate.
+    TaskDispatch {
+        at: f64,
+        task: TaskId,
+        ctx: ContextId,
+        worker: WorkerId,
+        warm: bool,
+        est_s: f64,
+        alt_worker: Option<WorkerId>,
+        alt_est_s: Option<f64>,
+    },
+    /// A stage-only warming plan was placed on an idle worker.
+    PrefetchDispatch { at: f64, ctx: ContextId, worker: WorkerId, phases: u64 },
+    /// `count` components were already cached when a plan was built.
+    CacheHit { at: f64, worker: WorkerId, ctx: ContextId, count: u64 },
+    /// A component finished staging into a worker's cache at `version`.
+    CacheStage {
+        at: f64,
+        worker: WorkerId,
+        ctx: ContextId,
+        component: String,
+        bytes: u64,
+        version: u32,
+    },
+    /// A context's cached files were LRU-evicted from a worker.
+    CacheEvict { at: f64, worker: WorkerId, ctx: ContextId },
+    /// A dying worker's disk tier was snapshotted into the node cache.
+    CachePersist { at: f64, node: NodeId, worker: WorkerId, bytes: u64 },
+    /// A joining worker warm-started `components` (`bytes` total) of one
+    /// context from the surviving node cache, all at `version`.
+    CacheRestore {
+        at: f64,
+        worker: WorkerId,
+        node: NodeId,
+        ctx: ContextId,
+        components: u64,
+        bytes: u64,
+        version: u32,
+    },
+    /// Version-stale node-cache components were dropped, not served.
+    StaleDrop {
+        at: f64,
+        worker: WorkerId,
+        node: NodeId,
+        ctx: ContextId,
+        components: u64,
+    },
+    /// A context's library process finished materializing on a worker.
+    Materialize { at: f64, worker: WorkerId, ctx: ContextId },
+    /// A running task's worker died; the task was requeued (front).
+    TaskRetry {
+        at: f64,
+        task: TaskId,
+        ctx: ContextId,
+        worker: WorkerId,
+        inferences: u64,
+    },
+    /// A task completed and was scored.
+    TaskDone {
+        at: f64,
+        task: TaskId,
+        ctx: ContextId,
+        worker: WorkerId,
+        inferences: u64,
+    },
+    /// The registry bumped a context recipe to `version`.
+    VersionBump { at: f64, ctx: ContextId, version: u32 },
+    /// A worker incarnation joined on `node` with a byte `capacity`.
+    WorkerJoin { at: f64, worker: WorkerId, node: NodeId, capacity: u64 },
+    /// A worker incarnation was reclaimed / exited.
+    WorkerLost { at: f64, worker: WorkerId, node: NodeId },
+    /// The availability trace took `node` down.
+    NodeReclaim { at: f64, node: NodeId },
+    /// The availability trace brought `node` back.
+    NodeRejoin { at: f64, node: NodeId },
+    /// One `try_dispatch` round: how many tasks / prefetches it placed,
+    /// the backlog it left, and its measured wall-clock cost.
+    DispatchRound {
+        at: f64,
+        policy: String,
+        assigned: u64,
+        prefetched: u64,
+        queued: u64,
+        wall_s: f64,
+    },
+}
+
+fn num_u(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn obj(kind: &str, at: f64, fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("event".to_string(), Json::Str(kind.to_string()));
+    m.insert("at".to_string(), Json::Num(at));
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("trace field {key:?} is not a number"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(req_f64(j, key)? as u64)
+}
+
+fn req_u32(j: &Json, key: &str) -> Result<u32> {
+    Ok(req_f64(j, key)? as u32)
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("trace field {key:?} is not a string"))?
+        .to_string())
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    j.req(key)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("trace field {key:?} is not a bool"))
+}
+
+impl TraceEvent {
+    /// The run clock the event was stamped with.
+    pub fn at(&self) -> f64 {
+        match self {
+            TraceEvent::RunStart { at, .. }
+            | TraceEvent::TaskSubmit { at, .. }
+            | TraceEvent::TaskDispatch { at, .. }
+            | TraceEvent::PrefetchDispatch { at, .. }
+            | TraceEvent::CacheHit { at, .. }
+            | TraceEvent::CacheStage { at, .. }
+            | TraceEvent::CacheEvict { at, .. }
+            | TraceEvent::CachePersist { at, .. }
+            | TraceEvent::CacheRestore { at, .. }
+            | TraceEvent::StaleDrop { at, .. }
+            | TraceEvent::Materialize { at, .. }
+            | TraceEvent::TaskRetry { at, .. }
+            | TraceEvent::TaskDone { at, .. }
+            | TraceEvent::VersionBump { at, .. }
+            | TraceEvent::WorkerJoin { at, .. }
+            | TraceEvent::WorkerLost { at, .. }
+            | TraceEvent::NodeReclaim { at, .. }
+            | TraceEvent::NodeRejoin { at, .. }
+            | TraceEvent::DispatchRound { at, .. } => *at,
+        }
+    }
+
+    /// The `"event"` discriminator used on the wire.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::RunStart { .. } => "run_start",
+            TraceEvent::TaskSubmit { .. } => "task_submit",
+            TraceEvent::TaskDispatch { .. } => "task_dispatch",
+            TraceEvent::PrefetchDispatch { .. } => "prefetch_dispatch",
+            TraceEvent::CacheHit { .. } => "cache_hit",
+            TraceEvent::CacheStage { .. } => "cache_stage",
+            TraceEvent::CacheEvict { .. } => "cache_evict",
+            TraceEvent::CachePersist { .. } => "cache_persist",
+            TraceEvent::CacheRestore { .. } => "cache_restore",
+            TraceEvent::StaleDrop { .. } => "stale_drop",
+            TraceEvent::Materialize { .. } => "materialize",
+            TraceEvent::TaskRetry { .. } => "task_retry",
+            TraceEvent::TaskDone { .. } => "task_done",
+            TraceEvent::VersionBump { .. } => "version_bump",
+            TraceEvent::WorkerJoin { .. } => "worker_join",
+            TraceEvent::WorkerLost { .. } => "worker_lost",
+            TraceEvent::NodeReclaim { .. } => "node_reclaim",
+            TraceEvent::NodeRejoin { .. } => "node_rejoin",
+            TraceEvent::DispatchRound { .. } => "dispatch_round",
+        }
+    }
+
+    /// The JSON object form (one line of the JSONL wire format).
+    pub fn to_json(&self) -> Json {
+        let kind = self.kind();
+        match self {
+            TraceEvent::RunStart { at, label, policy } => obj(
+                kind,
+                *at,
+                vec![
+                    ("label", Json::Str(label.clone())),
+                    ("policy", Json::Str(policy.clone())),
+                ],
+            ),
+            TraceEvent::TaskSubmit { at, task, ctx, inferences } => obj(
+                kind,
+                *at,
+                vec![
+                    ("task", num_u(*task)),
+                    ("ctx", num_u(*ctx as u64)),
+                    ("inferences", num_u(*inferences)),
+                ],
+            ),
+            TraceEvent::TaskDispatch {
+                at,
+                task,
+                ctx,
+                worker,
+                warm,
+                est_s,
+                alt_worker,
+                alt_est_s,
+            } => {
+                let mut fields = vec![
+                    ("task", num_u(*task)),
+                    ("ctx", num_u(*ctx as u64)),
+                    ("worker", num_u(*worker as u64)),
+                    ("warm", Json::Bool(*warm)),
+                    ("est_s", Json::Num(*est_s)),
+                ];
+                if let Some(w) = alt_worker {
+                    fields.push(("alt_worker", num_u(*w as u64)));
+                }
+                if let Some(e) = alt_est_s {
+                    fields.push(("alt_est_s", Json::Num(*e)));
+                }
+                obj(kind, *at, fields)
+            }
+            TraceEvent::PrefetchDispatch { at, ctx, worker, phases } => obj(
+                kind,
+                *at,
+                vec![
+                    ("ctx", num_u(*ctx as u64)),
+                    ("worker", num_u(*worker as u64)),
+                    ("phases", num_u(*phases)),
+                ],
+            ),
+            TraceEvent::CacheHit { at, worker, ctx, count } => obj(
+                kind,
+                *at,
+                vec![
+                    ("worker", num_u(*worker as u64)),
+                    ("ctx", num_u(*ctx as u64)),
+                    ("count", num_u(*count)),
+                ],
+            ),
+            TraceEvent::CacheStage {
+                at,
+                worker,
+                ctx,
+                component,
+                bytes,
+                version,
+            } => obj(
+                kind,
+                *at,
+                vec![
+                    ("worker", num_u(*worker as u64)),
+                    ("ctx", num_u(*ctx as u64)),
+                    ("component", Json::Str(component.clone())),
+                    ("bytes", num_u(*bytes)),
+                    ("version", num_u(*version as u64)),
+                ],
+            ),
+            TraceEvent::CacheEvict { at, worker, ctx } => obj(
+                kind,
+                *at,
+                vec![
+                    ("worker", num_u(*worker as u64)),
+                    ("ctx", num_u(*ctx as u64)),
+                ],
+            ),
+            TraceEvent::CachePersist { at, node, worker, bytes } => obj(
+                kind,
+                *at,
+                vec![
+                    ("node", num_u(*node as u64)),
+                    ("worker", num_u(*worker as u64)),
+                    ("bytes", num_u(*bytes)),
+                ],
+            ),
+            TraceEvent::CacheRestore {
+                at,
+                worker,
+                node,
+                ctx,
+                components,
+                bytes,
+                version,
+            } => obj(
+                kind,
+                *at,
+                vec![
+                    ("worker", num_u(*worker as u64)),
+                    ("node", num_u(*node as u64)),
+                    ("ctx", num_u(*ctx as u64)),
+                    ("components", num_u(*components)),
+                    ("bytes", num_u(*bytes)),
+                    ("version", num_u(*version as u64)),
+                ],
+            ),
+            TraceEvent::StaleDrop { at, worker, node, ctx, components } => {
+                obj(
+                    kind,
+                    *at,
+                    vec![
+                        ("worker", num_u(*worker as u64)),
+                        ("node", num_u(*node as u64)),
+                        ("ctx", num_u(*ctx as u64)),
+                        ("components", num_u(*components)),
+                    ],
+                )
+            }
+            TraceEvent::Materialize { at, worker, ctx } => obj(
+                kind,
+                *at,
+                vec![
+                    ("worker", num_u(*worker as u64)),
+                    ("ctx", num_u(*ctx as u64)),
+                ],
+            ),
+            TraceEvent::TaskRetry { at, task, ctx, worker, inferences }
+            | TraceEvent::TaskDone { at, task, ctx, worker, inferences } => {
+                obj(
+                    kind,
+                    *at,
+                    vec![
+                        ("task", num_u(*task)),
+                        ("ctx", num_u(*ctx as u64)),
+                        ("worker", num_u(*worker as u64)),
+                        ("inferences", num_u(*inferences)),
+                    ],
+                )
+            }
+            TraceEvent::VersionBump { at, ctx, version } => obj(
+                kind,
+                *at,
+                vec![
+                    ("ctx", num_u(*ctx as u64)),
+                    ("version", num_u(*version as u64)),
+                ],
+            ),
+            TraceEvent::WorkerJoin { at, worker, node, capacity } => obj(
+                kind,
+                *at,
+                vec![
+                    ("worker", num_u(*worker as u64)),
+                    ("node", num_u(*node as u64)),
+                    ("capacity", num_u(*capacity)),
+                ],
+            ),
+            TraceEvent::WorkerLost { at, worker, node } => obj(
+                kind,
+                *at,
+                vec![
+                    ("worker", num_u(*worker as u64)),
+                    ("node", num_u(*node as u64)),
+                ],
+            ),
+            TraceEvent::NodeReclaim { at, node }
+            | TraceEvent::NodeRejoin { at, node } => {
+                obj(kind, *at, vec![("node", num_u(*node as u64))])
+            }
+            TraceEvent::DispatchRound {
+                at,
+                policy,
+                assigned,
+                prefetched,
+                queued,
+                wall_s,
+            } => obj(
+                kind,
+                *at,
+                vec![
+                    ("policy", Json::Str(policy.clone())),
+                    ("assigned", num_u(*assigned)),
+                    ("prefetched", num_u(*prefetched)),
+                    ("queued", num_u(*queued)),
+                    ("wall_s", Json::Num(*wall_s)),
+                ],
+            ),
+        }
+    }
+
+    /// Parse one wire-form object back into a typed event.
+    pub fn from_json(j: &Json) -> Result<TraceEvent> {
+        let kind = j
+            .req("event")?
+            .as_str()
+            .ok_or_else(|| anyhow!("trace field \"event\" is not a string"))?
+            .to_string();
+        let at = req_f64(j, "at")?;
+        Ok(match kind.as_str() {
+            "run_start" => TraceEvent::RunStart {
+                at,
+                label: req_str(j, "label")?,
+                policy: req_str(j, "policy")?,
+            },
+            "task_submit" => TraceEvent::TaskSubmit {
+                at,
+                task: req_u64(j, "task")?,
+                ctx: req_u32(j, "ctx")?,
+                inferences: req_u64(j, "inferences")?,
+            },
+            "task_dispatch" => TraceEvent::TaskDispatch {
+                at,
+                task: req_u64(j, "task")?,
+                ctx: req_u32(j, "ctx")?,
+                worker: req_u32(j, "worker")?,
+                warm: req_bool(j, "warm")?,
+                est_s: req_f64(j, "est_s")?,
+                alt_worker: j
+                    .get("alt_worker")
+                    .and_then(Json::as_u64)
+                    .map(|w| w as WorkerId),
+                alt_est_s: j.get("alt_est_s").and_then(Json::as_f64),
+            },
+            "prefetch_dispatch" => TraceEvent::PrefetchDispatch {
+                at,
+                ctx: req_u32(j, "ctx")?,
+                worker: req_u32(j, "worker")?,
+                phases: req_u64(j, "phases")?,
+            },
+            "cache_hit" => TraceEvent::CacheHit {
+                at,
+                worker: req_u32(j, "worker")?,
+                ctx: req_u32(j, "ctx")?,
+                count: req_u64(j, "count")?,
+            },
+            "cache_stage" => TraceEvent::CacheStage {
+                at,
+                worker: req_u32(j, "worker")?,
+                ctx: req_u32(j, "ctx")?,
+                component: req_str(j, "component")?,
+                bytes: req_u64(j, "bytes")?,
+                version: req_u32(j, "version")?,
+            },
+            "cache_evict" => TraceEvent::CacheEvict {
+                at,
+                worker: req_u32(j, "worker")?,
+                ctx: req_u32(j, "ctx")?,
+            },
+            "cache_persist" => TraceEvent::CachePersist {
+                at,
+                node: req_u32(j, "node")?,
+                worker: req_u32(j, "worker")?,
+                bytes: req_u64(j, "bytes")?,
+            },
+            "cache_restore" => TraceEvent::CacheRestore {
+                at,
+                worker: req_u32(j, "worker")?,
+                node: req_u32(j, "node")?,
+                ctx: req_u32(j, "ctx")?,
+                components: req_u64(j, "components")?,
+                bytes: req_u64(j, "bytes")?,
+                version: req_u32(j, "version")?,
+            },
+            "stale_drop" => TraceEvent::StaleDrop {
+                at,
+                worker: req_u32(j, "worker")?,
+                node: req_u32(j, "node")?,
+                ctx: req_u32(j, "ctx")?,
+                components: req_u64(j, "components")?,
+            },
+            "materialize" => TraceEvent::Materialize {
+                at,
+                worker: req_u32(j, "worker")?,
+                ctx: req_u32(j, "ctx")?,
+            },
+            "task_retry" => TraceEvent::TaskRetry {
+                at,
+                task: req_u64(j, "task")?,
+                ctx: req_u32(j, "ctx")?,
+                worker: req_u32(j, "worker")?,
+                inferences: req_u64(j, "inferences")?,
+            },
+            "task_done" => TraceEvent::TaskDone {
+                at,
+                task: req_u64(j, "task")?,
+                ctx: req_u32(j, "ctx")?,
+                worker: req_u32(j, "worker")?,
+                inferences: req_u64(j, "inferences")?,
+            },
+            "version_bump" => TraceEvent::VersionBump {
+                at,
+                ctx: req_u32(j, "ctx")?,
+                version: req_u32(j, "version")?,
+            },
+            "worker_join" => TraceEvent::WorkerJoin {
+                at,
+                worker: req_u32(j, "worker")?,
+                node: req_u32(j, "node")?,
+                capacity: req_u64(j, "capacity")?,
+            },
+            "worker_lost" => TraceEvent::WorkerLost {
+                at,
+                worker: req_u32(j, "worker")?,
+                node: req_u32(j, "node")?,
+            },
+            "node_reclaim" => {
+                TraceEvent::NodeReclaim { at, node: req_u32(j, "node")? }
+            }
+            "node_rejoin" => {
+                TraceEvent::NodeRejoin { at, node: req_u32(j, "node")? }
+            }
+            "dispatch_round" => TraceEvent::DispatchRound {
+                at,
+                policy: req_str(j, "policy")?,
+                assigned: req_u64(j, "assigned")?,
+                prefetched: req_u64(j, "prefetched")?,
+                queued: req_u64(j, "queued")?,
+                wall_s: req_f64(j, "wall_s")?,
+            },
+            other => bail!("unknown trace event kind {other:?}"),
+        })
+    }
+}
+
+/// Read a JSONL trace file back into typed events (blank lines are
+/// skipped; any malformed line fails with its 1-based line number).
+pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<TraceEvent>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("trace line {}", i + 1))?;
+        events.push(
+            TraceEvent::from_json(&j)
+                .with_context(|| format!("trace line {}", i + 1))?,
+        );
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::RunStart {
+                at: 0.0,
+                label: "t".into(),
+                policy: "greedy".into(),
+            },
+            TraceEvent::TaskSubmit { at: 0.0, task: 1, ctx: 0, inferences: 50 },
+            TraceEvent::TaskDispatch {
+                at: 0.5,
+                task: 1,
+                ctx: 0,
+                worker: 2,
+                warm: false,
+                est_s: 12.25,
+                alt_worker: Some(3),
+                alt_est_s: Some(14.5),
+            },
+            TraceEvent::TaskDispatch {
+                at: 0.5,
+                task: 2,
+                ctx: 1,
+                worker: 3,
+                warm: true,
+                est_s: 0.5,
+                alt_worker: None,
+                alt_est_s: None,
+            },
+            TraceEvent::PrefetchDispatch { at: 0.5, ctx: 0, worker: 4, phases: 2 },
+            TraceEvent::CacheHit { at: 0.5, worker: 3, ctx: 1, count: 3 },
+            TraceEvent::CacheStage {
+                at: 1.0,
+                worker: 2,
+                ctx: 0,
+                component: "ModelWeights".into(),
+                bytes: 1 << 30,
+                version: 1,
+            },
+            TraceEvent::CacheEvict { at: 2.0, worker: 2, ctx: 1 },
+            TraceEvent::CachePersist { at: 3.0, node: 5, worker: 2, bytes: 99 },
+            TraceEvent::CacheRestore {
+                at: 4.0,
+                worker: 6,
+                node: 5,
+                ctx: 0,
+                components: 2,
+                bytes: 99,
+                version: 1,
+            },
+            TraceEvent::StaleDrop { at: 4.0, worker: 6, node: 5, ctx: 1, components: 1 },
+            TraceEvent::Materialize { at: 4.5, worker: 6, ctx: 0 },
+            TraceEvent::TaskRetry { at: 5.0, task: 1, ctx: 0, worker: 2, inferences: 50 },
+            TraceEvent::TaskDone { at: 6.0, task: 1, ctx: 0, worker: 6, inferences: 50 },
+            TraceEvent::VersionBump { at: 7.0, ctx: 0, version: 2 },
+            TraceEvent::WorkerJoin { at: 8.0, worker: 7, node: 1, capacity: 1 << 34 },
+            TraceEvent::WorkerLost { at: 9.0, worker: 7, node: 1 },
+            TraceEvent::NodeReclaim { at: 9.0, node: 1 },
+            TraceEvent::NodeRejoin { at: 10.0, node: 1 },
+            TraceEvent::DispatchRound {
+                at: 11.0,
+                policy: "greedy".into(),
+                assigned: 4,
+                prefetched: 1,
+                queued: 7,
+                wall_s: 1.25e-5,
+            },
+        ]
+    }
+
+    /// Every variant round-trips through the JSONL wire form.
+    #[test]
+    fn json_roundtrip_every_variant() {
+        for e in samples() {
+            let line = e.to_json().to_string();
+            let back = TraceEvent::from_json(&Json::parse(&line).unwrap())
+                .unwrap_or_else(|err| panic!("{line}: {err}"));
+            assert_eq!(back, e, "round-trip of {line}");
+        }
+    }
+
+    #[test]
+    fn wire_form_is_flat_object_with_discriminator() {
+        let e = &samples()[1];
+        let j = e.to_json();
+        assert_eq!(j.req("event").unwrap().as_str(), Some("task_submit"));
+        assert_eq!(j.req("at").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.req("task").unwrap().as_u64(), Some(1));
+        assert_eq!(e.kind(), "task_submit");
+        assert_eq!(e.at(), 0.0);
+    }
+
+    #[test]
+    fn read_trace_reports_line_numbers() {
+        let dir = std::env::temp_dir().join(format!(
+            "pcm-trace-read-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"event\":\"run_start\",\"at\":0,\"label\":\"x\",\"policy\":\"p\"}\n\nnot json\n").unwrap();
+        let err = read_trace(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let j = Json::parse("{\"event\":\"warp_core\",\"at\":1}").unwrap();
+        assert!(TraceEvent::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Observability: structured event tracing and telemetry.
+//!
+//! The paper's argument is about *where context bytes live over time* —
+//! acquisition, reuse, eviction, warm restart — and end-of-run
+//! aggregates (`CacheStats`, `RunSummary`) can't show the decision
+//! sequence that produced them. This module records it:
+//!
+//! * [`TraceEvent`] — one typed event per observable transition: task
+//!   lifecycle, cache tier movements with byte counts, placement
+//!   decisions with the rejected alternative, churn, registry version
+//!   bumps, and per-dispatch-round timing.
+//! * [`TraceSink`] / [`TraceHandle`] — where events go. The scheduler
+//!   and both drivers hold a cloneable [`TraceHandle`]; a null handle
+//!   (the default) costs one branch per potential emission site, a
+//!   [`MemorySink`] captures in-process (tests, doctests), a
+//!   [`JsonlSink`] streams one JSON object per line for `--trace-out`.
+//! * [`Telemetry`] — aggregation over a recorded stream: per-context
+//!   byte-seconds resident, warm/cold first-dispatch splits, round
+//!   p50/p99, per-worker warm-restored bytes. Rendered by
+//!   `pcm trace summarize`; its [`cache_line`] / [`summary_row`]
+//!   helpers are also the formatting source `CacheStats::report()` and
+//!   `RunSummary::row()` delegate to.
+//! * [`check_events`] — a replay-based invariant checker
+//!   (`pcm trace check`): no task double-scored, no stale-version
+//!   bytes served, cache occupancy ≤ capacity at every event. CI runs
+//!   it on the traces the smoke jobs record, so every PR leaves an
+//!   inspectable, machine-checked decision record.
+//!
+//! See the crate-level *Observing a run* section for a worked example.
+
+pub mod check;
+pub mod event;
+pub mod sink;
+pub mod telemetry;
+
+pub use check::{check_events, Violation};
+pub use event::{read_trace, TraceEvent};
+pub use sink::{JsonlSink, MemorySink, NullSink, TraceHandle, TraceSink};
+pub use telemetry::{cache_line, split_runs, summary_row, Telemetry};

@@ -1,0 +1,269 @@
+//! Trace sinks and the cheap shared handle the schedulers hold.
+//!
+//! A [`TraceSink`] consumes [`TraceEvent`]s; three implementations
+//! cover the use cases: [`NullSink`] (tracing "on" but discarded —
+//! measures pure emission overhead), [`MemorySink`] (in-process
+//! capture for tests and doctests, optionally a bounded ring), and
+//! [`JsonlSink`] (buffered one-object-per-line file writer for
+//! `--trace-out`).
+//!
+//! [`TraceHandle`] is the value everything threads around: a cloneable
+//! `Option<Arc<Mutex<dyn TraceSink>>>`. A null handle makes
+//! [`TraceHandle::on`] false, and every emission site guards with it,
+//! so a disabled trace costs one branch on the hot path — no event is
+//! even constructed.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context as _;
+
+use super::event::TraceEvent;
+use crate::Result;
+
+/// Consumer of trace events. `record` runs under the handle's mutex on
+/// the scheduler's thread, so implementations should be quick; heavy
+/// work belongs behind `flush` (called at run end and on demand).
+pub trait TraceSink: Send {
+    fn record(&mut self, event: &TraceEvent);
+    fn flush(&mut self) {}
+}
+
+/// Discards every event. Distinct from a null [`TraceHandle`]: the
+/// handle is *on*, so emission sites still build and deliver events —
+/// exactly what the `bench_hotpath` overhead case measures.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&mut self, _event: &TraceEvent) {}
+}
+
+/// In-memory capture, optionally a bounded ring that drops the oldest
+/// event once full (crash-loop postmortems want the tail, not the head).
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    events: VecDeque<TraceEvent>,
+    cap: Option<usize>,
+}
+
+impl MemorySink {
+    /// Keep every event (tests, doctests, small runs).
+    pub fn unbounded() -> Self {
+        Self::default()
+    }
+
+    /// Keep only the most recent `cap` events.
+    pub fn ring(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be positive");
+        Self { events: VecDeque::with_capacity(cap), cap: Some(cap) }
+    }
+
+    /// Snapshot of the captured events in arrival order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl TraceSink for MemorySink {
+    fn record(&mut self, event: &TraceEvent) {
+        if let Some(cap) = self.cap {
+            if self.events.len() == cap {
+                self.events.pop_front();
+            }
+        }
+        self.events.push_back(event.clone());
+    }
+}
+
+/// Buffered JSONL file writer — one `TraceEvent` object per line.
+/// Flushes on [`TraceSink::flush`] and on drop; I/O errors after
+/// creation are swallowed (tracing must never take down a run).
+#[derive(Debug)]
+pub struct JsonlSink {
+    out: BufWriter<File>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) the trace file, creating parent directories.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating trace dir {}", parent.display())
+                })?;
+            }
+        }
+        let file = File::create(path).with_context(|| {
+            format!("creating trace file {}", path.display())
+        })?;
+        Ok(Self { out: BufWriter::new(file) })
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn record(&mut self, event: &TraceEvent) {
+        let line = event.to_json().to_string();
+        let _ = writeln!(self.out, "{line}");
+    }
+
+    fn flush(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// The cloneable emission handle held by the scheduler and drivers.
+///
+/// [`TraceHandle::null`] (the default) disables tracing entirely:
+/// [`TraceHandle::on`] is false and [`TraceHandle::emit`] is a no-op
+/// branch. Emission sites therefore guard event *construction*:
+///
+/// ```ignore
+/// if self.trace.on() {
+///     self.trace.emit(TraceEvent::TaskDone { .. });
+/// }
+/// ```
+#[derive(Clone, Default)]
+pub struct TraceHandle {
+    inner: Option<Arc<Mutex<dyn TraceSink>>>,
+}
+
+impl TraceHandle {
+    /// Tracing disabled (free: no allocation, no lock).
+    pub fn null() -> Self {
+        Self::default()
+    }
+
+    /// Wrap an owned sink.
+    pub fn new(sink: impl TraceSink + 'static) -> Self {
+        let shared: Arc<Mutex<dyn TraceSink>> = Arc::new(Mutex::new(sink));
+        Self { inner: Some(shared) }
+    }
+
+    /// Share a sink the caller keeps a reference to (e.g. a
+    /// `MemorySink` a test will inspect after the run).
+    pub fn from_shared(sink: Arc<Mutex<dyn TraceSink>>) -> Self {
+        Self { inner: Some(sink) }
+    }
+
+    /// Is a sink attached? Hot-path guard for emission sites.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Deliver one event to the sink (no-op on a null handle).
+    pub fn emit(&self, event: TraceEvent) {
+        if let Some(sink) = &self.inner {
+            sink.lock().expect("trace sink poisoned").record(&event);
+        }
+    }
+
+    /// Flush the sink (no-op on a null handle).
+    pub fn flush(&self) {
+        if let Some(sink) = &self.inner {
+            sink.lock().expect("trace sink poisoned").flush();
+        }
+    }
+}
+
+impl fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(if self.on() {
+            "TraceHandle(on)"
+        } else {
+            "TraceHandle(off)"
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stamp(at: f64) -> TraceEvent {
+        TraceEvent::NodeReclaim { at, node: 0 }
+    }
+
+    #[test]
+    fn null_handle_is_off_and_inert() {
+        let h = TraceHandle::null();
+        assert!(!h.on());
+        h.emit(stamp(1.0)); // must not panic
+        h.flush();
+        assert_eq!(format!("{h:?}"), "TraceHandle(off)");
+    }
+
+    #[test]
+    fn memory_sink_captures_in_order() {
+        let sink = Arc::new(Mutex::new(MemorySink::unbounded()));
+        let h = TraceHandle::from_shared(sink.clone());
+        assert!(h.on());
+        assert_eq!(format!("{h:?}"), "TraceHandle(on)");
+        for i in 0..5 {
+            h.emit(stamp(i as f64));
+        }
+        let got = sink.lock().unwrap().events();
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[4].at(), 4.0);
+        // Clones share the sink.
+        let h2 = h.clone();
+        h2.emit(stamp(9.0));
+        assert_eq!(sink.lock().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn ring_keeps_the_tail() {
+        let mut s = MemorySink::ring(3);
+        assert!(s.is_empty());
+        for i in 0..10 {
+            s.record(&stamp(i as f64));
+        }
+        let got = s.events();
+        assert_eq!(
+            got.iter().map(TraceEvent::at).collect::<Vec<_>>(),
+            vec![7.0, 8.0, 9.0]
+        );
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let path = std::env::temp_dir().join(format!(
+            "pcm-trace-sink-{}.jsonl",
+            std::process::id()
+        ));
+        {
+            let h = TraceHandle::new(JsonlSink::create(&path).unwrap());
+            h.emit(TraceEvent::RunStart {
+                at: 0.0,
+                label: "t".into(),
+                policy: "greedy".into(),
+            });
+            h.emit(stamp(2.5));
+            h.flush();
+        }
+        let events = super::super::event::read_trace(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1], stamp(2.5));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,484 @@
+//! Trace aggregation and the one shared human-rendering layer.
+//!
+//! [`Telemetry::from_events`] folds a recorded event stream into the
+//! run-level aggregates the paper's analysis cares about: per-context
+//! **byte-seconds resident** (cache bytes integrated over the run
+//! clock), warm vs cold **first-task dispatch** splits, per-policy
+//! dispatch-round counts with a **round-duration distribution**
+//! (p50/p99), and per-worker **warm-restored bytes** — the number the
+//! live acceptance gate compares against `LiveOutcome::warm_started`.
+//!
+//! The rendering helpers [`cache_line`] and [`summary_row`] are the
+//! *single* formatting source for per-context cache counters and
+//! Figure-4 summary rows: `CacheStats::report()` and
+//! `RunSummary::row()` delegate here, so the human-readable summaries
+//! and the JSONL-derived ones cannot drift apart.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::coordinator::{
+    CacheStats, ContextCacheCounters, ContextId, RunSummary, WorkerId,
+};
+use crate::util::{fmt_duration, Summary};
+
+use super::event::TraceEvent;
+
+/// The canonical per-context cache-counter line (`CacheStats::report`
+/// emits exactly this for every context).
+pub fn cache_line(ctx: ContextId, c: &ContextCacheCounters) -> String {
+    format!(
+        "ctx={ctx} hits={} misses={} evictions={} prefetched={} \
+         hit_rate={:.3} staged_bytes={} warm_restored={} \
+         warm_hit_rate={:.3}",
+        c.hits,
+        c.misses,
+        c.evictions,
+        c.prefetched,
+        c.hit_rate(),
+        c.staged_bytes,
+        c.warm_restored,
+        c.warm_restart_hit_rate()
+    )
+}
+
+/// The canonical Figure-4 table row (`RunSummary::row` delegates here).
+pub fn summary_row(s: &RunSummary) -> String {
+    format!(
+        "{:<10} {:>9} {:>6} {:>10.1} {:>9} {:>8.1} {:>8} {:>6}",
+        s.id,
+        s.policy,
+        s.batch_size,
+        s.exec_time_s,
+        fmt_duration(s.exec_time_s),
+        s.avg_workers,
+        s.completed_inferences,
+        s.evictions,
+    )
+}
+
+/// Run-level aggregates folded from one run segment of a trace.
+///
+/// Cache counters here are *trace-derived*: `misses`/`staged_bytes`
+/// count completed stage events (a stage interrupted by a kill emits no
+/// `cache_stage`), so they can undercount the scheduler's commitment-
+/// time `CacheStats` under churn — the trace is the record of what
+/// actually happened, not what was planned.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    /// `label` / `policy` of the segment's `run_start` (empty if none).
+    pub label: String,
+    pub policy: String,
+    pub submitted: u64,
+    pub dispatched: u64,
+    pub completed: u64,
+    pub retried: u64,
+    pub completed_inferences: u64,
+    /// First dispatch of each `(worker, ctx)` pair that found the
+    /// worker warm (vs cold) — the warm-restart payoff split.
+    pub warm_first_dispatches: u64,
+    pub cold_first_dispatches: u64,
+    /// Per-context counters reconstructed from cache events.
+    pub cache: CacheStats,
+    /// ∫ resident cache bytes dt per context, across all workers.
+    pub byte_seconds: BTreeMap<ContextId, f64>,
+    /// Warm-restored bytes per worker (sums that worker's
+    /// `cache_restore` events) — matches `LiveOutcome::warm_started`.
+    pub restored_bytes_by_worker: BTreeMap<WorkerId, u64>,
+    pub rounds: u64,
+    /// Wall-clock cost of each traced dispatch round, seconds.
+    pub round_wall: Summary,
+    pub assigned_total: u64,
+    pub prefetched_total: u64,
+    pub worker_joins: u64,
+    pub worker_losses: u64,
+    pub node_reclaims: u64,
+    pub node_rejoins: u64,
+    /// Dispatch rounds per placement policy name.
+    pub rounds_by_policy: BTreeMap<String, u64>,
+}
+
+/// Byte ledger used to integrate resident bytes over time.
+#[derive(Default)]
+struct Residency {
+    /// worker → (ctx, component) → bytes.
+    per_worker: HashMap<WorkerId, HashMap<(ContextId, String), u64>>,
+    /// ctx → resident bytes summed across workers.
+    by_ctx: BTreeMap<ContextId, u64>,
+    last_at: f64,
+}
+
+impl Residency {
+    /// Accumulate byte-seconds up to `at` before applying a mutation.
+    fn integrate(&mut self, at: f64, out: &mut BTreeMap<ContextId, f64>) {
+        let dt = (at - self.last_at).max(0.0);
+        if dt > 0.0 {
+            for (&ctx, &bytes) in &self.by_ctx {
+                if bytes > 0 {
+                    *out.entry(ctx).or_insert(0.0) += bytes as f64 * dt;
+                }
+            }
+        }
+        self.last_at = at.max(self.last_at);
+    }
+
+    fn set(&mut self, worker: WorkerId, ctx: ContextId, comp: String, bytes: u64) {
+        let entry = self
+            .per_worker
+            .entry(worker)
+            .or_default()
+            .entry((ctx, comp))
+            .or_insert(0);
+        let old = *entry;
+        *entry = bytes;
+        let r = self.by_ctx.entry(ctx).or_insert(0);
+        *r = r.saturating_sub(old) + bytes;
+    }
+
+    fn evict(&mut self, worker: WorkerId, ctx: ContextId) {
+        if let Some(m) = self.per_worker.get_mut(&worker) {
+            let mut freed = 0u64;
+            m.retain(|(c, _), bytes| {
+                if c == &ctx {
+                    freed += *bytes;
+                    false
+                } else {
+                    true
+                }
+            });
+            if let Some(r) = self.by_ctx.get_mut(&ctx) {
+                *r = r.saturating_sub(freed);
+            }
+        }
+    }
+
+    fn lose_worker(&mut self, worker: WorkerId) {
+        if let Some(m) = self.per_worker.remove(&worker) {
+            for ((ctx, _), bytes) in m {
+                if let Some(r) = self.by_ctx.get_mut(&ctx) {
+                    *r = r.saturating_sub(bytes);
+                }
+            }
+        }
+    }
+}
+
+impl Telemetry {
+    /// Fold one run segment (see [`split_runs`]) into aggregates.
+    pub fn from_events(events: &[TraceEvent]) -> Self {
+        let mut t = Telemetry::default();
+        let mut res = Residency::default();
+        let mut first_pairs: HashSet<(WorkerId, ContextId)> = HashSet::new();
+        for e in events {
+            res.integrate(e.at(), &mut t.byte_seconds);
+            match e {
+                TraceEvent::RunStart { label, policy, .. } => {
+                    t.label = label.clone();
+                    t.policy = policy.clone();
+                }
+                TraceEvent::TaskSubmit { .. } => t.submitted += 1,
+                TraceEvent::TaskDispatch { worker, ctx, warm, .. } => {
+                    t.dispatched += 1;
+                    if first_pairs.insert((*worker, *ctx)) {
+                        if *warm {
+                            t.warm_first_dispatches += 1;
+                        } else {
+                            t.cold_first_dispatches += 1;
+                        }
+                    }
+                }
+                TraceEvent::PrefetchDispatch { ctx, phases, .. } => {
+                    t.cache.ctx_mut(*ctx).prefetched += phases;
+                }
+                TraceEvent::CacheHit { ctx, count, .. } => {
+                    t.cache.ctx_mut(*ctx).hits += count;
+                }
+                TraceEvent::CacheStage { worker, ctx, component, bytes, .. } => {
+                    let c = t.cache.ctx_mut(*ctx);
+                    c.misses += 1;
+                    c.staged_bytes += bytes;
+                    res.set(*worker, *ctx, component.clone(), *bytes);
+                }
+                TraceEvent::CacheEvict { worker, ctx, .. } => {
+                    t.cache.ctx_mut(*ctx).evictions += 1;
+                    res.evict(*worker, *ctx);
+                }
+                TraceEvent::CachePersist { .. } => {}
+                TraceEvent::CacheRestore {
+                    worker, ctx, components, bytes, ..
+                } => {
+                    let c = t.cache.ctx_mut(*ctx);
+                    c.warm_restored += components;
+                    c.warm_restored_bytes += bytes;
+                    *t.restored_bytes_by_worker.entry(*worker).or_insert(0) +=
+                        bytes;
+                    res.set(*worker, *ctx, "__restored".to_string(), *bytes);
+                }
+                TraceEvent::StaleDrop { ctx, components, .. } => {
+                    t.cache.ctx_mut(*ctx).stale_dropped += components;
+                }
+                TraceEvent::Materialize { .. } => {}
+                TraceEvent::TaskRetry { .. } => t.retried += 1,
+                TraceEvent::TaskDone { inferences, .. } => {
+                    t.completed += 1;
+                    t.completed_inferences += inferences;
+                }
+                TraceEvent::VersionBump { .. } => {}
+                TraceEvent::WorkerJoin { .. } => t.worker_joins += 1,
+                TraceEvent::WorkerLost { worker, .. } => {
+                    t.worker_losses += 1;
+                    res.lose_worker(*worker);
+                }
+                TraceEvent::NodeReclaim { .. } => t.node_reclaims += 1,
+                TraceEvent::NodeRejoin { .. } => t.node_rejoins += 1,
+                TraceEvent::DispatchRound {
+                    policy, assigned, prefetched, wall_s, ..
+                } => {
+                    t.rounds += 1;
+                    t.assigned_total += assigned;
+                    t.prefetched_total += prefetched;
+                    t.round_wall.add(*wall_s);
+                    *t.rounds_by_policy.entry(policy.clone()).or_insert(0) +=
+                        1;
+                }
+            }
+        }
+        t
+    }
+
+    /// Human-readable multi-line summary of one run segment.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "run label={} policy={}",
+            if self.label.is_empty() { "?" } else { &self.label },
+            if self.policy.is_empty() { "?" } else { &self.policy },
+        );
+        let _ = writeln!(
+            out,
+            "  tasks: submitted={} dispatched={} retried={} completed={} \
+             inferences={}",
+            self.submitted,
+            self.dispatched,
+            self.retried,
+            self.completed,
+            self.completed_inferences
+        );
+        let _ = writeln!(
+            out,
+            "  first-task dispatches: warm={} cold={}",
+            self.warm_first_dispatches, self.cold_first_dispatches
+        );
+        let _ = writeln!(
+            out,
+            "  rounds={} assigned={} prefetched={} round_wall \
+             p50={:.1}us p99={:.1}us",
+            self.rounds,
+            self.assigned_total,
+            self.prefetched_total,
+            self.round_wall.percentile(50.0) * 1e6,
+            self.round_wall.percentile(99.0) * 1e6
+        );
+        let _ = writeln!(
+            out,
+            "  churn: worker_joins={} worker_losses={} node_reclaims={} \
+             node_rejoins={}",
+            self.worker_joins,
+            self.worker_losses,
+            self.node_reclaims,
+            self.node_rejoins
+        );
+        if !self.cache.per_context.is_empty() {
+            let _ = writeln!(out, "  cache (trace-derived):");
+            for (ctx, c) in &self.cache.per_context {
+                let _ = writeln!(out, "    {}", cache_line(*ctx, c));
+            }
+        }
+        if !self.byte_seconds.is_empty() {
+            let _ = writeln!(out, "  resident byte-seconds:");
+            for (ctx, bs) in &self.byte_seconds {
+                let _ = writeln!(out, "    ctx={ctx} byte_seconds={bs:.1}");
+            }
+        }
+        if !self.restored_bytes_by_worker.is_empty() {
+            let _ = writeln!(out, "  warm restores:");
+            for (wid, bytes) in &self.restored_bytes_by_worker {
+                let _ = writeln!(out, "    worker={wid} bytes={bytes}");
+            }
+        }
+        out
+    }
+}
+
+/// Split a multi-run trace into per-`run_start` segments (events before
+/// the first `run_start` form their own leading segment).
+pub fn split_runs(events: &[TraceEvent]) -> Vec<&[TraceEvent]> {
+    if events.is_empty() {
+        return Vec::new();
+    }
+    let mut starts: Vec<usize> = events
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| matches!(e, TraceEvent::RunStart { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    if starts.first() != Some(&0) {
+        starts.insert(0, 0);
+    }
+    starts
+        .iter()
+        .enumerate()
+        .map(|(k, &s)| {
+            let end = starts.get(k + 1).copied().unwrap_or(events.len());
+            &events[s..end]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start(label: &str) -> TraceEvent {
+        TraceEvent::RunStart {
+            at: 0.0,
+            label: label.into(),
+            policy: "greedy".into(),
+        }
+    }
+
+    #[test]
+    fn renders_shared_formats() {
+        let c = ContextCacheCounters {
+            hits: 3,
+            misses: 1,
+            ..Default::default()
+        };
+        let line = cache_line(7, &c);
+        assert!(line.starts_with("ctx=7 hits=3 misses=1"), "{line}");
+        assert!(line.contains("hit_rate=0.750"), "{line}");
+
+        // The shared renderers ARE CacheStats::report / RunSummary::row.
+        let mut stats = CacheStats::default();
+        *stats.ctx_mut(7) = c;
+        assert_eq!(stats.report().trim_end(), line);
+    }
+
+    #[test]
+    fn byte_seconds_integrate_over_residency() {
+        let events = vec![
+            start("bs"),
+            TraceEvent::WorkerJoin { at: 0.0, worker: 0, node: 0, capacity: 1000 },
+            TraceEvent::CacheStage {
+                at: 1.0,
+                worker: 0,
+                ctx: 0,
+                component: "ModelWeights".into(),
+                bytes: 100,
+                version: 0,
+            },
+            // 100 bytes resident for 3 s…
+            TraceEvent::CacheEvict { at: 4.0, worker: 0, ctx: 0 },
+            // …then zero for 2 s.
+            TraceEvent::NodeReclaim { at: 6.0, node: 0 },
+        ];
+        let t = Telemetry::from_events(&events);
+        assert!((t.byte_seconds[&0] - 300.0).abs() < 1e-9, "{:?}", t.byte_seconds);
+        assert_eq!(t.cache.ctx(0).evictions, 1);
+        assert_eq!(t.node_reclaims, 1);
+    }
+
+    #[test]
+    fn restored_bytes_accumulate_per_worker() {
+        let events = vec![
+            start("warm"),
+            TraceEvent::WorkerJoin { at: 0.0, worker: 3, node: 1, capacity: 1000 },
+            TraceEvent::CacheRestore {
+                at: 0.0,
+                worker: 3,
+                node: 1,
+                ctx: 0,
+                components: 2,
+                bytes: 120,
+                version: 0,
+            },
+            TraceEvent::CacheRestore {
+                at: 0.0,
+                worker: 3,
+                node: 1,
+                ctx: 1,
+                components: 1,
+                bytes: 30,
+                version: 0,
+            },
+        ];
+        let t = Telemetry::from_events(&events);
+        assert_eq!(t.restored_bytes_by_worker[&3], 150);
+        assert_eq!(t.cache.ctx(0).warm_restored, 2);
+        assert_eq!(t.cache.ctx(1).warm_restored_bytes, 30);
+        let rendered = t.render();
+        assert!(rendered.contains("worker=3 bytes=150"), "{rendered}");
+    }
+
+    #[test]
+    fn warm_cold_first_dispatch_split() {
+        let dispatch = |task, worker, warm| TraceEvent::TaskDispatch {
+            at: 1.0,
+            task,
+            ctx: 0,
+            worker,
+            warm,
+            est_s: 1.0,
+            alt_worker: None,
+            alt_est_s: None,
+        };
+        let events = vec![
+            start("wc"),
+            dispatch(1, 0, false),
+            dispatch(2, 0, true), // same (worker, ctx): not a first
+            dispatch(3, 1, true),
+        ];
+        let t = Telemetry::from_events(&events);
+        assert_eq!(t.dispatched, 3);
+        assert_eq!(t.cold_first_dispatches, 1);
+        assert_eq!(t.warm_first_dispatches, 1);
+    }
+
+    #[test]
+    fn split_runs_segments_on_run_start() {
+        let events = vec![
+            TraceEvent::NodeReclaim { at: 0.0, node: 9 }, // pre-run noise
+            start("a"),
+            TraceEvent::NodeReclaim { at: 1.0, node: 0 },
+            start("b"),
+        ];
+        let segs = split_runs(&events);
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs[0].len(), 1);
+        assert_eq!(segs[1].len(), 2);
+        assert_eq!(segs[2].len(), 1);
+        assert!(split_runs(&[]).is_empty());
+        let t = Telemetry::from_events(segs[2]);
+        assert_eq!(t.label, "b");
+    }
+
+    #[test]
+    fn round_stats_fold() {
+        let round = |wall_s: f64| TraceEvent::DispatchRound {
+            at: 1.0,
+            policy: "greedy".into(),
+            assigned: 2,
+            prefetched: 1,
+            queued: 5,
+            wall_s,
+        };
+        let events = vec![start("r"), round(1e-5), round(3e-5), round(2e-5)];
+        let t = Telemetry::from_events(&events);
+        assert_eq!(t.rounds, 3);
+        assert_eq!(t.assigned_total, 6);
+        assert_eq!(t.prefetched_total, 3);
+        assert_eq!(t.rounds_by_policy["greedy"], 3);
+        assert!((t.round_wall.percentile(50.0) - 2e-5).abs() < 1e-12);
+    }
+}

@@ -13,6 +13,7 @@ use pcm::cluster::{NodeAvailabilityTrace, NodeChurnEvent};
 use pcm::coordinator::ContextPolicy;
 use pcm::experiments::live_churn;
 use pcm::live::{LiveApp, LiveConfig, LiveDriver};
+use pcm::obs::TraceHandle;
 use pcm::runtime::synthetic::{
     default_live_profiles, write_synthetic_artifacts,
 };
@@ -34,7 +35,8 @@ fn synthetic_manifest(tag: &str) -> (std::path::PathBuf, Manifest) {
 /// This is exactly what the `live-smoke` CI job runs through the CLI.
 #[test]
 fn live_churn_experiment_passes_its_gates() {
-    let r = live_churn::run_live_churn(42).expect("live churn runs");
+    let r = live_churn::run_live_churn(42, TraceHandle::null())
+        .expect("live churn runs");
     live_churn::verify(&r).expect("acceptance gates hold");
 
     // (a) No inference lost or double-scored across the kill: every

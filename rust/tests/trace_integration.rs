@@ -1,0 +1,142 @@
+//! End-to-end trace integration: record real experiment runs through a
+//! [`JsonlSink`]/[`MemorySink`], replay them through the invariant
+//! checker and the `pcm trace` CLI, and hold the trace-derived
+//! telemetry to the driver's own outcome counters.
+//!
+//! Everything here runs offline (synthetic artifacts, reference
+//! backend, sim engine) — these tests execute in CI.
+
+use std::process::Command;
+use std::sync::{Arc, Mutex};
+
+use pcm::experiments::{churn, live_churn};
+use pcm::obs::{
+    check_events, read_trace, split_runs, JsonlSink, MemorySink, Telemetry,
+    TraceEvent, TraceHandle,
+};
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("pcm-trace-it-{tag}-{}.jsonl", std::process::id()))
+}
+
+/// Record the sim churn experiment (reduced workload) to a JSONL file,
+/// assert the recorded trace passes every scheduler invariant — both
+/// in-process and through `pcm trace check` — then corrupt it by
+/// duplicating a `task_done` line and assert the checker fails loudly.
+#[test]
+fn churn_trace_records_checks_and_catches_corruption() {
+    let path = temp_path("churn");
+    let trace =
+        TraceHandle::new(JsonlSink::create(&path).expect("trace file"));
+    let r = churn::run_churn(42, 1_000, 5_000, trace.clone());
+    trace.flush();
+    assert!(!r.bytes.is_empty(), "churn scenarios ran");
+
+    let events = read_trace(&path).expect("trace parses back");
+    assert!(
+        events.len() > 100,
+        "a three-scenario churn run leaves a substantial trace, got {}",
+        events.len()
+    );
+    // One run_start per scenario: two bytes-axis runs + the warm run.
+    let runs = split_runs(&events);
+    assert_eq!(runs.len(), 3, "one segment per scenario");
+    // Churn scenarios must actually churn, and the trace must show it.
+    let t = Telemetry::from_events(runs[0]);
+    assert!(t.node_reclaims > 0, "reclamation storm traced");
+    assert!(t.worker_losses > 0, "evictions traced");
+    assert!(t.completed > 0 && t.completed_inferences > 0);
+
+    let violations = check_events(&events);
+    assert!(violations.is_empty(), "clean run violates nothing: {violations:?}");
+
+    // The CLI agrees: `pcm trace check` exits 0 on the clean trace.
+    let ok = Command::new(env!("CARGO_BIN_EXE_pcm"))
+        .args(["trace", "check", path.to_str().unwrap()])
+        .output()
+        .expect("pcm trace check runs");
+    assert!(
+        ok.status.success(),
+        "clean trace passes: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    // `pcm trace summarize` renders every segment.
+    let sum = Command::new(env!("CARGO_BIN_EXE_pcm"))
+        .args(["trace", "summarize", path.to_str().unwrap()])
+        .output()
+        .expect("pcm trace summarize runs");
+    assert!(sum.status.success());
+    let text = String::from_utf8_lossy(&sum.stdout);
+    assert_eq!(
+        text.matches("run label=").count(),
+        3,
+        "summarize shows all three segments:\n{text}"
+    );
+
+    // Corrupt: replay the LAST task_done a second time (a double-scored
+    // task). The checker must refuse, and the CLI must exit non-zero.
+    let raw = std::fs::read_to_string(&path).expect("raw trace");
+    let dup = raw
+        .lines()
+        .rev()
+        .find(|l| l.contains("\"task_done\""))
+        .expect("trace contains task_done lines")
+        .to_string();
+    std::fs::write(&path, format!("{raw}{dup}\n")).expect("corrupt trace");
+    let corrupted = read_trace(&path).expect("still parseable");
+    let violations = check_events(&corrupted);
+    assert!(
+        violations.iter().any(|v| v.message.contains("completed twice")),
+        "duplicate task_done is flagged: {violations:?}"
+    );
+    let bad = Command::new(env!("CARGO_BIN_EXE_pcm"))
+        .args(["trace", "check", path.to_str().unwrap()])
+        .output()
+        .expect("pcm trace check runs");
+    assert!(!bad.status.success(), "corrupted trace must fail the CLI");
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("violation"),
+        "failure lists the violations"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The live acceptance tie: warm-restored bytes reconstructed from the
+/// trace alone must equal the live driver's own `warm_started` outcome
+/// exactly — worker for worker, byte for byte.
+#[test]
+fn live_trace_warm_restores_match_outcome_exactly() {
+    let sink = Arc::new(Mutex::new(MemorySink::unbounded()));
+    let r = live_churn::run_live_churn(
+        42,
+        TraceHandle::from_shared(sink.clone()),
+    )
+    .expect("live churn runs");
+    let events = sink.lock().unwrap().events();
+    assert!(
+        events.iter().any(|e| matches!(e, TraceEvent::RunStart { .. })),
+        "live runs announce themselves"
+    );
+    let violations = check_events(&events);
+    assert!(violations.is_empty(), "live trace is clean: {violations:?}");
+
+    // Only the restart scenario warm-restores, so folding the whole
+    // two-scenario stream still yields exactly its warm_started map.
+    let t = Telemetry::from_events(&events);
+    assert!(!r.restart.warm_started.is_empty(), "a restore happened");
+    assert_eq!(
+        t.restored_bytes_by_worker, r.restart.warm_started,
+        "trace-derived warm-restored bytes match the live outcome"
+    );
+    let rendered = t.render();
+    for (wid, bytes) in &r.restart.warm_started {
+        assert!(
+            rendered.contains(&format!("worker={wid} bytes={bytes}")),
+            "summary reports the restore:\n{rendered}"
+        );
+    }
+    // The kill/restart itself is visible in the stream.
+    assert!(events.iter().any(|e| matches!(e, TraceEvent::WorkerLost { .. })));
+    assert!(events.iter().any(|e| matches!(e, TraceEvent::CacheRestore { .. })));
+}
