@@ -162,6 +162,9 @@ impl NodeAvailabilityTrace {
     /// [`Self::try_from_events`] / [`Self::from_json`] instead.
     pub fn from_events(events: Vec<NodeChurnEvent>) -> Self {
         Self::try_from_events(events)
+            // pcm-lint: allow(panic) -- documented contract: this is the
+            // panicking constructor for programmatic input; untrusted
+            // data goes through try_from_events.
             .expect("invalid node availability trace")
     }
 
@@ -172,10 +175,7 @@ impl NodeAvailabilityTrace {
         mut events: Vec<NodeChurnEvent>,
     ) -> crate::Result<Self> {
         events.sort_by(|a, b| {
-            a.time
-                .partial_cmp(&b.time)
-                .unwrap()
-                .then(a.node.cmp(&b.node))
+            a.time.total_cmp(&b.time).then(a.node.cmp(&b.node))
         });
         let mut down: std::collections::HashSet<NodeId> =
             std::collections::HashSet::new();

@@ -106,7 +106,7 @@ impl BatchTuner {
             .iter()
             .zip(&self.observed)
             .filter_map(|(&b, o)| o.map(|t| (b, t)))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     /// All candidates measured?
@@ -119,7 +119,8 @@ impl BatchTuner {
     /// "gradually narrow down the range" loop.
     pub fn refine(&mut self) {
         let Some((best, _)) = self.best() else { return };
-        let i = self.candidates.iter().position(|&b| b == best).unwrap();
+        let pos = self.candidates.iter().position(|&b| b == best);
+        let Some(i) = pos else { return };
         let lo = if i > 0 { self.candidates[i - 1] } else { best };
         let hi = if i + 1 < self.candidates.len() {
             self.candidates[i + 1]

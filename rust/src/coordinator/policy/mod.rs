@@ -488,12 +488,11 @@ pub fn pick_best_worker_filtered(
             None => true,
             Some((bi, best_est)) => {
                 let best_speed = view.worker_speed(idle[*bi]);
-                match est.partial_cmp(best_est).unwrap() {
+                match est.total_cmp(best_est) {
                     std::cmp::Ordering::Less => true,
                     std::cmp::Ordering::Greater => false,
                     std::cmp::Ordering::Equal => match best_speed
-                        .partial_cmp(&view.worker_speed(*wid))
-                        .unwrap()
+                        .total_cmp(&view.worker_speed(*wid))
                     {
                         std::cmp::Ordering::Less => true,
                         std::cmp::Ordering::Greater => false,
@@ -518,6 +517,9 @@ pub fn pick_best_worker(
     ctx: ContextId,
 ) -> usize {
     pick_best_worker_filtered(view, idle, ctx, |_| true)
+        // pcm-lint: allow(panic) -- documented contract ("Panics if
+        // `idle` is empty"); the unfiltered pick always keeps every
+        // candidate, so a non-empty slice always yields one.
         .expect("pick_best_worker over a non-empty idle set")
 }
 

@@ -102,12 +102,17 @@ impl PlacementPolicy for WarmPrefetch {
                 }
                 let key = view
                     .queued_order_key(win[cur].task)
+                    // pcm-lint: allow(panic) -- windows were built from
+                    // queued_of_context this round; nothing dequeues
+                    // between building and reading them.
                     .expect("window entries are queued");
                 if best.map_or(true, |(bk, _)| key < bk) {
                     best = Some((key, ctx));
                 }
             }
             if let Some((_, ctx)) = best {
+                // pcm-lint: allow(panic) -- cursor and windows share a
+                // key set, and ctx came from iterating windows.
                 let cur = cursor.get_mut(&ctx).unwrap();
                 let q = windows[&ctx][*cur];
                 *cur += 1;

@@ -183,11 +183,11 @@ fn longest_lived(view: &SchedulerView, idle: &[super::WorkerId]) -> usize {
     for i in 1..idle.len() {
         let (a, b) = (idle[best], idle[i]);
         let (la, lb) = (view.expected_lifetime_s(a), view.expected_lifetime_s(b));
-        let better = match lb.partial_cmp(&la).unwrap() {
+        let better = match lb.total_cmp(&la) {
             std::cmp::Ordering::Greater => true,
             std::cmp::Ordering::Less => false,
             std::cmp::Ordering::Equal => {
-                match view.worker_speed(b).partial_cmp(&view.worker_speed(a)).unwrap()
+                match view.worker_speed(b).total_cmp(&view.worker_speed(a))
                 {
                     std::cmp::Ordering::Greater => true,
                     std::cmp::Ordering::Less => false,

@@ -357,6 +357,9 @@ impl Scheduler {
     }
 
     /// Register another application's recipe mid-run.
+    // pcm-lint: allow(untraced|unindexed) -- registry bookkeeping before
+    // any task exists for the context; the first submit/dispatch for it
+    // is the traced, indexed mutation.
     pub fn register_recipe(&mut self, recipe: ContextRecipe) {
         if self.policy.caches_files()
             && recipe.cached_components(self.policy).is_empty()
@@ -595,6 +598,8 @@ impl Scheduler {
                 &f.phases[f.next.min(f.phases.len())..],
             );
         }
+        // pcm-lint: allow(panic) -- task_id came from this worker's
+        // running set, so the task table must contain it.
         let task = self.tasks.get_mut(&task_id).expect("running task exists");
         debug_assert_eq!(task.state, TaskState::Running { worker: id });
         task.state = TaskState::Ready;
@@ -652,6 +657,8 @@ impl Scheduler {
     }
 
     /// A worker finished its workload and left voluntarily (end of run).
+    // pcm-lint: allow(untraced) -- end-of-run teardown after the last
+    // TaskDone event; there is no mid-run state left to observe.
     pub fn worker_release(&mut self, id: WorkerId) -> Option<Worker> {
         let w = self.workers.remove(&id)?;
         self.purge_worker_indexes(id, &w);
@@ -681,6 +688,8 @@ impl Scheduler {
 
     /// Driver-supplied clock for lifetime arithmetic (the scheduler owns
     /// no clock; this is refreshed before each dispatch round).
+    // pcm-lint: allow(untraced|unindexed) -- a scalar clock refresh; the
+    // dispatch round it precedes emits the traced events.
     pub fn set_clock_hint(&mut self, now: f64) {
         self.clock_hint = now;
     }
@@ -688,6 +697,9 @@ impl Scheduler {
     /// Record (or clear, with `None`) the absolute sim time `node` is
     /// next expected to be reclaimed — the availability-trace forecast
     /// the risk-aware placement policy consumes via [`SchedulerView`].
+    // pcm-lint: allow(untraced|unindexed) -- forecast hint only; the
+    // churn events themselves are traced by the driver (NodeReclaim/
+    // NodeRejoin) and touch no placement index.
     pub fn set_node_reclaim_hint(&mut self, node: NodeId, at: Option<f64>) {
         match at {
             Some(t) => {
@@ -718,6 +730,9 @@ impl Scheduler {
     /// the node's real cache directory was wiped (a worker exiting
     /// under `persist_node_caches: false`), so a later rejoin cannot
     /// warm-restore accounting for bytes that no longer exist on disk.
+    // pcm-lint: allow(untraced|unindexed) -- mirrors an external disk
+    // wipe; the per-worker CacheEvict events were already emitted when
+    // the worker died, and node snapshots back no placement index.
     pub fn drop_node_cache(&mut self, node: NodeId) {
         self.node_caches.remove(node);
     }
@@ -1121,6 +1136,9 @@ impl Scheduler {
     /// decisions, validate and execute them. All placement *choices* —
     /// warm pairing, affinity scoring, fairness, prefetching — live in
     /// [`super::policy`].
+    // pcm-lint: allow(untraced) -- pure delegation: every executed
+    // decision is traced inside apply_decisions (TaskDispatch /
+    // PrefetchDispatch).
     pub fn try_dispatch(&mut self) -> Vec<Dispatch> {
         // O(1) early-out from the maintained indexes (the old
         // `any(is_idle)` sweep was itself O(pool) per round).
@@ -1196,9 +1214,13 @@ impl Scheduler {
                         });
                     }
                     let phases = self.build_plan(task, worker);
+                    // pcm-lint: allow(panic) -- dequeue_ready returning
+                    // true proved the task is in the table.
                     let t = self.tasks.get_mut(&task).unwrap();
                     t.state = TaskState::Running { worker };
                     t.attempts += 1;
+                    // pcm-lint: allow(panic) -- the idle check above
+                    // proved the worker exists.
                     let w = self.workers.get_mut(&worker).unwrap();
                     w.running = Some(task);
                     w.touch_context(ctx);
@@ -1244,6 +1266,8 @@ impl Scheduler {
                             phases: phases.len() as u64,
                         });
                     }
+                    // pcm-lint: allow(panic) -- the idle check above
+                    // proved the worker exists.
                     let w = self.workers.get_mut(&worker).unwrap();
                     w.running = Some(id);
                     w.touch_context(ctx);
@@ -1631,6 +1655,9 @@ impl Scheduler {
     /// in-memory staged state — without this, the byte budget would be
     /// enforced only in the scheduler's accounting while the node's
     /// real disk kept every staged context.
+    // pcm-lint: allow(untraced|unindexed) -- drains a handoff buffer of
+    // evictions that were each traced (CacheEvict) and index-purged when
+    // they were decided.
     pub fn take_evictions(&mut self) -> Vec<(WorkerId, ContextId)> {
         std::mem::take(&mut self.pending_evictions)
     }
@@ -1640,7 +1667,10 @@ impl Scheduler {
         let f = self
             .in_flight
             .remove(&task_id)
+            // pcm-lint: allow(panic) -- drivers only complete tasks they
+            // received in a Dispatch, which registered the flight.
             .expect("completing an unknown task");
+        // pcm-lint: allow(panic) -- every in-flight id is in the table.
         let task = self.tasks.get_mut(&task_id).unwrap();
         task.state = TaskState::Done;
         let (ctx, count) = (task.context, task.count);

@@ -320,6 +320,8 @@ impl SimDriver {
                     self.on_phase_complete(worker, task, phase, now)
                 }
                 EventKind::TaskComplete { .. } => {
+                    // pcm-lint: allow(panic) -- never scheduled:
+                    // completion rides the final PhaseComplete.
                     unreachable!("completion is the last PhaseComplete")
                 }
                 EventKind::FactoryTick => {}
@@ -354,6 +356,9 @@ impl SimDriver {
         }
 
         let finished_at = self.finished_at.unwrap_or_else(|| {
+            // pcm-lint: allow(panic) -- a drained heap with work left is
+            // a sim-engine bug (the terminal-stall check above catches
+            // every legitimate drain); simulations fail loudly.
             panic!(
                 "{}: event heap drained with {} tasks outstanding",
                 self.cfg.name,
@@ -501,9 +506,10 @@ impl SimDriver {
             .find(|(_, f)| f.worker == worker)
             .map(|(t, _)| *t);
         if let Some(task) = victim_task {
-            let f = self.in_flight.remove(&task).unwrap();
-            if f.fs_reading {
-                self.fs.end_read();
+            if let Some(f) = self.in_flight.remove(&task) {
+                if f.fs_reading {
+                    self.fs.end_read();
+                }
             }
         }
         // Eviction events (worker_lost, cache_persist, task_retry) are
@@ -598,6 +604,8 @@ impl SimDriver {
             }
             None => {
                 // All phases done → task complete.
+                // pcm-lint: allow(panic) -- a PhaseComplete event is only
+                // scheduled by start_phase, which inserted the entry.
                 let f = self.in_flight.remove(&task).unwrap();
                 let gpu = self
                     .sched
@@ -683,6 +691,8 @@ impl SimDriver {
 
     /// Compute the duration of `phase` and schedule its completion.
     fn start_phase(&mut self, task: TaskId, phase: PhaseKind, _now: f64) {
+        // pcm-lint: allow(panic) -- both callers (dispatch, phase_done)
+        // hold a live in_flight entry for the task.
         let f = self.in_flight.get_mut(&task).expect("in flight");
         let worker = f.worker;
         let gpu = self

@@ -285,11 +285,56 @@
 //! // …and the recorded stream satisfies the scheduler's invariants.
 //! assert!(obs::check_events(&events).is_empty());
 //! ```
+//!
+//! ## Invariants and how they're enforced
+//!
+//! The properties above are load-bearing, so each is pinned by both a
+//! *static* check — `pcm lint`, the self-hosted source scan in
+//! [`lint`], run by the `static-analysis` CI job — and a *dynamic*
+//! one:
+//!
+//! | invariant | static (lint rule) | dynamic |
+//! |-----------|--------------------|---------|
+//! | every scheduler mutation traced + indexed | `choke-trace` / `choke-index` on `coordinator/scheduler.rs` | trace replay (`pcm trace check`), index-vs-scan proptest |
+//! | hot paths never panic | `panic-free` on `coordinator/`, `live/`, `obs/`, `cluster/` | `churn-smoke` / `live-smoke` end-to-end runs |
+//! | telemetry exhaustive over [`obs::TraceEvent`] | `trace-wildcard` (no `_ =>` in `obs/`) | compiler exhaustiveness once arms are explicit |
+//! | JSONL schema round-trips | `field-parity` on `obs/event.rs` | serde-free round-trip tests in `obs::event` |
+//! | stale bytes never served, occupancy ≤ capacity | (choke coverage keeps the events flowing) | [`obs::check_events`] replay on CI traces |
+//! | `Ordering::Relaxed` only on stop flags | `atomic-ordering` | nightly ThreadSanitizer CI lane |
+//! | core data structures UB-free | — | nightly Miri CI lane over index/`NodeCacheDirectory`/`util::Json` tests |
+//!
+//! The rules are plain functions over source text, so the same checks
+//! run against inline snippets:
+//!
+//! ```
+//! use pcm::lint::{check_choke_points, check_panics};
+//!
+//! // An untraced, unindexed scheduler mutation is caught with
+//! // file/line diagnostics…
+//! let bad = "impl Scheduler {\n\
+//!     pub fn sneak(&mut self, n: u64) {\n\
+//!         self.total += n;\n\
+//!     }\n\
+//! }\n";
+//! let findings = check_choke_points("coordinator/scheduler.rs", bad);
+//! assert_eq!(findings.len(), 2); // untraced AND unindexed
+//! assert!(findings[0].to_string().contains("scheduler.rs:2"));
+//!
+//! // …and a reasoned allowlist comment suppresses exactly that finding.
+//! let hot = "fn f() { x.unwrap(); }\n";
+//! assert_eq!(check_panics("live/driver.rs", hot).len(), 1);
+//! let allowed = "fn f() {\n\
+//!     // pcm-lint: allow(panic) -- demo: infallible by construction\n\
+//!     x.unwrap();\n\
+//! }\n";
+//! assert!(check_panics("live/driver.rs", allowed).is_empty());
+//! ```
 
 pub mod app;
 pub mod cluster;
 pub mod coordinator;
 pub mod experiments;
+pub mod lint;
 pub mod live;
 pub mod obs;
 pub mod runtime;

@@ -1,0 +1,180 @@
+//! Self-hosted static analysis: the `pcm lint` pass.
+//!
+//! The crate's core invariants — every scheduler mutation traced and
+//! indexed, hot paths panic-free, telemetry exhaustive over
+//! [`crate::obs::TraceEvent`], JSONL schema parity, disciplined atomic
+//! orderings — are enforced dynamically by the replay checker and
+//! property tests. This module makes them *build-time* guarantees: a
+//! zero-dependency, line/token-level scan over the crate's own sources
+//! (the same hand-rolled house style as [`crate::util::Json`]), run by
+//! `pcm lint [--manifest-dir rust/]` and the `static-analysis` CI job.
+//!
+//! Five rules, each scoped to the paths where its invariant lives:
+//!
+//! | rule | scope | enforces |
+//! |------|-------|----------|
+//! | `choke-trace` / `choke-index` | `coordinator/scheduler.rs` | every `pub fn(&mut self, ..)` emits through `self.trace` and touches index state |
+//! | `panic-free` | `coordinator/`, `live/`, `obs/`, `cluster/` | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` outside tests |
+//! | `trace-wildcard` | `obs/` | no `_ =>` arm in a match over `TraceEvent` |
+//! | `field-parity` | `obs/event.rs` | serializer and parser agree on every JSONL field name |
+//! | `atomic-ordering` | `coordinator/`, `live/`, `obs/`, `cluster/` | `Ordering::Relaxed` only on documented stop-flag sites |
+//!
+//! Individual findings are suppressed by reasoned allowlist comments —
+//! `// pcm-lint: allow(scope) -- <reason>` — documented in [`rules`].
+//! The lint must pass on its own tree (`tests/lint_selfhost.rs`), which
+//! is its primary integration test.
+
+pub mod rules;
+pub mod scan;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+pub use rules::{
+    check_atomic_ordering, check_choke_points, check_field_parity,
+    check_panics, check_wildcard_trace_arms,
+};
+
+/// One lint diagnostic: `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the crate's `src/`, `/`-separated.
+    pub file: String,
+    /// 1-based line the finding anchors to.
+    pub line: usize,
+    /// Stable rule identifier, e.g. `panic-free`.
+    pub rule: &'static str,
+    /// Human-readable diagnostic including the fix or allow syntax.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Run every rule whose scope covers `rel` (a `/`-separated path
+/// relative to `src/`) over `source`.
+pub fn check_file(rel: &str, source: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if rel == "coordinator/scheduler.rs" {
+        out.extend(check_choke_points(rel, source));
+    }
+    let hot = ["coordinator/", "live/", "obs/", "cluster/"]
+        .iter()
+        .any(|p| rel.starts_with(p));
+    if hot {
+        out.extend(check_panics(rel, source));
+        out.extend(check_atomic_ordering(rel, source));
+    }
+    if rel.starts_with("obs/") {
+        out.extend(check_wildcard_trace_arms(rel, source));
+    }
+    if rel == "obs/event.rs" {
+        out.extend(check_field_parity(rel, source));
+    }
+    out
+}
+
+/// Lint every `.rs` file under `<manifest_dir>/src`, returning the
+/// findings sorted by file and line. An empty result means the tree is
+/// clean.
+pub fn lint_crate(manifest_dir: &Path) -> crate::Result<Vec<Finding>> {
+    let src = manifest_dir.join("src");
+    let mut files = Vec::new();
+    collect_sources(&src, &mut files).with_context(|| {
+        format!("walking crate sources under {}", src.display())
+    })?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel = relative_name(&src, &path);
+        let source = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        out.extend(check_file(&rel, &source));
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(out)
+}
+
+fn collect_sources(
+    dir: &Path,
+    out: &mut Vec<PathBuf>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_sources(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `path` relative to `root`, with `/` separators on every platform so
+/// diagnostics and rule scopes are stable.
+fn relative_name(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finding_display_is_file_line_rule_message() {
+        let f = Finding {
+            file: "live/driver.rs".into(),
+            line: 42,
+            rule: "panic-free",
+            message: "boom".into(),
+        };
+        assert_eq!(f.to_string(), "live/driver.rs:42: [panic-free] boom");
+    }
+
+    #[test]
+    fn dispatch_scopes_rules_by_path() {
+        let panicky = "fn f() { x.unwrap(); }\n";
+        assert!(!check_file("live/driver.rs", panicky).is_empty());
+        assert!(!check_file("cluster/gpu.rs", panicky).is_empty());
+        // Outside the hot-path scope no rule applies.
+        assert!(check_file("experiments/mod.rs", panicky).is_empty());
+        assert!(check_file("lint/rules.rs", panicky).is_empty());
+    }
+
+    #[test]
+    fn dispatch_runs_choke_rule_only_on_the_scheduler() {
+        let src = "impl S {\n\
+                   \x20   pub fn m(&mut self, n: u64) { self.x = n; }\n\
+                   }\n";
+        let sched = check_file("coordinator/scheduler.rs", src);
+        assert!(sched.iter().any(|f| f.rule == "choke-trace"), "{sched:?}");
+        let other = check_file("coordinator/batcher.rs", src);
+        assert!(other.iter().all(|f| !f.rule.starts_with("choke")));
+    }
+
+    #[test]
+    fn dispatch_runs_parity_rule_only_on_event_rs() {
+        let src = "fn to_json() {\n\
+                   \x20   let fields = vec![(\"ghost\", num_u(1))];\n\
+                   }\n\
+                   fn from_json(j: &Json) {}\n";
+        assert!(!check_file("obs/event.rs", src).is_empty());
+        assert!(check_file("obs/telemetry.rs", src).is_empty());
+    }
+}

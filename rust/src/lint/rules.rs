@@ -1,0 +1,887 @@
+//! The five lint rules, each a pure function over one file's source.
+//!
+//! Every rule has the same shape — `fn check_*(file, source) ->
+//! Vec<Finding>` — so fixture tests and the crate-docs doctest can
+//! drive a rule on an inline snippet exactly the way [`super::lint_crate`]
+//! drives it on a file from disk. Which rule applies to which path is
+//! decided by [`super::check_file`].
+//!
+//! # Allowlist comments
+//!
+//! A finding is suppressed by a *reasoned* annotation:
+//!
+//! ```text
+//! // pcm-lint: allow(<scope>[|<scope>…]) -- <reason>
+//! ```
+//!
+//! placed on the offending line, or in the contiguous comment block
+//! directly above it (for the choke-point rule: above the `pub fn`
+//! signature, doc comments included). The `-- <reason>` part is
+//! mandatory — an allow without a reason is ignored. Each allow
+//! suppresses exactly **one** finding per scope it names: two panics on
+//! one line need two annotations.
+//!
+//! Scopes: `untraced`, `unindexed` (choke-point coverage), `panic`
+//! (panic-free hot path), `wildcard` (no `_ =>` over `TraceEvent`),
+//! `relaxed` (atomic-ordering discipline).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::scan::{scan, Line};
+use super::Finding;
+
+/// Index-maintenance vocabulary of `coordinator/scheduler.rs`: a
+/// mutating choke point must touch at least one of these (directly or
+/// through the named helpers) or carry an `unindexed` allow. Grown
+/// alongside the scheduler's incremental indexes.
+const INDEX_TOKENS: &[&str] = &[
+    "self.idle",
+    "self.ready",
+    "self.library_warm",
+    "self.cache_full",
+    "self.peer_kind_counts",
+    "self.running_ctx",
+    "self.completed_ctx",
+    "self.prefetch_ctx",
+    "self.est_cache",
+    "enqueue_ready",
+    "dequeue_ready",
+    "purge_worker_indexes",
+    "refresh_warmth",
+    "invalidate_estimate",
+    "cache_component",
+    "peer_inc",
+    "peer_dec",
+    "dec_count",
+    "dec_usize",
+];
+
+/// Panic vocabulary rejected on hot paths without a `panic` allow.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Parse one comment's `pcm-lint: allow(a|b) -- reason` annotation.
+/// Returns the scopes, or `None` when there is no (well-formed,
+/// reasoned) annotation.
+fn allow_scopes(comment: &str) -> Option<Vec<String>> {
+    let marker = "pcm-lint: allow(";
+    let start = comment.find(marker)? + marker.len();
+    let rest = &comment[start..];
+    let close = rest.find(')')?;
+    let scopes: Vec<String> = rest[..close]
+        .split('|')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let after = &rest[close + 1..];
+    let dash = after.find("--")?;
+    if after[dash + 2..].trim().is_empty() {
+        return None;
+    }
+    (!scopes.is_empty()).then_some(scopes)
+}
+
+/// Tracks allow annotations and consumes them one finding at a time.
+struct Suppressor {
+    /// line → per-scope one-shot allows from that line's annotation:
+    /// `allow(untraced|unindexed)` can suppress one `untraced` AND one
+    /// `unindexed` finding, but never two of the same scope.
+    allows: HashMap<usize, Vec<(String, bool)>>,
+    /// Lines that are pure comment (no code) — the backscan walks
+    /// through these, and stops at the first code line.
+    comment_only: HashSet<usize>,
+}
+
+impl Suppressor {
+    fn new(lines: &[Line]) -> Self {
+        let mut allows = HashMap::new();
+        let mut comment_only = HashSet::new();
+        for l in lines {
+            if let Some(scopes) = allow_scopes(&l.comment) {
+                let slots: Vec<(String, bool)> =
+                    scopes.into_iter().map(|s| (s, false)).collect();
+                allows.insert(l.number, slots);
+            }
+            if l.code.trim().is_empty() && !l.comment.trim().is_empty() {
+                comment_only.insert(l.number);
+            }
+        }
+        Suppressor { allows, comment_only }
+    }
+
+    /// Consume one allow for `scope` attached to the code at `line`:
+    /// on the line itself, or anywhere in the contiguous comment block
+    /// directly above it. Returns whether a finding is suppressed.
+    fn suppress(&mut self, line: usize, scope: &str) -> bool {
+        let mut n = line;
+        loop {
+            if let Some(slots) = self.allows.get_mut(&n) {
+                if let Some(slot) =
+                    slots.iter_mut().find(|s| s.0 == scope && !s.1)
+                {
+                    slot.1 = true;
+                    return true;
+                }
+            }
+            if n <= 1 || !self.comment_only.contains(&(n - 1)) {
+                return false;
+            }
+            n -= 1;
+        }
+    }
+}
+
+fn finding(
+    file: &str,
+    line: usize,
+    rule: &'static str,
+    message: String,
+) -> Finding {
+    Finding { file: file.to_string(), line, rule, message }
+}
+
+/// The function name out of a trimmed `pub fn …` signature line.
+fn fn_name(trimmed: &str) -> &str {
+    let after = match trimmed.find("fn ") {
+        Some(p) => &trimmed[p + 3..],
+        None => trimmed,
+    };
+    match after.find(['(', '<', ' ']) {
+        Some(p) => &after[..p],
+        None => after,
+    }
+}
+
+/// Collect the `{ … }` block opening at byte `bp` of line `bj` into one
+/// string (code view), returning it plus the index of the closing line.
+fn block_text(lines: &[Line], bj: usize, bp: usize) -> (String, usize) {
+    let mut depth = 0i64;
+    let mut body = String::new();
+    let mut k = bj;
+    while k < lines.len() {
+        let code = &lines[k].code;
+        let seg = if k == bj { &code[bp..] } else { code.as_str() };
+        for (ci, ch) in seg.char_indices() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        body.push_str(&seg[..ci]);
+                        return (body, k);
+                    }
+                }
+                _ => {}
+            }
+        }
+        body.push_str(seg);
+        body.push('\n');
+        k += 1;
+    }
+    (body, lines.len().saturating_sub(1))
+}
+
+/// Rule 1 — **choke-point coverage**. Every non-test `pub fn` taking
+/// `&mut self` must emit through `self.trace` *and* touch
+/// index-maintenance state (see [`INDEX_TOKENS`]), or carry
+/// `// pcm-lint: allow(untraced|unindexed) -- <reason>` above its
+/// signature. Applied to `coordinator/scheduler.rs` only: a new
+/// mutation path can never ship unobserved or unindexed.
+pub fn check_choke_points(file: &str, source: &str) -> Vec<Finding> {
+    let lines = scan(source);
+    let mut sup = Suppressor::new(&lines);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].in_test {
+            i += 1;
+            continue;
+        }
+        let trimmed = lines[i].code.trim_start();
+        let is_pub_fn = trimmed.starts_with("pub fn ")
+            || trimmed.starts_with("pub(crate) fn ")
+            || trimmed.starts_with("pub(super) fn ");
+        if !is_pub_fn {
+            i += 1;
+            continue;
+        }
+        let sig_line = lines[i].number;
+        let name = fn_name(trimmed).to_string();
+        // Accumulate the signature up to the body-opening brace —
+        // multi-line signatures put `&mut self` on a continuation line.
+        let mut sig = String::new();
+        let mut open = None;
+        let mut j = i;
+        while j < lines.len() {
+            let code = &lines[j].code;
+            if let Some(p) = code.find('{') {
+                sig.push_str(&code[..p]);
+                open = Some((j, p));
+                break;
+            }
+            if code.contains(';') {
+                break; // bodyless declaration
+            }
+            sig.push_str(code);
+            sig.push(' ');
+            j += 1;
+        }
+        let Some((bj, bp)) = open else {
+            i = j + 1;
+            continue;
+        };
+        let (body, end) = block_text(&lines, bj, bp);
+        if sig.contains("&mut self") {
+            if !body.contains("self.trace")
+                && !sup.suppress(sig_line, "untraced")
+            {
+                out.push(finding(
+                    file,
+                    sig_line,
+                    "choke-trace",
+                    format!(
+                        "pub fn {name}(&mut self, ..) mutates scheduler \
+                         state without emitting through self.trace; \
+                         trace it or annotate \
+                         `// pcm-lint: allow(untraced) -- <reason>`"
+                    ),
+                ));
+            }
+            if !INDEX_TOKENS.iter().any(|t| body.contains(t))
+                && !sup.suppress(sig_line, "unindexed")
+            {
+                out.push(finding(
+                    file,
+                    sig_line,
+                    "choke-index",
+                    format!(
+                        "pub fn {name}(&mut self, ..) touches no \
+                         index-maintenance state; update the indexes or \
+                         annotate \
+                         `// pcm-lint: allow(unindexed) -- <reason>`"
+                    ),
+                ));
+            }
+        }
+        i = end + 1;
+    }
+    out
+}
+
+/// Rule 2 — **panic-free hot path**. No `unwrap()` / `expect(` /
+/// `panic!` / `unreachable!` / `todo!` / `unimplemented!` in non-test
+/// code without a reasoned `// pcm-lint: allow(panic)` annotation.
+/// Applied to `coordinator/`, `live/`, `obs/`, and `cluster/`.
+pub fn check_panics(file: &str, source: &str) -> Vec<Finding> {
+    let lines = scan(source);
+    let mut sup = Suppressor::new(&lines);
+    let mut out = Vec::new();
+    for l in &lines {
+        if l.in_test {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            for _ in 0..l.code.matches(tok).count() {
+                if sup.suppress(l.number, "panic") {
+                    continue;
+                }
+                out.push(finding(
+                    file,
+                    l.number,
+                    "panic-free",
+                    format!(
+                        "`{tok}` on a hot path; convert to an error (or \
+                         an infallible pattern), or annotate \
+                         `// pcm-lint: allow(panic) -- <reason>`"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Rule 3 — **no wildcard arms over `TraceEvent`**. A `_ =>` arm in a
+/// match that handles `TraceEvent` variants silently swallows every
+/// future variant, defeating compiler-enforced exhaustiveness as the
+/// event vocabulary grows. Applied to `obs/`.
+pub fn check_wildcard_trace_arms(file: &str, source: &str) -> Vec<Finding> {
+    struct Frame {
+        is_match: bool,
+        trace_event: bool,
+        wilds: Vec<usize>,
+    }
+    let lines = scan(source);
+    let mut sup = Suppressor::new(&lines);
+    let mut out = Vec::new();
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut pending_match = false;
+    for l in &lines {
+        if l.in_test {
+            // Test regions are brace-balanced, so skipping their lines
+            // wholesale leaves the stack consistent.
+            continue;
+        }
+        // Attribute arm-level facts to the innermost `match` frame as
+        // of the start of the line (arms open their own blocks later
+        // on the same line).
+        if l.code.trim_start().starts_with("_ =>")
+            || l.code.contains(", _ =>")
+        {
+            if let Some(f) = stack.iter_mut().rev().find(|f| f.is_match) {
+                f.wilds.push(l.number);
+            }
+        }
+        if l.code.contains("TraceEvent") {
+            if let Some(f) = stack.iter_mut().rev().find(|f| f.is_match) {
+                f.trace_event = true;
+            }
+        }
+        let mut word = String::new();
+        for ch in l.code.chars() {
+            if ch.is_alphanumeric() || ch == '_' {
+                word.push(ch);
+                continue;
+            }
+            if word == "match" {
+                pending_match = true;
+            }
+            word.clear();
+            if ch == '{' {
+                stack.push(Frame {
+                    is_match: pending_match,
+                    trace_event: false,
+                    wilds: Vec::new(),
+                });
+                pending_match = false;
+            } else if ch == '}' {
+                if let Some(f) = stack.pop() {
+                    if f.is_match && f.trace_event {
+                        for w in f.wilds {
+                            if sup.suppress(w, "wildcard") {
+                                continue;
+                            }
+                            out.push(finding(
+                                file,
+                                w,
+                                "trace-wildcard",
+                                "wildcard `_ =>` arm in a match over \
+                                 TraceEvent; list the variants (or \
+                                 annotate `// pcm-lint: allow(wildcard) \
+                                 -- <reason>`) so new events cannot be \
+                                 silently ignored"
+                                    .to_string(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A lowercase field identifier (`[a-z_][a-z0-9_]*`) starting at byte
+/// `at`, plus the byte index just past it.
+fn field_ident(s: &str, at: usize) -> Option<(String, usize)> {
+    let rest = s.get(at..)?;
+    let mut name = String::new();
+    for c in rest.chars() {
+        if c.is_ascii_lowercase() || c == '_' {
+            name.push(c);
+        } else if c.is_ascii_digit() && !name.is_empty() {
+            name.push(c);
+        } else {
+            break;
+        }
+    }
+    (!name.is_empty()).then(|| (name.clone(), at + name.len()))
+}
+
+/// Record every `pat"name"` occurrence (closing quote required).
+fn collect_after(
+    raw: &str,
+    pat: &str,
+    line: usize,
+    map: &mut BTreeMap<String, usize>,
+) {
+    let mut from = 0;
+    while let Some(p) = raw[from..].find(pat) {
+        let at = from + p + pat.len();
+        if let Some((name, end)) = field_ident(raw, at) {
+            if raw[end..].starts_with('"') {
+                map.entry(name).or_insert(line);
+            }
+        }
+        from += p + pat.len();
+    }
+}
+
+/// Field names written by the serializers: `("name", …)` tuple heads
+/// (skipping call/macro parens like `obj("…` or `format!("…`) and
+/// `.insert("name"` map writes.
+fn collect_emitted(
+    raw: &str,
+    line: usize,
+    map: &mut BTreeMap<String, usize>,
+) {
+    let mut from = 0;
+    while let Some(p) = raw[from..].find("(\"") {
+        let p = from + p;
+        let prev = raw[..p].trim_end().chars().last();
+        let is_call = matches!(
+            prev,
+            Some(c) if c.is_alphanumeric() || c == '_' || c == '!'
+        );
+        if !is_call {
+            if let Some((name, end)) = field_ident(raw, p + 2) {
+                if raw[end..].starts_with("\",") {
+                    map.entry(name).or_insert(line);
+                }
+            }
+        }
+        from = p + 2;
+    }
+    collect_after(raw, ".insert(\"", line, map);
+}
+
+/// Field names read back by the parser: `(j, "name")` helper calls,
+/// `.req("name")`, and `.get("name")`.
+fn collect_parsed(
+    raw: &str,
+    line: usize,
+    map: &mut BTreeMap<String, usize>,
+) {
+    collect_after(raw, "(j, \"", line, map);
+    collect_after(raw, ".req(\"", line, map);
+    collect_after(raw, ".get(\"", line, map);
+}
+
+/// Rule 4 — **emit/parse field parity**. Every field name a serializer
+/// writes must appear in the parser, and vice versa — one-sided JSONL
+/// schema drift (a field added to `to_json` but not `from_json`, or a
+/// parser key nothing ever writes) is caught at lint time. Applied to
+/// `obs/event.rs`.
+pub fn check_field_parity(file: &str, source: &str) -> Vec<Finding> {
+    let lines = scan(source);
+    let mut emitted: BTreeMap<String, usize> = BTreeMap::new();
+    let mut parsed: BTreeMap<String, usize> = BTreeMap::new();
+    for l in &lines {
+        if l.in_test {
+            continue;
+        }
+        collect_emitted(&l.raw, l.number, &mut emitted);
+        collect_parsed(&l.raw, l.number, &mut parsed);
+    }
+    let mut out = Vec::new();
+    for (name, line) in &emitted {
+        if !parsed.contains_key(name) {
+            out.push(finding(
+                file,
+                *line,
+                "field-parity",
+                format!(
+                    "serialized field {name:?} is never read back by \
+                     the parser (one-sided schema drift)"
+                ),
+            ));
+        }
+    }
+    for (name, line) in &parsed {
+        if !emitted.contains_key(name) {
+            out.push(finding(
+                file,
+                *line,
+                "field-parity",
+                format!(
+                    "parsed field {name:?} is never written by any \
+                     serializer (one-sided schema drift)"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Rule 5 — **atomic-ordering discipline**. `Ordering::Relaxed` is
+/// permitted only on the documented stop-flag sites — recognized by
+/// the word `stop` on the same line or the immediately preceding code
+/// line — anything else needs `// pcm-lint: allow(relaxed) -- <reason>`
+/// or a stronger ordering. Applied to `coordinator/`, `live/`, `obs/`,
+/// and `cluster/`.
+pub fn check_atomic_ordering(file: &str, source: &str) -> Vec<Finding> {
+    let lines = scan(source);
+    let mut sup = Suppressor::new(&lines);
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if l.in_test || !l.code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let here = l.code.contains("stop");
+        let before = lines[..i]
+            .iter()
+            .rev()
+            .find(|p| !p.code.trim().is_empty())
+            .is_some_and(|p| p.code.contains("stop"));
+        if here || before || sup.suppress(l.number, "relaxed") {
+            continue;
+        }
+        out.push(finding(
+            file,
+            l.number,
+            "atomic-ordering",
+            "Ordering::Relaxed outside a documented stop-flag site; \
+             use a stronger ordering or annotate \
+             `// pcm-lint: allow(relaxed) -- <reason>`"
+                .to_string(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ------------------------------------------------ rule 1: choke points
+
+    const SCHED: &str = "coordinator/scheduler.rs";
+
+    #[test]
+    fn untraced_unindexed_mutation_fires_both_scopes() {
+        let src = "impl Scheduler {\n\
+                   \x20   pub fn sneak(&mut self, n: u64) {\n\
+                   \x20       self.total += n;\n\
+                   \x20   }\n\
+                   }\n";
+        let f = check_choke_points(SCHED, src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].rule, "choke-trace");
+        assert!(f[0].message.contains("sneak"));
+        assert_eq!(f[1].line, 2);
+        assert_eq!(f[1].rule, "choke-index");
+        assert_eq!(f[0].file, SCHED);
+    }
+
+    #[test]
+    fn traced_and_indexed_mutation_is_clean() {
+        let src = "impl Scheduler {\n\
+                   \x20   pub fn good(&mut self, id: u64) {\n\
+                   \x20       self.idle.remove(&id);\n\
+                   \x20       self.trace.emit(TraceEvent::WorkerLost);\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(check_choke_points(SCHED, src).is_empty());
+    }
+
+    #[test]
+    fn multi_line_signature_is_accumulated() {
+        // `&mut self` on the continuation line, like the real
+        // `apply_decisions` / `phase_done`.
+        let src = "impl Scheduler {\n\
+                   \x20   pub fn long(\n\
+                   \x20       &mut self,\n\
+                   \x20       x: u64,\n\
+                   \x20   ) -> bool {\n\
+                   \x20       self.total = x;\n\
+                   \x20       true\n\
+                   \x20   }\n\
+                   }\n";
+        let f = check_choke_points(SCHED, src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert_eq!(f[0].line, 2, "finding anchors to the signature line");
+    }
+
+    #[test]
+    fn shared_ref_and_owning_receivers_are_exempt() {
+        let src = "impl Scheduler {\n\
+                   \x20   pub fn read(&self) -> u64 { self.total }\n\
+                   \x20   pub fn with_x(mut self) -> Self { self }\n\
+                   }\n";
+        assert!(check_choke_points(SCHED, src).is_empty());
+    }
+
+    #[test]
+    fn allow_above_signature_suppresses_named_scopes_only() {
+        let both = "impl Scheduler {\n\
+                    \x20   // pcm-lint: allow(untraced|unindexed) -- fixture\n\
+                    \x20   pub fn sneak(&mut self, n: u64) {\n\
+                    \x20       self.total += n;\n\
+                    \x20   }\n\
+                    }\n";
+        assert!(check_choke_points(SCHED, both).is_empty());
+        let one = "impl Scheduler {\n\
+                   \x20   // pcm-lint: allow(untraced) -- fixture\n\
+                   \x20   pub fn sneak(&mut self, n: u64) {\n\
+                   \x20       self.total += n;\n\
+                   \x20   }\n\
+                   }\n";
+        let f = check_choke_points(SCHED, one);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "choke-index", "unindexed still fires");
+    }
+
+    #[test]
+    fn allow_works_through_doc_comments() {
+        let src = "impl Scheduler {\n\
+                   \x20   // pcm-lint: allow(untraced|unindexed) -- fixture\n\
+                   \x20   /// Doc comment between allow and signature.\n\
+                   \x20   pub fn sneak(&mut self) {\n\
+                   \x20       self.total += 1;\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(check_choke_points(SCHED, src).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt_from_choke_points() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   impl Scheduler {\n\
+                   \x20       pub fn sneak(&mut self) { self.x += 1; }\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(check_choke_points(SCHED, src).is_empty());
+    }
+
+    // -------------------------------------------------- rule 2: panic-free
+
+    #[test]
+    fn each_panic_token_fires_with_file_and_line() {
+        for tok in super::PANIC_TOKENS {
+            let stmt = match *tok {
+                ".unwrap()" => "x.unwrap()".to_string(),
+                ".expect(" => "x.expect(\"why\")".to_string(),
+                t => format!("{t}(\"boom\")"),
+            };
+            let src = format!("fn f() {{\n    {stmt};\n}}\n");
+            let f = check_panics("live/driver.rs", &src);
+            assert_eq!(f.len(), 1, "{tok} fires once: {f:?}");
+            assert_eq!(f[0].line, 2, "{tok} anchors to its line");
+            assert_eq!(f[0].file, "live/driver.rs");
+            assert!(f[0].message.contains(tok), "{}", f[0].message);
+        }
+    }
+
+    #[test]
+    fn allow_suppresses_exactly_one_finding() {
+        // Two panics on one line, one allow: one finding survives.
+        let src = "fn f() {\n\
+                   \x20   // pcm-lint: allow(panic) -- fixture reason\n\
+                   \x20   a.unwrap() + b.unwrap();\n\
+                   }\n";
+        let f = check_panics("obs/sink.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn allow_without_reason_is_ignored() {
+        let src = "fn f() {\n\
+                   \x20   // pcm-lint: allow(panic)\n\
+                   \x20   a.unwrap();\n\
+                   }\n";
+        assert_eq!(check_panics("obs/sink.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn allow_on_the_same_line_suppresses() {
+        let src =
+            "fn f() { a.unwrap() } // pcm-lint: allow(panic) -- fixture\n";
+        assert!(check_panics("obs/sink.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panics_in_strings_comments_and_tests_are_exempt() {
+        let src = "fn f() -> &'static str {\n\
+                   \x20   // a comment mentioning .unwrap() and panic!\n\
+                   \x20   \"literal .unwrap() panic! todo!\"\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   fn t() { None::<u32>.unwrap(); }\n\
+                   }\n";
+        assert!(check_panics("obs/sink.rs", src).is_empty());
+    }
+
+    #[test]
+    fn infallible_lookalikes_do_not_fire() {
+        let src = "fn f() {\n\
+                   \x20   a.unwrap_or(0);\n\
+                   \x20   b.unwrap_or_else(|| 1);\n\
+                   \x20   c.unwrap_or_default();\n\
+                   }\n";
+        assert!(check_panics("live/driver.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------ rule 3: no wildcards
+
+    #[test]
+    fn wildcard_over_trace_event_fires() {
+        let src = "fn f(e: &TraceEvent) -> u32 {\n\
+                   \x20   match e {\n\
+                   \x20       TraceEvent::RunStart { .. } => 1,\n\
+                   \x20       _ => 0,\n\
+                   \x20   }\n\
+                   }\n";
+        let f = check_wildcard_trace_arms("obs/telemetry.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 4);
+        assert_eq!(f[0].rule, "trace-wildcard");
+    }
+
+    #[test]
+    fn wildcard_over_other_types_is_fine() {
+        let src = "fn f(x: u32) -> u32 {\n\
+                   \x20   match x {\n\
+                   \x20       0 => 1,\n\
+                   \x20       _ => 0,\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(check_wildcard_trace_arms("obs/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nested_plain_match_inside_trace_match_is_fine() {
+        let src = "fn f(e: &TraceEvent, x: u32) -> u32 {\n\
+                   \x20   match e {\n\
+                   \x20       TraceEvent::RunStart { .. } => match x {\n\
+                   \x20           0 => 1,\n\
+                   \x20           _ => 2,\n\
+                   \x20       },\n\
+                   \x20       TraceEvent::TaskDone { .. } => 3,\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(
+            check_wildcard_trace_arms("obs/telemetry.rs", src).is_empty()
+        );
+    }
+
+    #[test]
+    fn wildcard_allow_suppresses() {
+        let src = "fn f(e: &TraceEvent) -> u32 {\n\
+                   \x20   match e {\n\
+                   \x20       TraceEvent::RunStart { .. } => 1,\n\
+                   \x20       // pcm-lint: allow(wildcard) -- fixture\n\
+                   \x20       _ => 0,\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(
+            check_wildcard_trace_arms("obs/telemetry.rs", src).is_empty()
+        );
+    }
+
+    // ------------------------------------------------ rule 4: field parity
+
+    #[test]
+    fn emit_only_field_fires() {
+        let src = "fn to_json() {\n\
+                   \x20   let fields = vec![\n\
+                   \x20       (\"task\", num_u(1)),\n\
+                   \x20       (\"ghost\", num_u(2)),\n\
+                   \x20   ];\n\
+                   }\n\
+                   fn from_json(j: &Json) {\n\
+                   \x20   let _ = req_u64(j, \"task\");\n\
+                   }\n";
+        let f = check_field_parity("obs/event.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("ghost"));
+        assert!(f[0].message.contains("never read back"));
+    }
+
+    #[test]
+    fn parse_only_field_fires() {
+        let src = "fn to_json() {\n\
+                   \x20   let fields = vec![(\"task\", num_u(1))];\n\
+                   }\n\
+                   fn from_json(j: &Json) {\n\
+                   \x20   let _ = req_u64(j, \"task\");\n\
+                   \x20   let _ = j.get(\"phantom\");\n\
+                   }\n";
+        let f = check_field_parity("obs/event.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 6);
+        assert!(f[0].message.contains("phantom"));
+        assert!(f[0].message.contains("never written"));
+    }
+
+    #[test]
+    fn balanced_fields_including_insert_and_get_are_clean() {
+        let src = "fn to_json() {\n\
+                   \x20   m.insert(\"event\".to_string(), v);\n\
+                   \x20   fields.push((\"alt_worker\", num_u(9)));\n\
+                   }\n\
+                   fn from_json(j: &Json) {\n\
+                   \x20   let _ = j.req(\"event\");\n\
+                   \x20   let _ = j.get(\"alt_worker\");\n\
+                   }\n";
+        assert!(check_field_parity("obs/event.rs", src).is_empty());
+    }
+
+    #[test]
+    fn macro_and_call_strings_are_not_fields() {
+        // `bail!("…")` / `obj("…` are calls, not field tuples; prose
+        // strings with spaces are not identifiers.
+        let src = "fn to_json() {\n\
+                   \x20   let fields = vec![(\"task\", num_u(1))];\n\
+                   \x20   obj(\"task_done\", at, fields)\n\
+                   }\n\
+                   fn from_json(j: &Json) {\n\
+                   \x20   let _ = req_u64(j, \"task\");\n\
+                   \x20   bail!(\"unknown trace event kind\")\n\
+                   }\n";
+        assert!(check_field_parity("obs/event.rs", src).is_empty());
+    }
+
+    // -------------------------------------------- rule 5: atomic orderings
+
+    #[test]
+    fn relaxed_outside_stop_flag_fires() {
+        let src = "fn f(done: &AtomicBool) {\n\
+                   \x20   done.store(true, Ordering::Relaxed);\n\
+                   }\n";
+        let f = check_atomic_ordering("live/driver.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].rule, "atomic-ordering");
+    }
+
+    #[test]
+    fn stop_flag_sites_are_permitted() {
+        let same = "fn f(s: &S) { s.stop.store(true, Ordering::Relaxed); }\n";
+        assert!(check_atomic_ordering("live/worker.rs", same).is_empty());
+        let prev = "fn f(pool: &Pool) {\n\
+                    \x20   for flag in pool.stop_flags.values() {\n\
+                    \x20       flag.store(true, Ordering::Relaxed);\n\
+                    \x20   }\n\
+                    }\n";
+        assert!(check_atomic_ordering("live/driver.rs", prev).is_empty());
+    }
+
+    #[test]
+    fn relaxed_allow_suppresses() {
+        let src = "fn f(done: &AtomicBool) {\n\
+                   \x20   // pcm-lint: allow(relaxed) -- fixture reason\n\
+                   \x20   done.store(true, Ordering::Relaxed);\n\
+                   }\n";
+        assert!(check_atomic_ordering("live/driver.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cmp_ordering_is_not_atomics() {
+        let src = "fn f(a: u32, b: u32) -> Ordering {\n\
+                   \x20   a.cmp(&b)\n\
+                   }\n";
+        assert!(check_atomic_ordering("coordinator/scheduler.rs", src)
+            .is_empty());
+    }
+}

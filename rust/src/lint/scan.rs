@@ -1,0 +1,329 @@
+//! Line-level Rust source scanner for the lint rules.
+//!
+//! The rules in [`super::rules`] work on *lines*, not on a full AST —
+//! the same zero-dependency, hand-rolled approach the crate takes to
+//! JSON. For that to be sound, each physical line is pre-digested into
+//! three views plus a test flag:
+//!
+//! - `code` — comments stripped, string/char-literal *contents* blanked
+//!   to spaces (delimiters kept), so token searches like `.unwrap()` or
+//!   `Ordering::Relaxed` can never match inside a literal or a comment;
+//! - `raw` — comments stripped but string contents kept, for rules that
+//!   read literals (the emit/parse field-parity rule);
+//! - `comment` — the comment text on the line (`//` or `/* … */`
+//!   content), where `// pcm-lint: allow(…)` annotations live;
+//! - `in_test` — whether the line sits inside a `#[cfg(test)]` region,
+//!   tracked by brace depth from the attribute, so test code is exempt
+//!   from every rule.
+//!
+//! The scanner understands line and nested block comments, ordinary
+//! (multi-line) strings with escapes, raw strings (`r"…"`, `r#"…"#`,
+//! …), and disambiguates char literals from lifetimes. It does not try
+//! to be a full lexer — it only has to be conservative enough that the
+//! rules never fire on literal or comment text.
+
+/// One scanned source line. See the module docs for the three views.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number in the scanned source.
+    pub number: usize,
+    /// Code with comments stripped and literal contents blanked.
+    pub code: String,
+    /// Code with comments stripped but string contents kept.
+    pub raw: String,
+    /// Comment text carried by this line (empty if none).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` region (attribute line included).
+    pub in_test: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    /// Nested block comment at the carried depth.
+    Block(u32),
+    /// Ordinary string literal (may span lines).
+    Str,
+    /// Raw string literal with the carried number of `#`s.
+    RawStr(usize),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `source` into per-line views. Infallible: unterminated
+/// constructs simply leave the scanner in their mode to end of input.
+pub fn scan(source: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    // #[cfg(test)] region tracking: brace depth of the whole file, the
+    // depth at which the current test region opened, and whether the
+    // attribute was seen but its `{` not yet reached.
+    let mut depth: i64 = 0;
+    let mut test_depth: Option<i64> = None;
+    let mut pending_test = false;
+
+    for (idx, line) in source.lines().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut code = String::new();
+        let mut raw = String::new();
+        let mut comment = String::new();
+        let started_in_test = test_depth.is_some() || pending_test;
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Block(d) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if d > 1 {
+                            Mode::Block(d - 1)
+                        } else {
+                            Mode::Code
+                        };
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(d + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        code.push(' ');
+                        raw.push(c);
+                        i += 1;
+                        if let Some(&e) = chars.get(i) {
+                            code.push(' ');
+                            raw.push(e);
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        raw.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        raw.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(h) => {
+                    let closes = c == '"'
+                        && (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closes {
+                        code.push('"');
+                        raw.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                            raw.push('#');
+                        }
+                        mode = Mode::Code;
+                        i += 1 + h;
+                    } else {
+                        code.push(' ');
+                        raw.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comment.extend(&chars[i + 2..]);
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        raw.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == 'r'
+                        && (i == 0 || !is_ident(chars[i - 1]))
+                        && raw_string_hashes(&chars, i).is_some()
+                    {
+                        let h = raw_string_hashes(&chars, i)
+                            .unwrap_or_default();
+                        for k in 0..=h + 1 {
+                            code.push(chars[i + k]);
+                            raw.push(chars[i + k]);
+                        }
+                        mode = Mode::RawStr(h);
+                        i += h + 2;
+                    } else if c == '\'' {
+                        let consumed = char_literal_len(&chars, i);
+                        if consumed > 0 {
+                            code.push('\'');
+                            raw.push('\'');
+                            for _ in 1..consumed.saturating_sub(1) {
+                                code.push(' ');
+                                raw.push(' ');
+                            }
+                            code.push('\'');
+                            raw.push('\'');
+                            i += consumed;
+                        } else {
+                            // Lifetime: keep the tick as code.
+                            code.push('\'');
+                            raw.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        if c == '{' {
+                            if pending_test && test_depth.is_none() {
+                                test_depth = Some(depth);
+                                pending_test = false;
+                            }
+                            depth += 1;
+                        } else if c == '}' {
+                            depth -= 1;
+                            if test_depth.is_some_and(|td| depth <= td) {
+                                test_depth = None;
+                            }
+                        }
+                        code.push(c);
+                        raw.push(c);
+                        if c == ']' && code.ends_with("#[cfg(test)]") {
+                            pending_test = true;
+                        }
+                        i += 1;
+                    }
+                }
+            }
+        }
+        let in_test =
+            started_in_test || test_depth.is_some() || pending_test;
+        out.push(Line {
+            number: idx + 1,
+            code,
+            raw,
+            comment,
+            in_test,
+        });
+    }
+    out
+}
+
+/// If a raw string starts at `chars[at]` (an `r` not preceded by an
+/// identifier character), the number of `#`s in its delimiter.
+fn raw_string_hashes(chars: &[char], at: usize) -> Option<usize> {
+    let mut j = at + 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// Total chars of a char literal starting at the `'` at `chars[at]`,
+/// or 0 when the tick starts a lifetime instead.
+fn char_literal_len(chars: &[char], at: usize) -> usize {
+    match chars.get(at + 1) {
+        // '\n', '\'', '\\', '\u{…}': skip the escaped character, then
+        // scan to the closing quote.
+        Some('\\') => {
+            let mut j = at + 3;
+            while j < chars.len() {
+                if chars[j] == '\'' {
+                    return j - at + 1;
+                }
+                j += 1;
+            }
+            chars.len() - at
+        }
+        // 'x' — but only with a closing quote right after (otherwise
+        // it is a lifetime like 'a or '_).
+        Some(_) if chars.get(at + 2) == Some(&'\'') => 3,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_are_blanked_in_code_but_kept_in_raw() {
+        let l = &scan("let x = \"panic!() .unwrap()\";")[0];
+        assert!(!l.code.contains("panic!"));
+        assert!(!l.code.contains(".unwrap()"));
+        assert!(l.raw.contains("panic!() .unwrap()"));
+        assert!(l.code.contains("let x ="));
+    }
+
+    #[test]
+    fn line_comments_are_captured_not_code() {
+        let l = &scan("foo(); // has .unwrap() in prose")[0];
+        assert!(!l.code.contains(".unwrap()"));
+        assert_eq!(l.comment.trim(), "has .unwrap() in prose");
+        assert!(l.code.contains("foo();"));
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let lines = scan("a /* one /* two */ still */ b\nc");
+        assert!(lines[0].code.contains('a'));
+        assert!(lines[0].code.contains('b'));
+        assert!(lines[0].comment.contains("one"));
+        assert!(lines[1].code.contains('c'));
+        let lines = scan("x /* open\n.unwrap()\n*/ y");
+        assert!(!lines[1].code.contains(".unwrap()"));
+        assert!(lines[1].comment.contains(".unwrap()"));
+        assert!(lines[2].code.contains('y'));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let l = &scan("let s = r#\"todo!() \"quoted\" \"#;")[0];
+        assert!(!l.code.contains("todo!"));
+        assert!(l.raw.contains("todo!()"));
+        // The scanner is back in code mode after the delimiter.
+        assert!(l.code.trim_end().ends_with(';'));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let l = &scan("fn f<'a>(x: &'a str) -> char { '\"' }")[0];
+        // The quote char literal must not open a string.
+        assert!(l.code.contains("fn f<'a>(x: &'a str)"));
+        assert!(l.code.trim_end().ends_with('}'));
+        let l = &scan("let c = '\\''; let d = 'x';")[0];
+        assert!(l.code.contains("let d ="));
+    }
+
+    #[test]
+    fn multi_line_strings_stay_blanked() {
+        let lines = scan("let s = \"first\npanic!()\nlast\"; done();");
+        assert!(!lines[1].code.contains("panic!"));
+        assert!(lines[1].raw.contains("panic!()"));
+        assert!(lines[2].code.contains("done();"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_flagged_to_its_closing_brace() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn helper() {}\n\
+                   }\n\
+                   fn after() {}";
+        let lines = scan(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test, "attribute line is test");
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test, "closing brace is test");
+        assert!(!lines[5].in_test, "code after the region is live");
+    }
+
+    #[test]
+    fn cfg_test_attr_and_brace_on_one_line() {
+        let lines = scan("#[cfg(test)] mod t { fn x() {} }\nfn live() {}");
+        assert!(lines[0].in_test);
+        assert!(!lines[1].in_test);
+    }
+}

@@ -424,14 +424,13 @@ impl LiveDriver {
             BTreeMap::new();
         let mut restarts = 0u32;
 
-        send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
-
         // Event loop: worker messages interleaved with due churn
         // events. Wrapped so every exit — success, watchdog, drained
-        // pool, task failure — funnels through the shutdown below
-        // (threads joined, cache root cleaned) instead of leaking them
-        // on the error paths.
+        // pool, task failure, a dispatch-protocol error — funnels
+        // through the shutdown below (threads joined, cache root
+        // cleaned) instead of leaking them on the error paths.
         let loop_result: Result<()> = (|| {
+        send_dispatches(&mut sched, &pool, &mut dispatched_at, t0)?;
         let mut last_progress = Instant::now();
         while !sched.all_done() {
             let now = t0.elapsed().as_secs_f64();
@@ -454,8 +453,11 @@ impl LiveDriver {
 
             // Execute every churn event that has come due.
             let mut churned = false;
-            while churn.front().is_some_and(|e| e.at <= now) {
-                let e = churn.pop_front().unwrap();
+            while let Some(&e) = churn.front() {
+                if e.at > now {
+                    break;
+                }
+                churn.pop_front();
                 if sched.trace().on() {
                     let at = t0.elapsed().as_secs_f64();
                     sched.trace().emit(if e.up {
@@ -476,6 +478,8 @@ impl LiveDriver {
                     ) {
                         restarts += 1;
                         let (restored_bytes, full, dropped) = {
+                            // pcm-lint: allow(panic) -- rejoin_node
+                            // returned wid after registering it.
                             let w = sched.worker(wid).expect("just joined");
                             // Which contexts came back whole? Only those
                             // start stage-free on this incarnation. And
@@ -540,7 +544,7 @@ impl LiveDriver {
                 last_progress = Instant::now();
                 // Requeued tasks may redispatch; a respawned worker may
                 // take one immediately.
-                send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
+                send_dispatches(&mut sched, &pool, &mut dispatched_at, t0)?;
             }
 
             let timeout = churn
@@ -566,6 +570,8 @@ impl LiveDriver {
                     continue;
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // pcm-lint: allow(panic) -- result_tx lives on this
+                    // stack frame, so the channel cannot disconnect.
                     unreachable!("driver holds a result sender")
                 }
             };
@@ -593,7 +599,7 @@ impl LiveDriver {
                     // A prefetch finished staging (the scheduler already
                     // retired it on its last PhaseDone); the freed warm
                     // worker may take a task right away.
-                    send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
+                    send_dispatches(&mut sched, &pool, &mut dispatched_at, t0)?;
                 }
                 WorkerMsg::TaskDone {
                     worker,
@@ -636,7 +642,7 @@ impl LiveDriver {
                     records.push(rec.clone());
                     sched.set_clock_hint(now);
                     sched.task_done(task, rec);
-                    send_dispatches(&mut sched, &pool, &mut dispatched_at, t0);
+                    send_dispatches(&mut sched, &pool, &mut dispatched_at, t0)?;
                 }
                 WorkerMsg::Failed { task, error, .. } => {
                     anyhow::bail!("live task {task} failed: {error}");
@@ -699,11 +705,14 @@ impl LiveDriver {
                 },
             );
         }
+        let accuracy = merged_accuracy.ok_or_else(|| {
+            anyhow::anyhow!("live run completed with no applications")
+        })?;
         Ok(LiveOutcome {
             wall_s,
             completed_inferences: completed,
             throughput_inf_per_s: completed as f64 / wall_s,
-            accuracy: merged_accuracy.expect("at least one app"),
+            accuracy,
             records,
             task_latency: latency,
             cache: sched.cache_stats().clone(),
@@ -728,7 +737,7 @@ fn send_dispatches(
     pool: &Pool,
     dispatched_at: &mut HashMap<u64, f64>,
     t0: Instant,
-) {
+) -> Result<()> {
     let now = t0.elapsed().as_secs_f64();
     sched.set_clock_hint(now);
     let round_t0 = sched.trace().on().then(Instant::now);
@@ -753,15 +762,23 @@ fn send_dispatches(
             // accounting.
             (0, 0)
         } else {
-            let range = sched
-                .task_range(d.task)
-                .expect("dispatched task has a range");
+            let range = sched.task_range(d.task).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "dispatched task {} has no inference range",
+                    d.task
+                )
+            })?;
             dispatched_at.insert(d.task, t0.elapsed().as_secs_f64());
             range
         };
         pool.order_txs
             .get(&d.worker)
-            .expect("dispatched worker has an order channel")
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "dispatched worker {} has no order channel",
+                    d.worker
+                )
+            })?
             .send(LiveOrder::Run(WorkOrder {
                 task: d.task,
                 context,
@@ -769,8 +786,14 @@ fn send_dispatches(
                 count,
                 phases: d.phases,
             }))
-            .expect("worker thread alive");
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "worker {} thread hung up before its order",
+                    d.worker
+                )
+            })?;
     }
+    Ok(())
 }
 
 /// Forward freshly decided LRU evictions to their worker threads so the

@@ -12,6 +12,7 @@
 //!     [--workers N] [--batch B] [--inferences N]
 //! pcm tune [--seed N] [--scale F]
 //! pcm trace <summarize|check> <file.jsonl>
+//! pcm lint [--manifest-dir DIR]
 //! pcm inventory
 //! ```
 
@@ -106,6 +107,7 @@ fn run(args: &[String]) -> pcm::Result<()> {
             args.get(2).map(|s| s.as_str()),
         ),
         "tune" => tune(&flags),
+        "lint" => lint(&flags),
         "ablate" => {
             let seed = flags.get_u64("--seed", 42);
             let inferences = flags.get_u64("--inferences", 5_000);
@@ -160,6 +162,13 @@ USAGE:
                          invariants (no double-scored task, no stale
                          version served, occupancy <= capacity);
                          exit 1 listing every violation
+  pcm lint [--manifest-dir DIR]
+                         self-hosted static analysis: choke-point
+                         trace/index coverage, panic-free hot paths,
+                         TraceEvent match exhaustiveness, JSONL field
+                         parity, atomic-ordering discipline; exit 1
+                         listing every finding (DIR defaults to rust/
+                         or ., whichever holds src/)
   pcm tune               adaptive batch-size search (Challenge #6)
   pcm ablate             design-choice ablations (fan-out, eviction
                          granularity, start gate, FS contention)
@@ -535,6 +544,34 @@ fn trace(verb: Option<&str>, path: Option<&str>) -> pcm::Result<()> {
             }
         }
         other => anyhow::bail!("unknown trace verb {other:?}\n{usage}"),
+    }
+}
+
+/// `pcm lint [--manifest-dir DIR]` — run the self-hosted static
+/// analysis over the crate's own sources; exit non-zero listing every
+/// finding.
+fn lint(flags: &Flags) -> pcm::Result<()> {
+    let manifest_dir = match flags.get("--manifest-dir") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        // Default: the crate root whether invoked from the repo root
+        // (rust/src) or from inside rust/ (src).
+        None if std::path::Path::new("rust/src").is_dir() => {
+            std::path::PathBuf::from("rust")
+        }
+        None => std::path::PathBuf::from("."),
+    };
+    let findings = pcm::lint::lint_crate(&manifest_dir)?;
+    if findings.is_empty() {
+        println!(
+            "pcm lint: OK ({}/src is clean)",
+            manifest_dir.display()
+        );
+        Ok(())
+    } else {
+        for f in &findings {
+            eprintln!("{f}");
+        }
+        anyhow::bail!("pcm lint: {} finding(s)", findings.len())
     }
 }
 

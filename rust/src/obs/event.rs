@@ -674,6 +674,8 @@ mod tests {
     }
 
     #[test]
+    // Miri has no real filesystem to write the malformed trace into.
+    #[cfg_attr(miri, ignore)]
     fn read_trace_reports_line_numbers() {
         let dir = std::env::temp_dir().join(format!(
             "pcm-trace-read-{}",

@@ -1,0 +1,151 @@
+//! The lint's primary integration test: `pcm lint` must pass on its
+//! own tree (self-hosting), and must catch a deliberately planted
+//! violation in a fixture crate with a file/line diagnostic.
+//!
+//! Everything here runs offline — these tests execute in the
+//! `static-analysis`-adjacent CI test lane.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+/// In-process self-host: linting this very crate yields zero findings.
+/// Every suppression in the tree therefore carries a reason, and every
+/// choke-point method traces and indexes (or is explicitly exempted).
+#[test]
+fn lint_crate_self_hosts_clean() {
+    let findings = pcm::lint::lint_crate(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("lint walks its own sources");
+    assert!(
+        findings.is_empty(),
+        "the tree must self-host clean; findings:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// The CLI agrees with the library: `pcm lint --manifest-dir <crate>`
+/// exits 0 and announces the clean tree on stdout.
+#[test]
+fn cli_lint_passes_on_own_tree() {
+    let out = Command::new(env!("CARGO_BIN_EXE_pcm"))
+        .args(["lint", "--manifest-dir", env!("CARGO_MANIFEST_DIR")])
+        .output()
+        .expect("pcm lint runs");
+    assert!(
+        out.status.success(),
+        "self-hosting lint exits 0; stderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("pcm lint: OK"),
+        "clean run is announced: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
+
+/// Fixture crate dir holding exactly one source file at `rel`.
+fn fixture_crate(tag: &str, rel: &str, source: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pcm-lint-it-{tag}-{}", std::process::id()));
+    let file = dir.join("src").join(rel);
+    std::fs::create_dir_all(file.parent().expect("rel has a parent"))
+        .expect("fixture dirs");
+    std::fs::write(&file, source).expect("fixture source");
+    dir
+}
+
+/// The acceptance fixture: a scheduler source with a deliberately
+/// untraced, unindexed `pub fn (&mut self)` mutator. The CLI must exit
+/// non-zero and point at the exact file and line of the offender.
+#[test]
+fn cli_lint_catches_untraced_scheduler_method() {
+    let src = "pub struct Scheduler {\n\
+               \x20   total: u64,\n\
+               }\n\
+               \n\
+               impl Scheduler {\n\
+               \x20   pub fn sneak(&mut self, n: u64) {\n\
+               \x20       self.total += n;\n\
+               \x20   }\n\
+               }\n";
+    let dir = fixture_crate("sneak", "coordinator/scheduler.rs", src);
+    let out = Command::new(env!("CARGO_BIN_EXE_pcm"))
+        .args(["lint", "--manifest-dir", dir.to_str().expect("utf-8 tmp")])
+        .output()
+        .expect("pcm lint runs");
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(
+        !out.status.success(),
+        "planted violation must fail the CLI; stderr:\n{stderr}"
+    );
+    // `pub fn sneak` sits on line 6 of the fixture: both choke rules
+    // anchor their diagnostics there.
+    assert!(
+        stderr.contains("coordinator/scheduler.rs:6"),
+        "diagnostic names the file and line:\n{stderr}"
+    );
+    assert!(stderr.contains("[choke-trace]"), "untraced is flagged:\n{stderr}");
+    assert!(stderr.contains("[choke-index]"), "unindexed is flagged:\n{stderr}");
+    assert!(
+        stderr.contains("allow(untraced)"),
+        "diagnostic teaches the suppression syntax:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("pcm lint: 2 finding(s)"),
+        "summary counts both findings:\n{stderr}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A reasoned allow on the planted method suppresses exactly the named
+/// scopes and restores a clean exit — the suppression path works
+/// end-to-end through the CLI, not just in rule unit tests.
+#[test]
+fn cli_lint_accepts_reasoned_allow_on_fixture() {
+    let src = "pub struct Scheduler {\n\
+               \x20   total: u64,\n\
+               }\n\
+               \n\
+               impl Scheduler {\n\
+               \x20   // pcm-lint: allow(untraced|unindexed) -- fixture:\n\
+               \x20   // plain counter bump, no queue state involved.\n\
+               \x20   pub fn sneak(&mut self, n: u64) {\n\
+               \x20       self.total += n;\n\
+               \x20   }\n\
+               }\n";
+    let dir = fixture_crate("allowed", "coordinator/scheduler.rs", src);
+    let out = Command::new(env!("CARGO_BIN_EXE_pcm"))
+        .args(["lint", "--manifest-dir", dir.to_str().expect("utf-8 tmp")])
+        .output()
+        .expect("pcm lint runs");
+    assert!(
+        out.status.success(),
+        "reasoned allow restores a clean exit; stderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Hot-path panic tokens outside the scheduler are caught too, with the
+/// panic-free rule naming the offending token and line.
+#[test]
+fn cli_lint_catches_hot_path_unwrap() {
+    let src = "pub fn helper(x: Option<u64>) -> u64 {\n\
+               \x20   x.unwrap()\n\
+               }\n";
+    let dir = fixture_crate("unwrap", "live/driver.rs", src);
+    let out = Command::new(env!("CARGO_BIN_EXE_pcm"))
+        .args(["lint", "--manifest-dir", dir.to_str().expect("utf-8 tmp")])
+        .output()
+        .expect("pcm lint runs");
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(!out.status.success(), "unwrap on a hot path fails the CLI");
+    assert!(
+        stderr.contains("live/driver.rs:2") && stderr.contains("[panic-free]"),
+        "diagnostic names file, line, and rule:\n{stderr}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -140,3 +140,111 @@ fn live_trace_warm_restores_match_outcome_exactly() {
     assert!(events.iter().any(|e| matches!(e, TraceEvent::WorkerLost { .. })));
     assert!(events.iter().any(|e| matches!(e, TraceEvent::CacheRestore { .. })));
 }
+
+// ---------------------------------------------------------------------
+// Each `obs::check` Violation class individually, from hand-assembled
+// event streams (the end-to-end tests above only ever see clean runs
+// plus the duplicated-completion corruption).
+
+fn run_start() -> TraceEvent {
+    TraceEvent::RunStart {
+        at: 0.0,
+        label: "hand-assembled".into(),
+        policy: "greedy".into(),
+    }
+}
+
+fn join(worker: u64, capacity: u64) -> TraceEvent {
+    TraceEvent::WorkerJoin { at: 0.0, worker, node: worker, capacity }
+}
+
+fn stage(worker: u64, ctx: u32, bytes: u64, version: u32) -> TraceEvent {
+    TraceEvent::CacheStage {
+        at: 1.0,
+        worker,
+        ctx,
+        component: "weights".into(),
+        bytes,
+        version,
+    }
+}
+
+/// Staging more bytes onto a worker than its announced capacity is the
+/// occupancy invariant the byte-budgeted caches exist to hold.
+#[test]
+fn checker_flags_over_capacity_occupancy() {
+    let events = vec![
+        run_start(),
+        join(0, 100),
+        stage(0, 0, 80, 0),
+        stage(0, 1, 30, 0), // 110 > 100
+    ];
+    let violations = check_events(&events);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert!(
+        violations[0].message.contains("exceeds capacity"),
+        "{}",
+        violations[0].message
+    );
+    // The index points at the offending stage event.
+    assert_eq!(violations[0].index, 3);
+
+    // At exactly capacity there is nothing to report.
+    let exact = vec![run_start(), join(0, 100), stage(0, 0, 100, 0)];
+    assert!(check_events(&exact).is_empty());
+}
+
+/// Cache traffic attributed to a worker that never joined (or was
+/// already lost) means the trace lost a lifecycle event — every byte
+/// must be attributable to a live incarnation.
+#[test]
+fn checker_flags_traffic_for_never_joined_worker() {
+    let events = vec![run_start(), stage(7, 0, 10, 0)];
+    let violations = check_events(&events);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert!(
+        violations[0].message.contains("never joined"),
+        "{}",
+        violations[0].message
+    );
+
+    // Same story after an explicit loss.
+    let lost = vec![
+        run_start(),
+        join(0, 100),
+        TraceEvent::WorkerLost { at: 0.5, worker: 0, node: 0 },
+        stage(0, 0, 10, 0),
+    ];
+    let violations = check_events(&lost);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert!(violations[0].message.contains("never joined (or was lost)"));
+}
+
+/// Bytes staged under a version older than the registry's current one
+/// are stale-version bytes — the invariant behind every version bump
+/// and warm-restore drop.
+#[test]
+fn checker_flags_stale_version_bytes() {
+    let events = vec![
+        run_start(),
+        join(0, 1_000),
+        TraceEvent::VersionBump { at: 0.5, ctx: 0, version: 1 },
+        stage(0, 0, 10, 0), // staged at version 0, registry at 1
+    ];
+    let violations = check_events(&events);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert!(
+        violations[0].message.contains("stale bytes served"),
+        "{}",
+        violations[0].message
+    );
+
+    // Staging at the bumped version is clean.
+    let fresh = vec![
+        run_start(),
+        join(0, 1_000),
+        TraceEvent::VersionBump { at: 0.5, ctx: 0, version: 1 },
+        stage(0, 0, 10, 1),
+    ];
+    assert!(check_events(&fresh).is_empty());
+}
