@@ -14,8 +14,10 @@ use pcm::util::bench::{bench, header};
 fn scaled_run(id: &str, scale: f64, seed: u64) -> ExperimentResult {
     let spec = spec_by_id(id).expect(id);
     let mut cfg = spec.build(seed);
-    cfg.total_inferences =
-        ((cfg.total_inferences as f64 * scale) as u64).max(100);
+    for app in &mut cfg.apps {
+        app.total_inferences =
+            ((app.total_inferences as f64 * scale) as u64).max(100);
+    }
     let outcome = SimDriver::new(cfg).run();
     ExperimentResult {
         id: id.to_string(),

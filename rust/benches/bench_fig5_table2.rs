@@ -19,12 +19,14 @@ fn main() {
     let mut results = Vec::new();
     for spec in figure5_specs() {
         let mut cfg = spec.build(42);
-        cfg.total_inferences =
-            ((cfg.total_inferences as f64 * scale) as u64).max(100);
+        for app in &mut cfg.apps {
+            app.total_inferences =
+                ((app.total_inferences as f64 * scale) as u64).max(100);
+        }
         let mut outcome = None;
         bench(format!("sim {}", spec.id), 0, 3, || {
             let mut c = spec.build(42);
-            c.total_inferences = cfg.total_inferences;
+            c.apps = cfg.apps.clone();
             outcome = Some(SimDriver::new(c).run());
         });
         let outcome = outcome.unwrap();

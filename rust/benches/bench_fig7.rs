@@ -22,8 +22,10 @@ fn main() {
         let mut outcome = None;
         bench(format!("sim {}", spec.id), 0, 3, || {
             let mut cfg = spec.build(42);
-            cfg.total_inferences =
-                ((cfg.total_inferences as f64 * scale) as u64).max(100);
+            for app in &mut cfg.apps {
+                app.total_inferences =
+                    ((app.total_inferences as f64 * scale) as u64).max(100);
+            }
             outcome = Some(SimDriver::new(cfg).run());
         });
         let outcome = outcome.unwrap();

@@ -15,8 +15,9 @@ use pcm::cluster::{GpuModel, LoadTrace, Node};
 use pcm::coordinator::batcher::Batcher;
 use pcm::coordinator::transfer::plan_broadcast;
 use pcm::coordinator::{
-    ContextPolicy, ContextRecipe, PolicyKind, Scheduler, SimConfig,
-    SimDriver, TaskRecord, TransferPlanner,
+    ContextPolicy, ContextRecipe, CostModel, PolicyKind, Scheduler,
+    ShardedCoordinator, SimConfig, SimDriver, TaskRecord, TransferPlanner,
+    DEFAULT_CACHE_CAPACITY_BYTES,
 };
 use pcm::obs::{JsonlSink, NullSink, TraceHandle};
 use pcm::runtime::manifest::default_artifacts_dir;
@@ -218,6 +219,95 @@ fn dispatch_rounds(
     dispatched
 }
 
+/// Steady-state pool behind a [`ShardedCoordinator`]: four contexts
+/// partitioned round-robin across `shards` shard instances, every
+/// worker warm and busy, a deep single-inference backlog queued behind
+/// them. Same workload at every shard count, so the 1/2/4-shard cases
+/// measure pure coordinator overhead (per-round fan-out over shards,
+/// routing maps, the steal/return passes finding nothing to do).
+fn sharded_steady_state(
+    shards: usize,
+    workers: u32,
+    tasks_per_ctx: u64,
+) -> (ShardedCoordinator, std::collections::VecDeque<(u64, u32)>) {
+    const CTXS: u32 = 4;
+    let recipes: Vec<ContextRecipe> = (0..CTXS)
+        .map(|c| {
+            ContextRecipe::custom(
+                c,
+                format!("bench-ctx{c}"),
+                1_000_000_000,
+                3_000_000_000,
+            )
+        })
+        .collect();
+    let mut s = ShardedCoordinator::new(
+        shards,
+        ContextPolicy::Pervasive,
+        recipes,
+        3,
+        CostModel::default(),
+        DEFAULT_CACHE_CAPACITY_BYTES,
+        PolicyKind::Greedy,
+        TraceHandle::null(),
+    );
+    let mut tasks = Vec::new();
+    for c in 0..CTXS {
+        tasks.extend(Batcher::new(1).split(
+            tasks_per_ctx,
+            c,
+            c as u64 * tasks_per_ctx,
+        ));
+    }
+    s.submit_tasks(tasks);
+    for i in 0..workers {
+        s.worker_join(Node { id: i, gpu: GpuModel::A10 }, 0.0);
+    }
+    // First wave stages contexts everywhere; complete it so every
+    // worker is warm before anything is timed.
+    for d in s.dispatch_all(0.0) {
+        for i in 0..d.phases.len() {
+            s.phase_done(d.task, i);
+        }
+        let ctx = s.task_context(d.task).unwrap_or(0);
+        let (attempts, inferences) = s.task_meta(d.task).unwrap();
+        let mut r = rec(d.task, d.worker, attempts, inferences);
+        r.context = ctx;
+        s.task_done(d.task, r);
+    }
+    let mut inflight = std::collections::VecDeque::new();
+    for d in s.dispatch_all(0.0) {
+        inflight.push_back((d.task, d.worker));
+    }
+    (s, inflight)
+}
+
+/// One sharded steady-state round: complete the oldest in-flight task
+/// and re-dispatch through `dispatch_all` (per-shard rounds + the
+/// steal and return passes). The scaling gate at the bottom of `main`
+/// asserts the 4-shard round stays within noise of the 1-shard round.
+fn sharded_rounds(
+    s: &mut ShardedCoordinator,
+    inflight: &mut std::collections::VecDeque<(u64, u32)>,
+    rounds: u32,
+) -> u64 {
+    let mut dispatched = 0u64;
+    for _ in 0..rounds {
+        let (task, worker) = inflight.pop_front().expect("ring never drains");
+        s.phase_done(task, 0);
+        let ctx = s.task_context(task).unwrap_or(0);
+        let (attempts, inferences) = s.task_meta(task).unwrap();
+        let mut r = rec(task, worker, attempts, inferences);
+        r.context = ctx;
+        s.task_done(task, r);
+        for d in s.dispatch_all(1.0) {
+            inflight.push_back((d.task, d.worker));
+            dispatched += 1;
+        }
+    }
+    dispatched
+}
+
 /// Write collected results as JSON when `PCM_BENCH_JSON` names a path
 /// (the perf-trajectory baseline future PRs diff against). Merges by
 /// case name into whatever the file already holds — a partial run must
@@ -373,6 +463,28 @@ fn main() {
     drop((s_file, ring_file));
     let _ = std::fs::remove_file(&trace_path);
 
+    // Shard-scaling curve: the same 240-worker / 200k-task steady state
+    // behind 1, 2 and 4 scheduler shards. Sharding exists for lock- and
+    // channel-level parallelism in the live path; here everything is
+    // single-threaded, so the curve exposes the coordinator's per-round
+    // overhead (per-shard round fan-out + the no-op steal/return
+    // passes), which must stay flat.
+    let mut shard_medians = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let (mut sc, mut ring) = sharded_steady_state(shards, 240, 50_000);
+        let r = bench(
+            format!(
+                "sharded dispatch round: {shards} shard(s) / 240 nodes \
+                 / 200k queued (64 rounds)"
+            ),
+            1,
+            iters(10),
+            || sharded_rounds(&mut sc, &mut ring, 64),
+        );
+        shard_medians.push(r.median_s);
+        results.push(r);
+    }
+
     results.push(bench(
         "broadcast plan: 567 workers, fanout 3",
         5,
@@ -399,7 +511,7 @@ fn main() {
             LoadTrace::constant(20),
             42,
         );
-        cfg.total_inferences = 5_000;
+        cfg.apps[0].total_inferences = 5_000;
         SimDriver::new(cfg).run().summary.exec_time_s
     }));
     results.push(bench("sim mixed 2-app @ 1k inferences/app", 1, iters(5), || {
@@ -507,6 +619,28 @@ fn main() {
             "TRACE OVERHEAD VIOLATION: NullSink dispatch round is \
              {trace_ratio:.2}x the untraced round (limit 2x) — trace \
              emission is no longer within noise of tracing off"
+        );
+        std::process::exit(1);
+    }
+
+    // CI gate: sharding must not tax the dispatch round. The 4-shard
+    // steady-state round covers the identical workload as the 1-shard
+    // one, so its median may exceed the single-shard median only within
+    // timer noise (same floor as the flatness gate).
+    let (shard_1, shard_4) = (shard_medians[0], shard_medians[2]);
+    let shard_base = shard_1.max(floor_s);
+    let shard_ratio = shard_4 / shard_base;
+    eprintln!(
+        "shard scaling: 1={:.1}us 2={:.1}us 4={:.1}us ratio(4/1)={shard_ratio:.2} (limit 1.50)",
+        shard_1 * 1e6,
+        shard_medians[1] * 1e6,
+        shard_4 * 1e6,
+    );
+    if shard_4 > 1.5 * shard_base {
+        eprintln!(
+            "SHARD SCALING VIOLATION: the 4-shard dispatch round is \
+             {shard_ratio:.2}x the single-shard round (limit 1.5x) — \
+             per-round coordinator overhead is scaling with shard count"
         );
         std::process::exit(1);
     }

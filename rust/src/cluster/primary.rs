@@ -245,7 +245,7 @@ mod tests {
             tr,
             9,
         );
-        cfg.total_inferences = 10_000;
+        cfg.apps[0].total_inferences = 10_000;
         cfg.start_gate_fraction = 0.0;
         let out = SimDriver::new(cfg).run();
         assert_eq!(out.summary.completed_inferences, 10_000);

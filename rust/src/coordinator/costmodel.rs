@@ -46,6 +46,13 @@ pub struct CostModel {
     /// bytes/s — used only by the deterministic dispatch-time estimates
     /// (the stochastic path asks the live [`SharedFilesystem`] instead).
     pub shared_fs_est_bps: f64,
+    /// Deterministic mode: every stochastic draw collapses to its mean
+    /// **without consuming RNG state**. The shard-equivalence experiment
+    /// needs this — event *order* differs between shard layouts, so any
+    /// RNG consumption tied to service times would diverge the runs even
+    /// when the schedules are identical. Calibration runs keep the
+    /// default (`false`) jittered behaviour.
+    pub deterministic: bool,
 }
 
 impl Default for CostModel {
@@ -61,14 +68,28 @@ impl Default for CostModel {
             worker_startup_s: 10.0,
             jitter_sigma: 0.18,
             shared_fs_est_bps: 1.0e9,
+            deterministic: false,
         }
     }
 }
 
 impl CostModel {
     fn jitter(&self, rng: &mut Rng) -> f64 {
+        if self.deterministic {
+            return 1.0;
+        }
         // Mean-1 lognormal: exp(σZ − σ²/2).
         rng.lognormal(-self.jitter_sigma * self.jitter_sigma / 2.0, self.jitter_sigma)
+    }
+
+    /// A uniform-factor draw, or its midpoint in deterministic mode
+    /// (again without touching the RNG).
+    fn uniform_factor(&self, lo: f64, hi: f64, rng: &mut Rng) -> f64 {
+        if self.deterministic {
+            (lo + hi) / 2.0
+        } else {
+            rng.uniform(lo, hi)
+        }
     }
 
     /// Pure inference time for `n` inferences on `gpu`.
@@ -94,9 +115,18 @@ impl CostModel {
         rng: &mut Rng,
     ) -> f64 {
         match origin {
-            DataOrigin::SharedFs => fs.read_time(bytes, rng),
+            DataOrigin::SharedFs => {
+                if self.deterministic {
+                    // Flat-rate read, no contention draw: the estimate-
+                    // side bandwidth stands in for the stochastic FS.
+                    bytes as f64 / self.shared_fs_est_bps
+                } else {
+                    fs.read_time(bytes, rng)
+                }
+            }
             DataOrigin::Internet => {
-                bytes as f64 / self.internet_bps * rng.uniform(0.85, 1.3)
+                bytes as f64 / self.internet_bps
+                    * self.uniform_factor(0.85, 1.3, rng)
             }
             DataOrigin::Manager => {
                 // Small control-plane payloads over the manager link.
@@ -107,12 +137,14 @@ impl CostModel {
 
     /// Stage `bytes` from a peer worker over the cluster network.
     pub fn stage_from_peer_s(&self, bytes: u64, rng: &mut Rng) -> f64 {
-        0.005 + bytes as f64 / self.peer_bps * rng.uniform(0.95, 1.15)
+        0.005
+            + bytes as f64 / self.peer_bps
+                * self.uniform_factor(0.95, 1.15, rng)
     }
 
     /// Per-task dispatch + result latency.
     pub fn dispatch_s(&self, rng: &mut Rng) -> f64 {
-        self.dispatch_s * rng.uniform(0.8, 1.6)
+        self.dispatch_s * self.uniform_factor(0.8, 1.6, rng)
     }
 
     /// Sandbox create/teardown for non-pervasive tasks.
@@ -122,7 +154,7 @@ impl CostModel {
 
     /// Worker pilot-job startup delay.
     pub fn worker_startup_s(&self, rng: &mut Rng) -> f64 {
-        self.worker_startup_s * rng.uniform(0.5, 1.8)
+        self.worker_startup_s * self.uniform_factor(0.5, 1.8, rng)
     }
 
     // ------------------------------------------------- dispatch estimates
@@ -282,5 +314,26 @@ mod tests {
         let cm = CostModel::default();
         let m = mean(|r| cm.jitter(r));
         assert!((0.97..1.03).contains(&m), "jitter mean={m}");
+    }
+
+    #[test]
+    fn deterministic_mode_consumes_no_rng() {
+        let cm = CostModel { deterministic: true, ..CostModel::default() };
+        let fs = SharedFilesystem::panasas_as16();
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        // Every stochastic entry point returns a fixed value and leaves
+        // the RNG stream untouched (b never draws at all).
+        let x1 = cm.execute_s(100, GpuModel::A10, &mut a);
+        let x2 = cm.execute_s(100, GpuModel::A10, &mut a);
+        assert_eq!(x1, x2);
+        let _ = cm.materialize_s(GpuModel::A10, &mut a);
+        let _ = cm.stage_from_origin_s(1 << 30, DataOrigin::SharedFs, &fs, &mut a);
+        let _ = cm.stage_from_origin_s(1 << 30, DataOrigin::Internet, &fs, &mut a);
+        let _ = cm.stage_from_peer_s(1 << 30, &mut a);
+        let _ = cm.dispatch_s(&mut a);
+        let _ = cm.sandbox_s(&mut a);
+        let _ = cm.worker_startup_s(&mut a);
+        assert_eq!(a.uniform(0.0, 1.0), b.uniform(0.0, 1.0));
     }
 }

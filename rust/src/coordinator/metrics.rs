@@ -111,6 +111,41 @@ impl CacheStats {
     }
 }
 
+/// Unified per-run report shared by the simulated and live drivers
+/// ([`SimOutcome::report`](super::sim_driver::SimOutcome::report) /
+/// [`LiveOutcome::report`](crate::live::LiveOutcome::report)): one
+/// summary row plus per-context cache lines, rendered through the same
+/// `obs` helpers trace summaries use, so the three outputs cannot
+/// drift. Sharded runs append a `shards=N steals=M` line.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub summary: RunSummary,
+    pub cache: CacheStats,
+    /// Scheduler shard count of the run (1 = unsharded).
+    pub shards: usize,
+    /// Work-stealing lends between shards over the run.
+    pub steals: u64,
+}
+
+impl RunReport {
+    /// Render the report: `obs::summary_row` for the run line,
+    /// `obs::cache_line` per context, and (multi-shard runs only) one
+    /// trailing shard/steal line.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", crate::obs::summary_row(&self.summary));
+        for (ctx, c) in &self.cache.per_context {
+            let _ = writeln!(out, "{}", crate::obs::cache_line(*ctx, c));
+        }
+        if self.shards > 1 {
+            let _ =
+                writeln!(out, "shards={} steals={}", self.shards, self.steals);
+        }
+        out
+    }
+}
+
 /// First-task context-acquisition seconds per worker, split into
 /// warm-started vs cold workers — the §7 warm-restart payoff metric
 /// shared by the sim churn experiment and the live churn experiment.

@@ -20,6 +20,11 @@
 //! * [`scheduler`] — the manager *mechanisms*: ready queue, a
 //!   multi-application **context registry**, finite worker caches,
 //!   eviction detection + requeue, completion bookkeeping (§5.1).
+//! * [`sharded`] — the scale-out layer: N scheduler shards partitioned
+//!   by context, a home-shard worker partition keyed by node id, and a
+//!   work-stealing lend/return protocol that moves idle workers to
+//!   backlogged peer shards. Both drivers run every experiment through
+//!   it (`shards = 1` is the degenerate default).
 //! * [`policy`] — the pluggable dispatch *decision* layer: a
 //!   `PlacementPolicy` reads a read-only `SchedulerView` and returns
 //!   typed placement decisions. Ships `AffinityGreedy` (warm pairing +
@@ -45,6 +50,7 @@ pub mod metrics;
 pub mod nodecache;
 pub mod policy;
 pub mod scheduler;
+pub mod sharded;
 pub mod sim_driver;
 pub mod task;
 pub mod transfer;
@@ -56,7 +62,7 @@ pub use costmodel::CostModel;
 pub use library::LibraryState;
 pub use metrics::{
     first_task_by_worker_context, first_task_context_split, CacheStats,
-    ContextCacheCounters, Metrics, RunSummary,
+    ContextCacheCounters, Metrics, RunReport, RunSummary,
 };
 pub use nodecache::{NodeCacheDirectory, NodeCacheEntry, RestoreSummary};
 pub use policy::{
@@ -64,6 +70,7 @@ pub use policy::{
     RiskAware, SchedulerView, WarmPrefetch, WeightedFairShare,
 };
 pub use scheduler::{Dispatch, Scheduler};
+pub use sharded::ShardedCoordinator;
 pub use sim_driver::{AppSpec, SimConfig, SimDriver, SimOutcome};
 pub use task::{Task, TaskId, TaskRecord, TaskState};
 pub use transfer::TransferPlanner;

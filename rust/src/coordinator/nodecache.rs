@@ -182,6 +182,21 @@ impl NodeCacheDirectory {
         self.nodes.remove(&node);
     }
 
+    /// Take a node's snapshot out of this ledger (ownership transfer).
+    /// The sharded coordinator uses `take`/`put` to migrate a node's
+    /// surviving disk state between shards when a *lent* worker dies on
+    /// a shard that does not own its node — the bytes are on one
+    /// physical disk and must be recorded in exactly one ledger.
+    pub fn take(&mut self, node: NodeId) -> Option<NodeCacheEntry> {
+        self.nodes.remove(&node)
+    }
+
+    /// Install a snapshot taken from another ledger (see [`Self::take`];
+    /// replaces any existing entry — one disk, one record).
+    pub fn put(&mut self, node: NodeId, entry: NodeCacheEntry) {
+        self.nodes.insert(node, entry);
+    }
+
     /// Nodes with surviving disk state.
     pub fn len(&self) -> usize {
         self.nodes.len()
@@ -315,6 +330,21 @@ mod tests {
         dir.remove(3);
         assert!(dir.is_empty(), "wiped node leaves no snapshot");
         dir.remove(3); // double remove is a no-op
+    }
+
+    #[test]
+    fn take_and_put_move_a_snapshot_between_ledgers() {
+        let mut a = NodeCacheDirectory::new();
+        let mut w = worker_on(6, 1_000);
+        w.insert_cached(0, ComponentKind::DepsPackage, 30, None);
+        a.persist(&w);
+        let entry = a.take(6).expect("snapshot exists");
+        assert!(a.is_empty(), "take removes the source record");
+        assert!(a.take(6).is_none(), "second take finds nothing");
+        let mut b = NodeCacheDirectory::new();
+        b.put(6, entry);
+        assert_eq!(b.entry(6).unwrap().occupancy(), 30);
+        assert!(b.check_capacity());
     }
 
     #[test]

@@ -73,9 +73,11 @@
 //!   [`SchedulerView::queued_by_context`],
 //!   [`SchedulerView::warm_worker_count`] (warm workers, not pool),
 //!   [`SchedulerView::queued_sizes_of`] (distinct batch sizes).
-//! * **O(queue)** — [`SchedulerView::queued`]. Reference ports and
+//! * **O(queue)** — `queued_prefix(usize::MAX)`. Reference ports and
 //!   tests only; per-round policy code must bound its reads with the
-//!   prefix/per-context accessors (see `queued`'s contract note).
+//!   prefix/per-context accessors (see `queued_prefix`'s contract
+//!   note). The old unbounded `queued()` convenience is gone from the
+//!   public surface so the expensive case is always explicit.
 //!
 //! [`ContextRecipe::with_weight`]: super::context::ContextRecipe::with_weight
 
@@ -219,30 +221,18 @@ impl<'a> SchedulerView<'a> {
         self.sched.cost_model()
     }
 
-    /// Every ready task in queue order — **O(queue backlog)**.
+    /// The first `limit` ready tasks in queue order — O(limit).
     ///
-    /// Bounded-prefix contract: per-round policy code must NOT call
-    /// this — with a million-task backlog it clones the whole queue
-    /// every dispatch round. It exists for reference implementations
-    /// and tests (the golden decision-parity ports replay full-queue
-    /// semantics); every shipped policy bounds its reads with
-    /// [`queued_prefix`] / [`queued_of_context`] plus the O(1)
-    /// counters, keeping a round O(look-ahead + idle) regardless of
-    /// backlog depth.
+    /// Bounded-prefix contract: per-round policy code must bound its
+    /// reads — with a million-task backlog an unbounded walk clones
+    /// the whole queue every dispatch round. There is deliberately no
+    /// unbounded `queued()` on this surface anymore; reference ports
+    /// and tests that replay full-queue semantics spell the intent out
+    /// with `queued_prefix(usize::MAX)`. Shipped policies combine this
+    /// with [`queued_of_context`] and the O(1) counters, keeping a
+    /// round O(look-ahead + idle) regardless of backlog depth.
     ///
-    /// [`queued_prefix`]: Self::queued_prefix
     /// [`queued_of_context`]: Self::queued_of_context
-    pub fn queued(&self) -> Vec<QueuedTask> {
-        self.queued_prefix(usize::MAX)
-    }
-
-    /// The first `limit` ready tasks in queue order. Policies that can
-    /// only consume a bounded slice of the backlog per round (e.g.
-    /// [`AffinityGreedy`]: warm-pairing look-ahead + one task per idle
-    /// worker) should use this instead of [`queued`] so a deep queue
-    /// costs O(limit), not O(queue), per dispatch round.
-    ///
-    /// [`queued`]: Self::queued
     pub fn queued_prefix(&self, limit: usize) -> Vec<QueuedTask> {
         self.sched
             .ready_tasks()
@@ -376,9 +366,9 @@ impl<'a> SchedulerView<'a> {
 
     /// The first `limit` ready tasks *of one context*, in queue order —
     /// O(limit · log), independent of the backlog size. Within a
-    /// context this is the same order [`queued`] would surface.
+    /// context this is the same order [`queued_prefix`] would surface.
     ///
-    /// [`queued`]: Self::queued
+    /// [`queued_prefix`]: Self::queued_prefix
     pub fn queued_of_context(
         &self,
         ctx: ContextId,

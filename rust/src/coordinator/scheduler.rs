@@ -46,7 +46,7 @@ use super::context::{
 use super::costmodel::CostModel;
 use super::library::LibraryState;
 use super::metrics::CacheStats;
-use super::nodecache::NodeCacheDirectory;
+use super::nodecache::{NodeCacheDirectory, NodeCacheEntry};
 use super::policy::{
     AffinityGreedy, HoldAll, PlacementDecision, PlacementPolicy,
     SchedulerView,
@@ -239,6 +239,11 @@ pub struct Scheduler {
     /// default: every emission site guards on [`TraceHandle::on`], so
     /// a disabled trace costs one branch and builds no event.
     trace: TraceHandle,
+    /// Shard identity stamped onto this scheduler's trace events when it
+    /// runs as one shard of a [`super::sharded::ShardedCoordinator`].
+    /// `None` (the default, and the single-shard degenerate case) emits
+    /// no shard field at all, so unsharded traces stay byte-identical.
+    shard_id: Option<u32>,
 }
 
 impl Scheduler {
@@ -324,6 +329,7 @@ impl Scheduler {
             node_reclaim_at: HashMap::new(),
             clock_hint: 0.0,
             trace: TraceHandle::null(),
+            shard_id: None,
         }
     }
 
@@ -339,6 +345,19 @@ impl Scheduler {
     pub fn with_trace(mut self, trace: TraceHandle) -> Self {
         self.trace = trace;
         self
+    }
+
+    /// Stamp this scheduler's trace events with a shard id (builder
+    /// style). Only the multi-shard coordinator sets this; replay
+    /// tooling uses it to attribute events to shards.
+    pub fn with_shard_id(mut self, shard: u32) -> Self {
+        self.shard_id = Some(shard);
+        self
+    }
+
+    /// The shard id stamped onto this scheduler's events, if any.
+    pub fn shard_id(&self) -> Option<u32> {
+        self.shard_id
     }
 
     /// The attached trace handle (drivers emit their own events —
@@ -486,6 +505,7 @@ impl Scheduler {
                 worker: id,
                 node: node_id,
                 capacity: self.cache_capacity_bytes,
+                shard: self.shard_id,
             });
         }
         if self.policy.caches_files() {
@@ -663,6 +683,108 @@ impl Scheduler {
         let w = self.workers.remove(&id)?;
         self.purge_worker_indexes(id, &w);
         Some(w)
+    }
+
+    // ------------------------------------------------ shard worker moves
+
+    /// Reserve the worker-id space: the next [`Self::worker_join`] uses
+    /// exactly `id`. The sharded coordinator owns the global id space
+    /// and calls this before every routed join, so worker ids stay
+    /// unique across shards (the obs replay ledger keys workers
+    /// globally, shard-blind).
+    // pcm-lint: allow(untraced|unindexed) -- id-space bookkeeping ahead
+    // of a join; the join itself emits WorkerJoin and moves the indexes.
+    pub fn set_next_worker_id(&mut self, id: WorkerId) {
+        debug_assert!(
+            id >= self.next_worker_id,
+            "worker ids are globally monotone"
+        );
+        self.next_worker_id = id;
+    }
+
+    /// Offset this scheduler's synthetic prefetch-dispatch ids by
+    /// `base` on top of [`Self::PREFETCH_ID_BASE`]. Each shard of a
+    /// sharded coordinator gets a disjoint base, so a prefetch id both
+    /// stays globally unique and encodes its owning shard.
+    // pcm-lint: allow(untraced|unindexed) -- id-space bookkeeping; the
+    // prefetch dispatches themselves are traced in apply_decisions.
+    pub fn set_prefetch_seq_base(&mut self, base: u64) {
+        debug_assert_eq!(
+            self.next_prefetch_seq, 0,
+            "prefetch base is set before any prefetch is issued"
+        );
+        self.next_prefetch_seq = base;
+    }
+
+    /// Lend an **idle** worker out of this scheduler (work-stealing):
+    /// it leaves the worker table and every worker-keyed index carrying
+    /// its full cache and library state, to be handed to a backlogged
+    /// peer shard via [`Self::worker_adopt`]. Busy workers are never
+    /// lent (`None`). No trace event is emitted: globally the worker
+    /// never left the pool, and the replay ledger keeps attributing it
+    /// to its one `WorkerJoin`.
+    // pcm-lint: allow(untraced) -- lend/return moves a worker between
+    // shard instances of one pool; its join/lost lifecycle is traced
+    // where it actually happens.
+    pub fn worker_lend(&mut self, id: WorkerId) -> Option<Worker> {
+        if !self.workers.get(&id)?.is_idle() {
+            return None;
+        }
+        // pcm-lint: allow(panic) -- the get above proved membership.
+        let w = self.workers.remove(&id).unwrap();
+        self.purge_worker_indexes(id, &w);
+        Some(w)
+    }
+
+    /// Adopt a worker lent by a peer shard (inverse of
+    /// [`Self::worker_lend`]): it enters the worker table and every
+    /// index with cache and library state intact, immediately
+    /// dispatchable. Returns its (unchanged) id.
+    // pcm-lint: allow(untraced) -- see worker_lend: no globally
+    // observable state changes, the worker never left the pool.
+    pub fn worker_adopt(&mut self, worker: Worker) -> WorkerId {
+        let id = worker.id;
+        debug_assert!(
+            worker.is_idle(),
+            "only idle workers move between shards"
+        );
+        let held: Vec<(ContextId, ComponentKind)> =
+            worker.cache_contents().map(|((c, k), _)| (c, k)).collect();
+        let prev = self.workers.insert(id, worker);
+        debug_assert!(
+            prev.is_none(),
+            "adopted an id this scheduler already owns"
+        );
+        self.idle.insert(id);
+        if self.policy.caches_files() {
+            for (c, k) in held {
+                self.peer_inc(c, k);
+            }
+        }
+        self.refresh_warmth(id);
+        id
+    }
+
+    /// Take `node`'s surviving disk snapshot out of this scheduler's
+    /// ledger. The sharded coordinator migrates a snapshot to the
+    /// node's home shard when a lent worker dies away from home — one
+    /// physical disk, exactly one ledger entry.
+    // pcm-lint: allow(untraced|unindexed) -- ledger ownership transfer;
+    // the persist/restore bracketing it are the traced transitions.
+    pub fn take_node_cache(&mut self, node: NodeId) -> Option<NodeCacheEntry> {
+        self.node_caches.take(node)
+    }
+
+    /// Install a node snapshot taken from a peer shard's ledger (see
+    /// [`Self::take_node_cache`]).
+    // pcm-lint: allow(untraced|unindexed) -- see take_node_cache.
+    pub fn put_node_cache(&mut self, node: NodeId, entry: NodeCacheEntry) {
+        self.node_caches.put(node, entry);
+    }
+
+    /// Connected idle workers — O(1) (steal-pass input).
+    pub fn idle_count(&self) -> usize {
+        self.idle.len()
     }
 
     pub fn worker(&self, id: WorkerId) -> Option<&Worker> {

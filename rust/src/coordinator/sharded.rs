@@ -1,0 +1,821 @@
+//! Sharded coordinator: N [`Scheduler`] shards plus work-stealing.
+//!
+//! Partitions the context registry across `N` shard instances of the
+//! existing scheduler — each shard owns a disjoint subset of contexts
+//! (their queues, warm sets and incremental indexes from the O(changes)
+//! dispatch work) and runs its own dispatch rounds against its own
+//! [`PlacementPolicy`](super::policy::PlacementPolicy). Workers have a
+//! **home shard** keyed by node id (`node % shards`), and a
+//! work-stealing layer lends idle workers from drained shards to
+//! backlogged peers:
+//!
+//! * **Lend** — after the per-shard dispatch rounds, any shard with a
+//!   backlog and no idle workers borrows the lowest-id idle worker of a
+//!   shard with an empty queue, via [`Scheduler::worker_lend`] /
+//!   [`Scheduler::worker_adopt`] (cache and library state travel with
+//!   the worker). A worker is owned by exactly one shard at any time —
+//!   the lend removes it from every lender index before the adopt
+//!   inserts it anywhere.
+//! * **Return** — a lent worker goes home as soon as it is idle and
+//!   either its borrower has drained or its home shard has backlog
+//!   again, so steady state converges on the home partition.
+//!
+//! Identifier spaces stay global: the coordinator owns worker-id
+//! allocation (shards are told the next id before every routed join)
+//! and gives each shard a disjoint prefetch-sequence base, so every
+//! dispatch id in a trace is unique and prefetch ids encode their
+//! owning shard. Trace events flow through one shared sink; each
+//! shard's scheduler stamps its events with its shard id (multi-shard
+//! runs only — a single-shard coordinator emits byte-identical traces
+//! to an unsharded [`Scheduler`], which is the equivalence `pcm
+//! experiment shards` proves at trace level).
+//!
+//! Both drivers ([`super::sim_driver`], [`crate::live`]) drive this
+//! coordinator exclusively; `shards = 1` is the degenerate — and
+//! default — configuration.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Node, NodeId};
+use crate::obs::{TraceEvent, TraceHandle};
+
+use super::context::{ContextId, ContextPolicy, ContextRecipe};
+use super::costmodel::CostModel;
+use super::metrics::CacheStats;
+use super::policy::PolicyKind;
+use super::scheduler::{Dispatch, PhaseKind, Progress, Scheduler};
+use super::task::{Task, TaskId, TaskRecord};
+use super::transfer::TransferPlanner;
+use super::worker::{Worker, WorkerId};
+
+/// Bit offset of the shard index inside a synthetic prefetch id: shard
+/// `k` draws ids from `PREFETCH_ID_BASE + (k << 40)`, leaving 2^40
+/// sequence numbers per shard (no run issues remotely that many) while
+/// keeping the id below the `1 << 62` base's headroom for any
+/// realistic shard count.
+const PREFETCH_SHARD_SHIFT: u64 = 40;
+
+/// N scheduler shards behind the single-coordinator API both drivers
+/// program against. See the module docs for the ownership rules.
+#[derive(Debug)]
+pub struct ShardedCoordinator {
+    shards: Vec<Scheduler>,
+    /// Context → owning shard (fixed at construction).
+    ctx_shard: HashMap<ContextId, usize>,
+    /// Task → owning shard (the submit route, kept for O(1) completion
+    /// routing; prefetch ids route arithmetically instead).
+    task_shard: HashMap<TaskId, usize>,
+    /// Worker → shard currently holding it (moves on lend/return).
+    worker_shard: HashMap<WorkerId, usize>,
+    /// Worker → home shard (`node % shards`, fixed per incarnation).
+    home_shard: HashMap<WorkerId, usize>,
+    /// Globally monotone worker-id allocator (shards are told).
+    next_worker_id: WorkerId,
+    /// Workers lent to a backlogged peer shard over the run.
+    steals: u64,
+    trace: TraceHandle,
+}
+
+impl ShardedCoordinator {
+    /// Build `shards` scheduler shards over one shared context registry.
+    /// The shard count is clamped to the registry size (a shard without
+    /// a context would never receive work) and to a minimum of 1.
+    /// Contexts are assigned round-robin in ascending id order, so two
+    /// coordinators built from the same registry agree on the partition.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        shards: usize,
+        policy: ContextPolicy,
+        mut recipes: Vec<ContextRecipe>,
+        fanout_cap: u32,
+        cost: CostModel,
+        cache_capacity_bytes: u64,
+        placement: PolicyKind,
+        trace: TraceHandle,
+    ) -> Self {
+        assert!(!recipes.is_empty(), "context registry must not be empty");
+        recipes.sort_by_key(|r| r.id);
+        let n = shards.max(1).min(recipes.len());
+        let ctx_shard: HashMap<ContextId, usize> = recipes
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.id, i % n))
+            .collect();
+        let shards = (0..n)
+            .map(|k| {
+                // Every shard registers the full registry (recipes are
+                // metadata; a lent worker may carry any context's bytes
+                // into any shard) — only tasks are partitioned.
+                let mut s = Scheduler::with_registry(
+                    policy,
+                    recipes.clone(),
+                    TransferPlanner::new(fanout_cap),
+                    cost.clone(),
+                    cache_capacity_bytes,
+                )
+                .with_policy(placement.build())
+                .with_trace(trace.clone());
+                if n > 1 {
+                    s = s.with_shard_id(k as u32);
+                }
+                s.set_prefetch_seq_base((k as u64) << PREFETCH_SHARD_SHIFT);
+                s
+            })
+            .collect();
+        Self {
+            shards,
+            ctx_shard,
+            task_shard: HashMap::new(),
+            worker_shard: HashMap::new(),
+            home_shard: HashMap::new(),
+            next_worker_id: 0,
+            steals: 0,
+            trace,
+        }
+    }
+
+    // ------------------------------------------------------------ routing
+
+    /// Number of shard instances (after clamping).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning a context's queue.
+    pub fn shard_of_ctx(&self, ctx: ContextId) -> usize {
+        self.ctx_shard.get(&ctx).copied().unwrap_or(0)
+    }
+
+    /// Home shard of a node (and of every worker incarnation on it).
+    /// Live drivers route worker completions to this shard's channel.
+    pub fn home_shard_of_node(&self, node: NodeId) -> usize {
+        node as usize % self.shards.len()
+    }
+
+    /// Shard encoded in a synthetic prefetch-dispatch id.
+    fn shard_of_prefetch(&self, id: TaskId) -> usize {
+        debug_assert!(Scheduler::is_prefetch_id(id));
+        (((id - Scheduler::PREFETCH_ID_BASE) >> PREFETCH_SHARD_SHIFT)
+            as usize)
+            % self.shards.len()
+    }
+
+    /// Shard owning any dispatch id (task or prefetch), if known.
+    fn shard_of_dispatch(&self, id: TaskId) -> Option<usize> {
+        if Scheduler::is_prefetch_id(id) {
+            Some(self.shard_of_prefetch(id))
+        } else {
+            self.task_shard.get(&id).copied()
+        }
+    }
+
+    // ------------------------------------------------------ workload flow
+
+    /// Route each task to its context's shard (relative order within a
+    /// shard is submission order, so per-context FIFO is preserved).
+    // pcm-lint: allow(untraced) -- each shard's submit_tasks emits
+    // task_submit through the shared sink.
+    pub fn submit_tasks(&mut self, tasks: Vec<Task>) {
+        let mut per: Vec<Vec<Task>> = vec![Vec::new(); self.shards.len()];
+        for t in tasks {
+            let k = self.shard_of_ctx(t.context);
+            self.task_shard.insert(t.id, k);
+            per[k].push(t);
+        }
+        for (k, ts) in per.into_iter().enumerate() {
+            if !ts.is_empty() {
+                self.shards[k].submit_tasks(ts);
+            }
+        }
+    }
+
+    /// Register a worker on its node's home shard. The coordinator owns
+    /// the global id space: the shard is told which id to use, so ids
+    /// stay unique across shards (the trace replay ledger keys workers
+    /// globally).
+    // pcm-lint: allow(untraced) -- the home shard's worker_join emits
+    // worker_join stamped with its shard id.
+    pub fn worker_join(&mut self, node: Node, now: f64) -> WorkerId {
+        let k = self.home_shard_of_node(node.id);
+        self.shards[k].set_next_worker_id(self.next_worker_id);
+        let wid = self.shards[k].worker_join(node, now);
+        debug_assert_eq!(wid, self.next_worker_id);
+        self.next_worker_id = wid + 1;
+        self.worker_shard.insert(wid, k);
+        self.home_shard.insert(wid, k);
+        wid
+    }
+
+    /// Evict a worker wherever it currently is. If it died while lent
+    /// away from home, its node's surviving disk snapshot migrates to
+    /// the home shard's ledger — the node rejoins through its home
+    /// shard, and one physical disk must have exactly one ledger entry.
+    // pcm-lint: allow(untraced) -- the owning shard's worker_evict
+    // emits worker_lost / cache_persist.
+    pub fn worker_evict(&mut self, id: WorkerId) -> Option<(TaskId, u64)> {
+        let cur = self.worker_shard.remove(&id)?;
+        let home = self.home_shard.remove(&id).unwrap_or(cur);
+        let node = self.shards[cur].worker(id).map(|w| w.node_id());
+        let freed = self.shards[cur].worker_evict(id);
+        if cur != home {
+            if let Some(node) = node {
+                if let Some(entry) = self.shards[cur].take_node_cache(node) {
+                    self.shards[home].put_node_cache(node, entry);
+                }
+            }
+        }
+        freed
+    }
+
+    /// A phase finished: route to the owning shard (tasks by submit
+    /// route, prefetches by the shard encoded in their id).
+    // pcm-lint: allow(untraced|unindexed) -- pure route-and-delegate;
+    // the owning shard's phase_done traces and indexes the transition.
+    pub fn phase_done(
+        &mut self,
+        task: TaskId,
+        phase: usize,
+    ) -> Option<PhaseKind> {
+        let k = self.shard_of_dispatch(task)?;
+        self.shards[k].phase_done(task, phase)
+    }
+
+    /// Record a task completion on its owning shard.
+    // pcm-lint: allow(untraced|unindexed) -- pure route-and-delegate;
+    // the owning shard's task_done traces and indexes the completion.
+    pub fn task_done(&mut self, task: TaskId, record: TaskRecord) {
+        if let Some(k) = self.shard_of_dispatch(task) {
+            self.shards[k].task_done(task, record);
+        }
+    }
+
+    /// Drain every shard's pending LRU evictions (shard order).
+    // pcm-lint: allow(untraced|unindexed) -- drains queues the shards'
+    // cache choke points already traced and indexed.
+    pub fn take_evictions(&mut self) -> Vec<(WorkerId, ContextId)> {
+        self.shards.iter_mut().flat_map(|s| s.take_evictions()).collect()
+    }
+
+    // --------------------------------------------------- dispatch + steal
+
+    /// One coordinator-wide dispatch round at `now`: every shard runs
+    /// its own timed round (emitting its own `dispatch_round` event),
+    /// then the work-stealing pass lends idle workers of drained shards
+    /// to backlogged peers (re-dispatching each borrower), then lent
+    /// workers whose borrower drained — or whose home backlogged — go
+    /// home. Returns every dispatch decided, in decision order.
+    // pcm-lint: allow(untraced|unindexed) -- shard_round emits each
+    // shard's dispatch_round; the steal/return passes maintain the
+    // worker_shard routing map.
+    pub fn dispatch_all(&mut self, now: f64) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        for k in 0..self.shards.len() {
+            self.shards[k].set_clock_hint(now);
+            self.shard_round(k, now, &mut out);
+        }
+        self.steal_pass(now, &mut out);
+        self.return_pass(now, &mut out);
+        out
+    }
+
+    /// One timed dispatch round on shard `k` (the per-shard analogue of
+    /// the round the drivers used to time themselves).
+    fn shard_round(&mut self, k: usize, now: f64, out: &mut Vec<Dispatch>) {
+        let s = &mut self.shards[k];
+        let t0 = s.trace().on().then(std::time::Instant::now);
+        let dispatches = s.try_dispatch();
+        if let Some(t0) = t0 {
+            let assigned =
+                dispatches.iter().filter(|d| !d.is_prefetch()).count() as u64;
+            let prefetched = dispatches.len() as u64 - assigned;
+            let ev = TraceEvent::DispatchRound {
+                at: now,
+                policy: s.placement_name().to_string(),
+                assigned,
+                prefetched,
+                queued: s.ready_count() as u64,
+                wall_s: t0.elapsed().as_secs_f64(),
+                shard: s.shard_id(),
+            };
+            s.trace().emit(ev);
+        }
+        out.extend(dispatches);
+    }
+
+    /// Lend idle workers of drained shards to backlogged peers. Each
+    /// iteration moves exactly one worker and re-dispatches the
+    /// borrower, so the loop terminates: a lent worker either starts a
+    /// task (leaves the idle pool) or parks idle in a shard that then
+    /// no longer qualifies as a borrower — and a shard with backlog
+    /// never qualifies as a lender.
+    fn steal_pass(&mut self, now: f64, out: &mut Vec<Dispatch>) {
+        let n = self.shards.len();
+        loop {
+            let Some(borrower) = (0..n).find(|&k| {
+                self.shards[k].ready_count() > 0
+                    && self.shards[k].idle_count() == 0
+            }) else {
+                break;
+            };
+            let Some(lender) = (0..n).find(|&k| {
+                k != borrower
+                    && self.shards[k].ready_count() == 0
+                    && self.shards[k].idle_count() > 0
+            }) else {
+                break;
+            };
+            // Lowest idle id first: deterministic, and (ids being
+            // join-ordered) biased toward the longest-lived caches.
+            let Some(&wid) = self.shards[lender].idle_worker_ids().first()
+            else {
+                break;
+            };
+            let Some(w) = self.shards[lender].worker_lend(wid) else {
+                break;
+            };
+            self.shards[borrower].worker_adopt(w);
+            self.worker_shard.insert(wid, borrower);
+            self.steals += 1;
+            self.shard_round(borrower, now, out);
+        }
+    }
+
+    /// Send lent workers home once they are idle and either their
+    /// borrower has drained or their home shard has backlog again. A
+    /// home shard that regains a worker with work waiting dispatches it
+    /// immediately.
+    fn return_pass(&mut self, now: f64, out: &mut Vec<Dispatch>) {
+        let mut away: Vec<(WorkerId, usize, usize)> = self
+            .worker_shard
+            .iter()
+            .filter_map(|(&w, &cur)| {
+                let home = *self.home_shard.get(&w)?;
+                (home != cur).then_some((w, cur, home))
+            })
+            .collect();
+        away.sort_unstable();
+        let mut redispatch = Vec::new();
+        for (wid, cur, home) in away {
+            if self.shards[cur].ready_count() > 0
+                && self.shards[home].ready_count() == 0
+            {
+                continue; // still needed where it is
+            }
+            // `worker_lend` refuses busy workers, which is exactly the
+            // "idle in the borrower" condition.
+            if let Some(w) = self.shards[cur].worker_lend(wid) {
+                self.shards[home].worker_adopt(w);
+                self.worker_shard.insert(wid, home);
+                if self.shards[home].ready_count() > 0 {
+                    redispatch.push(home);
+                }
+            }
+        }
+        redispatch.dedup();
+        for k in redispatch {
+            self.shard_round(k, now, out);
+        }
+    }
+
+    // ------------------------------------------------------- pass-through
+
+    /// The shared trace handle (drivers emit run-level events — run
+    /// start, node churn — through the same sink the shards stamp).
+    pub fn trace(&self) -> &TraceHandle {
+        &self.trace
+    }
+
+    pub fn worker(&self, id: WorkerId) -> Option<&Worker> {
+        let k = self.worker_shard.get(&id)?;
+        self.shards[*k].worker(id)
+    }
+
+    /// The live worker on `node`, wherever it is currently lent.
+    pub fn worker_on_node(&self, node: NodeId) -> Option<WorkerId> {
+        self.shards.iter().find_map(|s| s.worker_on_node(node))
+    }
+
+    /// Broadcast the driver clock to every shard (trace stamps and
+    /// lifetime arithmetic).
+    // pcm-lint: allow(untraced|unindexed) -- clock broadcast; no state
+    // transition to trace or index.
+    pub fn set_clock_hint(&mut self, now: f64) {
+        for s in &mut self.shards {
+            s.set_clock_hint(now);
+        }
+    }
+
+    /// Broadcast a node's next-reclamation forecast (the worker may be
+    /// lent to any shard when the forecast matters).
+    // pcm-lint: allow(untraced|unindexed) -- forecast broadcast; each
+    // shard indexes its own placement hint.
+    pub fn set_node_reclaim_hint(&mut self, node: NodeId, at: Option<f64>) {
+        for s in &mut self.shards {
+            s.set_node_reclaim_hint(node, at);
+        }
+    }
+
+    /// Drop a node's disk snapshot from whichever ledger holds it.
+    // pcm-lint: allow(untraced|unindexed) -- ledger broadcast; the
+    // holding shard's drop emits the trace event.
+    pub fn drop_node_cache(&mut self, node: NodeId) {
+        for s in &mut self.shards {
+            s.drop_node_cache(node);
+        }
+    }
+
+    /// Bump a context's registry version on every shard (the registry
+    /// is replicated; versions must agree wherever a lent worker's
+    /// cache is judged for staleness). Returns the owning shard's new
+    /// version.
+    // pcm-lint: allow(untraced|unindexed) -- registry broadcast; every
+    // shard's bump emits version_bump and refreshes warmth.
+    pub fn bump_context_version(&mut self, ctx: ContextId) -> Option<u32> {
+        let owner = self.shard_of_ctx(ctx);
+        let mut v = None;
+        for (k, s) in self.shards.iter_mut().enumerate() {
+            let bumped = s.bump_context_version(ctx);
+            if k == owner {
+                v = bumped;
+            }
+        }
+        v
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.shards.iter().all(|s| s.all_done())
+    }
+
+    pub fn ready_count(&self) -> usize {
+        self.shards.iter().map(|s| s.ready_count()).sum()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.shards.iter().map(|s| s.running_count()).sum()
+    }
+
+    pub fn connected_workers(&self) -> usize {
+        self.shards.iter().map(|s| s.connected_workers()).sum()
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.shards.iter().map(|s| s.total_tasks()).sum()
+    }
+
+    /// Progress counters summed across shards.
+    pub fn progress(&self) -> Progress {
+        let mut p = Progress::default();
+        for s in self.shards.iter().map(|s| s.progress()) {
+            p.completed_tasks += s.completed_tasks;
+            p.completed_inferences += s.completed_inferences;
+            p.evicted_inferences += s.evicted_inferences;
+            p.evictions += s.evictions;
+        }
+        p
+    }
+
+    /// Completion records of every shard. Single-shard keeps the
+    /// shard's completion order exactly (the unsharded contract);
+    /// multi-shard merges by completion time (ties by task id) so the
+    /// result is independent of shard count for identical schedules.
+    pub fn records(&self) -> Vec<TaskRecord> {
+        if self.shards.len() == 1 {
+            return self.shards[0].records().to_vec();
+        }
+        let mut all: Vec<TaskRecord> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.records().iter().cloned())
+            .collect();
+        all.sort_by(|a, b| {
+            a.completed_at
+                .total_cmp(&b.completed_at)
+                .then(a.task.cmp(&b.task))
+        });
+        all
+    }
+
+    /// Per-context cache counters merged across shards. Counters for
+    /// one context can land on several shards (a lent worker's LRU
+    /// evictions are charged where it was borrowed), so this sums
+    /// field-wise by context.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut merged = CacheStats::default();
+        for s in &self.shards {
+            for (ctx, c) in &s.cache_stats().per_context {
+                let m = merged.ctx_mut(*ctx);
+                m.hits += c.hits;
+                m.misses += c.misses;
+                m.evictions += c.evictions;
+                m.prefetched += c.prefetched;
+                m.staged_bytes += c.staged_bytes;
+                m.warm_restored += c.warm_restored;
+                m.warm_restored_bytes += c.warm_restored_bytes;
+                m.stale_dropped += c.stale_dropped;
+            }
+        }
+        merged
+    }
+
+    pub fn task_meta(&self, id: TaskId) -> Option<(u32, u64)> {
+        let k = self.task_shard.get(&id)?;
+        self.shards[*k].task_meta(id)
+    }
+
+    pub fn task_context(&self, id: TaskId) -> Option<ContextId> {
+        let k = self.task_shard.get(&id)?;
+        self.shards[*k].task_context(id)
+    }
+
+    pub fn task_range(&self, id: TaskId) -> Option<(u64, u64)> {
+        let k = self.task_shard.get(&id)?;
+        self.shards[*k].task_range(id)
+    }
+
+    /// Context of any dispatch id (tasks and prefetch ids alike).
+    pub fn dispatch_context(&self, id: TaskId) -> Option<ContextId> {
+        let k = self.shard_of_dispatch(id)?;
+        self.shards[k].dispatch_context(id)
+    }
+
+    /// The (replicated) registry — every shard holds the same recipes.
+    pub fn recipes(&self) -> impl Iterator<Item = &ContextRecipe> {
+        self.shards[0].recipes()
+    }
+
+    /// Name of the placement policy every shard runs.
+    pub fn placement_name(&self) -> &'static str {
+        self.shards[0].placement_name()
+    }
+
+    /// Workers lent to a backlogged peer shard over the run.
+    pub fn steals(&self) -> u64 {
+        self.steals
+    }
+
+    // --------------------------------------------------------- invariants
+
+    /// Task conservation on every shard, plus routing coherence: the
+    /// coordinator's task routes cover exactly the shards' tasks.
+    pub fn check_conservation(&self) -> bool {
+        self.shards.iter().all(|s| s.check_conservation())
+            && self.task_shard.len() == self.total_tasks()
+    }
+
+    /// Index coherence on every shard, plus worker-routing coherence:
+    /// every routed worker exists in exactly the shard the coordinator
+    /// says, and no worker is owned by two shards.
+    pub fn check_index_consistency(&self) -> bool {
+        if !self.shards.iter().all(|s| s.check_index_consistency()) {
+            return false;
+        }
+        if self.worker_shard.len() != self.connected_workers() {
+            return false;
+        }
+        if self.home_shard.len() != self.worker_shard.len() {
+            return false;
+        }
+        self.worker_shard.iter().all(|(wid, &k)| {
+            self.shards[k].worker(*wid).is_some()
+                && self
+                    .shards
+                    .iter()
+                    .enumerate()
+                    .all(|(j, s)| j == k || s.worker(*wid).is_none())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuModel;
+
+    fn two_ctx_recipes() -> Vec<ContextRecipe> {
+        vec![
+            ContextRecipe::custom(0, "a", 1_000_000, 2_000_000),
+            ContextRecipe::custom(1, "b", 1_000_000, 2_000_000),
+        ]
+    }
+
+    fn mk(shards: usize) -> ShardedCoordinator {
+        let mut cost = CostModel::default();
+        cost.deterministic = true;
+        ShardedCoordinator::new(
+            shards,
+            ContextPolicy::Pervasive,
+            two_ctx_recipes(),
+            3,
+            cost,
+            crate::coordinator::worker::DEFAULT_CACHE_CAPACITY_BYTES,
+            PolicyKind::Greedy,
+            TraceHandle::null(),
+        )
+    }
+
+    fn node(id: u32) -> Node {
+        Node { id, gpu: GpuModel::A10 }
+    }
+
+    /// Interleaved two-context workload with dense ids.
+    fn tasks(per_ctx: u64) -> Vec<Task> {
+        let mut out = Vec::new();
+        let mut id = 0;
+        for i in 0..per_ctx {
+            for ctx in 0..2u32 {
+                out.push(Task::new(id, i * 10, 10, ctx));
+                id += 1;
+            }
+        }
+        out
+    }
+
+    fn complete(c: &mut ShardedCoordinator, d: &Dispatch, now: f64) {
+        for i in 0..d.phases.len() {
+            c.phase_done(d.task, i);
+        }
+        if d.is_prefetch() {
+            return;
+        }
+        let (attempts, inferences) = c.task_meta(d.task).unwrap();
+        let record = TaskRecord {
+            task: d.task,
+            context: c.task_context(d.task).unwrap(),
+            worker: d.worker,
+            gpu: GpuModel::A10,
+            attempts,
+            inferences,
+            dispatched_at: now,
+            completed_at: now + 1.0,
+            context_s: 0.0,
+            execute_s: 1.0,
+        };
+        c.task_done(d.task, record);
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_clamped() {
+        let c = mk(2);
+        assert_eq!(c.shard_count(), 2);
+        assert_eq!(c.shard_of_ctx(0), 0);
+        assert_eq!(c.shard_of_ctx(1), 1);
+        assert_eq!(c.home_shard_of_node(4), 0);
+        assert_eq!(c.home_shard_of_node(7), 1);
+        // More shards than contexts clamps to the registry size.
+        assert_eq!(mk(8).shard_count(), 2);
+        assert_eq!(mk(0).shard_count(), 1);
+    }
+
+    #[test]
+    fn worker_ids_are_globally_unique_across_shards() {
+        let mut c = mk(2);
+        let ids: Vec<WorkerId> =
+            (0..6).map(|i| c.worker_join(node(i), 0.0)).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6, "no id reused across shards: {ids:?}");
+        assert_eq!(c.connected_workers(), 6);
+        assert!(c.check_index_consistency());
+    }
+
+    #[test]
+    fn tasks_route_to_their_context_shard_and_complete() {
+        let mut c = mk(2);
+        c.submit_tasks(tasks(2));
+        assert_eq!(c.ready_count(), 4);
+        for i in 0..4 {
+            c.worker_join(node(i), 0.0);
+        }
+        let mut now = 0.0;
+        while !c.all_done() {
+            let ds = c.dispatch_all(now);
+            assert!(
+                !ds.is_empty() || c.running_count() > 0,
+                "stalled with {} ready",
+                c.ready_count()
+            );
+            for d in &ds {
+                complete(&mut c, d, now);
+            }
+            now += 10.0;
+            assert!(c.check_conservation());
+            assert!(c.check_index_consistency());
+        }
+        assert_eq!(c.progress().completed_tasks, 4);
+        let recs = c.records();
+        assert_eq!(recs.len(), 4);
+        // Two contexts' tasks each completed on their own shard's
+        // workers (home partition: even nodes → shard 0, odd → 1).
+        for r in &recs {
+            let wnode = r.worker as u32; // join order = node order here
+            assert_eq!(
+                c.shard_of_ctx(r.context),
+                c.home_shard_of_node(wnode),
+                "no steal was needed in the balanced run"
+            );
+        }
+        assert_eq!(c.steals(), 0);
+    }
+
+    #[test]
+    fn backlogged_shard_borrows_idle_workers_and_returns_them() {
+        let mut c = mk(2);
+        // Ctx 0 (shard 0) has a deep backlog; ctx 1 (shard 1) has none.
+        let work: Vec<Task> =
+            (0..8).map(|i| Task::new(i, i * 10, 10, 0)).collect();
+        c.submit_tasks(work);
+        // Two workers per shard.
+        for i in 0..4 {
+            c.worker_join(node(i), 0.0);
+        }
+        let ds = c.dispatch_all(0.0);
+        // Shard 0's two workers take tasks, then shard 1's idle pair is
+        // lent over and dispatched too.
+        assert_eq!(ds.len(), 4, "all four workers busy: {ds:?}");
+        assert_eq!(c.steals(), 2, "both idle workers were lent");
+        assert!(c.check_index_consistency());
+        let mut now = 10.0;
+        while !c.all_done() {
+            let ds: Vec<Dispatch> = c.dispatch_all(now);
+            for d in &ds {
+                complete(&mut c, d, now);
+            }
+            // Completing frees workers; drive the next round.
+            now += 10.0;
+            if c.running_count() == 0 && c.ready_count() == 0 {
+                break;
+            }
+            let pending: Vec<Dispatch> = c.dispatch_all(now);
+            for d in &pending {
+                complete(&mut c, d, now);
+            }
+            now += 10.0;
+        }
+        assert_eq!(c.progress().completed_tasks, 8);
+        // With the backlog drained, every lent worker went home.
+        let final_round = c.dispatch_all(now);
+        assert!(final_round.is_empty());
+        for i in 0..4u32 {
+            let wid = c.worker_on_node(i).unwrap();
+            assert_eq!(
+                *c.worker_shard.get(&wid).unwrap(),
+                c.home_shard_of_node(i),
+                "worker on node {i} is back home"
+            );
+        }
+        assert!(c.check_index_consistency());
+    }
+
+    #[test]
+    fn evicting_a_lent_worker_migrates_the_node_snapshot_home() {
+        let mut c = mk(2);
+        // Only ctx 0 has work: node 1's worker (home shard 1) is lent
+        // to shard 0 and stages ctx 0 bytes there.
+        let work: Vec<Task> =
+            (0..4).map(|i| Task::new(i, i * 10, 10, 0)).collect();
+        c.submit_tasks(work);
+        let w0 = c.worker_join(node(0), 0.0);
+        let w1 = c.worker_join(node(1), 0.0);
+        let ds = c.dispatch_all(0.0);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(c.steals(), 1, "node 1's worker was lent to shard 0");
+        assert_eq!(*c.worker_shard.get(&w1).unwrap(), 0);
+        // Finish the staging phases so the lent worker holds cache
+        // bytes, then evict it mid-run (away from home).
+        for d in &ds {
+            for (i, p) in d.phases.iter().enumerate() {
+                c.phase_done(d.task, i);
+                if matches!(p, PhaseKind::Materialize { .. }) {
+                    break; // cache + library resident; task still running
+                }
+            }
+        }
+        assert!(c.worker(w1).unwrap().cached_bytes_total() > 0);
+        c.worker_evict(w1);
+        // The snapshot must live in shard 1's ledger (node 1's home),
+        // not shard 0's: a rejoin of node 1 goes through shard 1.
+        assert!(c.shards[0].node_caches().entry(1).is_none());
+        assert!(c.shards[1].node_caches().entry(1).is_some());
+        // And the rejoin warm-starts from it.
+        let w1b = c.worker_join(node(1), 1.0);
+        assert!(c.worker(w1b).unwrap().warm_started());
+        assert!(c.check_index_consistency());
+        let _ = w0;
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_shard_zero() {
+        let mut c = mk(1);
+        c.submit_tasks(tasks(3));
+        for i in 0..3 {
+            c.worker_join(node(i), 0.0);
+        }
+        assert_eq!(c.shard_of_ctx(0), 0);
+        assert_eq!(c.shard_of_ctx(1), 0);
+        let ds = c.dispatch_all(0.0);
+        assert_eq!(ds.len(), 3);
+        assert_eq!(c.steals(), 0);
+        assert!(c.shards[0].shard_id().is_none(), "unsharded trace shape");
+    }
+}

@@ -1,12 +1,21 @@
-//! Simulated driver: scheduler + cluster + filesystem + cost model under
-//! the discrete-event engine.
+//! Simulated driver: sharded coordinator + cluster + filesystem + cost
+//! model under the discrete-event engine.
 //!
 //! Runs a full experiment (e.g. 150 k inferences over an opportunistic
 //! pool) in milliseconds of wall-clock and returns the metrics each paper
 //! figure needs. The coordination logic itself lives in
-//! [`super::scheduler`] — this driver only turns phases into timed events
-//! and cluster actions into worker lifecycle calls, exactly like the live
-//! PJRT driver does with real work.
+//! [`super::scheduler`] and its scale-out wrapper [`super::sharded`] —
+//! this driver only turns phases into timed events and cluster actions
+//! into worker lifecycle calls, exactly like the live PJRT driver does
+//! with real work.
+//!
+//! Runs are configured through [`SimConfig::builder`]: the workload is
+//! always a list of [`AppSpec`]s (a single-application run is a
+//! one-element list — there are no separate single-app fields), and
+//! [`SimConfigBuilder::shards`] selects how many scheduler shards the
+//! coordinator partitions the contexts across (`1`, the default, is the
+//! unsharded degenerate case with byte-identical traces to the
+//! pre-sharding driver).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
@@ -14,11 +23,12 @@ use super::batcher::Batcher;
 use super::context::{ContextPolicy, ContextRecipe, DataOrigin};
 use super::costmodel::CostModel;
 use super::factory::{Factory, FactoryPolicy};
-use super::metrics::{CacheStats, MetricPoint, Metrics, RunSummary};
+use super::metrics::{CacheStats, MetricPoint, Metrics, RunReport, RunSummary};
 use super::policy::PolicyKind;
 use super::scheduler::{Dispatch, PhaseKind, Scheduler};
+use super::sharded::ShardedCoordinator;
 use super::task::{Task, TaskId, TaskRecord};
-use super::transfer::{StageSource, TransferPlanner};
+use super::transfer::StageSource;
 use super::worker::{WorkerId, DEFAULT_CACHE_CAPACITY_BYTES};
 use crate::cluster::{
     ClusterAction, ClusterSim, GpuModel, LoadTrace, Node,
@@ -36,13 +46,14 @@ pub struct AppSpec {
     pub batch_size: u64,
 }
 
-/// Full experiment configuration.
+/// Full experiment configuration. The workload is always the [`AppSpec`]
+/// list in `apps` — a single-application run is a one-element list (see
+/// [`SimConfig::new`] and [`SimConfig::builder`]); there are no parallel
+/// single-app fields to fall out of sync with it.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub name: String,
     pub policy: ContextPolicy,
-    pub batch_size: u64,
-    pub total_inferences: u64,
     pub nodes: Vec<Node>,
     pub trace: LoadTrace,
     /// pv5-style eviction priority (empty = random victims).
@@ -57,11 +68,9 @@ pub struct SimConfig {
     /// tasks start flowing (§6.2: "an experiment starts when 95% of all
     /// GPUs join the pool"). 0.0 disables the gate.
     pub start_gate_fraction: f64,
-    pub recipe: ContextRecipe,
-    /// Multi-application workloads: when non-empty, `recipe`,
-    /// `batch_size` and `total_inferences` above are ignored and each
-    /// app's task stream is round-robin interleaved so tenants compete
-    /// for the pool (and for worker caches) from the first dispatch.
+    /// The applications of this run (never empty). Multi-app task
+    /// streams are round-robin interleaved so tenants compete for the
+    /// pool (and for worker caches) from the first dispatch.
     pub apps: Vec<AppSpec>,
     /// Per-worker context-cache capacity in bytes (the ~70 GB scratch
     /// disk of §5.3.2 by default; mixed experiments shrink it to force
@@ -70,6 +79,9 @@ pub struct SimConfig {
     /// Placement (dispatch) policy: greedy affinity, weighted fair
     /// share, or warm prefetch (`coordinator::policy`).
     pub placement: PolicyKind,
+    /// Scheduler shard count for the [`ShardedCoordinator`] (clamped to
+    /// the context count; `1` = the unsharded degenerate case).
+    pub shards: usize,
     /// Multi-app task ordering: `true` (default) interleaves the
     /// tenants' streams round-robin; `false` concatenates them (tenant
     /// 0's whole backlog queues ahead of tenant 1's — the starvation
@@ -90,8 +102,9 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
-    /// Reasonable defaults over a node pool + trace; experiments override
-    /// fields as needed.
+    /// Reasonable defaults over a node pool + trace, seeded with a
+    /// single 150 k-inference SmolLM2 application at `batch_size`;
+    /// experiments override fields (or use [`Self::builder`]) as needed.
     pub fn new(
         name: impl Into<String>,
         policy: ContextPolicy,
@@ -103,8 +116,6 @@ impl SimConfig {
         Self {
             name: name.into(),
             policy,
-            batch_size,
-            total_inferences: 150_000,
             nodes,
             trace,
             reclaim_priority: Vec::new(),
@@ -114,14 +125,152 @@ impl SimConfig {
             factory: FactoryPolicy::default(),
             metrics_dt: 10.0,
             start_gate_fraction: 0.95,
-            recipe: ContextRecipe::smollm2_pff(0),
-            apps: Vec::new(),
+            apps: vec![AppSpec {
+                recipe: ContextRecipe::smollm2_pff(0),
+                total_inferences: 150_000,
+                batch_size,
+            }],
             worker_cache_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
             placement: PolicyKind::Greedy,
+            shards: 1,
             interleave_apps: true,
             node_trace: None,
             trace_sink: TraceHandle::null(),
         }
+    }
+
+    /// Validating builder over the same defaults — the one entry point
+    /// that catches conflicting app settings, an empty app list and a
+    /// zero shard count at configuration time instead of mid-run.
+    pub fn builder(
+        name: impl Into<String>,
+        policy: ContextPolicy,
+        nodes: Vec<Node>,
+        trace: LoadTrace,
+        seed: u64,
+    ) -> SimConfigBuilder {
+        SimConfigBuilder {
+            cfg: SimConfig::new(name, policy, 100, nodes, trace, seed),
+            apps: Vec::new(),
+            bulk_apps: None,
+            shards: 1,
+        }
+    }
+}
+
+/// Builder for [`SimConfig`] (see [`SimConfig::builder`]). Applications
+/// are declared either one at a time with [`Self::app`] or wholesale
+/// with [`Self::apps`] — mixing the two is a configuration conflict and
+/// fails [`Self::build`], as do an empty application list and a zero
+/// shard count.
+#[derive(Debug, Clone)]
+pub struct SimConfigBuilder {
+    cfg: SimConfig,
+    apps: Vec<AppSpec>,
+    bulk_apps: Option<Vec<AppSpec>>,
+    shards: usize,
+}
+
+impl SimConfigBuilder {
+    /// Append one application to the run.
+    pub fn app(
+        mut self,
+        recipe: ContextRecipe,
+        total_inferences: u64,
+        batch_size: u64,
+    ) -> Self {
+        self.apps.push(AppSpec { recipe, total_inferences, batch_size });
+        self
+    }
+
+    /// Set the whole application list at once (conflicts with
+    /// [`Self::app`]).
+    pub fn apps(mut self, apps: Vec<AppSpec>) -> Self {
+        self.bulk_apps = Some(apps);
+        self
+    }
+
+    /// Scheduler shard count (validated non-zero at [`Self::build`];
+    /// the coordinator clamps it to the context count).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn placement(mut self, placement: PolicyKind) -> Self {
+        self.cfg.placement = placement;
+        self
+    }
+
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.cfg.cost = cost;
+        self
+    }
+
+    pub fn worker_cache_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.worker_cache_bytes = bytes;
+        self
+    }
+
+    pub fn start_gate_fraction(mut self, fraction: f64) -> Self {
+        self.cfg.start_gate_fraction = fraction;
+        self
+    }
+
+    pub fn interleave_apps(mut self, interleave: bool) -> Self {
+        self.cfg.interleave_apps = interleave;
+        self
+    }
+
+    pub fn node_trace(mut self, trace: NodeAvailabilityTrace) -> Self {
+        self.cfg.node_trace = Some(trace);
+        self
+    }
+
+    pub fn factory(mut self, factory: FactoryPolicy) -> Self {
+        self.cfg.factory = factory;
+        self
+    }
+
+    pub fn reclaim_priority(mut self, priority: Vec<GpuModel>) -> Self {
+        self.cfg.reclaim_priority = priority;
+        self
+    }
+
+    pub fn trace_sink(mut self, sink: TraceHandle) -> Self {
+        self.cfg.trace_sink = sink;
+        self
+    }
+
+    /// Validate and produce the config. Errors: both [`Self::app`] and
+    /// [`Self::apps`] used, an empty application list, duplicate
+    /// context ids across apps, or `shards == 0`.
+    pub fn build(mut self) -> crate::Result<SimConfig> {
+        let apps = match (self.apps.is_empty(), self.bulk_apps) {
+            (false, Some(_)) => anyhow::bail!(
+                "conflicting application settings: both .app() and \
+                 .apps() were used — declare the workload one way"
+            ),
+            (false, None) => self.apps,
+            (true, Some(bulk)) => bulk,
+            (true, None) => Vec::new(),
+        };
+        anyhow::ensure!(
+            !apps.is_empty(),
+            "a run needs at least one application (.app() or .apps())"
+        );
+        let mut seen = std::collections::HashSet::new();
+        for a in &apps {
+            anyhow::ensure!(
+                seen.insert(a.recipe.id),
+                "duplicate context id {} across applications",
+                a.recipe.id
+            );
+        }
+        anyhow::ensure!(self.shards > 0, "shard count must be at least 1");
+        self.cfg.apps = apps;
+        self.cfg.shards = self.shards;
+        Ok(self.cfg)
     }
 }
 
@@ -140,6 +289,22 @@ pub struct SimOutcome {
     /// Sim time at which the start gate opened (t=0 of the measurement).
     pub started_at: f64,
     pub finished_at: f64,
+    /// Scheduler shard count the run used (1 = unsharded).
+    pub shards: usize,
+    /// Work-stealing lends between shards over the run.
+    pub steals: u64,
+}
+
+impl SimOutcome {
+    /// Unified per-run report (shared renderer with the live driver).
+    pub fn report(&self) -> RunReport {
+        RunReport {
+            summary: self.summary.clone(),
+            cache: self.cache.clone(),
+            shards: self.shards,
+            steals: self.steals,
+        }
+    }
 }
 
 /// Per-running-task driver-side state.
@@ -159,7 +324,7 @@ pub struct SimDriver {
     engine: SimEngine,
     cluster: ClusterSim,
     fs: SharedFilesystem,
-    sched: Scheduler,
+    sched: ShardedCoordinator,
     factory: Factory,
     metrics: Metrics,
     rng: Rng,
@@ -183,20 +348,19 @@ impl SimDriver {
         let mut cluster =
             ClusterSim::new(cfg.nodes.clone(), cfg.trace.clone(), cluster_rng);
         cluster.reclaim_priority = cfg.reclaim_priority.clone();
-        let recipes: Vec<ContextRecipe> = if cfg.apps.is_empty() {
-            vec![cfg.recipe.clone()]
-        } else {
-            cfg.apps.iter().map(|a| a.recipe.clone()).collect()
-        };
-        let sched = Scheduler::with_registry(
+        assert!(!cfg.apps.is_empty(), "SimConfig.apps must not be empty");
+        let recipes: Vec<ContextRecipe> =
+            cfg.apps.iter().map(|a| a.recipe.clone()).collect();
+        let sched = ShardedCoordinator::new(
+            cfg.shards,
             cfg.policy,
             recipes,
-            TransferPlanner::new(cfg.fanout_cap),
+            cfg.fanout_cap,
             cfg.cost.clone(),
             cfg.worker_cache_bytes,
-        )
-        .with_policy(cfg.placement.build())
-        .with_trace(cfg.trace_sink.clone());
+            cfg.placement,
+            cfg.trace_sink.clone(),
+        );
         let factory = Factory::new(cfg.factory);
         Self {
             cfg,
@@ -219,16 +383,12 @@ impl SimDriver {
     /// Run to completion; panics if the event heap drains with tasks
     /// outstanding and no possibility of progress (a driver bug).
     pub fn run(mut self) -> SimOutcome {
-        // Workload. Multi-app runs interleave the tenants' task streams
-        // round-robin (dense merged ids) so both applications contend for
-        // workers — and worker caches — from the first dispatch.
-        let tasks: Vec<Task> = if self.cfg.apps.is_empty() {
-            Batcher::new(self.cfg.batch_size).split(
-                self.cfg.total_inferences,
-                self.cfg.recipe.id,
-                0,
-            )
-        } else {
+        // Workload. Every run is an app list; multi-app runs interleave
+        // the tenants' task streams round-robin (dense merged ids) so
+        // the applications contend for workers — and worker caches —
+        // from the first dispatch. A one-app list degenerates to that
+        // app's plain batch stream.
+        let tasks: Vec<Task> = {
             let mut streams: Vec<VecDeque<Task>> = self
                 .cfg
                 .apps
@@ -376,11 +536,11 @@ impl SimDriver {
 
         let exec_time = finished_at - started_at;
         let avg_workers = self.metrics.avg_workers(started_at, finished_at);
-        let records = self.sched.records().to_vec();
+        let records = self.sched.records();
         let summary = RunSummary::from_records(
             self.cfg.name.clone(),
             self.cfg.policy.as_str(),
-            self.cfg.batch_size,
+            self.cfg.apps[0].batch_size,
             exec_time,
             avg_workers,
             progress.completed_inferences,
@@ -393,10 +553,12 @@ impl SimDriver {
             summary,
             series: self.metrics.points().to_vec(),
             records,
-            cache: self.sched.cache_stats().clone(),
+            cache: self.sched.cache_stats(),
             warm_started_workers: self.warm_started.clone(),
             started_at,
             finished_at,
+            shards: self.sched.shard_count(),
+            steals: self.sched.steals(),
         }
     }
 
@@ -651,27 +813,11 @@ impl SimDriver {
     // ------------------------------------------------------------ helpers
 
     fn dispatch(&mut self, now: f64) {
-        // Refresh the lifetime arithmetic before the policy looks.
-        self.sched.set_clock_hint(now);
-        let round_t0 = self
-            .sched
-            .trace()
-            .on()
-            .then(std::time::Instant::now);
-        let dispatches: Vec<Dispatch> = self.sched.try_dispatch();
-        if let Some(t0) = round_t0 {
-            let assigned =
-                dispatches.iter().filter(|d| !d.is_prefetch()).count() as u64;
-            let prefetched = dispatches.len() as u64 - assigned;
-            self.sched.trace().emit(TraceEvent::DispatchRound {
-                at: now,
-                policy: self.sched.placement_name().to_string(),
-                assigned,
-                prefetched,
-                queued: self.sched.ready_count() as u64,
-                wall_s: t0.elapsed().as_secs_f64(),
-            });
-        }
+        // The coordinator refreshes every shard's clock hint, times each
+        // shard's round, emits the per-shard `dispatch_round` events and
+        // runs the work-stealing pass — the driver only turns the
+        // decisions into timed phase events.
+        let dispatches: Vec<Dispatch> = self.sched.dispatch_all(now);
         for d in dispatches {
             let first = d.phases[0];
             self.in_flight.insert(
@@ -756,7 +902,7 @@ mod tests {
             LoadTrace::constant(20),
             7,
         );
-        cfg.total_inferences = 2_000;
+        cfg.apps[0].total_inferences = 2_000;
         cfg
     }
 
@@ -811,7 +957,7 @@ mod tests {
         let mut cfg = small_cfg(ContextPolicy::Pervasive, 100);
         // Pool shrinks to 2 nodes mid-run; evicted tasks must re-run.
         cfg.trace = LoadTrace::from_steps(vec![(0.0, 20), (120.0, 2)]);
-        cfg.total_inferences = 6_000;
+        cfg.apps[0].total_inferences = 6_000;
         let out = SimDriver::new(cfg).run();
         assert_eq!(out.summary.completed_inferences, 6_000);
         assert!(out.summary.evictions > 0, "drain must evict someone");
@@ -939,7 +1085,7 @@ mod tests {
         use crate::cluster::NodeAvailabilityTrace;
         use crate::util::Rng;
         let mut cfg = small_cfg(ContextPolicy::Pervasive, 50);
-        cfg.total_inferences = 10_000;
+        cfg.apps[0].total_inferences = 10_000;
         cfg.placement = placement;
         let nodes: Vec<u32> = (0..20).collect();
         cfg.node_trace = Some(NodeAvailabilityTrace::storm(
@@ -983,6 +1129,75 @@ mod tests {
     }
 
     #[test]
+    fn builder_validates_conflicts_and_empty_and_shards() {
+        let mk = || {
+            SimConfig::builder(
+                "b",
+                ContextPolicy::Pervasive,
+                pool_20_mixed(),
+                LoadTrace::constant(20),
+                7,
+            )
+        };
+        // Both .app() and .apps(): conflict.
+        let err = mk()
+            .app(ContextRecipe::smollm2_pff(0), 100, 10)
+            .apps(vec![AppSpec {
+                recipe: ContextRecipe::smollm2_pff(1),
+                total_inferences: 100,
+                batch_size: 10,
+            }])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("conflicting"), "{err}");
+        // No apps at all.
+        let err = mk().build().unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
+        // Zero shards.
+        let err = mk()
+            .app(ContextRecipe::smollm2_pff(0), 100, 10)
+            .shards(0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("shard count"), "{err}");
+        // Duplicate context ids.
+        let err = mk()
+            .app(ContextRecipe::smollm2_pff(0), 100, 10)
+            .app(ContextRecipe::smollm2_pff(0), 100, 10)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate context"), "{err}");
+        // A valid two-app sharded config builds.
+        let cfg = mk()
+            .app(ContextRecipe::smollm2_pff(0), 1_000, 50)
+            .app(
+                ContextRecipe::custom(1, "b", 5_000_000_000, 10_000_000_000),
+                1_000,
+                50,
+            )
+            .shards(2)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.apps.len(), 2);
+        assert_eq!(cfg.shards, 2);
+    }
+
+    #[test]
+    fn sharded_run_completes_both_tenants() {
+        let mut cfg = two_app_cfg(1_000);
+        cfg.shards = 2;
+        let out = SimDriver::new(cfg).run();
+        assert_eq!(out.summary.completed_inferences, 2_000);
+        assert_eq!(out.shards, 2);
+        let report = out.report().render();
+        assert!(report.contains("shards=2"), "{report}");
+        // Single-shard reports omit the shard line.
+        let single = SimDriver::new(two_app_cfg(500)).run();
+        assert_eq!(single.shards, 1);
+        assert!(!single.report().render().contains("shards="));
+    }
+
+    #[test]
     fn single_node_baseline_matches_cost_model() {
         use crate::cluster::node::pool_single_a10;
         let mut cfg = SimConfig::new(
@@ -993,7 +1208,7 @@ mod tests {
             LoadTrace::constant(1),
             3,
         );
-        cfg.total_inferences = 1_000;
+        cfg.apps[0].total_inferences = 1_000;
         cfg.start_gate_fraction = 1.0;
         let out = SimDriver::new(cfg).run();
         // 1000 inferences on one A10 ≈ 272.7 s compute + one-time context

@@ -17,7 +17,7 @@
 
 use crate::cluster::node::pool_20_mixed;
 use crate::cluster::{LoadTrace, Node};
-use crate::coordinator::{ContextPolicy, SimConfig, SimDriver};
+use crate::coordinator::{ContextPolicy, ContextRecipe, SimConfig, SimDriver};
 use crate::coordinator::transfer::broadcast_rounds;
 
 /// One row of an ablation sweep.
@@ -29,16 +29,16 @@ pub struct AblationRow {
 }
 
 fn base_cfg(name: &str, seed: u64, inferences: u64) -> SimConfig {
-    let mut cfg = SimConfig::new(
+    SimConfig::builder(
         name,
         ContextPolicy::Pervasive,
-        100,
         pool_20_mixed(),
         LoadTrace::constant(20),
         seed,
-    );
-    cfg.total_inferences = inferences;
-    cfg
+    )
+    .app(ContextRecipe::smollm2_pff(0), inferences, 100)
+    .build()
+    .expect("ablation config is valid")
 }
 
 /// Sweep the peer-transfer fan-out cap. Returns (cap, exec_time_s,
@@ -122,7 +122,7 @@ pub fn contention_ablation(
             // Narrow/widen the pipe by scaling the staged byte count
             // equivalently (the cost model owns the FS object; scaling
             // the deps size by 1/bw is the same arithmetic).
-            for c in &mut cfg.recipe.components {
+            for c in &mut cfg.apps[0].recipe.components {
                 c.size_bytes = (c.size_bytes as f64 / bw_factor) as u64;
             }
             SimDriver::new(cfg).run().summary.exec_time_s
@@ -143,15 +143,16 @@ pub fn placement_demo(seed: u64) -> (f64, f64) {
         Node { id: 0, gpu: crate::cluster::GpuModel::TitanXPascal },
         Node { id: 1, gpu: crate::cluster::GpuModel::H100 },
     ];
-    let mut cfg = SimConfig::new(
+    let cfg = SimConfig::builder(
         "placement",
         ContextPolicy::Pervasive,
-        50,
         nodes,
         LoadTrace::constant(2),
         seed,
-    );
-    cfg.total_inferences = 2_000;
+    )
+    .app(ContextRecipe::smollm2_pff(0), 2_000, 50)
+    .build()
+    .expect("placement demo config is valid");
     let out = SimDriver::new(cfg).run();
     let slow = out
         .records

@@ -85,15 +85,14 @@ pub fn bytes_config(
     seed: u64,
     inferences_per_app: u64,
 ) -> SimConfig {
-    let mut cfg = SimConfig::new(
+    SimConfig::builder(
         format!("churn_{}", kind.as_str()),
         ContextPolicy::Pervasive,
-        10,
         pool_20_mixed(),
         LoadTrace::constant(20),
         seed,
-    );
-    cfg.apps = vec![
+    )
+    .apps(vec![
         AppSpec {
             recipe: ContextRecipe::smollm2_pff(0),
             total_inferences: inferences_per_app,
@@ -109,27 +108,28 @@ pub fn bytes_config(
             total_inferences: inferences_per_app,
             batch_size: 10,
         },
-    ];
-    cfg.placement = kind;
-    cfg.node_trace = Some(staging_storm(seed));
-    cfg
+    ])
+    .placement(kind)
+    .node_trace(staging_storm(seed))
+    .build()
+    .expect("churn bytes config is valid")
 }
 
 /// Single-tenant configuration under the settled storm (greedy
 /// placement — warm restarts are a mechanism property, not a policy
 /// one).
 pub fn warm_config(seed: u64, total_inferences: u64) -> SimConfig {
-    let mut cfg = SimConfig::new(
+    SimConfig::builder(
         "churn_warmstart",
         ContextPolicy::Pervasive,
-        50,
         pool_20_mixed(),
         LoadTrace::constant(20),
         seed,
-    );
-    cfg.total_inferences = total_inferences;
-    cfg.node_trace = Some(settled_storm(seed));
-    cfg
+    )
+    .app(ContextRecipe::smollm2_pff(0), total_inferences, 50)
+    .node_trace(settled_storm(seed))
+    .build()
+    .expect("churn warm config is valid")
 }
 
 /// One policy's result under the staging-time storm.

@@ -43,7 +43,7 @@ use std::path::PathBuf;
 use crate::cluster::{NodeAvailabilityTrace, NodeChurnEvent};
 use crate::coordinator::metrics::first_task_by_worker_context;
 use crate::coordinator::{ContextId, ContextPolicy, PolicyKind};
-use crate::live::{LiveApp, LiveConfig, LiveDriver, LiveOutcome};
+use crate::live::{LiveConfig, LiveDriver, LiveOutcome};
 use crate::obs::TraceHandle;
 use crate::runtime::synthetic::{
     default_live_profiles, write_synthetic_artifacts,
@@ -72,39 +72,29 @@ pub const REJOIN_AT_S: f64 = 2.35;
 /// (affinity partitions one tenant per worker), a forced kill/restart
 /// of node 0 mid-run.
 pub fn restart_config(seed: u64) -> LiveConfig {
-    LiveConfig {
-        policy: ContextPolicy::Pervasive,
-        apps: vec![
-            LiveApp {
-                profile: "tiny".to_string(),
-                total_inferences: RESTART_INFERENCES_PER_APP,
-                batch_size: 4,
-            },
-            LiveApp {
-                profile: "small".to_string(),
-                total_inferences: RESTART_INFERENCES_PER_APP,
-                batch_size: 4,
-            },
-        ],
-        worker_speeds: vec![1.0, 1.0],
-        seed,
-        placement: PolicyKind::Greedy,
-        persist_node_caches: true,
-        node_trace: Some(NodeAvailabilityTrace::from_events(vec![
+    LiveConfig::builder()
+        .policy(ContextPolicy::Pervasive)
+        .app("tiny", RESTART_INFERENCES_PER_APP, 4)
+        .app("small", RESTART_INFERENCES_PER_APP, 4)
+        .worker_speeds(vec![1.0, 1.0])
+        .seed(seed)
+        .placement(PolicyKind::Greedy)
+        .persist_node_caches(true)
+        .node_trace(NodeAvailabilityTrace::from_events(vec![
             NodeChurnEvent { time: KILL_AT_S, node: 0, up: false },
             NodeChurnEvent { time: REJOIN_AT_S, node: 0, up: true },
-        ])),
-        backend: BackendKind::Reference,
+        ]))
+        .backend(BackendKind::Reference)
         // ≈0.2 s to stage the tiny context, ≈0.75 s for the small one —
         // wall-clock sleeps, so the warm-vs-cold margin survives CI
         // noise.
-        stage_bytes_per_s: Some(2_000_000.0),
-        execute_floor_s: 0.08,
+        .stage_bytes_per_s(2_000_000.0)
+        .execute_floor_s(0.08)
         // CI-sized run: a stall should fail in a minute, not at the
         // production-sized default.
-        watchdog_s: 60.0,
-        ..LiveConfig::default()
-    }
+        .watchdog_s(60.0)
+        .build()
+        .expect("restart config is valid")
 }
 
 /// The contention configuration: one worker whose cache fits either
@@ -115,32 +105,21 @@ pub fn contention_config(seed: u64, manifest: &Manifest) -> Result<LiveConfig> {
         recipe_footprint(manifest, "small")?,
         recipe_footprint(manifest, "tiny")?,
     );
-    Ok(LiveConfig {
-        policy: ContextPolicy::Pervasive,
-        apps: vec![
-            // App 0 = the LARGER context (one task, staged first).
-            LiveApp {
-                profile: "small".to_string(),
-                total_inferences: 4,
-                batch_size: 4,
-            },
-            // App 1 = the smaller tenant whose stream evicts it.
-            LiveApp {
-                profile: "tiny".to_string(),
-                total_inferences: 24,
-                batch_size: 8,
-            },
-        ],
-        worker_speeds: vec![1.0],
-        seed,
+    LiveConfig::builder()
+        .policy(ContextPolicy::Pervasive)
+        // App 0 = the LARGER context (one task, staged first);
+        // app 1 = the smaller tenant whose stream evicts it.
+        .app("small", 4, 4)
+        .app("tiny", 24, 8)
+        .worker_speeds(vec![1.0])
+        .seed(seed)
         // Fits either context alone, never both.
-        cache_capacity_bytes: large + small / 2,
-        placement: PolicyKind::Greedy,
-        persist_node_caches: true,
-        backend: BackendKind::Reference,
-        watchdog_s: 60.0,
-        ..LiveConfig::default()
-    })
+        .cache_capacity_bytes(large + small / 2)
+        .placement(PolicyKind::Greedy)
+        .persist_node_caches(true)
+        .backend(BackendKind::Reference)
+        .watchdog_s(60.0)
+        .build()
 }
 
 /// Total cached bytes of the live recipe built for `profile` — derived

@@ -43,33 +43,27 @@ pub fn mixed_config(
     // Batch 10: small enough that the None policy's per-task context
     // tax (re-download + re-materialize) dominates, exactly the paper's
     // pv1 pathology — now paid by two tenants at once.
-    let mut cfg = SimConfig::new(
-        id,
-        policy,
-        10,
-        pool_20_mixed(),
-        LoadTrace::constant(20),
-        seed,
-    );
-    cfg.apps = vec![
-        AppSpec {
-            recipe: ContextRecipe::smollm2_pff(0),
-            total_inferences: inferences_per_app,
-            batch_size: 10,
-        },
-        AppSpec {
-            recipe: ContextRecipe::custom(
-                1,
-                "pff-large",
-                5_000_000_000,
-                10_000_000_000,
-            ),
-            total_inferences: inferences_per_app,
-            batch_size: 10,
-        },
-    ];
-    cfg.worker_cache_bytes = MIXED_WORKER_CACHE_BYTES;
-    cfg
+    SimConfig::builder(id, policy, pool_20_mixed(), LoadTrace::constant(20), seed)
+        .apps(vec![
+            AppSpec {
+                recipe: ContextRecipe::smollm2_pff(0),
+                total_inferences: inferences_per_app,
+                batch_size: 10,
+            },
+            AppSpec {
+                recipe: ContextRecipe::custom(
+                    1,
+                    "pff-large",
+                    5_000_000_000,
+                    10_000_000_000,
+                ),
+                total_inferences: inferences_per_app,
+                batch_size: 10,
+            },
+        ])
+        .worker_cache_bytes(MIXED_WORKER_CACHE_BYTES)
+        .build()
+        .expect("mixed config is valid")
 }
 
 /// One policy's mixed-run result.

@@ -17,6 +17,10 @@
 //!   from surviving node cache dirs) plus two-tenant contention for a
 //!   real byte-budgeted cache; self-asserting (the `live-smoke` CI
 //!   gate).
+//! * [`shards`] — sharded-coordinator equivalence: two-shard vs
+//!   single-shard trace-level parity (plain and under churn) plus a
+//!   work-stealing demonstration on an unbalanced workload;
+//!   self-asserting (the `shard-smoke` CI gate).
 //! * [`runner`] — executes specs through the simulated driver.
 //! * [`figures`] — renders each figure/table as text + CSV into
 //!   `results/` (the artifacts EXPERIMENTS.md references).
@@ -28,6 +32,7 @@ pub mod live_churn;
 pub mod mixed;
 pub mod policies;
 pub mod runner;
+pub mod shards;
 pub mod specs;
 
 pub use runner::{run_all, run_one};

@@ -52,7 +52,7 @@ mod tests {
         // Shrink pv4_100 to a fast smoke size via a custom spec build.
         let spec = spec_by_id("pv4_100").unwrap();
         let mut cfg = spec.build(1);
-        cfg.total_inferences = 1_000;
+        cfg.apps[0].total_inferences = 1_000;
         let out = crate::coordinator::SimDriver::new(cfg).run();
         assert_eq!(out.summary.completed_inferences, 1_000);
     }

@@ -1,0 +1,634 @@
+//! Sharded-coordinator equivalence experiment: **two-shard vs
+//! single-shard trace parity**, plus a work-stealing demonstration.
+//!
+//! The sharded coordinator's contract is that partitioning the
+//! scheduler by context group is *invisible* to the workload: same
+//! completions, same cache transitions, same warm restores — at trace
+//! level, not just in end-of-run summaries. This experiment proves it
+//! on three scenarios, all on a 4-node all-A10 pool with two
+//! identical-size tenant contexts and a deterministic cost model (so
+//! the two runs differ in shard count and nothing else):
+//!
+//! * **parity** — balanced interleaved queues. Round-robin context
+//!   partition (ctx 0 → shard 0, ctx 1 → shard 1) lines up with the
+//!   home-node partition (even nodes → shard 0), so the sharded run
+//!   must make exactly the decisions the single scheduler makes.
+//! * **churn-parity** — same workload with nodes 2 and 3 reclaimed
+//!   mid-run and rejoined later: eviction requeues, node-cache
+//!   persists and warm restores must all survive sharding unchanged.
+//! * **stealing** — a deliberately unbalanced workload (tenant A has
+//!   15× tenant B's backlog): after tenant B drains, its shard's idle
+//!   workers must be lent to the backlogged peer (`steals > 0`) and
+//!   the run must still complete everything a single shard completes.
+//!
+//! Equivalence is checked as a **normalized event-multiset** match:
+//! every captured event minus the fields that legitimately differ
+//! (timestamps, the shard stamp itself, policy estimates that see a
+//! different candidate set) must appear the same number of times in
+//! both traces. The sharded traces are also replayed through
+//! [`crate::obs::check_events`] — the same invariants `pcm trace
+//! check` enforces — and through [`Telemetry`] to prove the shard
+//! stamp breaks no consumer. `pcm experiment shards` always enforces
+//! [`verify`] (the scenarios are CI-sized), exiting non-zero on any
+//! violation; the `shard-smoke` CI job is exactly that invocation.
+
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::{
+    GpuModel, LoadTrace, Node, NodeAvailabilityTrace, NodeChurnEvent,
+};
+use crate::coordinator::{
+    AppSpec, ContextPolicy, ContextRecipe, CostModel, SimConfig, SimDriver,
+    SimOutcome,
+};
+use crate::obs::{
+    check_events, MemorySink, Telemetry, TraceEvent, TraceHandle,
+};
+use crate::util::{fmt_bytes, Json};
+
+/// Per-tenant workload of the balanced parity scenario.
+pub const PARITY_INFERENCES_PER_APP: u64 = 1_200;
+
+/// Per-tenant workload of the churn-parity scenario (longer, so the
+/// storm hits mid-run with backlog left for the rejoined workers).
+pub const CHURN_INFERENCES_PER_APP: u64 = 2_000;
+
+/// Backlogged tenant of the stealing scenario.
+pub const STEAL_HEAVY_INFERENCES: u64 = 6_000;
+
+/// Quickly-drained tenant of the stealing scenario.
+pub const STEAL_LIGHT_INFERENCES: u64 = 400;
+
+const BATCH: u64 = 100;
+
+/// Both kills land at the same instant, while every worker is deep in
+/// an execute phase (staging settles well before 120 s), so neither
+/// shard ever idles a worker while its peer alone has backlog — the
+/// single-scheduler run has no cross-context routing to diverge with.
+const CHURN_KILL_AT: f64 = 120.0;
+const CHURN_REJOIN_AT: f64 = 180.0;
+
+fn four_a10_nodes() -> Vec<Node> {
+    (0..4).map(|id| Node { id, gpu: GpuModel::A10 }).collect()
+}
+
+/// Two identical-size contexts: any throughput difference between the
+/// tenants would be a scheduling artifact, which is exactly what the
+/// parity check must rule out.
+fn twin_apps(per_app: u64) -> Vec<AppSpec> {
+    ["twin-a", "twin-b"]
+        .iter()
+        .enumerate()
+        .map(|(i, name)| AppSpec {
+            recipe: ContextRecipe::custom(
+                i as u32,
+                name,
+                1_000_000_000,
+                3_000_000_000,
+            ),
+            total_inferences: per_app,
+            batch_size: BATCH,
+        })
+        .collect()
+}
+
+fn det_cost() -> CostModel {
+    let mut cost = CostModel::default();
+    cost.deterministic = true;
+    cost
+}
+
+/// Reclaim nodes 2 and 3 (one per home shard) at the same instant,
+/// rejoin both at the same later instant: the loss and the warm
+/// restart stay symmetric across the context partition.
+fn churn_storm() -> NodeAvailabilityTrace {
+    NodeAvailabilityTrace::from_events(vec![
+        NodeChurnEvent { time: CHURN_KILL_AT, node: 3, up: false },
+        NodeChurnEvent { time: CHURN_KILL_AT, node: 2, up: false },
+        NodeChurnEvent { time: CHURN_REJOIN_AT, node: 2, up: true },
+        NodeChurnEvent { time: CHURN_REJOIN_AT, node: 3, up: true },
+    ])
+}
+
+/// One scenario config at a shard count. Everything except `shards`
+/// (and the label) is held fixed between the compared runs.
+fn scenario_config(
+    label: String,
+    shards: usize,
+    apps: Vec<AppSpec>,
+    storm: Option<NodeAvailabilityTrace>,
+    seed: u64,
+) -> SimConfig {
+    let b = SimConfig::builder(
+        label,
+        ContextPolicy::Pervasive,
+        four_a10_nodes(),
+        LoadTrace::constant(4),
+        seed,
+    )
+    .apps(apps)
+    .cost(det_cost())
+    .shards(shards);
+    let b = match storm {
+        Some(storm) => b.node_trace(storm),
+        None => b,
+    };
+    b.build().expect("shards experiment config is valid")
+}
+
+/// Run one config with an in-memory capture sink; returns the outcome
+/// plus every event the run emitted, in emission order.
+fn run_captured(mut cfg: SimConfig) -> (SimOutcome, Vec<TraceEvent>) {
+    let sink = Arc::new(Mutex::new(MemorySink::unbounded()));
+    cfg.trace_sink = TraceHandle::from_shared(sink.clone());
+    let outcome = SimDriver::new(cfg).run();
+    let events =
+        sink.lock().unwrap_or_else(|p| p.into_inner()).events();
+    (outcome, events)
+}
+
+/// Normalize a trace into a sorted multiset of comparison keys. Kinds
+/// that are *about* the scheduling machinery rather than the workload
+/// (`run_start` carries the label, `dispatch_round` is per-shard by
+/// design) are skipped; the remaining events drop only the fields that
+/// legitimately differ across shard counts: the clock (`at` — shards
+/// interleave rounds), the shard stamp itself, measured round cost,
+/// and the policy's estimate/alternative fields (a shard scores a
+/// smaller candidate set, but must still pick the same worker).
+fn normalized(events: &[TraceEvent]) -> Vec<String> {
+    let mut out = Vec::new();
+    for e in events {
+        let kind = e.kind();
+        if kind == "run_start" || kind == "dispatch_round" {
+            continue;
+        }
+        let Json::Obj(mut m) = e.to_json() else { continue };
+        for k in ["at", "shard", "est_s", "alt_est_s", "alt_worker", "wall_s"]
+        {
+            m.remove(k);
+        }
+        out.push(Json::Obj(m).to_string());
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Multiset difference of two sorted key lists: how many entries of
+/// `a` have no partner in `b`, and vice versa.
+fn multiset_diff(a: &[String], b: &[String]) -> (usize, usize) {
+    let (mut i, mut j) = (0, 0);
+    let (mut only_a, mut only_b) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => {
+                only_a += 1;
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                only_b += 1;
+                j += 1;
+            }
+        }
+    }
+    (only_a + (a.len() - i), only_b + (b.len() - j))
+}
+
+/// One parity scenario's evidence: both outcomes, the normalized
+/// trace diff, the sharded trace's invariant violations, and both
+/// telemetry replays.
+#[derive(Debug)]
+pub struct ParityCase {
+    pub name: &'static str,
+    pub single: SimOutcome,
+    pub sharded: SimOutcome,
+    pub single_event_count: usize,
+    pub sharded_event_count: usize,
+    /// Normalized events present only in the single-shard trace.
+    pub only_in_single: usize,
+    /// Normalized events present only in the two-shard trace.
+    pub only_in_sharded: usize,
+    /// `check_events` violations in the raw two-shard trace.
+    pub sharded_violations: usize,
+    pub telemetry_single: Telemetry,
+    pub telemetry_sharded: Telemetry,
+}
+
+/// Everything `pcm experiment shards` reports on.
+#[derive(Debug)]
+pub struct ShardsReport {
+    pub parity: ParityCase,
+    pub churn: ParityCase,
+    pub steal_single: SimOutcome,
+    pub steal_sharded: SimOutcome,
+    pub steal_violations: usize,
+}
+
+fn completed_for(outcome: &SimOutcome, ctx: u32) -> u64 {
+    outcome
+        .records
+        .iter()
+        .filter(|r| r.context == ctx)
+        .map(|r| r.inferences)
+        .sum()
+}
+
+fn run_parity_case(
+    name: &'static str,
+    apps: Vec<AppSpec>,
+    storm: Option<NodeAvailabilityTrace>,
+    seed: u64,
+    trace: &TraceHandle,
+) -> ParityCase {
+    let mk = |shards: usize| {
+        scenario_config(
+            format!("shards_{name}_{shards}"),
+            shards,
+            apps.clone(),
+            storm.clone(),
+            seed,
+        )
+    };
+    let (single, single_events) = run_captured(mk(1));
+    let (sharded, sharded_events) = run_captured(mk(2));
+    // Replay both captures into the CLI's sink so `--trace-out` records
+    // the whole experiment and `pcm trace check` can audit the file.
+    for e in single_events.iter().chain(sharded_events.iter()) {
+        trace.emit(e.clone());
+    }
+    let (na, nb) = (normalized(&single_events), normalized(&sharded_events));
+    let (only_in_single, only_in_sharded) = multiset_diff(&na, &nb);
+    ParityCase {
+        name,
+        single_event_count: single_events.len(),
+        sharded_event_count: sharded_events.len(),
+        only_in_single,
+        only_in_sharded,
+        sharded_violations: check_events(&sharded_events).len(),
+        telemetry_single: Telemetry::from_events(&single_events),
+        telemetry_sharded: Telemetry::from_events(&sharded_events),
+        single,
+        sharded,
+    }
+}
+
+/// Run all three scenarios. Every captured event is re-emitted into
+/// `trace` (pass [`TraceHandle::null`] to discard), one `run_start`
+/// segment per run, so one `--trace-out` file replays cleanly through
+/// `pcm trace check` / `pcm trace summarize`.
+pub fn run_shards(seed: u64, trace: TraceHandle) -> ShardsReport {
+    let parity = run_parity_case(
+        "parity",
+        twin_apps(PARITY_INFERENCES_PER_APP),
+        None,
+        seed,
+        &trace,
+    );
+    let churn = run_parity_case(
+        "churn",
+        twin_apps(CHURN_INFERENCES_PER_APP),
+        Some(churn_storm()),
+        seed,
+        &trace,
+    );
+    let mut steal_apps = twin_apps(STEAL_HEAVY_INFERENCES);
+    steal_apps[1].total_inferences = STEAL_LIGHT_INFERENCES;
+    let mk = |shards: usize| {
+        scenario_config(
+            format!("shards_steal_{shards}"),
+            shards,
+            steal_apps.clone(),
+            None,
+            seed,
+        )
+    };
+    let (steal_single, ev1) = run_captured(mk(1));
+    let (steal_sharded, ev2) = run_captured(mk(2));
+    for e in ev1.iter().chain(ev2.iter()) {
+        trace.emit(e.clone());
+    }
+    let steal_violations = check_events(&ev2).len();
+    trace.flush();
+    ShardsReport { parity, churn, steal_single, steal_sharded, steal_violations }
+}
+
+fn parity_rows(out: &mut String, c: &ParityCase) {
+    for (tag, o) in [("1shard", &c.single), ("2shard", &c.sharded)] {
+        let t = o.cache.totals();
+        let _ = writeln!(
+            out,
+            "{:<22} {:>6} {:>9} {:>12} {:>10} {:>9} {:>7}",
+            format!("{}_{}", c.name, tag),
+            o.shards,
+            o.summary.completed_inferences,
+            fmt_bytes(t.staged_bytes),
+            t.warm_restored,
+            o.summary.evictions,
+            o.steals,
+        );
+    }
+}
+
+/// Render the equivalence report.
+pub fn report(r: &ShardsReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "sharded coordinator equivalence: 4-node A10 pool, two \
+         identical tenants, deterministic cost model"
+    );
+    let _ = writeln!(
+        out,
+        "{:<22} {:>6} {:>9} {:>12} {:>10} {:>9} {:>7}",
+        "run", "shards", "completed", "staged", "warm_rest", "evictions",
+        "steals"
+    );
+    parity_rows(&mut out, &r.parity);
+    parity_rows(&mut out, &r.churn);
+    for (tag, o) in
+        [("steal_1shard", &r.steal_single), ("steal_2shard", &r.steal_sharded)]
+    {
+        let t = o.cache.totals();
+        let _ = writeln!(
+            out,
+            "{:<22} {:>6} {:>9} {:>12} {:>10} {:>9} {:>7}",
+            tag,
+            o.shards,
+            o.summary.completed_inferences,
+            fmt_bytes(t.staged_bytes),
+            t.warm_restored,
+            o.summary.evictions,
+            o.steals,
+        );
+    }
+    for c in [&r.parity, &r.churn] {
+        let _ = writeln!(
+            out,
+            "\n{}: trace parity {} vs {} events → {} only-single, {} \
+             only-sharded (normalized); {} invariant violations in the \
+             sharded trace",
+            c.name,
+            c.single_event_count,
+            c.sharded_event_count,
+            c.only_in_single,
+            c.only_in_sharded,
+            c.sharded_violations,
+        );
+        let _ = writeln!(
+            out,
+            "{}: telemetry replay — completed {} vs {}, warm first \
+             dispatches {} vs {}",
+            c.name,
+            c.telemetry_single.completed,
+            c.telemetry_sharded.completed,
+            c.telemetry_single.warm_first_dispatches,
+            c.telemetry_sharded.warm_first_dispatches,
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\nstealing: {} lends across shards (single-shard baseline \
+         completed {} — sharded completed {})",
+        r.steal_sharded.steals,
+        r.steal_single.summary.completed_inferences,
+        r.steal_sharded.summary.completed_inferences,
+    );
+    out
+}
+
+fn verify_parity(c: &ParityCase) -> crate::Result<()> {
+    anyhow::ensure!(
+        c.only_in_single == 0 && c.only_in_sharded == 0,
+        "{}: sharded trace must match single-shard at event level: {} \
+         events only in the single-shard trace, {} only in the sharded one",
+        c.name,
+        c.only_in_single,
+        c.only_in_sharded
+    );
+    anyhow::ensure!(
+        c.sharded_violations == 0,
+        "{}: sharded trace must replay clean through the invariant \
+         checker ({} violations)",
+        c.name,
+        c.sharded_violations
+    );
+    anyhow::ensure!(
+        c.single.summary.completed_inferences
+            == c.sharded.summary.completed_inferences,
+        "{}: completions diverged: {} vs {}",
+        c.name,
+        c.single.summary.completed_inferences,
+        c.sharded.summary.completed_inferences
+    );
+    for ctx in [0u32, 1] {
+        anyhow::ensure!(
+            completed_for(&c.single, ctx) == completed_for(&c.sharded, ctx),
+            "{}: per-context completions diverged for ctx {}",
+            c.name,
+            ctx
+        );
+        let (a, b) = (c.single.cache.ctx(ctx), c.sharded.cache.ctx(ctx));
+        anyhow::ensure!(
+            (a.hits, a.misses, a.evictions, a.staged_bytes)
+                == (b.hits, b.misses, b.evictions, b.staged_bytes),
+            "{}: ctx {} cache transitions diverged: \
+             hits {}/{} misses {}/{} evictions {}/{} staged {}/{}",
+            c.name,
+            ctx,
+            a.hits,
+            b.hits,
+            a.misses,
+            b.misses,
+            a.evictions,
+            b.evictions,
+            a.staged_bytes,
+            b.staged_bytes
+        );
+        anyhow::ensure!(
+            (a.warm_restored, a.warm_restored_bytes)
+                == (b.warm_restored, b.warm_restored_bytes),
+            "{}: ctx {} warm restores diverged: {} ({} B) vs {} ({} B)",
+            c.name,
+            ctx,
+            a.warm_restored,
+            a.warm_restored_bytes,
+            b.warm_restored,
+            b.warm_restored_bytes
+        );
+    }
+    anyhow::ensure!(
+        c.single.warm_started_workers == c.sharded.warm_started_workers,
+        "{}: warm-started worker sets diverged: {:?} vs {:?}",
+        c.name,
+        c.single.warm_started_workers,
+        c.sharded.warm_started_workers
+    );
+    anyhow::ensure!(
+        c.sharded.steals == 0,
+        "{}: the balanced partition must need no work-stealing \
+         (got {} lends)",
+        c.name,
+        c.sharded.steals
+    );
+    anyhow::ensure!(
+        c.telemetry_single.completed == c.telemetry_sharded.completed
+            && c.telemetry_single.completed_inferences
+                == c.telemetry_sharded.completed_inferences
+            && c.telemetry_single.retried == c.telemetry_sharded.retried
+            && c.telemetry_single.warm_first_dispatches
+                == c.telemetry_sharded.warm_first_dispatches,
+        "{}: telemetry replay diverged between shard counts",
+        c.name
+    );
+    Ok(())
+}
+
+/// The acceptance gates the `shard-smoke` CI job enforces — always, at
+/// every scale (the scenarios are fixed-size): trace-level parity and
+/// matching cache/warm-restore accounting on both parity scenarios,
+/// zero invariant violations in every sharded trace, work-stealing
+/// engaged (and harmless) on the unbalanced scenario.
+pub fn verify(r: &ShardsReport) -> crate::Result<()> {
+    verify_parity(&r.parity)?;
+    verify_parity(&r.churn)?;
+    // The churn scenario must have actually churned.
+    anyhow::ensure!(
+        r.churn.sharded.summary.evictions > 0,
+        "churn: the storm must evict workers"
+    );
+    anyhow::ensure!(
+        r.churn.sharded.cache.totals().warm_restored > 0,
+        "churn: rejoined nodes must warm-restore from node caches"
+    );
+    // Stealing scenario: lends happen, nothing is lost.
+    anyhow::ensure!(
+        r.steal_sharded.shards == 2,
+        "steal: sharded run must keep two shards"
+    );
+    anyhow::ensure!(
+        r.steal_sharded.steals > 0,
+        "steal: the unbalanced workload must trigger work-stealing"
+    );
+    anyhow::ensure!(
+        r.steal_sharded.summary.completed_inferences
+            == r.steal_single.summary.completed_inferences,
+        "steal: sharded run must complete what the single shard does: \
+         {} vs {}",
+        r.steal_sharded.summary.completed_inferences,
+        r.steal_single.summary.completed_inferences
+    );
+    anyhow::ensure!(
+        r.steal_violations == 0,
+        "steal: sharded trace must replay clean ({} violations)",
+        r.steal_violations
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_experiment_passes_its_gates() {
+        // The exact runs the shard-smoke CI job performs.
+        let r = run_shards(42, TraceHandle::null());
+        verify(&r).unwrap();
+        assert_eq!(
+            r.parity.single.summary.completed_inferences,
+            2 * PARITY_INFERENCES_PER_APP
+        );
+        assert_eq!(
+            r.churn.sharded.summary.completed_inferences,
+            2 * CHURN_INFERENCES_PER_APP
+        );
+        assert_eq!(
+            r.steal_sharded.summary.completed_inferences,
+            STEAL_HEAVY_INFERENCES + STEAL_LIGHT_INFERENCES
+        );
+    }
+
+    #[test]
+    fn report_renders_all_scenarios() {
+        let r = run_shards(7, TraceHandle::null());
+        let text = report(&r);
+        for needle in [
+            "parity_1shard",
+            "parity_2shard",
+            "churn_1shard",
+            "steal_2shard",
+            "trace parity",
+            "lends across shards",
+        ] {
+            assert!(text.contains(needle), "report missing {needle}:\n{text}");
+        }
+    }
+
+    #[test]
+    fn normalization_strips_shard_and_clock_but_keeps_payload() {
+        let a = TraceEvent::TaskDispatch {
+            at: 1.0,
+            task: 7,
+            ctx: 0,
+            worker: 2,
+            warm: true,
+            est_s: 0.5,
+            alt_worker: Some(3),
+            alt_est_s: Some(1.5),
+        };
+        let b = TraceEvent::TaskDispatch {
+            at: 9.0,
+            task: 7,
+            ctx: 0,
+            worker: 2,
+            warm: true,
+            est_s: 0.25,
+            alt_worker: None,
+            alt_est_s: None,
+        };
+        let c = TraceEvent::TaskDispatch {
+            at: 1.0,
+            task: 7,
+            ctx: 0,
+            worker: 3, // different decision → different key
+            warm: true,
+            est_s: 0.5,
+            alt_worker: None,
+            alt_est_s: None,
+        };
+        let (na, nb, nc) = (
+            normalized(&[a]),
+            normalized(&[b]),
+            normalized(&[c]),
+        );
+        assert_eq!(na, nb);
+        assert_ne!(na, nc);
+        assert_eq!(multiset_diff(&na, &nb), (0, 0));
+        assert_eq!(multiset_diff(&na, &nc), (1, 1));
+    }
+
+    #[test]
+    fn dispatch_round_and_run_start_are_skipped() {
+        let events = vec![
+            TraceEvent::RunStart {
+                at: 0.0,
+                label: "x".into(),
+                policy: "greedy".into(),
+            },
+            TraceEvent::DispatchRound {
+                at: 1.0,
+                policy: "greedy".into(),
+                assigned: 1,
+                prefetched: 0,
+                queued: 0,
+                wall_s: 1e-6,
+                shard: Some(1),
+            },
+        ];
+        assert!(normalized(&events).is_empty());
+    }
+}

@@ -17,8 +17,11 @@
 use crate::cluster::node::{full_cluster, pool_20_mixed, pool_single_a10};
 use crate::cluster::{GpuModel, LoadTrace};
 use crate::coordinator::factory::FactoryPolicy;
-use crate::coordinator::{ContextPolicy, SimConfig};
+use crate::coordinator::{ContextPolicy, ContextRecipe, SimConfig};
 use crate::util::Rng;
+
+/// The paper's workload: 150 k PfF inferences over one context.
+const PAPER_INFERENCES: u64 = 150_000;
 
 /// A named, seedable experiment recipe.
 #[derive(Debug, Clone)]
@@ -42,20 +45,24 @@ fn base_20(
     batch: u64,
     seed: u64,
 ) -> SimConfig {
-    SimConfig::new(id, policy, batch, pool_20_mixed(), LoadTrace::constant(20), seed)
+    SimConfig::builder(id, policy, pool_20_mixed(), LoadTrace::constant(20), seed)
+        .app(ContextRecipe::smollm2_pff(0), PAPER_INFERENCES, batch)
+        .build()
+        .expect("static spec is valid")
 }
 
 fn pv0(seed: u64) -> SimConfig {
-    let mut cfg = SimConfig::new(
+    SimConfig::builder(
         "pv0",
         ContextPolicy::Pervasive,
-        100,
         pool_single_a10(),
         LoadTrace::constant(1),
         seed,
-    );
-    cfg.start_gate_fraction = 1.0;
-    cfg
+    )
+    .app(ContextRecipe::smollm2_pff(0), PAPER_INFERENCES, 100)
+    .start_gate_fraction(1.0)
+    .build()
+    .expect("static spec is valid")
 }
 
 fn pv1(seed: u64) -> SimConfig {
@@ -88,17 +95,18 @@ sweep_fn!(pv4_7_5k, "pv4_7.5k", ContextPolicy::Pervasive, 7_500);
 /// pv5 drain trace: 15 undisturbed minutes (after the start gate), then
 /// 1 GPU/min, A10s reclaimed first (§6.3 Effort 5).
 fn pv5_config(id: &'static str, policy: ContextPolicy, batch: u64, seed: u64) -> SimConfig {
-    let mut cfg = SimConfig::new(
+    SimConfig::builder(
         id,
         policy,
-        batch,
         pool_20_mixed(),
         // Gate opens ~20-30 s in; give the pool 15 min from then.
         LoadTrace::drain(20, 950.0, 60.0),
         seed,
-    );
-    cfg.reclaim_priority = vec![GpuModel::A10, GpuModel::TitanXPascal];
-    cfg
+    )
+    .app(ContextRecipe::smollm2_pff(0), PAPER_INFERENCES, batch)
+    .reclaim_priority(vec![GpuModel::A10, GpuModel::TitanXPascal])
+    .build()
+    .expect("static spec is valid")
 }
 
 fn pv5p(seed: u64) -> SimConfig {
@@ -129,18 +137,13 @@ fn pv6_at(
         hi,
         &mut trace_rng,
     );
-    let mut cfg = SimConfig::new(
-        id,
-        ContextPolicy::Pervasive,
-        100,
-        full_cluster(),
-        trace,
-        seed,
-    );
-    cfg.factory = FactoryPolicy { max_workers: None, cap_to_ready_tasks: true };
-    // Unrestricted runs start as soon as resources trickle in.
-    cfg.start_gate_fraction = 0.0;
-    cfg
+    SimConfig::builder(id, ContextPolicy::Pervasive, full_cluster(), trace, seed)
+        .app(ContextRecipe::smollm2_pff(0), PAPER_INFERENCES, 100)
+        .factory(FactoryPolicy { max_workers: None, cap_to_ready_tasks: true })
+        // Unrestricted runs start as soon as resources trickle in.
+        .start_gate_fraction(0.0)
+        .build()
+        .expect("static spec is valid")
 }
 
 fn pv6_10a(seed: u64) -> SimConfig {
@@ -245,15 +248,16 @@ mod tests {
         for spec in figure4_specs() {
             let cfg = spec.build(0);
             assert_eq!(cfg.name, spec.id);
-            assert_eq!(cfg.total_inferences, 150_000);
+            assert_eq!(cfg.apps.len(), 1, "paper runs are single-app");
+            assert_eq!(cfg.apps[0].total_inferences, 150_000);
         }
         let pv5s = spec_by_id("pv5s").unwrap().build(0);
         assert_eq!(pv5s.policy, ContextPolicy::Pervasive);
-        assert_eq!(pv5s.batch_size, 100);
+        assert_eq!(pv5s.apps[0].batch_size, 100);
         assert_eq!(pv5s.reclaim_priority[0], GpuModel::A10);
         let pv5p = spec_by_id("pv5p").unwrap().build(0);
         assert_eq!(pv5p.policy, ContextPolicy::Partial);
-        assert_eq!(pv5p.batch_size, 1_000);
+        assert_eq!(pv5p.apps[0].batch_size, 1_000);
     }
 
     #[test]
@@ -281,7 +285,7 @@ mod tests {
                 let spec = spec_by_id(&id).unwrap_or_else(|| {
                     panic!("missing spec {id}")
                 });
-                assert_eq!(spec.build(0).batch_size, b);
+                assert_eq!(spec.build(0).apps[0].batch_size, b);
             }
         }
     }

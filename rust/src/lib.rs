@@ -56,6 +56,66 @@
 //!
 //! For live PJRT serving see `examples/fact_verification.rs`.
 //!
+//! ## Configuring a run
+//!
+//! Both drivers take one workload shape: a list of applications. A
+//! [`coordinator::SimConfig`] holds [`coordinator::AppSpec`]s (recipe +
+//! workload + batch size; a single-app run is a one-element list, which
+//! is what [`coordinator::SimConfig::new`] seeds), and a
+//! [`live::LiveConfig`] holds [`live::LiveApp`]s. The validating
+//! builders are the front door: conflicting app declarations, an empty
+//! app list, or a zero shard count fail at `build()` instead of
+//! mid-run.
+//!
+//! ```
+//! use pcm::cluster::node::pool_20_mixed;
+//! use pcm::cluster::LoadTrace;
+//! use pcm::coordinator::{ContextPolicy, ContextRecipe, SimConfig};
+//!
+//! // Two tenants with different model sizes, served by two scheduler
+//! // shards (work-stealing keeps idle workers busy across shards).
+//! let cfg = SimConfig::builder(
+//!     "two-tenants",
+//!     ContextPolicy::Pervasive,
+//!     pool_20_mixed(),
+//!     LoadTrace::constant(8),
+//!     42,
+//! )
+//! .app(ContextRecipe::smollm2_pff(0), 2_000, 100)
+//! .app(ContextRecipe::custom(1, "small", 1 << 30, 2 << 30), 1_000, 50)
+//! .shards(2)
+//! .build()
+//! .expect("validated at configuration time");
+//! assert_eq!(cfg.apps.len(), 2);
+//! assert_eq!(cfg.shards, 2);
+//!
+//! // Declaring the workload two ways at once is refused.
+//! let err = SimConfig::builder(
+//!     "conflict",
+//!     ContextPolicy::Pervasive,
+//!     pool_20_mixed(),
+//!     LoadTrace::constant(8),
+//!     42,
+//! )
+//! .app(ContextRecipe::smollm2_pff(0), 2_000, 100)
+//! .apps(vec![])
+//! .build()
+//! .unwrap_err();
+//! assert!(err.to_string().contains("conflicting application"));
+//! ```
+//!
+//! `shards > 1` partitions contexts (queues, warm sets, indexed state)
+//! across N independent scheduler shards under a
+//! [`coordinator::ShardedCoordinator`]; a work-stealing pass lends idle
+//! workers of drained shards to backlogged peers and returns them when
+//! their home shard backs up, so no worker is ever owned by two shards.
+//! `pcm experiment shards` asserts trace-level parity between one- and
+//! two-shard runs of the same workload. Live runs configure the same
+//! way via [`live::LiveConfig::builder`] (manifest profile names
+//! instead of recipes), and both outcomes render through one
+//! [`coordinator::RunReport`] (`SimOutcome::report()` /
+//! `LiveOutcome::report(&cfg)`).
+//!
 //! ## Writing a scheduling policy
 //!
 //! Placement is split from mechanism: implement
@@ -84,10 +144,12 @@
 //! through [`coordinator::SchedulerView::queued_prefix`] or
 //! [`coordinator::SchedulerView::queued_of_context`] with a bound
 //! derived from the idle-worker count — a round can place at most one
-//! task per idle worker, so deeper entries cannot matter. The unbounded
-//! [`coordinator::SchedulerView::queued`] walks the whole backlog and is
-//! for reference implementations and tests, not per-round code (the
-//! `coordinator::policy` module docs spell out the full cost contract).
+//! task per idle worker, so deeper entries cannot matter. There is no
+//! unbounded `queued()` convenience on the view: code that genuinely
+//! needs the whole backlog (reference ports, golden tests) spells it
+//! out as `queued_prefix(usize::MAX)`, so the O(queue) cost is always
+//! visible at the call site (the `coordinator::policy` module docs
+//! spell out the full cost contract).
 //!
 //! ```no_run
 //! use pcm::coordinator::policy::{
@@ -159,20 +221,22 @@
 //! ```no_run
 //! use pcm::cluster::{LoadTrace, NodeAvailabilityTrace};
 //! use pcm::cluster::node::pool_20_mixed;
-//! use pcm::coordinator::{ContextPolicy, PolicyKind, SimConfig, SimDriver};
+//! use pcm::coordinator::{
+//!     ContextPolicy, ContextRecipe, PolicyKind, SimConfig, SimDriver,
+//! };
 //! use pcm::util::Rng;
 //!
 //! // A reclamation storm over a constant 20-node pool, placed risk-aware.
-//! let mut cfg = SimConfig::new(
+//! let cfg = SimConfig::builder(
 //!     "churn-demo",
 //!     ContextPolicy::Pervasive,
-//!     50,
 //!     pool_20_mixed(),
 //!     LoadTrace::constant(20),
 //!     42,
-//! );
-//! cfg.placement = PolicyKind::RiskAware;
-//! cfg.node_trace = Some(NodeAvailabilityTrace::storm(
+//! )
+//! .app(ContextRecipe::smollm2_pff(0), 150_000, 50)
+//! .placement(PolicyKind::RiskAware)
+//! .node_trace(NodeAvailabilityTrace::storm(
 //!     &(0..20).collect::<Vec<_>>(),
 //!     120.0, // first wave at t=120 s
 //!     3,     // three waves
@@ -180,7 +244,9 @@
 //!     60.0,  // each node down ~60 s
 //!     4,     // four nodes per wave
 //!     &mut Rng::new(7),
-//! ));
+//! ))
+//! .build()
+//! .unwrap();
 //! let out = SimDriver::new(cfg).run();
 //! println!(
 //!     "evictions={} warm_restored={} staged={}B",
@@ -262,16 +328,17 @@
 //! use pcm::obs::{self, MemorySink, TraceEvent, TraceHandle};
 //!
 //! let sink = Arc::new(Mutex::new(MemorySink::unbounded()));
-//! let mut cfg = SimConfig::new(
+//! let cfg = SimConfig::builder(
 //!     "observe-demo",
 //!     ContextPolicy::Pervasive,
-//!     100,
 //!     pool_20_mixed(),
 //!     LoadTrace::constant(4),
 //!     7,
-//! );
-//! cfg.total_inferences = 500;
-//! cfg.trace_sink = TraceHandle::from_shared(sink.clone());
+//! )
+//! .app(pcm::coordinator::ContextRecipe::smollm2_pff(0), 500, 100)
+//! .trace_sink(TraceHandle::from_shared(sink.clone()))
+//! .build()
+//! .unwrap();
 //! let out = SimDriver::new(cfg).run();
 //!
 //! let events = sink.lock().unwrap().events();

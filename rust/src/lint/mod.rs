@@ -13,7 +13,7 @@
 //!
 //! | rule | scope | enforces |
 //! |------|-------|----------|
-//! | `choke-trace` / `choke-index` | `coordinator/scheduler.rs` | every `pub fn(&mut self, ..)` emits through `self.trace` and touches index state |
+//! | `choke-trace` / `choke-index` | `coordinator/scheduler.rs`, `coordinator/sharded.rs` | every `pub fn(&mut self, ..)` emits through `self.trace` and touches index state |
 //! | `panic-free` | `coordinator/`, `live/`, `obs/`, `cluster/` | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` outside tests |
 //! | `trace-wildcard` | `obs/` | no `_ =>` arm in a match over `TraceEvent` |
 //! | `field-parity` | `obs/event.rs` | serializer and parser agree on every JSONL field name |
@@ -64,7 +64,7 @@ impl fmt::Display for Finding {
 /// relative to `src/`) over `source`.
 pub fn check_file(rel: &str, source: &str) -> Vec<Finding> {
     let mut out = Vec::new();
-    if rel == "coordinator/scheduler.rs" {
+    if rel == "coordinator/scheduler.rs" || rel == "coordinator/sharded.rs" {
         out.extend(check_choke_points(rel, source));
     }
     let hot = ["coordinator/", "live/", "obs/", "cluster/"]
@@ -158,14 +158,30 @@ mod tests {
     }
 
     #[test]
-    fn dispatch_runs_choke_rule_only_on_the_scheduler() {
+    fn dispatch_runs_choke_rule_only_on_the_coordinators() {
         let src = "impl S {\n\
                    \x20   pub fn m(&mut self, n: u64) { self.x = n; }\n\
                    }\n";
         let sched = check_file("coordinator/scheduler.rs", src);
         assert!(sched.iter().any(|f| f.rule == "choke-trace"), "{sched:?}");
+        let sharded = check_file("coordinator/sharded.rs", src);
+        assert!(
+            sharded.iter().any(|f| f.rule == "choke-trace"),
+            "{sharded:?}"
+        );
         let other = check_file("coordinator/batcher.rs", src);
         assert!(other.iter().all(|f| !f.rule.starts_with("choke")));
+    }
+
+    #[test]
+    fn shard_routing_maps_count_as_index_state() {
+        let src = "impl S {\n\
+                   \x20   pub fn m(&mut self, w: u64) {\n\
+                   \x20       self.trace.emit(e);\n\
+                   \x20       self.worker_shard.insert(w, 0);\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(check_file("coordinator/sharded.rs", src).is_empty());
     }
 
     #[test]

@@ -30,10 +30,12 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use super::scan::{scan, Line};
 use super::Finding;
 
-/// Index-maintenance vocabulary of `coordinator/scheduler.rs`: a
-/// mutating choke point must touch at least one of these (directly or
-/// through the named helpers) or carry an `unindexed` allow. Grown
-/// alongside the scheduler's incremental indexes.
+/// Index-maintenance vocabulary of `coordinator/scheduler.rs` and
+/// `coordinator/sharded.rs`: a mutating choke point must touch at least
+/// one of these (directly or through the named helpers) or carry an
+/// `unindexed` allow. Grown alongside the scheduler's incremental
+/// indexes and the sharded coordinator's routing maps (task → shard,
+/// worker → shard, worker → home, the global id allocator).
 const INDEX_TOKENS: &[&str] = &[
     "self.idle",
     "self.ready",
@@ -44,6 +46,11 @@ const INDEX_TOKENS: &[&str] = &[
     "self.completed_ctx",
     "self.prefetch_ctx",
     "self.est_cache",
+    "self.task_shard",
+    "self.worker_shard",
+    "self.home_shard",
+    "self.ctx_shard",
+    "self.next_worker_id",
     "enqueue_ready",
     "dequeue_ready",
     "purge_worker_indexes",
@@ -191,8 +198,9 @@ fn block_text(lines: &[Line], bj: usize, bp: usize) -> (String, usize) {
 /// `&mut self` must emit through `self.trace` *and* touch
 /// index-maintenance state (see [`INDEX_TOKENS`]), or carry
 /// `// pcm-lint: allow(untraced|unindexed) -- <reason>` above its
-/// signature. Applied to `coordinator/scheduler.rs` only: a new
-/// mutation path can never ship unobserved or unindexed.
+/// signature. Applied to `coordinator/scheduler.rs` and
+/// `coordinator/sharded.rs`: a new mutation path can never ship
+/// unobserved or unindexed.
 pub fn check_choke_points(file: &str, source: &str) -> Vec<Finding> {
     let lines = scan(source);
     let mut sup = Suppressor::new(&lines);

@@ -1,16 +1,22 @@
-//! Live driver: the Scheduler state machine over real worker threads.
+//! Live driver: the sharded coordinator over real worker threads.
 //!
 //! The same dispatch/phase/complete protocol as the simulated driver,
 //! with wall-clock time and real work — now including the parts churn
 //! makes interesting:
 //!
 //! * **Multi-application serving.** One run hosts any number of
-//!   [`LiveApp`]s, each with its own manifest profile, workload and
-//!   [`ContextRecipe`], registered through the same
-//!   [`Scheduler::with_registry`] entry point the sim driver uses. Their
-//!   task streams interleave round-robin and compete for each worker's
-//!   byte-budgeted cache; per-context accuracy, latency and
-//!   [`CacheStats`] land in [`LiveOutcome::per_app`].
+//!   [`LiveApp`]s — the workload is always the `apps` list (one app =
+//!   one-element list; use [`LiveConfig::builder`]), each app with its
+//!   own manifest profile, workload and [`ContextRecipe`], registered
+//!   through the same [`ShardedCoordinator`] entry point the sim driver
+//!   uses. Their task streams interleave round-robin and compete for
+//!   each worker's byte-budgeted cache; per-context accuracy, latency
+//!   and [`CacheStats`] land in [`LiveOutcome::per_app`].
+//! * **Sharded serving.** [`LiveConfig::shards`] > 1 partitions the
+//!   contexts across scheduler shards with work-stealing, exactly like
+//!   the sim driver. Completion messages route per shard: each worker
+//!   reports to its node's *home shard* channel instead of one mpsc
+//!   funnel, and the driver polls the shard channels round-robin.
 //! * **Kill/restart warm starts.** A [`NodeAvailabilityTrace`] mapped
 //!   onto wall-clock seconds reclaims live workers mid-run: the thread
 //!   is stopped, its in-flight task is requeued through the ordinary
@@ -36,8 +42,8 @@ use crate::app::{AccuracyReport, InferenceWorkload, PffApp};
 use crate::cluster::{GpuModel, Node, NodeAvailabilityTrace, NodeId};
 use crate::coordinator::{
     Batcher, CacheStats, ContextId, ContextPolicy, ContextRecipe, CostModel,
-    PolicyKind, Scheduler, Task, TaskRecord, TransferPlanner, WorkerId,
-    DEFAULT_CACHE_CAPACITY_BYTES,
+    PolicyKind, RunReport, RunSummary, Scheduler, ShardedCoordinator, Task,
+    TaskRecord, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES,
 };
 use crate::obs::{TraceEvent, TraceHandle};
 use crate::runtime::{BackendKind, Manifest};
@@ -63,16 +69,13 @@ pub struct LiveApp {
     pub batch_size: u64,
 }
 
-/// Live-run configuration.
+/// Live-run configuration. The workload is always the [`LiveApp`] list
+/// in `apps` — a single-application run is a one-element list (the
+/// default, or via [`LiveConfig::builder`]); there are no parallel
+/// single-app fields.
 #[derive(Debug, Clone)]
 pub struct LiveConfig {
-    /// Single-application profile (ignored when `apps` is non-empty).
-    pub profile: String,
     pub policy: ContextPolicy,
-    /// Single-application batch size (ignored when `apps` is non-empty).
-    pub batch_size: u64,
-    /// Single-application workload (ignored when `apps` is non-empty).
-    pub total_inferences: u64,
     /// Worker speed multipliers (1.0 = full speed); length = node count.
     /// Indexed by node id, so a restarted worker inherits its node's
     /// speed class.
@@ -98,11 +101,14 @@ pub struct LiveConfig {
     /// keep it for inspection. With `false`, each exiting worker wipes
     /// its node dir and every restart is cold.
     pub persist_node_caches: bool,
-    /// Multi-application serving: when non-empty, each entry registers
-    /// its own `ContextRecipe` (context id = index) and the single-app
-    /// fields above are ignored. Task streams interleave round-robin
-    /// exactly like the sim driver's multi-app merge.
+    /// The applications of the run (never empty): each entry registers
+    /// its own `ContextRecipe` (context id = index). Task streams
+    /// interleave round-robin exactly like the sim driver's multi-app
+    /// merge.
     pub apps: Vec<LiveApp>,
+    /// Scheduler shard count for the [`ShardedCoordinator`] (clamped to
+    /// the app count; 1 = classic single-scheduler serving).
+    pub shards: usize,
     /// Wall-clock churn schedule: trace times are seconds since the run
     /// started. A `down` event kills the node's live worker (requeueing
     /// its in-flight task); an `up` event respawns a worker on that
@@ -135,16 +141,18 @@ pub struct LiveConfig {
 impl Default for LiveConfig {
     fn default() -> Self {
         Self {
-            profile: "tiny".to_string(),
             policy: ContextPolicy::Pervasive,
-            batch_size: 16,
-            total_inferences: 64,
             worker_speeds: vec![1.0, 1.0],
             seed: 0,
             cache_capacity_bytes: DEFAULT_CACHE_CAPACITY_BYTES,
             placement: PolicyKind::Greedy,
             persist_node_caches: true,
-            apps: Vec::new(),
+            apps: vec![LiveApp {
+                profile: "tiny".to_string(),
+                total_inferences: 64,
+                batch_size: 16,
+            }],
+            shards: 1,
             node_trace: None,
             backend: BackendKind::Pjrt,
             stage_bytes_per_s: None,
@@ -153,6 +161,150 @@ impl Default for LiveConfig {
             watchdog_s: DEFAULT_WATCHDOG_S,
             trace_sink: TraceHandle::null(),
         }
+    }
+}
+
+impl LiveConfig {
+    /// Start a validating builder (the counterpart of
+    /// `SimConfig::builder`). Add applications with
+    /// [`LiveConfigBuilder::app`] (appending) *or*
+    /// [`LiveConfigBuilder::apps`] (authoritative list) — mixing the two
+    /// is a validation error, as is an empty app list or a zero shard
+    /// count.
+    pub fn builder() -> LiveConfigBuilder {
+        LiveConfigBuilder {
+            cfg: LiveConfig::default(),
+            apps: Vec::new(),
+            bulk_apps: None,
+            shards: 1,
+        }
+    }
+}
+
+/// Validating builder for [`LiveConfig`] — see [`LiveConfig::builder`].
+#[derive(Debug, Clone)]
+pub struct LiveConfigBuilder {
+    cfg: LiveConfig,
+    apps: Vec<LiveApp>,
+    bulk_apps: Option<Vec<LiveApp>>,
+    shards: usize,
+}
+
+impl LiveConfigBuilder {
+    /// Append one application (manifest profile + workload share).
+    pub fn app(
+        mut self,
+        profile: impl Into<String>,
+        total_inferences: u64,
+        batch_size: u64,
+    ) -> Self {
+        self.apps.push(LiveApp {
+            profile: profile.into(),
+            total_inferences,
+            batch_size,
+        });
+        self
+    }
+
+    /// Set the full application list at once (conflicts with [`Self::app`]).
+    pub fn apps(mut self, apps: Vec<LiveApp>) -> Self {
+        self.bulk_apps = Some(apps);
+        self
+    }
+
+    /// Scheduler shard count (validated ≥ 1; clamped to the app count
+    /// at run time).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn policy(mut self, policy: ContextPolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn placement(mut self, placement: PolicyKind) -> Self {
+        self.cfg.placement = placement;
+        self
+    }
+
+    pub fn worker_speeds(mut self, speeds: Vec<f64>) -> Self {
+        self.cfg.worker_speeds = speeds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn cache_capacity_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.cache_capacity_bytes = bytes;
+        self
+    }
+
+    pub fn persist_node_caches(mut self, persist: bool) -> Self {
+        self.cfg.persist_node_caches = persist;
+        self
+    }
+
+    pub fn node_trace(mut self, trace: NodeAvailabilityTrace) -> Self {
+        self.cfg.node_trace = Some(trace);
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    pub fn stage_bytes_per_s(mut self, bps: f64) -> Self {
+        self.cfg.stage_bytes_per_s = Some(bps);
+        self
+    }
+
+    pub fn execute_floor_s(mut self, floor: f64) -> Self {
+        self.cfg.execute_floor_s = floor;
+        self
+    }
+
+    pub fn keep_cache_root(mut self, keep: bool) -> Self {
+        self.cfg.keep_cache_root = keep;
+        self
+    }
+
+    pub fn watchdog_s(mut self, watchdog: f64) -> Self {
+        self.cfg.watchdog_s = watchdog;
+        self
+    }
+
+    pub fn trace_sink(mut self, trace: TraceHandle) -> Self {
+        self.cfg.trace_sink = trace;
+        self
+    }
+
+    /// Validate and produce the config. Errors mirror
+    /// `SimConfigBuilder::build`: both [`Self::app`] and [`Self::apps`]
+    /// used, an empty application list, or `shards == 0`.
+    pub fn build(mut self) -> Result<LiveConfig> {
+        let apps = match (self.apps.is_empty(), self.bulk_apps) {
+            (false, Some(_)) => anyhow::bail!(
+                "conflicting application settings: both .app() and \
+                 .apps() were used — declare the workload one way"
+            ),
+            (false, None) => self.apps,
+            (true, Some(bulk)) => bulk,
+            (true, None) => Vec::new(),
+        };
+        anyhow::ensure!(
+            !apps.is_empty(),
+            "a run needs at least one application (.app() or .apps())"
+        );
+        anyhow::ensure!(self.shards > 0, "shard count must be at least 1");
+        self.cfg.apps = apps;
+        self.cfg.shards = self.shards;
+        Ok(self.cfg)
     }
 }
 
@@ -196,6 +348,34 @@ pub struct LiveOutcome {
     pub evictions: u32,
     /// Inferences that were in flight at a kill and had to be redone.
     pub evicted_inferences: u64,
+    /// Scheduler shard count the run used (1 = unsharded).
+    pub shards: usize,
+    /// Idle workers lent across shards by the work-stealing pass.
+    pub steals: u64,
+}
+
+impl LiveOutcome {
+    /// The unified per-run report (same shape as `SimOutcome::report`),
+    /// rendered through the shared `obs` helpers.
+    pub fn report(&self, cfg: &LiveConfig) -> RunReport {
+        let summary = RunSummary::from_records(
+            format!("live-{}", cfg.apps[0].profile),
+            cfg.policy.as_str(),
+            cfg.apps[0].batch_size,
+            self.wall_s,
+            cfg.worker_speeds.len() as f64,
+            self.completed_inferences,
+            self.evicted_inferences,
+            self.evictions,
+            &self.records,
+        );
+        RunReport {
+            summary,
+            cache: self.cache.clone(),
+            shards: self.shards,
+            steals: self.steals,
+        }
+    }
 }
 
 /// One wall-clock churn event awaiting execution.
@@ -242,15 +422,12 @@ pub struct LiveDriver {
 
 impl LiveDriver {
     pub fn new(cfg: LiveConfig, manifest: Manifest) -> Self {
-        let apps: Vec<LiveApp> = if cfg.apps.is_empty() {
-            vec![LiveApp {
-                profile: cfg.profile.clone(),
-                total_inferences: cfg.total_inferences,
-                batch_size: cfg.batch_size,
-            }]
-        } else {
-            cfg.apps.clone()
-        };
+        assert!(
+            !cfg.apps.is_empty(),
+            "LiveConfig.apps must not be empty (LiveConfig::builder \
+             validates this)"
+        );
+        let apps: Vec<LiveApp> = cfg.apps.clone();
         let workloads = apps
             .iter()
             .enumerate()
@@ -323,19 +500,20 @@ impl LiveDriver {
             recipes.push(recipe);
             profiles.insert(ctx, app.profile.clone());
         }
-        let mut sched = Scheduler::with_registry(
+        let mut sched = ShardedCoordinator::new(
+            self.cfg.shards,
             self.cfg.policy,
             recipes,
-            TransferPlanner::new(3),
+            3,
             CostModel::default(),
             self.cfg.cache_capacity_bytes,
-        )
-        .with_policy(self.cfg.placement.build())
-        .with_trace(self.cfg.trace_sink.clone());
+            self.cfg.placement,
+            self.cfg.trace_sink.clone(),
+        );
         if sched.trace().on() {
             sched.trace().emit(TraceEvent::RunStart {
                 at: 0.0,
-                label: format!("live-{}", self.cfg.profile),
+                label: format!("live-{}", self.apps[0].profile),
                 policy: self.cfg.placement.as_str().to_string(),
             });
         }
@@ -359,8 +537,17 @@ impl LiveDriver {
             execute_floor_s: self.cfg.execute_floor_s,
         });
 
-        // Keep one sender alive for respawns; worker clones hang off it.
-        let (result_tx, result_rx) = mpsc::channel::<WorkerMsg>();
+        // One completion channel per shard: a worker reports to its
+        // node's home-shard channel. The senders stay alive on this
+        // stack frame for respawns; worker clones hang off them.
+        let mut result_txs = Vec::with_capacity(sched.shard_count());
+        let mut rxs = Vec::with_capacity(sched.shard_count());
+        for _ in 0..sched.shard_count() {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            result_txs.push(tx);
+            rxs.push(rx);
+        }
+        let result_rx = ShardRx::new(rxs);
         let mut pool = Pool::default();
         let t0 = Instant::now();
         for node in 0..self.cfg.worker_speeds.len() {
@@ -368,7 +555,7 @@ impl LiveDriver {
                 &mut sched,
                 &mut pool,
                 &shared,
-                &result_tx,
+                &result_txs,
                 &self.cfg.worker_speeds,
                 node as NodeId,
                 t0.elapsed().as_secs_f64(),
@@ -471,7 +658,7 @@ impl LiveDriver {
                         &mut sched,
                         &mut pool,
                         &shared,
-                        &result_tx,
+                        &result_txs,
                         &self.cfg.worker_speeds,
                         e.node,
                         t0.elapsed().as_secs_f64(),
@@ -570,9 +757,9 @@ impl LiveDriver {
                     continue;
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    // pcm-lint: allow(panic) -- result_tx lives on this
-                    // stack frame, so the channel cannot disconnect.
-                    unreachable!("driver holds a result sender")
+                    // pcm-lint: allow(panic) -- result_txs lives on this
+                    // stack frame, so no channel can disconnect.
+                    unreachable!("driver holds every result sender")
                 }
             };
             let from = match &msg {
@@ -715,46 +902,80 @@ impl LiveDriver {
             accuracy,
             records,
             task_latency: latency,
-            cache: sched.cache_stats().clone(),
+            cache: sched.cache_stats(),
             per_app,
             warm_started,
             warm_contexts,
             restarts,
             evictions: progress.evictions,
             evicted_inferences: progress.evicted_inferences,
+            shards: sched.shard_count(),
+            steals: sched.steals(),
         })
     }
 }
 
-/// One dispatch round: ask the scheduler, forward orders to worker
-/// threads. Ranges come from [`Scheduler::task_range`] — the merged
-/// multi-context id stream has no `task * batch_size` arithmetic. The
-/// scheduler only assigns to connected workers, so a missing channel or
-/// a dead receiver is a driver bug and fails loudly (a silent drop
-/// would park the task as Running forever).
+/// Receiving side of the per-shard completion channels. Single-shard
+/// runs keep the classic blocking `recv_timeout` on the one channel;
+/// sharded runs poll every shard's channel round-robin (short naps
+/// between sweeps) until the deadline. A disconnected channel is
+/// treated like an empty one — the driver owns one sender per shard on
+/// its own stack frame, so disconnection never happens mid-run.
+enum ShardRx {
+    Single(mpsc::Receiver<WorkerMsg>),
+    Multi(Vec<mpsc::Receiver<WorkerMsg>>),
+}
+
+impl ShardRx {
+    fn new(mut rxs: Vec<mpsc::Receiver<WorkerMsg>>) -> Self {
+        if rxs.len() == 1 {
+            // pcm-lint: allow(panic) -- len checked on this line.
+            ShardRx::Single(rxs.pop().expect("one receiver"))
+        } else {
+            ShardRx::Multi(rxs)
+        }
+    }
+
+    fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<WorkerMsg, mpsc::RecvTimeoutError> {
+        match self {
+            ShardRx::Single(rx) => rx.recv_timeout(timeout),
+            ShardRx::Multi(rxs) => {
+                let deadline = Instant::now() + timeout;
+                loop {
+                    for rx in rxs {
+                        if let Ok(msg) = rx.try_recv() {
+                            return Ok(msg);
+                        }
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(mpsc::RecvTimeoutError::Timeout);
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+}
+
+/// One dispatch round: ask the coordinator (which runs every shard's
+/// timed round — emitting the `dispatch_round` events — plus the
+/// steal/return passes), then forward orders to worker threads. Ranges
+/// come from `task_range` — the merged multi-context id stream has no
+/// `task * batch_size` arithmetic. The scheduler only assigns to
+/// connected workers, so a missing channel or a dead receiver is a
+/// driver bug and fails loudly (a silent drop would park the task as
+/// Running forever).
 fn send_dispatches(
-    sched: &mut Scheduler,
+    sched: &mut ShardedCoordinator,
     pool: &Pool,
     dispatched_at: &mut HashMap<u64, f64>,
     t0: Instant,
 ) -> Result<()> {
     let now = t0.elapsed().as_secs_f64();
-    sched.set_clock_hint(now);
-    let round_t0 = sched.trace().on().then(Instant::now);
-    let dispatches = sched.try_dispatch();
-    if let Some(rt0) = round_t0 {
-        let assigned =
-            dispatches.iter().filter(|d| !d.is_prefetch()).count() as u64;
-        let prefetched = dispatches.len() as u64 - assigned;
-        sched.trace().emit(TraceEvent::DispatchRound {
-            at: now,
-            policy: sched.placement_name().to_string(),
-            assigned,
-            prefetched,
-            queued: sched.ready_count() as u64,
-            wall_s: rt0.elapsed().as_secs_f64(),
-        });
-    }
+    let dispatches = sched.dispatch_all(now);
     for d in dispatches {
         let context = sched.dispatch_context(d.task).unwrap_or(0);
         let (start, count) = if Scheduler::is_prefetch_id(d.task) {
@@ -802,7 +1023,7 @@ fn send_dispatches(
 /// cleanup runs safely between that worker's orders. A worker killed
 /// between the decision and the forward has no channel anymore — its
 /// whole incarnation is gone, nothing to clean.
-fn forward_evictions(sched: &mut Scheduler, pool: &Pool) {
+fn forward_evictions(sched: &mut ShardedCoordinator, pool: &Pool) {
     for (wid, ctx) in sched.take_evictions() {
         if let Some(tx) = pool.order_txs.get(&wid) {
             let _ = tx.send(LiveOrder::Evict(ctx));
@@ -811,11 +1032,14 @@ fn forward_evictions(sched: &mut Scheduler, pool: &Pool) {
 }
 
 /// Spawn one worker incarnation on `node` and register it everywhere.
+/// The worker reports completions to its node's *home shard* channel —
+/// the shard that owns the worker's join/evict ledger even while the
+/// worker is lent to a peer shard.
 fn spawn_worker(
-    sched: &mut Scheduler,
+    sched: &mut ShardedCoordinator,
     pool: &mut Pool,
     shared: &Arc<LiveWorkerShared>,
-    result_tx: &mpsc::Sender<WorkerMsg>,
+    result_txs: &[mpsc::Sender<WorkerMsg>],
     speeds: &[f64],
     node: NodeId,
     now: f64,
@@ -834,7 +1058,7 @@ fn spawn_worker(
     // own thread from Send-able parts only.
     let worker_shared = Arc::clone(shared);
     let worker_stop = Arc::clone(&stop);
-    let out = result_tx.clone();
+    let out = result_txs[sched.home_shard_of_node(node)].clone();
     let handle = std::thread::spawn(move || {
         LiveWorker::new(wid, node, speed, worker_shared, worker_stop)
             .run(rx, out)
@@ -850,7 +1074,7 @@ fn spawn_worker(
 /// task, snapshot its disk tier for the eventual rejoin. Returns the
 /// killed worker id (None when the node had no live worker).
 fn kill_node(
-    sched: &mut Scheduler,
+    sched: &mut ShardedCoordinator,
     pool: &mut Pool,
     node: NodeId,
 ) -> Option<WorkerId> {
@@ -876,10 +1100,10 @@ fn kill_node(
 /// never touch the node cache dir concurrently.
 #[allow(clippy::too_many_arguments)]
 fn rejoin_node(
-    sched: &mut Scheduler,
+    sched: &mut ShardedCoordinator,
     pool: &mut Pool,
     shared: &Arc<LiveWorkerShared>,
-    result_tx: &mpsc::Sender<WorkerMsg>,
+    result_txs: &[mpsc::Sender<WorkerMsg>],
     speeds: &[f64],
     node: NodeId,
     now: f64,
@@ -890,7 +1114,7 @@ fn rejoin_node(
     if let Some(handle) = pool.parked.remove(&node) {
         let _ = handle.join();
     }
-    Some(spawn_worker(sched, pool, shared, result_tx, speeds, node, now))
+    Some(spawn_worker(sched, pool, shared, result_txs, speeds, node, now))
 }
 
 #[cfg(test)]
@@ -900,16 +1124,55 @@ mod tests {
     #[test]
     fn default_config_sane() {
         let c = LiveConfig::default();
-        assert_eq!(c.profile, "tiny");
-        assert!(c.total_inferences % c.batch_size == 0);
+        assert_eq!(c.apps.len(), 1, "single-app by default");
+        assert_eq!(c.apps[0].profile, "tiny");
+        assert!(c.apps[0].total_inferences % c.apps[0].batch_size == 0);
+        assert_eq!(c.shards, 1, "unsharded by default");
         assert_eq!(c.placement, PolicyKind::Greedy);
         assert!(c.persist_node_caches, "node caches survive by default");
-        assert!(c.apps.is_empty(), "single-app by default");
         assert!(c.node_trace.is_none(), "no churn by default");
         assert_eq!(c.backend, BackendKind::Pjrt, "real inference by default");
         assert_eq!(c.execute_floor_s, 0.0);
         assert!(!c.keep_cache_root);
         assert_eq!(c.watchdog_s, DEFAULT_WATCHDOG_S);
+    }
+
+    /// The builder mirrors `SimConfig::builder`'s validation: mixed
+    /// app declarations, an empty app list and zero shards all fail;
+    /// a well-formed two-app sharded config builds.
+    #[test]
+    fn builder_validates_like_the_sim_builder() {
+        let err = LiveConfig::builder()
+            .app("tiny", 32, 16)
+            .apps(vec![LiveApp {
+                profile: "small".into(),
+                total_inferences: 32,
+                batch_size: 16,
+            }])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("conflicting application"));
+
+        let err = LiveConfig::builder().build().unwrap_err();
+        assert!(err.to_string().contains("at least one application"));
+
+        let err = LiveConfig::builder()
+            .app("tiny", 32, 16)
+            .shards(0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("shard count"));
+
+        let cfg = LiveConfig::builder()
+            .app("tiny", 32, 16)
+            .app("small", 20, 10)
+            .shards(2)
+            .backend(BackendKind::Reference)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.apps.len(), 2);
+        assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.backend, BackendKind::Reference);
     }
 
     /// The merged multi-app stream interleaves round-robin with dense

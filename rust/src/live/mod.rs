@@ -30,5 +30,8 @@
 pub mod driver;
 pub mod worker;
 
-pub use driver::{LiveApp, LiveAppOutcome, LiveConfig, LiveDriver, LiveOutcome};
+pub use driver::{
+    LiveApp, LiveAppOutcome, LiveConfig, LiveConfigBuilder, LiveDriver,
+    LiveOutcome,
+};
 pub use worker::{LiveOrder, LiveWorker, LiveWorkerShared, WorkOrder, WorkerMsg};

@@ -3,7 +3,7 @@
 //! Subcommands (hand-rolled parser; the offline build has no clap):
 //!
 //! ```text
-//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|headline|all>
+//! pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|shards|headline|all>
 //!     [--seed N] [--scale F] [--results DIR]
 //!     [--policy greedy|fairshare|prefetch|riskaware]
 //! pcm run <pv-id> [--seed N] [--scale F]
@@ -129,7 +129,7 @@ const HELP: &str = "\
 pcm — pervasive context management for throughput-oriented LLM inference
 
 USAGE:
-  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|live-churn|headline|all>
+  pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|live-churn|shards|headline|all>
       [--seed N] [--scale F] [--results DIR]
       [--policy|--placement greedy|fairshare|prefetch|riskaware]
       (mixed: two applications with distinct contexts on one pool,
@@ -144,14 +144,18 @@ USAGE:
        worker threads, a forced mid-run kill/restart with a node-cache
        warm start, and two-app contention for a byte-budgeted cache;
        gates always enforced, exit 1 on failure)
-      (churn and live-churn accept --trace-out FILE.jsonl to record a
-       structured event trace of every run)
+      (shards: sharded-coordinator equivalence — two-shard vs
+       single-shard trace-level parity, plain and under node churn,
+       plus work-stealing on an unbalanced workload; gates always
+       enforced, exit 1 on failure)
+      (churn, live-churn and shards accept --trace-out FILE.jsonl to
+       record a structured event trace of every run)
   pcm run <pv-id>        run one experiment (e.g. pv4_100)
   pcm serve              live PJRT serving demo
       [--profile tiny|small] [--policy pervasive|partial|none]
       [--placement greedy|fairshare|prefetch|riskaware]
       [--backend pjrt|reference|auto]
-      [--workers N] [--batch B] [--inferences N]
+      [--workers N] [--batch B] [--inferences N] [--shards N]
       [--trace-out FILE.jsonl]
   pcm trace summarize FILE.jsonl
                          aggregate a recorded trace: per-run task and
@@ -182,8 +186,10 @@ fn scaled(
     scale: f64,
 ) -> pcm::coordinator::SimConfig {
     let mut cfg = spec.build(seed);
-    cfg.total_inferences =
-        ((cfg.total_inferences as f64 * scale).round() as u64).max(100);
+    for app in &mut cfg.apps {
+        app.total_inferences =
+            ((app.total_inferences as f64 * scale).round() as u64).max(100);
+    }
     cfg
 }
 
@@ -401,6 +407,29 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
                 );
             }
         }
+        "shards" => {
+            use pcm::experiments::shards;
+            eprintln!(
+                "running sharded-coordinator equivalence experiment \
+                 (two-shard vs single-shard trace parity, churn parity, \
+                 work-stealing; seed={seed})…"
+            );
+            let trace = flags.get_trace()?;
+            let r = shards::run_shards(seed, trace.clone());
+            trace.flush();
+            let text = shards::report(&r);
+            print!("{text}");
+            figures::write_result_file(&results_dir, "shards.txt", &text)?;
+            eprintln!("\nreport written under {results_dir}/");
+            // The shard-smoke CI gate. Always enforced — the scenarios
+            // are fixed-size (scale does not apply to a parity proof).
+            shards::verify(&r)?;
+            eprintln!(
+                "shard gates passed: two-shard traces match single-shard \
+                 event-for-event (plain and under churn); work-stealing \
+                 engaged on the unbalanced workload with no lost work"
+            );
+        }
         "headline" => {
             let results = run_specs_scaled(specs::figure4_specs(), seed, scale);
             print!("{}", figures::headline_text(&results));
@@ -460,28 +489,28 @@ fn serve(flags: &Flags) -> pcm::Result<()> {
     let batch = flags.get_u64("--batch", 16);
     let inferences = flags.get_u64("--inferences", 128);
 
+    let shards = flags.get_u64("--shards", 1) as usize;
     let manifest = Manifest::load(default_artifacts_dir())?;
-    let cfg = LiveConfig {
-        profile,
-        policy,
-        batch_size: batch,
-        total_inferences: inferences,
-        worker_speeds: vec![1.0; workers],
-        seed: flags.get_u64("--seed", 0),
-        placement,
-        backend,
-        trace_sink: flags.get_trace()?,
-        ..LiveConfig::default()
-    };
+    let cfg = LiveConfig::builder()
+        .app(profile, inferences, batch)
+        .policy(policy)
+        .worker_speeds(vec![1.0; workers])
+        .seed(flags.get_u64("--seed", 0))
+        .placement(placement)
+        .backend(backend)
+        .shards(shards)
+        .trace_sink(flags.get_trace()?)
+        .build()?;
     eprintln!(
         "live serving: {} inferences, batch {}, {} workers, {} policy, \
-         {} placement, {} backend…",
+         {} placement, {} backend, {} shard(s)…",
         inferences,
         batch,
         workers,
         policy.as_str(),
         placement.as_str(),
-        backend.as_str()
+        backend.as_str(),
+        shards
     );
     let out = LiveDriver::new(cfg, manifest).run()?;
     println!(
@@ -594,7 +623,7 @@ fn tune(flags: &Flags) -> pcm::Result<()> {
             LoadTrace::constant(20),
             seed,
         );
-        cfg.total_inferences =
+        cfg.apps[0].total_inferences =
             ((150_000.0 * scale).round() as u64).max(batch.max(100));
         let out = SimDriver::new(cfg).run();
         let tp = out.summary.completed_inferences as f64

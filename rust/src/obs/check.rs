@@ -212,7 +212,13 @@ mod tests {
     use super::*;
 
     fn join(worker: WorkerId, capacity: u64) -> TraceEvent {
-        TraceEvent::WorkerJoin { at: 0.0, worker, node: worker, capacity }
+        TraceEvent::WorkerJoin {
+            at: 0.0,
+            worker,
+            node: worker,
+            capacity,
+            shard: None,
+        }
     }
 
     fn stage(worker: WorkerId, ctx: ContextId, component: &str, bytes: u64, version: u32) -> TraceEvent {

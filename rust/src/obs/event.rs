@@ -110,7 +110,15 @@ pub enum TraceEvent {
     /// The registry bumped a context recipe to `version`.
     VersionBump { at: f64, ctx: ContextId, version: u32 },
     /// A worker incarnation joined on `node` with a byte `capacity`.
-    WorkerJoin { at: f64, worker: WorkerId, node: NodeId, capacity: u64 },
+    /// `shard` is the owning shard under a sharded coordinator (absent
+    /// — and absent from the wire form — in unsharded runs).
+    WorkerJoin {
+        at: f64,
+        worker: WorkerId,
+        node: NodeId,
+        capacity: u64,
+        shard: Option<u32>,
+    },
     /// A worker incarnation was reclaimed / exited.
     WorkerLost { at: f64, worker: WorkerId, node: NodeId },
     /// The availability trace took `node` down.
@@ -118,7 +126,10 @@ pub enum TraceEvent {
     /// The availability trace brought `node` back.
     NodeRejoin { at: f64, node: NodeId },
     /// One `try_dispatch` round: how many tasks / prefetches it placed,
-    /// the backlog it left, and its measured wall-clock cost.
+    /// the backlog it left, and its measured wall-clock cost. `shard`
+    /// identifies the shard that ran the round under a sharded
+    /// coordinator (absent — and absent from the wire form — in
+    /// unsharded runs).
     DispatchRound {
         at: f64,
         policy: String,
@@ -126,6 +137,7 @@ pub enum TraceEvent {
         prefetched: u64,
         queued: u64,
         wall_s: f64,
+        shard: Option<u32>,
     },
 }
 
@@ -381,15 +393,17 @@ impl TraceEvent {
                     ("version", num_u(*version as u64)),
                 ],
             ),
-            TraceEvent::WorkerJoin { at, worker, node, capacity } => obj(
-                kind,
-                *at,
-                vec![
+            TraceEvent::WorkerJoin { at, worker, node, capacity, shard } => {
+                let mut fields = vec![
                     ("worker", num_u(*worker as u64)),
                     ("node", num_u(*node as u64)),
                     ("capacity", num_u(*capacity)),
-                ],
-            ),
+                ];
+                if let Some(s) = shard {
+                    fields.push(("shard", num_u(*s as u64)));
+                }
+                obj(kind, *at, fields)
+            }
             TraceEvent::WorkerLost { at, worker, node } => obj(
                 kind,
                 *at,
@@ -409,17 +423,20 @@ impl TraceEvent {
                 prefetched,
                 queued,
                 wall_s,
-            } => obj(
-                kind,
-                *at,
-                vec![
+                shard,
+            } => {
+                let mut fields = vec![
                     ("policy", Json::Str(policy.clone())),
                     ("assigned", num_u(*assigned)),
                     ("prefetched", num_u(*prefetched)),
                     ("queued", num_u(*queued)),
                     ("wall_s", Json::Num(*wall_s)),
-                ],
-            ),
+                ];
+                if let Some(s) = shard {
+                    fields.push(("shard", num_u(*s as u64)));
+                }
+                obj(kind, *at, fields)
+            }
         }
     }
 
@@ -532,6 +549,7 @@ impl TraceEvent {
                 worker: req_u32(j, "worker")?,
                 node: req_u32(j, "node")?,
                 capacity: req_u64(j, "capacity")?,
+                shard: j.get("shard").and_then(Json::as_u64).map(|s| s as u32),
             },
             "worker_lost" => TraceEvent::WorkerLost {
                 at,
@@ -551,6 +569,7 @@ impl TraceEvent {
                 prefetched: req_u64(j, "prefetched")?,
                 queued: req_u64(j, "queued")?,
                 wall_s: req_f64(j, "wall_s")?,
+                shard: j.get("shard").and_then(Json::as_u64).map(|s| s as u32),
             },
             other => bail!("unknown trace event kind {other:?}"),
         })
@@ -636,7 +655,20 @@ mod tests {
             TraceEvent::TaskRetry { at: 5.0, task: 1, ctx: 0, worker: 2, inferences: 50 },
             TraceEvent::TaskDone { at: 6.0, task: 1, ctx: 0, worker: 6, inferences: 50 },
             TraceEvent::VersionBump { at: 7.0, ctx: 0, version: 2 },
-            TraceEvent::WorkerJoin { at: 8.0, worker: 7, node: 1, capacity: 1 << 34 },
+            TraceEvent::WorkerJoin {
+                at: 8.0,
+                worker: 7,
+                node: 1,
+                capacity: 1 << 34,
+                shard: None,
+            },
+            TraceEvent::WorkerJoin {
+                at: 8.5,
+                worker: 8,
+                node: 2,
+                capacity: 1 << 34,
+                shard: Some(1),
+            },
             TraceEvent::WorkerLost { at: 9.0, worker: 7, node: 1 },
             TraceEvent::NodeReclaim { at: 9.0, node: 1 },
             TraceEvent::NodeRejoin { at: 10.0, node: 1 },
@@ -647,6 +679,16 @@ mod tests {
                 prefetched: 1,
                 queued: 7,
                 wall_s: 1.25e-5,
+                shard: None,
+            },
+            TraceEvent::DispatchRound {
+                at: 11.5,
+                policy: "greedy".into(),
+                assigned: 1,
+                prefetched: 0,
+                queued: 2,
+                wall_s: 1.0e-5,
+                shard: Some(3),
             },
         ]
     }

@@ -369,7 +369,13 @@ mod tests {
     fn byte_seconds_integrate_over_residency() {
         let events = vec![
             start("bs"),
-            TraceEvent::WorkerJoin { at: 0.0, worker: 0, node: 0, capacity: 1000 },
+            TraceEvent::WorkerJoin {
+                at: 0.0,
+                worker: 0,
+                node: 0,
+                capacity: 1000,
+                shard: None,
+            },
             TraceEvent::CacheStage {
                 at: 1.0,
                 worker: 0,
@@ -393,7 +399,13 @@ mod tests {
     fn restored_bytes_accumulate_per_worker() {
         let events = vec![
             start("warm"),
-            TraceEvent::WorkerJoin { at: 0.0, worker: 3, node: 1, capacity: 1000 },
+            TraceEvent::WorkerJoin {
+                at: 0.0,
+                worker: 3,
+                node: 1,
+                capacity: 1000,
+                shard: None,
+            },
             TraceEvent::CacheRestore {
                 at: 0.0,
                 worker: 3,
@@ -472,6 +484,7 @@ mod tests {
             prefetched: 1,
             queued: 5,
             wall_s,
+            shard: None,
         };
         let events = vec![start("r"), round(1e-5), round(3e-5), round(2e-5)];
         let t = Telemetry::from_events(&events);

@@ -18,7 +18,7 @@ fn cfg_with_trace(trace: NodeAvailabilityTrace, seed: u64) -> SimConfig {
         LoadTrace::constant(20),
         seed,
     );
-    cfg.total_inferences = 8_000;
+    cfg.apps[0].total_inferences = 8_000;
     cfg.node_trace = Some(trace);
     cfg
 }
@@ -81,7 +81,7 @@ fn warm_started_workers_restore_instead_of_restaging() {
     );
     // Enough backlog that both waves' rejoins still find queued work
     // (the factory declines rejoins once the tail no longer needs them).
-    cfg.total_inferences = 12_000;
+    cfg.apps[0].total_inferences = 12_000;
     let out = SimDriver::new(cfg).run();
     assert_eq!(out.summary.completed_inferences, 12_000);
     assert!(

@@ -21,7 +21,7 @@ fn cfg(
         LoadTrace::constant(20),
         11,
     );
-    c.total_inferences = inferences;
+    c.apps[0].total_inferences = inferences;
     c
 }
 
@@ -89,7 +89,7 @@ fn drain_scenario_pervasive_wastes_less() {
             13,
         );
         c.reclaim_priority = vec![GpuModel::A10, GpuModel::TitanXPascal];
-        c.total_inferences = 20_000;
+        c.apps[0].total_inferences = 20_000;
         c
     };
     let s = SimDriver::new(mk("ps", ContextPolicy::Pervasive, 100)).run();
@@ -116,7 +116,7 @@ fn diurnal_full_cluster_run_adapts() {
         trace,
         7,
     );
-    c.total_inferences = 30_000;
+    c.apps[0].total_inferences = 30_000;
     c.start_gate_fraction = 0.0;
     let out = SimDriver::new(c).run();
     assert_eq!(out.summary.completed_inferences, 30_000);
@@ -159,7 +159,7 @@ fn eviction_mid_run_loses_no_inferences() {
         LoadTrace::from_steps(vec![(0.0, 20), (100.0, 3), (2_000.0, 20)]),
         17,
     );
-    c.total_inferences = 10_000;
+    c.apps[0].total_inferences = 10_000;
     let out = SimDriver::new(c).run();
     assert_eq!(out.summary.completed_inferences, 10_000);
     assert!(out.summary.evictions >= 10);

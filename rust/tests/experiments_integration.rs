@@ -15,8 +15,10 @@ const SCALE: f64 = 0.10;
 fn run_scaled(id: &str) -> ExperimentResult {
     let spec = spec_by_id(id).expect(id);
     let mut cfg = spec.build(SEED);
-    cfg.total_inferences =
-        ((cfg.total_inferences as f64 * SCALE) as u64).max(100);
+    for app in &mut cfg.apps {
+        app.total_inferences =
+            ((app.total_inferences as f64 * SCALE) as u64).max(100);
+    }
     let outcome = SimDriver::new(cfg).run();
     ExperimentResult {
         id: id.to_string(),

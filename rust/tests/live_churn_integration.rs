@@ -147,9 +147,11 @@ fn keep_cache_root_preserves_node_dirs() {
     let seed = 777_001;
     let cfg = LiveConfig {
         policy: ContextPolicy::Pervasive,
-        profile: "tiny".into(),
-        total_inferences: 16,
-        batch_size: 8,
+        apps: vec![LiveApp {
+            profile: "tiny".into(),
+            total_inferences: 16,
+            batch_size: 8,
+        }],
         worker_speeds: vec![1.0],
         seed,
         backend: BackendKind::Reference,

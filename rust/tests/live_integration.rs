@@ -18,15 +18,13 @@ fn manifest_or_skip() -> Option<Manifest> {
 }
 
 fn cfg(policy: ContextPolicy, workers: usize, n: u64, batch: u64) -> LiveConfig {
-    LiveConfig {
-        profile: "tiny".to_string(),
-        policy,
-        batch_size: batch,
-        total_inferences: n,
-        worker_speeds: vec![1.0; workers],
-        seed: 3,
-        ..LiveConfig::default()
-    }
+    LiveConfig::builder()
+        .app("tiny", n, batch)
+        .policy(policy)
+        .worker_speeds(vec![1.0; workers])
+        .seed(3)
+        .build()
+        .expect("live test config is valid")
 }
 
 #[test]

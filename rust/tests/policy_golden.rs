@@ -28,7 +28,7 @@ const LOOKAHEAD: usize = 64;
 /// logic (phases 1 + 2), expressed over the read-only view.
 fn reference_greedy(view: &SchedulerView) -> Vec<(TaskId, WorkerId)> {
     let mut paired = Vec::new();
-    let mut queue = view.queued();
+    let mut queue = view.queued_prefix(usize::MAX);
     if queue.is_empty() {
         return paired;
     }

@@ -106,7 +106,7 @@ fn reference_greedy(
     if idle.is_empty() {
         return decisions;
     }
-    let mut queue = view.queued();
+    let mut queue = view.queued_prefix(usize::MAX);
     if queue.is_empty() {
         return decisions;
     }
@@ -149,7 +149,7 @@ fn reference_fairshare(
     deficits: &mut BTreeMap<ContextId, f64>,
 ) -> Vec<PlacementDecision> {
     let mut decisions = Vec::new();
-    let queued = view.queued();
+    let queued = view.queued_prefix(usize::MAX);
     if queued.is_empty() {
         deficits.clear();
         return decisions;
@@ -231,7 +231,7 @@ fn reference_prefetch(
     width: usize,
 ) -> Vec<PlacementDecision> {
     let mut decisions = Vec::new();
-    let queue = view.queued();
+    let queue = view.queued_prefix(usize::MAX);
     if queue.is_empty() {
         return decisions;
     }
@@ -351,7 +351,7 @@ fn reference_riskaware(
     if idle.is_empty() {
         return decisions;
     }
-    let mut queue = view.queued();
+    let mut queue = view.queued_prefix(usize::MAX);
     if queue.is_empty() {
         return decisions;
     }

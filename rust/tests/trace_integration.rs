@@ -155,7 +155,7 @@ fn run_start() -> TraceEvent {
 }
 
 fn join(worker: u64, capacity: u64) -> TraceEvent {
-    TraceEvent::WorkerJoin { at: 0.0, worker, node: worker, capacity }
+    TraceEvent::WorkerJoin { at: 0.0, worker, node: worker, capacity, shard: None }
 }
 
 fn stage(worker: u64, ctx: u32, bytes: u64, version: u32) -> TraceEvent {
