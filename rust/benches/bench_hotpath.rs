@@ -485,6 +485,63 @@ fn main() {
         results.push(r);
     }
 
+    // Live-overlap curve: the reason the threaded live runtime exists.
+    // One steady-state pool per shard, each swept with the same number
+    // of dispatch rounds — once through a serial loop over the pools
+    // (the serial live driver's shape: one thread drains every shard)
+    // and once with one thread per pool (`live::threaded`'s shape).
+    // Pools are disjoint, so the threaded sweep should overlap almost
+    // perfectly; the gate at the bottom of `main` asserts the 4-shard
+    // threaded sweep beats the serial loop by the ISSUE-10 margin.
+    let overlap_rounds: u32 = if fast_mode() { 512 } else { 2_048 };
+    let mut overlap_medians = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let mut pools: Vec<_> = (0..shards)
+            .map(|_| steady_state(200, 200_000, TraceHandle::null()))
+            .collect();
+        let r_serial = bench(
+            format!(
+                "live overlap: serial loop / {shards} shard pool(s) \
+                 ({overlap_rounds} rounds each)"
+            ),
+            1,
+            iters(10),
+            || {
+                pools
+                    .iter_mut()
+                    .map(|(s, ring)| dispatch_rounds(s, ring, overlap_rounds))
+                    .sum::<u64>()
+            },
+        );
+        let r_threaded = bench(
+            format!(
+                "live overlap: thread per shard / {shards} shard pool(s) \
+                 ({overlap_rounds} rounds each)"
+            ),
+            1,
+            iters(10),
+            || {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = pools
+                        .iter_mut()
+                        .map(|(s, ring)| {
+                            scope.spawn(move || {
+                                dispatch_rounds(s, ring, overlap_rounds)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("overlap worker"))
+                        .sum::<u64>()
+                })
+            },
+        );
+        overlap_medians.push((r_serial.median_s, r_threaded.median_s));
+        results.push(r_serial);
+        results.push(r_threaded);
+    }
+
     results.push(bench(
         "broadcast plan: 567 workers, fanout 3",
         5,
@@ -641,6 +698,32 @@ fn main() {
             "SHARD SCALING VIOLATION: the 4-shard dispatch round is \
              {shard_ratio:.2}x the single-shard round (limit 1.5x) — \
              per-round coordinator overhead is scaling with shard count"
+        );
+        std::process::exit(1);
+    }
+
+    // CI gate: the thread-per-shard sweep must actually overlap. On
+    // four disjoint shard pools the threaded wall-clock may be at most
+    // 0.6x the serial loop — perfect 4-way overlap would be 0.25x, and
+    // 0.6x still holds on a 2-core runner. Sub-2ms serial sweeps
+    // measure thread spawn cost rather than overlap, so the gate only
+    // arms above that floor.
+    let (serial_4, threaded_4) = overlap_medians[2];
+    let overlap_floor_s = 2e-3;
+    let overlap_ratio = threaded_4 / serial_4.max(overlap_floor_s);
+    eprintln!(
+        "live overlap: serial4={:.2}ms threaded4={:.2}ms \
+         ratio={overlap_ratio:.2} (limit 0.60, floor {:.0}ms)",
+        serial_4 * 1e3,
+        threaded_4 * 1e3,
+        overlap_floor_s * 1e3,
+    );
+    if serial_4 >= overlap_floor_s && threaded_4 > 0.6 * serial_4 {
+        eprintln!(
+            "LIVE OVERLAP VIOLATION: the 4-shard thread-per-shard sweep \
+             took {overlap_ratio:.2}x the serial loop (limit 0.6x) — \
+             shard dispatch rounds are no longer overlapping in \
+             wall-clock"
         );
         std::process::exit(1);
     }

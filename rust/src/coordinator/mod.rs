@@ -70,7 +70,7 @@ pub use policy::{
     RiskAware, SchedulerView, WarmPrefetch, WeightedFairShare,
 };
 pub use scheduler::{Dispatch, Scheduler};
-pub use sharded::ShardedCoordinator;
+pub use sharded::{ShardParts, ShardedCoordinator};
 pub use sim_driver::{AppSpec, SimConfig, SimDriver, SimOutcome};
 pub use task::{Task, TaskId, TaskRecord, TaskState};
 pub use transfer::TransferPlanner;

@@ -33,6 +33,32 @@
 //! Both drivers ([`super::sim_driver`], [`crate::live`]) drive this
 //! coordinator exclusively; `shards = 1` is the degenerate — and
 //! default — configuration.
+//!
+//! # Threading model
+//!
+//! The coordinator itself is single-threaded (`&mut self` everywhere),
+//! but it is built to be *dismembered* for the threaded live runtime
+//! ([`crate::live::threaded`]): [`ShardedCoordinator::into_parts`]
+//! moves each [`Scheduler`] shard out so a dedicated thread can own it,
+//! and [`ShardedCoordinator::reassemble`] puts the pieces back together
+//! after the threads are joined (for records, cache stats and the
+//! conservation checks). The ownership rules that make that sound:
+//!
+//! * A `Scheduler` is `Send` (moved into a shard thread) but not
+//!   shared — each thread owns exactly one shard, and every mutation
+//!   of a shard happens on its thread.
+//! * A [`Worker`] moved between shards (lend / return / adopt) must
+//!   never be visible to two shard threads at once. The serial
+//!   steal/return passes guarantee this trivially; the threaded
+//!   runtime re-creates the guarantee with a two-phase message handoff
+//!   (the worker travels *inside* a channel message, owned by neither
+//!   thread while in transit).
+//! * Routing maps (`ctx_shard`, `task_shard`, `worker_shard`,
+//!   `home_shard`), the worker-id allocator and the steal counter stay
+//!   with whichever thread plays coordinator; shards never read them.
+//! * The [`TraceHandle`] is the one deliberately shared surface: it is
+//!   `Send + Sync` (sink behind a mutex) and every shard clones it, so
+//!   per-shard `dispatch_round` events interleave safely.
 
 use std::collections::HashMap;
 
@@ -53,7 +79,7 @@ use super::worker::{Worker, WorkerId};
 /// sequence numbers per shard (no run issues remotely that many) while
 /// keeping the id below the `1 << 62` base's headroom for any
 /// realistic shard count.
-const PREFETCH_SHARD_SHIFT: u64 = 40;
+pub(crate) const PREFETCH_SHARD_SHIFT: u64 = 40;
 
 /// N scheduler shards behind the single-coordinator API both drivers
 /// program against. See the module docs for the ownership rules.
@@ -73,7 +99,30 @@ pub struct ShardedCoordinator {
     next_worker_id: WorkerId,
     /// Workers lent to a backlogged peer shard over the run.
     steals: u64,
+    /// Whether `dispatch_all` runs the steal/return passes. The
+    /// threaded live runtime disables them here (the coordinator
+    /// thread initiates lends itself); parity experiments disable
+    /// them to keep N-shard and 1-shard schedules comparable.
+    steal_enabled: bool,
     trace: TraceHandle,
+}
+
+/// The dismembered coordinator: every shard's [`Scheduler`] plus the
+/// routing/allocator state, moved out by
+/// [`ShardedCoordinator::into_parts`] so shard threads can each own a
+/// scheduler. Reassembled after thread join via
+/// [`ShardedCoordinator::reassemble`]. Field meanings match the
+/// coordinator's own fields one-for-one.
+#[derive(Debug)]
+pub struct ShardParts {
+    pub shards: Vec<Scheduler>,
+    pub ctx_shard: HashMap<ContextId, usize>,
+    pub task_shard: HashMap<TaskId, usize>,
+    pub worker_shard: HashMap<WorkerId, usize>,
+    pub home_shard: HashMap<WorkerId, usize>,
+    pub next_worker_id: WorkerId,
+    pub steals: u64,
+    pub trace: TraceHandle,
 }
 
 impl ShardedCoordinator {
@@ -130,7 +179,59 @@ impl ShardedCoordinator {
             home_shard: HashMap::new(),
             next_worker_id: 0,
             steals: 0,
+            steal_enabled: true,
             trace,
+        }
+    }
+
+    /// Enable or disable the steal/return passes inside
+    /// [`dispatch_all`](Self::dispatch_all). With stealing off a
+    /// dispatch round touches only home-partition state, which is what
+    /// the threaded runtime's per-shard loops need (cross-shard moves
+    /// go through the coordinator thread's two-phase handoff instead)
+    /// and what the trace-parity experiments need for N-vs-1
+    /// comparability.
+    // pcm-lint: allow(untraced|unindexed) -- configuration toggle; no
+    // scheduler state transition to trace or index.
+    pub fn set_stealing(&mut self, on: bool) {
+        self.steal_enabled = on;
+    }
+
+    /// Move every shard (and the routing/allocator state) out of the
+    /// coordinator so each [`Scheduler`] can be owned by its own
+    /// thread. Takes `self` by value: once dismembered, the only way
+    /// back to the coordinator API is [`Self::reassemble`] — there is
+    /// no window where a coordinator and a thread both own a shard.
+    pub fn into_parts(self) -> ShardParts {
+        ShardParts {
+            shards: self.shards,
+            ctx_shard: self.ctx_shard,
+            task_shard: self.task_shard,
+            worker_shard: self.worker_shard,
+            home_shard: self.home_shard,
+            next_worker_id: self.next_worker_id,
+            steals: self.steals,
+            trace: self.trace,
+        }
+    }
+
+    /// Rebuild a coordinator from parts previously moved out by
+    /// [`Self::into_parts`] (after the shard threads are joined and
+    /// their schedulers collected back into `parts.shards`). The
+    /// reassembled coordinator serves `records()`, `cache_stats()`,
+    /// `progress()` and the conservation/index checks exactly as if it
+    /// had never been taken apart.
+    pub fn reassemble(parts: ShardParts) -> Self {
+        Self {
+            shards: parts.shards,
+            ctx_shard: parts.ctx_shard,
+            task_shard: parts.task_shard,
+            worker_shard: parts.worker_shard,
+            home_shard: parts.home_shard,
+            next_worker_id: parts.next_worker_id,
+            steals: parts.steals,
+            steal_enabled: true,
+            trace: parts.trace,
         }
     }
 
@@ -273,8 +374,10 @@ impl ShardedCoordinator {
             self.shards[k].set_clock_hint(now);
             self.shard_round(k, now, &mut out);
         }
-        self.steal_pass(now, &mut out);
-        self.return_pass(now, &mut out);
+        if self.steal_enabled {
+            self.steal_pass(now, &mut out);
+            self.return_pass(now, &mut out);
+        }
         out
     }
 
@@ -586,6 +689,20 @@ impl ShardedCoordinator {
     }
 }
 
+// The threaded live runtime moves a `Scheduler` into each shard thread
+// and a `Worker` through channels between them; the shared
+// `TraceHandle` is cloned into every thread. Assert the `Send` bounds
+// at compile time so a policy or sink losing `Send` fails here, with a
+// named function, instead of deep inside `live::threaded`.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    const fn assert_send_sync<T: Send + Sync>() {}
+    let _ = assert_send::<Scheduler>;
+    let _ = assert_send::<Worker>;
+    let _ = assert_send::<ShardParts>;
+    let _ = assert_send_sync::<TraceHandle>;
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -817,5 +934,70 @@ mod tests {
         assert_eq!(ds.len(), 3);
         assert_eq!(c.steals(), 0);
         assert!(c.shards[0].shard_id().is_none(), "unsharded trace shape");
+    }
+
+    #[test]
+    fn stealing_can_be_disabled_for_parity_runs() {
+        let mut c = mk(2);
+        c.set_stealing(false);
+        // Ctx 0 (shard 0) backlogged, shard 1's workers idle: with the
+        // steal pass off, the idle pair stays home and unused.
+        let work: Vec<Task> =
+            (0..8).map(|i| Task::new(i, i * 10, 10, 0)).collect();
+        c.submit_tasks(work);
+        for i in 0..4 {
+            c.worker_join(node(i), 0.0);
+        }
+        let ds = c.dispatch_all(0.0);
+        assert_eq!(ds.len(), 2, "only shard 0's own workers dispatch");
+        assert_eq!(c.steals(), 0);
+        assert!(c.check_index_consistency());
+        // Re-enabling brings the lend pass back on the next round.
+        c.set_stealing(true);
+        let ds = c.dispatch_all(1.0);
+        assert_eq!(ds.len(), 2, "shard 1's idle pair is lent over");
+        assert_eq!(c.steals(), 2);
+    }
+
+    #[test]
+    fn into_parts_reassemble_round_trips_mid_run_state() {
+        let mut c = mk(2);
+        c.submit_tasks(tasks(2));
+        for i in 0..4 {
+            c.worker_join(node(i), 0.0);
+        }
+        let ds = c.dispatch_all(0.0);
+        for d in &ds {
+            complete(&mut c, d, 0.0);
+        }
+        let done_before = c.progress().completed_tasks;
+        let steals_before = c.steals();
+        let next_before = c.next_worker_id;
+
+        // Dismember mid-run (as the threaded runtime does), mutate a
+        // shard directly (as a shard thread would), reassemble.
+        let mut parts = c.into_parts();
+        assert_eq!(parts.shards.len(), 2);
+        assert_eq!(parts.next_worker_id, next_before);
+        parts.shards[0].set_clock_hint(5.0);
+        let mut c = ShardedCoordinator::reassemble(parts);
+        assert_eq!(c.progress().completed_tasks, done_before);
+        assert_eq!(c.steals(), steals_before);
+        assert_eq!(c.next_worker_id, next_before);
+        assert!(c.check_conservation());
+        assert!(c.check_index_consistency());
+
+        // And the reassembled coordinator keeps scheduling.
+        let mut now = 10.0;
+        while !c.all_done() {
+            let ds = c.dispatch_all(now);
+            assert!(!ds.is_empty() || c.running_count() > 0);
+            for d in &ds {
+                complete(&mut c, d, now);
+            }
+            now += 10.0;
+        }
+        assert_eq!(c.progress().completed_tasks, 4);
+        assert_eq!(c.records().len(), 4);
     }
 }

@@ -33,19 +33,26 @@
 //! violation; the `shard-smoke` CI job is exactly that invocation.
 
 use std::fmt::Write as _;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::{
     GpuModel, LoadTrace, Node, NodeAvailabilityTrace, NodeChurnEvent,
 };
 use crate::coordinator::{
-    AppSpec, ContextPolicy, ContextRecipe, CostModel, SimConfig, SimDriver,
-    SimOutcome,
+    AppSpec, ContextPolicy, ContextRecipe, CostModel, PolicyKind, SimConfig,
+    SimDriver, SimOutcome,
 };
+use crate::live::{LiveApp, LiveConfig, LiveDriver, LiveOutcome};
 use crate::obs::{
     check_events, MemorySink, Telemetry, TraceEvent, TraceHandle,
 };
+use crate::runtime::synthetic::{
+    default_live_profiles, write_synthetic_artifacts,
+};
+use crate::runtime::{BackendKind, Manifest};
 use crate::util::{fmt_bytes, Json};
+use crate::Result;
 
 /// Per-tenant workload of the balanced parity scenario.
 pub const PARITY_INFERENCES_PER_APP: u64 = 1_200;
@@ -529,6 +536,348 @@ pub fn verify(r: &ShardsReport) -> crate::Result<()> {
     Ok(())
 }
 
+// --------------------------------------------------------------------
+// Threaded live runtime scenarios (`pcm experiment shards --threaded`)
+// --------------------------------------------------------------------
+
+/// Per-tenant workload of the threaded live parity scenario: 6 tasks
+/// per tenant at the scenario batch size — enough dispatch rounds to
+/// interleave, small enough for a CI smoke run.
+pub const THREADED_PARITY_INFERENCES_PER_APP: u64 = 24;
+
+/// Backlogged tenant of the threaded steal scenario (10 tasks).
+pub const THREADED_STEAL_HEAVY_INFERENCES: u64 = 40;
+
+/// Quickly-drained tenant of the threaded steal scenario (2 tasks).
+pub const THREADED_STEAL_LIGHT_INFERENCES: u64 = 8;
+
+const THREADED_BATCH: u64 = 4;
+
+/// Execute floor of the parity runs: tasks long enough that wall-clock
+/// jitter (milliseconds) can never reorder the per-context dispatch
+/// sequences (hundreds of milliseconds apart).
+const THREADED_PARITY_FLOOR_S: f64 = 0.3;
+
+/// Execute floor of the steal run: the light shard drains after two
+/// tasks (~0.3 s) while the heavy shard still holds ~1.2 s of backlog —
+/// a wide-open window for the coordinator's two-phase lend.
+const THREADED_STEAL_FLOOR_S: f64 = 0.15;
+
+/// One threaded-vs-serial live comparison: both outcomes plus the
+/// normalized trace diff and the threaded trace's invariant violations.
+#[derive(Debug)]
+pub struct ThreadedCase {
+    pub threaded: LiveOutcome,
+    pub serial: LiveOutcome,
+    pub threaded_event_count: usize,
+    pub serial_event_count: usize,
+    /// Normalized events present only in the threaded 2-shard trace.
+    pub only_in_threaded: usize,
+    /// Normalized events present only in the serial 1-shard trace.
+    pub only_in_serial: usize,
+    /// `check_events` violations in the raw threaded trace.
+    pub threaded_violations: usize,
+}
+
+/// Everything `pcm experiment shards --threaded` reports on.
+#[derive(Debug)]
+pub struct ThreadedShardsReport {
+    pub parity: ThreadedCase,
+    pub steal: LiveOutcome,
+    pub steal_violations: usize,
+}
+
+/// Two identical live tenants (same manifest profile, same share), so
+/// any completion or cache divergence between runs is a scheduling
+/// artifact — the live analogue of [`twin_apps`].
+fn twin_live_apps(per_app: u64) -> Vec<LiveApp> {
+    (0..2)
+        .map(|_| LiveApp {
+            profile: "tiny".to_string(),
+            total_inferences: per_app,
+            batch_size: THREADED_BATCH,
+        })
+        .collect()
+}
+
+/// One threaded-experiment live config. Two nodes at equal speed, so
+/// the 2-shard home partition (node 0 → shard 0, node 1 → shard 1)
+/// lines up with the round-robin context partition, exactly like the
+/// sim parity scenario. Work-stealing off for parity runs (an N-shard
+/// schedule stays comparable to 1-shard), on for the steal scenario.
+fn threaded_scenario_config(
+    apps: Vec<LiveApp>,
+    shards: usize,
+    threaded: bool,
+    steal: bool,
+    floor_s: f64,
+    seed: u64,
+) -> LiveConfig {
+    LiveConfig {
+        apps,
+        shards,
+        threaded,
+        steal,
+        worker_speeds: vec![1.0, 1.0],
+        policy: ContextPolicy::Pervasive,
+        placement: PolicyKind::Greedy,
+        backend: BackendKind::Reference,
+        execute_floor_s: floor_s,
+        seed,
+        ..LiveConfig::default()
+    }
+}
+
+/// Run one live config with an in-memory capture sink; returns the
+/// outcome plus every event the run emitted, in emission order.
+fn run_live_captured(
+    mut cfg: LiveConfig,
+    manifest: &Manifest,
+) -> Result<(LiveOutcome, Vec<TraceEvent>)> {
+    let sink = Arc::new(Mutex::new(MemorySink::unbounded()));
+    cfg.trace_sink = TraceHandle::from_shared(sink.clone());
+    let outcome = LiveDriver::new(cfg, manifest.clone()).run()?;
+    let events =
+        sink.lock().unwrap_or_else(|p| p.into_inner()).events();
+    Ok((outcome, events))
+}
+
+/// Synthesize the live artifact set into a private temp dir and load
+/// its manifest. The caller removes the dir when done.
+fn threaded_artifacts(seed: u64) -> Result<(PathBuf, Manifest)> {
+    let dir = std::env::temp_dir().join(format!(
+        "pcm-shards-threaded-artifacts-{seed}-{}",
+        std::process::id()
+    ));
+    write_synthetic_artifacts(&dir, &default_live_profiles())?;
+    let manifest = Manifest::load(&dir)?;
+    Ok((dir, manifest))
+}
+
+/// Run the threaded live scenarios: the ISSUE-10 migration proof that
+/// moving each shard onto its own dispatch thread changed wall-clock
+/// behavior only.
+///
+/// * **threaded-parity** — a balanced two-tenant live workload run
+///   twice: threaded 2-shard (one dispatch thread per shard, steal
+///   off) vs the serial single-thread 1-shard driver. The normalized
+///   event multisets (same normalization as the sim parity scenarios)
+///   must match exactly.
+/// * **threaded-steal** — a deliberately unbalanced workload under the
+///   threaded runtime with stealing on: the drained shard's idle
+///   worker must move to the backlogged peer through the coordinator's
+///   two-phase handoff (`steals > 0`) with nothing lost or duplicated.
+///
+/// Every captured event is re-emitted into `trace` (pass
+/// [`TraceHandle::null`] to discard), one `run_start` segment per run,
+/// so one `--trace-out` file replays cleanly through `pcm trace check`.
+pub fn run_threaded_shards(
+    seed: u64,
+    trace: TraceHandle,
+) -> Result<ThreadedShardsReport> {
+    let (dir, manifest) = threaded_artifacts(seed)?;
+    let result = run_threaded_shards_with(seed, &trace, &manifest);
+    let _ = std::fs::remove_dir_all(dir);
+    trace.flush();
+    result
+}
+
+fn run_threaded_shards_with(
+    seed: u64,
+    trace: &TraceHandle,
+    manifest: &Manifest,
+) -> Result<ThreadedShardsReport> {
+    let apps = twin_live_apps(THREADED_PARITY_INFERENCES_PER_APP);
+    let (threaded, threaded_events) = run_live_captured(
+        threaded_scenario_config(
+            apps.clone(),
+            2,
+            true,
+            false,
+            THREADED_PARITY_FLOOR_S,
+            seed,
+        ),
+        manifest,
+    )?;
+    let (serial, serial_events) = run_live_captured(
+        threaded_scenario_config(
+            apps,
+            1,
+            false,
+            false,
+            THREADED_PARITY_FLOOR_S,
+            seed,
+        ),
+        manifest,
+    )?;
+    for e in threaded_events.iter().chain(serial_events.iter()) {
+        trace.emit(e.clone());
+    }
+    let (nt, ns) =
+        (normalized(&threaded_events), normalized(&serial_events));
+    let (only_in_threaded, only_in_serial) = multiset_diff(&nt, &ns);
+    let parity = ThreadedCase {
+        threaded_event_count: threaded_events.len(),
+        serial_event_count: serial_events.len(),
+        only_in_threaded,
+        only_in_serial,
+        threaded_violations: check_events(&threaded_events).len(),
+        threaded,
+        serial,
+    };
+
+    let mut steal_apps = twin_live_apps(THREADED_STEAL_HEAVY_INFERENCES);
+    steal_apps[1].total_inferences = THREADED_STEAL_LIGHT_INFERENCES;
+    let (steal, steal_events) = run_live_captured(
+        threaded_scenario_config(
+            steal_apps,
+            2,
+            true,
+            true,
+            THREADED_STEAL_FLOOR_S,
+            seed,
+        ),
+        manifest,
+    )?;
+    for e in &steal_events {
+        trace.emit(e.clone());
+    }
+    let steal_violations = check_events(&steal_events).len();
+    Ok(ThreadedShardsReport { parity, steal, steal_violations })
+}
+
+/// Render the threaded-runtime equivalence report.
+pub fn report_threaded(r: &ThreadedShardsReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "threaded live runtime equivalence: 2-node pool, two identical \
+         tenants, reference backend"
+    );
+    let _ = writeln!(
+        out,
+        "{:<22} {:>6} {:>9} {:>9} {:>8} {:>7}",
+        "run", "shards", "completed", "records", "wall_s", "steals"
+    );
+    for (tag, o) in [
+        ("parity_threaded2", &r.parity.threaded),
+        ("parity_serial1", &r.parity.serial),
+        ("steal_threaded2", &r.steal),
+    ] {
+        let _ = writeln!(
+            out,
+            "{:<22} {:>6} {:>9} {:>9} {:>8.2} {:>7}",
+            tag,
+            o.shards,
+            o.completed_inferences,
+            o.records.len(),
+            o.wall_s,
+            o.steals,
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\nparity: trace {} vs {} events → {} only-threaded, {} \
+         only-serial (normalized); {} invariant violations in the \
+         threaded trace",
+        r.parity.threaded_event_count,
+        r.parity.serial_event_count,
+        r.parity.only_in_threaded,
+        r.parity.only_in_serial,
+        r.parity.threaded_violations,
+    );
+    let _ = writeln!(
+        out,
+        "stealing: {} lends across shard threads ({} invariant \
+         violations)",
+        r.steal.steals, r.steal_violations,
+    );
+    out
+}
+
+/// The acceptance gates of the threaded scenario (the ISSUE-10
+/// criterion): normalized event-multiset parity between the threaded
+/// N-shard run and the single-thread single-shard run, clean invariant
+/// replays, and an actual cross-thread lend on the unbalanced workload.
+pub fn verify_threaded(r: &ThreadedShardsReport) -> Result<()> {
+    let c = &r.parity;
+    anyhow::ensure!(
+        c.only_in_threaded == 0 && c.only_in_serial == 0,
+        "threaded parity: normalized event multisets must match: {} \
+         events only in the threaded trace, {} only in the serial one",
+        c.only_in_threaded,
+        c.only_in_serial
+    );
+    anyhow::ensure!(
+        c.threaded_violations == 0,
+        "threaded parity: trace must replay clean through the invariant \
+         checker ({} violations)",
+        c.threaded_violations
+    );
+    anyhow::ensure!(
+        c.threaded.completed_inferences == c.serial.completed_inferences
+            && c.threaded.completed_inferences
+                == 2 * THREADED_PARITY_INFERENCES_PER_APP,
+        "threaded parity: completions diverged: {} vs {}",
+        c.threaded.completed_inferences,
+        c.serial.completed_inferences
+    );
+    anyhow::ensure!(
+        c.threaded.records.len() == c.serial.records.len(),
+        "threaded parity: record counts diverged: {} vs {}",
+        c.threaded.records.len(),
+        c.serial.records.len()
+    );
+    for (ctx, app) in &c.threaded.per_app {
+        let serial_completed = c
+            .serial
+            .per_app
+            .get(ctx)
+            .map(|a| a.completed_inferences)
+            .unwrap_or(0);
+        anyhow::ensure!(
+            app.completed_inferences == serial_completed,
+            "threaded parity: per-context completions diverged for ctx \
+             {ctx}: {} vs {}",
+            app.completed_inferences,
+            serial_completed
+        );
+    }
+    anyhow::ensure!(
+        c.threaded.shards == 2,
+        "threaded parity: the threaded run must keep two shards"
+    );
+    anyhow::ensure!(
+        c.threaded.steals == 0,
+        "threaded parity: the balanced partition must need no \
+         work-stealing (got {} lends)",
+        c.threaded.steals
+    );
+    anyhow::ensure!(
+        r.steal.shards == 2,
+        "threaded steal: run must keep two shards"
+    );
+    anyhow::ensure!(
+        r.steal.steals >= 1,
+        "threaded steal: the unbalanced workload must lend the drained \
+         shard's worker across threads"
+    );
+    anyhow::ensure!(
+        r.steal.completed_inferences
+            == THREADED_STEAL_HEAVY_INFERENCES
+                + THREADED_STEAL_LIGHT_INFERENCES,
+        "threaded steal: completions lost or duplicated: {} of {}",
+        r.steal.completed_inferences,
+        THREADED_STEAL_HEAVY_INFERENCES + THREADED_STEAL_LIGHT_INFERENCES
+    );
+    anyhow::ensure!(
+        r.steal_violations == 0,
+        "threaded steal: trace must replay clean ({} violations)",
+        r.steal_violations
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -550,6 +899,25 @@ mod tests {
             r.steal_sharded.summary.completed_inferences,
             STEAL_HEAVY_INFERENCES + STEAL_LIGHT_INFERENCES
         );
+    }
+
+    /// The exact runs the shard-threaded-smoke CI step performs: the
+    /// threaded-vs-serial live parity and the cross-thread lend, with
+    /// every acceptance gate enforced.
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns threads and stages real files
+    fn threaded_shards_experiment_passes_its_gates() {
+        let r = run_threaded_shards(9_901, TraceHandle::null()).unwrap();
+        verify_threaded(&r).unwrap();
+        let text = report_threaded(&r);
+        for needle in [
+            "parity_threaded2",
+            "parity_serial1",
+            "steal_threaded2",
+            "lends across shard threads",
+        ] {
+            assert!(text.contains(needle), "report missing {needle}:\n{text}");
+        }
     }
 
     #[test]

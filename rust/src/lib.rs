@@ -67,6 +67,24 @@
 //! app list, or a zero shard count fail at `build()` instead of
 //! mid-run.
 //!
+//! ### Threading model
+//!
+//! The sim driver is single-threaded by construction (discrete-event
+//! time). The live driver has two runtimes behind one config knob:
+//! with [`live::LiveConfig::threaded`] `false` (the default) a single
+//! driver thread drains every scheduler shard's completion channel
+//! serially; with `true`, each shard moves — scheduler and all — onto
+//! its own dispatch thread ([`live::threaded`]), so per-shard dispatch
+//! rounds overlap in wall-clock while a thin coordinator thread keeps
+//! only the cross-shard concerns (two-phase work-stealing handoffs,
+//! churn, the watchdog, shutdown join ordering). Ownership rules are
+//! strict: a scheduler shard and a worker's order channel belong to
+//! exactly one thread at a time, every cross-thread move travels
+//! through a channel message, and the shared [`obs::TraceHandle`] is
+//! the only lock the hot path touches. The two runtimes are
+//! interchangeable by contract — `pcm experiment shards --threaded`
+//! asserts normalized event-multiset parity between them.
+//!
 //! ```
 //! use pcm::cluster::node::pool_20_mixed;
 //! use pcm::cluster::LoadTrace;

@@ -43,7 +43,7 @@ use crate::cluster::{GpuModel, Node, NodeAvailabilityTrace, NodeId};
 use crate::coordinator::{
     Batcher, CacheStats, ContextId, ContextPolicy, ContextRecipe, CostModel,
     PolicyKind, RunReport, RunSummary, Scheduler, ShardedCoordinator, Task,
-    TaskRecord, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES,
+    TaskRecord, Worker, WorkerId, DEFAULT_CACHE_CAPACITY_BYTES,
 };
 use crate::obs::{TraceEvent, TraceHandle};
 use crate::runtime::{BackendKind, Manifest};
@@ -109,6 +109,20 @@ pub struct LiveConfig {
     /// Scheduler shard count for the [`ShardedCoordinator`] (clamped to
     /// the app count; 1 = classic single-scheduler serving).
     pub shards: usize,
+    /// Run the threaded per-shard runtime ([`crate::live::threaded`]):
+    /// each scheduler shard gets its own dispatch thread, so shard
+    /// dispatch rounds overlap in wall-clock, and a thin coordinator
+    /// on the caller's thread handles only cross-shard concerns
+    /// (work-stealing handoffs, churn, watchdog, shutdown ordering).
+    /// `false` (the default) keeps the serial driver below, which
+    /// drains every shard's completions from this one thread.
+    pub threaded: bool,
+    /// Enable the cross-shard work-stealing lend/return of idle
+    /// workers (serial: the coordinator's steal/return passes;
+    /// threaded: the coordinator thread's two-phase handoffs). On by
+    /// default; parity experiments turn it off so an N-shard schedule
+    /// stays comparable to a single-shard one.
+    pub steal: bool,
     /// Wall-clock churn schedule: trace times are seconds since the run
     /// started. A `down` event kills the node's live worker (requeueing
     /// its in-flight task); an `up` event respawns a worker on that
@@ -153,6 +167,8 @@ impl Default for LiveConfig {
                 batch_size: 16,
             }],
             shards: 1,
+            threaded: false,
+            steal: true,
             node_trace: None,
             backend: BackendKind::Pjrt,
             stage_bytes_per_s: None,
@@ -216,6 +232,18 @@ impl LiveConfigBuilder {
     /// at run time).
     pub fn shards(mut self, shards: usize) -> Self {
         self.shards = shards;
+        self
+    }
+
+    /// Run the threaded per-shard runtime (see [`LiveConfig::threaded`]).
+    pub fn threaded(mut self, threaded: bool) -> Self {
+        self.cfg.threaded = threaded;
+        self
+    }
+
+    /// Enable/disable cross-shard work stealing (see [`LiveConfig::steal`]).
+    pub fn steal(mut self, steal: bool) -> Self {
+        self.cfg.steal = steal;
         self
     }
 
@@ -380,10 +408,10 @@ impl LiveOutcome {
 
 /// One wall-clock churn event awaiting execution.
 #[derive(Debug, Clone, Copy)]
-struct PendingChurn {
-    at: f64,
-    node: NodeId,
-    up: bool,
+pub(super) struct PendingChurn {
+    pub(super) at: f64,
+    pub(super) node: NodeId,
+    pub(super) up: bool,
 }
 
 /// Thread-side handles of the live worker pool.
@@ -403,21 +431,23 @@ struct Pool {
     down: HashSet<NodeId>,
 }
 
-/// Per-application accumulation while the run is in flight.
-struct AppAccum {
-    profile: String,
-    scorer: PffApp,
-    accuracy: AccuracyReport,
-    latency: Summary,
-    completed: u64,
+/// Per-application accumulation while the run is in flight (also used
+/// per shard by the threaded runtime — each context lives on exactly
+/// one shard, so the accumulators partition cleanly).
+pub(super) struct AppAccum {
+    pub(super) profile: String,
+    pub(super) scorer: PffApp,
+    pub(super) accuracy: AccuracyReport,
+    pub(super) latency: Summary,
+    pub(super) completed: u64,
 }
 
 /// Orchestrates scheduler + live workers.
 pub struct LiveDriver {
-    cfg: LiveConfig,
-    manifest: Arc<Manifest>,
-    apps: Vec<LiveApp>,
-    workloads: BTreeMap<ContextId, Arc<InferenceWorkload>>,
+    pub(super) cfg: LiveConfig,
+    pub(super) manifest: Arc<Manifest>,
+    pub(super) apps: Vec<LiveApp>,
+    pub(super) workloads: BTreeMap<ContextId, Arc<InferenceWorkload>>,
 }
 
 impl LiveDriver {
@@ -455,7 +485,7 @@ impl LiveDriver {
 
     /// Round-robin merge of every app's task stream with dense merged
     /// ids (identical to the sim driver's interleave).
-    fn merged_tasks(&self) -> Vec<Task> {
+    pub(super) fn merged_tasks(&self) -> Vec<Task> {
         let mut streams: Vec<VecDeque<Task>> = self
             .apps
             .iter()
@@ -487,8 +517,14 @@ impl LiveDriver {
         merged
     }
 
-    pub fn run(&self) -> Result<LiveOutcome> {
-        // Registry: one recipe per app, sized from its manifest profile.
+    /// Registry + coordinator construction shared by the serial and
+    /// threaded runtimes: one recipe per app (sized from its manifest
+    /// profile), the run-start trace event, and the merged task
+    /// submission. Returns the loaded coordinator plus the context →
+    /// profile-name map the worker threads need.
+    pub(super) fn build_coordinator(
+        &self,
+    ) -> Result<(ShardedCoordinator, BTreeMap<ContextId, String>)> {
         let mut recipes = Vec::with_capacity(self.apps.len());
         let mut profiles = BTreeMap::new();
         for (i, app) in self.apps.iter().enumerate() {
@@ -510,6 +546,7 @@ impl LiveDriver {
             self.cfg.placement,
             self.cfg.trace_sink.clone(),
         );
+        sched.set_stealing(self.cfg.steal);
         if sched.trace().on() {
             sched.trace().emit(TraceEvent::RunStart {
                 at: 0.0,
@@ -518,9 +555,15 @@ impl LiveDriver {
             });
         }
         sched.submit_tasks(self.merged_tasks());
-        let total_inferences: u64 =
-            self.apps.iter().map(|a| a.total_inferences).sum();
+        Ok((sched, profiles))
+    }
 
+    /// The run's cache root plus the immutable per-worker configuration
+    /// (shared by serial and threaded runtimes).
+    pub(super) fn build_shared(
+        &self,
+        profiles: BTreeMap<ContextId, String>,
+    ) -> (std::path::PathBuf, Arc<LiveWorkerShared>) {
         let cache_root = std::env::temp_dir().join(format!(
             "pcm-live-{}-{}",
             std::process::id(),
@@ -536,6 +579,62 @@ impl LiveDriver {
             stage_bytes_per_s: self.cfg.stage_bytes_per_s,
             execute_floor_s: self.cfg.execute_floor_s,
         });
+        (cache_root, shared)
+    }
+
+    /// The wall-clock churn schedule (events on nodes without a worker
+    /// slot are meaningless and dropped).
+    pub(super) fn churn_schedule(&self) -> VecDeque<PendingChurn> {
+        self.cfg
+            .node_trace
+            .as_ref()
+            .map(|tr| {
+                tr.events()
+                    .iter()
+                    .filter(|e| {
+                        (e.node as usize) < self.cfg.worker_speeds.len()
+                    })
+                    .map(|e| PendingChurn {
+                        at: e.time,
+                        node: e.node,
+                        up: e.up,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Fresh per-application accumulators (scorer, accuracy, latency).
+    pub(super) fn new_accums(&self) -> BTreeMap<ContextId, AppAccum> {
+        self.apps
+            .iter()
+            .enumerate()
+            .map(|(i, app)| {
+                let ctx = i as ContextId;
+                let workload = (*self.workloads[&ctx]).clone();
+                let template = workload.template();
+                (
+                    ctx,
+                    AppAccum {
+                        profile: app.profile.clone(),
+                        scorer: PffApp::new(workload),
+                        accuracy: AccuracyReport::new(template),
+                        latency: Summary::new(),
+                        completed: 0,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    pub fn run(&self) -> Result<LiveOutcome> {
+        if self.cfg.threaded {
+            return super::threaded::run_threaded(self);
+        }
+        let (mut sched, profiles) = self.build_coordinator()?;
+        let total_inferences: u64 =
+            self.apps.iter().map(|a| a.total_inferences).sum();
+        let (cache_root, shared) = self.build_shared(profiles);
 
         // One completion channel per shard: a worker reports to its
         // node's home-shard channel. The senders stay alive on this
@@ -562,47 +661,8 @@ impl LiveDriver {
             );
         }
 
-        // Wall-clock churn schedule (events on nodes without a worker
-        // slot are meaningless and dropped).
-        let mut churn: VecDeque<PendingChurn> = self
-            .cfg
-            .node_trace
-            .as_ref()
-            .map(|tr| {
-                tr.events()
-                    .iter()
-                    .filter(|e| {
-                        (e.node as usize) < self.cfg.worker_speeds.len()
-                    })
-                    .map(|e| PendingChurn {
-                        at: e.time,
-                        node: e.node,
-                        up: e.up,
-                    })
-                    .collect()
-            })
-            .unwrap_or_default();
-
-        let mut accum: BTreeMap<ContextId, AppAccum> = self
-            .apps
-            .iter()
-            .enumerate()
-            .map(|(i, app)| {
-                let ctx = i as ContextId;
-                let workload = (*self.workloads[&ctx]).clone();
-                let template = workload.template();
-                (
-                    ctx,
-                    AppAccum {
-                        profile: app.profile.clone(),
-                        scorer: PffApp::new(workload),
-                        accuracy: AccuracyReport::new(template),
-                        latency: Summary::new(),
-                        completed: 0,
-                    },
-                )
-            })
-            .collect();
+        let mut churn: VecDeque<PendingChurn> = self.churn_schedule();
+        let mut accum: BTreeMap<ContextId, AppAccum> = self.new_accums();
         let mut dispatched_at: HashMap<u64, f64> = HashMap::new();
         let mut latency = Summary::new();
         let mut records = Vec::new();
@@ -668,33 +728,11 @@ impl LiveDriver {
                             // pcm-lint: allow(panic) -- rejoin_node
                             // returned wid after registering it.
                             let w = sched.worker(wid).expect("just joined");
-                            // Which contexts came back whole? Only those
-                            // start stage-free on this incarnation. And
-                            // which came back not at all? Their leftover
-                            // files (an eviction pending at kill time, a
-                            // stale-version drop) must leave the disk
-                            // too, or real usage would exceed the
-                            // restored accounting.
-                            let mut full = Vec::new();
-                            let mut dropped = Vec::new();
-                            for r in sched.recipes() {
-                                let comps =
-                                    r.cached_components(self.cfg.policy);
-                                if !comps.is_empty()
-                                    && comps.iter().all(|c| {
-                                        w.has_cached(r.id, c.kind)
-                                    })
-                                {
-                                    full.push(r.id);
-                                }
-                                if w.cached_bytes(r.id) == 0 {
-                                    dropped.push(r.id);
-                                }
-                            }
-                            let bytes = w
-                                .warm_started()
-                                .then_some(w.cached_bytes_total());
-                            (bytes, full, dropped)
+                            warm_restore_info(
+                                w,
+                                sched.recipes(),
+                                self.cfg.policy,
+                            )
                         };
                         if let Some(bytes) = restored_bytes {
                             warm_started.insert(wid, bytes);
@@ -857,17 +895,7 @@ impl LiveDriver {
         for (_, j) in pool.parked.drain() {
             let _ = j.join();
         }
-        let keep = self.cfg.keep_cache_root
-            || std::env::var_os("PCM_KEEP_LIVE_CACHE")
-                .is_some_and(|v| !v.is_empty() && v != "0");
-        if keep {
-            eprintln!(
-                "live cache root kept for inspection: {}",
-                cache_root.display()
-            );
-        } else {
-            let _ = std::fs::remove_dir_all(&cache_root);
-        }
+        cleanup_cache_root(&self.cfg, &cache_root);
         loop_result?;
 
         sched.trace().flush();
@@ -1045,12 +1073,7 @@ fn spawn_worker(
     now: f64,
 ) -> WorkerId {
     let speed = speeds[node as usize];
-    // GPU label ≈ speed class (live-mode heterogeneity emulation).
-    let gpu = if speed >= 1.0 {
-        GpuModel::A10
-    } else {
-        GpuModel::TitanXPascal
-    };
+    let gpu = gpu_for_speed(speed);
     let wid = sched.worker_join(Node { id: node, gpu }, now);
     let stop = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<LiveOrder>();
@@ -1095,6 +1118,66 @@ fn kill_node(
     Some(wid)
 }
 
+/// GPU label ≈ speed class (live-mode heterogeneity emulation).
+pub(super) fn gpu_for_speed(speed: f64) -> GpuModel {
+    if speed >= 1.0 {
+        GpuModel::A10
+    } else {
+        GpuModel::TitanXPascal
+    }
+}
+
+/// What a rejoined worker's warm restore actually replayed. Returns
+/// `(restored_bytes, full, dropped)`:
+///
+/// * `restored_bytes` — `Some(total cached bytes)` iff the incarnation
+///   warm-started at all;
+/// * `full` — the contexts whose *complete* cached-component set the
+///   restore replayed (their next task on this worker is stage-free; a
+///   partial restore — the kill landed mid-staging — leaves a context
+///   out even though some of its bytes came back);
+/// * `dropped` — contexts with no bytes restored at all (an eviction
+///   pending at kill time, a stale-version drop): their leftover files
+///   must leave the disk too, or real usage would exceed the restored
+///   accounting.
+pub(super) fn warm_restore_info<'a>(
+    w: &Worker,
+    recipes: impl Iterator<Item = &'a ContextRecipe>,
+    policy: ContextPolicy,
+) -> (Option<u64>, Vec<ContextId>, Vec<ContextId>) {
+    let mut full = Vec::new();
+    let mut dropped = Vec::new();
+    for r in recipes {
+        let comps = r.cached_components(policy);
+        if !comps.is_empty()
+            && comps.iter().all(|c| w.has_cached(r.id, c.kind))
+        {
+            full.push(r.id);
+        }
+        if w.cached_bytes(r.id) == 0 {
+            dropped.push(r.id);
+        }
+    }
+    let bytes = w.warm_started().then_some(w.cached_bytes_total());
+    (bytes, full, dropped)
+}
+
+/// Remove the run's cache root unless the config (or the
+/// `PCM_KEEP_LIVE_CACHE` env var) asks to keep it for inspection.
+pub(super) fn cleanup_cache_root(cfg: &LiveConfig, cache_root: &std::path::Path) {
+    let keep = cfg.keep_cache_root
+        || std::env::var_os("PCM_KEEP_LIVE_CACHE")
+            .is_some_and(|v| !v.is_empty() && v != "0");
+    if keep {
+        eprintln!(
+            "live cache root kept for inspection: {}",
+            cache_root.display()
+        );
+    } else {
+        let _ = std::fs::remove_dir_all(cache_root);
+    }
+}
+
 /// A reclaimed node came back: respawn a worker incarnation on it. The
 /// previous incarnation's thread is joined first so two incarnations
 /// never touch the node cache dir concurrently.
@@ -1128,6 +1211,8 @@ mod tests {
         assert_eq!(c.apps[0].profile, "tiny");
         assert!(c.apps[0].total_inferences % c.apps[0].batch_size == 0);
         assert_eq!(c.shards, 1, "unsharded by default");
+        assert!(!c.threaded, "serial driver by default");
+        assert!(c.steal, "work stealing on by default");
         assert_eq!(c.placement, PolicyKind::Greedy);
         assert!(c.persist_node_caches, "node caches survive by default");
         assert!(c.node_trace.is_none(), "no churn by default");

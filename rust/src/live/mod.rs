@@ -22,12 +22,23 @@
 //!   machinery) and respawns them on the same node id, where they
 //!   warm-start from the surviving node cache dir. `pcm experiment
 //!   live-churn` gates this in CI (`live-smoke`).
+//! * **Threaded per-shard serving** — [`LiveConfig::threaded`] moves
+//!   each scheduler shard into its own dispatch thread ([`threaded`]),
+//!   so shard dispatch rounds overlap in wall-clock. Ownership is
+//!   message-passing only: a shard thread owns its shard's scheduler,
+//!   order channels and scoring state; a lent worker travels *inside*
+//!   the handoff messages (two-phase, through the coordinator) so it
+//!   is never visible to two shard loops at once; the driver thread
+//!   keeps only cross-shard concerns (routing maps, churn, watchdog,
+//!   shutdown join ordering). See the [`threaded`] module docs for the
+//!   full threading model.
 //!
 //! This is the end-to-end proof that all three layers compose: Pallas
 //! kernels (L1) inside the JAX-lowered HLO (L2) served by the Rust
 //! coordinator (L3) with Python nowhere on the request path.
 
 pub mod driver;
+pub mod threaded;
 pub mod worker;
 
 pub use driver::{

@@ -1,0 +1,1447 @@
+//! The threaded per-shard live runtime: one dispatch thread per
+//! scheduler shard, a thin coordinator on the driver thread.
+//!
+//! The serial driver ([`super::driver`]) drains every shard's
+//! completion channel from one thread, so shard dispatch rounds
+//! serialize in wall-clock even though the shards' data structures are
+//! independent. This module turns the shard boundary into a genuine
+//! concurrency boundary:
+//! [`LiveConfig::threaded`](crate::live::LiveConfig::threaded) routes
+//! `run()` here, where each [`Scheduler`] shard moves into its own OS
+//! thread
+//! ([`ShardedCoordinator::into_parts`]) and runs its dispatch rounds
+//! concurrently with its peers.
+//!
+//! # Threading model
+//!
+//! Ownership is strict and message-passing only — no locks, no shared
+//! mutable state:
+//!
+//! * **A shard thread owns its [`Scheduler`]** (queues, workers,
+//!   indexes, node-cache ledger) plus the per-shard driver state: the
+//!   order channels of the workers it currently holds, the scoring
+//!   accumulators of its contexts, its completion records and latency
+//!   samples. Each context lives on exactly one shard, so scoring
+//!   state partitions cleanly.
+//! * **A [`Worker`] travels inside channel messages.** The two-phase
+//!   lend protocol (`LendRequest` → `CoordMsg::Lent` →
+//!   `ShardCtl::Adopt`) moves the worker value — cache state, order
+//!   channel and all — through the coordinator, so it is never visible
+//!   to two shard loops at once. Returns are symmetric.
+//! * **The coordinator (driver thread) owns only cross-shard
+//!   concerns**: the routing maps (`task_shard` / `worker_shard` /
+//!   `home_shard`), the global worker-id allocator, worker OS threads
+//!   and stop flags, churn execution, the stall watchdog, and shutdown
+//!   join ordering. It never touches a scheduler while the shard
+//!   threads run.
+//! * **The [`TraceHandle`](crate::obs::TraceHandle) is the one shared
+//!   surface** (`Send + Sync`, sink behind a mutex): per-shard
+//!   `dispatch_round` events interleave safely through it.
+//!
+//! Worker completions still arrive on the worker's *home shard*
+//! channel (the channel is cloned into the worker thread at spawn and
+//! survives lends). A shard that receives a message for a task it does
+//! not own forwards it to the coordinator (`CoordMsg::Misrouted`),
+//! which routes it to the owning shard (`ShardCtl::Deliver`) — so a
+//! completion arriving while its worker is mid-lend is neither lost
+//! nor double-dispatched. Kills during a lend resolve through the
+//! control channels' FIFO order: the coordinator re-targets the evict
+//! at the worker's home shard *behind* the pending adopt.
+//!
+//! Shutdown (success and error paths alike) stops every worker thread,
+//! sends `ShardCtl::Stop` to every shard loop, joins shard threads
+//! before worker threads, cleans the cache root, then reassembles the
+//! [`ShardedCoordinator`] from the collected parts for the final
+//! conservation/index checks and outcome assembly.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::app::AccuracyReport;
+use crate::cluster::{GpuModel, Node, NodeId};
+use crate::coordinator::sharded::PREFETCH_SHARD_SHIFT;
+use crate::coordinator::{
+    ContextId, ContextPolicy, Dispatch, NodeCacheEntry, Scheduler,
+    ShardedCoordinator, ShardParts, TaskId, TaskRecord, Worker, WorkerId,
+};
+use crate::obs::TraceEvent;
+use crate::util::Summary;
+use crate::Result;
+
+use super::driver::{
+    cleanup_cache_root, gpu_for_speed, warm_restore_info, AppAccum,
+    LiveAppOutcome, LiveDriver, LiveOutcome, PendingChurn,
+};
+use super::worker::{
+    LiveOrder, LiveWorker, LiveWorkerShared, WorkOrder, WorkerMsg,
+};
+
+/// Idle nap of a shard loop between channel sweeps (and of the
+/// disconnected-channel fallback): short enough that control messages
+/// land promptly, long enough not to burn a core per shard.
+const POLL: Duration = Duration::from_millis(2);
+
+/// Minimum spacing between coordinator handoff attempts. Load reports
+/// go stale between worker messages, so a request can miss
+/// ([`CoordMsg::LendMiss`] / [`CoordMsg::ReturnMiss`]); the throttle
+/// bounds the miss ping-pong without delaying steals meaningfully
+/// (live phases run tens of milliseconds at minimum).
+const HANDOFF_SPACING: Duration = Duration::from_millis(50);
+
+/// Control messages from the coordinator to one shard loop (FIFO per
+/// shard — the ordering *is* the race-resolution mechanism: an adopt
+/// queued before an evict lands before it).
+enum ShardCtl {
+    /// Take ownership of a worker (initial distribution never uses
+    /// this — it happens before the threads spawn — so every adopt is
+    /// the second phase of a lend/return or a kill-during-lend
+    /// resolution).
+    Adopt {
+        worker: Box<Worker>,
+        order_tx: mpsc::Sender<LiveOrder>,
+    },
+    /// Phase one of a lend: pick an idle worker and ship it back via
+    /// [`CoordMsg::Lent`] (or [`CoordMsg::LendMiss`] if none is idle
+    /// anymore).
+    LendRequest,
+    /// Phase one of a return: ship `wid` home via
+    /// [`CoordMsg::Returned`] if it is idle ([`CoordMsg::ReturnMiss`]
+    /// otherwise).
+    ReturnRequest { wid: WorkerId },
+    /// A churn kill: evict `wid` from this shard's scheduler (requeues
+    /// its in-flight task). `migrate` ships the node's disk snapshot to
+    /// its home shard's ledger; `drop_cache` discards it (the
+    /// non-persistent config, where the dying incarnation wipes its
+    /// node dir on exit).
+    Evict {
+        wid: WorkerId,
+        now: f64,
+        migrate: bool,
+        drop_cache: bool,
+    },
+    /// Second phase of a snapshot migration: store a node's disk-tier
+    /// snapshot in this (home) shard's ledger.
+    PutNodeCache { node: NodeId, entry: NodeCacheEntry },
+    /// A churn rejoin: join a fresh worker incarnation (id allocated by
+    /// the coordinator) on this shard, warm-starting from the node
+    /// cache when one survives. Replies [`CoordMsg::Rejoined`].
+    Join {
+        wid: WorkerId,
+        node: Node,
+        now: f64,
+        order_tx: mpsc::Sender<LiveOrder>,
+    },
+    /// A worker message re-routed from the channel it arrived on (the
+    /// worker's home shard) to this shard (the task's owner).
+    Deliver(WorkerMsg),
+    /// Finish: return the shard's final state to the driver thread.
+    Stop,
+}
+
+/// Messages from the shard loops to the coordinator.
+enum CoordMsg {
+    /// Backlog/idle snapshot, sent after every worked iteration.
+    /// `progress` is true only when the report follows at least one
+    /// processed *worker* message — the watchdog resets on those, not
+    /// on control chatter (a lend miss ping-pong must not mask a
+    /// stall).
+    Load {
+        shard: usize,
+        ready: usize,
+        idle: usize,
+        done: bool,
+        progress: bool,
+    },
+    /// Phase two of a lend: the lender gave up `wid`.
+    Lent {
+        from: usize,
+        wid: WorkerId,
+        worker: Box<Worker>,
+        order_tx: mpsc::Sender<LiveOrder>,
+    },
+    /// The lend request found no idle worker (stale load report).
+    LendMiss,
+    /// Phase two of a return: the borrower gave up `wid`.
+    Returned {
+        from: usize,
+        wid: WorkerId,
+        worker: Box<Worker>,
+        order_tx: mpsc::Sender<LiveOrder>,
+    },
+    /// The return request found `wid` busy (or already gone).
+    ReturnMiss,
+    /// The evict target was not on the shard — the worker is mid-lend;
+    /// the coordinator resolves it when the in-flight `Lent` /
+    /// `Returned` arrives.
+    EvictMiss { wid: WorkerId },
+    /// A dead lent worker's node snapshot, travelling to its home
+    /// shard's ledger (the node rejoins through its home shard).
+    MigrateNodeCache { node: NodeId, entry: NodeCacheEntry },
+    /// A [`ShardCtl::Join`] completed; warm-start accounting for the
+    /// outcome.
+    Rejoined {
+        wid: WorkerId,
+        restored_bytes: Option<u64>,
+        full_ctxs: Vec<ContextId>,
+    },
+    /// A worker message for a task this shard does not own (the worker
+    /// is lent; completions still arrive on its home channel).
+    Misrouted(WorkerMsg),
+    /// A shard-side failure (task failure, dispatch-protocol bug) —
+    /// aborts the run.
+    Error { shard: usize, error: String },
+}
+
+/// Which two-phase handoff is in flight (at most one at a time, so a
+/// worker is never part of two moves at once).
+enum Handoff {
+    Lend { borrower: usize },
+    Return,
+}
+
+/// Last known backlog/idle state of one shard, from its `Load` reports.
+#[derive(Clone, Copy, Default)]
+struct ShardLoad {
+    ready: usize,
+    idle: usize,
+    done: bool,
+}
+
+/// Run a live workload on the threaded per-shard runtime. Entered from
+/// [`LiveDriver::run`] when
+/// [`LiveConfig::threaded`](crate::live::LiveConfig::threaded) is set;
+/// produces the same [`LiveOutcome`] shape as the serial path.
+pub(super) fn run_threaded(driver: &LiveDriver) -> Result<LiveOutcome> {
+    let cfg = &driver.cfg;
+    let (mut sched, profiles) = driver.build_coordinator()?;
+    let total_inferences: u64 =
+        driver.apps.iter().map(|a| a.total_inferences).sum();
+    let (cache_root, shared) = driver.build_shared(profiles);
+    let n = sched.shard_count();
+
+    // Per-shard worker-completion channels (home-shard routing, same as
+    // the serial driver) and one control channel per shard loop. The
+    // result senders live on this frame so respawns can clone them.
+    let mut result_txs = Vec::with_capacity(n);
+    let mut worker_rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
+        result_txs.push(tx);
+        worker_rxs.push(rx);
+    }
+    let mut ctl_txs = Vec::with_capacity(n);
+    let mut ctl_rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel::<ShardCtl>();
+        ctl_txs.push(tx);
+        ctl_rxs.push(rx);
+    }
+    let (coord_tx, coord_rx) = mpsc::channel::<CoordMsg>();
+
+    let t0 = Instant::now();
+    let mut coord = Coord::new(n, t0);
+
+    // Join the initial pool on this thread, before the shards move out:
+    // worker ids and home shards come out identical to the serial path.
+    let mut initial_txs: Vec<Vec<(WorkerId, mpsc::Sender<LiveOrder>)>> =
+        vec![Vec::new(); n];
+    for (node, &speed) in cfg.worker_speeds.iter().enumerate() {
+        let node = node as NodeId;
+        let wid = sched.worker_join(
+            Node { id: node, gpu: gpu_for_speed(speed) },
+            t0.elapsed().as_secs_f64(),
+        );
+        let home = sched.home_shard_of_node(node);
+        let (order_tx, stop, handle) = spawn_live_worker(
+            wid,
+            node,
+            speed,
+            &shared,
+            result_txs[home].clone(),
+        );
+        coord.stop_flags.insert(wid, stop);
+        coord.worker_threads.insert(wid, handle);
+        coord.node_worker.insert(node, wid);
+        initial_txs[home].push((wid, order_tx));
+    }
+
+    // Dismember the coordinator: each scheduler moves into its own
+    // thread; the routing/allocator state stays with the coordinator.
+    let ShardParts {
+        shards: shard_scheds,
+        ctx_shard,
+        task_shard,
+        worker_shard,
+        home_shard,
+        next_worker_id,
+        steals,
+        trace,
+    } = sched.into_parts();
+    coord.task_shard = task_shard;
+    coord.worker_shard = worker_shard;
+    coord.home_shard = home_shard;
+    coord.next_worker_id = next_worker_id;
+    coord.steals = steals;
+
+    // Partition the per-app scoring accumulators by owning shard (each
+    // context lives on exactly one shard, so no scoring state is ever
+    // shared between threads).
+    let mut shard_accums: Vec<BTreeMap<ContextId, AppAccum>> =
+        (0..n).map(|_| BTreeMap::new()).collect();
+    for (ctx, a) in driver.new_accums() {
+        let k = ctx_shard.get(&ctx).copied().unwrap_or(0);
+        shard_accums[k].insert(ctx, a);
+    }
+
+    let mut shard_handles = Vec::with_capacity(n);
+    let loop_iter = shard_scheds
+        .into_iter()
+        .zip(ctl_rxs)
+        .zip(worker_rxs)
+        .zip(initial_txs)
+        .zip(shard_accums)
+        .enumerate();
+    for (k, ((((shard_sched, ctl_rx), worker_rx), init), accum)) in loop_iter
+    {
+        let shard_loop = ShardLoop {
+            k,
+            nshards: n,
+            sched: shard_sched,
+            ctl_rx,
+            worker_rx,
+            coord_tx: coord_tx.clone(),
+            order_txs: init.into_iter().collect(),
+            dead: HashSet::new(),
+            dispatched_at: HashMap::new(),
+            accum,
+            latency: Summary::new(),
+            records: Vec::new(),
+            policy: cfg.policy,
+            cache_root: cache_root.clone(),
+            t0,
+        };
+        shard_handles.push(std::thread::spawn(move || shard_loop.run()));
+    }
+    // Only shard threads hold senders now: a disconnect on `coord_rx`
+    // means every shard loop died.
+    drop(coord_tx);
+
+    let mut churn: VecDeque<PendingChurn> = driver.churn_schedule();
+    let persist = cfg.persist_node_caches;
+
+    // Coordinator loop. Wrapped so every exit — success, watchdog,
+    // drained pool, a shard-side error — funnels through the shutdown
+    // below (shard + worker threads joined, cache root cleaned).
+    let loop_result: Result<()> = (|| {
+        let mut last_progress = Instant::now();
+        loop {
+            if coord.loads.iter().all(|l| l.done) && coord.pending.is_none()
+            {
+                return Ok(());
+            }
+            let now = t0.elapsed().as_secs_f64();
+            let awaiting_churn = churn.front().is_some_and(|e| e.at > now);
+            anyhow::ensure!(
+                cfg.watchdog_s <= 0.0
+                    || awaiting_churn
+                    || last_progress.elapsed().as_secs_f64()
+                        < cfg.watchdog_s,
+                "live run watchdog: no progress for {}s with {} shard(s) \
+                 not done",
+                last_progress.elapsed().as_secs(),
+                coord.loads.iter().filter(|l| !l.done).count()
+            );
+
+            // Execute every churn event that has come due.
+            let mut churned = false;
+            while let Some(&e) = churn.front() {
+                if e.at > now {
+                    break;
+                }
+                churn.pop_front();
+                if trace.on() {
+                    let at = t0.elapsed().as_secs_f64();
+                    trace.emit(if e.up {
+                        TraceEvent::NodeRejoin { at, node: e.node }
+                    } else {
+                        TraceEvent::NodeReclaim { at, node: e.node }
+                    });
+                }
+                if e.up {
+                    coord.rejoin_node(
+                        &ctl_txs,
+                        &shared,
+                        &result_txs,
+                        &cfg.worker_speeds,
+                        e.node,
+                    );
+                } else {
+                    coord.kill_node(&ctl_txs, e.node, persist);
+                }
+                churned = true;
+            }
+            if churned {
+                last_progress = Instant::now();
+            }
+
+            let timeout = churn
+                .front()
+                .map(|e| (e.at - now).clamp(0.001, 0.2))
+                .unwrap_or(0.2);
+            match coord_rx.recv_timeout(Duration::from_secs_f64(timeout)) {
+                Ok(msg) => {
+                    if coord.handle(msg, &ctl_txs, persist)? {
+                        last_progress = Instant::now();
+                    }
+                    while let Ok(msg) = coord_rx.try_recv() {
+                        if coord.handle(msg, &ctl_txs, persist)? {
+                            last_progress = Instant::now();
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Nothing can ever progress again: no workers, no
+                    // scheduled rejoins, shards not done.
+                    if coord.node_worker.is_empty()
+                        && !churn.iter().any(|e| e.up)
+                        && !coord.loads.iter().all(|l| l.done)
+                    {
+                        anyhow::bail!(
+                            "live pool drained: no workers and no \
+                             scheduled rejoins with {} shard(s) not done",
+                            coord
+                                .loads
+                                .iter()
+                                .filter(|l| !l.done)
+                                .count()
+                        );
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!(
+                        "every shard thread terminated unexpectedly"
+                    );
+                }
+            }
+            if cfg.steal {
+                coord.try_handoff(&ctl_txs);
+            }
+        }
+    })();
+
+    // Shutdown — also on the error paths. Worker stop flags first (a
+    // thread mid-emulation-sleep exits promptly), then stop and join
+    // the shard loops (they drop the order channels, unblocking idle
+    // workers), then join worker threads, then clean the disk.
+    for flag in coord.stop_flags.values() {
+        flag.store(true, Ordering::Relaxed);
+    }
+    for tx in &ctl_txs {
+        let _ = tx.send(ShardCtl::Stop);
+    }
+    let mut shard_panic = false;
+    let mut finals: Vec<ShardFinal> = Vec::with_capacity(n);
+    for h in shard_handles {
+        match h.join() {
+            Ok(f) => finals.push(f),
+            Err(_) => shard_panic = true,
+        }
+    }
+    for (_, h) in coord.worker_threads.drain() {
+        let _ = h.join();
+    }
+    for (_, h) in coord.parked.drain() {
+        let _ = h.join();
+    }
+    cleanup_cache_root(cfg, &cache_root);
+    anyhow::ensure!(!shard_panic, "a shard thread panicked during the run");
+
+    // Reassemble whenever every shard thread returned — the error exits
+    // (watchdog, drained pool) included: task conservation and index
+    // consistency must hold at any post-join quiescent point, and the
+    // trace file should carry the events of failed runs too.
+    let wall_s = t0.elapsed().as_secs_f64();
+    finals.sort_by_key(|f| f.shard);
+    let mut shards_back = Vec::with_capacity(n);
+    let mut records = Vec::new();
+    let mut accum: BTreeMap<ContextId, AppAccum> = BTreeMap::new();
+    let mut latency = Summary::new();
+    for f in finals {
+        shards_back.push(f.sched);
+        records.extend(f.records);
+        for (ctx, a) in f.accum {
+            accum.insert(ctx, a);
+        }
+        for s in f.latency.samples() {
+            latency.add(*s);
+        }
+    }
+    if n > 1 {
+        // Same cross-shard merge order as `ShardedCoordinator::records`.
+        records.sort_by(|a, b| {
+            a.completed_at
+                .total_cmp(&b.completed_at)
+                .then(a.task.cmp(&b.task))
+        });
+    }
+
+    let sched = ShardedCoordinator::reassemble(ShardParts {
+        shards: shards_back,
+        ctx_shard,
+        task_shard: coord.task_shard,
+        worker_shard: coord.worker_shard,
+        home_shard: coord.home_shard,
+        next_worker_id: coord.next_worker_id,
+        steals: coord.steals,
+        trace,
+    });
+    debug_assert!(sched.check_conservation());
+    debug_assert!(
+        sched.check_index_consistency(),
+        "incremental scheduler indexes diverged from scan truth"
+    );
+    sched.trace().flush();
+    loop_result?;
+
+    let progress = sched.progress();
+    let completed = progress.completed_inferences;
+    debug_assert_eq!(completed, total_inferences);
+    let mut merged_accuracy: Option<AccuracyReport> = None;
+    let mut per_app = BTreeMap::new();
+    for (ctx, a) in accum {
+        match &mut merged_accuracy {
+            None => merged_accuracy = Some(a.accuracy.clone()),
+            Some(m) => m.merge(&a.accuracy),
+        }
+        per_app.insert(
+            ctx,
+            LiveAppOutcome {
+                profile: a.profile,
+                completed_inferences: a.completed,
+                accuracy: a.accuracy,
+                task_latency: a.latency,
+            },
+        );
+    }
+    let accuracy = merged_accuracy.ok_or_else(|| {
+        anyhow::anyhow!("live run completed with no applications")
+    })?;
+    Ok(LiveOutcome {
+        wall_s,
+        completed_inferences: completed,
+        throughput_inf_per_s: completed as f64 / wall_s,
+        accuracy,
+        records,
+        task_latency: latency,
+        cache: sched.cache_stats(),
+        per_app,
+        warm_started: coord.warm_started,
+        warm_contexts: coord.warm_contexts,
+        restarts: coord.restarts,
+        evictions: progress.evictions,
+        evicted_inferences: progress.evicted_inferences,
+        shards: sched.shard_count(),
+        steals: sched.steals(),
+    })
+}
+
+/// Spawn one live-worker OS thread reporting to `out` (its home
+/// shard's completion channel — a lend does not change it).
+fn spawn_live_worker(
+    wid: WorkerId,
+    node: NodeId,
+    speed: f64,
+    shared: &Arc<LiveWorkerShared>,
+    out: mpsc::Sender<WorkerMsg>,
+) -> (
+    mpsc::Sender<LiveOrder>,
+    Arc<AtomicBool>,
+    std::thread::JoinHandle<()>,
+) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<LiveOrder>();
+    let worker_shared = Arc::clone(shared);
+    let worker_stop = Arc::clone(&stop);
+    let handle = std::thread::spawn(move || {
+        LiveWorker::new(wid, node, speed, worker_shared, worker_stop)
+            .run(rx, out)
+    });
+    (tx, stop, handle)
+}
+
+/// Worker id and task id of any worker message.
+fn msg_meta(msg: &WorkerMsg) -> (WorkerId, TaskId) {
+    match msg {
+        WorkerMsg::PhaseDone { worker, task, .. }
+        | WorkerMsg::TaskDone { worker, task, .. }
+        | WorkerMsg::Failed { worker, task, .. } => (*worker, *task),
+    }
+}
+
+/// The coordinator: cross-shard state on the driver thread. Never
+/// touches a scheduler while the shard threads run — everything it
+/// does is message routing over the control channels.
+struct Coord {
+    n: usize,
+    t0: Instant,
+    task_shard: HashMap<TaskId, usize>,
+    worker_shard: HashMap<WorkerId, usize>,
+    home_shard: HashMap<WorkerId, usize>,
+    next_worker_id: WorkerId,
+    steals: u64,
+    stop_flags: HashMap<WorkerId, Arc<AtomicBool>>,
+    worker_threads: HashMap<WorkerId, std::thread::JoinHandle<()>>,
+    /// Stopped threads awaiting a join (same-node respawn joins them
+    /// first so two incarnations never write the node dir at once).
+    parked: HashMap<NodeId, std::thread::JoinHandle<()>>,
+    node_worker: HashMap<NodeId, WorkerId>,
+    /// Reclaimed worker ids: their late messages are dropped, and a
+    /// `Lent`/`Returned` carrying one resolves to adopt-then-evict at
+    /// the home shard.
+    dead: HashSet<WorkerId>,
+    /// Home shard of each dead worker (`home_shard` entry is removed at
+    /// the kill; the deferred evict still needs the destination).
+    dead_home: HashMap<WorkerId, usize>,
+    down: HashSet<NodeId>,
+    loads: Vec<ShardLoad>,
+    pending: Option<Handoff>,
+    last_handoff_try: Instant,
+    warm_started: BTreeMap<WorkerId, u64>,
+    warm_contexts: BTreeMap<WorkerId, Vec<ContextId>>,
+    restarts: u32,
+}
+
+impl Coord {
+    fn new(n: usize, t0: Instant) -> Self {
+        Self {
+            n,
+            t0,
+            task_shard: HashMap::new(),
+            worker_shard: HashMap::new(),
+            home_shard: HashMap::new(),
+            next_worker_id: 0,
+            steals: 0,
+            stop_flags: HashMap::new(),
+            worker_threads: HashMap::new(),
+            parked: HashMap::new(),
+            node_worker: HashMap::new(),
+            dead: HashSet::new(),
+            dead_home: HashMap::new(),
+            down: HashSet::new(),
+            loads: vec![ShardLoad::default(); n],
+            pending: None,
+            last_handoff_try: t0,
+            warm_started: BTreeMap::new(),
+            warm_contexts: BTreeMap::new(),
+            restarts: 0,
+        }
+    }
+
+    /// Reclaim `node` NOW: stop its worker thread and tell the shard
+    /// currently holding the worker to evict it (requeueing its
+    /// in-flight task). If the worker is mid-handoff the evict misses
+    /// and is re-targeted when the in-flight `Lent`/`Returned` lands.
+    fn kill_node(
+        &mut self,
+        ctl_txs: &[mpsc::Sender<ShardCtl>],
+        node: NodeId,
+        persist: bool,
+    ) {
+        self.down.insert(node);
+        let Some(wid) = self.node_worker.remove(&node) else {
+            return;
+        };
+        if let Some(flag) = self.stop_flags.remove(&wid) {
+            flag.store(true, Ordering::Relaxed);
+        }
+        if let Some(handle) = self.worker_threads.remove(&wid) {
+            self.parked.insert(node, handle);
+        }
+        self.dead.insert(wid);
+        let cur = self.worker_shard.remove(&wid);
+        let home = self.home_shard.remove(&wid);
+        self.dead_home.insert(wid, home.or(cur).unwrap_or(0));
+        if let Some(cur) = cur {
+            // A worker dying away from home migrates its node's disk
+            // snapshot to the home ledger (the node rejoins there; one
+            // physical disk must have exactly one ledger entry).
+            let migrate = persist && home.is_some_and(|h| h != cur);
+            let now = self.t0.elapsed().as_secs_f64();
+            let _ = ctl_txs[cur].send(ShardCtl::Evict {
+                wid,
+                now,
+                migrate,
+                drop_cache: !persist,
+            });
+        }
+    }
+
+    /// A reclaimed node came back: respawn a worker incarnation on it
+    /// (previous thread joined first) and tell its home shard to join
+    /// it, warm-starting from the node cache when one survives.
+    fn rejoin_node(
+        &mut self,
+        ctl_txs: &[mpsc::Sender<ShardCtl>],
+        shared: &Arc<LiveWorkerShared>,
+        result_txs: &[mpsc::Sender<WorkerMsg>],
+        speeds: &[f64],
+        node: NodeId,
+    ) {
+        if !self.down.remove(&node) {
+            return; // never reclaimed (or already up)
+        }
+        if let Some(handle) = self.parked.remove(&node) {
+            let _ = handle.join();
+        }
+        let speed = speeds[node as usize];
+        let wid = self.next_worker_id;
+        self.next_worker_id += 1;
+        let home = node as usize % self.n;
+        let (order_tx, stop, handle) = spawn_live_worker(
+            wid,
+            node,
+            speed,
+            shared,
+            result_txs[home].clone(),
+        );
+        self.stop_flags.insert(wid, stop);
+        self.worker_threads.insert(wid, handle);
+        self.node_worker.insert(node, wid);
+        self.worker_shard.insert(wid, home);
+        self.home_shard.insert(wid, home);
+        self.restarts += 1;
+        let now = self.t0.elapsed().as_secs_f64();
+        let _ = ctl_txs[home].send(ShardCtl::Join {
+            wid,
+            node: Node { id: node, gpu: gpu_for_speed(speed) },
+            now,
+            order_tx,
+        });
+    }
+
+    /// Process one shard → coordinator message. Returns whether it
+    /// counts as progress for the watchdog (load reports carry their
+    /// own progress bit; handoff misses never count).
+    fn handle(
+        &mut self,
+        msg: CoordMsg,
+        ctl_txs: &[mpsc::Sender<ShardCtl>],
+        persist: bool,
+    ) -> Result<bool> {
+        match msg {
+            CoordMsg::Load { shard, ready, idle, done, progress } => {
+                self.loads[shard] = ShardLoad { ready, idle, done };
+                Ok(progress)
+            }
+            CoordMsg::Lent { from, wid, worker, order_tx } => {
+                let to = match self.pending.take() {
+                    Some(Handoff::Lend { borrower }) => borrower,
+                    _ => from,
+                };
+                if self.dead.contains(&wid) {
+                    self.adopt_then_evict_dead(
+                        ctl_txs, from, wid, worker, order_tx, persist,
+                    );
+                    return Ok(true);
+                }
+                if to != from {
+                    self.steals += 1;
+                }
+                self.worker_shard.insert(wid, to);
+                let _ = ctl_txs[to].send(ShardCtl::Adopt { worker, order_tx });
+                Ok(true)
+            }
+            CoordMsg::Returned { from, wid, worker, order_tx } => {
+                self.pending = None;
+                if self.dead.contains(&wid) {
+                    self.adopt_then_evict_dead(
+                        ctl_txs, from, wid, worker, order_tx, persist,
+                    );
+                    return Ok(true);
+                }
+                let home = self.home_shard.get(&wid).copied().unwrap_or(from);
+                self.worker_shard.insert(wid, home);
+                let _ =
+                    ctl_txs[home].send(ShardCtl::Adopt { worker, order_tx });
+                Ok(true)
+            }
+            CoordMsg::LendMiss | CoordMsg::ReturnMiss => {
+                self.pending = None;
+                Ok(false)
+            }
+            CoordMsg::EvictMiss { wid } => {
+                debug_assert!(
+                    self.dead.contains(&wid),
+                    "evict missed a worker that was never killed"
+                );
+                Ok(false)
+            }
+            CoordMsg::MigrateNodeCache { node, entry } => {
+                let home = node as usize % self.n;
+                let _ =
+                    ctl_txs[home].send(ShardCtl::PutNodeCache { node, entry });
+                Ok(true)
+            }
+            CoordMsg::Rejoined { wid, restored_bytes, full_ctxs } => {
+                if let Some(bytes) = restored_bytes {
+                    self.warm_started.insert(wid, bytes);
+                    self.warm_contexts.insert(wid, full_ctxs);
+                }
+                Ok(true)
+            }
+            CoordMsg::Misrouted(msg) => {
+                let (from, task) = msg_meta(&msg);
+                if self.dead.contains(&from) {
+                    // A reclaimed worker's parting words: its task was
+                    // requeued; acting on these would corrupt the retry.
+                    return Ok(true);
+                }
+                let owner = if Scheduler::is_prefetch_id(task) {
+                    (((task - Scheduler::PREFETCH_ID_BASE)
+                        >> PREFETCH_SHARD_SHIFT)
+                        as usize)
+                        % self.n
+                } else {
+                    self.task_shard.get(&task).copied().unwrap_or(0)
+                };
+                let _ = ctl_txs[owner].send(ShardCtl::Deliver(msg));
+                Ok(true)
+            }
+            CoordMsg::Error { shard, error } => {
+                anyhow::bail!("shard {shard}: {error}")
+            }
+        }
+    }
+
+    /// Resolve a handoff that delivered a dead worker: materialize it
+    /// at its home shard, then evict it there. Control-channel FIFO
+    /// guarantees the adopt lands first, so the node snapshot ends in
+    /// the ledger the node rejoins through.
+    fn adopt_then_evict_dead(
+        &mut self,
+        ctl_txs: &[mpsc::Sender<ShardCtl>],
+        from: usize,
+        wid: WorkerId,
+        worker: Box<Worker>,
+        order_tx: mpsc::Sender<LiveOrder>,
+        persist: bool,
+    ) {
+        let home = self.dead_home.get(&wid).copied().unwrap_or(from);
+        let now = self.t0.elapsed().as_secs_f64();
+        let _ = ctl_txs[home].send(ShardCtl::Adopt { worker, order_tx });
+        let _ = ctl_txs[home].send(ShardCtl::Evict {
+            wid,
+            now,
+            migrate: false,
+            drop_cache: !persist,
+        });
+    }
+
+    /// Initiate at most one two-phase handoff, based on the latest load
+    /// reports: lend an idle worker of a drained shard to a backlogged
+    /// peer, or send an idle lent worker home. Throttled so stale-load
+    /// misses cannot ping-pong.
+    fn try_handoff(&mut self, ctl_txs: &[mpsc::Sender<ShardCtl>]) {
+        if self.pending.is_some()
+            || self.last_handoff_try.elapsed() < HANDOFF_SPACING
+        {
+            return;
+        }
+        let borrower = (0..self.n).find(|&k| {
+            self.loads[k].ready > 0 && self.loads[k].idle == 0
+        });
+        if let Some(borrower) = borrower {
+            let lender = (0..self.n).find(|&k| {
+                k != borrower
+                    && self.loads[k].ready == 0
+                    && self.loads[k].idle > 0
+            });
+            if let Some(lender) = lender {
+                self.pending = Some(Handoff::Lend { borrower });
+                self.last_handoff_try = Instant::now();
+                let _ = ctl_txs[lender].send(ShardCtl::LendRequest);
+                return;
+            }
+        }
+        // Returns: lowest worker id first (deterministic), skipping
+        // workers still needed where they are.
+        let mut away: Vec<(WorkerId, usize, usize)> = self
+            .worker_shard
+            .iter()
+            .filter_map(|(&w, &cur)| {
+                let home = *self.home_shard.get(&w)?;
+                (home != cur).then_some((w, cur, home))
+            })
+            .collect();
+        away.sort_unstable();
+        for (wid, cur, home) in away {
+            if self.loads[cur].ready > 0 && self.loads[home].ready == 0 {
+                continue; // still needed where it is
+            }
+            self.pending = Some(Handoff::Return);
+            self.last_handoff_try = Instant::now();
+            let _ = ctl_txs[cur].send(ShardCtl::ReturnRequest { wid });
+            return;
+        }
+    }
+}
+
+/// One shard's dispatch thread: owns the shard's [`Scheduler`], its
+/// workers' order channels and its contexts' scoring state; drains the
+/// control channel first (FIFO adoption/eviction is the correctness
+/// mechanism), then worker completions, napping [`POLL`] when idle.
+struct ShardLoop {
+    k: usize,
+    nshards: usize,
+    sched: Scheduler,
+    ctl_rx: mpsc::Receiver<ShardCtl>,
+    worker_rx: mpsc::Receiver<WorkerMsg>,
+    coord_tx: mpsc::Sender<CoordMsg>,
+    order_txs: HashMap<WorkerId, mpsc::Sender<LiveOrder>>,
+    /// Workers evicted on this shard: their late messages are dropped
+    /// (their tasks were requeued — acting on a stale completion would
+    /// double-score or corrupt the redispatched attempt).
+    dead: HashSet<WorkerId>,
+    dispatched_at: HashMap<TaskId, f64>,
+    accum: BTreeMap<ContextId, AppAccum>,
+    latency: Summary,
+    records: Vec<TaskRecord>,
+    policy: ContextPolicy,
+    cache_root: PathBuf,
+    t0: Instant,
+}
+
+/// What a shard thread hands back to the driver at [`ShardCtl::Stop`].
+struct ShardFinal {
+    shard: usize,
+    sched: Scheduler,
+    records: Vec<TaskRecord>,
+    accum: BTreeMap<ContextId, AppAccum>,
+    latency: Summary,
+}
+
+impl ShardLoop {
+    fn run(mut self) -> ShardFinal {
+        self.round();
+        self.report_load(true);
+        loop {
+            // Control first: adopts/evicts/joins must beat the idle nap
+            // — and a kill must land before the victim's stale
+            // completions are looked at.
+            let mut worked = false;
+            let mut msg_worked = false;
+            loop {
+                match self.ctl_rx.try_recv() {
+                    Ok(ShardCtl::Stop) => return self.finish(),
+                    Ok(ctl) => {
+                        self.handle_ctl(ctl);
+                        worked = true;
+                    }
+                    Err(_) => break,
+                }
+            }
+            while let Ok(msg) = self.worker_rx.try_recv() {
+                self.handle_msg(msg, false);
+                worked = true;
+                msg_worked = true;
+            }
+            if worked {
+                self.report_load(msg_worked);
+                continue;
+            }
+            match self.worker_rx.recv_timeout(POLL) {
+                Ok(msg) => {
+                    self.handle_msg(msg, false);
+                    self.report_load(true);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // The driver holds this shard's result sender for
+                    // the whole run, so this only happens during
+                    // teardown; nap so the Stop poll doesn't spin.
+                    std::thread::sleep(POLL);
+                }
+            }
+        }
+    }
+
+    fn finish(self) -> ShardFinal {
+        ShardFinal {
+            shard: self.k,
+            sched: self.sched,
+            records: self.records,
+            accum: self.accum,
+            latency: self.latency,
+        }
+    }
+
+    /// Does this shard own dispatch id `task`? Prefetch ids encode
+    /// their issuing shard; task ids are owned iff this shard's
+    /// scheduler knows the task.
+    fn owns(&self, task: TaskId) -> bool {
+        if Scheduler::is_prefetch_id(task) {
+            (((task - Scheduler::PREFETCH_ID_BASE) >> PREFETCH_SHARD_SHIFT)
+                as usize)
+                % self.nshards
+                == self.k
+        } else {
+            self.sched.task_context(task).is_some()
+        }
+    }
+
+    fn handle_ctl(&mut self, ctl: ShardCtl) {
+        match ctl {
+            ShardCtl::Adopt { worker, order_tx } => {
+                let wid = worker.id;
+                self.sched.worker_adopt(*worker);
+                self.order_txs.insert(wid, order_tx);
+                self.round();
+            }
+            ShardCtl::LendRequest => {
+                // Lowest idle id first: deterministic, and (ids being
+                // join-ordered) biased toward the longest-lived caches.
+                let picked = self
+                    .sched
+                    .idle_worker_ids()
+                    .first()
+                    .copied()
+                    .and_then(|wid| {
+                        self.sched.worker_lend(wid).map(|w| (wid, w))
+                    });
+                match picked {
+                    Some((wid, w)) => self.ship_worker(wid, w, true),
+                    None => {
+                        let _ = self.coord_tx.send(CoordMsg::LendMiss);
+                    }
+                }
+            }
+            ShardCtl::ReturnRequest { wid } => {
+                // `worker_lend` refuses busy workers, which is exactly
+                // the "idle in the borrower" condition.
+                match self.sched.worker_lend(wid) {
+                    Some(w) => self.ship_worker(wid, w, false),
+                    None => {
+                        let _ = self.coord_tx.send(CoordMsg::ReturnMiss);
+                    }
+                }
+            }
+            ShardCtl::Evict { wid, now, migrate, drop_cache } => {
+                let Some(node) =
+                    self.sched.worker(wid).map(|w| w.node_id())
+                else {
+                    let _ = self.coord_tx.send(CoordMsg::EvictMiss { wid });
+                    return;
+                };
+                self.dead.insert(wid);
+                self.order_txs.remove(&wid);
+                self.sched.set_clock_hint(now);
+                // Snapshots the disk tier under the node id and
+                // requeues the in-flight task at the queue front.
+                self.sched.worker_evict(wid);
+                if drop_cache {
+                    // The dying incarnation wipes its node dir on exit;
+                    // the ledger must not remember bytes that no longer
+                    // exist.
+                    self.sched.drop_node_cache(node);
+                } else if migrate {
+                    if let Some(entry) = self.sched.take_node_cache(node) {
+                        let _ = self
+                            .coord_tx
+                            .send(CoordMsg::MigrateNodeCache { node, entry });
+                    }
+                }
+                self.round();
+            }
+            ShardCtl::PutNodeCache { node, entry } => {
+                self.sched.put_node_cache(node, entry);
+            }
+            ShardCtl::Join { wid, node, now, order_tx } => {
+                let node_id = node.id;
+                self.sched.set_clock_hint(now);
+                self.sched.set_next_worker_id(wid);
+                let got = self.sched.worker_join(node, now);
+                debug_assert_eq!(got, wid);
+                self.order_txs.insert(got, order_tx);
+                let (restored_bytes, full, dropped) =
+                    match self.sched.worker(got) {
+                        Some(w) => warm_restore_info(
+                            w,
+                            self.sched.recipes(),
+                            self.policy,
+                        ),
+                        None => (None, Vec::new(), Vec::new()),
+                    };
+                // Prune leftover files of contexts that restored no
+                // bytes before the incarnation serves anything (its
+                // first order arrives only after the round below).
+                let node_dir =
+                    self.cache_root.join(format!("node-{node_id}"));
+                for ctx in dropped {
+                    let _ = std::fs::remove_dir_all(
+                        node_dir.join(format!("ctx-{ctx}")),
+                    );
+                }
+                let _ = self.coord_tx.send(CoordMsg::Rejoined {
+                    wid: got,
+                    restored_bytes,
+                    full_ctxs: full,
+                });
+                self.round();
+            }
+            ShardCtl::Deliver(msg) => self.handle_msg(msg, true),
+            // Stop is intercepted by the run loop before dispatching
+            // here; nothing to do if a drain ever reaches it.
+            ShardCtl::Stop => {}
+        }
+    }
+
+    /// Phase two of a lend or return: hand the worker (and its order
+    /// channel) to the coordinator. A live worker without an order
+    /// channel is a driver bug — re-adopt and fail loudly rather than
+    /// shipping a worker that can never receive work.
+    fn ship_worker(&mut self, wid: WorkerId, w: Worker, lend: bool) {
+        match self.order_txs.remove(&wid) {
+            Some(order_tx) => {
+                let msg = if lend {
+                    CoordMsg::Lent {
+                        from: self.k,
+                        wid,
+                        worker: Box::new(w),
+                        order_tx,
+                    }
+                } else {
+                    CoordMsg::Returned {
+                        from: self.k,
+                        wid,
+                        worker: Box::new(w),
+                        order_tx,
+                    }
+                };
+                let _ = self.coord_tx.send(msg);
+            }
+            None => {
+                self.sched.worker_adopt(w);
+                self.error(format!(
+                    "handoff of worker {wid} found no order channel"
+                ));
+            }
+        }
+    }
+
+    /// Process one worker message. `delivered` marks messages re-routed
+    /// by the coordinator: those are never forwarded again (a delivery
+    /// this shard still does not own races a completed retry — stale
+    /// either way, dropped).
+    fn handle_msg(&mut self, msg: WorkerMsg, delivered: bool) {
+        let (from, task) = msg_meta(&msg);
+        if self.dead.contains(&from) {
+            // A reclaimed worker's parting words: its task was requeued
+            // (possibly redispatched under the same id); acting on
+            // these would corrupt the retry.
+            return;
+        }
+        if !self.owns(task) {
+            if !delivered {
+                let _ = self.coord_tx.send(CoordMsg::Misrouted(msg));
+            }
+            return;
+        }
+        match msg {
+            WorkerMsg::PhaseDone { task, phase, .. } => {
+                self.sched.set_clock_hint(self.t0.elapsed().as_secs_f64());
+                self.sched.phase_done(task, phase);
+                self.forward_evictions();
+            }
+            WorkerMsg::TaskDone { task, .. }
+                if Scheduler::is_prefetch_id(task) =>
+            {
+                // A prefetch finished staging (the scheduler already
+                // retired it on its last PhaseDone); the freed warm
+                // worker may take a task right away.
+                self.round();
+            }
+            WorkerMsg::TaskDone {
+                worker,
+                task,
+                verdicts,
+                context_s,
+                execute_s,
+            } => {
+                let now = self.t0.elapsed().as_secs_f64();
+                let ctx = self.sched.task_context(task).unwrap_or(0);
+                let (start, _) =
+                    self.sched.task_range(task).unwrap_or((0, 0));
+                let d_at = self.dispatched_at.remove(&task).unwrap_or(0.0);
+                let (attempts, inferences) =
+                    self.sched.task_meta(task).unwrap_or((1, 0));
+                if let Some(a) = self.accum.get_mut(&ctx) {
+                    a.accuracy
+                        .merge(&a.scorer.score_batch(start, &verdicts));
+                    a.latency.add(now - d_at);
+                    a.completed += inferences;
+                }
+                self.latency.add(now - d_at);
+                let gpu = self
+                    .sched
+                    .worker(worker)
+                    .map(|w| w.gpu())
+                    .unwrap_or(GpuModel::A10);
+                let rec = TaskRecord {
+                    task,
+                    context: ctx,
+                    worker,
+                    gpu,
+                    attempts,
+                    inferences,
+                    dispatched_at: d_at,
+                    completed_at: now,
+                    context_s,
+                    execute_s,
+                };
+                self.records.push(rec.clone());
+                self.sched.set_clock_hint(now);
+                self.sched.task_done(task, rec);
+                self.round();
+            }
+            WorkerMsg::Failed { task, error, .. } => {
+                self.error(format!("live task {task} failed: {error}"));
+            }
+        }
+        debug_assert!(self.sched.check_conservation());
+        debug_assert!(
+            self.sched.check_index_consistency(),
+            "incremental scheduler indexes diverged from scan truth"
+        );
+    }
+
+    /// One timed dispatch round on this shard's scheduler, with the
+    /// same `dispatch_round` trace event the serial coordinator emits,
+    /// then order delivery to the worker threads.
+    fn round(&mut self) {
+        let now = self.t0.elapsed().as_secs_f64();
+        self.sched.set_clock_hint(now);
+        let t_round = self.sched.trace().on().then(Instant::now);
+        let dispatches = self.sched.try_dispatch();
+        if let Some(t_round) = t_round {
+            let assigned = dispatches
+                .iter()
+                .filter(|d| !d.is_prefetch())
+                .count() as u64;
+            let prefetched = dispatches.len() as u64 - assigned;
+            let ev = TraceEvent::DispatchRound {
+                at: now,
+                policy: self.sched.placement_name().to_string(),
+                assigned,
+                prefetched,
+                queued: self.sched.ready_count() as u64,
+                wall_s: t_round.elapsed().as_secs_f64(),
+                shard: self.sched.shard_id(),
+            };
+            self.sched.trace().emit(ev);
+        }
+        for d in dispatches {
+            self.send_order(d);
+        }
+    }
+
+    /// Forward one dispatch to its worker thread. Ranges come from
+    /// `task_range` (the merged multi-context id stream has no
+    /// `task * batch_size` arithmetic). The scheduler only assigns to
+    /// connected workers, so a missing channel or a dead receiver is a
+    /// driver bug and fails loudly.
+    fn send_order(&mut self, d: Dispatch) {
+        let context = self.sched.dispatch_context(d.task).unwrap_or(0);
+        let (start, count) = if Scheduler::is_prefetch_id(d.task) {
+            // Stage-only prefetch plan: no inference range, no latency
+            // accounting.
+            (0, 0)
+        } else {
+            match self.sched.task_range(d.task) {
+                Some(range) => {
+                    self.dispatched_at
+                        .insert(d.task, self.t0.elapsed().as_secs_f64());
+                    range
+                }
+                None => {
+                    self.error(format!(
+                        "dispatched task {} has no inference range",
+                        d.task
+                    ));
+                    return;
+                }
+            }
+        };
+        let Some(tx) = self.order_txs.get(&d.worker) else {
+            self.error(format!(
+                "dispatched worker {} has no order channel",
+                d.worker
+            ));
+            return;
+        };
+        let sent = tx.send(LiveOrder::Run(WorkOrder {
+            task: d.task,
+            context,
+            start,
+            count,
+            phases: d.phases,
+        }));
+        if sent.is_err() {
+            self.error(format!(
+                "worker {} thread hung up before its order",
+                d.worker
+            ));
+        }
+    }
+
+    /// Forward freshly decided LRU evictions to their worker threads so
+    /// the on-disk cache shrinks with the accounting (never the context
+    /// of an in-flight task — the scheduler pins it).
+    fn forward_evictions(&mut self) {
+        for (wid, ctx) in self.sched.take_evictions() {
+            if let Some(tx) = self.order_txs.get(&wid) {
+                let _ = tx.send(LiveOrder::Evict(ctx));
+            }
+        }
+    }
+
+    fn report_load(&self, progress: bool) {
+        let _ = self.coord_tx.send(CoordMsg::Load {
+            shard: self.k,
+            ready: self.sched.ready_count(),
+            idle: self.sched.idle_count(),
+            done: self.sched.all_done(),
+            progress,
+        });
+    }
+
+    fn error(&self, error: String) {
+        let _ = self
+            .coord_tx
+            .send(CoordMsg::Error { shard: self.k, error });
+    }
+}
+
+// Shard loops move across threads whole (scheduler, channel ends,
+// scoring state); assert it at compile time near the type so a
+// non-`Send` field fails here by name.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    let _ = assert_send::<ShardLoop>;
+    let _ = assert_send::<ShardCtl>;
+    let _ = assert_send::<CoordMsg>;
+};
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::{ContextPolicy, PolicyKind};
+    use crate::live::{LiveApp, LiveConfig, LiveDriver};
+    use crate::runtime::synthetic::{
+        default_live_profiles, write_synthetic_artifacts,
+    };
+    use crate::runtime::{BackendKind, Manifest};
+
+    fn synthetic_manifest(tag: &str) -> (std::path::PathBuf, Manifest) {
+        let dir = std::env::temp_dir().join(format!(
+            "pcm-live-threaded-test-{tag}-{}",
+            std::process::id()
+        ));
+        write_synthetic_artifacts(&dir, &default_live_profiles())
+            .expect("synthetic artifacts");
+        let m = Manifest::load(&dir).expect("manifest loads");
+        (dir, m)
+    }
+
+    fn base_cfg(seed: u64) -> LiveConfig {
+        LiveConfig {
+            policy: ContextPolicy::Pervasive,
+            placement: PolicyKind::Greedy,
+            backend: BackendKind::Reference,
+            seed,
+            ..LiveConfig::default()
+        }
+    }
+
+    /// Threaded single-shard serving is the serial driver's degenerate
+    /// case: same completions, same accuracy, same record count.
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns threads and stages real files
+    fn threaded_single_shard_matches_serial_outcome() {
+        let (dir, manifest) = synthetic_manifest("parity1");
+        let mk = |threaded: bool| {
+            let cfg = LiveConfig {
+                apps: vec![LiveApp {
+                    profile: "tiny".into(),
+                    total_inferences: 16,
+                    batch_size: 8,
+                }],
+                worker_speeds: vec![1.0, 1.0],
+                threaded,
+                ..base_cfg(424_242)
+            };
+            LiveDriver::new(cfg, manifest.clone())
+                .run()
+                .expect("run completes")
+        };
+        let threaded = mk(true);
+        let serial = mk(false);
+        assert_eq!(threaded.completed_inferences, 16);
+        assert_eq!(
+            threaded.completed_inferences,
+            serial.completed_inferences
+        );
+        assert_eq!(threaded.records.len(), serial.records.len());
+        assert_eq!(
+            threaded.accuracy.correct,
+            serial.accuracy.correct,
+            "deterministic reference scorer: identical verdict scoring"
+        );
+        assert_eq!(threaded.shards, 1);
+        assert_eq!(threaded.steals, 0, "one shard has no peers to rob");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Two threaded shards with an unbalanced workload: the drained
+    /// shard lends its idle worker to the backlogged one through the
+    /// two-phase handoff, and everything still completes exactly once.
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns threads and stages real files
+    fn threaded_two_shards_complete_with_lend() {
+        let (dir, manifest) = synthetic_manifest("lend2");
+        let cfg = LiveConfig {
+            apps: vec![
+                LiveApp {
+                    profile: "tiny".into(),
+                    total_inferences: 24,
+                    batch_size: 4,
+                },
+                LiveApp {
+                    profile: "tiny".into(),
+                    total_inferences: 4,
+                    batch_size: 4,
+                },
+            ],
+            worker_speeds: vec![1.0, 1.0],
+            shards: 2,
+            threaded: true,
+            execute_floor_s: 0.05,
+            ..base_cfg(515_151)
+        };
+        let out = LiveDriver::new(cfg, manifest)
+            .run()
+            .expect("threaded sharded run completes");
+        assert_eq!(out.completed_inferences, 28, "nothing lost, no dupes");
+        assert_eq!(out.shards, 2);
+        assert!(
+            out.steals >= 1,
+            "drained shard 1 lends its worker to backlogged shard 0 \
+             (got {} steals)",
+            out.steals
+        );
+        assert_eq!(out.records.len(), 7);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

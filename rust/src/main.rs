@@ -56,6 +56,11 @@ impl<'a> Flags<'a> {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Presence of a valueless switch (e.g. `--threaded`).
+    fn has(&self, key: &str) -> bool {
+        self.0.iter().any(|a| a == key)
+    }
+
     /// Build a trace handle from `--trace-out <path>`: a JSONL file
     /// sink when the flag is present, the null handle otherwise.
     fn get_trace(&self) -> pcm::Result<TraceHandle> {
@@ -130,7 +135,7 @@ pcm — pervasive context management for throughput-oriented LLM inference
 
 USAGE:
   pcm experiment <table1|fig4|fig5|table2|fig6|fig7|mixed|policies|churn|live-churn|shards|headline|all>
-      [--seed N] [--scale F] [--results DIR]
+      [--seed N] [--scale F] [--results DIR] [--threaded]
       [--policy|--placement greedy|fairshare|prefetch|riskaware]
       (mixed: two applications with distinct contexts on one pool,
        per-context cache hit/miss/evict counters, policies pv1/pv2/pv4)
@@ -148,6 +153,10 @@ USAGE:
        single-shard trace-level parity, plain and under node churn,
        plus work-stealing on an unbalanced workload; gates always
        enforced, exit 1 on failure)
+      (shards --threaded: the threaded live runtime instead — one
+       dispatch thread per shard vs the serial single-shard driver,
+       live trace parity plus a cross-thread work-stealing lend;
+       gates always enforced, exit 1 on failure)
       (churn, live-churn and shards accept --trace-out FILE.jsonl to
        record a structured event trace of every run)
   pcm run <pv-id>        run one experiment (e.g. pv4_100)
@@ -406,6 +415,33 @@ fn experiment(which: Option<&str>, flags: &Flags) -> pcm::Result<()> {
                     "(scale != 1.0 — churn acceptance gates not enforced)"
                 );
             }
+        }
+        "shards" if flags.has("--threaded") => {
+            use pcm::experiments::shards;
+            eprintln!(
+                "running threaded live-runtime equivalence experiment \
+                 (threaded 2-shard vs serial 1-shard live trace parity, \
+                 cross-thread work-stealing; seed={seed})…"
+            );
+            let trace = flags.get_trace()?;
+            let r = shards::run_threaded_shards(seed, trace.clone())?;
+            let text = shards::report_threaded(&r);
+            print!("{text}");
+            figures::write_result_file(
+                &results_dir,
+                "shards_threaded.txt",
+                &text,
+            )?;
+            eprintln!("\nreport written under {results_dir}/");
+            // The shard-threaded-smoke CI gate. Always enforced — the
+            // scenarios are fixed-size (scale does not apply).
+            shards::verify_threaded(&r)?;
+            eprintln!(
+                "threaded shard gates passed: the threaded per-shard \
+                 runtime's trace matches the serial single-shard driver \
+                 event-for-event; the two-phase handoff lent a worker \
+                 across shard threads with no lost work"
+            );
         }
         "shards" => {
             use pcm::experiments::shards;

@@ -142,6 +142,17 @@ impl Drop for JsonlSink {
 ///     self.trace.emit(TraceEvent::TaskDone { .. });
 /// }
 /// ```
+///
+/// # Thread safety
+///
+/// A `TraceHandle` is `Send + Sync` and clones share the sink behind
+/// one mutex, so it is the *only* object the threaded live runtime
+/// ([`crate::live::threaded`]) shares between shard threads: every
+/// shard emits into its clone, [`TraceHandle::emit`] serializes whole
+/// events under the lock, and concurrent emissions interleave at
+/// event granularity — events from one thread keep their emission
+/// order, events from different threads land in lock-acquisition
+/// order (never torn or dropped).
 #[derive(Clone, Default)]
 pub struct TraceHandle {
     inner: Option<Arc<Mutex<dyn TraceSink>>>,
@@ -248,6 +259,50 @@ mod tests {
             got.iter().map(TraceEvent::at).collect::<Vec<_>>(),
             vec![7.0, 8.0, 9.0]
         );
+    }
+
+    /// The threaded live runtime's contract on the one shared surface:
+    /// shard threads emitting `DispatchRound`s through clones of a
+    /// single handle lose nothing, and each thread's events stay in
+    /// its own emission order however the threads interleave.
+    #[test]
+    fn concurrent_emission_interleaves_without_loss() {
+        const THREADS: u32 = 4;
+        const PER_THREAD: u64 = 200;
+        let sink = Arc::new(Mutex::new(MemorySink::unbounded()));
+        let h = TraceHandle::from_shared(sink.clone());
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let h = h.clone();
+                scope.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        h.emit(TraceEvent::DispatchRound {
+                            at: i as f64,
+                            policy: "greedy".into(),
+                            assigned: 1,
+                            prefetched: 0,
+                            queued: 0,
+                            wall_s: 0.0,
+                            shard: Some(t),
+                        });
+                    }
+                });
+            }
+        });
+        let got = sink.lock().unwrap().events();
+        assert_eq!(got.len(), (THREADS as u64 * PER_THREAD) as usize);
+        // Per-shard subsequences keep their emission order and count.
+        let mut next = vec![0f64; THREADS as usize];
+        for e in &got {
+            match e {
+                TraceEvent::DispatchRound { at, shard: Some(s), .. } => {
+                    assert_eq!(*at, next[*s as usize], "shard {s} order");
+                    next[*s as usize] += 1.0;
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert!(next.iter().all(|&n| n == PER_THREAD as f64));
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Threaded per-shard live runtime integration: the `pcm experiment
+//! shards --threaded` path end to end, a hard kill landing on a
+//! *lent* worker mid-task, and the error exits (watchdog trip,
+//! drained pool) proving the shutdown ordering — every shard and
+//! worker thread joined, no orphaned lent workers, cache root
+//! removed.
+//!
+//! Everything runs offline on synthesized artifacts with the
+//! deterministic reference backend, so these tests execute in CI —
+//! including under ThreadSanitizer, where this binary is the
+//! concurrency gate for the threaded runtime.
+
+use pcm::cluster::{NodeAvailabilityTrace, NodeChurnEvent};
+use pcm::coordinator::{ContextPolicy, PolicyKind};
+use pcm::experiments::shards;
+use pcm::live::{LiveApp, LiveConfig, LiveDriver};
+use pcm::obs::TraceHandle;
+use pcm::runtime::synthetic::{
+    default_live_profiles, write_synthetic_artifacts,
+};
+use pcm::runtime::{BackendKind, Manifest};
+
+fn synthetic_manifest(tag: &str) -> (std::path::PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!(
+        "pcm-shards-threaded-test-{tag}-{}",
+        std::process::id()
+    ));
+    write_synthetic_artifacts(&dir, &default_live_profiles())
+        .expect("synthetic artifacts");
+    let m = Manifest::load(&dir).expect("manifest loads");
+    (dir, m)
+}
+
+/// A threaded two-shard live config over two "tiny" tenants. Tests in
+/// this binary run in parallel threads of one process, and live cache
+/// roots are keyed `pcm-live-{pid}-{seed}` — every test here must use
+/// a distinct seed.
+fn threaded_cfg(apps: Vec<LiveApp>, seed: u64) -> LiveConfig {
+    LiveConfig {
+        apps,
+        shards: 2,
+        threaded: true,
+        steal: true,
+        worker_speeds: vec![1.0, 1.0],
+        policy: ContextPolicy::Pervasive,
+        placement: PolicyKind::Greedy,
+        backend: BackendKind::Reference,
+        seed,
+        ..LiveConfig::default()
+    }
+}
+
+fn tiny_app(total_inferences: u64) -> LiveApp {
+    LiveApp {
+        profile: "tiny".into(),
+        total_inferences,
+        batch_size: 4,
+    }
+}
+
+fn live_cache_root(seed: u64) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("pcm-live-{}-{seed}", std::process::id()))
+}
+
+/// The full `pcm experiment shards --threaded` path: the threaded
+/// 2-shard run reproduces the serial 1-shard normalized event
+/// multiset exactly, the unbalanced steal scenario lends a worker
+/// across shard threads, every acceptance gate holds, and the report
+/// renders its key lines. This is exactly what the
+/// `shard-threaded-smoke` CI step runs through the CLI, and what the
+/// tsan lane races.
+#[test]
+fn threaded_experiment_passes_its_gates() {
+    let r = shards::run_threaded_shards(42, TraceHandle::null())
+        .expect("threaded shards experiment runs");
+    shards::verify_threaded(&r).expect("acceptance gates hold");
+
+    assert_eq!(r.parity.only_in_threaded, 0, "trace parity");
+    assert_eq!(r.parity.only_in_serial, 0, "trace parity");
+    assert_eq!(r.parity.threaded.shards, 2);
+    assert_eq!(r.parity.serial.shards, 1);
+    assert!(r.steal.steals >= 1, "steal scenario lends a worker");
+
+    let text = shards::report_threaded(&r);
+    for needle in [
+        "threaded live runtime equivalence",
+        "parity_threaded2",
+        "parity_serial1",
+        "steal_threaded2",
+        "only-threaded",
+        "lends across shard threads",
+    ] {
+        assert!(text.contains(needle), "report missing {needle}:\n{text}");
+    }
+}
+
+/// A hard kill that lands on a worker while it is *lent* to a peer
+/// shard (the ISSUE-10 regression): the light shard drains its two
+/// tasks (~0.3 s) and lends its worker to the backlogged heavy shard
+/// well before the 0.9 s kill, so the reclaim hits a borrowed worker
+/// mid-task on foreign ground. The coordinator must route the evict
+/// to the *borrowing* shard's thread, requeue the in-flight batch
+/// there, and drop the dead incarnation's late completions — nothing
+/// lost, nothing double-scored, no double dispatch.
+#[test]
+fn hard_kill_of_lent_worker_requeues_without_loss() {
+    let (dir, manifest) = synthetic_manifest("lendkill");
+    let heavy: u64 = 64; // 16 tasks * 0.15 s floor ≈ 2.4 s of backlog
+    let light: u64 = 8; // 2 tasks: the lender shard drains by ~0.35 s
+    let mut cfg =
+        threaded_cfg(vec![tiny_app(heavy), tiny_app(light)], 616_001);
+    cfg.execute_floor_s = 0.15;
+    cfg.node_trace = Some(NodeAvailabilityTrace::from_events(vec![
+        NodeChurnEvent { time: 0.9, node: 1, up: false },
+    ]));
+    let out = LiveDriver::new(cfg, manifest).run().expect("run completes");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_eq!(out.completed_inferences, heavy + light, "no work lost");
+    assert_eq!(out.shards, 2);
+    assert!(out.steals >= 1, "the idle worker was lent before the kill");
+    assert_eq!(out.evictions, 1, "exactly one kill");
+    assert_eq!(out.restarts, 0, "node 1 never rejoins");
+    assert!(out.warm_started.is_empty(), "nothing ever rejoined");
+    // One completion record per task — a requeued batch re-runs under
+    // its original task id (attempts grows), it never forks a second
+    // record or a second score.
+    assert_eq!(out.records.len() as u64, heavy / 4 + light / 4);
+    if out.evicted_inferences > 0 {
+        assert!(
+            out.records.iter().any(|r| r.attempts >= 2),
+            "an interrupted batch completes with attempts >= 2: {:?}",
+            out.records.iter().map(|r| r.attempts).collect::<Vec<_>>()
+        );
+    }
+    for (ctx, app) in &out.per_app {
+        let want = if *ctx == 0 { heavy } else { light };
+        assert_eq!(app.completed_inferences, want, "ctx {ctx}");
+        assert_eq!(app.accuracy.total, want, "ctx {ctx} single-scored");
+    }
+}
+
+/// Watchdog trip under the threaded runtime: the execute floor (1.5 s)
+/// dwarfs the watchdog (0.35 s), so the run aborts mid-first-task.
+/// The error exit must still walk the full shutdown ladder — stop
+/// every worker mid-emulation-sleep, join every shard and worker
+/// thread, and remove the run's cache root — before surfacing the
+/// watchdog error.
+#[test]
+fn threaded_watchdog_error_exit_joins_and_cleans() {
+    let (dir, manifest) = synthetic_manifest("watchdog");
+    let seed = 616_002;
+    let mut cfg = threaded_cfg(vec![tiny_app(8), tiny_app(8)], seed);
+    cfg.execute_floor_s = 1.5;
+    cfg.watchdog_s = 0.35;
+    let t0 = std::time::Instant::now();
+    let err = LiveDriver::new(cfg, manifest).run().expect_err("must stall");
+    let elapsed = t0.elapsed();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let msg = err.to_string();
+    assert!(msg.contains("watchdog"), "unexpected error: {msg}");
+    assert!(
+        !live_cache_root(seed).exists(),
+        "error exit removes the cache root"
+    );
+    // Stop flags interrupt the 1.5 s emulation sleeps: the join-all
+    // shutdown returns well before the floor would naturally elapse
+    // twice over (generous bound for loaded CI runners).
+    assert!(
+        elapsed.as_secs_f64() < 10.0,
+        "error exit hung for {elapsed:?}"
+    );
+}
+
+/// Drained-pool bail under the threaded runtime: the trace kills both
+/// nodes early with no scheduled rejoins, so the run can never finish.
+/// The coordinator must detect the empty pool instead of idling until
+/// the watchdog, and the error exit must leave no orphaned lent
+/// workers and no cache root behind.
+#[test]
+fn threaded_drained_pool_error_exit_cleans() {
+    let (dir, manifest) = synthetic_manifest("drained");
+    let seed = 616_003;
+    let mut cfg = threaded_cfg(vec![tiny_app(8), tiny_app(8)], seed);
+    cfg.execute_floor_s = 0.5;
+    cfg.node_trace = Some(NodeAvailabilityTrace::from_events(vec![
+        NodeChurnEvent { time: 0.2, node: 0, up: false },
+        NodeChurnEvent { time: 0.2, node: 1, up: false },
+    ]));
+    let err = LiveDriver::new(cfg, manifest).run().expect_err("must abort");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let msg = err.to_string();
+    assert!(msg.contains("live pool drained"), "unexpected error: {msg}");
+    assert!(
+        !live_cache_root(seed).exists(),
+        "error exit removes the cache root"
+    );
+}
